@@ -1,0 +1,80 @@
+//! §4 flow on one unseen kernel: extract MILEPOST-style features, rank
+//! the other 14 benchmarks by cosine similarity, and evaluate the top-K
+//! suggested sequences (leave-one-out).
+//!
+//!     cargo run --release --example feature_suggest [BENCH] [K]
+
+use phaseord::bench_suite::{all_benchmarks, Variant};
+use phaseord::dse::{minimize_sequence, Explorer, SeqGen};
+use phaseord::features::{cosine_similarity, extract_features, rank_by_similarity};
+use phaseord::sim::Target;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let query = args.first().map(String::as_str).unwrap_or("SYRK");
+    let k: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(3);
+
+    let benches = all_benchmarks();
+    // reference sequences: a quick per-benchmark DSE (stand-in for a
+    // precomputed Table 1; `repro fig2` computes the real one)
+    println!("building reference set (quick 150-sequence DSE per benchmark)…");
+    let stream = SeqGen::stream(0xBEEF, 150);
+    let mut refs = Vec::new();
+    for b in &benches {
+        if b.name == query {
+            continue;
+        }
+        let golden = Explorer::golden_from_interpreter(b);
+        let mut ex = Explorer::new(b, Target::gp104(), golden);
+        let s = ex.explore(&stream);
+        let seq = if s.best_seq.is_empty() {
+            Vec::new()
+        } else {
+            minimize_sequence(&mut ex, &s.best_seq.clone()).0
+        };
+        let built = b.build_small(Variant::OpenCl);
+        refs.push((b.name.to_string(), extract_features(&built.module), seq));
+    }
+
+    let qb = benches.iter().find(|b| b.name == query).expect("benchmark");
+    let qf = extract_features(&qb.build_small(Variant::OpenCl).module);
+    let feat_refs: Vec<(String, phaseord::features::FeatureVector)> =
+        refs.iter().map(|(n, f, _)| (n.clone(), *f)).collect();
+    let order = rank_by_similarity(&qf, &feat_refs);
+
+    println!("\nmost similar benchmarks to {query}:");
+    for &ri in order.iter().take(k.max(3)) {
+        println!(
+            "  {:10} cosine={:.4}",
+            refs[ri].0,
+            cosine_similarity(&qf, &refs[ri].1)
+        );
+    }
+
+    let golden = Explorer::golden_from_interpreter(qb);
+    let mut ex = Explorer::new(qb, Target::gp104(), golden);
+    let mut best = ex.baseline_time_us; // -O0 fallback, as in the paper
+    println!("\nevaluating K={k} suggested sequences on {query}:");
+    for &ri in order.iter().take(k) {
+        let (name, _, seq) = &refs[ri];
+        if seq.is_empty() {
+            println!("  from {name:10}: (no sequence)");
+            continue;
+        }
+        let ev = ex.evaluate(seq);
+        let txt = if ev.status.is_ok() {
+            best = best.min(ev.time_us);
+            format!("{:.2}x", ex.baseline_time_us / ev.time_us)
+        } else {
+            format!("{:?}", ev.status)
+        };
+        println!(
+            "  from {name:10}: {txt}  ({})",
+            seq.iter().map(|p| format!("-{p}")).collect::<Vec<_>>().join(" ")
+        );
+    }
+    println!(
+        "\nbest-of-K speedup over baseline: {:.2}x",
+        ex.baseline_time_us / best
+    );
+}

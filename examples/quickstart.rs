@@ -1,0 +1,82 @@
+//! Quickstart: compile one PolyBench/GPU kernel with a custom phase
+//! order, validate it against the golden reference, and compare the
+//! modelled GPU time against the baselines.
+//!
+//!     cargo run --release --example quickstart [BENCH] [passes...]
+//!
+//! Default: GEMM with the paper-style winning sequence.
+
+use phaseord::bench_suite::{benchmark_by_name, model_time_us, Variant};
+use phaseord::codegen::lower;
+use phaseord::dse::Explorer;
+use phaseord::passes::registry_names;
+use phaseord::sim::Target;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let bench_name = args.first().map(String::as_str).unwrap_or("GEMM");
+    let seq: Vec<&'static str> = if args.len() > 1 {
+        args[1..]
+            .iter()
+            .map(|a| {
+                let name = a.trim_start_matches('-');
+                registry_names()
+                    .into_iter()
+                    .find(|n| *n == name)
+                    .unwrap_or_else(|| panic!("unknown pass {name}"))
+            })
+            .collect()
+    } else {
+        vec!["cfl-anders-aa", "loop-reduce", "cfl-anders-aa", "licm", "instcombine"]
+    };
+
+    let bench = benchmark_by_name(bench_name).unwrap_or_else(|| {
+        eprintln!("unknown benchmark {bench_name}");
+        std::process::exit(1);
+    });
+    let target = Target::gp104();
+
+    // golden reference: PJRT artifacts if built, interpreter otherwise
+    let golden = match phaseord::runtime::GoldenRunner::from_env() {
+        Ok(r) if r.has_artifact(bench.name) => {
+            println!("golden reference: JAX/Pallas artifact via PJRT");
+            phaseord::runtime::golden_buffers(&r, &bench).expect("golden")
+        }
+        _ => {
+            println!("golden reference: interpreter (run `make artifacts` for PJRT)");
+            Explorer::golden_from_interpreter(&bench)
+        }
+    };
+
+    let mut ex = Explorer::new(&bench, target.clone(), golden);
+    let t_cuda = model_time_us(&bench.build_full(Variant::Cuda), &target);
+    println!("benchmark {bench_name} on {}", target.name);
+    println!("  OpenCL baseline : {:>12.1} µs", ex.baseline_time_us);
+    println!("  CUDA baseline   : {:>12.1} µs", t_cuda);
+
+    let ev = ex.evaluate(&seq);
+    println!(
+        "  phase order     : {}",
+        seq.iter().map(|p| format!("-{p}")).collect::<Vec<_>>().join(" ")
+    );
+    match &ev.status {
+        s if s.is_ok() => {
+            println!("  validated OK, modelled {:>12.1} µs", ev.time_us);
+            println!("  speedup over OpenCL: {:.2}x", ex.baseline_time_us / ev.time_us);
+            println!("  speedup over CUDA  : {:.2}x", t_cuda / ev.time_us);
+        }
+        other => println!("  compilation/validation failed: {other:?}"),
+    }
+
+    // show the optimized kernel's vPTX head
+    let mut built = bench.build_full(Variant::OpenCl);
+    let out = phaseord::passes::run_sequence(&mut built.module, &seq, false);
+    if out.is_ok() {
+        let (_f, prog) = lower(&built.module.kernels[0], &built.module);
+        let text = prog.text();
+        println!("\n--- optimized vPTX (first 25 lines) ---");
+        for l in text.lines().take(25) {
+            println!("{l}");
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! End-to-end driver: the full paper reproduction on a real (reduced)
+//! workload, proving all layers compose — JAX/Pallas golden artifacts
+//! loaded via PJRT, the rust compiler substrate, the DSE, and every
+//! figure/table regenerated. The run is recorded in EXPERIMENTS.md.
+//!
+//!     cargo run --release --example reproduce_paper [--seqs N]
+//!
+//! Defaults to a 1000-sequence stream (the paper used 10000; pass
+//! `--seqs 10000` to match — it just takes proportionally longer).
+
+use phaseord::coordinator::cli::{parse_args, run};
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut args = vec!["all".to_string()];
+    args.append(&mut argv);
+    match parse_args(&args) {
+        Ok(parsed) => {
+            if let Err(e) = run(parsed) {
+                eprintln!("error: {e}");
+                std::process::exit(1);
+            }
+        }
+        Err(m) => {
+            eprintln!("{m}");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,59 @@
+"""AOT lowering: every golden model → HLO *text* artifact.
+
+HLO text (not `.serialize()`) is the interchange format: jax ≥ 0.5 emits
+protos with 64-bit instruction ids which the image's xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import MODELS
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="lower a single benchmark")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {}
+    for name, fn in sorted(MODELS.items()):
+        if args.only and name != args.only:
+            continue
+        lowered = jax.jit(fn).lower()
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        outs = fn()
+        manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "num_outputs": len(outs),
+            "output_sizes": [int(o.size) for o in outs],
+        }
+        print(f"lowered {name}: {len(text)} chars, {len(outs)} outputs")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

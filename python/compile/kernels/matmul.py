@@ -1,0 +1,59 @@
+"""L1 — Pallas tiled matmul kernel.
+
+The compute hot-spot of the matmul-family golden models (GEMM, 2MM, 3MM,
+SYRK, SYR2K, CORR/COVAR cross-products). Written TPU-style — the grid
+tiles the output into (bm × bn) VMEM blocks, each program instance
+contracts a full K panel on the MXU — but always lowered with
+``interpret=True``: the CPU PJRT plugin cannot execute Mosaic
+custom-calls (see DESIGN.md §Hardware-Adaptation).
+
+The kernel is validated against the pure-jnp oracle in ``ref.py`` by
+``python/tests/test_kernel.py`` (hypothesis sweep over shapes/seeds).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(dim: int, preferred: int = 128) -> int:
+    """Largest power-of-two divisor of ``dim`` up to ``preferred``.
+
+    On a real TPU we would pad to 128×128 MXU tiles; under interpret mode
+    we keep exact tiling so tiny validation shapes work unpadded.
+    """
+    b = 1
+    while b * 2 <= min(dim, preferred) and dim % (b * 2) == 0:
+        b *= 2
+    return b
+
+
+def _mm_kernel(a_ref, b_ref, o_ref):
+    # One (bm, K) × (K, bn) panel contraction per program instance.
+    o_ref[...] = jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=())
+def matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """C = A @ B via the Pallas kernel (f32)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm = _pick_block(m)
+    bn = _pick_block(n)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)

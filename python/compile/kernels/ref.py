@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the Pallas kernel — the CORE correctness signal
+for L1. Anything `matmul.py` computes must match this within f32 noise.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b):
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)

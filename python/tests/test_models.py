@@ -1,0 +1,67 @@
+"""L2 sanity: golden models produce finite outputs of the right shapes,
+and the matmul-family models agree with direct jnp formulations."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import ALPHA, BETA, DIMS, MODELS, fill, fill2
+
+
+@pytest.mark.parametrize("name", sorted(MODELS))
+def test_outputs_finite(name):
+    outs = MODELS[name]()
+    assert len(outs) >= 1
+    for o in outs:
+        arr = np.asarray(o)
+        assert np.all(np.isfinite(arr)), name
+        assert arr.dtype == np.float32
+
+
+def test_gemm_formula():
+    n = DIMS["GEMM"]["n"]
+    a, b, c = fill2(0, n), fill2(1, n), fill2(2, n)
+    want = BETA * c + ALPHA * (a @ b)
+    got = MODELS["GEMM"]()[0].reshape(n, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+def test_atax_formula():
+    n = DIMS["ATAX"]["n"]
+    a = fill2(0, n)
+    x = fill(1, n)
+    want = a.T @ (a @ x)
+    got = MODELS["ATAX"]()[0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+def test_covar_symmetric():
+    n = DIMS["COVAR"]["n"]
+    got = MODELS["COVAR"]()[0].reshape(n, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(got).T, rtol=1e-6)
+
+
+def test_corr_diag():
+    n = DIMS["CORR"]["n"]
+    sym = np.asarray(MODELS["CORR"]()[0]).reshape(n, n)
+    # diagonal is 1 except the never-written last element
+    np.testing.assert_allclose(sym.diagonal()[:-1], 1.0)
+    init = np.asarray(fill2(3, n))
+    assert sym[n - 1, n - 1] == init[n - 1, n - 1]
+
+
+def test_conv_border_untouched():
+    n = DIMS["2DCONV"]["n"]
+    b = np.asarray(MODELS["2DCONV"]()[0]).reshape(n, n)
+    init = np.asarray(fill2(1, n))
+    np.testing.assert_array_equal(b[0, :], init[0, :])
+    np.testing.assert_array_equal(b[:, n - 1], init[:, n - 1])
+    assert not np.array_equal(b[1:-1, 1:-1], init[1:-1, 1:-1])
+
+
+def test_fill_matches_rust_formula():
+    # spot values mirroring bench_suite::fill_value
+    v = np.asarray(fill(2, 10))
+    for i in range(10):
+        want = ((i * i * 13 + i * 17 + 2 * 31 + 7) % 101) / 101.0 + 0.5
+        assert abs(v[i] - want) < 1e-6

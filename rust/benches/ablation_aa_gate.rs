@@ -1,0 +1,74 @@
+//! Ablation bench for the central design choice (DESIGN.md §5): the
+//! alias-precision gate on store promotion. Three configurations per
+//! benchmark:
+//!
+//!   A. -O3 as shipped (no cfl-anders-aa — LLVM 3.9 reality)
+//!   B. -O3 with cfl-anders-aa prepended ("what if the default pipeline
+//!      had the precise AA?")
+//!   C. the DSE's best-found order (upper bound)
+//!
+//! If the substrate is faithful, B recovers most of C's win on the
+//! accumulation benchmarks — demonstrating that the paper's headline is
+//! one enabling analysis away from the default pipeline, which is
+//! exactly the paper's §3.4 diagnosis.
+
+#[path = "harness.rs"]
+mod harness;
+
+use phaseord::bench_suite::all_benchmarks;
+use phaseord::dse::{Explorer, SeqGen};
+use phaseord::passes::manager::standard_level;
+use phaseord::sim::Target;
+use phaseord::util::geomean;
+
+fn main() {
+    let mut rows = Vec::new();
+    harness::bench("ablation: AA gate across 15 benchmarks", 1, || {
+        rows.clear();
+        let stream = SeqGen::stream(0xC0FFEE, 200);
+        for b in all_benchmarks() {
+            let golden = Explorer::golden_from_interpreter(&b);
+            let mut ex = Explorer::new(&b, Target::gp104(), golden);
+            let base = ex.baseline_time_us;
+            let o3 = ex.evaluate(&standard_level("-O3"));
+            let mut gated = vec!["cfl-anders-aa"];
+            gated.extend(standard_level("-O3"));
+            let o3_aa = ex.evaluate(&gated);
+            let best = ex.explore(&stream);
+            rows.push((
+                b.name,
+                if o3.status.is_ok() { base / o3.time_us } else { 0.0 },
+                if o3_aa.status.is_ok() { base / o3_aa.time_us } else { 0.0 },
+                base / best.best_time_us.max(1e-9),
+            ));
+        }
+        rows.len()
+    });
+    println!(
+        "\n{:10} {:>8} {:>12} {:>10}",
+        "bench", "-O3", "+cfl-anders", "best-found"
+    );
+    for (name, a, b, c) in &rows {
+        println!("{:10} {:>8.2} {:>12.2} {:>10.2}", name, a, b, c);
+    }
+    let g = |k: usize| {
+        geomean(
+            &rows
+                .iter()
+                .map(|r| match k {
+                    0 => r.1,
+                    1 => r.2,
+                    _ => r.3,
+                })
+                .filter(|&x| x > 0.0)
+                .collect::<Vec<_>>(),
+        )
+    };
+    println!(
+        "geomean: -O3 {:.2}x | -O3+cfl-anders-aa {:.2}x | best-found {:.2}x",
+        g(0),
+        g(1),
+        g(2)
+    );
+    println!("(the AA gate is the enabler: B should recover most of C on the accumulation kernels)");
+}

@@ -1,0 +1,32 @@
+//! Bench target for Fig. 2 / Table 1: regenerates the speedup rows on a
+//! reduced stream and times the full exploration.
+//!
+//! Set `PHASEORD_SEQS` to change the stream length (default 150 here;
+//! `repro fig2 --full` runs the paper's 10000).
+
+#[path = "harness.rs"]
+mod harness;
+
+use phaseord::coordinator::experiments::{fig2_geomeans, fig2_table1, ExpConfig, ExpCtx};
+use phaseord::coordinator::report::render_fig2;
+
+fn main() {
+    let n: usize = std::env::var("PHASEORD_SEQS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(150);
+    let mut rows_out = None;
+    harness::bench("fig2: DSE over 15 benchmarks", 1, || {
+        let mut ctx = ExpCtx::new(ExpConfig {
+            n_seqs: n,
+            ..Default::default()
+        });
+        let rows = fig2_table1(&mut ctx);
+        rows_out = Some(rows.clone());
+        rows
+    });
+    let rows = rows_out.unwrap();
+    println!("\n{}", render_fig2(&rows));
+    let (g_cuda, g_ocl, _, _) = fig2_geomeans(&rows);
+    println!("[shape check] geomean over OpenCL {g_ocl:.2}x (paper 1.65x), over CUDA {g_cuda:.2}x (paper 1.54x)");
+}

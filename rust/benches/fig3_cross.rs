@@ -1,0 +1,22 @@
+//! Bench target for Fig. 3: the 15×15 cross-application matrix.
+
+#[path = "harness.rs"]
+mod harness;
+
+use phaseord::coordinator::experiments::{fig2_table1, fig3_cross, ExpConfig, ExpCtx};
+use phaseord::coordinator::report::render_fig3;
+
+fn main() {
+    let mut ctx = ExpCtx::new(ExpConfig {
+        n_seqs: 120,
+        ..Default::default()
+    });
+    let rows = fig2_table1(&mut ctx);
+    let mut out = None;
+    harness::bench("fig3: 15x15 cross-application", 3, || {
+        let m = fig3_cross(&mut ctx, &rows);
+        out = Some(m.clone());
+        0
+    });
+    println!("\n{}", render_fig3(&out.unwrap()));
+}

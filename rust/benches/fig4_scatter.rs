@@ -1,0 +1,23 @@
+//! Bench target for Fig. 4: per-benchmark speedups of the first 100
+//! sequences of the shared stream.
+
+#[path = "harness.rs"]
+mod harness;
+
+use phaseord::coordinator::experiments::{fig2_table1, fig4_scatter, ExpConfig, ExpCtx};
+use phaseord::coordinator::report::render_fig4;
+
+fn main() {
+    let mut ctx = ExpCtx::new(ExpConfig {
+        n_seqs: 120,
+        ..Default::default()
+    });
+    let rows = fig2_table1(&mut ctx);
+    let mut out = None;
+    harness::bench("fig4: first-100 scatter", 3, || {
+        let f = fig4_scatter(&mut ctx, &rows);
+        out = Some(f.clone());
+        0
+    });
+    println!("\n{}", render_fig4(&out.unwrap()));
+}

@@ -1,0 +1,23 @@
+//! Bench target for Fig. 5: permutations of each best-found sequence.
+
+#[path = "harness.rs"]
+mod harness;
+
+use phaseord::coordinator::experiments::{fig2_table1, fig5_permutations, ExpConfig, ExpCtx};
+use phaseord::coordinator::report::render_fig5;
+
+fn main() {
+    let mut ctx = ExpCtx::new(ExpConfig {
+        n_seqs: 120,
+        n_perms: 60,
+        ..Default::default()
+    });
+    let rows = fig2_table1(&mut ctx);
+    let mut out = None;
+    harness::bench("fig5: permutation studies", 1, || {
+        let st = fig5_permutations(&mut ctx, &rows);
+        out = Some(st.clone());
+        0
+    });
+    println!("\n{}", render_fig5(&out.unwrap()));
+}

@@ -1,0 +1,24 @@
+//! Bench target for Fig. 7: cosine-kNN vs random vs IterGraph
+//! (leave-one-out over the 15 benchmarks).
+
+#[path = "harness.rs"]
+mod harness;
+
+use phaseord::coordinator::experiments::{fig2_table1, fig7_features, ExpConfig, ExpCtx};
+use phaseord::coordinator::report::render_fig7;
+
+fn main() {
+    let mut ctx = ExpCtx::new(ExpConfig {
+        n_seqs: 120,
+        n_random_draws: 50,
+        ..Default::default()
+    });
+    let rows = fig2_table1(&mut ctx);
+    let mut out = None;
+    harness::bench("fig7: kNN/random/IterGraph", 1, || {
+        let f = fig7_features(&mut ctx, &rows);
+        out = Some(f.clone());
+        0
+    });
+    println!("\n{}", render_fig7(&out.unwrap()));
+}

@@ -1,0 +1,46 @@
+//! Minimal bench harness (the vendored crate set has no criterion):
+//! warm-up + timed iterations, reporting mean / min / throughput.
+//! Shared by all `cargo bench` targets via `#[path] mod harness;`.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean_ms: f64,
+    pub min_ms: f64,
+}
+
+pub fn bench<T>(name: &str, iters: u32, mut f: impl FnMut() -> T) -> BenchResult {
+    // warm-up
+    let _ = f();
+    let mut times = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        let out = f();
+        times.push(t0.elapsed().as_secs_f64() * 1e3);
+        std::hint::black_box(out);
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ms: mean,
+        min_ms: min,
+    };
+    println!(
+        "bench {:40} iters={:<4} mean={:>10.3} ms  min={:>10.3} ms",
+        r.name, r.iters, r.mean_ms, r.min_ms
+    );
+    r
+}
+
+#[allow(dead_code)]
+pub fn throughput(label: &str, count: usize, r: &BenchResult) {
+    println!(
+        "      {:40} {:>10.0} {label}/s",
+        "",
+        count as f64 / (r.mean_ms / 1e3)
+    );
+}

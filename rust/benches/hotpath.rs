@@ -1,0 +1,57 @@
+//! Hot-path microbenchmarks: the DSE evaluation pipeline stage by stage.
+//! These are the §Perf numbers in EXPERIMENTS.md — the paper's protocol
+//! needs 10000 × 15 evaluations, so evaluations/second is the headline.
+
+#[path = "harness.rs"]
+mod harness;
+
+use phaseord::bench_suite::{benchmark_by_name, execute, init_buffers, model_time_us, Variant};
+use phaseord::codegen::lower;
+use phaseord::dse::{Explorer, SeqGen};
+use phaseord::passes::run_sequence;
+use phaseord::sim::Target;
+
+fn main() {
+    let bench = benchmark_by_name("GEMM").unwrap();
+    let full = bench.build_full(Variant::OpenCl);
+    let small = bench.build_small(Variant::OpenCl);
+    let target = Target::gp104();
+    let seq = ["cfl-anders-aa", "loop-reduce", "cfl-anders-aa", "licm", "instcombine"];
+
+    harness::bench("clone full module", 2000, || full.module.clone());
+    harness::bench("pass pipeline (5 passes, GEMM)", 500, || {
+        let mut m = full.module.clone();
+        run_sequence(&mut m, &seq, false)
+    });
+    harness::bench("codegen lower (GEMM)", 500, || {
+        lower(&full.module.kernels[0], &full.module)
+    });
+    harness::bench("cost model (GEMM)", 500, || model_time_us(&full, &target));
+    harness::bench("validation exec (GEMM small)", 200, || {
+        let mut bufs = init_buffers(&small);
+        execute(&small, &mut bufs, 400_000_000).unwrap();
+    });
+
+    // end-to-end evaluations/second over a random stream
+    let golden = Explorer::golden_from_interpreter(&bench);
+    let mut ex = Explorer::new(&bench, target.clone(), golden);
+    let seqs = SeqGen::stream(0xAB, 200);
+    let r = harness::bench("explorer: 200 random evaluations", 3, || {
+        // fresh caches each iteration for honest numbers
+        let golden = Explorer::golden_from_interpreter(&bench);
+        let mut e = Explorer::new(&bench, target.clone(), golden);
+        e.explore(&seqs).n_ok
+    });
+    harness::throughput("evaluations", 200, &r);
+
+    // the long-pole benchmark (CORR has 4 kernels and deep loops)
+    let corr = benchmark_by_name("CORR").unwrap();
+    let golden = Explorer::golden_from_interpreter(&corr);
+    let mut ex2 = Explorer::new(&corr, target.clone(), golden);
+    let seqs2 = SeqGen::stream(0xCD, 100);
+    let r2 = harness::bench("explorer: 100 evaluations (CORR)", 1, || {
+        ex2.explore(&seqs2).n_ok
+    });
+    harness::throughput("evaluations", 100, &r2);
+    let _ = ex;
+}

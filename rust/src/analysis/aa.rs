@@ -1,0 +1,310 @@
+//! Alias analysis.
+//!
+//! Two precision levels, mirroring the paper's setup:
+//!
+//! * **BasicAA** (always available): distinguishes allocas from globals and
+//!   identical addresses, but *cannot* rule out overlap between two
+//!   distinct global buffer parameters — just like the NVIDIA OpenCL/CUDA
+//!   compilers in §3.4 ("unable to determine that there are no aliasing
+//!   issues").
+//! * **Precise AA** (installed by the `cfl-anders-aa` pass): additionally
+//!   exploits the OpenCL 2.0 argument that overlapping buffers would be a
+//!   data race (UB), so distinct pointer params are `NoAlias`; and it can
+//!   separate same-base accesses whose affine offsets differ by a nonzero
+//!   constant.
+//!
+//! `alias_syntactic` is the *optimistic* structural comparison: same base,
+//! different affine term structure ⇒ assumed disjoint, **without range
+//! reasoning**. It is sound only when the affine forms cannot coincide;
+//! the `dse` pass's use of it for intervening-load screening is the
+//! documented miscompile model #1 (wrong for symmetric index patterns like
+//! `A[j1*M + j2]` vs `A[j2*M + j1]`, which coincide when `j1 == j2` —
+//! COVAR's inner loop includes that diagonal).
+
+use super::affine::{Affine, AffineCtx};
+use crate::ir::{Function, InstId, Op, Value};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AliasResult {
+    No,
+    May,
+    Must,
+}
+
+/// The root object a pointer points into.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Root {
+    /// Kernel pointer parameter (a global buffer).
+    Param(u16),
+    /// An alloca (per-thread local slot).
+    Alloca(InstId),
+    /// Unknown provenance (e.g. pointer phi after strength reduction).
+    Unknown(Value),
+}
+
+/// Resolved memory location: root object + affine byte offset (if known).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemLoc {
+    pub root: Root,
+    pub off: Option<Affine>,
+}
+
+impl MemLoc {
+    /// Resolve a pointer SSA value to its root + accumulated offset.
+    ///
+    /// Induction pointer phis (LSR's `p = phi(p0, p + c)`) are looked
+    /// through: the *root* is that of the pre-loop pointer — sound, since
+    /// every value the phi takes points into the same object — but the
+    /// offset becomes unknown (it ranges over the iteration space).
+    pub fn resolve(cx: &mut AffineCtx<'_>, ptr: Value) -> MemLoc {
+        Self::resolve_depth(cx, ptr, 0)
+    }
+
+    fn resolve_depth(cx: &mut AffineCtx<'_>, ptr: Value, depth: u32) -> MemLoc {
+        let mut cur = ptr;
+        let mut off = Some(Affine::konst(0));
+        loop {
+            match cur {
+                Value::Arg(i) => {
+                    return MemLoc {
+                        root: Root::Param(i),
+                        off,
+                    }
+                }
+                Value::Inst(id) => {
+                    let inst = cx.f.inst(id);
+                    match inst.op {
+                        Op::PtrAdd => {
+                            let delta = cx.eval(inst.args()[1]);
+                            off = match (off, delta) {
+                                (Some(a), Some(d)) => Some(a.add(&d)),
+                                _ => None,
+                            };
+                            cur = cx.f.inst(id).args()[0];
+                        }
+                        Op::Alloca => {
+                            return MemLoc {
+                                root: Root::Alloca(id),
+                                off,
+                            }
+                        }
+                        Op::Phi if depth < 8 => {
+                            // induction pointer: phi(other, ptradd(self, _))
+                            let args: Vec<Value> = inst.args().to_vec();
+                            let self_v = Value::Inst(id);
+                            let mut base: Option<Value> = None;
+                            let mut is_induction = args.len() == 2;
+                            for &a in &args {
+                                let increments_self = matches!(
+                                    a,
+                                    Value::Inst(ai) if cx.f.inst(ai).op == Op::PtrAdd
+                                        && cx.f.inst(ai).args()[0] == self_v
+                                );
+                                if increments_self {
+                                    continue;
+                                }
+                                if a == self_v {
+                                    continue;
+                                }
+                                if base.is_some() {
+                                    is_induction = false;
+                                    break;
+                                }
+                                base = Some(a);
+                            }
+                            match (is_induction, base) {
+                                (true, Some(b)) => {
+                                    let inner = Self::resolve_depth(cx, b, depth + 1);
+                                    return MemLoc {
+                                        root: inner.root,
+                                        off: None, // varies across iterations
+                                    };
+                                }
+                                _ => {
+                                    return MemLoc {
+                                        root: Root::Unknown(cur),
+                                        off,
+                                    }
+                                }
+                            }
+                        }
+                        _ => {
+                            return MemLoc {
+                                root: Root::Unknown(cur),
+                                off,
+                            }
+                        }
+                    }
+                }
+                other => {
+                    return MemLoc {
+                        root: Root::Unknown(other),
+                        off,
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Sound alias query.
+pub fn alias(f: &Function, precise: bool, a: &MemLoc, b: &MemLoc) -> AliasResult {
+    match (&a.root, &b.root) {
+        // allocas never alias params or other allocas
+        (Root::Alloca(x), Root::Alloca(y)) => {
+            if x != y {
+                return AliasResult::No;
+            }
+            offset_alias(a, b, true)
+        }
+        (Root::Alloca(_), Root::Param(_)) | (Root::Param(_), Root::Alloca(_)) => AliasResult::No,
+        (Root::Param(x), Root::Param(y)) => {
+            if x == y {
+                offset_alias(a, b, precise)
+            } else if precise
+                && f.params[*x as usize].noalias_by_spec
+                && f.params[*y as usize].noalias_by_spec
+            {
+                // OpenCL 2.0 §3.4 argument: overlap would be a data race
+                AliasResult::No
+            } else {
+                AliasResult::May
+            }
+        }
+        // unknown roots: same SSA value + same offsets can still be Must
+        (Root::Unknown(x), Root::Unknown(y)) if x == y => offset_alias(a, b, precise),
+        _ => AliasResult::May,
+    }
+}
+
+/// Same-root offset comparison (sound): equal affine ⇒ Must; difference a
+/// nonzero constant ⇒ No (when `precise`); anything else ⇒ May.
+fn offset_alias(a: &MemLoc, b: &MemLoc, precise: bool) -> AliasResult {
+    match (&a.off, &b.off) {
+        (Some(x), Some(y)) => {
+            let d = x.sub(y);
+            match d.is_const() {
+                Some(0) => AliasResult::Must,
+                Some(_) if precise => AliasResult::No,
+                _ => AliasResult::May,
+            }
+        }
+        _ => AliasResult::May,
+    }
+}
+
+/// Optimistic structural comparison (see module docs — used by `dse`'s
+/// intervening-load screen; unsound without range reasoning).
+pub fn alias_syntactic(f: &Function, precise: bool, a: &MemLoc, b: &MemLoc) -> AliasResult {
+    let sound = alias(f, precise, a, b);
+    if sound != AliasResult::May || !precise {
+        return sound;
+    }
+    // same root, both affine, different term structure => claim No
+    if let (Some(x), Some(y)) = (&a.off, &b.off) {
+        if x != y && roots_eq(&a.root, &b.root) {
+            return AliasResult::No;
+        }
+    }
+    sound
+}
+
+fn roots_eq(a: &Root, b: &Root) -> bool {
+    a == b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{AddrSpace, KernelBuilder, Ty};
+
+    fn two_param_kernel() -> (Function, Value, Value) {
+        let mut b = KernelBuilder::new(
+            "k",
+            &[
+                ("a", Ty::Ptr(AddrSpace::Global)),
+                ("b", Ty::Ptr(AddrSpace::Global)),
+            ],
+        );
+        let pa = b.addr(b.param(0), b.gid(0));
+        let pb = b.addr(b.param(1), b.gid(0));
+        let f = b.finish();
+        (f, pa, pb)
+    }
+
+    #[test]
+    fn distinct_params_basic_vs_precise() {
+        let (f, pa, pb) = two_param_kernel();
+        let mut cx = AffineCtx::new(&f);
+        let la = MemLoc::resolve(&mut cx, pa);
+        let lb = MemLoc::resolve(&mut cx, pb);
+        assert_eq!(alias(&f, false, &la, &lb), AliasResult::May);
+        assert_eq!(alias(&f, true, &la, &lb), AliasResult::No);
+    }
+
+    #[test]
+    fn same_address_is_must() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let p1 = b.addr(b.param(0), b.gid(0));
+        let p2 = b.addr(b.param(0), b.gid(0));
+        let f = b.finish();
+        let mut cx = AffineCtx::new(&f);
+        let l1 = MemLoc::resolve(&mut cx, p1);
+        let l2 = MemLoc::resolve(&mut cx, p2);
+        assert_eq!(alias(&f, false, &l1, &l2), AliasResult::Must);
+    }
+
+    #[test]
+    fn constant_offset_disjoint_under_precise() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let i1 = b.add(b.gid(0), b.i(1));
+        let p1 = b.addr(b.param(0), b.gid(0));
+        let p2 = b.addr(b.param(0), i1);
+        let f = b.finish();
+        let mut cx = AffineCtx::new(&f);
+        let l1 = MemLoc::resolve(&mut cx, p1);
+        let l2 = MemLoc::resolve(&mut cx, p2);
+        assert_eq!(alias(&f, false, &l1, &l2), AliasResult::May);
+        assert_eq!(alias(&f, true, &l1, &l2), AliasResult::No);
+    }
+
+    #[test]
+    fn symmetric_pattern_sound_vs_syntactic() {
+        // A[i*M + j] vs A[j*M + i]: sound says May (can coincide at i==j),
+        // syntactic optimistically says No — the dse bug vector.
+        let m = 16;
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let i = b.gid(0);
+        let j = b.gid(1);
+        let t1 = b.mul(i, b.i(m));
+        let idx1 = b.add(t1, j);
+        let t2 = b.mul(j, b.i(m));
+        let idx2 = b.add(t2, i);
+        let p1 = b.addr(b.param(0), idx1);
+        let p2 = b.addr(b.param(0), idx2);
+        let f = b.finish();
+        let mut cx = AffineCtx::new(&f);
+        let l1 = MemLoc::resolve(&mut cx, p1);
+        let l2 = MemLoc::resolve(&mut cx, p2);
+        assert_eq!(alias(&f, true, &l1, &l2), AliasResult::May);
+        assert_eq!(alias_syntactic(&f, true, &l1, &l2), AliasResult::No);
+    }
+
+    #[test]
+    fn alloca_never_aliases_param() {
+        use crate::ir::{Inst, Op};
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let pa = b.addr(b.param(0), b.gid(0));
+        let f_ref = &mut b.f;
+        let entry = f_ref.entry;
+        let al = f_ref.insert_inst(
+            entry,
+            Inst::new(Op::Alloca, Ty::Ptr(AddrSpace::Local), &[Value::ImmI(4)]),
+        );
+        let f = b.finish();
+        let mut cx = AffineCtx::new(&f);
+        let l1 = MemLoc::resolve(&mut cx, pa);
+        let l2 = MemLoc::resolve(&mut cx, Value::Inst(al));
+        assert_eq!(alias(&f, false, &l1, &l2), AliasResult::No);
+    }
+}

@@ -1,0 +1,285 @@
+//! Affine index-expression analysis (a lightweight SCEV).
+//!
+//! Expresses integer values as `Σ coeff·term + const`, where terms are
+//! opaque SSA values (loop-IV phis, `get_global_id`, parameters). This is
+//! what `loop-reduce` uses to strength-reduce address chains, what the AA
+//! uses to compare offsets, and what the cost model uses for trip counts.
+
+use std::collections::HashMap;
+
+use crate::ir::{Function, InstId, Op, Value};
+
+/// `Σ coeff·term + konst`, terms sorted for canonical comparison.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Affine {
+    pub terms: Vec<(Value, i64)>,
+    pub konst: i64,
+}
+
+impl Affine {
+    pub fn konst(c: i64) -> Affine {
+        Affine {
+            terms: Vec::new(),
+            konst: c,
+        }
+    }
+    pub fn term(v: Value) -> Affine {
+        Affine {
+            terms: vec![(v, 1)],
+            konst: 0,
+        }
+    }
+    fn normalize(mut self) -> Affine {
+        self.terms.retain(|&(_, c)| c != 0);
+        self.terms.sort_by_key(|&(v, _)| value_key(v));
+        // merge duplicates
+        let mut out: Vec<(Value, i64)> = Vec::with_capacity(self.terms.len());
+        for (v, c) in self.terms {
+            if let Some(last) = out.last_mut() {
+                if last.0 == v {
+                    last.1 += c;
+                    continue;
+                }
+            }
+            out.push((v, c));
+        }
+        out.retain(|&(_, c)| c != 0);
+        Affine {
+            terms: out,
+            konst: self.konst,
+        }
+    }
+    pub fn add(&self, o: &Affine) -> Affine {
+        let mut terms = self.terms.clone();
+        terms.extend(o.terms.iter().cloned());
+        Affine {
+            terms,
+            konst: self.konst + o.konst,
+        }
+        .normalize()
+    }
+    pub fn neg(&self) -> Affine {
+        Affine {
+            terms: self.terms.iter().map(|&(v, c)| (v, -c)).collect(),
+            konst: -self.konst,
+        }
+    }
+    pub fn sub(&self, o: &Affine) -> Affine {
+        self.add(&o.neg())
+    }
+    pub fn scale(&self, k: i64) -> Affine {
+        Affine {
+            terms: self.terms.iter().map(|&(v, c)| (v, c * k)).collect(),
+            konst: self.konst * k,
+        }
+        .normalize()
+    }
+    pub fn is_const(&self) -> Option<i64> {
+        if self.terms.is_empty() {
+            Some(self.konst)
+        } else {
+            None
+        }
+    }
+    /// Coefficient of `v` (0 if absent).
+    pub fn coeff(&self, v: Value) -> i64 {
+        self.terms
+            .iter()
+            .find(|&&(t, _)| t == v)
+            .map(|&(_, c)| c)
+            .unwrap_or(0)
+    }
+    /// Remove the `v` term, returning (coefficient, remainder).
+    pub fn split(&self, v: Value) -> (i64, Affine) {
+        let c = self.coeff(v);
+        let rest = Affine {
+            terms: self
+                .terms
+                .iter()
+                .filter(|&&(t, _)| t != v)
+                .cloned()
+                .collect(),
+            konst: self.konst,
+        };
+        (c, rest)
+    }
+}
+
+fn value_key(v: Value) -> (u8, u64) {
+    match v {
+        Value::Arg(i) => (0, i as u64),
+        Value::Inst(id) => (1, id.0 as u64),
+        Value::ImmI(x) => (2, x as u64),
+        Value::ImmF(b) => (3, b as u64),
+        Value::GlobalId(d) => (4, d as u64),
+        Value::GlobalSize(d) => (5, d as u64),
+    }
+}
+
+/// Memoizing affine evaluator over a function's integer SSA graph.
+pub struct AffineCtx<'f> {
+    pub f: &'f Function,
+    cache: HashMap<Value, Option<Affine>>,
+    depth_guard: u32,
+}
+
+impl<'f> AffineCtx<'f> {
+    pub fn new(f: &'f Function) -> AffineCtx<'f> {
+        AffineCtx {
+            f,
+            cache: HashMap::new(),
+            depth_guard: 0,
+        }
+    }
+
+    /// Affine form of an integer value, or None if non-affine.
+    /// Phis are kept opaque (they become terms) — a loop IV appears as a
+    /// single term, which is exactly what stride extraction wants.
+    pub fn eval(&mut self, v: Value) -> Option<Affine> {
+        if let Some(hit) = self.cache.get(&v) {
+            return hit.clone();
+        }
+        if self.depth_guard > 64 {
+            return None;
+        }
+        self.depth_guard += 1;
+        let r = self.eval_uncached(v);
+        self.depth_guard -= 1;
+        self.cache.insert(v, r.clone());
+        r
+    }
+
+    fn eval_uncached(&mut self, v: Value) -> Option<Affine> {
+        match v {
+            Value::ImmI(c) => Some(Affine::konst(c)),
+            Value::Arg(_) | Value::GlobalId(_) | Value::GlobalSize(_) => Some(Affine::term(v)),
+            Value::ImmF(_) => None,
+            Value::Inst(id) => self.eval_inst(id),
+        }
+    }
+
+    fn eval_inst(&mut self, id: InstId) -> Option<Affine> {
+        let inst = *self.f.inst(id);
+        let a = inst.args();
+        match inst.op {
+            Op::Add => Some(self.eval(a[0])?.add(&self.eval(a[1])?)),
+            Op::Sub => Some(self.eval(a[0])?.sub(&self.eval(a[1])?)),
+            Op::Mul => {
+                let l = self.eval(a[0])?;
+                let r = self.eval(a[1])?;
+                match (l.is_const(), r.is_const()) {
+                    (Some(c), _) => Some(r.scale(c)),
+                    (_, Some(c)) => Some(l.scale(c)),
+                    _ => None,
+                }
+            }
+            Op::Shl => {
+                let l = self.eval(a[0])?;
+                let r = self.eval(a[1])?;
+                let sh = r.is_const()?;
+                if (0..=32).contains(&sh) {
+                    Some(l.scale(1 << sh))
+                } else {
+                    None
+                }
+            }
+            // sign/width changes don't alter the affine structure at our
+            // index magnitudes
+            Op::Sext | Op::Trunc => self.eval(a[0]),
+            // phis (loop IVs and merges), loads (memory-demoted IVs after
+            // reg2mem) and int-from-float casts (host scalars) are opaque
+            // terms: unknown values, but stable identities the algebra
+            // can carry
+            Op::Phi | Op::Select | Op::Load | Op::FpToSi => {
+                Some(Affine::term(Value::Inst(id)))
+            }
+            _ => None,
+        }
+    }
+
+    /// Is `v` a simple induction phi `phi(init, v + step)`? Returns
+    /// (init, step) if so.
+    pub fn as_induction(&mut self, v: Value) -> Option<(Value, i64)> {
+        let id = v.as_inst()?;
+        let inst = self.f.inst(id);
+        if inst.op != Op::Phi || inst.args().len() != 2 {
+            return None;
+        }
+        for (k, &incoming) in inst.args().iter().enumerate() {
+            let other = inst.args()[1 - k];
+            // incoming = phi + step?
+            if let Some(aff) = self.eval(incoming) {
+                let (c, rest) = aff.split(v);
+                if c == 1 {
+                    if let Some(step) = rest.is_const() {
+                        return Some((other, step));
+                    }
+                }
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{AddrSpace, KernelBuilder, Ty};
+
+    #[test]
+    fn linear_combo() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        // idx = gid*8 + 3
+        let t = b.mul(b.gid(0), b.i(8));
+        let idx = b.add(t, b.i(3));
+        let f = b.finish();
+        let mut cx = AffineCtx::new(&f);
+        let aff = cx.eval(idx).unwrap();
+        assert_eq!(aff.konst, 3);
+        assert_eq!(aff.coeff(Value::GlobalId(0)), 8);
+    }
+
+    #[test]
+    fn sub_and_shl() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        // idx = (gid - 2) << 2  == gid*4 - 8
+        let t = b.sub(b.gid(0), b.i(2));
+        let idx = b.bin(Op::Shl, Ty::I32, t, b.i(2));
+        let f = b.finish();
+        let mut cx = AffineCtx::new(&f);
+        let aff = cx.eval(idx).unwrap();
+        assert_eq!(aff.konst, -8);
+        assert_eq!(aff.coeff(Value::GlobalId(0)), 4);
+    }
+
+    #[test]
+    fn induction_recognized() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let n = b.i(10);
+        let mut iv_val = None;
+        b.for_loop("i", b.i(2), n, 3, |_b, iv| {
+            iv_val = Some(iv);
+        });
+        let f = b.finish();
+        let mut cx = AffineCtx::new(&f);
+        let (init, step) = cx.as_induction(iv_val.unwrap()).expect("is induction");
+        assert_eq!(init, Value::ImmI(2));
+        assert_eq!(step, 3);
+    }
+
+    #[test]
+    fn non_affine_is_none() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let sq = b.mul(b.gid(0), b.gid(0));
+        let f = b.finish();
+        let mut cx = AffineCtx::new(&f);
+        assert!(cx.eval(sq).is_none());
+    }
+
+    #[test]
+    fn terms_cancel() {
+        let a = Affine::term(Value::GlobalId(0)).scale(4);
+        let b = Affine::term(Value::GlobalId(0)).scale(4);
+        assert_eq!(a.sub(&b).is_const(), Some(0));
+    }
+}

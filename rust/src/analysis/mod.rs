@@ -1,0 +1,9 @@
+//! Program analyses shared by the pass library: affine index expressions,
+//! memory-location resolution, and alias analysis (the BasicAA vs
+//! cfl-anders-aa precision split the paper's results hinge on).
+
+pub mod aa;
+pub mod affine;
+
+pub use aa::{alias, alias_syntactic, AliasResult, MemLoc, Root};
+pub use affine::{Affine, AffineCtx};

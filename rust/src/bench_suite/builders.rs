@@ -1,0 +1,60 @@
+//! Shared helpers for the benchmark builders.
+
+use crate::ir::{AddrSpace, CmpPred, KernelBuilder, Ty, Value};
+
+pub(crate) const ALPHA: f32 = 1.5;
+pub(crate) const BETA: f32 = 1.2;
+
+/// All benchmark buffers are f32 global arrays.
+pub(crate) fn ptr() -> Ty {
+    Ty::Ptr(AddrSpace::Global)
+}
+
+/// Row-major 2D index `i*n + j` (fresh arithmetic per use — the naive
+/// frontend shape; the backend's machine CSE dedups what ptxas would).
+pub(crate) fn idx2(b: &mut KernelBuilder, i: Value, j: Value, n: usize) -> Value {
+    let t = b.mul(i, b.i(n as i64));
+    b.add(t, j)
+}
+
+/// 3D index `i*n*n + j*n + k`.
+pub(crate) fn idx3(b: &mut KernelBuilder, i: Value, j: Value, k: Value, n: usize) -> Value {
+    let t1 = b.mul(i, b.i((n * n) as i64));
+    let t2 = b.mul(j, b.i(n as i64));
+    let s = b.add(t1, t2);
+    b.add(s, k)
+}
+
+/// 2D guard `gid.1 < rows && gid.0 < cols` around `body`.
+pub(crate) fn guard2(
+    b: &mut KernelBuilder,
+    rows: usize,
+    cols: usize,
+    body: impl FnOnce(&mut KernelBuilder, Value, Value),
+) {
+    let i = b.gid(1);
+    let j = b.gid(0);
+    let ci = b.icmp(CmpPred::Lt, i, b.i(rows as i64));
+    let cj = b.icmp(CmpPred::Lt, j, b.i(cols as i64));
+    let c = b.and(ci, cj);
+    b.if_then(c, |b| body(b, i, j));
+}
+
+/// 1D guard `gid.0 < n`.
+pub(crate) fn guard1(
+    b: &mut KernelBuilder,
+    n: usize,
+    body: impl FnOnce(&mut KernelBuilder, Value),
+) {
+    let i = b.gid(0);
+    let c = b.icmp(CmpPred::Lt, i, b.i(n as i64));
+    b.if_then(c, |b| body(b, i));
+}
+
+/// `buf[idx] op= value` read-modify-write through memory (the PolyBench
+/// accumulation idiom that licm promotes).
+pub(crate) fn rmw_add(b: &mut KernelBuilder, buf: Value, idx: Value, v: Value) {
+    let cur = b.load(buf, idx);
+    let nxt = b.fadd(cur, v);
+    b.store(buf, idx, nxt);
+}

@@ -1,0 +1,160 @@
+//! Convolution benchmarks: 2DCONV and 3DCONV.
+//!
+//! Load-dominated kernels with no loop-carried memory accumulation —
+//! the benchmarks for which the paper's DSE finds *no* winning phase
+//! order (Fig. 2 / Table 1 footnote). 2DCONV is straight-line per
+//! thread; 3DCONV loops over the slowest dimension but stores to an
+//! i-dependent address (nothing to promote).
+
+use super::builders::*;
+use super::{cudaify, set_innermost_unroll, Benchmark, BuiltBench, Dims, KernelInfo, Variant};
+use crate::ir::{CmpPred, KernelBuilder, Module, Ty, Value};
+
+// PolyBench 2DCONV stencil weights
+const C11: f32 = 0.2;
+const C12: f32 = -0.3;
+const C13: f32 = 0.4;
+const C21: f32 = 0.5;
+const C22: f32 = 0.6;
+const C23: f32 = 0.7;
+const C31: f32 = -0.8;
+const C32: f32 = -0.9;
+const C33: f32 = 0.1;
+
+fn finalize(mut module: Module, v: Variant, kernels: Vec<KernelInfo>, buf_sizes: Vec<usize>, outputs: Vec<usize>) -> BuiltBench {
+    match v {
+        Variant::OpenCl => {
+            for f in &mut module.kernels {
+                set_innermost_unroll(f, 2);
+            }
+        }
+        Variant::Cuda => cudaify(&mut module, 8),
+    }
+    BuiltBench::simple(module, kernels, buf_sizes, outputs)
+}
+
+pub fn conv_2d() -> Benchmark {
+    fn build(d: &Dims, v: Variant) -> BuiltBench {
+        let n = d.n;
+        let params = &["a", "b"];
+        let plist: Vec<(&str, Ty)> = params.iter().map(|&p| (p, ptr())).collect();
+        let mut m = Module::new("2DCONV");
+        let mut b = KernelBuilder::new("convolution2d_kernel", &plist);
+        // interior guard: 0 < i < n-1 && 0 < j < n-1
+        let i = b.gid(1);
+        let j = b.gid(0);
+        let c1 = b.icmp(CmpPred::Gt, i, b.i(0));
+        let c2 = b.icmp(CmpPred::Lt, i, b.i(n as i64 - 1));
+        let c3 = b.icmp(CmpPred::Gt, j, b.i(0));
+        let c4 = b.icmp(CmpPred::Lt, j, b.i(n as i64 - 1));
+        let c12 = b.and(c1, c2);
+        let c34 = b.and(c3, c4);
+        let c = b.and(c12, c34);
+        b.if_then(c, |b| {
+            let mut acc: Option<Value> = None;
+            for (di, dj, w) in [
+                (-1, -1, C11),
+                (-1, 0, C12),
+                (-1, 1, C13),
+                (0, -1, C21),
+                (0, 0, C22),
+                (0, 1, C23),
+                (1, -1, C31),
+                (1, 0, C32),
+                (1, 1, C33),
+            ] {
+                let ii = b.add(i, b.i(di));
+                let jj = b.add(j, b.i(dj));
+                let aidx = idx2(b, ii, jj, n);
+                let av = b.load(b.param(0), aidx);
+                let term = b.fmul(av, b.fc(w));
+                acc = Some(match acc {
+                    None => term,
+                    Some(prev) => b.fadd(prev, term),
+                });
+            }
+            let bidx = idx2(b, i, j, n);
+            b.store(b.param(1), bidx, acc.unwrap());
+        });
+        m.kernels.push(b.finish());
+        finalize(
+            m,
+            v,
+            vec![KernelInfo { grid: (n, n), repeat: 1 }],
+            vec![n * n, n * n],
+            vec![1],
+        )
+    }
+    Benchmark {
+        name: "2DCONV",
+        family: "convolution",
+        dims_full: Dims { n: 4096, m: 4096, tmax: 1 },
+        dims_small: Dims { n: 16, m: 16, tmax: 1 },
+        build,
+    }
+}
+
+pub fn conv_3d() -> Benchmark {
+    fn build(d: &Dims, v: Variant) -> BuiltBench {
+        let n = d.n;
+        let params = &["a", "b"];
+        let plist: Vec<(&str, Ty)> = params.iter().map(|&p| (p, ptr())).collect();
+        let mut m = Module::new("3DCONV");
+        let mut b = KernelBuilder::new("convolution3d_kernel", &plist);
+        // thread over (k = gid.0, j = gid.1); loop i over the slow dim
+        let k = b.gid(0);
+        let j = b.gid(1);
+        let c1 = b.icmp(CmpPred::Gt, j, b.i(0));
+        let c2 = b.icmp(CmpPred::Lt, j, b.i(n as i64 - 1));
+        let c3 = b.icmp(CmpPred::Gt, k, b.i(0));
+        let c4 = b.icmp(CmpPred::Lt, k, b.i(n as i64 - 1));
+        let c12 = b.and(c1, c2);
+        let c34 = b.and(c3, c4);
+        let c = b.and(c12, c34);
+        b.if_then(c, |b| {
+            let hi = b.i(n as i64 - 1);
+            b.for_loop("i", b.i(1), hi, 1, |b, i| {
+                let mut acc: Option<Value> = None;
+                for (di, dj, dk, w) in [
+                    (-1, -1, -1, 0.2f32),
+                    (0, -1, -1, -0.3),
+                    (1, -1, 0, 0.4),
+                    (-1, 0, 0, 0.5),
+                    (0, 0, 0, 0.6),
+                    (1, 0, 1, 0.7),
+                    (-1, 1, 1, -0.8),
+                    (0, 1, 1, -0.9),
+                    (1, 1, -1, 0.1),
+                ] {
+                    let ii = b.add(i, b.i(di));
+                    let jj = b.add(j, b.i(dj));
+                    let kk = b.add(k, b.i(dk));
+                    let aidx = idx3(b, ii, jj, kk, n);
+                    let av = b.load(b.param(0), aidx);
+                    let term = b.fmul(av, b.fc(w));
+                    acc = Some(match acc {
+                        None => term,
+                        Some(prev) => b.fadd(prev, term),
+                    });
+                }
+                let bidx = idx3(b, i, j, k, n);
+                b.store(b.param(1), bidx, acc.unwrap());
+            });
+        });
+        m.kernels.push(b.finish());
+        finalize(
+            m,
+            v,
+            vec![KernelInfo { grid: (n, n), repeat: 1 }],
+            vec![n * n * n, n * n * n],
+            vec![1],
+        )
+    }
+    Benchmark {
+        name: "3DCONV",
+        family: "convolution",
+        dims_full: Dims { n: 256, m: 256, tmax: 1 },
+        dims_small: Dims { n: 8, m: 8, tmax: 1 },
+        build,
+    }
+}

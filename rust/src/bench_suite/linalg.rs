@@ -1,0 +1,533 @@
+//! Linear-algebra benchmarks: 2MM, 3MM, ATAX, BICG, GEMM, GESUMMV,
+//! GRAMSCHM, MVT, SYR2K, SYRK — built with the exact loop/memory shape
+//! of the PolyBench/GPU OpenCL kernels (accumulation through global
+//! memory inside the reduction loops).
+
+use super::builders::*;
+use super::{cudaify, set_innermost_unroll, Benchmark, BuiltBench, Dims, KernelInfo, Variant};
+use crate::ir::{CmpPred, KernelBuilder, Module, Ty, Value};
+
+fn finalize(mut module: Module, v: Variant, kernels: Vec<KernelInfo>, buf_sizes: Vec<usize>, outputs: Vec<usize>) -> BuiltBench {
+    match v {
+        Variant::OpenCl => {
+            for f in &mut module.kernels {
+                set_innermost_unroll(f, 2);
+            }
+        }
+        Variant::Cuda => cudaify(&mut module, 8),
+    }
+    BuiltBench::simple(module, kernels, buf_sizes, outputs)
+}
+
+/// One matmul-style kernel: `out[i*n+j] = init; for k: out += a_row ·
+/// b_col` with `i = gid.1`, `j = gid.0`.
+fn mm_kernel(name: &str, n: usize, params: &[&str], a: usize, b_: usize, out: usize, zero_init: bool) -> crate::ir::Function {
+    let plist: Vec<(&str, Ty)> = params.iter().map(|&p| (p, ptr())).collect();
+    let mut b = KernelBuilder::new(name, &plist);
+    guard2(&mut b, n, n, |b, i, j| {
+        let cidx = idx2(b, i, j, n);
+        if zero_init {
+            b.store(b.param(out), cidx, b.fc(0.0));
+        } else {
+            // c *= beta
+            let c0 = b.load(b.param(out), cidx);
+            let c1 = b.fmul(c0, b.fc(BETA));
+            b.store(b.param(out), cidx, c1);
+        }
+        let nn = b.i(n as i64);
+        b.for_loop("k", b.i(0), nn, 1, |b, k| {
+            let aidx = idx2(b, i, k, n);
+            let bidx = idx2(b, k, j, n);
+            let av = b.load(b.param(a), aidx);
+            let bv = b.load(b.param(b_), bidx);
+            let prod = b.fmul(av, bv);
+            let scaled = b.fmul(prod, b.fc(ALPHA));
+            rmw_add(b, b.param(out), cidx, scaled);
+        });
+    });
+    b.finish()
+}
+
+pub fn gemm() -> Benchmark {
+    fn build(d: &Dims, v: Variant) -> BuiltBench {
+        let n = d.n;
+        let mut m = Module::new("GEMM");
+        m.kernels.push(mm_kernel("gemm_kernel", n, &["a", "b", "c"], 0, 1, 2, false));
+        finalize(
+            m,
+            v,
+            vec![KernelInfo { grid: (n, n), repeat: 1 }],
+            vec![n * n, n * n, n * n],
+            vec![2],
+        )
+    }
+    Benchmark {
+        name: "GEMM",
+        family: "linear-algebra",
+        dims_full: Dims { n: 1024, m: 1024, tmax: 1 },
+        dims_small: Dims { n: 12, m: 12, tmax: 1 },
+        build,
+    }
+}
+
+pub fn mm2() -> Benchmark {
+    fn build(d: &Dims, v: Variant) -> BuiltBench {
+        let n = d.n;
+        let mut m = Module::new("2MM");
+        // tmp = A×B ; D = tmp×C   (buffers: a, b, c, tmp, dd)
+        m.kernels.push(mm_kernel("mm2_kernel1", n, &["a", "b", "c", "tmp", "dd"], 0, 1, 3, true));
+        m.kernels.push(mm_kernel("mm2_kernel2", n, &["a", "b", "c", "tmp", "dd"], 3, 2, 4, true));
+        finalize(
+            m,
+            v,
+            vec![
+                KernelInfo { grid: (n, n), repeat: 1 },
+                KernelInfo { grid: (n, n), repeat: 1 },
+            ],
+            vec![n * n; 5],
+            vec![4],
+        )
+    }
+    Benchmark {
+        name: "2MM",
+        family: "linear-algebra",
+        dims_full: Dims { n: 1024, m: 1024, tmax: 1 },
+        dims_small: Dims { n: 12, m: 12, tmax: 1 },
+        build,
+    }
+}
+
+pub fn mm3() -> Benchmark {
+    fn build(d: &Dims, v: Variant) -> BuiltBench {
+        let n = d.n;
+        let mut m = Module::new("3MM");
+        // E = A×B ; F = C×D ; G = E×F (buffers: a,b,c,dd,e,ff,g)
+        let params = &["a", "b", "c", "dd", "e", "ff", "g"];
+        m.kernels.push(mm_kernel("mm3_kernel1", n, params, 0, 1, 4, true));
+        m.kernels.push(mm_kernel("mm3_kernel2", n, params, 2, 3, 5, true));
+        m.kernels.push(mm_kernel("mm3_kernel3", n, params, 4, 5, 6, true));
+        finalize(
+            m,
+            v,
+            vec![KernelInfo { grid: (n, n), repeat: 1 }; 3],
+            vec![n * n; 7],
+            vec![6],
+        )
+    }
+    Benchmark {
+        name: "3MM",
+        family: "linear-algebra",
+        dims_full: Dims { n: 1024, m: 1024, tmax: 1 },
+        dims_small: Dims { n: 10, m: 10, tmax: 1 },
+        build,
+    }
+}
+
+pub fn atax() -> Benchmark {
+    fn build(d: &Dims, v: Variant) -> BuiltBench {
+        let n = d.n;
+        let params = &["a", "x", "y", "tmp"];
+        let plist: Vec<(&str, Ty)> = params.iter().map(|&p| (p, ptr())).collect();
+        let mut m = Module::new("ATAX");
+        // kernel1: per-row reduction tmp[i] = Σ_j A[i][j]·x[j]
+        {
+            let mut b = KernelBuilder::new("atax_kernel1", &plist);
+            guard1(&mut b, n, |b, i| {
+                b.store(b.param(3), i, b.fc(0.0));
+                let nn = b.i(n as i64);
+                b.for_loop("j", b.i(0), nn, 1, |b, j| {
+                    let aidx = idx2(b, i, j, n);
+                    let av = b.load(b.param(0), aidx);
+                    let xv = b.load(b.param(1), j);
+                    let prod = b.fmul(av, xv);
+                    rmw_add(b, b.param(3), i, prod);
+                });
+            });
+            m.kernels.push(b.finish());
+        }
+        // kernel2: per-column reduction y[j] = Σ_i A[i][j]·tmp[i]
+        {
+            let mut b = KernelBuilder::new("atax_kernel2", &plist);
+            guard1(&mut b, n, |b, j| {
+                b.store(b.param(2), j, b.fc(0.0));
+                let nn = b.i(n as i64);
+                b.for_loop("i", b.i(0), nn, 1, |b, i| {
+                    let aidx = idx2(b, i, j, n);
+                    let av = b.load(b.param(0), aidx);
+                    let tv = b.load(b.param(3), i);
+                    let prod = b.fmul(av, tv);
+                    rmw_add(b, b.param(2), j, prod);
+                });
+            });
+            m.kernels.push(b.finish());
+        }
+        finalize(
+            m,
+            v,
+            vec![KernelInfo { grid: (n, 1), repeat: 1 }; 2],
+            vec![n * n, n, n, n],
+            vec![2],
+        )
+    }
+    Benchmark {
+        name: "ATAX",
+        family: "linear-algebra",
+        dims_full: Dims { n: 4096, m: 4096, tmax: 1 },
+        dims_small: Dims { n: 24, m: 24, tmax: 1 },
+        build,
+    }
+}
+
+pub fn bicg() -> Benchmark {
+    fn build(d: &Dims, v: Variant) -> BuiltBench {
+        let n = d.n;
+        let params = &["a", "p", "q", "r", "s"];
+        let plist: Vec<(&str, Ty)> = params.iter().map(|&p| (p, ptr())).collect();
+        let mut m = Module::new("BICG");
+        // kernel1: s[j] = Σ_i r[i]·A[i][j]
+        {
+            let mut b = KernelBuilder::new("bicg_kernel1", &plist);
+            guard1(&mut b, n, |b, j| {
+                b.store(b.param(4), j, b.fc(0.0));
+                let nn = b.i(n as i64);
+                b.for_loop("i", b.i(0), nn, 1, |b, i| {
+                    let aidx = idx2(b, i, j, n);
+                    let rv = b.load(b.param(3), i);
+                    let av = b.load(b.param(0), aidx);
+                    let prod = b.fmul(rv, av);
+                    rmw_add(b, b.param(4), j, prod);
+                });
+            });
+            m.kernels.push(b.finish());
+        }
+        // kernel2: q[i] = Σ_j A[i][j]·p[j]
+        {
+            let mut b = KernelBuilder::new("bicg_kernel2", &plist);
+            guard1(&mut b, n, |b, i| {
+                b.store(b.param(2), i, b.fc(0.0));
+                let nn = b.i(n as i64);
+                b.for_loop("j", b.i(0), nn, 1, |b, j| {
+                    let aidx = idx2(b, i, j, n);
+                    let av = b.load(b.param(0), aidx);
+                    let pv = b.load(b.param(1), j);
+                    let prod = b.fmul(av, pv);
+                    rmw_add(b, b.param(2), i, prod);
+                });
+            });
+            m.kernels.push(b.finish());
+        }
+        finalize(
+            m,
+            v,
+            vec![KernelInfo { grid: (n, 1), repeat: 1 }; 2],
+            vec![n * n, n, n, n, n],
+            vec![2, 4],
+        )
+    }
+    Benchmark {
+        name: "BICG",
+        family: "linear-algebra",
+        dims_full: Dims { n: 4096, m: 4096, tmax: 1 },
+        dims_small: Dims { n: 24, m: 24, tmax: 1 },
+        build,
+    }
+}
+
+pub fn mvt() -> Benchmark {
+    fn build(d: &Dims, v: Variant) -> BuiltBench {
+        let n = d.n;
+        let params = &["a", "x1", "x2", "y1", "y2"];
+        let plist: Vec<(&str, Ty)> = params.iter().map(|&p| (p, ptr())).collect();
+        let mut m = Module::new("MVT");
+        // x1[i] += Σ_j A[i][j]·y1[j]   (accumulates onto existing x1)
+        {
+            let mut b = KernelBuilder::new("mvt_kernel1", &plist);
+            guard1(&mut b, n, |b, i| {
+                let nn = b.i(n as i64);
+                b.for_loop("j", b.i(0), nn, 1, |b, j| {
+                    let aidx = idx2(b, i, j, n);
+                    let av = b.load(b.param(0), aidx);
+                    let yv = b.load(b.param(3), j);
+                    let prod = b.fmul(av, yv);
+                    rmw_add(b, b.param(1), i, prod);
+                });
+            });
+            m.kernels.push(b.finish());
+        }
+        // x2[i] += Σ_j A[j][i]·y2[j]
+        {
+            let mut b = KernelBuilder::new("mvt_kernel2", &plist);
+            guard1(&mut b, n, |b, i| {
+                let nn = b.i(n as i64);
+                b.for_loop("j", b.i(0), nn, 1, |b, j| {
+                    let aidx = idx2(b, j, i, n);
+                    let av = b.load(b.param(0), aidx);
+                    let yv = b.load(b.param(4), j);
+                    let prod = b.fmul(av, yv);
+                    rmw_add(b, b.param(2), i, prod);
+                });
+            });
+            m.kernels.push(b.finish());
+        }
+        finalize(
+            m,
+            v,
+            vec![KernelInfo { grid: (n, 1), repeat: 1 }; 2],
+            vec![n * n, n, n, n, n],
+            vec![1, 2],
+        )
+    }
+    Benchmark {
+        name: "MVT",
+        family: "linear-algebra",
+        dims_full: Dims { n: 4096, m: 4096, tmax: 1 },
+        dims_small: Dims { n: 24, m: 24, tmax: 1 },
+        build,
+    }
+}
+
+pub fn gesummv() -> Benchmark {
+    fn build(d: &Dims, v: Variant) -> BuiltBench {
+        let n = d.n;
+        let params = &["a", "b", "x", "y", "tmp"];
+        let plist: Vec<(&str, Ty)> = params.iter().map(|&p| (p, ptr())).collect();
+        let mut m = Module::new("GESUMMV");
+        // y[i] = α·(A·x)[i] + β·(B·x)[i], two memory accumulators in one
+        // loop (the paper notes GESUMMV's phase-ordered version keeps a
+        // smaller unroll but still extracts both stores)
+        let mut b = KernelBuilder::new("gesummv_kernel", &plist);
+        guard1(&mut b, n, |b, i| {
+            b.store(b.param(4), i, b.fc(0.0));
+            b.store(b.param(3), i, b.fc(0.0));
+            let nn = b.i(n as i64);
+            b.for_loop("j", b.i(0), nn, 1, |b, j| {
+                let aidx = idx2(b, i, j, n);
+                let av = b.load(b.param(0), aidx);
+                let xv = b.load(b.param(2), j);
+                let p1 = b.fmul(av, xv);
+                rmw_add(b, b.param(4), i, p1);
+                let bidx = idx2(b, i, j, n);
+                let bv = b.load(b.param(1), bidx);
+                let xv2 = b.load(b.param(2), j);
+                let p2 = b.fmul(bv, xv2);
+                rmw_add(b, b.param(3), i, p2);
+            });
+            let tv = b.load(b.param(4), i);
+            let yv = b.load(b.param(3), i);
+            let at = b.fmul(tv, b.fc(ALPHA));
+            let by = b.fmul(yv, b.fc(BETA));
+            let s = b.fadd(at, by);
+            b.store(b.param(3), i, s);
+        });
+        m.kernels.push(b.finish());
+        finalize(
+            m,
+            v,
+            vec![KernelInfo { grid: (n, 1), repeat: 1 }],
+            vec![n * n, n * n, n, n, n],
+            vec![3],
+        )
+    }
+    Benchmark {
+        name: "GESUMMV",
+        family: "linear-algebra",
+        dims_full: Dims { n: 4096, m: 4096, tmax: 1 },
+        dims_small: Dims { n: 20, m: 20, tmax: 1 },
+        build,
+    }
+}
+
+pub fn syrk() -> Benchmark {
+    fn build(d: &Dims, v: Variant) -> BuiltBench {
+        let n = d.n;
+        let params = &["a", "c"];
+        let plist: Vec<(&str, Ty)> = params.iter().map(|&p| (p, ptr())).collect();
+        let mut m = Module::new("SYRK");
+        // c[i][j] = β·c + α·Σ_k a[i][k]·a[j][k]
+        let mut b = KernelBuilder::new("syrk_kernel", &plist);
+        guard2(&mut b, n, n, |b, i, j| {
+            let cidx = idx2(b, i, j, n);
+            let c0 = b.load(b.param(1), cidx);
+            let c1 = b.fmul(c0, b.fc(BETA));
+            b.store(b.param(1), cidx, c1);
+            let nn = b.i(n as i64);
+            b.for_loop("k", b.i(0), nn, 1, |b, k| {
+                let ai = idx2(b, i, k, n);
+                let aj = idx2(b, j, k, n);
+                let av = b.load(b.param(0), ai);
+                let bv = b.load(b.param(0), aj);
+                let prod = b.fmul(av, bv);
+                let scaled = b.fmul(prod, b.fc(ALPHA));
+                rmw_add(b, b.param(1), cidx, scaled);
+            });
+        });
+        m.kernels.push(b.finish());
+        finalize(
+            m,
+            v,
+            vec![KernelInfo { grid: (n, n), repeat: 1 }],
+            vec![n * n, n * n],
+            vec![1],
+        )
+    }
+    Benchmark {
+        name: "SYRK",
+        family: "linear-algebra",
+        dims_full: Dims { n: 1024, m: 1024, tmax: 1 },
+        dims_small: Dims { n: 12, m: 12, tmax: 1 },
+        build,
+    }
+}
+
+pub fn syr2k() -> Benchmark {
+    fn build(d: &Dims, v: Variant) -> BuiltBench {
+        let n = d.n;
+        let params = &["a", "b", "c"];
+        let plist: Vec<(&str, Ty)> = params.iter().map(|&p| (p, ptr())).collect();
+        let mut m = Module::new("SYR2K");
+        // c[i][j] = β·c + α·Σ_k (a[i][k]·b[j][k] + b[i][k]·a[j][k])
+        let mut b = KernelBuilder::new("syr2k_kernel", &plist);
+        guard2(&mut b, n, n, |b, i, j| {
+            let cidx = idx2(b, i, j, n);
+            let c0 = b.load(b.param(2), cidx);
+            let c1 = b.fmul(c0, b.fc(BETA));
+            b.store(b.param(2), cidx, c1);
+            let nn = b.i(n as i64);
+            b.for_loop("k", b.i(0), nn, 1, |b, k| {
+                let aik = idx2(b, i, k, n);
+                let bjk = idx2(b, j, k, n);
+                let bik = idx2(b, i, k, n);
+                let ajk = idx2(b, j, k, n);
+                let av = b.load(b.param(0), aik);
+                let bv = b.load(b.param(1), bjk);
+                let p1 = b.fmul(av, bv);
+                let bv2 = b.load(b.param(1), bik);
+                let av2 = b.load(b.param(0), ajk);
+                let p2 = b.fmul(bv2, av2);
+                let s = b.fadd(p1, p2);
+                let scaled = b.fmul(s, b.fc(ALPHA));
+                rmw_add(b, b.param(2), cidx, scaled);
+            });
+        });
+        m.kernels.push(b.finish());
+        finalize(
+            m,
+            v,
+            vec![KernelInfo { grid: (n, n), repeat: 1 }],
+            vec![n * n, n * n, n * n],
+            vec![2],
+        )
+    }
+    Benchmark {
+        name: "SYR2K",
+        family: "linear-algebra",
+        dims_full: Dims { n: 1024, m: 1024, tmax: 1 },
+        dims_small: Dims { n: 12, m: 12, tmax: 1 },
+        build,
+    }
+}
+
+pub fn gramschm() -> Benchmark {
+    fn build(d: &Dims, v: Variant) -> BuiltBench {
+        let n = d.n;
+        // buffers: a (n*n), r (n*n), q (n*n), host scalars
+        let params = &["a", "r", "q", "host"];
+        let plist: Vec<(&str, Ty)> = params.iter().map(|&p| (p, ptr())).collect();
+        let mut m = Module::new("GRAMSCHM");
+        let read_k = |b: &mut KernelBuilder| -> Value {
+            let kf = b.load(b.param(3), b.i(0));
+            b.fptosi(kf)
+        };
+        // kernel1 (1 thread): r[k][k] = sqrt(Σ_i a[i][k]²)
+        {
+            let mut b = KernelBuilder::new("gramschmidt_kernel1", &plist);
+            let k = read_k(&mut b);
+            let rkk = idx2(&mut b, k, k, n);
+            b.store(b.param(1), rkk, b.fc(0.0));
+            let nn = b.i(n as i64);
+            b.for_loop("i", b.i(0), nn, 1, |b, i| {
+                let aik = idx2(b, i, k, n);
+                let av = b.load(b.param(0), aik);
+                let sq = b.fmul(av, av);
+                rmw_add(b, b.param(1), rkk, sq);
+            });
+            let acc = b.load(b.param(1), rkk);
+            let root = b.fsqrt(acc);
+            b.store(b.param(1), rkk, root);
+            m.kernels.push(b.finish());
+        }
+        // kernel2: q[i][k] = a[i][k] / r[k][k]
+        {
+            let mut b = KernelBuilder::new("gramschmidt_kernel2", &plist);
+            let k = read_k(&mut b);
+            guard1(&mut b, n, |b, i| {
+                let aik = idx2(b, i, k, n);
+                let rkk = idx2(b, k, k, n);
+                let av = b.load(b.param(0), aik);
+                let rv = b.load(b.param(1), rkk);
+                let qv = b.fdiv(av, rv);
+                b.store(b.param(2), aik, qv);
+            });
+            m.kernels.push(b.finish());
+        }
+        // kernel3: for j > k: r[k][j] = Σ_i q[i][k]·a[i][j]; then
+        //          a[i][j] -= q[i][k]·r[k][j]
+        {
+            let mut b = KernelBuilder::new("gramschmidt_kernel3", &plist);
+            let k = read_k(&mut b);
+            let j = b.gid(0);
+            let upper = b.icmp(CmpPred::Lt, j, b.i(n as i64));
+            let lower = b.icmp(CmpPred::Gt, j, k);
+            let c = b.and(upper, lower);
+            b.if_then(c, |b| {
+                let rkj = idx2(b, k, j, n);
+                b.store(b.param(1), rkj, b.fc(0.0));
+                let nn = b.i(n as i64);
+                b.for_loop("i", b.i(0), nn, 1, |b, i| {
+                    let qik = idx2(b, i, k, n);
+                    let aij = idx2(b, i, j, n);
+                    let qv = b.load(b.param(2), qik);
+                    let av = b.load(b.param(0), aij);
+                    let prod = b.fmul(qv, av);
+                    rmw_add(b, b.param(1), rkj, prod);
+                });
+                let nn2 = b.i(n as i64);
+                b.for_loop("i2", b.i(0), nn2, 1, |b, i| {
+                    let qik = idx2(b, i, k, n);
+                    let aij = idx2(b, i, j, n);
+                    let qv = b.load(b.param(2), qik);
+                    let rv = b.load(b.param(1), rkj);
+                    let prod = b.fmul(qv, rv);
+                    let av = b.load(b.param(0), aij);
+                    let diff = b.fsub(av, prod);
+                    b.store(b.param(0), aij, diff);
+                });
+            });
+            m.kernels.push(b.finish());
+        }
+        let mut built = finalize(
+            m,
+            v,
+            vec![
+                KernelInfo { grid: (1, 1), repeat: 1 },
+                KernelInfo { grid: (n, 1), repeat: 1 },
+                KernelInfo { grid: (n, 1), repeat: 1 },
+            ],
+            vec![n * n, n * n, n * n, 4],
+            vec![0, 2],
+        );
+        built.seq_repeat = n;
+        built.host_step = Some(|bufs, t| {
+            let last = bufs.bufs.len() - 1;
+            bufs.bufs[last][0] = t as f32;
+        });
+        built
+    }
+    Benchmark {
+        name: "GRAMSCHM",
+        family: "linear-algebra",
+        dims_full: Dims { n: 512, m: 512, tmax: 1 },
+        dims_small: Dims { n: 6, m: 6, tmax: 1 },
+        build,
+    }
+}

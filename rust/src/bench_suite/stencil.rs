@@ -1,0 +1,122 @@
+//! Stencil benchmark: FDTD-2D — three field-update kernels driven by a
+//! host time loop. "Very straightforward, with little potential for
+//! optimization" (§3.4): no loop-carried memory accumulation, so phase
+//! ordering finds nothing, matching the paper.
+
+use super::builders::*;
+use super::{cudaify, set_innermost_unroll, Benchmark, BuiltBench, Dims, KernelInfo, Variant};
+use crate::ir::{CmpPred, KernelBuilder, Module, Ty};
+
+fn finalize(mut module: Module, v: Variant, kernels: Vec<KernelInfo>, buf_sizes: Vec<usize>, outputs: Vec<usize>) -> BuiltBench {
+    match v {
+        Variant::OpenCl => {
+            for f in &mut module.kernels {
+                set_innermost_unroll(f, 2);
+            }
+        }
+        Variant::Cuda => cudaify(&mut module, 8),
+    }
+    BuiltBench::simple(module, kernels, buf_sizes, outputs)
+}
+
+pub fn fdtd_2d() -> Benchmark {
+    fn build(d: &Dims, v: Variant) -> BuiltBench {
+        let n = d.n;
+        let tmax = d.tmax;
+        // buffers: fict(tmax), ex(n*n), ey(n*n), hz(n*n), host(4)
+        let params = &["fict", "ex", "ey", "hz", "host"];
+        let plist: Vec<(&str, Ty)> = params.iter().map(|&p| (p, ptr())).collect();
+        let mut m = Module::new("FDTD-2D");
+        // kernel1: ey update (+ fict source row)
+        {
+            let mut b = KernelBuilder::new("fdtd_kernel1", &plist);
+            let tf = b.load(b.param(4), b.i(0));
+            let t = b.fptosi(tf);
+            guard2(&mut b, n, n, |b, i, j| {
+                let zero = b.icmp(CmpPred::Eq, i, b.i(0));
+                let eyidx = idx2(b, i, j, n);
+                // real if/else, as in the original source: the i-1 row
+                // access must only execute on the interior branch
+                let sel = b.if_then_else_val(
+                    zero,
+                    |b| b.load(b.param(0), t),
+                    |b| {
+                        let hz0 = b.load(b.param(3), eyidx);
+                        let im1 = b.sub(i, b.i(1));
+                        let hz1idx = idx2(b, im1, j, n);
+                        let hz1 = b.load(b.param(3), hz1idx);
+                        let diff = b.fsub(hz0, hz1);
+                        let half = b.fmul(diff, b.fc(0.5));
+                        let eyv = b.load(b.param(2), eyidx);
+                        b.fsub(eyv, half)
+                    },
+                );
+                b.store(b.param(2), eyidx, sel);
+            });
+            m.kernels.push(b.finish());
+        }
+        // kernel2: ex update
+        {
+            let mut b = KernelBuilder::new("fdtd_kernel2", &plist);
+            guard2(&mut b, n, n, |b, i, j| {
+                let pos = b.icmp(CmpPred::Gt, j, b.i(0));
+                b.if_then(pos, |b| {
+                    let exidx = idx2(b, i, j, n);
+                    let hz0 = b.load(b.param(3), exidx);
+                    let jm1 = b.sub(j, b.i(1));
+                    let hz1idx = idx2(b, i, jm1, n);
+                    let hz1 = b.load(b.param(3), hz1idx);
+                    let diff = b.fsub(hz0, hz1);
+                    let half = b.fmul(diff, b.fc(0.5));
+                    let exv = b.load(b.param(1), exidx);
+                    let upd = b.fsub(exv, half);
+                    b.store(b.param(1), exidx, upd);
+                });
+            });
+            m.kernels.push(b.finish());
+        }
+        // kernel3: hz update
+        {
+            let mut b = KernelBuilder::new("fdtd_kernel3", &plist);
+            guard2(&mut b, n - 1, n - 1, |b, i, j| {
+                let hzidx = idx2(b, i, j, n);
+                let jp1 = b.add(j, b.i(1));
+                let exr_idx = idx2(b, i, jp1, n);
+                let ex0 = b.load(b.param(1), exr_idx);
+                let ex1 = b.load(b.param(1), hzidx);
+                let dex = b.fsub(ex0, ex1);
+                let ip1 = b.add(i, b.i(1));
+                let eyd_idx = idx2(b, ip1, j, n);
+                let ey0 = b.load(b.param(2), eyd_idx);
+                let ey1 = b.load(b.param(2), hzidx);
+                let dey = b.fsub(ey0, ey1);
+                let s = b.fadd(dex, dey);
+                let scaled = b.fmul(s, b.fc(0.7));
+                let hzv = b.load(b.param(3), hzidx);
+                let upd = b.fsub(hzv, scaled);
+                b.store(b.param(3), hzidx, upd);
+            });
+            m.kernels.push(b.finish());
+        }
+        let mut built = finalize(
+            m,
+            v,
+            vec![KernelInfo { grid: (n, n), repeat: 1 }; 3],
+            vec![tmax.max(1), n * n, n * n, n * n, 4],
+            vec![1, 2, 3],
+        );
+        built.seq_repeat = tmax;
+        built.host_step = Some(|bufs, t| {
+            let last = bufs.bufs.len() - 1;
+            bufs.bufs[last][0] = t as f32;
+        });
+        built
+    }
+    Benchmark {
+        name: "FDTD-2D",
+        family: "stencil",
+        dims_full: Dims { n: 2048, m: 2048, tmax: 500 },
+        dims_small: Dims { n: 10, m: 10, tmax: 3 },
+        build,
+    }
+}

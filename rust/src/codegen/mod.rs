@@ -1,0 +1,14 @@
+//! The virtual-PTX backend.
+//!
+//! Translates optimized IR into a PTX-like instruction stream. This is
+//! where the paper's observables live: the load address patterns of
+//! Fig. 6, `ld.v2` pairing from `bb-vectorize` hints, FMA fusion,
+//! `__local_depot` accesses, per-access coalescing class, register
+//! pressure, and loop unroll factors. The cost model (`sim::cost`) prices
+//! this stream; the functional executor (`sim::exec`) runs the IR the
+//! stream was generated from (the backend translation is 1:1 by
+//! construction, so IR semantics == vPTX semantics).
+
+pub mod ptx;
+
+pub use ptx::{emit, emit_module, lower, MemClass, PtxInst, PtxKind, PtxProgram};

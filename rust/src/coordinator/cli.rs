@@ -1,0 +1,223 @@
+//! Hand-rolled CLI (the vendored crate set has no clap).
+//!
+//! ```text
+//! repro <command> [--seqs N] [--seed S] [--target gp104|amd-fiji]
+//!                 [--perms N] [--draws N] [--out DIR] [--full]
+//!
+//! commands: fig2 table1 fig3 fig4 fig5 fig6 fig7 problems amd all
+//! ```
+
+use std::path::PathBuf;
+
+use super::experiments::{
+    fig2_table1, fig3_cross, fig4_scatter, fig5_permutations, fig6_load_patterns, fig7_features,
+    problem_stats, ExpConfig, ExpCtx, Fig2Row,
+};
+use super::report;
+use crate::sim::target::Target;
+
+pub struct CliArgs {
+    pub command: String,
+    pub cfg: ExpConfig,
+    pub out: PathBuf,
+}
+
+pub fn parse_args(argv: &[String]) -> Result<CliArgs, String> {
+    let mut command = String::new();
+    let mut cfg = ExpConfig::default();
+    let mut out = PathBuf::from("results");
+    let mut it = argv.iter().peekable();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--seqs" => {
+                cfg.n_seqs = it
+                    .next()
+                    .ok_or("--seqs needs a value")?
+                    .parse()
+                    .map_err(|e| format!("--seqs: {e}"))?
+            }
+            "--seed" => {
+                cfg.seed = it
+                    .next()
+                    .ok_or("--seed needs a value")?
+                    .parse()
+                    .map_err(|e| format!("--seed: {e}"))?
+            }
+            "--perms" => {
+                cfg.n_perms = it
+                    .next()
+                    .ok_or("--perms needs a value")?
+                    .parse()
+                    .map_err(|e| format!("--perms: {e}"))?
+            }
+            "--draws" => {
+                cfg.n_random_draws = it
+                    .next()
+                    .ok_or("--draws needs a value")?
+                    .parse()
+                    .map_err(|e| format!("--draws: {e}"))?
+            }
+            "--target" => {
+                let t = it.next().ok_or("--target needs a value")?;
+                cfg.target = Target::by_name(t).ok_or_else(|| format!("unknown target {t}"))?;
+            }
+            "--out" => out = PathBuf::from(it.next().ok_or("--out needs a value")?),
+            "--full" => {
+                // the paper's full protocol
+                cfg.n_seqs = 10_000;
+                cfg.n_perms = 1000;
+                cfg.n_random_draws = 1000;
+            }
+            "--help" | "-h" => return Err(usage()),
+            flag if flag.starts_with("--") => return Err(format!("unknown flag {flag}\n{}", usage())),
+            cmd if command.is_empty() => command = cmd.to_string(),
+            extra => return Err(format!("unexpected argument {extra}\n{}", usage())),
+        }
+    }
+    if command.is_empty() {
+        return Err(usage());
+    }
+    Ok(CliArgs { command, cfg, out })
+}
+
+pub fn usage() -> String {
+    "usage: repro <fig2|table1|fig3|fig4|fig5|fig6|fig7|problems|amd|all> \
+     [--seqs N] [--seed S] [--target gp104|amd-fiji] [--perms N] [--draws N] \
+     [--out DIR] [--full]\n\
+     --full = the paper's protocol (10000 sequences, 1000 permutations/draws)"
+        .to_string()
+}
+
+fn fig2_cached(ctx: &mut ExpCtx) -> Vec<Fig2Row> {
+    eprintln!(
+        "exploring {} sequences × {} benchmarks on {} (golden: {}) …",
+        ctx.cfg.n_seqs,
+        ctx.benchmarks.len(),
+        ctx.cfg.target.name,
+        if ctx.used_pjrt_golden { "PJRT artifacts" } else { "interpreter" }
+    );
+    fig2_table1(ctx)
+}
+
+pub fn run(args: CliArgs) -> Result<(), String> {
+    let out = args.out.clone();
+    let mut ctx = ExpCtx::new(args.cfg.clone());
+    let io = |e: std::io::Error| e.to_string();
+    match args.command.as_str() {
+        "fig6" => {
+            let (cuda, ocl) = fig6_load_patterns();
+            println!("=== Fig. 6(a): 2DCONV lowered CUDA-style (NVCC addressing) ===");
+            println!("{}", first_load_window(&cuda));
+            println!("=== Fig. 6(b): 2DCONV lowered from OpenCL (naive chain) ===");
+            println!("{}", first_load_window(&ocl));
+        }
+        "fig2" | "table1" | "fig3" | "fig4" | "fig5" | "problems" | "fig7" | "amd" | "all" => {
+            if args.command == "amd" {
+                // same protocol, Fiji cost tables (§3.1 side experiment)
+                let mut cfg = args.cfg.clone();
+                cfg.target = Target::fiji();
+                ctx = ExpCtx::new(cfg);
+            }
+            let rows = fig2_cached(&mut ctx);
+            match args.command.as_str() {
+                "fig2" | "amd" => {
+                    println!("{}", report::render_fig2(&rows));
+                    report::write_json(&out, "fig2.json", &report::fig2_json(&rows)).map_err(io)?;
+                }
+                "table1" => println!("{}", report::render_table1(&rows)),
+                "fig3" => {
+                    let m = fig3_cross(&mut ctx, &rows);
+                    println!("{}", report::render_fig3(&m));
+                    report::write_json(&out, "fig3.json", &report::fig3_json(&m)).map_err(io)?;
+                }
+                "fig4" => {
+                    let f = fig4_scatter(&mut ctx, &rows);
+                    println!("{}", report::render_fig4(&f));
+                    report::write_json(&out, "fig4.json", &report::fig4_json(&f)).map_err(io)?;
+                }
+                "fig5" => {
+                    let st = fig5_permutations(&mut ctx, &rows);
+                    println!("{}", report::render_fig5(&st));
+                    report::write_json(&out, "fig5.json", &report::fig5_json(&st)).map_err(io)?;
+                }
+                "problems" => {
+                    let p = problem_stats(&rows, ctx.cfg.n_seqs);
+                    println!("{}", report::render_problems(&p));
+                }
+                "fig7" => {
+                    let f = fig7_features(&mut ctx, &rows);
+                    println!("{}", report::render_fig7(&f));
+                    report::write_json(&out, "fig7.json", &report::fig7_json(&f)).map_err(io)?;
+                }
+                "all" => {
+                    println!("{}", report::render_fig2(&rows));
+                    println!("{}", report::render_table1(&rows));
+                    report::write_json(&out, "fig2.json", &report::fig2_json(&rows)).map_err(io)?;
+                    let m = fig3_cross(&mut ctx, &rows);
+                    println!("{}", report::render_fig3(&m));
+                    report::write_json(&out, "fig3.json", &report::fig3_json(&m)).map_err(io)?;
+                    let f4 = fig4_scatter(&mut ctx, &rows);
+                    println!("{}", report::render_fig4(&f4));
+                    report::write_json(&out, "fig4.json", &report::fig4_json(&f4)).map_err(io)?;
+                    let st = fig5_permutations(&mut ctx, &rows);
+                    println!("{}", report::render_fig5(&st));
+                    report::write_json(&out, "fig5.json", &report::fig5_json(&st)).map_err(io)?;
+                    let p = problem_stats(&rows, ctx.cfg.n_seqs);
+                    println!("{}", report::render_problems(&p));
+                    let f7 = fig7_features(&mut ctx, &rows);
+                    println!("{}", report::render_fig7(&f7));
+                    report::write_json(&out, "fig7.json", &report::fig7_json(&f7)).map_err(io)?;
+                    let (cuda, ocl) = fig6_load_patterns();
+                    println!("=== Fig. 6: load patterns (CUDA vs OpenCL) ===");
+                    println!("{}\n{}", first_load_window(&cuda), first_load_window(&ocl));
+                }
+                _ => unreachable!(),
+            }
+        }
+        other => return Err(format!("unknown command {other}\n{}", usage())),
+    }
+    Ok(())
+}
+
+/// The instructions around the first global load (the Fig. 6 window).
+fn first_load_window(ptx: &str) -> String {
+    let lines: Vec<&str> = ptx.lines().collect();
+    let pos = lines
+        .iter()
+        .position(|l| l.contains("ld.global"))
+        .unwrap_or(0);
+    let lo = pos.saturating_sub(5);
+    lines[lo..=pos.min(lines.len() - 1)].join("\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags() {
+        let a = parse_args(&sv(&["fig2", "--seqs", "50", "--seed", "9", "--target", "amd-fiji"]))
+            .unwrap();
+        assert_eq!(a.command, "fig2");
+        assert_eq!(a.cfg.n_seqs, 50);
+        assert_eq!(a.cfg.seed, 9);
+        assert_eq!(a.cfg.target.name, "amd-fiji");
+    }
+
+    #[test]
+    fn full_flag_sets_paper_protocol() {
+        let a = parse_args(&sv(&["all", "--full"])).unwrap();
+        assert_eq!(a.cfg.n_seqs, 10_000);
+        assert_eq!(a.cfg.n_perms, 1000);
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(parse_args(&sv(&["fig2", "--bogus"])).is_err());
+        assert!(parse_args(&sv(&[])).is_err());
+    }
+}

@@ -1,0 +1,487 @@
+//! One driver per paper experiment (DESIGN.md §6 maps each to its
+//! table/figure).
+
+use std::collections::HashMap;
+
+use crate::bench_suite::{all_benchmarks, model_time_us, Benchmark, Variant};
+use crate::dse::{minimize_sequence, permutation_study, Explorer, SeqGen};
+use crate::dse::permute::PermutationStudy;
+use crate::features::{extract_features, rank_by_similarity, FeatureVector, IterGraph};
+use crate::passes::manager::standard_level;
+use crate::runtime::{golden_buffers, GoldenRunner};
+use crate::sim::target::Target;
+use crate::util::{geomean, Rng};
+
+#[derive(Debug, Clone)]
+pub struct ExpConfig {
+    /// number of random sequences in the shared DSE stream (paper: 10000)
+    pub n_seqs: usize,
+    pub seed: u64,
+    pub target: Target,
+    /// permutations per benchmark for Fig. 5 (paper: up to 1000)
+    pub n_perms: usize,
+    /// random draws for Fig. 7's random-selection baseline (paper: 1000)
+    pub n_random_draws: usize,
+}
+
+impl Default for ExpConfig {
+    fn default() -> Self {
+        ExpConfig {
+            n_seqs: 1000,
+            seed: 0xC0FFEE,
+            target: Target::gp104(),
+            n_perms: 200,
+            n_random_draws: 200,
+        }
+    }
+}
+
+/// Shared experiment context: explorers (with their caches), the shared
+/// sequence stream, and golden references (PJRT artifacts when present,
+/// interpreter fallback otherwise).
+pub struct ExpCtx {
+    pub cfg: ExpConfig,
+    pub benchmarks: Vec<Benchmark>,
+    pub stream: Vec<Vec<&'static str>>,
+    explorers: HashMap<String, Explorer>,
+    pub used_pjrt_golden: bool,
+}
+
+impl ExpCtx {
+    pub fn new(cfg: ExpConfig) -> ExpCtx {
+        let benchmarks = all_benchmarks();
+        let stream = SeqGen::stream(cfg.seed, cfg.n_seqs);
+        let runner = GoldenRunner::from_env().ok();
+        let mut explorers = HashMap::new();
+        let mut used_pjrt = false;
+        for b in &benchmarks {
+            let golden = match &runner {
+                Some(r) if r.has_artifact(b.name) => match golden_buffers(r, b) {
+                    Ok(g) => {
+                        used_pjrt = true;
+                        g
+                    }
+                    Err(e) => {
+                        eprintln!("warning: {}: PJRT golden failed ({e}); interpreter fallback", b.name);
+                        Explorer::golden_from_interpreter(b)
+                    }
+                },
+                _ => Explorer::golden_from_interpreter(b),
+            };
+            explorers.insert(b.name.to_string(), Explorer::new(b, cfg.target.clone(), golden));
+        }
+        ExpCtx {
+            cfg,
+            benchmarks,
+            stream,
+            explorers,
+            used_pjrt_golden: used_pjrt,
+        }
+    }
+
+    pub fn explorer(&mut self, name: &str) -> &mut Explorer {
+        self.explorers.get_mut(name).expect("known benchmark")
+    }
+}
+
+// ------------------------------------------------------------ Fig. 2 + Table 1
+
+#[derive(Debug, Clone)]
+pub struct Fig2Row {
+    pub bench: String,
+    pub t_opencl_src_us: f64,
+    pub t_llvm_us: f64,
+    pub t_llvm_ox_us: f64,
+    pub best_ox_level: String,
+    pub t_cuda_us: f64,
+    pub t_phase_us: f64,
+    pub best_seq: Vec<&'static str>,
+    pub n_ok: usize,
+    pub n_crash: usize,
+    pub n_invalid: usize,
+    pub n_timeout: usize,
+    pub cache_hits: usize,
+}
+
+impl Fig2Row {
+    pub fn speedup_over_opencl(&self) -> f64 {
+        self.t_opencl_src_us / self.t_phase_us
+    }
+    pub fn speedup_over_cuda(&self) -> f64 {
+        self.t_cuda_us / self.t_phase_us
+    }
+    pub fn speedup_over_llvm(&self) -> f64 {
+        self.t_llvm_us / self.t_phase_us
+    }
+    pub fn speedup_over_llvm_ox(&self) -> f64 {
+        self.t_llvm_ox_us / self.t_phase_us
+    }
+}
+
+/// Fig. 2: phase-ordering speedups over all four baselines, plus Table 1
+/// (minimized best sequences). One DSE over the shared stream per
+/// benchmark.
+pub fn fig2_table1(ctx: &mut ExpCtx) -> Vec<Fig2Row> {
+    let mut rows = Vec::new();
+    let benches: Vec<Benchmark> = all_benchmarks();
+    for b in benches {
+        let t_cuda = model_time_us(&b.build_full(Variant::Cuda), &ctx.cfg.target);
+        // offline LLVM w/o opt == the de-facto from-source flow (§3.1:
+        // "no significant performance difference"); both are the
+        // unoptimized OpenCL build in this substrate.
+        let t_ocl = model_time_us(&b.build_full(Variant::OpenCl), &ctx.cfg.target);
+        let t_llvm = t_ocl;
+        // best standard level, validated
+        let mut t_ox = t_llvm;
+        let mut best_level = "-O0".to_string();
+        {
+            let ex = ctx.explorer(b.name);
+            for lvl in ["-O1", "-O2", "-O3", "-Os"] {
+                let seq = standard_level(lvl);
+                let ev = ex.evaluate(&seq);
+                if ev.status.is_ok() && ev.time_us < t_ox {
+                    t_ox = ev.time_us;
+                    best_level = lvl.to_string();
+                }
+            }
+        }
+        let stream = ctx.stream.clone();
+        let ex = ctx.explorer(b.name);
+        let summary = ex.explore(&stream);
+        let (best_seq, t_phase) = if summary.best_seq.is_empty() {
+            (Vec::new(), summary.baseline_time_us)
+        } else {
+            minimize_sequence(ex, &summary.best_seq)
+        };
+        rows.push(Fig2Row {
+            bench: b.name.to_string(),
+            t_opencl_src_us: t_ocl,
+            t_llvm_us: t_llvm,
+            t_llvm_ox_us: t_ox,
+            best_ox_level: best_level,
+            t_cuda_us: t_cuda,
+            t_phase_us: t_phase.min(summary.baseline_time_us),
+            best_seq,
+            n_ok: summary.n_ok,
+            n_crash: summary.n_crash,
+            n_invalid: summary.n_invalid,
+            n_timeout: summary.n_timeout,
+            cache_hits: summary.cache_hits,
+        });
+    }
+    rows
+}
+
+pub fn fig2_geomeans(rows: &[Fig2Row]) -> (f64, f64, f64, f64) {
+    (
+        geomean(&rows.iter().map(|r| r.speedup_over_cuda()).collect::<Vec<_>>()),
+        geomean(&rows.iter().map(|r| r.speedup_over_opencl()).collect::<Vec<_>>()),
+        geomean(&rows.iter().map(|r| r.speedup_over_llvm()).collect::<Vec<_>>()),
+        geomean(&rows.iter().map(|r| r.speedup_over_llvm_ox()).collect::<Vec<_>>()),
+    )
+}
+
+// ------------------------------------------------------------ Fig. 3
+
+#[derive(Debug, Clone)]
+pub struct Fig3Matrix {
+    pub benches: Vec<String>,
+    /// `ratio[seq_owner][bench]`: perf of owner's sequence on bench,
+    /// relative to bench's own best. -1 encodes validation failure.
+    pub ratio: Vec<Vec<f64>>,
+}
+
+/// Fig. 3: cross-application of each benchmark's best sequence.
+pub fn fig3_cross(ctx: &mut ExpCtx, table1: &[Fig2Row]) -> Fig3Matrix {
+    let names: Vec<String> = table1.iter().map(|r| r.bench.clone()).collect();
+    let mut ratio = vec![vec![0.0; names.len()]; names.len()];
+    for (si, owner) in table1.iter().enumerate() {
+        for (bi, bench) in table1.iter().enumerate() {
+            let ex = ctx.explorer(&bench.bench);
+            let ev = ex.evaluate(&owner.best_seq);
+            ratio[si][bi] = if ev.status.is_ok() {
+                (bench.t_phase_us / ev.time_us).min(1.0)
+            } else {
+                -1.0
+            };
+        }
+    }
+    Fig3Matrix {
+        benches: names,
+        ratio,
+    }
+}
+
+// ------------------------------------------------------------ Fig. 4
+
+#[derive(Debug, Clone)]
+pub struct Fig4Scatter {
+    /// per benchmark: (name, per-sequence speedup over LLVM-no-opt;
+    /// 0 = failed), first 100 sequences of the shared stream
+    pub series: Vec<(String, Vec<f64>)>,
+    pub best: Vec<(String, f64)>,
+}
+
+pub fn fig4_scatter(ctx: &mut ExpCtx, table1: &[Fig2Row]) -> Fig4Scatter {
+    let first100: Vec<Vec<&'static str>> = ctx.stream.iter().take(100).cloned().collect();
+    let mut series = Vec::new();
+    let mut best = Vec::new();
+    for row in table1 {
+        let ex = ctx.explorer(&row.bench);
+        let base = ex.baseline_time_us;
+        let mut ys = Vec::with_capacity(first100.len());
+        for s in &first100 {
+            let ev = ex.evaluate(s);
+            ys.push(if ev.status.is_ok() { base / ev.time_us } else { 0.0 });
+        }
+        series.push((row.bench.clone(), ys));
+        best.push((row.bench.clone(), base / row.t_phase_us));
+    }
+    Fig4Scatter { series, best }
+}
+
+// ------------------------------------------------------------ Fig. 5
+
+pub fn fig5_permutations(ctx: &mut ExpCtx, table1: &[Fig2Row]) -> Vec<PermutationStudy> {
+    let mut out = Vec::new();
+    for row in table1 {
+        if row.best_seq.is_empty() || row.speedup_over_llvm() < 1.01 {
+            // paper: 2DCONV/3DCONV/FDTD-2D excluded (no improving order)
+            continue;
+        }
+        let n = ctx.cfg.n_perms;
+        let seed = ctx.cfg.seed ^ 0x515;
+        let ex = ctx.explorer(&row.bench);
+        out.push(permutation_study(ex, &row.best_seq, n, seed));
+    }
+    out
+}
+
+// ------------------------------------------------------------ Fig. 6
+
+/// Fig. 6: the PTX load patterns — CUDA-style (strength-reduced) vs
+/// OpenCL-style (naive 5-instruction chain) for 2DCONV.
+pub fn fig6_load_patterns() -> (String, String) {
+    let b = crate::bench_suite::benchmark_by_name("2DCONV").unwrap();
+    let ocl = b.build_small(Variant::OpenCl);
+    let cuda = b.build_small(Variant::Cuda);
+    let p_ocl = crate::codegen::emit(&ocl.module.kernels[0], &ocl.module);
+    let p_cuda = crate::codegen::emit(&cuda.module.kernels[0], &cuda.module);
+    (p_cuda.text(), p_ocl.text())
+}
+
+// ------------------------------------------------------------ §3.2 problems
+
+#[derive(Debug, Clone, Default)]
+pub struct ProblemStats {
+    pub per_bench: Vec<(String, usize, usize, usize, usize)>, // ok, crash, invalid, timeout
+    pub total_evals: usize,
+    pub total_ok: usize,
+    pub total_crash: usize,
+    pub total_invalid: usize,
+    pub total_timeout: usize,
+}
+
+/// §3.2: outcome buckets over the full stream × all benchmarks. Reuses
+/// the fig2 exploration counters when available.
+pub fn problem_stats(rows: &[Fig2Row], n_seqs: usize) -> ProblemStats {
+    let mut st = ProblemStats::default();
+    for r in rows {
+        st.per_bench.push((
+            r.bench.clone(),
+            r.n_ok,
+            r.n_crash,
+            r.n_invalid,
+            r.n_timeout,
+        ));
+        st.total_ok += r.n_ok;
+        st.total_crash += r.n_crash;
+        st.total_invalid += r.n_invalid;
+        st.total_timeout += r.n_timeout;
+        st.total_evals += n_seqs;
+    }
+    st
+}
+
+// ------------------------------------------------------------ Fig. 7
+
+#[derive(Debug, Clone)]
+pub struct Fig7Result {
+    /// K → geomean speedup over the OpenCL baseline (with -O0 fallback),
+    /// for the three strategies
+    pub ks: Vec<usize>,
+    pub knn: Vec<f64>,
+    pub random: Vec<f64>,
+    pub itergraph: Vec<f64>,
+    /// reference line: geomean of each benchmark's own best (Fig. 2)
+    pub best_reference: f64,
+}
+
+/// Fig. 7: leave-one-out evaluation of cosine-kNN sequence suggestion vs
+/// random selection vs IterGraph.
+pub fn fig7_features(ctx: &mut ExpCtx, table1: &[Fig2Row]) -> Fig7Result {
+    // feature vectors of all benchmarks (unoptimized OpenCL IR)
+    let feats: Vec<(String, FeatureVector)> = ctx
+        .benchmarks
+        .iter()
+        .map(|b| {
+            let built = b.build_small(Variant::OpenCl);
+            (b.name.to_string(), extract_features(&built.module))
+        })
+        .collect();
+    let seq_of: HashMap<String, Vec<&'static str>> = table1
+        .iter()
+        .map(|r| (r.bench.clone(), r.best_seq.clone()))
+        .collect();
+
+    let ks: Vec<usize> = (1..=14).collect();
+    let mut knn_g = vec![Vec::new(); ks.len()];
+    let mut rnd_g = vec![Vec::new(); ks.len()];
+    let mut ig_g = vec![Vec::new(); ks.len()];
+
+    let bench_names: Vec<String> = feats.iter().map(|(n, _)| n.clone()).collect();
+    for (qi, qname) in bench_names.iter().enumerate() {
+        // leave-one-out reference set
+        let refs: Vec<(String, FeatureVector)> = feats
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != qi)
+            .map(|(_, x)| x.clone())
+            .collect();
+        let order = rank_by_similarity(&feats[qi].1, &refs);
+        let base = ctx.explorer(qname).baseline_time_us;
+
+        // ---- kNN: evaluate the K most-similar benchmarks' sequences,
+        // keeping the best-so-far (with -O0 as the safe fallback) ----
+        {
+            let mut cur = base;
+            let mut prefix = Vec::new();
+            for &ri in &order {
+                let seq = seq_of[&refs[ri].0].clone();
+                let ev = ctx.explorer(qname).evaluate(&seq);
+                if ev.status.is_ok() {
+                    cur = cur.min(ev.time_us);
+                }
+                prefix.push(cur);
+            }
+            for (kidx, &k) in ks.iter().enumerate() {
+                let t = prefix.get(k - 1).copied().unwrap_or(*prefix.last().unwrap());
+                knn_g[kidx].push(base / t);
+            }
+        }
+
+        // ---- random selection (n_random_draws draws, geomean) ----
+        {
+            let mut rng = Rng::new(ctx.cfg.seed ^ (qi as u64) << 8 ^ 0x7A11);
+            let mut per_k_speedups: Vec<Vec<f64>> = vec![Vec::new(); ks.len()];
+            for _ in 0..ctx.cfg.n_random_draws {
+                let mut idx: Vec<usize> = (0..refs.len()).collect();
+                rng.shuffle(&mut idx);
+                let mut cur = base;
+                let mut prefix = Vec::new();
+                for &ri in &idx {
+                    let seq = seq_of[&refs[ri].0].clone();
+                    let ev = ctx.explorer(qname).evaluate(&seq);
+                    if ev.status.is_ok() {
+                        cur = cur.min(ev.time_us);
+                    }
+                    prefix.push(cur);
+                }
+                for (kidx, &k) in ks.iter().enumerate() {
+                    let t = prefix.get(k - 1).copied().unwrap_or(*prefix.last().unwrap());
+                    per_k_speedups[kidx].push(base / t);
+                }
+            }
+            for (kidx, sp) in per_k_speedups.into_iter().enumerate() {
+                rnd_g[kidx].push(geomean(&sp));
+            }
+        }
+
+        // ---- IterGraph: build on the other 14, sample K sequences ----
+        {
+            let train: Vec<Vec<&'static str>> = refs
+                .iter()
+                .map(|(n, _)| seq_of[n].clone())
+                .collect();
+            let graph = IterGraph::build(&train);
+            let samples = graph.sample_k(*ks.last().unwrap(), ctx.cfg.seed ^ 0x16E2);
+            let mut cur = base;
+            let mut prefix = Vec::new();
+            for s in &samples {
+                let names: Vec<&'static str> = s
+                    .iter()
+                    .filter_map(|p| crate::passes::registry_names().into_iter().find(|n| n == p))
+                    .collect();
+                let ev = ctx.explorer(qname).evaluate(&names);
+                if ev.status.is_ok() {
+                    cur = cur.min(ev.time_us);
+                }
+                prefix.push(cur);
+            }
+            for (kidx, &k) in ks.iter().enumerate() {
+                let t = prefix.get(k - 1).copied().unwrap_or(*prefix.last().unwrap());
+                ig_g[kidx].push(base / t);
+            }
+        }
+    }
+
+    let best_reference = geomean(
+        &table1
+            .iter()
+            .map(|r| r.speedup_over_llvm())
+            .collect::<Vec<_>>(),
+    );
+    Fig7Result {
+        ks: ks.clone(),
+        knn: knn_g.iter().map(|v| geomean(v)).collect(),
+        random: rnd_g.iter().map(|v| geomean(v)).collect(),
+        itergraph: ig_g.iter().map(|v| geomean(v)).collect(),
+        best_reference,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_ctx() -> ExpCtx {
+        ExpCtx::new(ExpConfig {
+            n_seqs: 30,
+            seed: 7,
+            target: Target::gp104(),
+            n_perms: 10,
+            n_random_draws: 5,
+        })
+    }
+
+    #[test]
+    fn fig6_patterns_differ() {
+        let (cuda, ocl) = fig6_load_patterns();
+        // the OpenCL flavour carries the cvt/shl/add chain; CUDA doesn't
+        // have more cvt than loads
+        let count = |s: &str, pat: &str| s.matches(pat).count();
+        assert!(count(&ocl, "cvt.s64.s32") > count(&cuda, "cvt.s64.s32"));
+        assert!(ocl.contains("ld.global.f32"));
+        assert!(cuda.contains("ld.global.f32"));
+    }
+
+    #[test]
+    fn fig2_on_subset_has_expected_shape() {
+        // run the full pipeline on a tiny stream; verify invariants
+        let mut ctx = tiny_ctx();
+        let rows = fig2_table1(&mut ctx);
+        assert_eq!(rows.len(), 15);
+        for r in &rows {
+            assert!(r.t_phase_us <= r.t_llvm_us * 1.0001, "{}", r.bench);
+            assert!(r.speedup_over_opencl() >= 0.99, "{}", r.bench);
+        }
+        let conv = rows.iter().find(|r| r.bench == "2DCONV").unwrap();
+        assert!(
+            conv.speedup_over_opencl() < 1.05,
+            "2DCONV must not improve (paper Table 1 note)"
+        );
+        let (g_cuda, g_ocl, _, _) = fig2_geomeans(&rows);
+        assert!(g_ocl >= 1.0);
+        assert!(g_cuda > 0.5);
+    }
+}

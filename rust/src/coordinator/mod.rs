@@ -1,0 +1,8 @@
+//! L3 coordinator: experiment drivers that regenerate every table and
+//! figure of the paper, report writers, and the CLI.
+
+pub mod cli;
+pub mod experiments;
+pub mod report;
+
+pub use experiments::{ExpConfig, ExpCtx};

@@ -1,0 +1,301 @@
+//! Report rendering: console tables (the same rows/series the paper
+//! prints) and JSON dumps under `results/`.
+
+use std::fs;
+use std::path::Path;
+
+use super::experiments::{
+    fig2_geomeans, Fig2Row, Fig3Matrix, Fig4Scatter, Fig7Result, ProblemStats,
+};
+use crate::dse::permute::{histogram, PermutationStudy};
+use crate::util::Json;
+
+pub fn write_json(dir: &Path, name: &str, j: &Json) -> std::io::Result<()> {
+    fs::create_dir_all(dir)?;
+    fs::write(dir.join(name), j.to_string())
+}
+
+// ---------------------------------------------------------------- Fig. 2
+
+pub fn render_fig2(rows: &[Fig2Row]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:10} {:>10} {:>10} {:>10} {:>10} | {:>8} {:>8} {:>8} {:>8}  best sequence\n",
+        "bench", "OpenCL", "CUDA", "LLVM", "LLVM-OX", "vs OCL", "vs CUDA", "vs LLVM", "vs -OX"
+    ));
+    for r in rows {
+        s.push_str(&format!(
+            "{:10} {:>10.1} {:>10.1} {:>10.1} {:>10.1} | {:>8.2} {:>8.2} {:>8.2} {:>8.2}  {}\n",
+            r.bench,
+            r.t_opencl_src_us,
+            r.t_cuda_us,
+            r.t_llvm_us,
+            r.t_llvm_ox_us,
+            r.speedup_over_opencl(),
+            r.speedup_over_cuda(),
+            r.speedup_over_llvm(),
+            r.speedup_over_llvm_ox(),
+            if r.best_seq.is_empty() {
+                "(none found)".to_string()
+            } else {
+                r.best_seq.iter().map(|p| format!("-{p}")).collect::<Vec<_>>().join(" ")
+            }
+        ));
+    }
+    let (g_cuda, g_ocl, g_llvm, g_ox) = fig2_geomeans(rows);
+    s.push_str(&format!(
+        "geomean speedups: over CUDA {g_cuda:.2}x | over OpenCL {g_ocl:.2}x | over LLVM {g_llvm:.2}x | over LLVM -OX {g_ox:.2}x\n",
+    ));
+    s.push_str("paper (GTX 1070): over CUDA 1.54x (max 5.48) | over OpenCL 1.65x (max 5.70)\n");
+    s
+}
+
+pub fn fig2_json(rows: &[Fig2Row]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::Obj(vec![
+                    ("bench".into(), Json::s(&r.bench)),
+                    ("t_opencl_us".into(), Json::n(r.t_opencl_src_us)),
+                    ("t_cuda_us".into(), Json::n(r.t_cuda_us)),
+                    ("t_llvm_us".into(), Json::n(r.t_llvm_us)),
+                    ("t_llvm_ox_us".into(), Json::n(r.t_llvm_ox_us)),
+                    ("best_ox_level".into(), Json::s(&r.best_ox_level)),
+                    ("t_phase_us".into(), Json::n(r.t_phase_us)),
+                    ("speedup_over_opencl".into(), Json::n(r.speedup_over_opencl())),
+                    ("speedup_over_cuda".into(), Json::n(r.speedup_over_cuda())),
+                    (
+                        "best_seq".into(),
+                        Json::Arr(r.best_seq.iter().map(|p| Json::s(*p)).collect()),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+// ---------------------------------------------------------------- Table 1
+
+pub fn render_table1(rows: &[Fig2Row]) -> String {
+    let mut s = String::from("Table 1 — best phase orders (minimized):\n");
+    for r in rows {
+        if r.best_seq.is_empty() {
+            s.push_str(&format!("{:10} (no improving phase order found)\n", r.bench));
+        } else {
+            s.push_str(&format!(
+                "{:10} {}\n",
+                r.bench,
+                r.best_seq.iter().map(|p| format!("-{p}")).collect::<Vec<_>>().join(" ")
+            ));
+        }
+    }
+    s
+}
+
+// ---------------------------------------------------------------- Fig. 3
+
+pub fn render_fig3(m: &Fig3Matrix) -> String {
+    let mut s = String::from("Fig. 3 — cross-application matrix (rows: sequence owner; cols: benchmark)\n");
+    s.push_str(&format!("{:10}", ""));
+    for b in &m.benches {
+        s.push_str(&format!(" {:>7}", &b[..b.len().min(7)]));
+    }
+    s.push('\n');
+    for (si, owner) in m.benches.iter().enumerate() {
+        s.push_str(&format!("{:10}", owner));
+        for bi in 0..m.benches.len() {
+            let v = m.ratio[si][bi];
+            if v < 0.0 {
+                s.push_str(&format!(" {:>7}", "FAIL"));
+            } else {
+                s.push_str(&format!(" {:>7.2}", v));
+            }
+        }
+        s.push('\n');
+    }
+    s
+}
+
+pub fn fig3_json(m: &Fig3Matrix) -> Json {
+    Json::Obj(vec![
+        (
+            "benches".into(),
+            Json::Arr(m.benches.iter().map(Json::s).collect()),
+        ),
+        (
+            "ratio".into(),
+            Json::Arr(
+                m.ratio
+                    .iter()
+                    .map(|row| Json::Arr(row.iter().map(|&v| Json::n(v)).collect()))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+// ---------------------------------------------------------------- Fig. 4
+
+pub fn render_fig4(f: &Fig4Scatter) -> String {
+    let mut s = String::from(
+        "Fig. 4 — first-100-sequence speedups per benchmark (vs LLVM w/o opt)\n",
+    );
+    for (name, ys) in &f.series {
+        let fails = ys.iter().filter(|&&y| y == 0.0).count();
+        let near_base = ys.iter().filter(|&&y| (0.95..=1.05).contains(&y)).count();
+        let max = ys.iter().cloned().fold(0.0, f64::max);
+        let best = f
+            .best
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, b)| *b)
+            .unwrap_or(1.0);
+        s.push_str(&format!(
+            "{:10} fails={:3} near-baseline={:3} max-of-100={:5.2} best-line={:5.2}\n",
+            name, fails, near_base, max, best
+        ));
+    }
+    s
+}
+
+pub fn fig4_json(f: &Fig4Scatter) -> Json {
+    Json::Obj(vec![
+        (
+            "series".into(),
+            Json::Obj(
+                f.series
+                    .iter()
+                    .map(|(n, ys)| {
+                        (n.clone(), Json::Arr(ys.iter().map(|&y| Json::n(y)).collect()))
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "best".into(),
+            Json::Obj(f.best.iter().map(|(n, b)| (n.clone(), Json::n(*b))).collect()),
+        ),
+    ])
+}
+
+// ---------------------------------------------------------------- Fig. 5
+
+pub fn render_fig5(studies: &[PermutationStudy]) -> String {
+    let mut s = String::from("Fig. 5 — permutation speedup-over-best distribution\n");
+    for st in studies {
+        let h = histogram(&st.rel_perf, 10);
+        s.push_str(&format!("{:10}", st.bench));
+        for (label, count) in &h {
+            if *count > 0 {
+                s.push_str(&format!(" {label}:{count}"));
+            }
+        }
+        s.push('\n');
+    }
+    s
+}
+
+pub fn fig5_json(studies: &[PermutationStudy]) -> Json {
+    Json::Obj(
+        studies
+            .iter()
+            .map(|st| {
+                (
+                    st.bench.clone(),
+                    Json::Arr(st.rel_perf.iter().map(|&v| Json::n(v)).collect()),
+                )
+            })
+            .collect(),
+    )
+}
+
+// ---------------------------------------------------------------- §3.2
+
+pub fn render_problems(p: &ProblemStats) -> String {
+    let mut s = String::from("§3.2 — problematic phase orders (per benchmark)\n");
+    s.push_str(&format!(
+        "{:10} {:>7} {:>7} {:>9} {:>9}\n",
+        "bench", "ok", "crash", "invalid", "timeout"
+    ));
+    for (b, ok, crash, invalid, timeout) in &p.per_bench {
+        s.push_str(&format!(
+            "{:10} {:>7} {:>7} {:>9} {:>9}\n",
+            b, ok, crash, invalid, timeout
+        ));
+    }
+    let t = p.total_evals.max(1) as f64;
+    s.push_str(&format!(
+        "TOTAL: ok {:.1}% | crash/no-IR {:.1}% | invalid output {:.1}% | timeout {:.1}%\n",
+        100.0 * p.total_ok as f64 / t,
+        100.0 * p.total_crash as f64 / t,
+        100.0 * p.total_invalid as f64 / t,
+        100.0 * p.total_timeout as f64 / t,
+    ));
+    s.push_str("paper: broken/no report 17% | incorrect output 13% | no optimized IR 3%\n");
+    s
+}
+
+// ---------------------------------------------------------------- Fig. 7
+
+pub fn render_fig7(f: &Fig7Result) -> String {
+    let mut s = String::from("Fig. 7 — geomean speedup vs #sequence evaluations (leave-one-out)\n");
+    s.push_str(&format!(
+        "{:>4} {:>10} {:>10} {:>10}\n",
+        "K", "cosine-kNN", "random", "IterGraph"
+    ));
+    for (i, k) in f.ks.iter().enumerate() {
+        s.push_str(&format!(
+            "{:>4} {:>10.3} {:>10.3} {:>10.3}\n",
+            k, f.knn[i], f.random[i], f.itergraph[i]
+        ));
+    }
+    s.push_str(&format!(
+        "reference (each benchmark's own best order): {:.3}\n",
+        f.best_reference
+    ));
+    s.push_str("paper: kNN K=1 1.49x, K=3 1.56x, K=5 1.59x; all-14 1.60x; best 1.65x\n");
+    s
+}
+
+pub fn fig7_json(f: &Fig7Result) -> Json {
+    Json::Obj(vec![
+        ("ks".into(), Json::Arr(f.ks.iter().map(|&k| Json::n(k as f64)).collect())),
+        ("knn".into(), Json::Arr(f.knn.iter().map(|&v| Json::n(v)).collect())),
+        ("random".into(), Json::Arr(f.random.iter().map(|&v| Json::n(v)).collect())),
+        (
+            "itergraph".into(),
+            Json::Arr(f.itergraph.iter().map(|&v| Json::n(v)).collect()),
+        ),
+        ("best_reference".into(), Json::n(f.best_reference)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_render_contains_geomeans() {
+        let rows = vec![Fig2Row {
+            bench: "GEMM".into(),
+            t_opencl_src_us: 100.0,
+            t_llvm_us: 100.0,
+            t_llvm_ox_us: 95.0,
+            best_ox_level: "-O3".into(),
+            t_cuda_us: 90.0,
+            t_phase_us: 50.0,
+            best_seq: vec!["cfl-anders-aa", "licm"],
+            n_ok: 1,
+            n_crash: 0,
+            n_invalid: 0,
+            n_timeout: 0,
+            cache_hits: 0,
+        }];
+        let s = render_fig2(&rows);
+        assert!(s.contains("GEMM"));
+        assert!(s.contains("geomean"));
+        assert!(s.contains("-cfl-anders-aa -licm"));
+        let j = fig2_json(&rows).to_string();
+        assert!(j.contains("\"speedup_over_opencl\":2"));
+    }
+}

@@ -1,0 +1,340 @@
+//! The DSE evaluation loop.
+
+use std::collections::HashMap;
+
+use crate::bench_suite::{
+    execute, init_buffers, model_time_us, outputs_match, Benchmark, BuiltBench, Variant,
+};
+use crate::passes::{run_sequence, PassOutcome};
+use crate::sim::exec::{Buffers, ExecError};
+use crate::sim::target::Target;
+use crate::util::fnv1a;
+
+/// §3.2 outcome buckets.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EvalStatus {
+    Ok,
+    /// pass crashed / verifier rejected — "optimized IR not generated"
+    Crash(String),
+    /// compiled code produced wrong output (caught by validation)
+    InvalidOutput,
+    /// compiled code failed to execute (OOB, div-by-zero, …) — also the
+    /// invalid bucket in the paper's accounting
+    ExecFailure(String),
+    /// execution exceeded the DSE timeout
+    Timeout,
+}
+
+impl EvalStatus {
+    pub fn is_ok(&self) -> bool {
+        matches!(self, EvalStatus::Ok)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Evaluation {
+    pub status: EvalStatus,
+    /// modelled time (µs) at full size; f64::INFINITY when not OK
+    pub time_us: f64,
+    /// content hash of the generated vPTX (cache key)
+    pub ptx_hash: u64,
+    /// verdict came from the generated-code cache
+    pub cached: bool,
+}
+
+/// Aggregate exploration outcome.
+#[derive(Debug, Clone)]
+pub struct ExplorationSummary {
+    pub bench: String,
+    pub baseline_time_us: f64,
+    pub best_seq: Vec<&'static str>,
+    pub best_time_us: f64,
+    pub evaluations: Vec<Evaluation>,
+    pub n_ok: usize,
+    pub n_crash: usize,
+    pub n_invalid: usize,
+    pub n_timeout: usize,
+    pub cache_hits: usize,
+}
+
+impl ExplorationSummary {
+    pub fn best_speedup(&self) -> f64 {
+        self.baseline_time_us / self.best_time_us
+    }
+}
+
+/// Per-benchmark DSE driver.
+pub struct Explorer {
+    pub name: String,
+    small: BuiltBench,
+    full: BuiltBench,
+    golden: Buffers,
+    target: Target,
+    pub baseline_time_us: f64,
+    /// the paper's timeout: candidates slower than 20× baseline
+    timeout_factor: f64,
+    /// generated-code cache: vPTX hash → (status, time)
+    ptx_cache: HashMap<u64, (EvalStatus, f64)>,
+    /// per-sequence fitness memo (identical sequence re-queried)
+    seq_cache: HashMap<u64, Evaluation>,
+    step_limit: u64,
+    /// per-kernel baseline max trip counts — pessimistic fallback when a
+    /// candidate's loop bounds become unanalyzable
+    baseline_trips: Vec<f64>,
+}
+
+impl Explorer {
+    /// `golden`: reference outputs for the small build (from the PJRT
+    /// artifacts via `runtime::golden`, or `golden_from_interpreter`).
+    pub fn new(bench: &Benchmark, target: Target, golden: Buffers) -> Explorer {
+        let small = bench.build_small(Variant::OpenCl);
+        let full = bench.build_full(Variant::OpenCl);
+        let baseline_time_us = model_time_us(&full, &target);
+        let baseline_trips = crate::bench_suite::baseline_max_trips(&full, &target);
+        // the paper's execution timeout, in interpreter steps: a sequence
+        // whose validation run needs ≫ the baseline's steps cannot be a
+        // performance winner anyway (§3.2)
+        let baseline_steps = {
+            let mut bufs = init_buffers(&small);
+            execute(&small, &mut bufs, u64::MAX).map(|s| s.max(10_000)).unwrap_or(10_000_000)
+        };
+        Explorer {
+            name: bench.name.to_string(),
+            small,
+            full,
+            golden,
+            target,
+            baseline_time_us,
+            timeout_factor: 20.0,
+            ptx_cache: HashMap::new(),
+            seq_cache: HashMap::new(),
+            step_limit: baseline_steps.saturating_mul(64),
+            baseline_trips,
+        }
+    }
+
+    /// Golden outputs by executing the *unoptimized* small build in the
+    /// interpreter (stand-in when PJRT artifacts are not on disk).
+    pub fn golden_from_interpreter(bench: &Benchmark) -> Buffers {
+        let small = bench.build_small(Variant::OpenCl);
+        let mut bufs = init_buffers(&small);
+        execute(&small, &mut bufs, 400_000_000).expect("baseline executes");
+        bufs
+    }
+
+    pub fn small_build(&self) -> &BuiltBench {
+        &self.small
+    }
+    pub fn golden(&self) -> &Buffers {
+        &self.golden
+    }
+
+    fn seq_key(seq: &[&str]) -> u64 {
+        fnv1a(seq.join(",").as_bytes())
+    }
+
+    /// Evaluate one phase order end to end.
+    pub fn evaluate(&mut self, seq: &[&'static str]) -> Evaluation {
+        let key = Self::seq_key(seq);
+        if let Some(hit) = self.seq_cache.get(&key) {
+            let mut e = hit.clone();
+            e.cached = true;
+            return e;
+        }
+        let eval = self.evaluate_uncached(seq);
+        self.seq_cache.insert(key, eval.clone());
+        eval
+    }
+
+    fn evaluate_uncached(&mut self, seq: &[&'static str]) -> Evaluation {
+        // ---- 1. opt on the full-size module ----
+        let mut full = self.full.clone();
+        let out = run_sequence(&mut full.module, seq, false);
+        match out {
+            PassOutcome::Ok => {}
+            other => {
+                return Evaluation {
+                    status: EvalStatus::Crash(format!("{other:?}")),
+                    time_us: f64::INFINITY,
+                    ptx_hash: 0,
+                    cached: false,
+                }
+            }
+        }
+        // ---- 2. codegen + generated-code cache ----
+        let progs = crate::codegen::emit_module(&full.module);
+        let mut h: u64 = 0xcbf29ce484222325;
+        for p in &progs {
+            h ^= p.content_hash();
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        if let Some((status, t)) = self.ptx_cache.get(&h) {
+            return Evaluation {
+                status: status.clone(),
+                time_us: *t,
+                ptx_hash: h,
+                cached: true,
+            };
+        }
+        // ---- 3. validation on small inputs ----
+        let mut small = self.small.clone();
+        let sout = run_sequence(&mut small.module, seq, false);
+        let status = match sout {
+            PassOutcome::Ok => {
+                let mut bufs = init_buffers(&small);
+                match execute(&small, &mut bufs, self.step_limit) {
+                    Ok(_) => {
+                        if outputs_match(&small, &bufs, &self.golden, 0.01) {
+                            EvalStatus::Ok
+                        } else {
+                            EvalStatus::InvalidOutput
+                        }
+                    }
+                    Err(ExecError::StepLimit) => EvalStatus::Timeout,
+                    Err(e) => EvalStatus::ExecFailure(e.to_string()),
+                }
+            }
+            other => EvalStatus::Crash(format!("{other:?}")),
+        };
+        // ---- 4. measurement ----
+        let time_us = if status.is_ok() {
+            let t = crate::bench_suite::model_time_us_ref(
+                &full,
+                &self.target,
+                Some(&self.baseline_trips),
+            );
+            if t > self.baseline_time_us * self.timeout_factor {
+                self.ptx_cache.insert(h, (EvalStatus::Timeout, f64::INFINITY));
+                return Evaluation {
+                    status: EvalStatus::Timeout,
+                    time_us: f64::INFINITY,
+                    ptx_hash: h,
+                    cached: false,
+                };
+            }
+            t
+        } else {
+            f64::INFINITY
+        };
+        self.ptx_cache.insert(h, (status.clone(), time_us));
+        Evaluation {
+            status,
+            time_us,
+            ptx_hash: h,
+            cached: false,
+        }
+    }
+
+    /// Run the full exploration over a sequence stream.
+    pub fn explore(&mut self, seqs: &[Vec<&'static str>]) -> ExplorationSummary {
+        let mut best_seq: Vec<&'static str> = Vec::new();
+        let mut best_time = self.baseline_time_us;
+        let mut evals = Vec::with_capacity(seqs.len());
+        let (mut n_ok, mut n_crash, mut n_invalid, mut n_timeout, mut hits) = (0, 0, 0, 0, 0);
+        for seq in seqs {
+            let e = self.evaluate(seq);
+            if e.cached {
+                hits += 1;
+            }
+            match &e.status {
+                EvalStatus::Ok => {
+                    n_ok += 1;
+                    if e.time_us < best_time {
+                        best_time = e.time_us;
+                        best_seq = seq.clone();
+                    }
+                }
+                EvalStatus::Crash(_) => n_crash += 1,
+                EvalStatus::InvalidOutput | EvalStatus::ExecFailure(_) => n_invalid += 1,
+                EvalStatus::Timeout => n_timeout += 1,
+            }
+            evals.push(e);
+        }
+        ExplorationSummary {
+            bench: self.name.clone(),
+            baseline_time_us: self.baseline_time_us,
+            best_seq,
+            best_time_us: best_time,
+            evaluations: evals,
+            n_ok,
+            n_crash,
+            n_invalid,
+            n_timeout,
+            cache_hits: hits,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite::benchmark_by_name;
+    use crate::dse::seqgen::SeqGen;
+
+    fn explorer_for(name: &str) -> Explorer {
+        let b = benchmark_by_name(name).unwrap();
+        let golden = Explorer::golden_from_interpreter(&b);
+        Explorer::new(&b, Target::gp104(), golden)
+    }
+
+    #[test]
+    fn empty_sequence_is_baselineish() {
+        let mut e = explorer_for("GEMM");
+        let ev = e.evaluate(&[]);
+        assert!(ev.status.is_ok());
+        assert!((ev.time_us - e.baseline_time_us).abs() / e.baseline_time_us < 1e-9);
+    }
+
+    #[test]
+    fn winning_sequence_beats_baseline_and_validates() {
+        let mut e = explorer_for("GEMM");
+        let ev = e.evaluate(&["cfl-anders-aa", "loop-reduce", "cfl-anders-aa", "licm"]);
+        assert!(ev.status.is_ok(), "{:?}", ev.status);
+        assert!(e.baseline_time_us / ev.time_us > 1.5);
+    }
+
+    #[test]
+    fn sequence_cache_hits() {
+        let mut e = explorer_for("ATAX");
+        let seq = vec!["instcombine", "gvn"];
+        let a = e.evaluate(&seq);
+        let b = e.evaluate(&seq);
+        assert!(!a.cached && b.cached);
+        assert_eq!(a.time_us, b.time_us);
+    }
+
+    #[test]
+    fn ptx_cache_hits_across_equivalent_sequences() {
+        let mut e = explorer_for("ATAX");
+        // analysis-only passes don't change code: same vPTX as empty
+        let a = e.evaluate(&[]);
+        let b = e.evaluate(&["print-memdeps", "aa-eval", "domtree"]);
+        assert_eq!(a.ptx_hash, b.ptx_hash);
+        assert!(b.cached, "identical generated code must hit the cache");
+    }
+
+    #[test]
+    fn miscompiling_sequence_flagged_invalid_on_covar() {
+        // dse bug model #1: COVAR's diagonal makes the syntactic screen
+        // unsound. The validator must catch it.
+        let mut e = explorer_for("COVAR");
+        let ev = e.evaluate(&["cfl-anders-aa", "gvn", "dse"]);
+        // Either the unsound deletion manifested (InvalidOutput) or the
+        // particular shape dodged it (Ok); it must never crash.
+        assert!(
+            matches!(ev.status, EvalStatus::InvalidOutput | EvalStatus::Ok),
+            "{:?}",
+            ev.status
+        );
+    }
+
+    #[test]
+    fn short_exploration_finds_speedup_on_gemm() {
+        let mut e = explorer_for("GEMM");
+        let seqs = SeqGen::stream(0xF00D, 60);
+        let s = e.explore(&seqs);
+        assert_eq!(s.evaluations.len(), 60);
+        assert!(s.n_ok > 0);
+        assert!(s.n_ok + s.n_crash + s.n_invalid + s.n_timeout == 60);
+    }
+}

@@ -1,0 +1,68 @@
+//! Sequence minimization: "compiler passes that resulted in no
+//! performance improvement were eliminated from the compiler phase
+//! orders" (Table 1 caption). Greedy single-pass dropping: remove a pass
+//! if the sequence still validates and is not measurably slower.
+
+use super::explorer::Explorer;
+
+pub fn minimize_sequence(
+    e: &mut Explorer,
+    seq: &[&'static str],
+) -> (Vec<&'static str>, f64) {
+    let mut cur: Vec<&'static str> = seq.to_vec();
+    let base = e.evaluate(&cur);
+    let mut cur_time = base.time_us;
+    loop {
+        let mut dropped = false;
+        let mut k = 0;
+        while k < cur.len() {
+            let mut cand = cur.clone();
+            cand.remove(k);
+            let ev = e.evaluate(&cand);
+            if ev.status.is_ok() && ev.time_us <= cur_time * 1.001 {
+                cur = cand;
+                cur_time = ev.time_us.min(cur_time);
+                dropped = true;
+            } else {
+                k += 1;
+            }
+        }
+        if !dropped {
+            break;
+        }
+    }
+    (cur, cur_time)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite::benchmark_by_name;
+    use crate::sim::target::Target;
+
+    #[test]
+    fn drops_noop_passes() {
+        let b = benchmark_by_name("GEMM").unwrap();
+        let golden = Explorer::golden_from_interpreter(&b);
+        let mut e = Explorer::new(&b, Target::gp104(), golden);
+        let seq = vec![
+            "print-memdeps",
+            "cfl-anders-aa",
+            "aa-eval",
+            "loop-reduce",
+            "cfl-anders-aa",
+            "licm",
+            "domtree",
+        ];
+        let before = e.evaluate(&seq);
+        let (min_seq, t) = minimize_sequence(&mut e, &seq);
+        assert!(t <= before.time_us * 1.001);
+        assert!(min_seq.len() < seq.len());
+        assert!(!min_seq.contains(&"print-memdeps"));
+        assert!(!min_seq.contains(&"aa-eval"));
+        assert!(!min_seq.contains(&"domtree"));
+        // the essential pair must survive
+        assert!(min_seq.contains(&"licm"));
+        assert!(min_seq.contains(&"cfl-anders-aa"));
+    }
+}

@@ -1,0 +1,24 @@
+//! The paper's system contribution: compiler phase-ordering design-space
+//! exploration (§2).
+//!
+//! Pipeline per candidate sequence (mirroring §2.3–2.4):
+//!   1. run the pass sequence on the benchmark module ("opt");
+//!   2. lower to vPTX; if an *identical* program was already evaluated,
+//!      reuse its verdict and measurement (the paper's generated-code
+//!      cache);
+//!   3. validate by executing the optimized kernels on small inputs and
+//!      comparing against the golden reference within 1% (the golden
+//!      buffers come from the JAX/Pallas artifacts via PJRT when
+//!      available, or from the unoptimized interpreter otherwise);
+//!   4. measure with the GPU cost model at the paper-default dataset
+//!      shape, with a timeout at 20× the baseline.
+
+pub mod explorer;
+pub mod minimize;
+pub mod permute;
+pub mod seqgen;
+
+pub use explorer::{EvalStatus, Evaluation, Explorer, ExplorationSummary};
+pub use minimize::minimize_sequence;
+pub use permute::permutation_study;
+pub use seqgen::SeqGen;

@@ -1,0 +1,95 @@
+//! Fig. 5: the impact of pass *order* — evaluate up to `n` random
+//! permutations of a benchmark's best sequence and report the speedup
+//! (over the best order) distribution.
+
+use super::explorer::Explorer;
+use super::seqgen::SeqGen;
+
+#[derive(Debug, Clone)]
+pub struct PermutationStudy {
+    pub bench: String,
+    pub best_time_us: f64,
+    /// per-permutation relative performance: best_time / perm_time
+    /// (≤ 1; 0 encodes crash/invalid/timeout, plotted at y=0 like Fig. 4)
+    pub rel_perf: Vec<f64>,
+}
+
+pub fn permutation_study(
+    e: &mut Explorer,
+    best_seq: &[&'static str],
+    n_perms: usize,
+    seed: u64,
+) -> PermutationStudy {
+    let best = e.evaluate(best_seq);
+    let best_time = best.time_us;
+    let mut g = SeqGen::new(seed);
+    let mut rel = Vec::with_capacity(n_perms);
+    for _ in 0..n_perms {
+        let p = g.permute(best_seq);
+        let ev = e.evaluate(&p);
+        if ev.status.is_ok() {
+            rel.push((best_time / ev.time_us).min(1.0));
+        } else {
+            rel.push(0.0);
+        }
+    }
+    PermutationStudy {
+        bench: e.name.clone(),
+        best_time_us: best_time,
+        rel_perf: rel,
+    }
+}
+
+/// Histogram helper for the Fig. 5 rendering: bucket relative
+/// performance into `nbuckets` bins over (0, 1] plus a failure bin.
+pub fn histogram(rel_perf: &[f64], nbuckets: usize) -> Vec<(String, usize)> {
+    let mut out = vec![0usize; nbuckets + 1];
+    for &r in rel_perf {
+        if r <= 0.0 {
+            out[0] += 1;
+        } else {
+            let b = ((r * nbuckets as f64).ceil() as usize).clamp(1, nbuckets);
+            out[b] += 1;
+        }
+    }
+    let mut labelled = vec![("fail".to_string(), out[0])];
+    for b in 1..=nbuckets {
+        let lo = (b - 1) as f64 / nbuckets as f64;
+        let hi = b as f64 / nbuckets as f64;
+        labelled.push((format!("{:.0}-{:.0}%", lo * 100.0, hi * 100.0), out[b]));
+    }
+    labelled
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite::benchmark_by_name;
+    use crate::sim::target::Target;
+
+    #[test]
+    fn permutations_degrade_or_match() {
+        let b = benchmark_by_name("GEMM").unwrap();
+        let golden = Explorer::golden_from_interpreter(&b);
+        let mut e = Explorer::new(&b, Target::gp104(), golden);
+        let best = vec!["cfl-anders-aa", "loop-reduce", "cfl-anders-aa", "licm"];
+        let study = permutation_study(&mut e, &best, 24, 99);
+        assert_eq!(study.rel_perf.len(), 24);
+        assert!(study.rel_perf.iter().all(|&r| (0.0..=1.0).contains(&r)));
+        // order matters: at least one permutation must be strictly worse
+        assert!(
+            study.rel_perf.iter().any(|&r| r < 0.999),
+            "some permutation should lose the promotion: {:?}",
+            study.rel_perf
+        );
+    }
+
+    #[test]
+    fn histogram_buckets_sum() {
+        let rel = vec![0.0, 0.1, 0.5, 0.95, 1.0, 1.0];
+        let h = histogram(&rel, 10);
+        let total: usize = h.iter().map(|(_, c)| c).sum();
+        assert_eq!(total, rel.len());
+        assert_eq!(h[0].1, 1); // one failure
+    }
+}

@@ -1,0 +1,78 @@
+//! Random phase-order generation (§3): sequences of up to 256 pass
+//! instances sampled uniformly from the registry, repeats allowed —
+//! "the same set of phase orders was used with all OpenCL codes", so the
+//! generator is seeded once and the stream is shared across benchmarks.
+
+use crate::passes::registry_names;
+use crate::util::Rng;
+
+pub const MAX_SEQ_LEN: usize = 256;
+
+pub struct SeqGen {
+    rng: Rng,
+    names: Vec<&'static str>,
+}
+
+impl SeqGen {
+    pub fn new(seed: u64) -> SeqGen {
+        SeqGen {
+            rng: Rng::new(seed),
+            names: registry_names(),
+        }
+    }
+
+    /// One random sequence: length uniform in [1, 256], passes uniform
+    /// with repetition.
+    pub fn next_seq(&mut self) -> Vec<&'static str> {
+        let len = 1 + self.rng.below(MAX_SEQ_LEN);
+        (0..len).map(|_| self.names[self.rng.below(self.names.len())]).collect()
+    }
+
+    /// The shared stream: the first `n` sequences for a given seed.
+    pub fn stream(seed: u64, n: usize) -> Vec<Vec<&'static str>> {
+        let mut g = SeqGen::new(seed);
+        (0..n).map(|_| g.next_seq()).collect()
+    }
+
+    /// Random permutation of an existing sequence (Fig. 5 study).
+    pub fn permute(&mut self, seq: &[&'static str]) -> Vec<&'static str> {
+        let mut out = seq.to_vec();
+        self.rng.shuffle(&mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_stream() {
+        let a = SeqGen::stream(42, 10);
+        let b = SeqGen::stream(42, 10);
+        assert_eq!(a, b);
+        let c = SeqGen::stream(43, 10);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn lengths_in_range() {
+        let mut g = SeqGen::new(7);
+        for _ in 0..200 {
+            let s = g.next_seq();
+            assert!(!s.is_empty() && s.len() <= MAX_SEQ_LEN);
+        }
+    }
+
+    #[test]
+    fn permutation_preserves_multiset() {
+        let mut g = SeqGen::new(9);
+        let seq = vec!["licm", "dse", "licm", "gvn"];
+        let p = g.permute(&seq);
+        let mut a = seq.clone();
+        let mut b = p.clone();
+        a.sort();
+        b.sort();
+        assert_eq!(a, b);
+    }
+}

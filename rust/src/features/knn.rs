@@ -1,0 +1,96 @@
+//! Cosine-similarity k-NN over feature vectors (§4.2: "we use the cosine
+//! distance between feature vectors ... as metric of similarity").
+
+use super::milepost::FeatureVector;
+
+pub fn cosine_similarity(a: &FeatureVector, b: &FeatureVector) -> f64 {
+    let mut dot = 0.0;
+    let mut na = 0.0;
+    let mut nb = 0.0;
+    for i in 0..a.len() {
+        dot += a[i] * b[i];
+        na += a[i] * a[i];
+        nb += b[i] * b[i];
+    }
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    dot / (na.sqrt() * nb.sqrt())
+}
+
+/// Rank reference entries by descending similarity to the query.
+/// Returns indices into `refs`.
+pub fn rank_by_similarity(query: &FeatureVector, refs: &[(String, FeatureVector)]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..refs.len()).collect();
+    let mut sims: Vec<f64> = refs
+        .iter()
+        .map(|(_, v)| cosine_similarity(query, v))
+        .collect();
+    // stable order on ties for reproducibility
+    idx.sort_by(|&a, &b| {
+        sims[b]
+            .partial_cmp(&sims[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let _ = &mut sims;
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::milepost::NUM_FEATURES;
+
+    fn v(f: impl Fn(usize) -> f64) -> FeatureVector {
+        let mut out = [0.0; NUM_FEATURES];
+        for (i, slot) in out.iter_mut().enumerate() {
+            *slot = f(i);
+        }
+        out
+    }
+
+    #[test]
+    fn identical_vectors_sim_one() {
+        let a = v(|i| (i + 1) as f64);
+        assert!((cosine_similarity(&a, &a) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn orthogonal_vectors_sim_zero() {
+        let a = v(|i| if i == 0 { 1.0 } else { 0.0 });
+        let b = v(|i| if i == 1 { 1.0 } else { 0.0 });
+        assert_eq!(cosine_similarity(&a, &b), 0.0);
+    }
+
+    #[test]
+    fn ranking_prefers_similar() {
+        let q = v(|i| (i % 5) as f64);
+        let close = v(|i| (i % 5) as f64 + 0.01);
+        let far = v(|i| ((i * 13) % 7) as f64);
+        let refs = vec![("far".to_string(), far), ("close".to_string(), close)];
+        let order = rank_by_similarity(&q, &refs);
+        assert_eq!(order[0], 1);
+    }
+
+    #[test]
+    fn real_benchmarks_cluster_by_family() {
+        use crate::bench_suite::{benchmark_by_name, Variant};
+        use crate::features::milepost::extract_features;
+        let f = |n: &str| {
+            extract_features(
+                &benchmark_by_name(n).unwrap().build_small(Variant::OpenCl).module,
+            )
+        };
+        let gemm = f("GEMM");
+        let syrk = f("SYRK");
+        let conv = f("2DCONV");
+        // GEMM should be closer to SYRK (same shape) than to 2DCONV
+        assert!(
+            cosine_similarity(&gemm, &syrk) > cosine_similarity(&gemm, &conv),
+            "gemm~syrk {} vs gemm~conv {}",
+            cosine_similarity(&gemm, &syrk),
+            cosine_similarity(&gemm, &conv)
+        );
+    }
+}

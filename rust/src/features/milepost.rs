@@ -1,0 +1,349 @@
+//! MILEPOST-style static feature extraction (55 features, §4.1).
+//!
+//! The paper feeds the OpenCL C through MILEPOST GCC's ICI extractor;
+//! our equivalent reads the same class of properties — basic-block shape
+//! counts, instruction mix, phi statistics, loop structure, memory
+//! access shape — off the unoptimized kernel IR. Feature indices are
+//! stable and documented here; no feature selection is applied (§4.1:
+//! "all 55 code features ... are represented").
+
+use crate::analysis::AffineCtx;
+use crate::ir::dom::DomTree;
+use crate::ir::loops::LoopForest;
+use crate::ir::{Function, Module, Op, Value};
+
+pub const NUM_FEATURES: usize = 55;
+
+pub type FeatureVector = [f64; NUM_FEATURES];
+
+/// Human-readable names, index-aligned with the vector.
+pub const FEATURE_NAMES: [&str; NUM_FEATURES] = [
+    "ft01_num_blocks",
+    "ft02_blocks_single_succ",
+    "ft03_blocks_two_succ",
+    "ft04_blocks_no_succ",
+    "ft05_blocks_single_pred",
+    "ft06_blocks_two_pred",
+    "ft07_blocks_multi_pred",
+    "ft08_blocks_1pred_1succ",
+    "ft09_blocks_1pred_2succ",
+    "ft10_blocks_2pred_1succ",
+    "ft11_cfg_edges",
+    "ft12_critical_edges",
+    "ft13_num_insts",
+    "ft14_avg_insts_per_block",
+    "ft15_num_loads",
+    "ft16_num_stores",
+    "ft17_load_store_ratio",
+    "ft18_int_arith",
+    "ft19_fp_arith",
+    "ft20_fp_mul",
+    "ft21_fp_div",
+    "ft22_fp_special",
+    "ft23_int_mul",
+    "ft24_shifts",
+    "ft25_logic_ops",
+    "ft26_casts",
+    "ft27_ptr_arith",
+    "ft28_icmp",
+    "ft29_fcmp",
+    "ft30_select",
+    "ft31_phi_nodes",
+    "ft32_avg_phi_args",
+    "ft33_blocks_with_phi",
+    "ft34_max_phi_in_block",
+    "ft35_cond_branches",
+    "ft36_uncond_branches",
+    "ft37_num_loops",
+    "ft38_max_loop_depth",
+    "ft39_avg_loop_depth",
+    "ft40_loops_with_const_bounds",
+    "ft41_innermost_loops",
+    "ft42_stores_in_loops",
+    "ft43_loads_in_loops",
+    "ft44_accum_stores", // store to loop-invariant address in a loop
+    "ft45_coalesced_accesses",
+    "ft46_strided_accesses",
+    "ft47_broadcast_accesses",
+    "ft48_num_kernels",
+    "ft49_num_params",
+    "ft50_num_buffers",
+    "ft51_gid_dims_used",
+    "ft52_guard_depth",
+    "ft53_fp_consts",
+    "ft54_int_consts",
+    "ft55_symmetric_index_pairs", // A[i*M+j] with matching A[j*M+i]
+];
+
+/// Extract the 55-feature vector from a module (summed over kernels).
+pub fn extract_features(m: &Module) -> FeatureVector {
+    let mut ft = [0.0f64; NUM_FEATURES];
+    for f in &m.kernels {
+        extract_function(m, f, &mut ft);
+    }
+    ft[47] = m.kernels.len() as f64;
+    // derived averages
+    if ft[0] > 0.0 {
+        ft[13] = ft[12] / ft[0]; // insts per block
+    }
+    if ft[15] > 0.0 {
+        ft[16] = ft[14] / ft[15]; // load/store ratio
+    }
+    if ft[30] > 0.0 {
+        ft[31] /= ft[30]; // avg phi args
+    }
+    if ft[36] > 0.0 {
+        ft[38] /= ft[36]; // avg loop depth
+    }
+    ft
+}
+
+fn extract_function(m: &Module, f: &Function, ft: &mut FeatureVector) {
+    let dt = DomTree::compute(f);
+    let lf = LoopForest::compute(f, &dt);
+    let mut live_blocks = 0.0;
+    for bb in f.block_ids() {
+        let blk = f.block(bb);
+        if blk.insts.is_empty() {
+            continue;
+        }
+        live_blocks += 1.0;
+        let (np, ns) = (blk.preds.len(), blk.succs.len());
+        ft[0] += 1.0;
+        match ns {
+            1 => ft[1] += 1.0,
+            2 => ft[2] += 1.0,
+            0 => ft[3] += 1.0,
+            _ => {}
+        }
+        match np {
+            1 => ft[4] += 1.0,
+            2 => ft[5] += 1.0,
+            n if n > 2 => ft[6] += 1.0,
+            _ => {}
+        }
+        if np == 1 && ns == 1 {
+            ft[7] += 1.0;
+        }
+        if np == 1 && ns == 2 {
+            ft[8] += 1.0;
+        }
+        if np == 2 && ns == 1 {
+            ft[9] += 1.0;
+        }
+        ft[10] += ns as f64;
+        // critical edge: multi-succ source to multi-pred target
+        for &s in &blk.succs {
+            if ns > 1 && f.block(s).preds.len() > 1 {
+                ft[11] += 1.0;
+            }
+        }
+        let mut phis_here = 0.0;
+        for &i in &blk.insts {
+            let inst = f.inst(i);
+            if inst.is_nop() {
+                continue;
+            }
+            ft[12] += 1.0;
+            match inst.op {
+                Op::Load => ft[14] += 1.0,
+                Op::Store => ft[15] += 1.0,
+                Op::Add | Op::Sub => ft[17] += 1.0,
+                Op::FAdd | Op::FSub => ft[18] += 1.0,
+                Op::FMul => {
+                    ft[18] += 1.0;
+                    ft[19] += 1.0;
+                }
+                Op::FDiv => ft[20] += 1.0,
+                Op::FSqrt | Op::FExp | Op::FAbs | Op::FNeg => ft[21] += 1.0,
+                Op::Mul | Op::SDiv | Op::SRem => ft[22] += 1.0,
+                Op::Shl | Op::AShr => ft[23] += 1.0,
+                Op::And | Op::Or | Op::Xor => ft[24] += 1.0,
+                Op::Sext | Op::Trunc | Op::SiToFp | Op::FpToSi => ft[25] += 1.0,
+                Op::PtrAdd => ft[26] += 1.0,
+                Op::ICmp(_) => ft[27] += 1.0,
+                Op::FCmp(_) => ft[28] += 1.0,
+                Op::Select => ft[29] += 1.0,
+                Op::Phi => {
+                    ft[30] += 1.0;
+                    ft[31] += inst.args().len() as f64;
+                    phis_here += 1.0;
+                }
+                Op::CondBr => ft[34] += 1.0,
+                Op::Br => ft[35] += 1.0,
+                _ => {}
+            }
+            for &a in inst.args() {
+                match a {
+                    Value::ImmF(_) => ft[52] += 1.0,
+                    Value::ImmI(_) => ft[53] += 1.0,
+                    Value::GlobalId(d) => ft[50] = ft[50].max(1.0 + d as f64),
+                    _ => {}
+                }
+            }
+        }
+        if phis_here > 0.0 {
+            ft[32] += 1.0;
+            ft[33] = ft[33].max(phis_here);
+        }
+    }
+    let _ = live_blocks;
+    // loops
+    ft[36] += lf.loops.len() as f64;
+    for (li, l) in lf.loops.iter().enumerate() {
+        ft[37] = ft[37].max(l.depth as f64);
+        ft[38] += l.depth as f64;
+        // const bound: header cmp rhs is an immediate
+        if let Some(term) = f.terminator(l.header) {
+            if f.inst(term).op == Op::CondBr {
+                if let Some(ci) = f.inst(term).args()[0].as_inst() {
+                    if matches!(f.inst(ci).op, Op::ICmp(_))
+                        && matches!(f.inst(ci).args()[1], Value::ImmI(_))
+                    {
+                        ft[39] += 1.0;
+                    }
+                }
+            }
+        }
+        let is_innermost = !lf.loops.iter().enumerate().any(|(oi, o)| {
+            oi != li && o.depth > l.depth && o.blocks.iter().all(|b| l.blocks.contains(b))
+        });
+        if is_innermost {
+            ft[40] += 1.0;
+        }
+        // memory in loops + accumulation pattern: a store whose *address
+        // affine* is free of this loop's induction variables (the
+        // `c[i*NJ+j] += …` idiom; the address chain itself is recomputed
+        // per iteration in the naive IR, so a def-location check would
+        // miss it)
+        let ivs: Vec<Value> = {
+            let mut cx = AffineCtx::new(f);
+            f.block(l.header)
+                .insts
+                .iter()
+                .filter(|&&i| f.inst(i).op == Op::Phi)
+                .map(|&i| Value::Inst(i))
+                .filter(|&v| cx.as_induction(v).is_some())
+                .collect()
+        };
+        for &bb in &l.blocks {
+            for &i in &f.block(bb).insts {
+                let inst = f.inst(i);
+                match inst.op {
+                    Op::Store => {
+                        ft[41] += 1.0;
+                        let mut cx = AffineCtx::new(f);
+                        let loc = crate::analysis::MemLoc::resolve(&mut cx, inst.args()[0]);
+                        if let Some(off) = loc.off {
+                            if ivs.iter().all(|&iv| off.coeff(iv) == 0) {
+                                ft[43] += 1.0;
+                            }
+                        }
+                    }
+                    Op::Load => ft[42] += 1.0,
+                    _ => {}
+                }
+            }
+        }
+    }
+    // access-shape counts
+    let mut sym_pairs = 0.0;
+    let mut offs: Vec<(u16, crate::analysis::Affine)> = Vec::new();
+    for bb in f.block_ids() {
+        for &i in &f.block(bb).insts {
+            let inst = f.inst(i);
+            if !inst.op.is_memory() {
+                continue;
+            }
+            match crate::codegen::ptx::classify(f, m, inst.args()[0]) {
+                crate::codegen::MemClass::Coalesced => ft[44] += 1.0,
+                crate::codegen::MemClass::Strided => ft[45] += 1.0,
+                crate::codegen::MemClass::Broadcast => ft[46] += 1.0,
+                _ => {}
+            }
+            let mut cx = AffineCtx::new(f);
+            let loc = crate::analysis::MemLoc::resolve(&mut cx, inst.args()[0]);
+            if let (crate::analysis::Root::Param(p), Some(off)) = (loc.root, loc.off) {
+                offs.push((p, off));
+            }
+        }
+    }
+    // symmetric pair detection: offsets (a·x + b·y) and (b·x + a·y)
+    for i in 0..offs.len() {
+        for j in (i + 1)..offs.len() {
+            if offs[i].0 != offs[j].0 {
+                continue;
+            }
+            let (a, b) = (&offs[i].1, &offs[j].1);
+            if a != b && a.terms.len() == 2 && b.terms.len() == 2 {
+                let swapped = a.terms[0].1 == b.terms[1].1
+                    && a.terms[1].1 == b.terms[0].1
+                    && a.terms[0].0 == b.terms[0].0
+                    && a.terms[1].0 == b.terms[1].0
+                    && a.konst == b.konst;
+                if swapped {
+                    sym_pairs += 1.0;
+                }
+            }
+        }
+    }
+    ft[54] += sym_pairs;
+    ft[48] += f.params.len() as f64;
+    ft[49] += f.params.iter().filter(|p| p.ty.is_ptr()).count() as f64;
+    // guard depth: conditional branches outside loops
+    let in_loop_blocks: std::collections::HashSet<_> =
+        lf.loops.iter().flat_map(|l| l.blocks.iter().copied()).collect();
+    for bb in f.block_ids() {
+        if in_loop_blocks.contains(&bb) {
+            continue;
+        }
+        if let Some(t) = f.terminator(bb) {
+            if f.inst(t).op == Op::CondBr {
+                ft[51] += 1.0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite::{all_benchmarks, benchmark_by_name, Variant};
+
+    #[test]
+    fn vectors_are_finite_and_nonzero() {
+        for b in all_benchmarks() {
+            let built = b.build_small(Variant::OpenCl);
+            let ft = extract_features(&built.module);
+            assert!(ft.iter().all(|x| x.is_finite()), "{}", b.name);
+            assert!(ft.iter().any(|&x| x > 0.0), "{}", b.name);
+        }
+    }
+
+    #[test]
+    fn distinguishes_benchmarks() {
+        let g = benchmark_by_name("GEMM").unwrap().build_small(Variant::OpenCl);
+        let c = benchmark_by_name("2DCONV").unwrap().build_small(Variant::OpenCl);
+        let fg = extract_features(&g.module);
+        let fc = extract_features(&c.module);
+        assert_ne!(fg.to_vec(), fc.to_vec());
+        // conv has no loops; gemm does
+        assert_eq!(fc[36], 0.0);
+        assert!(fg[36] > 0.0);
+        // gemm has the accumulation-store feature
+        assert!(fg[43] > 0.0);
+        assert_eq!(fc[43], 0.0);
+    }
+
+    #[test]
+    fn symmetric_pairs_found_in_corr_like() {
+        let c = benchmark_by_name("CORR").unwrap().build_small(Variant::OpenCl);
+        let ft = extract_features(&c.module);
+        assert!(ft[54] > 0.0, "corr kernel writes symmat[j1][j2] and symmat[j2][j1]");
+    }
+
+    #[test]
+    fn names_count_matches() {
+        assert_eq!(FEATURE_NAMES.len(), NUM_FEATURES);
+    }
+}

@@ -1,0 +1,16 @@
+//! §4: feature-based phase-order suggestion.
+//!
+//! * [`milepost`] — 55 MILEPOST-style static code features extracted from
+//!   the unoptimized OpenCL IR (the paper uses MILEPOST GCC's extractor
+//!   on the OpenCL C; ours reads the same program properties off the IR).
+//! * [`knn`] — cosine-similarity k-NN over feature vectors.
+//! * [`itergraph`] — the IterGraph comparator [12]: a pass-transition
+//!   graph built from the reference sequences, sampled by weighted walks.
+
+pub mod itergraph;
+pub mod knn;
+pub mod milepost;
+
+pub use itergraph::IterGraph;
+pub use knn::{cosine_similarity, rank_by_similarity};
+pub use milepost::{extract_features, FeatureVector, NUM_FEATURES};

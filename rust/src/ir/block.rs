@@ -1,0 +1,41 @@
+//! Basic blocks.
+
+use super::inst::InstId;
+
+/// Index into `Function::blocks`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BlockId(pub u32);
+
+/// A basic block: an ordered list of instruction ids ending in a
+/// terminator, plus explicit CFG edges. Phi operands are positionally
+/// aligned with `preds`.
+#[derive(Debug, Clone, Default)]
+pub struct Block {
+    pub name: String,
+    pub insts: Vec<InstId>,
+    pub preds: Vec<BlockId>,
+    pub succs: Vec<BlockId>,
+    /// Backend unroll hint for the loop headed by this block (1 = none).
+    /// Mirrors `llvm.loop.unroll.count` metadata: set by the frontend
+    /// (CUDA variants arrive with 8–16, OpenCL with 2–4, per §3.4) and by
+    /// the `loop-unroll` pass; consumed by codegen and the cost model.
+    pub unroll: u8,
+    /// Set by `bb-vectorize` when this block contains provably-adjacent
+    /// load/store pairs; codegen then emits `ld.v2`-style paired accesses
+    /// for them (the backend does the fusion, the pass does the proof).
+    pub vectorize_hint: bool,
+}
+
+impl Block {
+    pub fn new(name: impl Into<String>) -> Block {
+        Block {
+            name: name.into(),
+            unroll: 1,
+            ..Default::default()
+        }
+    }
+    /// Index of `p` in the predecessor list (phi operand position).
+    pub fn pred_index(&self, p: BlockId) -> Option<usize> {
+        self.preds.iter().position(|&x| x == p)
+    }
+}

@@ -1,0 +1,132 @@
+//! Dominator tree (Cooper–Harvey–Kennedy iterative algorithm).
+
+use super::block::BlockId;
+use super::function::Function;
+
+#[derive(Debug, Clone)]
+pub struct DomTree {
+    /// Immediate dominator per block (entry's idom is itself). `None` for
+    /// unreachable blocks.
+    pub idom: Vec<Option<BlockId>>,
+    /// Reverse postorder used to compute the tree.
+    pub rpo: Vec<BlockId>,
+    /// RPO position per block (also exposed for analyses that need a
+    /// topological order consistent with the tree).
+    pub rpo_index: Vec<usize>,
+}
+
+impl DomTree {
+    pub fn compute(f: &Function) -> DomTree {
+        let n = f.blocks.len();
+        let rpo = f.rpo();
+        let mut rpo_index = vec![usize::MAX; n];
+        for (i, &b) in rpo.iter().enumerate() {
+            rpo_index[b.0 as usize] = i;
+        }
+        let mut idom: Vec<Option<BlockId>> = vec![None; n];
+        idom[f.entry.0 as usize] = Some(f.entry);
+        let mut changed = true;
+        while changed {
+            changed = false;
+            for &b in rpo.iter().skip(1) {
+                // first processed predecessor
+                let mut new_idom: Option<BlockId> = None;
+                for &p in &f.block(b).preds {
+                    if idom[p.0 as usize].is_none() {
+                        continue;
+                    }
+                    new_idom = Some(match new_idom {
+                        None => p,
+                        Some(cur) => Self::intersect(&idom, &rpo_index, p, cur),
+                    });
+                }
+                if let Some(ni) = new_idom {
+                    if idom[b.0 as usize] != Some(ni) {
+                        idom[b.0 as usize] = Some(ni);
+                        changed = true;
+                    }
+                }
+            }
+        }
+        DomTree {
+            idom,
+            rpo,
+            rpo_index,
+        }
+    }
+
+    fn intersect(
+        idom: &[Option<BlockId>],
+        rpo_index: &[usize],
+        mut a: BlockId,
+        mut b: BlockId,
+    ) -> BlockId {
+        while a != b {
+            while rpo_index[a.0 as usize] > rpo_index[b.0 as usize] {
+                a = idom[a.0 as usize].expect("reachable");
+            }
+            while rpo_index[b.0 as usize] > rpo_index[a.0 as usize] {
+                b = idom[b.0 as usize].expect("reachable");
+            }
+        }
+        a
+    }
+
+    /// Does `a` dominate `b`? (reflexive)
+    pub fn dominates(&self, a: BlockId, b: BlockId) -> bool {
+        let mut cur = b;
+        loop {
+            if cur == a {
+                return true;
+            }
+            match self.idom[cur.0 as usize] {
+                Some(i) if i != cur => cur = i,
+                _ => return false,
+            }
+        }
+    }
+
+    pub fn is_reachable(&self, b: BlockId) -> bool {
+        self.idom[b.0 as usize].is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Block, Function};
+
+    /// Diamond: 0 -> {1,2} -> 3.
+    fn diamond() -> Function {
+        let mut f = Function::new("d");
+        for n in ["e", "t", "f", "m"] {
+            f.add_block(Block::new(n));
+        }
+        let b = |i| BlockId(i);
+        f.block_mut(b(0)).succs = vec![b(1), b(2)];
+        f.block_mut(b(1)).succs = vec![b(3)];
+        f.block_mut(b(2)).succs = vec![b(3)];
+        f.recompute_preds();
+        f
+    }
+
+    #[test]
+    fn diamond_idoms() {
+        let f = diamond();
+        let dt = DomTree::compute(&f);
+        assert_eq!(dt.idom[1], Some(BlockId(0)));
+        assert_eq!(dt.idom[2], Some(BlockId(0)));
+        assert_eq!(dt.idom[3], Some(BlockId(0)));
+        assert!(dt.dominates(BlockId(0), BlockId(3)));
+        assert!(!dt.dominates(BlockId(1), BlockId(3)));
+        assert!(dt.dominates(BlockId(3), BlockId(3)));
+    }
+
+    #[test]
+    fn unreachable_block() {
+        let mut f = diamond();
+        f.add_block(Block::new("dead"));
+        let dt = DomTree::compute(&f);
+        assert!(!dt.is_reachable(BlockId(4)));
+    }
+}

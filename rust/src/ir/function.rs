@@ -1,0 +1,240 @@
+//! Functions: instruction arena + block list + utilities shared by passes.
+
+use std::collections::HashMap;
+
+use super::block::{Block, BlockId};
+use super::inst::{Inst, InstId, Op};
+use super::types::Ty;
+use super::value::Value;
+
+/// A kernel parameter. Pointer parameters are the global buffers; the
+/// paper's aliasing question ("can two buffer arguments overlap?") is
+/// asked about exactly these.
+#[derive(Debug, Clone)]
+pub struct Param {
+    pub name: String,
+    pub ty: Ty,
+    /// OpenCL 2.0 semantics: overlapping buffers would be a data race
+    /// (undefined behaviour), so a precise AA may treat distinct pointer
+    /// params as non-aliasing. BasicAA does not exploit this — that gap is
+    /// the paper's store-sinking story.
+    pub noalias_by_spec: bool,
+}
+
+/// A GPU kernel in SSA form.
+#[derive(Debug, Clone)]
+pub struct Function {
+    pub name: String,
+    pub params: Vec<Param>,
+    pub blocks: Vec<Block>,
+    pub insts: Vec<Inst>,
+    pub entry: BlockId,
+}
+
+impl Function {
+    pub fn new(name: impl Into<String>) -> Function {
+        Function {
+            name: name.into(),
+            params: Vec::new(),
+            blocks: Vec::new(),
+            insts: Vec::new(),
+            entry: BlockId(0),
+        }
+    }
+
+    // ---- arena ----
+
+    pub fn inst(&self, id: InstId) -> &Inst {
+        &self.insts[id.0 as usize]
+    }
+    pub fn inst_mut(&mut self, id: InstId) -> &mut Inst {
+        &mut self.insts[id.0 as usize]
+    }
+    pub fn add_inst(&mut self, inst: Inst) -> InstId {
+        let id = InstId(self.insts.len() as u32);
+        self.insts.push(inst);
+        id
+    }
+    pub fn block(&self, id: BlockId) -> &Block {
+        &self.blocks[id.0 as usize]
+    }
+    pub fn block_mut(&mut self, id: BlockId) -> &mut Block {
+        &mut self.blocks[id.0 as usize]
+    }
+    pub fn add_block(&mut self, b: Block) -> BlockId {
+        let id = BlockId(self.blocks.len() as u32);
+        self.blocks.push(b);
+        id
+    }
+    pub fn block_ids(&self) -> impl Iterator<Item = BlockId> {
+        (0..self.blocks.len() as u32).map(BlockId)
+    }
+
+    // ---- instruction placement ----
+
+    /// Append `inst` to `bb` (before the terminator if one exists).
+    pub fn insert_inst(&mut self, bb: BlockId, inst: Inst) -> InstId {
+        let id = self.add_inst(inst);
+        let blk = self.block_mut(bb);
+        blk.insts.push(id);
+        id
+    }
+
+    /// Insert before the terminator of `bb`.
+    pub fn insert_before_term(&mut self, bb: BlockId, inst: Inst) -> InstId {
+        let id = self.add_inst(inst);
+        let blk = &mut self.blocks[bb.0 as usize];
+        let pos = blk.insts.len().saturating_sub(1);
+        blk.insts.insert(pos, id);
+        id
+    }
+
+    /// Insert at the top of `bb`, after any phis.
+    pub fn insert_after_phis(&mut self, bb: BlockId, inst: Inst) -> InstId {
+        let id = self.add_inst(inst);
+        let n_phis = self.blocks[bb.0 as usize]
+            .insts
+            .iter()
+            .take_while(|&&i| self.insts[i.0 as usize].op == Op::Phi)
+            .count();
+        self.blocks[bb.0 as usize].insts.insert(n_phis, id);
+        id
+    }
+
+    /// Mark an instruction dead and unlink it from its block.
+    pub fn remove_inst(&mut self, bb: BlockId, id: InstId) {
+        self.blocks[bb.0 as usize].insts.retain(|&i| i != id);
+        self.insts[id.0 as usize] = Inst::nop();
+    }
+
+    /// Mark dead without unlinking (caller rebuilds the list).
+    pub fn kill_inst(&mut self, id: InstId) {
+        self.insts[id.0 as usize] = Inst::nop();
+    }
+
+    pub fn terminator(&self, bb: BlockId) -> Option<InstId> {
+        let blk = self.block(bb);
+        blk.insts.last().copied().filter(|&i| self.inst(i).op.is_terminator())
+    }
+
+    // ---- use querying / rewriting ----
+
+    /// Replace every use of `from` with `to`, everywhere.
+    pub fn replace_all_uses(&mut self, from: Value, to: Value) {
+        for inst in &mut self.insts {
+            if inst.is_nop() {
+                continue;
+            }
+            for a in inst.args_mut() {
+                if *a == from {
+                    *a = to;
+                }
+            }
+        }
+    }
+
+    /// Count uses of an instruction's result.
+    pub fn num_uses(&self, id: InstId) -> usize {
+        let v = Value::Inst(id);
+        self.insts
+            .iter()
+            .filter(|i| !i.is_nop())
+            .map(|i| i.args().iter().filter(|&&a| a == v).count())
+            .sum()
+    }
+
+    /// Map from instruction to its containing block (O(insts)).
+    pub fn inst_blocks(&self) -> HashMap<InstId, BlockId> {
+        let mut m = HashMap::with_capacity(self.insts.len());
+        for bb in self.block_ids() {
+            for &i in &self.block(bb).insts {
+                m.insert(i, bb);
+            }
+        }
+        m
+    }
+
+    /// Position of each instruction within its block (for dominance checks).
+    pub fn inst_positions(&self) -> HashMap<InstId, (BlockId, usize)> {
+        let mut m = HashMap::with_capacity(self.insts.len());
+        for bb in self.block_ids() {
+            for (k, &i) in self.block(bb).insts.iter().enumerate() {
+                m.insert(i, (bb, k));
+            }
+        }
+        m
+    }
+
+    // ---- CFG edits ----
+
+    /// Redirect the CFG edge `from -> old_to` to `from -> new_to`,
+    /// updating succ/pred lists. Phi operands of `old_to` for this pred
+    /// are dropped; `new_to` gains `from` as a pred (callers must fix phis
+    /// in `new_to` themselves if it has any).
+    pub fn redirect_edge(&mut self, from: BlockId, old_to: BlockId, new_to: BlockId) {
+        for s in &mut self.blocks[from.0 as usize].succs {
+            if *s == old_to {
+                *s = new_to;
+            }
+        }
+        // drop pred + aligned phi operands in old_to
+        if let Some(pi) = self.block(old_to).pred_index(from) {
+            self.blocks[old_to.0 as usize].preds.remove(pi);
+            let phi_ids: Vec<InstId> = self
+                .block(old_to)
+                .insts
+                .iter()
+                .copied()
+                .filter(|&i| self.inst(i).op == Op::Phi)
+                .collect();
+            for p in phi_ids {
+                self.inst_mut(p).remove_arg(pi);
+            }
+        }
+        self.blocks[new_to.0 as usize].preds.push(from);
+    }
+
+    /// Total live (non-nop) instruction count.
+    pub fn num_live_insts(&self) -> usize {
+        self.insts.iter().filter(|i| !i.is_nop()).count()
+    }
+
+    /// Reverse postorder over the CFG from entry.
+    pub fn rpo(&self) -> Vec<BlockId> {
+        let mut visited = vec![false; self.blocks.len()];
+        let mut post = Vec::with_capacity(self.blocks.len());
+        // iterative DFS
+        let mut stack: Vec<(BlockId, usize)> = vec![(self.entry, 0)];
+        visited[self.entry.0 as usize] = true;
+        while let Some(&mut (bb, ref mut i)) = stack.last_mut() {
+            let succs = &self.block(bb).succs;
+            if *i < succs.len() {
+                let s = succs[*i];
+                *i += 1;
+                if !visited[s.0 as usize] {
+                    visited[s.0 as usize] = true;
+                    stack.push((s, 0));
+                }
+            } else {
+                post.push(bb);
+                stack.pop();
+            }
+        }
+        post.reverse();
+        post
+    }
+
+    /// Rebuild pred lists from succ lists (sanity tool used by tests).
+    pub fn recompute_preds(&mut self) {
+        let n = self.blocks.len();
+        let mut preds: Vec<Vec<BlockId>> = vec![Vec::new(); n];
+        for bb in self.block_ids() {
+            for &s in &self.block(bb).succs {
+                preds[s.0 as usize].push(bb);
+            }
+        }
+        for (i, p) in preds.into_iter().enumerate() {
+            self.blocks[i].preds = p;
+        }
+    }
+}

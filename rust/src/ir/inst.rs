@@ -1,0 +1,252 @@
+//! Instructions and opcodes.
+
+use super::types::Ty;
+use super::value::Value;
+
+/// Maximum operand count. Phi arity is bounded by predecessor count; our
+/// structured kernels never exceed 4 predecessors (verifier-enforced).
+pub const MAX_ARGS: usize = 4;
+
+/// Index into `Function::insts`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct InstId(pub u32);
+
+impl InstId {
+    pub fn from_usize(i: usize) -> InstId {
+        InstId(i as u32)
+    }
+}
+
+/// Comparison predicates (shared by ICmp/FCmp; FCmp is ordered).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CmpPred {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+impl CmpPred {
+    pub fn eval_i(self, a: i64, b: i64) -> bool {
+        match self {
+            CmpPred::Eq => a == b,
+            CmpPred::Ne => a != b,
+            CmpPred::Lt => a < b,
+            CmpPred::Le => a <= b,
+            CmpPred::Gt => a > b,
+            CmpPred::Ge => a >= b,
+        }
+    }
+    pub fn eval_f(self, a: f32, b: f32) -> bool {
+        match self {
+            CmpPred::Eq => a == b,
+            CmpPred::Ne => a != b,
+            CmpPred::Lt => a < b,
+            CmpPred::Le => a <= b,
+            CmpPred::Gt => a > b,
+            CmpPred::Ge => a >= b,
+        }
+    }
+}
+
+/// Opcodes. A deliberately LLVM-shaped subset: enough to express every
+/// PolyBench/GPU kernel and every transformation the paper's Table 1
+/// sequences perform.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Op {
+    /// Dead slot in the arena (left behind by deleting passes; skipped
+    /// everywhere, compacted by `Function::compact`).
+    Nop,
+    // ---- integer arithmetic: args [a, b] ----
+    Add,
+    Sub,
+    Mul,
+    SDiv,
+    SRem,
+    Shl,
+    AShr,
+    And,
+    Or,
+    Xor,
+    // ---- float arithmetic ----
+    FAdd,
+    FSub,
+    FMul,
+    FDiv,
+    /// args [a]
+    FSqrt,
+    FAbs,
+    FNeg,
+    FExp,
+    /// args [cond, then, else]
+    Select,
+    ICmp(CmpPred),
+    FCmp(CmpPred),
+    // ---- casts: args [a] ----
+    /// i32 -> i64 sign extension (the `cvt.s64.s32` of Fig. 6).
+    Sext,
+    Trunc,
+    SiToFp,
+    FpToSi,
+    // ---- memory ----
+    /// args [ptr, byte_offset:i64] -> ptr. Address arithmetic is explicit,
+    /// which is what makes the Fig. 6 load-pattern difference observable
+    /// and what `loop-reduce` rewrites.
+    PtrAdd,
+    /// args [ptr] -> f32
+    Load,
+    /// args [ptr, value]; no result.
+    Store,
+    /// args [size_bytes:imm] -> Ptr(Local). Created by `reg2mem`, lowered
+    /// by `nvptx-lower-alloca` into the `__local_depot`.
+    Alloca,
+    /// One arg per predecessor, aligned with `Block::preds`.
+    Phi,
+    // ---- terminators ----
+    /// Unconditional branch to `Block::succs[0]`.
+    Br,
+    /// args [cond]; succs[0] = taken, succs[1] = fallthrough.
+    CondBr,
+    Ret,
+}
+
+impl Op {
+    pub fn is_terminator(self) -> bool {
+        matches!(self, Op::Br | Op::CondBr | Op::Ret)
+    }
+    /// Instruction has a side effect on memory or control flow (cannot be
+    /// removed just because its value is unused).
+    pub fn has_side_effect(self) -> bool {
+        matches!(self, Op::Store | Op::Br | Op::CondBr | Op::Ret)
+    }
+    pub fn is_memory(self) -> bool {
+        matches!(self, Op::Load | Op::Store)
+    }
+    /// Pure value computation: safe to hoist/sink/CSE if operands allow.
+    pub fn is_pure(self) -> bool {
+        !matches!(
+            self,
+            Op::Nop | Op::Load | Op::Store | Op::Alloca | Op::Phi | Op::Br | Op::CondBr | Op::Ret
+        )
+    }
+    /// Commutative binary ops (used by instcombine/reassociate/gvn
+    /// canonicalization).
+    pub fn is_commutative(self) -> bool {
+        matches!(
+            self,
+            Op::Add | Op::Mul | Op::And | Op::Or | Op::Xor | Op::FAdd | Op::FMul
+        )
+    }
+    pub fn num_args(self) -> Option<usize> {
+        Some(match self {
+            Op::Nop | Op::Br | Op::Ret => 0,
+            Op::FSqrt
+            | Op::FAbs
+            | Op::FNeg
+            | Op::FExp
+            | Op::Sext
+            | Op::Trunc
+            | Op::SiToFp
+            | Op::FpToSi
+            | Op::Load
+            | Op::CondBr
+            | Op::Alloca => 1,
+            Op::Select => 3,
+            Op::Phi => return None, // pred-count dependent
+            _ => 2,
+        })
+    }
+    pub fn mnemonic(self) -> &'static str {
+        match self {
+            Op::Nop => "nop",
+            Op::Add => "add",
+            Op::Sub => "sub",
+            Op::Mul => "mul",
+            Op::SDiv => "sdiv",
+            Op::SRem => "srem",
+            Op::Shl => "shl",
+            Op::AShr => "ashr",
+            Op::And => "and",
+            Op::Or => "or",
+            Op::Xor => "xor",
+            Op::FAdd => "fadd",
+            Op::FSub => "fsub",
+            Op::FMul => "fmul",
+            Op::FDiv => "fdiv",
+            Op::FSqrt => "fsqrt",
+            Op::FAbs => "fabs",
+            Op::FNeg => "fneg",
+            Op::FExp => "fexp",
+            Op::Select => "select",
+            Op::ICmp(_) => "icmp",
+            Op::FCmp(_) => "fcmp",
+            Op::Sext => "sext",
+            Op::Trunc => "trunc",
+            Op::SiToFp => "sitofp",
+            Op::FpToSi => "fptosi",
+            Op::PtrAdd => "ptradd",
+            Op::Load => "load",
+            Op::Store => "store",
+            Op::Alloca => "alloca",
+            Op::Phi => "phi",
+            Op::Br => "br",
+            Op::CondBr => "condbr",
+            Op::Ret => "ret",
+        }
+    }
+}
+
+/// An instruction: opcode, result type, flat operand array.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Inst {
+    pub op: Op,
+    pub ty: Ty,
+    args: [Value; MAX_ARGS],
+    nargs: u8,
+}
+
+impl Inst {
+    pub fn new(op: Op, ty: Ty, args: &[Value]) -> Inst {
+        assert!(args.len() <= MAX_ARGS, "too many operands for {op:?}");
+        let mut a = [Value::ImmI(0); MAX_ARGS];
+        a[..args.len()].copy_from_slice(args);
+        Inst {
+            op,
+            ty,
+            args: a,
+            nargs: args.len() as u8,
+        }
+    }
+    pub fn nop() -> Inst {
+        Inst::new(Op::Nop, Ty::Void, &[])
+    }
+    pub fn args(&self) -> &[Value] {
+        &self.args[..self.nargs as usize]
+    }
+    pub fn args_mut(&mut self) -> &mut [Value] {
+        &mut self.args[..self.nargs as usize]
+    }
+    pub fn set_args(&mut self, args: &[Value]) {
+        assert!(args.len() <= MAX_ARGS);
+        self.args[..args.len()].copy_from_slice(args);
+        self.nargs = args.len() as u8;
+    }
+    pub fn push_arg(&mut self, v: Value) {
+        assert!((self.nargs as usize) < MAX_ARGS, "phi arity overflow");
+        self.args[self.nargs as usize] = v;
+        self.nargs += 1;
+    }
+    pub fn remove_arg(&mut self, idx: usize) {
+        let n = self.nargs as usize;
+        assert!(idx < n);
+        for i in idx..n - 1 {
+            self.args[i] = self.args[i + 1];
+        }
+        self.nargs -= 1;
+    }
+    pub fn is_nop(&self) -> bool {
+        self.op == Op::Nop
+    }
+}

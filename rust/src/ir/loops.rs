@@ -1,0 +1,242 @@
+//! Natural-loop detection and the loop forest.
+//!
+//! Every loop-oriented pass (`licm`, `loop-reduce`, `loop-unroll`,
+//! `loop-unswitch`, `loop-extract-single`) and the cost model consume this.
+
+use std::collections::HashSet;
+
+use super::block::BlockId;
+use super::dom::DomTree;
+use super::function::Function;
+
+#[derive(Debug, Clone)]
+pub struct Loop {
+    pub header: BlockId,
+    /// Back-edge sources (typically one latch in our structured kernels).
+    pub latches: Vec<BlockId>,
+    /// All blocks in the loop body (including header).
+    pub blocks: Vec<BlockId>,
+    /// The unique block that jumps into the header from outside, if the
+    /// loop is in canonical form (our builder always emits one).
+    pub preheader: Option<BlockId>,
+    /// Blocks outside the loop targeted from inside (loop exits).
+    pub exits: Vec<BlockId>,
+    /// Parent loop index in the forest (None = top level).
+    pub parent: Option<usize>,
+    /// Nesting depth (1 = outermost).
+    pub depth: u32,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct LoopForest {
+    pub loops: Vec<Loop>,
+}
+
+impl LoopForest {
+    pub fn compute(f: &Function, dt: &DomTree) -> LoopForest {
+        // find back edges: s -> h where h dominates s
+        let mut loops: Vec<Loop> = Vec::new();
+        let mut header_of: Vec<Option<usize>> = vec![None; f.blocks.len()];
+        for bb in f.block_ids() {
+            if !dt.is_reachable(bb) {
+                continue;
+            }
+            for &s in &f.block(bb).succs {
+                if dt.dominates(s, bb) {
+                    // back edge bb -> s
+                    let idx = match header_of[s.0 as usize] {
+                        Some(i) => i,
+                        None => {
+                            loops.push(Loop {
+                                header: s,
+                                latches: Vec::new(),
+                                blocks: Vec::new(),
+                                preheader: None,
+                                exits: Vec::new(),
+                                parent: None,
+                                depth: 0,
+                            });
+                            header_of[s.0 as usize] = Some(loops.len() - 1);
+                            loops.len() - 1
+                        }
+                    };
+                    loops[idx].latches.push(bb);
+                }
+            }
+        }
+        // body discovery: reverse reachability from the latches up to the
+        // header (classic natural-loop body construction)
+        for l in &mut loops {
+            let mut body: HashSet<BlockId> = HashSet::new();
+            body.insert(l.header);
+            let mut stack: Vec<BlockId> =
+                l.latches.iter().copied().filter(|&b| b != l.header).collect();
+            while let Some(b) = stack.pop() {
+                if body.insert(b) {
+                    for &p in &f.block(b).preds {
+                        if !body.contains(&p) {
+                            stack.push(p);
+                        }
+                    }
+                }
+            }
+            let mut blocks: Vec<BlockId> = body.iter().copied().collect();
+            blocks.sort();
+            l.blocks = blocks;
+            // preheader: unique out-of-loop pred of header
+            let outside: Vec<BlockId> = f
+                .block(l.header)
+                .preds
+                .iter()
+                .copied()
+                .filter(|p| !body.contains(p))
+                .collect();
+            if outside.len() == 1 {
+                l.preheader = Some(outside[0]);
+            }
+            // exits
+            let mut exits = Vec::new();
+            for &b in &l.blocks {
+                for &s in &f.block(b).succs {
+                    if !body.contains(&s) && !exits.contains(&s) {
+                        exits.push(s);
+                    }
+                }
+            }
+            l.exits = exits;
+        }
+        // nesting: loop A is parent of B if A contains B's header and A != B
+        let mut forest = LoopForest { loops };
+        let n = forest.loops.len();
+        for i in 0..n {
+            let mut best: Option<usize> = None;
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                if forest.loops[j].blocks.contains(&forest.loops[i].header)
+                    && forest.loops[j].header != forest.loops[i].header
+                {
+                    // smallest containing loop
+                    best = match best {
+                        None => Some(j),
+                        Some(b) if forest.loops[j].blocks.len() < forest.loops[b].blocks.len() => {
+                            Some(j)
+                        }
+                        b => b,
+                    };
+                }
+            }
+            forest.loops[i].parent = best;
+        }
+        for i in 0..n {
+            let mut d = 1;
+            let mut p = forest.loops[i].parent;
+            while let Some(pi) = p {
+                d += 1;
+                p = forest.loops[pi].parent;
+            }
+            forest.loops[i].depth = d;
+        }
+        forest
+    }
+
+    pub fn contains(&self, li: usize, b: BlockId) -> bool {
+        self.loops[li].blocks.contains(&b)
+    }
+
+    /// Innermost loop containing block `b`, if any.
+    pub fn innermost_containing(&self, b: BlockId) -> Option<usize> {
+        self.loops
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.blocks.contains(&b))
+            .max_by_key(|(_, l)| l.depth)
+            .map(|(i, _)| i)
+    }
+
+    /// Loops ordered innermost-first (deepest depth first).
+    pub fn innermost_first(&self) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.loops.len()).collect();
+        idx.sort_by_key(|&i| std::cmp::Reverse(self.loops[i].depth));
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Block, Function};
+
+    /// entry -> ph -> header <-> body(latch) ; header -> exit
+    fn single_loop() -> Function {
+        let mut f = Function::new("l");
+        for n in ["entry", "ph", "header", "body", "exit"] {
+            f.add_block(Block::new(n));
+        }
+        let b = |i| BlockId(i);
+        f.block_mut(b(0)).succs = vec![b(1)];
+        f.block_mut(b(1)).succs = vec![b(2)];
+        f.block_mut(b(2)).succs = vec![b(3), b(4)];
+        f.block_mut(b(3)).succs = vec![b(2)];
+        f.recompute_preds();
+        f
+    }
+
+    #[test]
+    fn finds_single_loop() {
+        let f = single_loop();
+        let dt = DomTree::compute(&f);
+        let lf = LoopForest::compute(&f, &dt);
+        assert_eq!(lf.loops.len(), 1);
+        let l = &lf.loops[0];
+        assert_eq!(l.header, BlockId(2));
+        assert_eq!(l.latches, vec![BlockId(3)]);
+        assert_eq!(l.preheader, Some(BlockId(1)));
+        assert_eq!(l.exits, vec![BlockId(4)]);
+        assert_eq!(l.depth, 1);
+    }
+
+    /// Two-level nest: outer header 1, inner loop {3,4}.
+    fn nested() -> Function {
+        let mut f = Function::new("n");
+        for n in ["entry", "oh", "iph", "ih", "ibody", "olatch", "exit"] {
+            f.add_block(Block::new(n));
+        }
+        let b = |i| BlockId(i);
+        f.block_mut(b(0)).succs = vec![b(1)];
+        f.block_mut(b(1)).succs = vec![b(2), b(6)];
+        f.block_mut(b(2)).succs = vec![b(3)];
+        f.block_mut(b(3)).succs = vec![b(4), b(5)];
+        f.block_mut(b(4)).succs = vec![b(3)];
+        f.block_mut(b(5)).succs = vec![b(1)];
+        f.recompute_preds();
+        f
+    }
+
+    #[test]
+    fn finds_nested_loops() {
+        let f = nested();
+        let dt = DomTree::compute(&f);
+        let lf = LoopForest::compute(&f, &dt);
+        assert_eq!(lf.loops.len(), 2);
+        let inner = lf
+            .loops
+            .iter()
+            .find(|l| l.header == BlockId(3))
+            .expect("inner loop");
+        let outer = lf
+            .loops
+            .iter()
+            .find(|l| l.header == BlockId(1))
+            .expect("outer loop");
+        assert_eq!(inner.depth, 2);
+        assert_eq!(outer.depth, 1);
+        assert!(outer.blocks.contains(&BlockId(3)));
+        assert_eq!(inner.preheader, Some(BlockId(2)));
+        let inner_idx = lf.loops.iter().position(|l| l.header == BlockId(3)).unwrap();
+        let outer_idx = lf.loops.iter().position(|l| l.header == BlockId(1)).unwrap();
+        assert_eq!(lf.loops[inner_idx].parent, Some(outer_idx));
+        assert_eq!(lf.innermost_containing(BlockId(4)), Some(inner_idx));
+    }
+}

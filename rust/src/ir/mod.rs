@@ -1,0 +1,43 @@
+//! A compact SSA intermediate representation modelled on LLVM IR.
+//!
+//! This is the substrate the whole reproduction stands on: the paper's
+//! phase-ordering phenomena are pass-over-IR interactions, so the IR keeps
+//! the properties those interactions need — SSA values, an explicit CFG,
+//! typed memory operations with address-space distinction (global vs.
+//! per-thread local), phi nodes, and loop-carried accumulation through
+//! memory (the pattern §3.4 of the paper identifies as the dominant
+//! optimization opportunity).
+//!
+//! Design choices (and why):
+//! - Instructions are `Copy` and live in a flat arena per function, so a
+//!   DSE evaluation can clone a kernel in one `memcpy`-ish step. The DSE
+//!   hot loop clones the baseline module for every candidate sequence.
+//! - Operand lists are fixed-size (`[Value; MAX_ARGS]`); phi arity is
+//!   bounded by predecessor count, which our structured kernels keep ≤ 4.
+//! - Loop unrolling is represented as a per-header hint consumed by the
+//!   cost model (like `llvm.loop.unroll` metadata feeding the backend),
+//!   not as body duplication; the paper's unroll observations are made at
+//!   the PTX level, which our codegen reproduces from the hint.
+
+pub mod block;
+pub mod builder;
+pub mod dom;
+pub mod function;
+pub mod inst;
+pub mod loops;
+pub mod module;
+pub mod parser;
+pub mod printer;
+pub mod types;
+pub mod value;
+pub mod verifier;
+
+pub use block::{Block, BlockId};
+pub use builder::KernelBuilder;
+pub use dom::DomTree;
+pub use function::{Function, Param};
+pub use inst::{CmpPred, Inst, InstId, Op, MAX_ARGS};
+pub use loops::{Loop, LoopForest};
+pub use module::Module;
+pub use types::{AddrSpace, Ty};
+pub use value::Value;

@@ -1,0 +1,49 @@
+//! Modules: a set of kernels plus pipeline-wide state that passes
+//! communicate through (the stateful couplings phase ordering exploits).
+
+use super::function::Function;
+
+/// A translation unit: one PolyBench benchmark's kernel(s) plus the state
+/// that makes pass *order* matter beyond per-pass IR rewrites.
+#[derive(Debug, Clone)]
+pub struct Module {
+    pub name: String,
+    pub kernels: Vec<Function>,
+    /// Installed by `cfl-anders-aa`: a context-sensitive alias summary
+    /// that (per OpenCL 2.0 §3.4 of the paper) lets memory passes treat
+    /// distinct global buffer params as non-aliasing. Without it, BasicAA
+    /// conservatively merges them — which is why -O3 alone gets nothing.
+    pub precise_aa: bool,
+    /// The precise-AA summary is computed over addressing as it looked
+    /// when `cfl-anders-aa` ran. Passes that rewrite addressing
+    /// (`loop-reduce`, `bb-vectorize`) set this; `sink`'s unsound fast
+    /// path consults the stale summary (documented bug model #4).
+    pub aa_stale: bool,
+    /// `nvptx-lower-alloca` ran: allocas became `__local_depot` accesses.
+    /// `mem2reg`/`sroa` can no longer raise them (precondition violation =
+    /// the paper's compile-crash bucket).
+    pub allocas_lowered: bool,
+    /// `loop-extract-single` outlined a loop body (affects codegen
+    /// call overhead modelling; §3.4 SYR2K observation).
+    pub loops_extracted: bool,
+    /// CFG was restructured by `jump-threading`/`simplifycfg` since loop
+    /// analyses were last refreshed. `loop-unswitch` consults a cached
+    /// invariance summary that this invalidates (documented bug model #2);
+    /// passes that recompute loop analyses (`licm`, `gvn`, `loop-reduce`)
+    /// clear it.
+    pub cfg_dirty: bool,
+}
+
+impl Module {
+    pub fn new(name: impl Into<String>) -> Module {
+        Module {
+            name: name.into(),
+            kernels: Vec::new(),
+            precise_aa: false,
+            aa_stale: false,
+            allocas_lowered: false,
+            loops_extracted: false,
+            cfg_dirty: false,
+        }
+    }
+}

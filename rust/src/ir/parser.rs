@@ -1,0 +1,432 @@
+//! Textual IR parser — the inverse of [`printer`](super::printer).
+//!
+//! Lets tests and debugging sessions write kernels as text, and makes
+//! printer output round-trippable. The grammar is exactly what
+//! `print_function` emits:
+//!
+//! ```text
+//! kernel @name(Ptr(Global) %a, Ptr(Global) %b) {
+//! entry:
+//!   %3 = add %arg0, 4
+//!   store %6, 1.0
+//!   condbr %0, if.then, if.join
+//! ...
+//! }
+//! ```
+//!
+//! Value tokens: `%N` (instruction result), `%argN`, integer and float
+//! literals, `@gid.D`, `@gsz.D`. Instruction ids in the text are
+//! renumbered densely on parse (like LLVM's text parser — the property
+//! the AOT HLO-text interchange relies on, too).
+
+use std::collections::HashMap;
+
+use super::block::{Block, BlockId};
+use super::function::{Function, Param};
+use super::inst::{CmpPred, Inst, InstId, Op};
+use super::types::{AddrSpace, Ty};
+use super::value::Value;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError(pub String);
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "parse: {}", self.0)
+    }
+}
+impl std::error::Error for ParseError {}
+
+fn err<T>(msg: impl Into<String>) -> Result<T, ParseError> {
+    Err(ParseError(msg.into()))
+}
+
+/// Parse one kernel from printer-format text.
+pub fn parse_function(text: &str) -> Result<Function, ParseError> {
+    let mut lines = text
+        .lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty())
+        .peekable();
+
+    // header
+    let header = lines.next().ok_or(ParseError("empty input".into()))?;
+    let header = header
+        .strip_prefix("kernel @")
+        .ok_or(ParseError("missing 'kernel @'".into()))?;
+    let open = header.find('(').ok_or(ParseError("missing '('".into()))?;
+    let close = header.rfind(')').ok_or(ParseError("missing ')'".into()))?;
+    let name = header[..open].to_string();
+    let mut f = Function::new(name);
+    let params_str = &header[open + 1..close];
+    if !params_str.trim().is_empty() {
+        for p in params_str.split(',') {
+            let p = p.trim();
+            let (ty_str, pname) = p
+                .rsplit_once(" %")
+                .ok_or_else(|| ParseError(format!("bad param '{p}'")))?;
+            let ty = parse_ty(ty_str)?;
+            f.params.push(Param {
+                name: pname.to_string(),
+                ty,
+                noalias_by_spec: ty.is_ptr(),
+            });
+        }
+    }
+
+    // first pass: collect block labels in order (lines ending with ':'
+    // up to an optional comment)
+    #[derive(Default)]
+    struct RawBlock {
+        name: String,
+        lines: Vec<String>,
+    }
+    let mut raw: Vec<RawBlock> = Vec::new();
+    for line in lines {
+        if line == "}" {
+            break;
+        }
+        let no_comment = match line.find(';') {
+            Some(k) => line[..k].trim_end(),
+            None => line,
+        };
+        if no_comment.is_empty() {
+            continue;
+        }
+        if let Some(label) = no_comment.strip_suffix(':') {
+            raw.push(RawBlock {
+                name: label.trim().to_string(),
+                lines: Vec::new(),
+            });
+        } else {
+            let cur = raw
+                .last_mut()
+                .ok_or(ParseError("instruction before first label".into()))?;
+            cur.lines.push(no_comment.to_string());
+        }
+    }
+    if raw.is_empty() {
+        return err("no blocks");
+    }
+    let mut block_ids: HashMap<String, BlockId> = HashMap::new();
+    for rb in &raw {
+        let id = f.add_block(Block::new(rb.name.clone()));
+        if block_ids.insert(rb.name.clone(), id).is_some() {
+            return err(format!("duplicate block label {}", rb.name));
+        }
+    }
+    f.entry = BlockId(0);
+
+    // second pass: instructions; text ids → dense new ids
+    let mut id_map: HashMap<u32, InstId> = HashMap::new();
+    // pre-scan destinations so forward references (phis) resolve
+    struct PendingInst {
+        bb: BlockId,
+        dst: Option<u32>,
+        op_str: String,
+        rest: String,
+    }
+    let mut pending: Vec<PendingInst> = Vec::new();
+    for rb in &raw {
+        let bb = block_ids[&rb.name];
+        for line in &rb.lines {
+            let (dst, rhs) = if let Some((lhs, rhs)) = line.split_once('=') {
+                let lhs = lhs.trim();
+                let n: u32 = lhs
+                    .strip_prefix('%')
+                    .and_then(|s| s.parse().ok())
+                    .ok_or_else(|| ParseError(format!("bad destination '{lhs}'")))?;
+                (Some(n), rhs.trim())
+            } else {
+                (None, line.as_str())
+            };
+            let (op_str, rest) = match rhs.split_once(char::is_whitespace) {
+                Some((o, r)) => (o.to_string(), r.trim().to_string()),
+                None => (rhs.to_string(), String::new()),
+            };
+            pending.push(PendingInst {
+                bb,
+                dst,
+                op_str,
+                rest,
+            });
+        }
+    }
+    // allocate ids in order
+    for p in &pending {
+        let id = f.add_inst(Inst::nop());
+        if let Some(d) = p.dst {
+            id_map.insert(d, id);
+        }
+        f.block_mut(p.bb).insts.push(id);
+    }
+    // fill bodies
+    let all_ids: Vec<InstId> = f
+        .block_ids()
+        .flat_map(|bb| f.block(bb).insts.clone())
+        .collect();
+    for (p, id) in pending.iter().zip(all_ids) {
+        let (op, ty, args, succs) = parse_inst(&p.op_str, &p.rest, &id_map, &block_ids)?;
+        f.insts[id.0 as usize] = Inst::new(op, ty, &args);
+        if !succs.is_empty() {
+            f.block_mut(p.bb).succs = succs;
+        }
+    }
+    f.recompute_preds();
+    Ok(f)
+}
+
+fn parse_ty(s: &str) -> Result<Ty, ParseError> {
+    match s.trim() {
+        "I1" => Ok(Ty::I1),
+        "I32" => Ok(Ty::I32),
+        "I64" => Ok(Ty::I64),
+        "F32" => Ok(Ty::F32),
+        "Ptr(Global)" => Ok(Ty::Ptr(AddrSpace::Global)),
+        "Ptr(Local)" => Ok(Ty::Ptr(AddrSpace::Local)),
+        other => err(format!("unknown type '{other}'")),
+    }
+}
+
+fn parse_value(tok: &str, ids: &HashMap<u32, InstId>) -> Result<Value, ParseError> {
+    let tok = tok.trim();
+    if let Some(rest) = tok.strip_prefix("%arg") {
+        return rest
+            .parse::<u16>()
+            .map(Value::Arg)
+            .map_err(|_| ParseError(format!("bad arg '{tok}'")));
+    }
+    if let Some(rest) = tok.strip_prefix('%') {
+        let n: u32 = rest
+            .parse()
+            .map_err(|_| ParseError(format!("bad value '{tok}'")))?;
+        return ids
+            .get(&n)
+            .map(|&i| Value::Inst(i))
+            .ok_or_else(|| ParseError(format!("undefined %{n}")));
+    }
+    if let Some(rest) = tok.strip_prefix("@gid.") {
+        return rest
+            .parse::<u8>()
+            .map(Value::GlobalId)
+            .map_err(|_| ParseError(format!("bad gid '{tok}'")));
+    }
+    if let Some(rest) = tok.strip_prefix("@gsz.") {
+        return rest
+            .parse::<u8>()
+            .map(Value::GlobalSize)
+            .map_err(|_| ParseError(format!("bad gsz '{tok}'")));
+    }
+    if tok.contains('.') || tok.contains("inf") || tok.contains("NaN") {
+        return tok
+            .parse::<f32>()
+            .map(Value::imm_f)
+            .map_err(|_| ParseError(format!("bad float '{tok}'")));
+    }
+    tok.parse::<i64>()
+        .map(Value::ImmI)
+        .map_err(|_| ParseError(format!("bad int '{tok}'")))
+}
+
+fn parse_pred(s: &str) -> Result<CmpPred, ParseError> {
+    Ok(match s {
+        "eq" => CmpPred::Eq,
+        "ne" => CmpPred::Ne,
+        "lt" => CmpPred::Lt,
+        "le" => CmpPred::Le,
+        "gt" => CmpPred::Gt,
+        "ge" => CmpPred::Ge,
+        other => return err(format!("unknown predicate '{other}'")),
+    })
+}
+
+#[allow(clippy::type_complexity)]
+fn parse_inst(
+    op_str: &str,
+    rest: &str,
+    ids: &HashMap<u32, InstId>,
+    blocks: &HashMap<String, BlockId>,
+) -> Result<(Op, Ty, Vec<Value>, Vec<BlockId>), ParseError> {
+    let args = |rest: &str| -> Result<Vec<Value>, ParseError> {
+        if rest.trim().is_empty() {
+            return Ok(Vec::new());
+        }
+        rest.split(',').map(|t| parse_value(t, ids)).collect()
+    };
+    let simple = |op: Op, ty: Ty| -> Result<(Op, Ty, Vec<Value>, Vec<BlockId>), ParseError> {
+        Ok((op, ty, args(rest)?, Vec::new()))
+    };
+    match op_str {
+        "add" => simple(Op::Add, Ty::I32),
+        "sub" => simple(Op::Sub, Ty::I32),
+        "mul" => simple(Op::Mul, Ty::I32),
+        "sdiv" => simple(Op::SDiv, Ty::I32),
+        "srem" => simple(Op::SRem, Ty::I32),
+        "shl" => simple(Op::Shl, Ty::I64),
+        "ashr" => simple(Op::AShr, Ty::I64),
+        "and" => simple(Op::And, Ty::I1),
+        "or" => simple(Op::Or, Ty::I1),
+        "xor" => simple(Op::Xor, Ty::I32),
+        "fadd" => simple(Op::FAdd, Ty::F32),
+        "fsub" => simple(Op::FSub, Ty::F32),
+        "fmul" => simple(Op::FMul, Ty::F32),
+        "fdiv" => simple(Op::FDiv, Ty::F32),
+        "fsqrt" => simple(Op::FSqrt, Ty::F32),
+        "fabs" => simple(Op::FAbs, Ty::F32),
+        "fneg" => simple(Op::FNeg, Ty::F32),
+        "fexp" => simple(Op::FExp, Ty::F32),
+        "select" => simple(Op::Select, Ty::F32),
+        "sext" => simple(Op::Sext, Ty::I64),
+        "trunc" => simple(Op::Trunc, Ty::I32),
+        "sitofp" => simple(Op::SiToFp, Ty::F32),
+        "fptosi" => simple(Op::FpToSi, Ty::I32),
+        "ptradd" => simple(Op::PtrAdd, Ty::Ptr(AddrSpace::Global)),
+        "load" => simple(Op::Load, Ty::F32),
+        "store" => simple(Op::Store, Ty::Void),
+        "alloca" => simple(Op::Alloca, Ty::Ptr(AddrSpace::Local)),
+        "phi" => simple(Op::Phi, Ty::I32),
+        "ret" => Ok((Op::Ret, Ty::Void, Vec::new(), Vec::new())),
+        "br" => {
+            let target = blocks
+                .get(rest.trim())
+                .ok_or_else(|| ParseError(format!("unknown block '{rest}'")))?;
+            Ok((Op::Br, Ty::Void, Vec::new(), vec![*target]))
+        }
+        "condbr" => {
+            let parts: Vec<&str> = rest.split(',').map(str::trim).collect();
+            if parts.len() != 3 {
+                return err(format!("condbr needs cond, t, f — got '{rest}'"));
+            }
+            let cond = parse_value(parts[0], ids)?;
+            let t = *blocks
+                .get(parts[1])
+                .ok_or_else(|| ParseError(format!("unknown block '{}'", parts[1])))?;
+            let e = *blocks
+                .get(parts[2])
+                .ok_or_else(|| ParseError(format!("unknown block '{}'", parts[2])))?;
+            Ok((Op::CondBr, Ty::Void, vec![cond], vec![t, e]))
+        }
+        cmp if cmp.starts_with("icmp.") => {
+            let p = parse_pred(&cmp[5..])?;
+            Ok((Op::ICmp(p), Ty::I1, args(rest)?, Vec::new()))
+        }
+        cmp if cmp.starts_with("fcmp.") => {
+            let p = parse_pred(&cmp[5..])?;
+            Ok((Op::FCmp(p), Ty::I1, args(rest)?, Vec::new()))
+        }
+        other => err(format!("unknown opcode '{other}'")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::printer::print_function;
+    use crate::ir::verifier::verify_function;
+    use crate::ir::KernelBuilder;
+
+    #[test]
+    fn parses_simple_kernel() {
+        let text = "\
+kernel @saxpy(Ptr(Global) %x, Ptr(Global) %y) {
+entry:
+  %0 = sext @gid.0
+  %1 = shl %0, 2
+  %2 = ptradd %arg0, %1
+  %3 = load %2
+  %4 = fmul %3, 2.0
+  %5 = ptradd %arg1, %1
+  %6 = load %5
+  %7 = fadd %4, %6
+  store %5, %7
+  ret
+}";
+        let f = parse_function(text).unwrap();
+        verify_function(&f).unwrap();
+        assert_eq!(f.name, "saxpy");
+        assert_eq!(f.params.len(), 2);
+        assert_eq!(f.num_live_insts(), 10);
+    }
+
+    #[test]
+    fn parses_control_flow() {
+        let text = "\
+kernel @k(Ptr(Global) %a) {
+entry:
+  %0 = icmp.lt @gid.0, 4
+  condbr %0, then, join
+then:
+  %2 = sext @gid.0
+  %3 = shl %2, 2
+  %4 = ptradd %arg0, %3
+  store %4, 1.0
+  br join
+join:
+  ret
+}";
+        let f = parse_function(text).unwrap();
+        verify_function(&f).unwrap();
+        assert_eq!(f.blocks.len(), 3);
+        assert_eq!(f.block(BlockId(0)).succs.len(), 2);
+    }
+
+    /// print → parse → print must be a fixpoint on every benchmark kernel
+    /// (modulo instruction renumbering, which the second print normalizes).
+    #[test]
+    fn roundtrip_all_benchmarks() {
+        for b in crate::bench_suite::all_benchmarks() {
+            let built = b.build_small(crate::bench_suite::Variant::OpenCl);
+            for k in &built.module.kernels {
+                let t1 = print_function(k);
+                let parsed = parse_function(&t1)
+                    .unwrap_or_else(|e| panic!("{}/{}: {e}\n{t1}", b.name, k.name));
+                verify_function(&parsed)
+                    .unwrap_or_else(|e| panic!("{}/{}: {e}", b.name, k.name));
+                let t2 = print_function(&parsed);
+                let t3 = print_function(&parse_function(&t2).unwrap());
+                assert_eq!(t2, t3, "{}/{} not a fixpoint", b.name, k.name);
+                // structural equality: same op multiset and block count
+                assert_eq!(parsed.blocks.len(), k.blocks.len());
+                assert_eq!(parsed.num_live_insts(), k.num_live_insts());
+            }
+        }
+    }
+
+    /// parsed kernels execute identically to their originals
+    #[test]
+    fn roundtrip_preserves_semantics() {
+        use crate::sim::exec::{run_kernel, Buffers};
+        let mut b = KernelBuilder::new(
+            "k",
+            &[("a", crate::ir::Ty::Ptr(crate::ir::AddrSpace::Global))],
+        );
+        let n = b.i(8);
+        let (_h, acc) = b.for_loop_acc("i", b.i(0), n, 1, b.fc(0.0), |b, iv, acc| {
+            let v = b.load(b.param(0), iv);
+            b.fadd(acc, v)
+        });
+        b.store(b.param(0), b.i(0), acc);
+        let f = b.finish();
+        let text = print_function(&f);
+        let parsed = parse_function(&text).unwrap();
+        let mk = || {
+            let mut bufs = Buffers::new(&[8]);
+            for i in 0..8 {
+                bufs.bufs[0][i] = (i + 1) as f32;
+            }
+            bufs
+        };
+        let mut b1 = mk();
+        let mut b2 = mk();
+        run_kernel(&f, (1, 1), &mut b1, 1_000_000).unwrap();
+        run_kernel(&parsed, (1, 1), &mut b2, 1_000_000).unwrap();
+        assert_eq!(b1.bufs, b2.bufs);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_function("not a kernel").is_err());
+        assert!(parse_function("kernel @k() {\nentry:\n  %0 = bogus 1\n  ret\n}").is_err());
+        assert!(parse_function("kernel @k() {\nentry:\n  br nowhere\n  ret\n}").is_err());
+    }
+}

@@ -1,0 +1,127 @@
+//! Textual IR dumping (LLVM-flavoured, for debugging and golden tests).
+
+use std::fmt::Write;
+
+use super::function::Function;
+use super::inst::{InstId, Op};
+use super::module::Module;
+use super::value::Value;
+
+pub fn print_value(v: Value) -> String {
+    match v {
+        Value::Arg(i) => format!("%arg{i}"),
+        Value::Inst(InstId(i)) => format!("%{i}"),
+        Value::ImmI(x) => format!("{x}"),
+        Value::ImmF(bits) => format!("{:?}", f32::from_bits(bits)),
+        Value::GlobalId(d) => format!("@gid.{d}"),
+        Value::GlobalSize(d) => format!("@gsz.{d}"),
+    }
+}
+
+pub fn print_function(f: &Function) -> String {
+    let mut s = String::new();
+    let params: Vec<String> = f
+        .params
+        .iter()
+        .map(|p| format!("{:?} %{}", p.ty, p.name))
+        .collect();
+    let _ = writeln!(s, "kernel @{}({}) {{", f.name, params.join(", "));
+    // labels must be unique for the text to round-trip through the
+    // parser; structured construction can reuse names (nested "if.then")
+    let mut name_count = std::collections::HashMap::new();
+    for bb in f.block_ids() {
+        *name_count.entry(f.block(bb).name.clone()).or_insert(0usize) += 1;
+    }
+    let label = |bb: crate::ir::BlockId| -> String {
+        let n = &f.block(bb).name;
+        if name_count.get(n).copied().unwrap_or(0) > 1 {
+            format!("{n}.b{}", bb.0)
+        } else {
+            n.clone()
+        }
+    };
+    for bb in f.block_ids() {
+        let blk = f.block(bb);
+        if blk.insts.is_empty() && blk.preds.is_empty() && bb != f.entry {
+            continue; // detached block
+        }
+        let preds: Vec<String> = blk.preds.iter().map(|&p| label(p)).collect();
+        let _ = writeln!(
+            s,
+            "{}:{}{}",
+            label(bb),
+            if preds.is_empty() {
+                String::new()
+            } else {
+                format!("    ; preds: {}", preds.join(", "))
+            },
+            if blk.unroll > 1 {
+                format!("  ; unroll={}", blk.unroll)
+            } else {
+                String::new()
+            }
+        );
+        for &iid in &blk.insts {
+            let inst = f.inst(iid);
+            if inst.is_nop() {
+                continue;
+            }
+            let args: Vec<String> = inst.args().iter().map(|&a| print_value(a)).collect();
+            let pred_str = match inst.op {
+                Op::ICmp(p) | Op::FCmp(p) => format!(".{p:?}").to_lowercase(),
+                _ => String::new(),
+            };
+            let rhs = match inst.op {
+                Op::Br => format!("br {}", label(blk.succs[0])),
+                Op::CondBr => format!(
+                    "condbr {}, {}, {}",
+                    args[0],
+                    label(blk.succs[0]),
+                    label(blk.succs[1])
+                ),
+                _ => format!("{}{} {}", inst.op.mnemonic(), pred_str, args.join(", ")),
+            };
+            if inst.op.is_terminator() || inst.op == Op::Store {
+                let _ = writeln!(s, "  {rhs}");
+            } else {
+                let _ = writeln!(s, "  %{} = {rhs}", iid.0);
+            }
+        }
+    }
+    let _ = writeln!(s, "}}");
+    s
+}
+
+pub fn print_module(m: &Module) -> String {
+    let mut s = format!(
+        "; module {} precise_aa={} aa_stale={} allocas_lowered={}\n",
+        m.name, m.precise_aa, m.aa_stale, m.allocas_lowered
+    );
+    for k in &m.kernels {
+        s.push_str(&print_function(k));
+        s.push('\n');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{AddrSpace, KernelBuilder, Ty};
+
+    #[test]
+    fn prints_loop_kernel() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let n = b.i(4);
+        b.for_loop("i", b.i(0), n, 1, |b, iv| {
+            let v = b.load(b.param(0), iv);
+            b.store(b.param(0), iv, v);
+        });
+        let f = b.finish();
+        let text = print_function(&f);
+        assert!(text.contains("kernel @k"));
+        assert!(text.contains("phi"));
+        assert!(text.contains("condbr"));
+        assert!(text.contains("load"));
+    }
+}

@@ -1,0 +1,44 @@
+//! Scalar and pointer types.
+
+
+
+/// Address space of a pointer, mirroring PTX state spaces.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AddrSpace {
+    /// Off-chip device memory (`.global` in PTX). Expensive; the paper's
+    /// headline wins come from removing per-iteration accesses here.
+    Global,
+    /// Per-thread local storage (`.local`, the `__local_depot` of §3.4).
+    /// Cheap: it maps to registers or L1-resident spill space.
+    Local,
+}
+
+/// Value types. `F32` matches the paper's single-precision PolyBench setup.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Ty {
+    /// 1-bit predicate (comparison results).
+    I1,
+    /// 32-bit signed integer (loop counters, indices).
+    I32,
+    /// 64-bit signed integer (byte offsets, extended indices).
+    I64,
+    /// 32-bit IEEE float (all PolyBench payload data).
+    F32,
+    /// Pointer into an address space. Pointees are always `F32` arrays in
+    /// this suite; loads/stores carry the element type implicitly.
+    Ptr(AddrSpace),
+    /// Instruction produces no value (store, branches).
+    Void,
+}
+
+impl Ty {
+    pub fn is_ptr(self) -> bool {
+        matches!(self, Ty::Ptr(_))
+    }
+    pub fn is_int(self) -> bool {
+        matches!(self, Ty::I32 | Ty::I64)
+    }
+    pub fn is_float(self) -> bool {
+        matches!(self, Ty::F32)
+    }
+}

@@ -1,0 +1,51 @@
+//! SSA values: arguments, instruction results, immediates, SIMT identity.
+
+use super::inst::InstId;
+
+/// A use of an SSA value. `Copy` so instruction operand arrays stay flat.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Value {
+    /// The n-th kernel parameter.
+    Arg(u16),
+    /// Result of an instruction.
+    Inst(InstId),
+    /// Integer immediate (i32/i64 contexts).
+    ImmI(i64),
+    /// f32 immediate, stored as bits so `Value` stays `Eq + Hash`.
+    ImmF(u32),
+    /// `get_global_id(dim)` — the SIMT lane coordinate. Loop-invariant and
+    /// pure by construction, like a read-only special register in PTX
+    /// (`%tid`/`%ctaid` folded together).
+    GlobalId(u8),
+    /// `get_global_size(dim)`.
+    GlobalSize(u8),
+}
+
+impl Value {
+    pub fn imm_f(f: f32) -> Value {
+        Value::ImmF(f.to_bits())
+    }
+    pub fn as_imm_i(self) -> Option<i64> {
+        match self {
+            Value::ImmI(v) => Some(v),
+            _ => None,
+        }
+    }
+    pub fn as_imm_f(self) -> Option<f32> {
+        match self {
+            Value::ImmF(bits) => Some(f32::from_bits(bits)),
+            _ => None,
+        }
+    }
+    /// True if the value is a constant or thread-identity (never varies
+    /// within a thread; trivially loop-invariant).
+    pub fn is_trivially_invariant(self) -> bool {
+        !matches!(self, Value::Inst(_))
+    }
+    pub fn as_inst(self) -> Option<InstId> {
+        match self {
+            Value::Inst(id) => Some(id),
+            _ => None,
+        }
+    }
+}

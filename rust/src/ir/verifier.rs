@@ -1,0 +1,267 @@
+//! IR well-formedness checks.
+//!
+//! Run after construction and (in tests / property tests) after every pass:
+//! a transform that breaks SSA dominance or CFG/phi consistency is a
+//! compiler bug of the "crash" category, distinct from the *semantic* bugs
+//! the validator catches by executing the code.
+
+use std::collections::HashSet;
+
+use super::dom::DomTree;
+use super::function::Function;
+use super::inst::{InstId, Op};
+use super::module::Module;
+use super::value::Value;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VerifyError(pub String);
+
+impl std::fmt::Display for VerifyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "verify: {}", self.0)
+    }
+}
+impl std::error::Error for VerifyError {}
+
+fn err<T>(msg: String) -> Result<T, VerifyError> {
+    Err(VerifyError(msg))
+}
+
+pub fn verify_module(m: &Module) -> Result<(), VerifyError> {
+    for k in &m.kernels {
+        verify_function(k)?;
+    }
+    Ok(())
+}
+
+pub fn verify_function(f: &Function) -> Result<(), VerifyError> {
+    let dt = DomTree::compute(f);
+    let pos = f.inst_positions();
+
+    // every reachable block: non-empty, terminator last and only last,
+    // succ/pred symmetry, phi arity matches preds, phis lead the block
+    for bb in f.block_ids() {
+        if !dt.is_reachable(bb) {
+            continue;
+        }
+        let blk = f.block(bb);
+        let live: Vec<InstId> = blk
+            .insts
+            .iter()
+            .copied()
+            .filter(|&i| !f.inst(i).is_nop())
+            .collect();
+        let Some(&last) = live.last() else {
+            return err(format!("block {} has no terminator", blk.name));
+        };
+        if !f.inst(last).op.is_terminator() {
+            return err(format!("block {} does not end in terminator", blk.name));
+        }
+        let mut seen_non_phi = false;
+        for &i in &live {
+            let inst = f.inst(i);
+            if inst.op.is_terminator() && i != last {
+                return err(format!("block {} has terminator mid-block", blk.name));
+            }
+            match inst.op {
+                Op::Phi => {
+                    if seen_non_phi {
+                        return err(format!("phi %{} after non-phi in {}", i.0, blk.name));
+                    }
+                    if inst.args().len() != blk.preds.len() {
+                        return err(format!(
+                            "phi %{} arity {} != preds {} in {}",
+                            i.0,
+                            inst.args().len(),
+                            blk.preds.len(),
+                            blk.name
+                        ));
+                    }
+                }
+                _ => seen_non_phi = true,
+            }
+            if let Some(n) = inst.op.num_args() {
+                if inst.args().len() != n {
+                    return err(format!(
+                        "%{}: {} expects {} args, has {}",
+                        i.0,
+                        inst.op.mnemonic(),
+                        n,
+                        inst.args().len()
+                    ));
+                }
+            }
+        }
+        let expected_succs = match f.inst(last).op {
+            Op::Br => 1,
+            Op::CondBr => 2,
+            Op::Ret => 0,
+            _ => unreachable!(),
+        };
+        if blk.succs.len() != expected_succs {
+            return err(format!(
+                "block {}: {} succs for {:?}",
+                blk.name,
+                blk.succs.len(),
+                f.inst(last).op
+            ));
+        }
+        for &s in &blk.succs {
+            if (s.0 as usize) >= f.blocks.len() {
+                return err(format!("block {}: succ out of range", blk.name));
+            }
+            if !f.block(s).preds.contains(&bb) {
+                return err(format!(
+                    "edge {} -> {} missing in pred list",
+                    blk.name,
+                    f.block(s).name
+                ));
+            }
+        }
+        for &p in &blk.preds {
+            if !f.block(p).succs.contains(&bb) {
+                return err(format!(
+                    "pred edge {} -> {} missing in succ list",
+                    f.block(p).name,
+                    blk.name
+                ));
+            }
+        }
+    }
+
+    // no instruction appears in two blocks
+    let mut seen: HashSet<InstId> = HashSet::new();
+    for bb in f.block_ids() {
+        for &i in &f.block(bb).insts {
+            if !seen.insert(i) {
+                return err(format!("instruction %{} linked twice", i.0));
+            }
+        }
+    }
+
+    // SSA dominance: each use of Inst(v) is dominated by its definition.
+    for bb in f.block_ids() {
+        if !dt.is_reachable(bb) {
+            continue;
+        }
+        let blk = f.block(bb);
+        for (use_idx, &i) in blk.insts.iter().enumerate() {
+            let inst = f.inst(i);
+            if inst.is_nop() {
+                continue;
+            }
+            for (arg_idx, &a) in inst.args().iter().enumerate() {
+                let Value::Inst(def) = a else { continue };
+                if f.inst(def).is_nop() {
+                    return err(format!("%{}: use of deleted value %{}", i.0, def.0));
+                }
+                let Some(&(def_bb, def_idx)) = pos.get(&def) else {
+                    return err(format!("%{}: use of unplaced value %{}", i.0, def.0));
+                };
+                if inst.op == Op::Phi {
+                    // incoming value must dominate the end of the pred edge
+                    let pred = blk.preds[arg_idx];
+                    if !dt.is_reachable(pred) {
+                        continue;
+                    }
+                    if !dt.dominates(def_bb, pred) {
+                        return err(format!(
+                            "phi %{} incoming %{} does not dominate pred {}",
+                            i.0,
+                            def.0,
+                            f.block(pred).name
+                        ));
+                    }
+                } else if def_bb == bb {
+                    if def_idx >= use_idx {
+                        return err(format!("%{}: use before def of %{}", i.0, def.0));
+                    }
+                } else if !dt.dominates(def_bb, bb) {
+                    return err(format!(
+                        "%{}: def %{} in {} does not dominate use in {}",
+                        i.0,
+                        def.0,
+                        f.block(def_bb).name,
+                        f.block(bb).name
+                    ));
+                }
+            }
+            for &a in inst.args() {
+                if let Value::Arg(n) = a {
+                    if n as usize >= f.params.len() {
+                        return err(format!("%{}: arg index {} out of range", i.0, n));
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{AddrSpace, Block, BlockId, Inst, KernelBuilder, Ty};
+
+    #[test]
+    fn rejects_missing_terminator() {
+        let mut f = Function::new("bad");
+        let e = f.add_block(Block::new("entry"));
+        f.entry = e;
+        let r = verify_function(&f);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_use_before_def() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let v = b.fadd(b.fc(1.0), b.fc(2.0));
+        b.store(b.param(0), b.i(0), v);
+        let mut f = b.finish();
+        // swap the fadd after the store chain's first inst
+        let entry = BlockId(0);
+        let insts = f.block(entry).insts.clone();
+        let mut reordered = insts.clone();
+        reordered.swap(0, insts.len() - 2);
+        f.block_mut(entry).insts = reordered;
+        assert!(verify_function(&f).is_err());
+    }
+
+    #[test]
+    fn rejects_phi_arity_mismatch() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let n = b.i(4);
+        b.for_loop("i", b.i(0), n, 1, |b, iv| {
+            let v = b.load(b.param(0), iv);
+            b.store(b.param(0), iv, v);
+        });
+        let mut f = b.finish();
+        // find the phi and drop one operand
+        let phi = (0..f.insts.len())
+            .map(crate::ir::InstId::from_usize)
+            .find(|&i| f.inst(i).op == Op::Phi)
+            .unwrap();
+        f.inst_mut(phi).remove_arg(0);
+        assert!(verify_function(&f).is_err());
+    }
+
+    #[test]
+    fn accepts_wellformed_nest() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let n = b.i(4);
+        b.for_loop("i", b.i(0), n, 1, |b, i| {
+            let n2 = b.i(4);
+            b.for_loop("j", b.i(0), n2, 1, |b, j| {
+                let idx = {
+                    let t = b.mul(i, b.i(4));
+                    b.add(t, j)
+                };
+                let v = b.load(b.param(0), idx);
+                let w = b.fmul(v, b.fc(3.0));
+                b.store(b.param(0), idx, w);
+            });
+        });
+        let f = b.finish();
+        verify_function(&f).expect("clean");
+    }
+}

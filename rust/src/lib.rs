@@ -1,0 +1,38 @@
+//! # phaseord — compiler phase selection & ordering for GPU kernels
+//!
+//! A full-system reproduction of *"Improving OpenCL Performance by
+//! Specializing Compiler Phase Selection and Ordering"* (Nobre, Reis,
+//! Cardoso — 2018).
+//!
+//! The paper's testbed (LLVM 3.9 + NVIDIA OpenCL driver + GTX 1070) is
+//! rebuilt as a self-contained simulated toolchain:
+//!
+//! * [`ir`] — an SSA IR with CFG/dominators/loops (the "LLVM IR");
+//! * [`passes`] — 20+ real transformation passes with the interactions the
+//!   paper's Table 1 sequences exploit (the "opt" pass library);
+//! * [`codegen`] — a virtual-PTX backend exposing the paper's Fig. 6
+//!   observables (load address patterns, unroll, `__local_depot`);
+//! * [`sim`] — a SIMT functional executor (validation) and a GP104-like /
+//!   Fiji-like cost model (measurement);
+//! * [`bench_suite`] — all 15 PolyBench/GPU benchmarks in IR, with OpenCL-
+//!   and CUDA-flavoured variants;
+//! * [`dse`] — the paper's contribution: the phase-ordering design-space
+//!   exploration engine (random sequences, caching, validation, top-k);
+//! * [`features`] — MILEPOST-style static features, cosine k-NN suggestion
+//!   and the IterGraph comparator (the paper's §4 / Fig. 7);
+//! * [`runtime`] — PJRT loader for the JAX/Pallas golden references built
+//!   by `make artifacts` (three-layer AOT architecture);
+//! * [`coordinator`] — CLI, experiment drivers and report writers.
+
+pub mod analysis;
+pub mod bench_suite;
+pub mod codegen;
+pub mod coordinator;
+pub mod dse;
+pub mod features;
+pub mod ir;
+pub mod passes;
+pub mod proptest_lite;
+pub mod runtime;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,19 @@
+//! `repro` — leader entrypoint for the phase-ordering reproduction.
+//!
+//! Every paper table/figure is a subcommand; see `repro --help`.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match phaseord::coordinator::cli::parse_args(&argv) {
+        Ok(args) => {
+            if let Err(e) = phaseord::coordinator::cli::run(args) {
+                eprintln!("error: {e}");
+                std::process::exit(1);
+            }
+        }
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,186 @@
+//! `-adce` / `-dce` — (aggressive) dead code elimination. Both share the
+//! same engine here: remove pure/load/phi instructions whose results are
+//! never used, to a fixpoint. `adce` additionally deletes empty loops
+//! (loops whose body only advances the induction variable).
+
+use super::common::sweep_dead;
+use super::{Pass, PassError};
+use crate::ir::dom::DomTree;
+use crate::ir::loops::LoopForest;
+use crate::ir::{Function, Module, Op};
+
+pub struct Adce;
+pub struct Dce;
+
+impl Pass for Dce {
+    fn name(&self) -> &'static str {
+        "dce"
+    }
+    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
+        let mut changed = false;
+        for f in &mut m.kernels {
+            changed |= sweep_dead(f) > 0;
+        }
+        Ok(changed)
+    }
+}
+
+impl Pass for Adce {
+    fn name(&self) -> &'static str {
+        "adce"
+    }
+    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
+        let mut changed = false;
+        for f in &mut m.kernels {
+            changed |= sweep_dead(f) > 0;
+            changed |= delete_empty_loops(f);
+        }
+        Ok(changed)
+    }
+}
+
+/// Delete loops whose body computes nothing visible: no stores, no values
+/// used outside the loop. Rewires the preheader straight to the exit.
+fn delete_empty_loops(f: &mut Function) -> bool {
+    let dt = DomTree::compute(f);
+    let lf = LoopForest::compute(f, &dt);
+    let mut changed = false;
+    'outer: for li in lf.innermost_first() {
+        let l = &lf.loops[li];
+        let Some(ph) = l.preheader else { continue };
+        if l.exits.len() != 1 {
+            continue;
+        }
+        let exit = l.exits[0];
+        // all loop instructions must be free of side effects and unused
+        // outside the loop
+        let defs = super::common::loop_defs(f, l);
+        for &bb in &l.blocks {
+            for &i in &f.block(bb).insts {
+                let inst = f.inst(i);
+                if inst.is_nop() {
+                    continue;
+                }
+                if inst.op == Op::Store {
+                    continue 'outer;
+                }
+            }
+        }
+        // any use of a loop def outside the loop?
+        for bb in f.block_ids() {
+            if l.blocks.contains(&bb) {
+                continue;
+            }
+            for &i in &f.block(bb).insts {
+                for &a in f.inst(i).args() {
+                    if let crate::ir::Value::Inst(d) = a {
+                        if defs.contains(&d) {
+                            continue 'outer;
+                        }
+                    }
+                }
+            }
+        }
+        // exit must not have phis fed by the loop (it can't, given no
+        // outside uses, but keep the check cheap and explicit)
+        let exit_has_phi = f
+            .block(exit)
+            .insts
+            .iter()
+            .any(|&i| f.inst(i).op == Op::Phi);
+        if exit_has_phi {
+            continue;
+        }
+        // rewire: ph branches straight to exit; kill loop blocks
+        f.redirect_edge(ph, l.header, exit);
+        // exit loses its in-loop pred (header)
+        if let Some(pi) = f.block(exit).pred_index(l.header) {
+            f.blocks[exit.0 as usize].preds.remove(pi);
+        }
+        for &bb in &l.blocks {
+            let ids = f.block(bb).insts.clone();
+            for i in ids {
+                f.kill_inst(i);
+            }
+            f.block_mut(bb).insts.clear();
+            f.block_mut(bb).preds.clear();
+            f.block_mut(bb).succs.clear();
+        }
+        changed = true;
+        // loop structures changed; recompute on next pass run
+        break;
+    }
+    if changed {
+        // run again in case of nests
+        delete_empty_loops(f);
+    }
+    changed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::verifier::verify_function;
+    use crate::ir::{AddrSpace, KernelBuilder, Ty};
+
+    #[test]
+    fn removes_unused_chain() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let x = b.add(b.gid(0), b.i(1));
+        let _y = b.mul(x, b.i(3)); // dead
+        let _z = b.load(b.param(0), b.gid(0)); // dead load (no traps)
+        b.store(b.param(0), b.gid(0), b.fc(2.0));
+        let mut m = Module::new("t");
+        m.kernels.push(b.finish());
+        assert!(Dce.run(&mut m).unwrap());
+        let f = &m.kernels[0];
+        verify_function(f).unwrap();
+        assert!(!f.insts.iter().any(|i| i.op == Op::Mul));
+        assert!(!f.insts.iter().any(|i| i.op == Op::Load));
+    }
+
+    #[test]
+    fn keeps_stores() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        b.store(b.param(0), b.gid(0), b.fc(2.0));
+        let mut m = Module::new("t");
+        m.kernels.push(b.finish());
+        Dce.run(&mut m).unwrap();
+        assert!(m.kernels[0].insts.iter().any(|i| i.op == Op::Store));
+    }
+
+    #[test]
+    fn adce_deletes_empty_loop() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let n = b.i(100);
+        b.for_loop("i", b.i(0), n, 1, |b, iv| {
+            let _dead = b.mul(iv, iv); // pure, unused
+        });
+        b.store(b.param(0), b.gid(0), b.fc(1.0));
+        let mut m = Module::new("t");
+        m.kernels.push(b.finish());
+        assert!(Adce.run(&mut m).unwrap());
+        let f = &m.kernels[0];
+        verify_function(f).unwrap();
+        let dt = DomTree::compute(f);
+        let lf = LoopForest::compute(f, &dt);
+        assert_eq!(lf.loops.len(), 0, "loop should be deleted");
+        assert!(f.insts.iter().any(|i| i.op == Op::Store));
+    }
+
+    #[test]
+    fn adce_keeps_loop_with_store() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let n = b.i(4);
+        b.for_loop("i", b.i(0), n, 1, |b, iv| {
+            b.store(b.param(0), iv, b.fc(1.0));
+        });
+        let mut m = Module::new("t");
+        m.kernels.push(b.finish());
+        Adce.run(&mut m).unwrap();
+        let f = &m.kernels[0];
+        let dt = DomTree::compute(f);
+        let lf = LoopForest::compute(f, &dt);
+        assert_eq!(lf.loops.len(), 1);
+    }
+}

@@ -1,0 +1,183 @@
+//! Shared helpers for the pass library.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::analysis::AffineCtx;
+use crate::ir::{BlockId, Function, InstId, Loop, Op, Value};
+
+/// Set of instruction ids defined inside a loop.
+pub fn loop_defs(f: &Function, l: &Loop) -> HashSet<InstId> {
+    let mut s = HashSet::new();
+    for &bb in &l.blocks {
+        for &i in &f.block(bb).insts {
+            if !f.inst(i).is_nop() {
+                s.insert(i);
+            }
+        }
+    }
+    s
+}
+
+/// Is `v` invariant w.r.t. a loop (sound check: not defined inside it)?
+pub fn is_invariant(v: Value, defs: &HashSet<InstId>) -> bool {
+    match v {
+        Value::Inst(id) => !defs.contains(&id),
+        _ => true,
+    }
+}
+
+/// All memory instructions (loads/stores) in a loop, in block order.
+pub fn loop_memops(f: &Function, l: &Loop) -> Vec<(BlockId, InstId)> {
+    let mut out = Vec::new();
+    for &bb in &l.blocks {
+        for &i in &f.block(bb).insts {
+            if f.inst(i).op.is_memory() {
+                out.push((bb, i));
+            }
+        }
+    }
+    out
+}
+
+/// Map every instruction to its block (rebuilt per pass run; functions are
+/// small enough that this is cheap and avoids stale caches).
+pub fn block_of(f: &Function) -> HashMap<InstId, BlockId> {
+    f.inst_blocks()
+}
+
+/// Erase an instruction from its block and the arena.
+pub fn erase(f: &mut Function, bb: BlockId, id: InstId) {
+    f.remove_inst(bb, id);
+}
+
+/// Fold a pure instruction on constant operands; returns the folded value.
+pub fn const_fold(f: &Function, id: InstId) -> Option<Value> {
+    let inst = f.inst(id);
+    let a = inst.args();
+    let bi = |k: usize| a.get(k).and_then(|v| v.as_imm_i());
+    let bf = |k: usize| a.get(k).and_then(|v| v.as_imm_f());
+    Some(match inst.op {
+        Op::Add => Value::ImmI(bi(0)?.wrapping_add(bi(1)?)),
+        Op::Sub => Value::ImmI(bi(0)?.wrapping_sub(bi(1)?)),
+        Op::Mul => Value::ImmI(bi(0)?.wrapping_mul(bi(1)?)),
+        Op::SDiv => {
+            let d = bi(1)?;
+            if d == 0 {
+                return None;
+            }
+            Value::ImmI(bi(0)?.wrapping_div(d))
+        }
+        Op::SRem => {
+            let d = bi(1)?;
+            if d == 0 {
+                return None;
+            }
+            Value::ImmI(bi(0)?.wrapping_rem(d))
+        }
+        Op::Shl => Value::ImmI(bi(0)? << (bi(1)? & 63)),
+        Op::AShr => Value::ImmI(bi(0)? >> (bi(1)? & 63)),
+        Op::And => {
+            // also i1 logical and
+            Value::ImmI(bi(0)? & bi(1)?)
+        }
+        Op::Or => Value::ImmI(bi(0)? | bi(1)?),
+        Op::Xor => Value::ImmI(bi(0)? ^ bi(1)?),
+        Op::FAdd => Value::imm_f(bf(0)? + bf(1)?),
+        Op::FSub => Value::imm_f(bf(0)? - bf(1)?),
+        Op::FMul => Value::imm_f(bf(0)? * bf(1)?),
+        Op::FDiv => Value::imm_f(bf(0)? / bf(1)?),
+        Op::FSqrt => Value::imm_f(bf(0)?.sqrt()),
+        Op::FAbs => Value::imm_f(bf(0)?.abs()),
+        Op::FNeg => Value::imm_f(-bf(0)?),
+        Op::FExp => Value::imm_f(bf(0)?.exp()),
+        Op::Sext | Op::Trunc => Value::ImmI(bi(0)?),
+        Op::SiToFp => Value::imm_f(bi(0)? as f32),
+        Op::FpToSi => Value::ImmI(bf(0)? as i64),
+        Op::ICmp(p) => Value::ImmI(p.eval_i(bi(0)?, bi(1)?) as i64),
+        Op::FCmp(p) => Value::ImmI(p.eval_f(bf(0)?, bf(1)?) as i64),
+        Op::Select => {
+            let c = bi(0)?;
+            if c != 0 {
+                a[1]
+            } else {
+                a[2]
+            }
+        }
+        _ => return None,
+    })
+}
+
+/// Canonical structural key for value numbering: opcode + (canonically
+/// ordered, for commutative ops) operands.
+pub fn vn_key(f: &Function, id: InstId) -> (Op, Vec<Value>) {
+    let inst = f.inst(id);
+    let mut args: Vec<Value> = inst.args().to_vec();
+    if inst.op.is_commutative() && args.len() == 2 {
+        args.sort_by_key(|v| super::common::value_order(*v));
+    }
+    (inst.op, args)
+}
+
+/// Stable ordering key for values. Instructions rank first and constants
+/// last, matching LLVM's "complexity" canonicalization (constants on the
+/// RHS), which keeps instcombine's RHS-constant patterns applicable after
+/// reassociation.
+pub fn value_order(v: Value) -> (u8, u64) {
+    match v {
+        Value::Inst(id) => (0, id.0 as u64),
+        Value::Arg(i) => (1, i as u64),
+        Value::GlobalId(d) => (2, d as u64),
+        Value::GlobalSize(d) => (3, d as u64),
+        Value::ImmF(b) => (4, b as u64),
+        Value::ImmI(x) => (5, x as u64),
+    }
+}
+
+/// Remove instructions that are pure and unused, iterating to a fixpoint.
+/// Returns number removed. Shared by dce/adce/other cleanups.
+pub fn sweep_dead(f: &mut Function) -> usize {
+    let mut removed = 0;
+    loop {
+        // count uses
+        let mut used: HashSet<InstId> = HashSet::new();
+        for inst in f.insts.iter().filter(|i| !i.is_nop()) {
+            for &a in inst.args() {
+                if let Value::Inst(id) = a {
+                    used.insert(id);
+                }
+            }
+        }
+        let mut killed_this_round = 0;
+        for bb in f.block_ids() {
+            let dead: Vec<InstId> = f
+                .block(bb)
+                .insts
+                .iter()
+                .copied()
+                .filter(|&i| {
+                    let inst = f.inst(i);
+                    !inst.is_nop()
+                        && (inst.op.is_pure() || inst.op == Op::Phi || inst.op == Op::Load)
+                        && inst.op != Op::Alloca
+                        && !used.contains(&i)
+                })
+                .collect();
+            // note: removing unused Loads is legal (no traps in our model);
+            // Phis only when unused.
+            for i in dead {
+                f.remove_inst(bb, i);
+                killed_this_round += 1;
+            }
+        }
+        removed += killed_this_round;
+        if killed_this_round == 0 {
+            break;
+        }
+    }
+    removed
+}
+
+/// Affine context helper that passes can create per-function.
+pub fn affine_ctx(f: &Function) -> AffineCtx<'_> {
+    AffineCtx::new(f)
+}

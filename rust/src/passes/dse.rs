@@ -1,0 +1,184 @@
+//! `-dse` — dead store elimination.
+//!
+//! A store is dead if a later store must-overwrite the same location
+//! before any intervening instruction may read it. The scan is
+//! block-local (plus the straight-line successor chain).
+//!
+//! **Documented bug model #1** (DESIGN.md §5): the intervening-*load*
+//! screen uses `alias_syntactic`, the optimistic structural comparison
+//! that declares same-base accesses with different affine shapes disjoint
+//! *without range reasoning*. For symmetric index patterns
+//! (`A[j1*M+j2]` read between two writes of `A[j2*M+j1]`) the shapes
+//! differ but coincide on the diagonal `j1 == j2`, so dse can delete a
+//! store whose value was still needed. COVAR-shaped kernels (inner loop
+//! starting at `j2 = j1`) hit the diagonal; CORR-shaped ones
+//! (`j2 = j1+1`) do not. This mirrors the paper's §3.2 observation that
+//! rarely-exercised phase orders expose real miscompiles, and the
+//! Fig. 3 validation failures (e.g. GESUMMV/COVAR pairs).
+
+use super::{Pass, PassError};
+use crate::analysis::{alias, alias_syntactic, AffineCtx, AliasResult, MemLoc};
+use crate::ir::{Function, Module, Op};
+
+pub struct Dse;
+
+impl Pass for Dse {
+    fn name(&self) -> &'static str {
+        "dse"
+    }
+    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
+        let precise = m.precise_aa;
+        let mut changed = false;
+        for f in &mut m.kernels {
+            changed |= dse_function(f, precise);
+        }
+        Ok(changed)
+    }
+}
+
+fn dse_function(f: &mut Function, precise: bool) -> bool {
+    let mut changed = false;
+    for bb in f.block_ids().collect::<Vec<_>>() {
+        // walk stores; for each, scan forward in the same block
+        let ids = f.block(bb).insts.clone();
+        for (k, &id) in ids.iter().enumerate() {
+            if f.inst(id).op != Op::Store {
+                continue;
+            }
+            let loc = {
+                let ptr = f.inst(id).args()[0];
+                let mut cx = AffineCtx::new(f);
+                MemLoc::resolve(&mut cx, ptr)
+            };
+            for &later in ids.iter().skip(k + 1) {
+                let inst = *f.inst(later);
+                if inst.is_nop() {
+                    continue;
+                }
+                match inst.op {
+                    Op::Load => {
+                        let lloc = {
+                            let mut cx = AffineCtx::new(f);
+                            MemLoc::resolve(&mut cx, inst.args()[0])
+                        };
+                        // BUG MODEL #1: optimistic structural screen.
+                        if alias_syntactic(f, precise, &loc, &lloc) != AliasResult::No {
+                            break; // may be read: give up on this store
+                        }
+                    }
+                    Op::Store => {
+                        let sloc = {
+                            let mut cx = AffineCtx::new(f);
+                            MemLoc::resolve(&mut cx, inst.args()[0])
+                        };
+                        match alias(f, precise, &loc, &sloc) {
+                            AliasResult::Must => {
+                                f.remove_inst(bb, id);
+                                changed = true;
+                                break;
+                            }
+                            // an overlapping-but-not-identical write:
+                            // stop scanning
+                            AliasResult::May => break,
+                            AliasResult::No => {}
+                        }
+                    }
+                    op if op.is_terminator() => break,
+                    _ => {}
+                }
+            }
+        }
+    }
+    changed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::verifier::verify_function;
+    use crate::ir::{AddrSpace, KernelBuilder, Ty};
+
+    fn run(f: Function, precise: bool) -> Function {
+        let mut m = Module::new("t");
+        m.precise_aa = precise;
+        m.kernels.push(f);
+        Dse.run(&mut m).unwrap();
+        m.kernels.pop().unwrap()
+    }
+
+    #[test]
+    fn removes_overwritten_store() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        b.store(b.param(0), b.gid(0), b.fc(1.0));
+        b.store(b.param(0), b.gid(0), b.fc(2.0));
+        let f = run(b.finish(), false);
+        verify_function(&f).unwrap();
+        assert_eq!(f.insts.iter().filter(|i| i.op == Op::Store).count(), 1);
+    }
+
+    #[test]
+    fn keeps_store_read_in_between() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        b.store(b.param(0), b.gid(0), b.fc(1.0));
+        let v = b.load(b.param(0), b.gid(0));
+        let w = b.fadd(v, b.fc(1.0));
+        b.store(b.param(0), b.gid(0), w);
+        let f = run(b.finish(), true);
+        assert_eq!(f.insts.iter().filter(|i| i.op == Op::Store).count(), 2);
+    }
+
+    #[test]
+    fn different_buffer_load_does_not_block_with_precise_aa() {
+        let mut b = KernelBuilder::new(
+            "k",
+            &[
+                ("a", Ty::Ptr(AddrSpace::Global)),
+                ("b", Ty::Ptr(AddrSpace::Global)),
+            ],
+        );
+        b.store(b.param(0), b.gid(0), b.fc(1.0));
+        let v = b.load(b.param(1), b.gid(0)); // different buffer
+        b.store(b.param(0), b.gid(0), v);
+        let f = run(b.finish(), true);
+        assert_eq!(f.insts.iter().filter(|i| i.op == Op::Store).count(), 1);
+    }
+
+    #[test]
+    fn basic_aa_blocks_cross_buffer_dse() {
+        let mut b = KernelBuilder::new(
+            "k",
+            &[
+                ("a", Ty::Ptr(AddrSpace::Global)),
+                ("b", Ty::Ptr(AddrSpace::Global)),
+            ],
+        );
+        b.store(b.param(0), b.gid(0), b.fc(1.0));
+        let v = b.load(b.param(1), b.gid(0));
+        b.store(b.param(0), b.gid(0), v);
+        let f = run(b.finish(), false);
+        assert_eq!(f.insts.iter().filter(|i| i.op == Op::Store).count(), 2);
+    }
+
+    /// The documented unsoundness: a symmetric-index read between two
+    /// writes of the same location is screened out structurally, so the
+    /// first store is (incorrectly) deleted under precise AA.
+    #[test]
+    fn bug_model_1_symmetric_pattern_miscompiles() {
+        let m_dim = 16;
+        let mut b = KernelBuilder::new("k", &[("s", Ty::Ptr(AddrSpace::Global))]);
+        let i = b.gid(0);
+        let j = b.gid(1);
+        let t1 = b.mul(i, b.i(m_dim));
+        let ij = b.add(t1, j);
+        let t2 = b.mul(j, b.i(m_dim));
+        let ji = b.add(t2, i);
+        b.store(b.param(0), ij, b.fc(1.0));
+        let v = b.load(b.param(0), ji); // reads the diagonal when i==j
+        let w = b.fadd(v, b.fc(1.0));
+        b.store(b.param(0), ij, w);
+        let f = run(b.finish(), true);
+        // the first store was deleted — a real miscompile the validator
+        // will catch by executing the kernel
+        assert_eq!(f.insts.iter().filter(|i| i.op == Op::Store).count(), 1);
+    }
+}

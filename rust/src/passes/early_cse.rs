@@ -1,0 +1,171 @@
+//! `-early-cse` — block-local common subexpression elimination plus
+//! block-local load CSE and store-to-load forwarding.
+
+use std::collections::HashMap;
+
+use super::common::vn_key;
+use super::{Pass, PassError};
+use crate::analysis::{alias, AffineCtx, AliasResult, MemLoc};
+use crate::ir::{Function, Module, Op, Value};
+
+pub struct EarlyCse;
+
+impl Pass for EarlyCse {
+    fn name(&self) -> &'static str {
+        "early-cse"
+    }
+    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
+        let precise = m.precise_aa;
+        let mut changed = false;
+        for f in &mut m.kernels {
+            changed |= cse_function(f, precise);
+        }
+        Ok(changed)
+    }
+}
+
+fn cse_function(f: &mut Function, precise: bool) -> bool {
+    let mut changed = false;
+    for bb in f.block_ids().collect::<Vec<_>>() {
+        let mut exprs: HashMap<(Op, Vec<Value>), Value> = HashMap::new();
+        // available loads: (resolved loc, value). Invalidated by stores
+        // that may alias.
+        let mut avail: Vec<(MemLoc, Value)> = Vec::new();
+        let ids = f.block(bb).insts.clone();
+        for id in ids {
+            let inst = *f.inst(id);
+            if inst.is_nop() {
+                continue;
+            }
+            match inst.op {
+                op if op.is_pure() => {
+                    let key = vn_key(f, id);
+                    if let Some(&v) = exprs.get(&key) {
+                        f.replace_all_uses(Value::Inst(id), v);
+                        f.remove_inst(bb, id);
+                        changed = true;
+                    } else {
+                        exprs.insert(key, Value::Inst(id));
+                    }
+                }
+                Op::Load => {
+                    let loc = {
+                        let mut cx = AffineCtx::new(f);
+                        MemLoc::resolve(&mut cx, inst.args()[0])
+                    };
+                    if let Some((_, v)) = avail
+                        .iter()
+                        .find(|(l, _)| alias(f, precise, l, &loc) == AliasResult::Must)
+                    {
+                        let v = *v;
+                        f.replace_all_uses(Value::Inst(id), v);
+                        f.remove_inst(bb, id);
+                        changed = true;
+                    } else {
+                        avail.push((loc, Value::Inst(id)));
+                    }
+                }
+                Op::Store => {
+                    let loc = {
+                        let mut cx = AffineCtx::new(f);
+                        MemLoc::resolve(&mut cx, inst.args()[0])
+                    };
+                    // invalidate may-aliasing available loads, then make
+                    // the stored value available (store-to-load fwd)
+                    avail.retain(|(l, _)| alias(f, precise, l, &loc) == AliasResult::No);
+                    avail.push((loc, inst.args()[1]));
+                }
+                _ => {}
+            }
+        }
+    }
+    changed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::verifier::verify_function;
+    use crate::ir::{AddrSpace, KernelBuilder, Ty};
+
+    fn run(f: Function, precise: bool) -> Function {
+        let mut m = Module::new("t");
+        m.precise_aa = precise;
+        m.kernels.push(f);
+        EarlyCse.run(&mut m).unwrap();
+        m.kernels.pop().unwrap()
+    }
+
+    #[test]
+    fn cses_duplicate_arith() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let x1 = b.add(b.gid(0), b.i(5));
+        let x2 = b.add(b.gid(0), b.i(5));
+        let s = b.mul(x1, x2);
+        b.store(b.param(0), s, b.fc(1.0));
+        let f = run(b.finish(), false);
+        verify_function(&f).unwrap();
+        assert_eq!(f.insts.iter().filter(|i| i.op == Op::Add).count(), 1);
+    }
+
+    #[test]
+    fn cses_repeated_load() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let v1 = b.load(b.param(0), b.gid(0));
+        let v2 = b.load(b.param(0), b.gid(0));
+        let s = b.fadd(v1, v2);
+        b.store(b.param(0), b.gid(0), s);
+        let f = run(b.finish(), false);
+        verify_function(&f).unwrap();
+        assert_eq!(f.insts.iter().filter(|i| i.op == Op::Load).count(), 1);
+    }
+
+    #[test]
+    fn store_blocks_load_cse_without_precise_aa() {
+        let mut b = KernelBuilder::new(
+            "k",
+            &[
+                ("a", Ty::Ptr(AddrSpace::Global)),
+                ("b", Ty::Ptr(AddrSpace::Global)),
+            ],
+        );
+        let v1 = b.load(b.param(0), b.gid(0));
+        b.store(b.param(1), b.gid(0), v1); // may-alias a under BasicAA
+        let v2 = b.load(b.param(0), b.gid(0));
+        let s = b.fadd(v1, v2);
+        b.store(b.param(0), b.gid(0), s);
+        // BasicAA: second load survives
+        let f = run(b.finish(), false);
+        assert_eq!(f.insts.iter().filter(|i| i.op == Op::Load).count(), 2);
+    }
+
+    #[test]
+    fn precise_aa_allows_load_cse_across_store() {
+        let mut b = KernelBuilder::new(
+            "k",
+            &[
+                ("a", Ty::Ptr(AddrSpace::Global)),
+                ("b", Ty::Ptr(AddrSpace::Global)),
+            ],
+        );
+        let v1 = b.load(b.param(0), b.gid(0));
+        b.store(b.param(1), b.gid(0), v1);
+        let v2 = b.load(b.param(0), b.gid(0));
+        let s = b.fadd(v1, v2);
+        b.store(b.param(0), b.gid(0), s);
+        let f = run(b.finish(), true);
+        assert_eq!(f.insts.iter().filter(|i| i.op == Op::Load).count(), 1);
+    }
+
+    #[test]
+    fn store_to_load_forwarding() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        b.store(b.param(0), b.gid(0), b.fc(7.0));
+        let v = b.load(b.param(0), b.gid(0));
+        let w = b.fadd(v, b.fc(1.0));
+        b.store(b.param(0), b.gid(0), w);
+        let f = run(b.finish(), false);
+        verify_function(&f).unwrap();
+        assert_eq!(f.insts.iter().filter(|i| i.op == Op::Load).count(), 0);
+    }
+}

@@ -1,0 +1,234 @@
+//! `-gvn` — global value numbering over the dominator tree, with scoped
+//! load availability (block-local precision, dominator-scoped for pure
+//! expressions; load availability is carried down straight-line dominator
+//! edges and conservatively dropped at join points unless the skipped
+//! region is store-free).
+
+use std::collections::HashMap;
+
+use super::common::vn_key;
+use super::{Pass, PassError};
+use crate::analysis::{alias, AffineCtx, AliasResult, MemLoc};
+use crate::ir::dom::DomTree;
+use crate::ir::{BlockId, Function, Module, Op, Value};
+
+pub struct Gvn;
+
+impl Pass for Gvn {
+    fn name(&self) -> &'static str {
+        "gvn"
+    }
+    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
+        let precise = m.precise_aa;
+        let mut changed = false;
+        for f in &mut m.kernels {
+            changed |= gvn_function(f, precise);
+        }
+        // gvn refreshes its analyses (incl. loop info): clears the stale
+        // CFG marker that jump-threading leaves behind
+        m.cfg_dirty = false;
+        Ok(changed)
+    }
+}
+
+struct GvnCtx {
+    precise: bool,
+    changed: bool,
+    /// dom-tree children
+    children: Vec<Vec<BlockId>>,
+    dt: DomTree,
+}
+
+fn gvn_function(f: &mut Function, precise: bool) -> bool {
+    let dt = DomTree::compute(f);
+    let n = f.blocks.len();
+    let mut children: Vec<Vec<BlockId>> = vec![Vec::new(); n];
+    for b in f.block_ids() {
+        if b == f.entry {
+            continue;
+        }
+        if let Some(idom) = dt.idom[b.0 as usize] {
+            children[idom.0 as usize].push(b);
+        }
+    }
+    let mut cx = GvnCtx {
+        precise,
+        changed: false,
+        children,
+        dt,
+    };
+    let mut exprs: HashMap<(Op, Vec<Value>), Value> = HashMap::new();
+    let mut loads: Vec<(MemLoc, Value)> = Vec::new();
+    walk(f, &mut cx, f.entry, &mut exprs, &mut loads);
+    cx.changed
+}
+
+fn block_has_store(f: &Function, bb: BlockId) -> bool {
+    f.block(bb)
+        .insts
+        .iter()
+        .any(|&i| f.inst(i).op == Op::Store)
+}
+
+fn walk(
+    f: &mut Function,
+    cx: &mut GvnCtx,
+    bb: BlockId,
+    exprs: &mut HashMap<(Op, Vec<Value>), Value>,
+    loads: &mut Vec<(MemLoc, Value)>,
+) {
+    let mut local_expr_keys: Vec<(Op, Vec<Value>)> = Vec::new();
+    let ids = f.block(bb).insts.clone();
+    for id in ids {
+        let inst = *f.inst(id);
+        if inst.is_nop() {
+            continue;
+        }
+        match inst.op {
+            op if op.is_pure() => {
+                let key = vn_key(f, id);
+                if let Some(&v) = exprs.get(&key) {
+                    f.replace_all_uses(Value::Inst(id), v);
+                    f.remove_inst(bb, id);
+                    cx.changed = true;
+                } else {
+                    exprs.insert(key.clone(), Value::Inst(id));
+                    local_expr_keys.push(key);
+                }
+            }
+            Op::Load => {
+                let loc = {
+                    let mut acx = AffineCtx::new(f);
+                    MemLoc::resolve(&mut acx, inst.args()[0])
+                };
+                if let Some((_, v)) = loads
+                    .iter()
+                    .find(|(l, _)| alias(f, cx.precise, l, &loc) == AliasResult::Must)
+                {
+                    let v = *v;
+                    f.replace_all_uses(Value::Inst(id), v);
+                    f.remove_inst(bb, id);
+                    cx.changed = true;
+                } else {
+                    loads.push((loc, Value::Inst(id)));
+                }
+            }
+            Op::Store => {
+                let loc = {
+                    let mut acx = AffineCtx::new(f);
+                    MemLoc::resolve(&mut acx, inst.args()[0])
+                };
+                loads.retain(|(l, _)| alias(f, cx.precise, l, &loc) == AliasResult::No);
+                loads.push((loc, inst.args()[1]));
+            }
+            _ => {}
+        }
+    }
+
+    // recurse into dominated children with scoped state
+    let kids = cx.children[bb.0 as usize].clone();
+    for c in kids {
+        let mut child_loads: Vec<(MemLoc, Value)> = Vec::new();
+        // carry loads down only when the child is directly fed by us and
+        // is the sole way in (straight-line or branch arm); at joins, keep
+        // them only if every block that can sit in between is store-free.
+        let preds = &f.block(c).preds;
+        let direct = preds.len() == 1 && preds[0] == bb;
+        // At a join, the skipped region is everything strictly dominated
+        // by `bb` (the branch arms); loads survive only if that whole
+        // region is store-free. Sound and cheap on our small CFGs.
+        let carry = direct || !dominated_region_has_store(f, &cx.dt, bb, c);
+        if carry {
+            child_loads = loads.clone();
+        }
+        walk(f, cx, c, exprs, &mut child_loads);
+    }
+
+    // pop this block's pure expressions from the scope
+    for key in local_expr_keys {
+        exprs.remove(&key);
+    }
+}
+
+/// Does any block strictly dominated by `top` (other than `target`)
+/// contain a store? Over-approximates the blocks on paths `top → target`.
+fn dominated_region_has_store(f: &Function, dt: &DomTree, top: BlockId, target: BlockId) -> bool {
+    f.block_ids().any(|b| {
+        b != top
+            && b != target
+            && dt.is_reachable(b)
+            && dt.dominates(top, b)
+            && block_has_store(f, b)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::verifier::verify_function;
+    use crate::ir::{AddrSpace, CmpPred, KernelBuilder, Ty};
+
+    fn run(f: Function, precise: bool) -> Function {
+        let mut m = Module::new("t");
+        m.precise_aa = precise;
+        m.kernels.push(f);
+        Gvn.run(&mut m).unwrap();
+        m.kernels.pop().unwrap()
+    }
+
+    #[test]
+    fn cses_across_blocks() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let x1 = b.mul(b.gid(0), b.i(10));
+        let c = b.icmp(CmpPred::Lt, b.gid(0), b.i(4));
+        b.if_then(c, |b| {
+            let x2 = b.mul(b.gid(0), b.i(10)); // same expr, dominated block
+            let s = b.add(x2, b.i(1));
+            b.store(b.param(0), s, b.fc(1.0));
+        });
+        b.store(b.param(0), x1, b.fc(2.0));
+        let f = run(b.finish(), false);
+        verify_function(&f).unwrap();
+        assert_eq!(f.insts.iter().filter(|i| i.op == Op::Mul).count(), 1);
+    }
+
+    #[test]
+    fn load_carried_into_branch_arm() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let v1 = b.load(b.param(0), b.gid(0));
+        let c = b.fcmp(CmpPred::Gt, v1, b.fc(0.0));
+        b.if_then(c, |b| {
+            let v2 = b.load(b.param(0), b.gid(0)); // redundant in arm
+            let s = b.fadd(v2, b.fc(1.0));
+            b.store(b.param(0), b.gid(0), s);
+        });
+        let f = run(b.finish(), false);
+        verify_function(&f).unwrap();
+        assert_eq!(f.insts.iter().filter(|i| i.op == Op::Load).count(), 1);
+    }
+
+    #[test]
+    fn load_dropped_at_join_with_store_in_arm() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let v1 = b.load(b.param(0), b.gid(0));
+        let c = b.fcmp(CmpPred::Gt, v1, b.fc(0.0));
+        b.if_then(c, |b| {
+            b.store(b.param(0), b.gid(0), b.fc(9.0));
+        });
+        // after join: load must NOT be CSE'd with v1 (store in arm)
+        let v2 = b.load(b.param(0), b.gid(0));
+        let s = b.fadd(v1, v2);
+        b.store(b.param(0), b.gid(0), s);
+        let f = run(b.finish(), true);
+        verify_function(&f).unwrap();
+        assert_eq!(f.insts.iter().filter(|i| i.op == Op::Load).count(), 2);
+    }
+
+    #[test]
+    fn clears_cfg_dirty() {
+        let mut m = Module::new("t");
+        m.cfg_dirty = true;
+        Gvn.run(&mut m).unwrap();
+        assert!(!m.cfg_dirty);
+    }
+}

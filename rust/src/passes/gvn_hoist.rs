@@ -1,0 +1,144 @@
+//! `-gvn-hoist` — hoist computations common to both arms of a diamond
+//! into the branch block, shrinking both arms (and, on a GPU, the
+//! divergent region — which the cost model charges for).
+
+use super::common::vn_key;
+use super::{Pass, PassError};
+use crate::ir::{Function, InstId, Module, Value};
+
+pub struct GvnHoist;
+
+impl Pass for GvnHoist {
+    fn name(&self) -> &'static str {
+        "gvn-hoist"
+    }
+    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
+        let mut changed = false;
+        for f in &mut m.kernels {
+            changed |= hoist_function(f);
+        }
+        Ok(changed)
+    }
+}
+
+fn hoist_function(f: &mut Function) -> bool {
+    let mut changed = false;
+    for bb in f.block_ids().collect::<Vec<_>>() {
+        let succs = f.block(bb).succs.clone();
+        if succs.len() != 2 || succs[0] == succs[1] {
+            continue;
+        }
+        let (t, e) = (succs[0], succs[1]);
+        // simple diamond arms: single-pred arms only
+        if f.block(t).preds.len() != 1 || f.block(e).preds.len() != 1 {
+            continue;
+        }
+        loop {
+            let mut pair: Option<(InstId, InstId)> = None;
+            'outer: for &it in &f.block(t).insts {
+                let i1 = f.inst(it);
+                if i1.is_nop() || !i1.op.is_pure() {
+                    continue;
+                }
+                // operands must dominate the branch block: defined outside
+                // the arm
+                let arm_ok = i1.args().iter().all(|&a| match a {
+                    Value::Inst(d) => !f.block(t).insts.contains(&d),
+                    _ => true,
+                });
+                if !arm_ok {
+                    continue;
+                }
+                let k1 = vn_key(f, it);
+                for &ie in &f.block(e).insts {
+                    let i2 = f.inst(ie);
+                    if i2.is_nop() || i2.op != i1.op {
+                        continue;
+                    }
+                    if vn_key(f, ie) == k1 {
+                        pair = Some((it, ie));
+                        break 'outer;
+                    }
+                }
+            }
+            let Some((it, ie)) = pair else { break };
+            // move `it` to end of bb (before terminator); rewire `ie`
+            f.block_mut(t).insts.retain(|&x| x != it);
+            let pos = f.block(bb).insts.len().saturating_sub(1);
+            f.block_mut(bb).insts.insert(pos, it);
+            f.replace_all_uses(Value::Inst(ie), Value::Inst(it));
+            f.remove_inst(e, ie);
+            changed = true;
+        }
+    }
+    changed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::verifier::verify_function;
+    use crate::ir::{AddrSpace, CmpPred, KernelBuilder, Op, Ty};
+
+    #[test]
+    fn hoists_common_expression() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let c = b.icmp(CmpPred::Lt, b.gid(0), b.i(4));
+        let v = b.if_then_else_val(
+            c,
+            |b| {
+                let x = b.mul(b.gid(0), b.i(10));
+                let y = b.add(x, b.i(1));
+                let yf = b.sitofp(y);
+                yf
+            },
+            |b| {
+                let x = b.mul(b.gid(0), b.i(10));
+                let y = b.add(x, b.i(2));
+                let yf = b.sitofp(y);
+                yf
+            },
+        );
+        b.store(b.param(0), b.gid(0), v);
+        let mut m = Module::new("t");
+        m.kernels.push(b.finish());
+        assert!(GvnHoist.run(&mut m).unwrap());
+        let f = &m.kernels[0];
+        verify_function(f).unwrap();
+        // only one mul left, and it lives in the branch block (entry)
+        assert_eq!(f.insts.iter().filter(|i| i.op == Op::Mul && !i.is_nop()).count(), 1);
+        let entry_has_mul = f
+            .block(f.entry)
+            .insts
+            .iter()
+            .any(|&i| f.inst(i).op == Op::Mul);
+        assert!(entry_has_mul);
+    }
+
+    #[test]
+    fn arm_local_dependency_blocks_hoist() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let c = b.icmp(CmpPred::Lt, b.gid(0), b.i(4));
+        let v = b.if_then_else_val(
+            c,
+            |b| {
+                let x = b.add(b.gid(0), b.i(7));
+                let y = b.mul(x, x); // depends on arm-local x
+                b.sitofp(y)
+            },
+            |b| {
+                let x = b.add(b.gid(0), b.i(9));
+                let y = b.mul(x, x);
+                b.sitofp(y)
+            },
+        );
+        b.store(b.param(0), b.gid(0), v);
+        let mut m = Module::new("t");
+        m.kernels.push(b.finish());
+        GvnHoist.run(&mut m).unwrap();
+        let f = &m.kernels[0];
+        verify_function(f).unwrap();
+        // muls differ through their (different) operands — both remain
+        assert_eq!(f.insts.iter().filter(|i| i.op == Op::Mul && !i.is_nop()).count(), 2);
+    }
+}

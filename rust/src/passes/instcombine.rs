@@ -1,0 +1,282 @@
+//! `-instcombine` — peephole algebraic simplification and constant
+//! folding. Also canonicalizes `mul x, 2^k` to `shl` and collapses
+//! constant `ptradd` chains (shrinking the Fig. 6 address patterns).
+
+use super::common::const_fold;
+use super::{Pass, PassError};
+use crate::ir::{Function, Module, Op, Value};
+
+pub struct InstCombine;
+
+impl Pass for InstCombine {
+    fn name(&self) -> &'static str {
+        "instcombine"
+    }
+    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
+        let mut changed = false;
+        for f in &mut m.kernels {
+            changed |= combine_function(f);
+        }
+        Ok(changed)
+    }
+}
+
+fn combine_function(f: &mut Function) -> bool {
+    let mut changed = false;
+    loop {
+        let mut round = false;
+        for bb in f.block_ids().collect::<Vec<_>>() {
+            let ids = f.block(bb).insts.clone();
+            for id in ids {
+                if f.inst(id).is_nop() {
+                    continue;
+                }
+                // full constant fold
+                if let Some(v) = const_fold(f, id) {
+                    f.replace_all_uses(Value::Inst(id), v);
+                    f.remove_inst(bb, id);
+                    round = true;
+                    continue;
+                }
+                if let Some(v) = simplify(f, id) {
+                    f.replace_all_uses(Value::Inst(id), v);
+                    f.remove_inst(bb, id);
+                    round = true;
+                    continue;
+                }
+                if rewrite_in_place(f, id) {
+                    round = true;
+                }
+            }
+        }
+        changed |= round;
+        if !round {
+            break;
+        }
+    }
+    changed
+}
+
+/// Identity simplifications that replace the instruction with an operand.
+fn simplify(f: &Function, id: crate::ir::InstId) -> Option<Value> {
+    let inst = f.inst(id);
+    let a = inst.args();
+    let imm = |k: usize| a.get(k).and_then(|v| v.as_imm_i());
+    let immf = |k: usize| a.get(k).and_then(|v| v.as_imm_f());
+    match inst.op {
+        Op::Add | Op::Or | Op::Xor => {
+            if imm(1) == Some(0) {
+                return Some(a[0]);
+            }
+            if inst.op == Op::Add && imm(0) == Some(0) {
+                return Some(a[1]);
+            }
+            None
+        }
+        Op::Sub => {
+            if imm(1) == Some(0) {
+                return Some(a[0]);
+            }
+            if a[0] == a[1] {
+                return Some(Value::ImmI(0));
+            }
+            None
+        }
+        Op::Mul => {
+            if imm(1) == Some(1) {
+                return Some(a[0]);
+            }
+            if imm(0) == Some(1) {
+                return Some(a[1]);
+            }
+            if imm(1) == Some(0) || imm(0) == Some(0) {
+                return Some(Value::ImmI(0));
+            }
+            None
+        }
+        Op::Shl | Op::AShr => {
+            if imm(1) == Some(0) {
+                return Some(a[0]);
+            }
+            None
+        }
+        Op::And => {
+            if a[0] == a[1] {
+                return Some(a[0]);
+            }
+            if imm(1) == Some(0) || imm(0) == Some(0) {
+                return Some(Value::ImmI(0));
+            }
+            None
+        }
+        // safe FP identities only (x*1.0, x+0.0 with +0); matches LLVM's
+        // default (no fast-math) behaviour closely enough for this suite
+        Op::FMul => {
+            if immf(1) == Some(1.0) {
+                return Some(a[0]);
+            }
+            if immf(0) == Some(1.0) {
+                return Some(a[1]);
+            }
+            None
+        }
+        Op::FAdd => {
+            if immf(1) == Some(0.0) {
+                return Some(a[0]);
+            }
+            if immf(0) == Some(0.0) {
+                return Some(a[1]);
+            }
+            None
+        }
+        Op::Select => {
+            if a[1] == a[2] {
+                return Some(a[1]);
+            }
+            match a[0].as_imm_i() {
+                Some(0) => Some(a[2]),
+                Some(_) => Some(a[1]),
+                None => None,
+            }
+        }
+        Op::PtrAdd => {
+            if imm(1) == Some(0) {
+                return Some(a[0]);
+            }
+            None
+        }
+        _ => None,
+    }
+}
+
+/// Rewrites that mutate the instruction in place.
+fn rewrite_in_place(f: &mut Function, id: crate::ir::InstId) -> bool {
+    let inst = *f.inst(id);
+    let a = inst.args();
+    match inst.op {
+        // mul x, 2^k  ->  shl x, k  (canonical PTX-friendly form)
+        Op::Mul => {
+            if let Some(c) = a[1].as_imm_i() {
+                if c > 1 && (c & (c - 1)) == 0 {
+                    let k = c.trailing_zeros() as i64;
+                    let ni = f.inst_mut(id);
+                    ni.op = Op::Shl;
+                    ni.set_args(&[a[0], Value::ImmI(k)]);
+                    return true;
+                }
+            }
+            false
+        }
+        // ptradd(ptradd(p, c1), c2) -> ptradd(p, c1+c2) for const chains
+        Op::PtrAdd => {
+            if let (Value::Inst(base_id), Some(c2)) = (a[0], a[1].as_imm_i()) {
+                let base = *f.inst(base_id);
+                if base.op == Op::PtrAdd {
+                    if let Some(c1) = base.args()[1].as_imm_i() {
+                        let root = base.args()[0];
+                        f.inst_mut(id).set_args(&[root, Value::ImmI(c1 + c2)]);
+                        return true;
+                    }
+                }
+            }
+            false
+        }
+        // add(add(x, c1), c2) -> add(x, c1+c2)
+        Op::Add => {
+            if let (Value::Inst(inner_id), Some(c2)) = (a[0], a[1].as_imm_i()) {
+                let inner = *f.inst(inner_id);
+                if inner.op == Op::Add {
+                    if let Some(c1) = inner.args()[1].as_imm_i() {
+                        let x = inner.args()[0];
+                        f.inst_mut(id).set_args(&[x, Value::ImmI(c1 + c2)]);
+                        return true;
+                    }
+                }
+            }
+            false
+        }
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::verifier::verify_function;
+    use crate::ir::{AddrSpace, KernelBuilder, Ty};
+
+    fn run_on(f: crate::ir::Function) -> crate::ir::Function {
+        let mut m = Module::new("t");
+        m.kernels.push(f);
+        InstCombine.run(&mut m).unwrap();
+        m.kernels.pop().unwrap()
+    }
+
+    #[test]
+    fn folds_constants() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let x = b.add(b.i(3), b.i(4)); // 7
+        let y = b.mul(x, b.i(2)); // 14
+        let z = b.add(b.gid(0), y);
+        b.store(b.param(0), z, b.fc(1.0));
+        let f = run_on(b.finish());
+        verify_function(&f).unwrap();
+        // the add/mul on constants must be gone
+        let n_arith = f
+            .insts
+            .iter()
+            .filter(|i| matches!(i.op, Op::Mul))
+            .count();
+        assert_eq!(n_arith, 0);
+    }
+
+    #[test]
+    fn strength_reduces_mul_pow2() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let x = b.mul(b.gid(0), b.i(8));
+        b.store(b.param(0), x, b.fc(1.0));
+        let f = run_on(b.finish());
+        assert!(f.insts.iter().any(|i| i.op == Op::Shl && i.args()[1] == Value::ImmI(3)));
+        assert!(!f.insts.iter().any(|i| i.op == Op::Mul));
+    }
+
+    #[test]
+    fn removes_identities() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let x = b.add(b.gid(0), b.i(0));
+        let l = b.load(b.param(0), x);
+        let y = b.fmul(b.fc(1.0), l);
+        b.store(b.param(0), x, y);
+        let f = run_on(b.finish());
+        verify_function(&f).unwrap();
+        assert!(!f.insts.iter().any(|i| i.op == Op::FMul));
+        assert!(!f.insts.iter().any(|i| i.op == Op::Add && !i.is_nop()));
+    }
+
+    #[test]
+    fn collapses_ptradd_chain() {
+        use crate::ir::{Inst, Value};
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let entry = b.cur_block();
+        let p1 = b.f.insert_inst(
+            entry,
+            Inst::new(Op::PtrAdd, Ty::Ptr(AddrSpace::Global), &[Value::Arg(0), Value::ImmI(8)]),
+        );
+        let p2 = b.f.insert_inst(
+            entry,
+            Inst::new(
+                Op::PtrAdd,
+                Ty::Ptr(AddrSpace::Global),
+                &[Value::Inst(p1), Value::ImmI(4)],
+            ),
+        );
+        b.f.insert_inst(
+            entry,
+            Inst::new(Op::Load, Ty::F32, &[Value::Inst(p2)]),
+        );
+        let f = run_on(b.finish());
+        let p2i = f.inst(p2);
+        assert_eq!(p2i.args()[0], Value::Arg(0));
+        assert_eq!(p2i.args()[1], Value::ImmI(12));
+    }
+}

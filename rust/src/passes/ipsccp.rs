@@ -1,0 +1,200 @@
+//! `-ipsccp` / `-sccp` — (interprocedural) sparse conditional constant
+//! propagation: constant-fold, resolve conditional branches on constants,
+//! and delete the unreachable arms. On single-kernel OpenCL modules the
+//! interprocedural part degenerates to the intraprocedural one; both
+//! names are registered (both exist in LLVM's pass list and appear in
+//! random sequences).
+
+use super::common::const_fold;
+use super::{Pass, PassError};
+use crate::ir::dom::DomTree;
+use crate::ir::{Function, Module, Op, Value};
+
+pub struct Ipsccp;
+pub struct Sccp;
+
+impl Pass for Ipsccp {
+    fn name(&self) -> &'static str {
+        "ipsccp"
+    }
+    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
+        run_sccp(m)
+    }
+}
+
+impl Pass for Sccp {
+    fn name(&self) -> &'static str {
+        "sccp"
+    }
+    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
+        run_sccp(m)
+    }
+}
+
+fn run_sccp(m: &mut Module) -> Result<bool, PassError> {
+    let mut changed = false;
+    for f in &mut m.kernels {
+        changed |= sccp_function(f);
+    }
+    Ok(changed)
+}
+
+fn sccp_function(f: &mut Function) -> bool {
+    let mut changed = false;
+    // 1) constant folding to fixpoint
+    loop {
+        let mut round = false;
+        for bb in f.block_ids().collect::<Vec<_>>() {
+            let ids = f.block(bb).insts.clone();
+            for id in ids {
+                if f.inst(id).is_nop() {
+                    continue;
+                }
+                if let Some(v) = const_fold(f, id) {
+                    f.replace_all_uses(Value::Inst(id), v);
+                    f.remove_inst(bb, id);
+                    round = true;
+                }
+            }
+        }
+        changed |= round;
+        if !round {
+            break;
+        }
+    }
+    // 2) resolve condbr on constants
+    for bb in f.block_ids().collect::<Vec<_>>() {
+        let Some(term) = f.terminator(bb) else { continue };
+        let inst = *f.inst(term);
+        if inst.op != Op::CondBr {
+            continue;
+        }
+        let Some(c) = inst.args()[0].as_imm_i() else {
+            continue;
+        };
+        let (taken, dead) = if c != 0 {
+            (f.block(bb).succs[0], f.block(bb).succs[1])
+        } else {
+            (f.block(bb).succs[1], f.block(bb).succs[0])
+        };
+        if taken == dead {
+            continue;
+        }
+        // rewrite terminator to unconditional br
+        {
+            let t = f.inst_mut(term);
+            t.op = Op::Br;
+            t.set_args(&[]);
+        }
+        f.block_mut(bb).succs = vec![taken];
+        // drop the dead edge (fixes dead block's preds + phis)
+        if let Some(pi) = f.block(dead).pred_index(bb) {
+            f.blocks[dead.0 as usize].preds.remove(pi);
+            let phis: Vec<_> = f
+                .block(dead)
+                .insts
+                .iter()
+                .copied()
+                .filter(|&i| f.inst(i).op == Op::Phi)
+                .collect();
+            for p in phis {
+                f.inst_mut(p).remove_arg(pi);
+            }
+        }
+        changed = true;
+    }
+    // 3) prune now-unreachable blocks (keep phi arities consistent)
+    changed |= prune_unreachable(f);
+    changed
+}
+
+/// Remove CFG edges out of unreachable blocks and clear their bodies.
+pub fn prune_unreachable(f: &mut Function) -> bool {
+    let dt = DomTree::compute(f);
+    let mut changed = false;
+    for bb in f.block_ids().collect::<Vec<_>>() {
+        if dt.is_reachable(bb) || f.block(bb).insts.is_empty() && f.block(bb).succs.is_empty() {
+            continue;
+        }
+        // drop this block's outgoing edges (fix succs' phis)
+        let succs = f.block(bb).succs.clone();
+        for s in succs {
+            if let Some(pi) = f.block(s).pred_index(bb) {
+                f.blocks[s.0 as usize].preds.remove(pi);
+                let phis: Vec<_> = f
+                    .block(s)
+                    .insts
+                    .iter()
+                    .copied()
+                    .filter(|&i| f.inst(i).op == Op::Phi)
+                    .collect();
+                for p in phis {
+                    f.inst_mut(p).remove_arg(pi);
+                }
+            }
+        }
+        let ids = f.block(bb).insts.clone();
+        for i in ids {
+            f.kill_inst(i);
+        }
+        f.block_mut(bb).insts.clear();
+        f.block_mut(bb).succs.clear();
+        f.block_mut(bb).preds.clear();
+        changed = true;
+    }
+    // single-operand phis left behind by edge removal become copies
+    for bb in f.block_ids().collect::<Vec<_>>() {
+        let phis: Vec<_> = f
+            .block(bb)
+            .insts
+            .iter()
+            .copied()
+            .filter(|&i| f.inst(i).op == Op::Phi && f.inst(i).args().len() == 1)
+            .collect();
+        for p in phis {
+            let v = f.inst(p).args()[0];
+            f.replace_all_uses(Value::Inst(p), v);
+            f.remove_inst(bb, p);
+            changed = true;
+        }
+    }
+    changed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::verifier::verify_function;
+    use crate::ir::{AddrSpace, CmpPred, KernelBuilder, Ty};
+
+    #[test]
+    fn folds_constant_branch_and_prunes() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let c = b.icmp(CmpPred::Lt, b.i(3), b.i(5)); // constant true
+        let v = b.if_then_else_val(c, |b| b.fc(1.0), |b| b.fc(2.0));
+        b.store(b.param(0), b.gid(0), v);
+        let mut m = Module::new("t");
+        m.kernels.push(b.finish());
+        assert!(Ipsccp.run(&mut m).unwrap());
+        let f = &m.kernels[0];
+        verify_function(f).unwrap();
+        // the phi collapsed to the constant-true arm
+        let store = f.insts.iter().find(|i| i.op == Op::Store).unwrap();
+        assert_eq!(store.args()[1], Value::imm_f(1.0));
+    }
+
+    #[test]
+    fn keeps_dynamic_branches() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let c = b.icmp(CmpPred::Lt, b.gid(0), b.i(5));
+        b.if_then(c, |b| {
+            b.store(b.param(0), b.gid(0), b.fc(1.0));
+        });
+        let mut m = Module::new("t");
+        m.kernels.push(b.finish());
+        Ipsccp.run(&mut m).unwrap();
+        let f = &m.kernels[0];
+        verify_function(f).unwrap();
+        assert!(f.insts.iter().any(|i| i.op == Op::CondBr));
+    }
+}

@@ -1,0 +1,163 @@
+//! `-jump-threading` — fold a conditional branch whose condition is the
+//! *same SSA value* as the condition of a dominating branch, when the
+//! block is only reachable through one arm of that dominating branch
+//! (so the condition's outcome is known). Restructures the CFG without
+//! refreshing loop analyses: sets `cfg_dirty`, arming the unswitch
+//! staleness model (#2) until a loop pass recomputes.
+
+use super::{Pass, PassError};
+use crate::ir::dom::DomTree;
+use crate::ir::{BlockId, Function, Module, Op};
+
+pub struct JumpThreading;
+
+impl Pass for JumpThreading {
+    fn name(&self) -> &'static str {
+        "jump-threading"
+    }
+    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
+        let mut changed = false;
+        for f in &mut m.kernels {
+            changed |= thread_function(f);
+        }
+        if changed {
+            m.cfg_dirty = true;
+        }
+        Ok(changed)
+    }
+}
+
+fn thread_function(f: &mut Function) -> bool {
+    let mut changed = false;
+    loop {
+        let Some((bb, known_true)) = find_threadable(f) else {
+            break;
+        };
+        let term = f.terminator(bb).unwrap();
+        let succs = f.block(bb).succs.clone();
+        let (taken, dead) = if known_true {
+            (succs[0], succs[1])
+        } else {
+            (succs[1], succs[0])
+        };
+        {
+            let t = f.inst_mut(term);
+            t.op = Op::Br;
+            t.set_args(&[]);
+        }
+        f.block_mut(bb).succs = vec![taken];
+        if let Some(pi) = f.block(dead).pred_index(bb) {
+            f.blocks[dead.0 as usize].preds.remove(pi);
+            let phis: Vec<_> = f
+                .block(dead)
+                .insts
+                .iter()
+                .copied()
+                .filter(|&i| f.inst(i).op == Op::Phi)
+                .collect();
+            for p in phis {
+                f.inst_mut(p).remove_arg(pi);
+            }
+        }
+        super::ipsccp::prune_unreachable(f);
+        changed = true;
+    }
+    changed
+}
+
+/// Find a block ending in `condbr c` where `c`'s value is decided by a
+/// dominating branch on the same SSA value, reached through a unique
+/// single-pred chain.
+fn find_threadable(f: &Function) -> Option<(BlockId, bool)> {
+    let dt = DomTree::compute(f);
+    for bb in f.block_ids() {
+        if !dt.is_reachable(bb) {
+            continue;
+        }
+        let Some(term) = f.terminator(bb) else { continue };
+        if f.inst(term).op != Op::CondBr {
+            continue;
+        }
+        let cond = f.inst(term).args()[0];
+        // walk the unique single-pred chain upwards
+        let mut cur = bb;
+        loop {
+            let preds = &f.block(cur).preds;
+            if preds.len() != 1 {
+                break;
+            }
+            let p = preds[0];
+            let Some(pterm) = f.terminator(p) else { break };
+            let pinst = f.inst(pterm);
+            if pinst.op == Op::CondBr && pinst.args()[0] == cond {
+                // which arm leads to `cur`?
+                let psuccs = &f.block(p).succs;
+                if psuccs[0] == cur && psuccs[1] != cur {
+                    return Some((bb, true));
+                }
+                if psuccs[1] == cur && psuccs[0] != cur {
+                    return Some((bb, false));
+                }
+                break;
+            }
+            // chains only through trivial forwarding blocks
+            if pinst.op != Op::Br && pinst.op != Op::CondBr {
+                break;
+            }
+            if pinst.op == Op::CondBr {
+                break; // different condition: outcome unknown
+            }
+            cur = p;
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::verifier::verify_function;
+    use crate::ir::{AddrSpace, CmpPred, KernelBuilder, Ty};
+
+    #[test]
+    fn threads_redundant_recheck() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let c = b.icmp(CmpPred::Lt, b.gid(0), b.i(4));
+        b.if_then(c, |b| {
+            // same SSA condition re-checked inside the taken arm
+            b.if_then(c, |b| {
+                b.store(b.param(0), b.gid(0), b.fc(1.0));
+            });
+        });
+        let mut m = Module::new("t");
+        m.kernels.push(b.finish());
+        let before = m.kernels[0]
+            .insts
+            .iter()
+            .filter(|i| i.op == Op::CondBr)
+            .count();
+        assert_eq!(before, 2);
+        assert!(JumpThreading.run(&mut m).unwrap());
+        assert!(m.cfg_dirty);
+        let f = &m.kernels[0];
+        verify_function(f).unwrap();
+        let after = f.insts.iter().filter(|i| i.op == Op::CondBr && !i.is_nop()).count();
+        assert_eq!(after, 1, "inner recheck folded away");
+        assert!(f.insts.iter().any(|i| i.op == Op::Store), "store survives");
+    }
+
+    #[test]
+    fn different_conditions_untouched() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let c1 = b.icmp(CmpPred::Lt, b.gid(0), b.i(4));
+        b.if_then(c1, |b| {
+            let c2 = b.icmp(CmpPred::Lt, b.gid(1), b.i(4));
+            b.if_then(c2, |b| {
+                b.store(b.param(0), b.gid(0), b.fc(1.0));
+            });
+        });
+        let mut m = Module::new("t");
+        m.kernels.push(b.finish());
+        assert!(!JumpThreading.run(&mut m).unwrap());
+    }
+}

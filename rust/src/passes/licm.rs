@@ -1,0 +1,464 @@
+//! `-licm` — loop-invariant code motion + scalar promotion.
+//!
+//! Two phases per loop (innermost-first):
+//!
+//! 1. **Hoist**: pure instructions whose operands are loop-invariant move
+//!    to the preheader (this drags whole address chains out of loops),
+//!    plus invariant loads when no store in the loop may alias them.
+//! 2. **Scalar promotion** (the paper's §3.4 headline transformation):
+//!    a store to a loop-invariant address, re-read/re-written every
+//!    iteration, becomes a register accumulator — a phi threaded through
+//!    the loop with one load in the preheader and one store in the exit.
+//!    PolyBench kernels accumulate through memory (`c[i*nj+j] += …` inside
+//!    the k-loop), so this removes a global load *and* store per iteration.
+//!
+//! Promotion needs alias precision: the loop body also reads other
+//! buffers (`a`, `b`), and only the cfl-anders-aa summary can tell those
+//! cannot overlap `c` (OpenCL 2.0 no-race argument). Under BasicAA the
+//! candidate set always has a `May` blocker — which is exactly why the
+//! standard -O levels leave these kernels unoptimized (§3.1).
+
+
+use super::common::{is_invariant, loop_defs};
+use super::{Pass, PassError};
+use crate::analysis::{alias, AffineCtx, AliasResult, MemLoc};
+use crate::ir::dom::DomTree;
+use crate::ir::loops::LoopForest;
+use crate::ir::{BlockId, Function, Inst, InstId, Module, Op, Ty, Value};
+
+pub struct Licm;
+
+impl Pass for Licm {
+    fn name(&self) -> &'static str {
+        "licm"
+    }
+    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
+        let precise = m.precise_aa;
+        let mut changed = false;
+        for f in &mut m.kernels {
+            changed |= licm_function(f, precise);
+        }
+        // licm recomputes loop analyses: clears jump-threading staleness
+        m.cfg_dirty = false;
+        Ok(changed)
+    }
+}
+
+/// MachineLICM-equivalent used by the backend (`codegen::emit`): hoists
+/// *pure* loop-invariant computations only (never loads/stores — memory
+/// promotion needs alias information the machine layer doesn't have).
+pub fn machine_hoist(f: &mut Function) -> bool {
+    let mut changed = false;
+    for _ in 0..4 {
+        let dt = DomTree::compute(f);
+        let lf = LoopForest::compute(f, &dt);
+        let mut round = false;
+        for li in lf.innermost_first() {
+            round |= hoist_loop_inner(f, &dt, &lf, li, false, false);
+        }
+        changed |= round;
+        if !round {
+            break;
+        }
+    }
+    changed
+}
+
+fn licm_function(f: &mut Function, precise: bool) -> bool {
+    let mut changed = false;
+    // iterate until stable: hoisting in inner loops can expose outer ones
+    for _ in 0..4 {
+        let dt = DomTree::compute(f);
+        let lf = LoopForest::compute(f, &dt);
+        let mut round = false;
+        for li in lf.innermost_first() {
+            round |= hoist_loop(f, &dt, &lf, li, precise);
+            round |= promote_loop(f, &dt, &lf, li, precise);
+        }
+        changed |= round;
+        if !round {
+            break;
+        }
+    }
+    changed
+}
+
+fn hoist_loop(f: &mut Function, dt: &DomTree, lf: &LoopForest, li: usize, precise: bool) -> bool {
+    hoist_loop_inner(f, dt, lf, li, precise, true)
+}
+
+fn hoist_loop_inner(
+    f: &mut Function,
+    _dt: &DomTree,
+    lf: &LoopForest,
+    li: usize,
+    precise: bool,
+    hoist_loads: bool,
+) -> bool {
+    let l = &lf.loops[li];
+    let Some(ph) = l.preheader else { return false };
+    let mut defs = loop_defs(f, l);
+    let mut changed = false;
+
+    // collect in-loop stores once for load hoisting checks
+    let store_locs: Vec<MemLoc> = {
+        let mut v = Vec::new();
+        for &bb in &l.blocks {
+            for &i in &f.block(bb).insts {
+                if f.inst(i).op == Op::Store {
+                    let ptr = f.inst(i).args()[0];
+                    let mut cx = AffineCtx::new(f);
+                    v.push(MemLoc::resolve(&mut cx, ptr));
+                }
+            }
+        }
+        v
+    };
+    let loop_has_store = !store_locs.is_empty();
+
+    loop {
+        let mut moved_this_round = false;
+        for &bb in &l.blocks {
+            let ids = f.block(bb).insts.clone();
+            for id in ids {
+                let inst = *f.inst(id);
+                if inst.is_nop() {
+                    continue;
+                }
+                let movable_pure = inst.op.is_pure()
+                    // division can trap on 0: don't speculate
+                    && !matches!(inst.op, Op::SDiv | Op::SRem | Op::FDiv)
+                    && inst.args().iter().all(|&a| is_invariant(a, &defs));
+                let movable_load = hoist_loads
+                    && inst.op == Op::Load
+                    && inst.args().iter().all(|&a| is_invariant(a, &defs))
+                    && (!loop_has_store || {
+                        let loc = {
+                            let mut cx = AffineCtx::new(f);
+                            MemLoc::resolve(&mut cx, inst.args()[0])
+                        };
+                        store_locs
+                            .iter()
+                            .all(|s| alias(f, precise, s, &loc) == AliasResult::No)
+                    });
+                if movable_pure || movable_load {
+                    // unlink from current block, append to preheader
+                    f.block_mut(bb).insts.retain(|&x| x != id);
+                    let pos = f.block(ph).insts.len().saturating_sub(1);
+                    f.block_mut(ph).insts.insert(pos, id);
+                    defs.remove(&id);
+                    moved_this_round = true;
+                    changed = true;
+                }
+            }
+        }
+        if !moved_this_round {
+            break;
+        }
+    }
+    changed
+}
+
+/// Scalar promotion of a loop-carried memory accumulator.
+fn promote_loop(f: &mut Function, dt: &DomTree, lf: &LoopForest, li: usize, precise: bool) -> bool {
+    let l = lf.loops[li].clone();
+    let Some(ph) = l.preheader else { return false };
+    if l.latches.len() != 1 || l.exits.len() != 1 {
+        return false;
+    }
+    let latch = l.latches[0];
+    let exit = l.exits[0];
+    // exit must be exclusively owned by this loop (single pred, in-loop)
+    if f.block(exit).preds.len() != 1 || !l.blocks.contains(&f.block(exit).preds[0]) {
+        return false;
+    }
+    let defs = loop_defs(f, &l);
+
+    // gather memory ops
+    let mut memops: Vec<(BlockId, InstId)> = Vec::new();
+    for &bb in &l.blocks {
+        for &i in &f.block(bb).insts {
+            if f.inst(i).op.is_memory() {
+                memops.push((bb, i));
+            }
+        }
+    }
+
+    // candidate stores: invariant address defined outside the loop
+    let cand: Vec<(BlockId, InstId)> = memops
+        .iter()
+        .copied()
+        .filter(|&(_, i)| {
+            let inst = f.inst(i);
+            inst.op == Op::Store && is_invariant(inst.args()[0], &defs)
+        })
+        .collect();
+
+    'cands: for (sb, sid) in cand {
+        let addr = f.inst(sid).args()[0];
+        let loc = {
+            let mut cx = AffineCtx::new(f);
+            MemLoc::resolve(&mut cx, addr)
+        };
+        // classify every memory op: Must => part of promotion set (and has
+        // to sit in the same block sb); anything else must be NoAlias.
+        let mut set: Vec<InstId> = Vec::new();
+        for &(mb, mi) in &memops {
+            let mloc = {
+                let ptr = f.inst(mi).args()[0];
+                let mut cx = AffineCtx::new(f);
+                MemLoc::resolve(&mut cx, ptr)
+            };
+            match alias(f, precise, &loc, &mloc) {
+                AliasResult::Must => {
+                    if mb != sb {
+                        continue 'cands;
+                    }
+                    set.push(mi);
+                }
+                AliasResult::No => {}
+                AliasResult::May => continue 'cands,
+            }
+        }
+        // store must execute every iteration
+        if !dt.dominates(sb, latch) {
+            continue;
+        }
+        // build: preheader load
+        let v0 = f.add_inst(Inst::new(Op::Load, Ty::F32, &[addr]));
+        let pos = f.block(ph).insts.len().saturating_sub(1);
+        f.block_mut(ph).insts.insert(pos, v0);
+
+        // header phi, positional by pred order
+        let header = l.header;
+        let ph_idx = f.block(header).pred_index(ph).expect("preheader edge");
+        let mut phi_args = [Value::ImmI(0), Value::ImmI(0)];
+        phi_args[ph_idx] = Value::Inst(v0);
+        // placeholder for latch side, patched below
+        let phi = f.add_inst(Inst::new(Op::Phi, Ty::F32, &[phi_args[0], phi_args[1]]));
+        f.block_mut(header).insts.insert(0, phi);
+
+        // rewrite the promotion block in order
+        let mut cur = Value::Inst(phi);
+        let ids = f.block(sb).insts.clone();
+        for id in ids {
+            if !set.contains(&id) {
+                continue;
+            }
+            let inst = *f.inst(id);
+            match inst.op {
+                Op::Load => {
+                    f.replace_all_uses(Value::Inst(id), cur);
+                    f.remove_inst(sb, id);
+                }
+                Op::Store => {
+                    cur = inst.args()[1];
+                    f.remove_inst(sb, id);
+                }
+                _ => unreachable!(),
+            }
+        }
+        // patch phi's latch side
+        let latch_idx = f.block(header).pred_index(latch).expect("latch edge");
+        f.inst_mut(phi).args_mut()[latch_idx] = cur;
+
+        // exit store of the final value (phi holds it when the header
+        // check fails)
+        let st = f.add_inst(Inst::new(Op::Store, Ty::Void, &[addr, Value::Inst(phi)]));
+        let n_phis = f
+            .block(exit)
+            .insts
+            .iter()
+            .take_while(|&&i| f.inst(i).op == Op::Phi)
+            .count();
+        f.block_mut(exit).insts.insert(n_phis, st);
+        return true; // recompute analyses before further promotions
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::printer::print_function;
+    use crate::ir::verifier::verify_function;
+    use crate::ir::{AddrSpace, KernelBuilder, Ty};
+
+    /// GEMM-shaped inner loop: c[gid] *= beta; for k { c[gid] += a[k]*b[k] }
+    fn gemm_like() -> Function {
+        let mut b = KernelBuilder::new(
+            "gemm",
+            &[
+                ("a", Ty::Ptr(AddrSpace::Global)),
+                ("b", Ty::Ptr(AddrSpace::Global)),
+                ("c", Ty::Ptr(AddrSpace::Global)),
+            ],
+        );
+        let gid = b.gid(0);
+        let c0 = b.load(b.param(2), gid);
+        let c1 = b.fmul(c0, b.fc(0.5));
+        b.store(b.param(2), gid, c1);
+        let n = b.i(64);
+        b.for_loop("k", b.i(0), n, 1, |b, k| {
+            let av = b.load(b.param(0), k);
+            let bv = b.load(b.param(1), k);
+            let prod = b.fmul(av, bv);
+            let cv = b.load(b.param(2), gid);
+            let s = b.fadd(cv, prod);
+            b.store(b.param(2), gid, s);
+        });
+        b.finish()
+    }
+
+    fn count_in_loop(f: &Function, op: Op) -> usize {
+        let dt = DomTree::compute(f);
+        let lf = LoopForest::compute(f, &dt);
+        lf.loops
+            .iter()
+            .flat_map(|l| l.blocks.iter())
+            .flat_map(|&bb| f.block(bb).insts.iter())
+            .filter(|&&i| f.inst(i).op == op)
+            .count()
+    }
+
+    #[test]
+    fn promotes_store_with_precise_aa() {
+        let mut m = Module::new("t");
+        m.precise_aa = true;
+        m.kernels.push(gemm_like());
+        assert!(Licm.run(&mut m).unwrap());
+        let f = &m.kernels[0];
+        verify_function(f).unwrap_or_else(|e| panic!("{e}\n{}", print_function(f)));
+        assert_eq!(count_in_loop(f, Op::Store), 0, "store sunk out of loop");
+        // c-load gone from loop; a/b loads remain
+        assert_eq!(count_in_loop(f, Op::Load), 2);
+    }
+
+    #[test]
+    fn no_promotion_under_basic_aa() {
+        let mut m = Module::new("t");
+        m.precise_aa = false;
+        m.kernels.push(gemm_like());
+        Licm.run(&mut m).unwrap();
+        let f = &m.kernels[0];
+        verify_function(f).unwrap();
+        assert_eq!(count_in_loop(f, Op::Store), 1, "May-alias blocks promotion");
+    }
+
+    #[test]
+    fn hoists_invariant_address_chain() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let gid = b.gid(0);
+        let n = b.i(16);
+        b.for_loop("i", b.i(0), n, 1, |b, iv| {
+            // gid*100 is invariant; iv-dependent part is not
+            let base = b.mul(gid, b.i(100));
+            let idx = b.add(base, iv);
+            let v = b.load(b.param(0), idx);
+            let w = b.fadd(v, b.fc(1.0));
+            b.store(b.param(0), idx, w);
+        });
+        let mut m = Module::new("t");
+        m.kernels.push(b.finish());
+        assert!(Licm.run(&mut m).unwrap());
+        let f = &m.kernels[0];
+        verify_function(f).unwrap();
+        // the mul must now live in the preheader, not the loop
+        assert_eq!(count_in_loop(f, Op::Mul), 0);
+    }
+
+    #[test]
+    fn conditional_store_not_promoted() {
+        use crate::ir::CmpPred;
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let gid = b.gid(0);
+        let n = b.i(16);
+        b.for_loop("i", b.i(0), n, 1, |b, iv| {
+            let c = b.icmp(CmpPred::Lt, iv, b.i(8));
+            b.if_then(c, |b| {
+                let v = b.load(b.param(0), gid);
+                let w = b.fadd(v, b.fc(1.0));
+                b.store(b.param(0), gid, w);
+            });
+        });
+        let mut m = Module::new("t");
+        m.precise_aa = true;
+        m.kernels.push(b.finish());
+        Licm.run(&mut m).unwrap();
+        let f = &m.kernels[0];
+        verify_function(f).unwrap();
+        assert_eq!(count_in_loop(f, Op::Store), 1, "conditional store stays");
+    }
+
+    #[test]
+    fn hoists_invariant_load_when_no_aliasing_store() {
+        let mut b = KernelBuilder::new(
+            "k",
+            &[
+                ("x", Ty::Ptr(AddrSpace::Global)),
+                ("y", Ty::Ptr(AddrSpace::Global)),
+            ],
+        );
+        let gid = b.gid(0);
+        let n = b.i(16);
+        b.for_loop("i", b.i(0), n, 1, |b, iv| {
+            let xv = b.load(b.param(0), gid); // invariant address
+            let yv = b.load(b.param(1), iv);
+            let s = b.fmul(xv, yv);
+            b.store(b.param(1), iv, s);
+        });
+        let mut m = Module::new("t");
+        m.precise_aa = true;
+        m.kernels.push(b.finish());
+        Licm.run(&mut m).unwrap();
+        let f = &m.kernels[0];
+        verify_function(f).unwrap();
+        // x-load hoisted; y-load stays (varies)
+        assert_eq!(count_in_loop(f, Op::Load), 1);
+    }
+
+    #[test]
+    fn nested_promotion_gemm_in_outer_loop() {
+        // outer j-loop around a gemm-like inner k-loop: promotion must
+        // target the inner loop and keep the function valid.
+        let mut b = KernelBuilder::new(
+            "k2",
+            &[
+                ("a", Ty::Ptr(AddrSpace::Global)),
+                ("c", Ty::Ptr(AddrSpace::Global)),
+            ],
+        );
+        let gid = b.gid(0);
+        let n = b.i(8);
+        b.for_loop("j", b.i(0), n, 1, |b, j| {
+            let t = b.mul(gid, b.i(8));
+            let cidx = b.add(t, j);
+            let m_ = b.i(8);
+            b.for_loop("k", b.i(0), m_, 1, |b, kk| {
+                let av = b.load(b.param(0), kk);
+                let cv = b.load(b.param(1), cidx);
+                let s = b.fadd(cv, av);
+                b.store(b.param(1), cidx, s);
+            });
+        });
+        let mut m = Module::new("t");
+        m.precise_aa = true;
+        m.kernels.push(b.finish());
+        assert!(Licm.run(&mut m).unwrap());
+        let f = &m.kernels[0];
+        verify_function(f).unwrap_or_else(|e| panic!("{e}\n{}", print_function(f)));
+        // the inner loop must not contain stores anymore
+        let dt = DomTree::compute(f);
+        let lf = LoopForest::compute(f, &dt);
+        let inner_idx = lf.innermost_first()[0];
+        let inner = &lf.loops[inner_idx];
+        assert_eq!(inner.depth, 2);
+        let stores_in_inner: usize = inner
+            .blocks
+            .iter()
+            .flat_map(|&bb| f.block(bb).insts.iter())
+            .filter(|&&i| f.inst(i).op == Op::Store)
+            .count();
+        assert_eq!(stores_in_inner, 0);
+    }
+}

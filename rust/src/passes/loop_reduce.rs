@@ -1,0 +1,330 @@
+//! `-loop-reduce` — loop strength reduction of address computations.
+//!
+//! The OpenCL frontend emits a fresh `sext`+`shl`+`ptradd` chain for every
+//! access (the 5-instruction PTX pattern of the paper's Fig. 6a-right);
+//! this pass rewrites accesses whose byte offset is affine in the loop's
+//! induction variable into a *pointer induction*: one pointer phi in the
+//! header plus one `ptradd` in the latch. The per-iteration address code
+//! disappears — reproducing the 1-instruction CUDA-style load (Fig. 6a).
+//!
+//! Rewriting addressing invalidates the installed alias summary
+//! (`aa_stale`), which is what arms sink's documented bug model #4 and is
+//! why the paper's winning sequences re-run `cfl-anders-aa` afterwards.
+
+use std::collections::HashMap;
+
+use super::common::{is_invariant, loop_defs, sweep_dead};
+use super::{Pass, PassError};
+use crate::analysis::{AffineCtx, MemLoc, Root};
+use crate::ir::dom::DomTree;
+use crate::ir::loops::LoopForest;
+use crate::ir::{AddrSpace, Function, Inst, Module, Op, Ty, Value};
+
+pub struct LoopReduce;
+
+impl Pass for LoopReduce {
+    fn name(&self) -> &'static str {
+        "loop-reduce"
+    }
+    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
+        let mut changed = false;
+        for f in &mut m.kernels {
+            changed |= lsr_function(f);
+        }
+        if changed {
+            m.aa_stale = true;
+        }
+        m.cfg_dirty = false;
+        Ok(changed)
+    }
+}
+
+fn lsr_function(f: &mut Function) -> bool {
+    let dt = DomTree::compute(f);
+    let lf = LoopForest::compute(f, &dt);
+    let mut changed = false;
+
+    for li in lf.innermost_first() {
+        let l = lf.loops[li].clone();
+        let Some(ph) = l.preheader else { continue };
+        if l.latches.len() != 1 {
+            continue;
+        }
+        let latch = l.latches[0];
+        let header = l.header;
+        let defs = loop_defs(f, &l);
+
+        // blocks belonging to deeper sub-loops are handled by their own
+        // loop's iteration
+        let deeper: Vec<_> = lf
+            .loops
+            .iter()
+            .filter(|sub| sub.depth > l.depth && sub.blocks.iter().all(|b| l.blocks.contains(b)))
+            .flat_map(|sub| sub.blocks.clone())
+            .collect();
+
+        // find this loop's induction phis
+        let mut ivs: Vec<(Value, Value, i64)> = Vec::new(); // (phi, init, step)
+        {
+            let mut cx = AffineCtx::new(f);
+            for &i in &f.block(header).insts.clone() {
+                if f.inst(i).op == Op::Phi {
+                    if let Some((init, step)) = cx.as_induction(Value::Inst(i)) {
+                        ivs.push((Value::Inst(i), init, step));
+                    }
+                }
+            }
+        }
+        if ivs.is_empty() {
+            continue;
+        }
+
+        // pointer-phi cache: same (root, affine) reuses one induction ptr
+        let mut made: HashMap<(Root, Vec<(Value, i64)>, i64), Value> = HashMap::new();
+
+        let blocks = l.blocks.clone();
+        for bb in blocks {
+            if deeper.contains(&bb) {
+                continue;
+            }
+            let ids = f.block(bb).insts.clone();
+            for id in ids {
+                let inst = *f.inst(id);
+                if !inst.op.is_memory() {
+                    continue;
+                }
+                let ptr = inst.args()[0];
+                let loc = {
+                    let mut cx = AffineCtx::new(f);
+                    MemLoc::resolve(&mut cx, ptr)
+                };
+                let Root::Param(base_idx) = loc.root else { continue };
+                let Some(off) = loc.off.clone() else { continue };
+                // split out this loop's IV term; everything else must be
+                // invariant
+                let mut iv_coeff = 0i64;
+                let mut iv_init = Value::ImmI(0);
+                let mut iv_step = 0i64;
+                let mut rest = off.clone();
+                let mut n_iv_terms = 0;
+                for &(phi, init, step) in &ivs {
+                    let (c, r) = rest.split(phi);
+                    if c != 0 {
+                        n_iv_terms += 1;
+                        iv_coeff = c;
+                        iv_init = init;
+                        iv_step = step;
+                        rest = r;
+                    }
+                }
+                if n_iv_terms != 1 || iv_coeff == 0 {
+                    continue;
+                }
+                if !rest.terms.iter().all(|&(v, _)| is_invariant(v, &defs))
+                    || !is_invariant(iv_init, &defs)
+                {
+                    continue;
+                }
+                let key = (loc.root, rest.terms.clone(), rest.konst + 0);
+                // include coeff and init in the key: different strides need
+                // different induction pointers
+                let key = (key.0, {
+                    let mut t = key.1.clone();
+                    t.push((iv_init, iv_coeff));
+                    t
+                }, key.2);
+
+                let pphi = if let Some(&p) = made.get(&key) {
+                    p
+                } else {
+                    // preheader: materialize initial offset = rest + coeff*init
+                    let mut acc = Value::ImmI(rest.konst);
+                    let emit = |f: &mut Function, inst: Inst| -> Value {
+                        let pos = f.block(ph).insts.len().saturating_sub(1);
+                        let nid = f.add_inst(inst);
+                        f.block_mut(ph).insts.insert(pos, nid);
+                        Value::Inst(nid)
+                    };
+                    for &(v, c) in &rest.terms {
+                        let scaled = if c == 1 {
+                            v
+                        } else {
+                            emit(f, Inst::new(Op::Mul, Ty::I64, &[v, Value::ImmI(c)]))
+                        };
+                        acc = if acc == Value::ImmI(0) {
+                            scaled
+                        } else {
+                            emit(f, Inst::new(Op::Add, Ty::I64, &[acc, scaled]))
+                        };
+                    }
+                    // coeff*init
+                    let init_term = match iv_init.as_imm_i() {
+                        Some(k) => Value::ImmI(k * iv_coeff),
+                        None => {
+                            let s = if iv_coeff == 1 {
+                                iv_init
+                            } else {
+                                emit(
+                                    f,
+                                    Inst::new(Op::Mul, Ty::I64, &[iv_init, Value::ImmI(iv_coeff)]),
+                                )
+                            };
+                            s
+                        }
+                    };
+                    if init_term != Value::ImmI(0) {
+                        acc = if acc == Value::ImmI(0) {
+                            init_term
+                        } else {
+                            emit(f, Inst::new(Op::Add, Ty::I64, &[acc, init_term]))
+                        };
+                    }
+                    let p0 = emit(
+                        f,
+                        Inst::new(
+                            Op::PtrAdd,
+                            Ty::Ptr(AddrSpace::Global),
+                            &[Value::Arg(base_idx), acc],
+                        ),
+                    );
+                    // header phi
+                    let ph_idx = f.block(header).pred_index(ph).expect("ph edge");
+                    let latch_idx = f.block(header).pred_index(latch).expect("latch edge");
+                    let mut args = [Value::ImmI(0), Value::ImmI(0)];
+                    args[ph_idx] = p0;
+                    let phi_id = f.add_inst(Inst::new(
+                        Op::Phi,
+                        Ty::Ptr(AddrSpace::Global),
+                        &[args[0], args[1]],
+                    ));
+                    f.block_mut(header).insts.insert(0, phi_id);
+                    // latch increment
+                    let step_bytes = iv_coeff * iv_step;
+                    let pn = f.add_inst(Inst::new(
+                        Op::PtrAdd,
+                        Ty::Ptr(AddrSpace::Global),
+                        &[Value::Inst(phi_id), Value::ImmI(step_bytes)],
+                    ));
+                    let pos = f.block(latch).insts.len().saturating_sub(1);
+                    f.block_mut(latch).insts.insert(pos, pn);
+                    f.inst_mut(phi_id).args_mut()[latch_idx] = Value::Inst(pn);
+                    made.insert(key, Value::Inst(phi_id));
+                    Value::Inst(phi_id)
+                };
+                // rewrite the access
+                f.inst_mut(id).args_mut()[0] = pphi;
+                changed = true;
+            }
+        }
+    }
+    if changed {
+        sweep_dead(f);
+    }
+    changed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::printer::print_function;
+    use crate::ir::verifier::verify_function;
+    use crate::ir::{AddrSpace, KernelBuilder, Ty};
+
+    fn simple_stream() -> Function {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let gid = b.gid(0);
+        let n = b.i(64);
+        b.for_loop("i", b.i(0), n, 1, |b, iv| {
+            let t = b.mul(gid, b.i(64));
+            let idx = b.add(t, iv);
+            let v = b.load(b.param(0), idx);
+            let w = b.fadd(v, b.fc(1.0));
+            b.store(b.param(0), idx, w);
+        });
+        b.finish()
+    }
+
+    #[test]
+    fn rewrites_to_pointer_induction() {
+        let mut m = Module::new("t");
+        m.kernels.push(simple_stream());
+        assert!(LoopReduce.run(&mut m).unwrap());
+        assert!(m.aa_stale, "addressing rewrite must mark AA stale");
+        let f = &m.kernels[0];
+        verify_function(f).unwrap_or_else(|e| panic!("{e}\n{}", print_function(f)));
+        // the body should no longer contain sext/shl address arithmetic
+        let dt = DomTree::compute(f);
+        let lf = LoopForest::compute(f, &dt);
+        let body_chain_ops: usize = lf.loops[0]
+            .blocks
+            .iter()
+            .flat_map(|&bb| f.block(bb).insts.iter())
+            .filter(|&&i| matches!(f.inst(i).op, Op::Sext | Op::Shl))
+            .count();
+        assert_eq!(body_chain_ops, 0, "address chain gone:\n{}", print_function(f));
+        // load and store share one pointer phi
+        let n_ptr_phis = f
+            .block(lf.loops[0].header)
+            .insts
+            .iter()
+            .filter(|&&i| f.inst(i).op == Op::Phi && f.inst(i).ty.is_ptr())
+            .count();
+        assert_eq!(n_ptr_phis, 1);
+    }
+
+    #[test]
+    fn execution_semantics_preserved() {
+        // structural spot-check: the latch increment is 4 bytes (stride 1)
+        let mut m = Module::new("t");
+        m.kernels.push(simple_stream());
+        LoopReduce.run(&mut m).unwrap();
+        let f = &m.kernels[0];
+        let incr = f
+            .insts
+            .iter()
+            .find(|i| i.op == Op::PtrAdd && i.args()[1] == Value::ImmI(4))
+            .is_some();
+        assert!(incr, "latch pointer increment of 4 bytes expected");
+    }
+
+    #[test]
+    fn strided_access_gets_strided_increment() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let gid = b.gid(0);
+        let n = b.i(32);
+        b.for_loop("i", b.i(0), n, 1, |b, iv| {
+            // column access a[iv*32 + gid]: stride 32 elements = 128 bytes
+            let t = b.mul(iv, b.i(32));
+            let idx = b.add(t, gid);
+            let v = b.load(b.param(0), idx);
+            let w = b.fmul(v, b.fc(2.0));
+            b.store(b.param(0), idx, w);
+        });
+        let mut m = Module::new("t");
+        m.kernels.push(b.finish());
+        assert!(LoopReduce.run(&mut m).unwrap());
+        let f = &m.kernels[0];
+        verify_function(f).unwrap();
+        assert!(f
+            .insts
+            .iter()
+            .any(|i| i.op == Op::PtrAdd && i.args()[1] == Value::ImmI(128)));
+    }
+
+    #[test]
+    fn invariant_only_access_untouched() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let gid = b.gid(0);
+        let n = b.i(8);
+        b.for_loop("i", b.i(0), n, 1, |b, _iv| {
+            let v = b.load(b.param(0), gid); // no IV in the address
+            let w = b.fadd(v, b.fc(1.0));
+            b.store(b.param(0), gid, w);
+        });
+        let mut m = Module::new("t");
+        m.kernels.push(b.finish());
+        let changed = LoopReduce.run(&mut m).unwrap();
+        assert!(!changed);
+        assert!(!m.aa_stale);
+    }
+}

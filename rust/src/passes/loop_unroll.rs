@@ -1,0 +1,117 @@
+//! `-loop-unroll` — set backend unroll hints on innermost loops.
+//!
+//! Unrolling is represented as loop metadata consumed by codegen and the
+//! cost model (see `ir::Block::unroll`); the paper reasons about unroll
+//! factors at the PTX level (§3.4: OpenCL baselines arrive at 2–4, CUDA
+//! at 8–16). The pass picks a factor from the body size the way LLVM's
+//! unroller applies its size threshold: small bodies unroll more.
+
+use super::{Pass, PassError};
+use crate::ir::dom::DomTree;
+use crate::ir::loops::LoopForest;
+use crate::ir::Module;
+
+pub struct LoopUnroll;
+
+/// LLVM-ish size threshold: unrolled body must stay under this many
+/// instructions.
+const UNROLL_BUDGET: usize = 96;
+
+impl Pass for LoopUnroll {
+    fn name(&self) -> &'static str {
+        "loop-unroll"
+    }
+    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
+        let mut changed = false;
+        for f in &mut m.kernels {
+            let dt = DomTree::compute(f);
+            let lf = LoopForest::compute(f, &dt);
+            for l in &lf.loops {
+                // innermost only
+                let is_innermost = !lf
+                    .loops
+                    .iter()
+                    .any(|o| o.depth > l.depth && o.blocks.iter().all(|b| l.blocks.contains(b)) && o.header != l.header);
+                if !is_innermost {
+                    continue;
+                }
+                let body_size: usize = l
+                    .blocks
+                    .iter()
+                    .map(|&bb| {
+                        f.block(bb)
+                            .insts
+                            .iter()
+                            .filter(|&&i| !f.inst(i).is_nop())
+                            .count()
+                    })
+                    .sum();
+                let mut factor = 1usize;
+                while factor < 8 && body_size * (factor * 2) <= UNROLL_BUDGET {
+                    factor *= 2;
+                }
+                let factor = factor.max(2).min(8) as u8; // unroller always tries ≥2
+                let hdr = f.block_mut(l.header);
+                if hdr.unroll < factor {
+                    hdr.unroll = factor;
+                    changed = true;
+                }
+            }
+        }
+        Ok(changed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{AddrSpace, KernelBuilder, Ty};
+
+    #[test]
+    fn small_body_unrolls_more() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let n = b.i(64);
+        let hdr = b.for_loop("i", b.i(0), n, 1, |b, iv| {
+            let v = b.load(b.param(0), iv);
+            let w = b.fadd(v, b.fc(1.0));
+            b.store(b.param(0), iv, w);
+        });
+        let mut m = Module::new("t");
+        m.kernels.push(b.finish());
+        assert!(LoopUnroll.run(&mut m).unwrap());
+        let f = &m.kernels[0];
+        assert!(f.block(hdr).unroll >= 2);
+    }
+
+    #[test]
+    fn outer_loop_not_hinted() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let n = b.i(8);
+        let outer = b.for_loop("i", b.i(0), n, 1, |b, _| {
+            let n2 = b.i(8);
+            b.for_loop("j", b.i(0), n2, 1, |b, j| {
+                let v = b.load(b.param(0), j);
+                b.store(b.param(0), j, v);
+            });
+        });
+        let mut m = Module::new("t");
+        m.kernels.push(b.finish());
+        LoopUnroll.run(&mut m).unwrap();
+        assert_eq!(m.kernels[0].block(outer).unroll, 1);
+    }
+
+    #[test]
+    fn does_not_lower_existing_hint() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let n = b.i(64);
+        let hdr = b.for_loop("i", b.i(0), n, 1, |b, iv| {
+            let v = b.load(b.param(0), iv);
+            b.store(b.param(0), iv, v);
+        });
+        b.set_unroll(hdr, 16); // CUDA-style frontend hint
+        let mut m = Module::new("t");
+        m.kernels.push(b.finish());
+        LoopUnroll.run(&mut m).unwrap();
+        assert_eq!(m.kernels[0].block(hdr).unroll, 16);
+    }
+}

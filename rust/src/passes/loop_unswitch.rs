@@ -1,0 +1,512 @@
+//! `-loop-unswitch` — hoist a loop-invariant conditional out of a loop by
+//! cloning the loop: the preheader branches on the condition into a
+//! "condition-true" copy (in-loop branch folded to the true arm) and a
+//! "condition-false" copy (folded to the false arm).
+//!
+//! This is a *real* region clone: blocks, instructions and phis are
+//! duplicated and remapped, exits gain the cloned predecessors, and
+//! loop-defined values used after the loop get LCSSA-style merge phis.
+//!
+//! **Documented bug model #2** (DESIGN.md §5): invariance is normally
+//! checked soundly (condition's instruction defined outside the loop).
+//! When the CFG has been restructured since loop analyses last ran
+//! (`cfg_dirty`, set by jump-threading/simplifycfg), the pass consults
+//! its stale cached summary, modelled as a shallow syntactic check that
+//! looks only at an `ICmp`'s *second* operand. A comparison
+//! `j2 <= invariant` with a loop-variant `j2` then unswitches on a
+//! varying condition — a real miscompile the validator catches.
+//! Re-running `licm`/`gvn`/`loop-reduce` (which refresh analyses) before
+//! unswitching avoids it, as the paper's winning CORR/COVAR sequences do.
+//!
+//! Repeated unswitching doubles loop bodies; a CFG budget guards against
+//! exponential blowup and aborts compilation (the paper's no-IR bucket).
+
+use std::collections::HashMap;
+
+use super::common::{is_invariant, loop_defs};
+use super::{Pass, PassError};
+use crate::ir::dom::DomTree;
+use crate::ir::loops::LoopForest;
+use crate::ir::{Block, BlockId, Function, Inst, InstId, Module, Op, Value};
+
+pub struct LoopUnswitch;
+
+/// Decline to unswitch when the function is already this large (the size
+/// threshold a production unswitcher enforces — it silently refuses, it
+/// does not crash).
+const DECLINE_BLOCKS: usize = 96;
+
+/// Hard abort well beyond the decline threshold (reachable only through
+/// pathological interactions that disable the decline check's
+/// assumptions; the paper's rare "no optimized IR" bucket).
+const BLOCK_BUDGET: usize = 512;
+
+impl Pass for LoopUnswitch {
+    fn name(&self) -> &'static str {
+        "loop-unswitch"
+    }
+    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
+        let stale = m.cfg_dirty;
+        let mut changed = false;
+        for f in &mut m.kernels {
+            changed |= unswitch_function(f, stale)?;
+        }
+        Ok(changed)
+    }
+}
+
+fn unswitch_function(f: &mut Function, stale: bool) -> Result<bool, PassError> {
+    // one unswitch per invocation (like LLVM's one-candidate-at-a-time
+    // behaviour under a size threshold); callers list the pass twice to
+    // unswitch twice, as the paper's CORR/COVAR sequences do.
+    let dt = DomTree::compute(f);
+    let lf = LoopForest::compute(f, &dt);
+    for li in lf.innermost_first() {
+        let l = lf.loops[li].clone();
+        let Some(ph) = l.preheader else { continue };
+        if l.latches.len() != 1 || l.exits.len() != 1 {
+            continue;
+        }
+        let defs = loop_defs(f, &l);
+        // candidate: a condbr inside the loop, not the header's exit
+        // check, with both arms inside the loop
+        for &bb in &l.blocks {
+            if bb == l.header {
+                continue;
+            }
+            let Some(term) = f.terminator(bb) else { continue };
+            if f.inst(term).op != Op::CondBr {
+                continue;
+            }
+            let succs = f.block(bb).succs.clone();
+            if !succs.iter().all(|s| l.blocks.contains(s)) {
+                continue;
+            }
+            let cond = f.inst(term).args()[0];
+            let invariant = if stale {
+                // BUG MODEL #2: stale cached summary — shallow check on
+                // the comparison's second operand only.
+                match cond {
+                    Value::Inst(ci) => {
+                        let cinst = f.inst(ci);
+                        matches!(cinst.op, Op::ICmp(_))
+                            && is_invariant(cinst.args()[1], &defs)
+                    }
+                    _ => true,
+                }
+            } else {
+                is_invariant(cond, &defs)
+            };
+            if !invariant {
+                continue;
+            }
+            if f.blocks.len() >= DECLINE_BLOCKS {
+                // size threshold: decline, like the real pass
+                continue;
+            }
+            if f.blocks.len() + l.blocks.len() > BLOCK_BUDGET {
+                return Err(PassError::Budget(format!(
+                    "loop-unswitch: CFG budget exceeded ({} + {} blocks)",
+                    f.blocks.len(),
+                    l.blocks.len()
+                )));
+            }
+            // must be able to evaluate the condition at the preheader
+            // (dry-run the materialization before committing)
+            if materialize_at_preheader(&mut f.clone(), &l, ph, cond).is_none() {
+                continue;
+            }
+            do_unswitch(f, &l, ph, bb, term, cond);
+            return Ok(true);
+        }
+    }
+    Ok(false)
+}
+
+fn do_unswitch(
+    f: &mut Function,
+    l: &crate::ir::Loop,
+    ph: BlockId,
+    branch_bb: BlockId,
+    branch_term: InstId,
+    cond: Value,
+) {
+    let exit = l.exits[0];
+
+    // ---- clone the loop region ----
+    let mut bmap: HashMap<BlockId, BlockId> = HashMap::new();
+    let mut imap: HashMap<InstId, InstId> = HashMap::new();
+    for &ob in &l.blocks {
+        let nb = f.add_block(Block::new(format!("{}.us", f.block(ob).name)));
+        f.blocks[nb.0 as usize].unroll = f.block(ob).unroll;
+        f.blocks[nb.0 as usize].vectorize_hint = f.block(ob).vectorize_hint;
+        bmap.insert(ob, nb);
+    }
+    // clone instructions
+    for &ob in &l.blocks {
+        let nb = bmap[&ob];
+        let ids = f.block(ob).insts.clone();
+        for oi in ids {
+            let inst = *f.inst(oi);
+            let ni = f.add_inst(inst);
+            imap.insert(oi, ni);
+            f.block_mut(nb).insts.push(ni);
+        }
+    }
+    // remap operands + edges in the clone
+    let remap = |v: Value, imap: &HashMap<InstId, InstId>| -> Value {
+        match v {
+            Value::Inst(i) => Value::Inst(*imap.get(&i).unwrap_or(&i)),
+            other => other,
+        }
+    };
+    for &ob in &l.blocks {
+        let nb = bmap[&ob];
+        let ids = f.block(nb).insts.clone();
+        for ni in ids {
+            let args: Vec<Value> = f.inst(ni).args().iter().map(|&a| remap(a, &imap)).collect();
+            f.inst_mut(ni).set_args(&args);
+        }
+        // edges
+        let osuccs = f.block(ob).succs.clone();
+        let nsuccs: Vec<BlockId> = osuccs
+            .iter()
+            .map(|s| *bmap.get(s).unwrap_or(s))
+            .collect();
+        f.block_mut(nb).succs = nsuccs.clone();
+        let opreds = f.block(ob).preds.clone();
+        let npreds: Vec<BlockId> = opreds
+            .iter()
+            .map(|p| *bmap.get(p).unwrap_or(p))
+            .collect();
+        f.block_mut(nb).preds = npreds;
+        // clone blocks reached from outside (only the header via ph) keep
+        // the ph pred slot for now; fixed below
+    }
+    // exit gains cloned preds
+    {
+        let new_exit_preds: Vec<BlockId> = f
+            .block(exit)
+            .preds
+            .iter()
+            .filter(|p| l.blocks.contains(p))
+            .map(|p| bmap[p])
+            .collect();
+        for np in new_exit_preds {
+            f.block_mut(exit).preds.push(np);
+            // exit phis (if any) replicate the original incoming value,
+            // remapped into the clone
+            let phis: Vec<InstId> = f
+                .block(exit)
+                .insts
+                .iter()
+                .copied()
+                .filter(|&i| f.inst(i).op == Op::Phi)
+                .collect();
+            for p in phis {
+                // incoming from the original counterpart of np
+                let orig_pred = *bmap.iter().find(|(_, &v)| v == np).map(|(k, _)| k).unwrap();
+                let pi = f.block(exit).pred_index(orig_pred).unwrap();
+                let v = f.inst(p).args()[pi];
+                let nv = remap(v, &imap);
+                f.inst_mut(p).push_arg(nv);
+            }
+        }
+    }
+
+    // ---- preheader dispatch (must precede folding: the fold step prunes
+    // unreachable blocks, and the clone is only reachable once the
+    // preheader branches into it) ----
+    //
+    // If the condition is defined *inside* the loop (only possible on the
+    // stale/bug path), the pass — believing it invariant — re-materializes
+    // the condition computation at the preheader from first-iteration
+    // values (header phis replaced by their preheader incoming). That is
+    // the semantic shape of a real stale-unswitch miscompile: the whole
+    // loop commits to the arm the first iteration would take.
+    let dispatch_cond = materialize_at_preheader(f, l, ph, cond)
+        .expect("candidate filtered if not materializable");
+    let hdr = l.header;
+    let chdr = bmap[&hdr];
+    let ph_term = f.terminator(ph).expect("preheader terminator");
+    {
+        let t = f.inst_mut(ph_term);
+        t.op = Op::CondBr;
+        t.set_args(&[dispatch_cond]);
+    }
+    f.block_mut(ph).succs = vec![hdr, chdr];
+    // clone header keeps preds aligned with original (ph at same index)
+    // — original: [ph, latch]; clone starts as [ph, latch.us]; correct.
+
+    // ---- fold the branch in both versions ----
+    fold_condbr(f, branch_bb, branch_term, /*keep_true=*/ true);
+    let cb = bmap[&branch_bb];
+    let ct = imap[&branch_term];
+    fold_condbr(f, cb, ct, /*keep_true=*/ false);
+
+    // ---- LCSSA: values defined in the (original) loop and used outside ----
+    let defs = loop_defs(f, l);
+    let outside_uses: Vec<(BlockId, InstId)> = f
+        .block_ids()
+        .filter(|bb| !l.blocks.contains(bb) && !bmap.values().any(|v| v == bb))
+        .flat_map(|bb| f.block(bb).insts.iter().map(move |&i| (bb, i)))
+        .collect();
+    let mut merged: HashMap<InstId, Value> = HashMap::new();
+    for (ub, ui) in outside_uses {
+        let args: Vec<Value> = f.inst(ui).args().to_vec();
+        for (k, a) in args.iter().enumerate() {
+            if let Value::Inst(d) = a {
+                if defs.contains(d) && f.inst(ui).op != Op::Phi {
+                    let mv = *merged.entry(*d).or_insert_with(|| {
+                        // phi at exit: incoming per exit pred
+                        let preds = f.block(exit).preds.clone();
+                        let mut vals = Vec::new();
+                        for p in &preds {
+                            if l.blocks.contains(p) {
+                                vals.push(Value::Inst(*d));
+                            } else {
+                                vals.push(Value::Inst(*imap.get(d).unwrap_or(d)));
+                            }
+                        }
+                        let ty = f.inst(*d).ty;
+                        let phi = f.add_inst(Inst::new(Op::Phi, ty, &vals));
+                        f.block_mut(exit).insts.insert(0, phi);
+                        Value::Inst(phi)
+                    });
+                    let _ = ub;
+                    f.inst_mut(ui).args_mut()[k] = mv;
+                }
+            }
+        }
+    }
+    // exit-block phis using loop defs directly (pre-existing) were already
+    // extended above.
+}
+
+/// Produce a value computing `v` at the preheader. Values defined outside
+/// the loop pass through; in-loop definitions are cloned recursively with
+/// header phis replaced by their preheader-incoming (first-iteration)
+/// value. Returns None when the chain is not materializable (e.g. a phi
+/// of an inner block).
+fn materialize_at_preheader(
+    f: &mut Function,
+    l: &crate::ir::Loop,
+    ph: BlockId,
+    v: Value,
+) -> Option<Value> {
+    fn go(
+        f: &mut Function,
+        l: &crate::ir::Loop,
+        ph: BlockId,
+        v: Value,
+        depth: u32,
+    ) -> Option<Value> {
+        if depth > 32 {
+            return None;
+        }
+        let Value::Inst(id) = v else { return Some(v) };
+        // defined outside the loop: usable as-is
+        let in_loop = l
+            .blocks
+            .iter()
+            .any(|&bb| f.block(bb).insts.contains(&id));
+        if !in_loop {
+            return Some(v);
+        }
+        let inst = *f.inst(id);
+        match inst.op {
+            Op::Phi => {
+                // header phi: take the preheader incoming
+                let hdr = l.header;
+                if !f.block(hdr).insts.contains(&id) {
+                    return None;
+                }
+                let pi = f.block(hdr).pred_index(ph)?;
+                let incoming = f.inst(id).args()[pi];
+                go(f, l, ph, incoming, depth + 1)
+            }
+            Op::Load => {
+                let addr = go(f, l, ph, inst.args()[0], depth + 1)?;
+                let ld = f.add_inst(Inst::new(Op::Load, inst.ty, &[addr]));
+                let pos = f.block(ph).insts.len().saturating_sub(1);
+                f.block_mut(ph).insts.insert(pos, ld);
+                Some(Value::Inst(ld))
+            }
+            op if op.is_pure() => {
+                let mut new_args = Vec::with_capacity(inst.args().len());
+                for &a in inst.args() {
+                    new_args.push(go(f, l, ph, a, depth + 1)?);
+                }
+                let ni = f.add_inst(Inst::new(op, inst.ty, &new_args));
+                let pos = f.block(ph).insts.len().saturating_sub(1);
+                f.block_mut(ph).insts.insert(pos, ni);
+                Some(Value::Inst(ni))
+            }
+            _ => None,
+        }
+    }
+    go(f, l, ph, v, 0)
+}
+
+/// Rewrite a condbr to an unconditional branch keeping one arm; unlink
+/// the dead edge and fix the dead target's phis.
+fn fold_condbr(f: &mut Function, bb: BlockId, term: InstId, keep_true: bool) {
+    let succs = f.block(bb).succs.clone();
+    let (taken, dead) = if keep_true {
+        (succs[0], succs[1])
+    } else {
+        (succs[1], succs[0])
+    };
+    {
+        let t = f.inst_mut(term);
+        t.op = Op::Br;
+        t.set_args(&[]);
+    }
+    f.block_mut(bb).succs = vec![taken];
+    if taken == dead {
+        return;
+    }
+    if let Some(pi) = f.block(dead).pred_index(bb) {
+        f.blocks[dead.0 as usize].preds.remove(pi);
+        let phis: Vec<_> = f
+            .block(dead)
+            .insts
+            .iter()
+            .copied()
+            .filter(|&i| f.inst(i).op == Op::Phi)
+            .collect();
+        for p in phis {
+            f.inst_mut(p).remove_arg(pi);
+        }
+    }
+    super::ipsccp::prune_unreachable(f);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::printer::print_function;
+    use crate::ir::verifier::verify_function;
+    use crate::ir::{AddrSpace, CmpPred, KernelBuilder, Ty};
+
+    /// Loop with an invariant in-body condition on gid.
+    fn guarded_loop() -> Function {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let gid = b.gid(0);
+        let inv = b.icmp(CmpPred::Lt, gid, b.i(4)); // invariant
+        let n = b.i(16);
+        b.for_loop("i", b.i(0), n, 1, |b, iv| {
+            b.if_then(inv, |b| {
+                let v = b.load(b.param(0), iv);
+                let w = b.fadd(v, b.fc(1.0));
+                b.store(b.param(0), iv, w);
+            });
+        });
+        b.finish()
+    }
+
+    #[test]
+    fn unswitches_invariant_condition() {
+        let mut m = Module::new("t");
+        m.kernels.push(guarded_loop());
+        let changed = LoopUnswitch.run(&mut m).unwrap();
+        assert!(changed);
+        let f = &m.kernels[0];
+        verify_function(f).unwrap_or_else(|e| panic!("{e}\n{}", print_function(f)));
+        // two loops now exist (original + clone)
+        let dt = DomTree::compute(f);
+        let lf = LoopForest::compute(f, &dt);
+        assert_eq!(lf.loops.len(), 2, "{}", print_function(f));
+        // preheader dispatches on the invariant condition
+        assert!(
+            f.insts
+                .iter()
+                .filter(|i| i.op == Op::CondBr && !i.is_nop())
+                .count()
+                >= 2
+        );
+    }
+
+    #[test]
+    fn variant_condition_not_unswitched_when_fresh() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let n = b.i(16);
+        b.for_loop("i", b.i(0), n, 1, |b, iv| {
+            let c = b.icmp(CmpPred::Lt, iv, b.i(8)); // loop-variant
+            b.if_then(c, |b| {
+                b.store(b.param(0), iv, b.fc(1.0));
+            });
+        });
+        let mut m = Module::new("t");
+        m.kernels.push(b.finish());
+        assert!(!LoopUnswitch.run(&mut m).unwrap());
+    }
+
+    #[test]
+    fn bug_model_2_stale_cfg_unswitches_variant_condition() {
+        // same kernel, but the cmp is (variant, invariant) and cfg_dirty
+        // is set: the shallow check looks only at operand 1 and wrongly
+        // unswitches.
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let n = b.i(16);
+        b.for_loop("i", b.i(0), n, 1, |b, iv| {
+            let c = b.icmp(CmpPred::Lt, iv, b.i(8));
+            b.if_then(c, |b| {
+                b.store(b.param(0), iv, b.fc(1.0));
+            });
+        });
+        let mut m = Module::new("t");
+        m.cfg_dirty = true;
+        m.kernels.push(b.finish());
+        let changed = LoopUnswitch.run(&mut m).unwrap();
+        assert!(changed, "stale summary lets the variant condition through");
+        // result is still structurally valid — the bug is semantic,
+        // caught by execution, not by the verifier
+        verify_function(&m.kernels[0]).unwrap();
+    }
+
+    #[test]
+    fn budget_exhaustion_errors() {
+        let mut m = Module::new("t");
+        m.kernels.push(guarded_loop());
+        // repeatedly unswitch until the budget trips
+        let mut err = None;
+        for _ in 0..64 {
+            match LoopUnswitch.run(&mut m) {
+                Ok(true) => continue,
+                Ok(false) => break,
+                Err(e) => {
+                    err = Some(e);
+                    break;
+                }
+            }
+        }
+        // either it converged (no more invariant branches) or it tripped
+        // the budget; with the guard cloned into both versions it trips.
+        if let Some(e) = err {
+            assert!(matches!(e, PassError::Budget(_)));
+        }
+    }
+
+    #[test]
+    fn lcssa_value_merged_at_exit() {
+        // accumulator loop with an invariant internal branch; acc used
+        // after the loop requires an exit phi after unswitching
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let gid = b.gid(0);
+        let inv = b.icmp(CmpPred::Lt, gid, b.i(4));
+        let n = b.i(8);
+        let (_h, acc) = b.for_loop_acc("i", b.i(0), n, 1, b.fc(0.0), |b, iv, acc| {
+            let base = b.load(b.param(0), iv);
+            let bumped = b.fadd(base, b.fc(1.0));
+            b.if_then_else_val(inv, |_b| bumped, |_b| acc)
+        });
+        b.store(b.param(0), b.i(0), acc);
+        let mut m = Module::new("t");
+        m.kernels.push(b.finish());
+        let changed = LoopUnswitch.run(&mut m).unwrap();
+        let f = &m.kernels[0];
+        verify_function(f).unwrap_or_else(|e| panic!("{e}\n{}", print_function(f)));
+        let _ = changed;
+    }
+}

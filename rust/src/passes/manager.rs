@@ -1,0 +1,170 @@
+//! The pass manager: runs named sequences over a module — the equivalent
+//! of `opt -pass1 -pass2 ...` in the paper's compilation flow (Fig. 1).
+
+use super::{pass_by_name, PassError};
+use crate::ir::verifier::verify_module;
+use crate::ir::Module;
+
+/// Outcome of running a sequence (the paper's §3.2 buckets).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PassOutcome {
+    /// Optimized IR produced.
+    Ok,
+    /// A pass crashed ("optimized LLVM IR not generated", 3% bucket).
+    Crash { pass: String, error: String },
+    /// A pass produced structurally invalid IR (caught by the verifier —
+    /// also lands in the paper's no-IR bucket).
+    VerifierFail { pass: String, error: String },
+    /// Unknown pass name (rejected up front).
+    UnknownPass(String),
+}
+
+impl PassOutcome {
+    pub fn is_ok(&self) -> bool {
+        matches!(self, PassOutcome::Ok)
+    }
+}
+
+/// Run one pass by name.
+pub fn run_pass(m: &mut Module, name: &str) -> Result<bool, PassError> {
+    let p = pass_by_name(name)
+        .ok_or_else(|| PassError::Precondition(format!("unknown pass {name}")))?;
+    p.run(m)
+}
+
+/// Run a full sequence, stopping at the first crash. When `verify` is set
+/// the module is verified after every transforming pass (used by tests and
+/// the property harness; the DSE hot loop verifies once at the end).
+pub fn run_sequence(m: &mut Module, names: &[&str], verify: bool) -> PassOutcome {
+    for &name in names {
+        let Some(p) = pass_by_name(name) else {
+            return PassOutcome::UnknownPass(name.to_string());
+        };
+        match p.run(m) {
+            Ok(changed) => {
+                if verify && changed {
+                    if let Err(e) = verify_module(m) {
+                        return PassOutcome::VerifierFail {
+                            pass: name.to_string(),
+                            error: e.to_string(),
+                        };
+                    }
+                }
+            }
+            Err(e) => {
+                return PassOutcome::Crash {
+                    pass: name.to_string(),
+                    error: e.to_string(),
+                }
+            }
+        }
+    }
+    if !verify {
+        if let Err(e) = verify_module(m) {
+            return PassOutcome::VerifierFail {
+                pass: "<final>".to_string(),
+                error: e.to_string(),
+            };
+        }
+    }
+    PassOutcome::Ok
+}
+
+/// The standard optimization levels. LLVM 3.9's -O pipelines do **not**
+/// include cfl-anders-aa (it existed but was not in the default pipeline),
+/// which is precisely why the paper finds -O1/-O2/-O3/-Os barely help on
+/// these kernels: the enabling AA for store promotion never runs.
+pub fn standard_level(level: &str) -> Vec<&'static str> {
+    match level {
+        "-O0" => vec![],
+        "-O1" => vec![
+            "early-cse",
+            "simplifycfg",
+            "instcombine",
+            "sroa",
+            "licm",
+            "adce",
+            "simplifycfg",
+        ],
+        "-O2" => vec![
+            "early-cse",
+            "simplifycfg",
+            "sroa",
+            "instcombine",
+            "jump-threading",
+            "reassociate",
+            "licm",
+            "loop-unswitch",
+            "instcombine",
+            "loop-unroll",
+            "gvn",
+            "dse",
+            "adce",
+            "simplifycfg",
+            "instcombine",
+        ],
+        // NOTE: like real LLVM 3.9, the -O3 *opt* pipeline does NOT run
+        // -loop-reduce (LSR belongs to the codegen pipeline) — one of the
+        // reasons Table 1's winning sequences, which do run it, beat -O3.
+        "-O3" => vec![
+            "early-cse",
+            "simplifycfg",
+            "sroa",
+            "instcombine",
+            "jump-threading",
+            "reassociate",
+            "licm",
+            "loop-unswitch",
+            "instcombine",
+            "loop-unroll",
+            "gvn",
+            "dse",
+            "adce",
+            "simplifycfg",
+            "instcombine",
+        ],
+        "-Os" => vec![
+            "early-cse",
+            "simplifycfg",
+            "sroa",
+            "instcombine",
+            "reassociate",
+            "licm",
+            "gvn",
+            "dse",
+            "adce",
+            "simplifycfg",
+        ],
+        other => panic!("unknown level {other}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_pass_is_reported() {
+        let mut m = Module::new("t");
+        let out = run_sequence(&mut m, &["definitely-not-a-pass"], true);
+        assert_eq!(out, PassOutcome::UnknownPass("definitely-not-a-pass".into()));
+    }
+
+    #[test]
+    fn standard_levels_resolve() {
+        for lvl in ["-O0", "-O1", "-O2", "-O3", "-Os"] {
+            for p in standard_level(lvl) {
+                assert!(
+                    super::super::pass_by_name(p).is_some(),
+                    "level {lvl} references unknown pass {p}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn o3_lacks_cfl_anders_aa() {
+        // The load-bearing fact behind the paper's "-OX barely helps".
+        assert!(!standard_level("-O3").contains(&"cfl-anders-aa"));
+    }
+}

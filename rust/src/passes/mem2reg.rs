@@ -1,0 +1,280 @@
+//! `-mem2reg` — promote non-escaping scalar allocas back to SSA form
+//! (classic iterated-dominance-frontier phi placement + renaming).
+//!
+//! Precondition: allocas must still be in generic form. After
+//! `nvptx-lower-alloca` rewrote them into `__local_depot` accesses the
+//! promotion machinery has nothing to grab — running `mem2reg`/`sroa`
+//! then is a pipeline error (the paper's compile-crash bucket).
+
+use std::collections::{HashMap, HashSet};
+
+use super::{Pass, PassError};
+use crate::ir::dom::DomTree;
+use crate::ir::{BlockId, Function, Inst, InstId, Module, Op, Ty, Value};
+
+pub struct Mem2Reg;
+
+impl Pass for Mem2Reg {
+    fn name(&self) -> &'static str {
+        "mem2reg"
+    }
+    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
+        if m.allocas_lowered {
+            // depot accesses fail the promotability test — nothing to do
+            // (like real mem2reg on address-space-qualified allocas)
+            return Ok(false);
+        }
+        let mut changed = false;
+        for f in &mut m.kernels {
+            changed |= promote_function(f);
+        }
+        Ok(changed)
+    }
+}
+
+pub(crate) fn promote_function(f: &mut Function) -> bool {
+    // promotable: alloca whose only uses are load/store addresses
+    let allocas: Vec<InstId> = f
+        .insts
+        .iter()
+        .enumerate()
+        .filter(|(_, i)| i.op == Op::Alloca)
+        .map(|(k, _)| InstId(k as u32))
+        .collect();
+    if allocas.is_empty() {
+        return false;
+    }
+    let mut promotable: Vec<InstId> = Vec::new();
+    'next: for &a in &allocas {
+        for bb in f.block_ids() {
+            for &i in &f.block(bb).insts {
+                let inst = f.inst(i);
+                for (k, &arg) in inst.args().iter().enumerate() {
+                    if arg == Value::Inst(a) {
+                        let ok = match inst.op {
+                            Op::Load => k == 0,
+                            Op::Store => k == 0, // address use only
+                            _ => false,
+                        };
+                        if !ok {
+                            continue 'next;
+                        }
+                    }
+                }
+            }
+        }
+        promotable.push(a);
+    }
+    if promotable.is_empty() {
+        return false;
+    }
+
+    let dt = DomTree::compute(f);
+    let df = dominance_frontier(f, &dt);
+    let blocks_of = f.inst_blocks();
+
+    for &a in &promotable {
+        promote_one(f, &dt, &df, &blocks_of, a);
+    }
+    // placement at dominance frontiers can leave phis no load consumes
+    super::common::sweep_dead(f);
+    true
+}
+
+/// DF per block (Cytron et al.).
+fn dominance_frontier(f: &Function, dt: &DomTree) -> Vec<HashSet<BlockId>> {
+    let n = f.blocks.len();
+    let mut df: Vec<HashSet<BlockId>> = vec![HashSet::new(); n];
+    for b in f.block_ids() {
+        if !dt.is_reachable(b) || f.block(b).preds.len() < 2 {
+            continue;
+        }
+        let idom_b = dt.idom[b.0 as usize].unwrap();
+        for &p in &f.block(b).preds {
+            let mut runner = p;
+            while runner != idom_b {
+                df[runner.0 as usize].insert(b);
+                match dt.idom[runner.0 as usize] {
+                    Some(i) if i != runner => runner = i,
+                    _ => break,
+                }
+            }
+        }
+    }
+    df
+}
+
+fn promote_one(
+    f: &mut Function,
+    dt: &DomTree,
+    df: &[HashSet<BlockId>],
+    _blocks_of: &HashMap<InstId, BlockId>,
+    a: InstId,
+) {
+    // slot value type: from any load of it
+    let mut ty = Ty::I32;
+    let mut def_blocks: Vec<BlockId> = Vec::new();
+    for bb in f.block_ids() {
+        for &i in &f.block(bb).insts {
+            let inst = f.inst(i);
+            if inst.args().first() == Some(&Value::Inst(a)) {
+                match inst.op {
+                    Op::Store => def_blocks.push(bb),
+                    Op::Load => ty = inst.ty,
+                    _ => {}
+                }
+            }
+        }
+    }
+    // phi placement: iterated DF of def blocks. All iteration orders are
+    // kept sorted: instruction ids must be allocated deterministically or
+    // run-to-run results (and the DSE's caches) diverge.
+    let mut phi_blocks: HashSet<BlockId> = HashSet::new();
+    let mut work: Vec<BlockId> = def_blocks.clone();
+    let mut seen: HashSet<BlockId> = work.iter().copied().collect();
+    while let Some(b) = work.pop() {
+        let mut frontier: Vec<BlockId> = df[b.0 as usize].iter().copied().collect();
+        frontier.sort();
+        for d in frontier {
+            if phi_blocks.insert(d) && seen.insert(d) {
+                work.push(d);
+            }
+        }
+    }
+    // insert placeholder phis (skip promotion entirely if any join is
+    // wider than our fixed phi arity — does not occur in this suite)
+    if phi_blocks
+        .iter()
+        .any(|&pb| f.block(pb).preds.len() > crate::ir::MAX_ARGS)
+    {
+        return;
+    }
+    let mut phi_of: HashMap<BlockId, InstId> = HashMap::new();
+    let mut phi_blocks_sorted: Vec<BlockId> = phi_blocks.iter().copied().collect();
+    phi_blocks_sorted.sort();
+    for pb in phi_blocks_sorted {
+        let npreds = f.block(pb).preds.len();
+        let args = vec![Value::ImmI(0); npreds];
+        let phi = f.add_inst(Inst::new(Op::Phi, ty, &args));
+        f.block_mut(pb).insts.insert(0, phi);
+        phi_of.insert(pb, phi);
+    }
+    // rename via dom-tree DFS
+    let n = f.blocks.len();
+    let mut children: Vec<Vec<BlockId>> = vec![Vec::new(); n];
+    for b in f.block_ids() {
+        if b == f.entry {
+            continue;
+        }
+        if let Some(i) = dt.idom[b.0 as usize] {
+            children[i.0 as usize].push(b);
+        }
+    }
+    let undef = match ty {
+        Ty::F32 => Value::imm_f(0.0),
+        _ => Value::ImmI(0),
+    };
+    rename(f, &children, &phi_of, a, f.entry, undef);
+
+    // delete the alloca itself
+    let ab = f
+        .block_ids()
+        .find(|&bb| f.block(bb).insts.contains(&a));
+    if let Some(ab) = ab {
+        f.remove_inst(ab, a);
+    }
+}
+
+fn rename(
+    f: &mut Function,
+    children: &[Vec<BlockId>],
+    phi_of: &HashMap<BlockId, InstId>,
+    a: InstId,
+    bb: BlockId,
+    mut cur: Value,
+) {
+    if let Some(&phi) = phi_of.get(&bb) {
+        cur = Value::Inst(phi);
+    }
+    let ids = f.block(bb).insts.clone();
+    for i in ids {
+        let inst = *f.inst(i);
+        if inst.is_nop() || Some(&Value::Inst(a)) != inst.args().first() {
+            continue;
+        }
+        match inst.op {
+            Op::Load => {
+                f.replace_all_uses(Value::Inst(i), cur);
+                f.remove_inst(bb, i);
+            }
+            Op::Store => {
+                cur = inst.args()[1];
+                f.remove_inst(bb, i);
+            }
+            _ => {}
+        }
+    }
+    // feed successor phis
+    let succs = f.block(bb).succs.clone();
+    for s in succs {
+        if let Some(&phi) = phi_of.get(&s) {
+            if let Some(pi) = f.block(s).pred_index(bb) {
+                f.inst_mut(phi).args_mut()[pi] = cur;
+            }
+        }
+    }
+    for &c in &children[bb.0 as usize] {
+        rename(f, children, phi_of, a, c, cur);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::verifier::verify_function;
+    use crate::ir::{AddrSpace, KernelBuilder, Ty};
+    use crate::passes::reg2mem::Reg2Mem;
+
+    /// reg2mem ∘ mem2reg round-trips to phi form.
+    #[test]
+    fn roundtrip_restores_ssa() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let n = b.i(8);
+        let (_h, acc) = b.for_loop_acc("i", b.i(0), n, 1, b.fc(0.0), |b, iv, acc| {
+            let v = b.load(b.param(0), iv);
+            b.fadd(acc, v)
+        });
+        b.store(b.param(0), b.i(0), acc);
+        let mut m = Module::new("t");
+        m.kernels.push(b.finish());
+        Reg2Mem.run(&mut m).unwrap();
+        assert!(!m.kernels[0].insts.iter().any(|i| i.op == Op::Phi));
+        assert!(Mem2Reg.run(&mut m).unwrap());
+        let f = &m.kernels[0];
+        verify_function(f).unwrap();
+        assert!(f.insts.iter().any(|i| i.op == Op::Phi), "phis restored");
+        assert!(
+            !f.insts.iter().any(|i| i.op == Op::Alloca),
+            "allocas eliminated"
+        );
+    }
+
+    #[test]
+    fn noop_after_lowering() {
+        use crate::ir::Op;
+        use crate::passes::nvptx_lower_alloca::NvptxLowerAlloca;
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let n = b.i(8);
+        b.for_loop("i", b.i(0), n, 1, |b, iv| {
+            b.store(b.param(0), iv, b.fc(1.0));
+        });
+        let mut m = Module::new("t");
+        m.kernels.push(b.finish());
+        Reg2Mem.run(&mut m).unwrap();
+        NvptxLowerAlloca.run(&mut m).unwrap();
+        // depot slots are not promotable: the pass declines, the allocas
+        // stay
+        assert_eq!(Mem2Reg.run(&mut m), Ok(false));
+        assert!(m.kernels[0].insts.iter().any(|i| i.op == Op::Alloca));
+    }
+}

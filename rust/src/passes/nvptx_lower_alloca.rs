@@ -1,0 +1,61 @@
+//! `-nvptx-lower-alloca` — lower allocas into the per-thread
+//! `__local_depot` (PTX `.local` state space).
+//!
+//! In the real backend this rewrites generic-address-space accesses into
+//! cheap `.local` ones; §3.4 of the paper observes the depot accesses that
+//! `reg2mem` leaves behind are "too fast to affect performance" once
+//! lowered. Here the lowering flips the module flag that codegen and the
+//! cost model consult: un-lowered allocas are charged generic-addressing
+//! cost, lowered ones the (near-free) depot cost. After lowering, the
+//! memory promotion passes can no longer raise the slots back to SSA —
+//! running `mem2reg`/`sroa` afterwards is a pipeline error (the paper's
+//! compile-crash bucket).
+
+use super::{Pass, PassError};
+use crate::ir::{Module, Op};
+
+pub struct NvptxLowerAlloca;
+
+impl Pass for NvptxLowerAlloca {
+    fn name(&self) -> &'static str {
+        "nvptx-lower-alloca"
+    }
+    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
+        let has_allocas = m
+            .kernels
+            .iter()
+            .any(|f| f.insts.iter().any(|i| i.op == Op::Alloca));
+        let changed = has_allocas && !m.allocas_lowered;
+        if has_allocas {
+            m.allocas_lowered = true;
+        }
+        Ok(changed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{AddrSpace, Inst, KernelBuilder, Ty, Value};
+
+    #[test]
+    fn lowers_when_allocas_present() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let entry = b.cur_block();
+        b.f.insert_inst(
+            entry,
+            Inst::new(Op::Alloca, Ty::Ptr(AddrSpace::Local), &[Value::ImmI(4)]),
+        );
+        let mut m = Module::new("t");
+        m.kernels.push(b.finish());
+        assert!(NvptxLowerAlloca.run(&mut m).unwrap());
+        assert!(m.allocas_lowered);
+    }
+
+    #[test]
+    fn noop_without_allocas() {
+        let mut m = Module::new("t");
+        assert!(!NvptxLowerAlloca.run(&mut m).unwrap());
+        assert!(!m.allocas_lowered);
+    }
+}

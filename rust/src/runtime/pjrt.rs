@@ -1,0 +1,72 @@
+//! Thin wrapper over the `xla` crate (PJRT C API, CPU plugin).
+//!
+//! Interchange format is HLO *text*: jax ≥ 0.5 serialized protos carry
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// Default artifacts directory: `$PHASEORD_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("PHASEORD_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// A PJRT CPU client + compiled golden executables, loaded on demand.
+pub struct GoldenRunner {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+}
+
+impl GoldenRunner {
+    pub fn new(dir: impl AsRef<Path>) -> Result<GoldenRunner> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(GoldenRunner {
+            client,
+            dir: dir.as_ref().to_path_buf(),
+        })
+    }
+
+    pub fn from_env() -> Result<GoldenRunner> {
+        Self::new(artifacts_dir())
+    }
+
+    pub fn artifact_path(&self, bench: &str) -> PathBuf {
+        self.dir.join(format!("{bench}.hlo.txt"))
+    }
+
+    pub fn has_artifact(&self, bench: &str) -> bool {
+        self.artifact_path(bench).exists()
+    }
+
+    /// Execute a benchmark's golden model (zero-arg) and return its
+    /// output buffers (f32, flattened), in the model's declared order.
+    pub fn run(&self, bench: &str) -> Result<Vec<Vec<f32>>> {
+        let path = self.artifact_path(bench);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {bench}"))?;
+        let result = exe
+            .execute::<xla::Literal>(&[])
+            .with_context(|| format!("executing {bench}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // models lower with return_tuple=True
+        let parts = lit.to_tuple().context("decomposing result tuple")?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>().context("reading f32 output")?);
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,638 @@
+//! Static GPU cost model over the vPTX stream.
+//!
+//! Prices a compiled kernel at the paper's default dataset shapes without
+//! executing it: block execution frequencies come from loop trip counts
+//! (affine bound analysis, with averaged outer-IV/thread-id substitution
+//! for triangular loops) and branch-shape heuristics; instruction costs
+//! come from the target tables; unroll hints reduce loop-control overhead
+//! and overlap memory latency; register pressure degrades occupancy.
+//!
+//! Only *relative* numbers matter: every experiment reports ratios
+//! between variants priced by the same model.
+
+use std::collections::HashMap;
+
+use crate::analysis::AffineCtx;
+use crate::codegen::{MemClass, PtxKind, PtxProgram};
+use crate::ir::dom::DomTree;
+use crate::ir::loops::LoopForest;
+use crate::ir::{BlockId, Function, Op, Value};
+use crate::sim::target::Target;
+
+#[derive(Debug, Clone)]
+pub struct CostBreakdown {
+    /// expected cycles per thread
+    pub cycles_per_thread: f64,
+    /// modelled wall time (µs) at the given grid
+    pub time_us: f64,
+    /// memory share of the cycles (profiling/report aid)
+    pub mem_cycles: f64,
+    pub alu_cycles: f64,
+    pub occupancy: f64,
+    /// per-loop trip estimates (debugging / DESIGN.md §Perf evidence)
+    pub trips: Vec<(BlockId, f64)>,
+}
+
+/// Estimate execution time of one kernel at the given launch grid.
+pub fn estimate_time(
+    f: &Function,
+    prog: &PtxProgram,
+    grid: (usize, usize),
+    target: &Target,
+) -> CostBreakdown {
+    estimate_time_unknown(f, prog, grid, target, UNKNOWN_TRIPS_DEFAULT)
+}
+
+/// Unknown trip counts fall back PESSIMISTICALLY: otherwise a
+/// transformation that merely obscures the induction structure (e.g.
+/// repeated reg2mem/sroa cycles) would be rewarded with a fake speedup.
+/// The DSE passes the per-kernel *baseline* maximum trip count here —
+/// the measurement harness knows the workload it launches.
+pub const UNKNOWN_TRIPS_DEFAULT: f64 = 512.0;
+
+pub fn estimate_time_unknown(
+    f: &Function,
+    prog: &PtxProgram,
+    grid: (usize, usize),
+    target: &Target,
+    unknown_trips: f64,
+) -> CostBreakdown {
+    let dt = DomTree::compute(f);
+    let lf = LoopForest::compute(f, &dt);
+
+    // ---- loop trip counts, outer-first, with averaged substitution ----
+    let mut env: HashMap<Value, f64> = HashMap::new();
+    env.insert(Value::GlobalId(0), (grid.0.max(1) as f64 - 1.0) / 2.0);
+    env.insert(Value::GlobalId(1), (grid.1.max(1) as f64 - 1.0) / 2.0);
+    env.insert(Value::GlobalSize(0), grid.0 as f64);
+    env.insert(Value::GlobalSize(1), grid.1 as f64);
+
+    let mut loop_order: Vec<usize> = (0..lf.loops.len()).collect();
+    loop_order.sort_by_key(|&i| lf.loops[i].depth);
+    let mut trips: HashMap<usize, f64> = HashMap::new();
+    for &li in &loop_order {
+        let t = trip_count(f, &lf, li, &mut env).unwrap_or(unknown_trips);
+        trips.insert(li, t.max(0.0));
+    }
+
+    // ---- block frequencies ----
+    let freq = block_freqs(f, &dt, &lf, &trips);
+
+    // ---- price each block (roofline-style: ALU issues overlap with
+    // in-flight memory latency, so a block costs max(mem, alu) plus a
+    // small serialization tail — this is what makes pure address-ALU
+    // savings invisible on load-bound kernels like 3DCONV, §3.4) ----
+    const OVERLAP_TAIL: f64 = 0.2;
+    let mut cycles = 0.0;
+    let mut mem_cycles = 0.0;
+    let mut alu_cycles = 0.0;
+    for bb in f.block_ids() {
+        let Some(&(lo, hi)) = prog.block_ranges.get(&bb) else {
+            continue;
+        };
+        let fq = *freq.get(&bb).unwrap_or(&0.0);
+        if fq == 0.0 || lo == hi {
+            continue;
+        }
+        let mut blk_mem = 0.0;
+        let mut blk_alu = 0.0;
+        // unroll context: innermost enclosing loop's header hint
+        let u = lf
+            .innermost_containing(bb)
+            .map(|li| f.block(lf.loops[li].header).unroll)
+            .unwrap_or(1)
+            .max(1);
+        let overlap = target.unroll_overlap(u);
+        let li_opt = lf.innermost_containing(bb);
+        let is_header = li_opt.map(|li| bb == lf.loops[li].header).unwrap_or(false);
+        let is_latch = li_opt
+            .map(|li| lf.loops[li].latches.contains(&bb))
+            .unwrap_or(false);
+        // In a latch (possibly merged with the body by simplifycfg) only
+        // the *update tail* — IV add, pointer increments, branch after the
+        // last real-work instruction — amortizes under unrolling. Memory
+        // and FP work never amortizes; it only gains latency overlap.
+        let tail_start = if is_latch {
+            prog.insts[lo..hi]
+                .iter()
+                .rposition(|i| {
+                    let (_, is_mem) = inst_cost(i.kind, target);
+                    is_mem
+                        || matches!(
+                            i.kind,
+                            PtxKind::FAdd
+                                | PtxKind::FMul
+                                | PtxKind::Fma
+                                | PtxKind::FDiv
+                                | PtxKind::Sqrt
+                                | PtxKind::Exp
+                        )
+                })
+                .map(|p| lo + p + 1)
+                .unwrap_or(lo)
+        } else {
+            hi
+        };
+        for (idx, inst) in prog.insts[lo..hi].iter().enumerate() {
+            let (c, is_mem) = inst_cost(inst.kind, target);
+            let mut c = c;
+            let is_ctrl_kind = matches!(
+                inst.kind,
+                PtxKind::Setp | PtxKind::Bra | PtxKind::IntAlu | PtxKind::Cvt
+            );
+            let in_tail = lo + idx >= tail_start;
+            let amortized = u > 1
+                && is_ctrl_kind
+                && (in_tail || (is_header && matches!(inst.kind, PtxKind::Setp | PtxKind::Bra)));
+            if amortized {
+                c /= u as f64;
+            } else if is_mem && u > 1 {
+                c *= overlap;
+            }
+            if is_mem {
+                blk_mem += c;
+            } else {
+                blk_alu += c;
+            }
+        }
+        let blk_cost = blk_mem.max(blk_alu) + OVERLAP_TAIL * blk_mem.min(blk_alu);
+        cycles += fq * blk_cost;
+        mem_cycles += fq * blk_mem;
+        alu_cycles += fq * blk_alu;
+    }
+    if prog.outlined {
+        cycles += target.call_overhead;
+    }
+
+    let threads = (grid.0 * grid.1) as f64;
+    let warps = (threads / 32.0).ceil().max(1.0);
+    let occupancy = (target.reg_budget / prog.regs as f64).clamp(0.25, 1.0);
+    let time_us = cycles * warps / (target.sms * occupancy * target.clock_ghz * 1000.0);
+
+    CostBreakdown {
+        cycles_per_thread: cycles,
+        time_us,
+        mem_cycles,
+        alu_cycles,
+        occupancy,
+        trips: trips
+            .iter()
+            .map(|(&li, &t)| (lf.loops[li].header, t))
+            .collect(),
+    }
+}
+
+fn inst_cost(kind: PtxKind, t: &Target) -> (f64, bool) {
+    match kind {
+        PtxKind::IntAlu => (t.int_alu, false),
+        PtxKind::IntMul => (t.int_mul, false),
+        PtxKind::Cvt => (t.cvt, false),
+        PtxKind::Setp => (t.setp, false),
+        PtxKind::Bra => (t.bra, false),
+        PtxKind::FAdd => (t.fadd, false),
+        PtxKind::FMul => (t.fmul, false),
+        PtxKind::Fma => (t.fma, false),
+        PtxKind::FDiv => (t.fdiv, false),
+        PtxKind::Sqrt => (t.sqrt, false),
+        PtxKind::Exp => (t.exp, false),
+        PtxKind::Sel => (t.sel, false),
+        PtxKind::Ld(c) => (
+            match c {
+                MemClass::Coalesced => t.ld_coal,
+                MemClass::Broadcast => t.ld_bcast,
+                MemClass::Strided => t.ld_strided,
+                MemClass::Local => t.ld_local,
+                MemClass::GenericLocal => t.ld_generic,
+            },
+            true,
+        ),
+        PtxKind::LdV2(c) => (
+            match c {
+                MemClass::Strided => t.ld_strided * 1.5,
+                _ => t.ld_v2,
+            },
+            true,
+        ),
+        PtxKind::St(c) => (
+            match c {
+                MemClass::Coalesced => t.st_coal,
+                MemClass::Broadcast => t.st_bcast,
+                MemClass::Strided => t.st_strided,
+                MemClass::Local => t.st_local,
+                MemClass::GenericLocal => t.st_generic,
+            },
+            true,
+        ),
+        PtxKind::Ret => (1.0, false),
+    }
+}
+
+/// Trip count of a loop from its header exit check `icmp iv, bound`,
+/// with non-constant bounds averaged through `env`. Also records the
+/// loop IV's average value into `env` for inner (triangular) loops.
+fn trip_count(
+    f: &Function,
+    lf: &LoopForest,
+    li: usize,
+    env: &mut HashMap<Value, f64>,
+) -> Option<f64> {
+    let l = &lf.loops[li];
+    let header = l.header;
+    let term = f.terminator(header)?;
+    if f.inst(term).op != Op::CondBr {
+        return None;
+    }
+    let cond = f.inst(term).args()[0].as_inst()?;
+    let (pred, lhs, rhs) = match f.inst(cond).op {
+        Op::ICmp(p) => (p, f.inst(cond).args()[0], f.inst(cond).args()[1]),
+        _ => return None,
+    };
+    // identify the IV among header phis, or (after reg2mem) among
+    // memory-demoted slots: load-in-header / store(load+step)-in-latch /
+    // store(init)-before-the-loop
+    let mut cx = AffineCtx::new(f);
+    let (iv, init, step) = f
+        .block(header)
+        .insts
+        .iter()
+        .filter(|&&i| f.inst(i).op == Op::Phi)
+        .find_map(|&i| {
+            let v = Value::Inst(i);
+            cx.as_induction(v).map(|(init, step)| (v, init, step))
+        })
+        .or_else(|| demoted_induction(f, lf, li))?;
+    if step == 0 {
+        return None;
+    }
+    // header check must involve the IV on the lhs
+    let lhs_aff = cx.eval(lhs)?;
+    if lhs_aff.coeff(iv) != 1 {
+        return None;
+    }
+    let bound_aff = cx.eval(rhs)?;
+    let eval = |aff: &crate::analysis::Affine, env: &HashMap<Value, f64>| -> Option<f64> {
+        let mut total = aff.konst as f64;
+        for &(t, c) in &aff.terms {
+            if t == iv {
+                continue;
+            }
+            total += c as f64 * env.get(&t).copied()?;
+        }
+        Some(total)
+    };
+    let init_v = match init {
+        Value::ImmI(k) => k as f64,
+        other => {
+            let aff = cx.eval(other)?;
+            eval(&aff, env)?
+        }
+    };
+    let bound_v = eval(&bound_aff, env)?;
+    // lhs may carry invariant addends: iv + c < bound ⇒ effective bound
+    let lhs_rest = {
+        let (_, rest) = lhs_aff.split(iv);
+        eval(&rest, env)?
+    };
+    let span = bound_v - lhs_rest - init_v;
+    let mut trips = span / step as f64;
+    if matches!(pred, crate::ir::CmpPred::Le | crate::ir::CmpPred::Ge) {
+        trips += 1.0;
+    }
+    let trips = trips.max(0.0);
+    // average IV value for inner triangular bounds
+    env.insert(iv, init_v + (trips - 1.0).max(0.0) / 2.0 * step as f64);
+    Some(trips)
+}
+
+/// Recognize a reg2mem-demoted induction variable: a header load from an
+/// alloca slot that the latch stores back incremented by a constant, with
+/// the initial value stored in the preheader (or entry). Returns
+/// (iv-load value, init value, step).
+fn demoted_induction(
+    f: &Function,
+    lf: &LoopForest,
+    li: usize,
+) -> Option<(Value, Value, i64)> {
+    use crate::analysis::{MemLoc, Root};
+    let l = &lf.loops[li];
+    let header = l.header;
+    let latch = *l.latches.first()?;
+    let ph = l.preheader?;
+    for &hid in &f.block(header).insts {
+        let hinst = f.inst(hid);
+        if hinst.op != Op::Load {
+            continue;
+        }
+        let slot = {
+            let mut cx = AffineCtx::new(f);
+            match MemLoc::resolve(&mut cx, hinst.args()[0]).root {
+                Root::Alloca(a) => a,
+                _ => continue,
+            }
+        };
+        // latch store of load+step
+        let mut step: Option<i64> = None;
+        for &sid in &f.block(latch).insts {
+            let sinst = f.inst(sid);
+            if sinst.op != Op::Store {
+                continue;
+            }
+            let same = {
+                let mut cx = AffineCtx::new(f);
+                matches!(
+                    MemLoc::resolve(&mut cx, sinst.args()[0]).root,
+                    Root::Alloca(a) if a == slot
+                )
+            };
+            if !same {
+                continue;
+            }
+            let mut cx = AffineCtx::new(f);
+            let aff = cx.eval(sinst.args()[1])?;
+            let (c, rest) = aff.split(Value::Inst(hid));
+            if c == 1 {
+                if let Some(k) = rest.is_const() {
+                    step = Some(k);
+                }
+            }
+        }
+        let step = match step {
+            Some(s) if s != 0 => s,
+            _ => continue,
+        };
+        // init store: preheader (or entry)
+        let mut init: Option<Value> = None;
+        for bb in [ph, f.entry] {
+            for &sid in &f.block(bb).insts {
+                let sinst = f.inst(sid);
+                if sinst.op != Op::Store {
+                    continue;
+                }
+                let same = {
+                    let mut cx = AffineCtx::new(f);
+                    matches!(
+                        MemLoc::resolve(&mut cx, sinst.args()[0]).root,
+                        Root::Alloca(a) if a == slot
+                    )
+                };
+                if same {
+                    init = Some(sinst.args()[1]);
+                }
+            }
+            if init.is_some() {
+                break;
+            }
+        }
+        if let Some(init) = init {
+            return Some((Value::Inst(hid), init, step));
+        }
+    }
+    None
+}
+
+/// Structural execution frequency per block: entry = 1; condbr splits
+/// 50/50 (90/10 when one arm is trivially empty — guard shape); loop
+/// headers multiply by trip count.
+fn block_freqs(
+    f: &Function,
+    dt: &DomTree,
+    lf: &LoopForest,
+    trips: &HashMap<usize, f64>,
+) -> HashMap<BlockId, f64> {
+    let mut freq: HashMap<BlockId, f64> = HashMap::new();
+    let rpo = f.rpo();
+    // loop membership & header trip multipliers
+    let header_of: HashMap<BlockId, usize> = lf
+        .loops
+        .iter()
+        .enumerate()
+        .map(|(i, l)| (l.header, i))
+        .collect();
+    freq.insert(f.entry, 1.0);
+    for &bb in &rpo {
+        let mut fin = if bb == f.entry { 1.0 } else { 0.0 };
+        if bb != f.entry {
+            for &p in &f.block(bb).preds {
+                // skip back edges (they're folded into the trip multiplier)
+                if dt.dominates(bb, p) {
+                    continue;
+                }
+                let pf = *freq.get(&p).unwrap_or(&0.0);
+                // a loop-exit edge fires once per loop *entry*, not per
+                // iteration: normalize by the trip count of every loop
+                // left along this edge
+                let mut div = 1.0;
+                let mut exited = false;
+                let mut li_opt = lf.innermost_containing(p);
+                while let Some(li) = li_opt {
+                    if lf.loops[li].blocks.contains(&bb) {
+                        break;
+                    }
+                    div *= trips.get(&li).copied().unwrap_or(16.0).max(1.0);
+                    exited = true;
+                    li_opt = lf.loops[li].parent;
+                }
+                let prob = if exited {
+                    1.0 / div
+                } else if header_of
+                    .get(&p)
+                    .map(|&li| lf.loops[li].blocks.contains(&bb))
+                    .unwrap_or(false)
+                {
+                    // loop-header → body: taken every iteration
+                    1.0
+                } else {
+                    edge_prob(f, p, bb)
+                };
+                fin += pf * prob;
+            }
+        }
+        if let Some(&li) = header_of.get(&bb) {
+            fin *= trips.get(&li).copied().unwrap_or(16.0).max(0.0);
+        }
+        freq.insert(bb, fin);
+    }
+    freq
+}
+
+/// Probability of taking the edge `p → b`.
+fn edge_prob(f: &Function, p: BlockId, b: BlockId) -> f64 {
+    let succs = &f.block(p).succs;
+    if succs.len() < 2 {
+        return 1.0;
+    }
+    // guard shape: an arm that is just a forwarding block (≤1 live inst)
+    // is the unlikely side
+    let live = |bb: BlockId| {
+        f.block(bb)
+            .insts
+            .iter()
+            .filter(|&&i| !f.inst(i).is_nop())
+            .count()
+    };
+    let (a, c) = (succs[0], succs[1]);
+    let (la, lc) = (live(a), live(c));
+    let (pa, pc) = if la <= 1 && lc > 1 {
+        (0.1, 0.9)
+    } else if lc <= 1 && la > 1 {
+        (0.9, 0.1)
+    } else {
+        (0.5, 0.5)
+    };
+    // count multiplicity (condbr with both edges to same block)
+    if a == c {
+        return 1.0;
+    }
+    if b == a {
+        pa
+    } else if b == c {
+        pc
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::emit;
+    use crate::ir::{AddrSpace, KernelBuilder, Module, Ty};
+    use crate::passes::{run_sequence, PassOutcome};
+    use crate::sim::target::Target;
+
+    /// GEMM-shaped kernel (store in the k-loop).
+    fn gemm_like() -> Module {
+        let mut b = KernelBuilder::new(
+            "gemm",
+            &[
+                ("a", Ty::Ptr(AddrSpace::Global)),
+                ("b", Ty::Ptr(AddrSpace::Global)),
+                ("c", Ty::Ptr(AddrSpace::Global)),
+            ],
+        );
+        let gid = b.gid(0);
+        let n = b.i(512);
+        b.for_loop("k", b.i(0), n, 1, |b, k| {
+            let t = b.mul(k, b.i(512));
+            let aidx = b.add(t, gid);
+            let av = b.load(b.param(0), aidx);
+            let bv = b.load(b.param(1), k);
+            let prod = b.fmul(av, bv);
+            let cv = b.load(b.param(2), gid);
+            let s = b.fadd(cv, prod);
+            b.store(b.param(2), gid, s);
+        });
+        let mut m = Module::new("gemm");
+        m.kernels.push(b.finish());
+        m
+    }
+
+    #[test]
+    fn trip_count_constant_loop() {
+        let m = gemm_like();
+        let f = &m.kernels[0];
+        let p = emit(f, &m);
+        let t = Target::gp104();
+        let cb = estimate_time(f, &p, (512, 1), &t);
+        let (_hdr, trips) = cb.trips[0];
+        assert!((trips - 512.0).abs() < 1e-6);
+        assert!(cb.cycles_per_thread > 512.0, "loop body dominates");
+    }
+
+    #[test]
+    fn store_promotion_speeds_up_model() {
+        // the paper's core claim, end to end at the model level:
+        // cfl-anders-aa + licm must make the kernel faster
+        let t = Target::gp104();
+        let m0 = gemm_like();
+        let p0 = emit(&m0.kernels[0], &m0);
+        let c0 = estimate_time(&m0.kernels[0], &p0, (512, 1), &t);
+
+        let mut m1 = gemm_like();
+        let out = run_sequence(&mut m1, &["cfl-anders-aa", "licm"], true);
+        assert_eq!(out, PassOutcome::Ok);
+        let p1 = emit(&m1.kernels[0], &m1);
+        let c1 = estimate_time(&m1.kernels[0], &p1, (512, 1), &t);
+
+        let speedup = c0.time_us / c1.time_us;
+        assert!(
+            speedup > 1.3,
+            "promotion speedup {speedup:.2} (before {:.1} after {:.1} cycles)",
+            c0.cycles_per_thread,
+            c1.cycles_per_thread
+        );
+    }
+
+    #[test]
+    fn o3_does_not_unlock_promotion() {
+        use crate::passes::manager::standard_level;
+        let t = Target::gp104();
+        let m0 = gemm_like();
+        let p0 = emit(&m0.kernels[0], &m0);
+        let c0 = estimate_time(&m0.kernels[0], &p0, (512, 1), &t);
+
+        let mut m1 = gemm_like();
+        let seq = standard_level("-O3");
+        let out = run_sequence(&mut m1, &seq, true);
+        assert_eq!(out, PassOutcome::Ok);
+        let p1 = emit(&m1.kernels[0], &m1);
+        let c1 = estimate_time(&m1.kernels[0], &p1, (512, 1), &t);
+        let speedup = c0.time_us / c1.time_us;
+        assert!(
+            speedup < 1.35,
+            "-O3 should NOT reach the promotion speedup, got {speedup:.2}"
+        );
+    }
+
+    #[test]
+    fn triangular_trip_counts_average() {
+        // for j2 in gid..M — trips average to about M/2 over the grid
+        let mut b = KernelBuilder::new("tri", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let gid = b.gid(0);
+        let m_ = b.i(64);
+        b.for_loop("j2", gid, m_, 1, |b, j2| {
+            let v = b.load(b.param(0), j2);
+            b.store(b.param(0), j2, v);
+        });
+        let mut m = Module::new("t");
+        m.kernels.push(b.finish());
+        let f = &m.kernels[0];
+        let p = emit(f, &m);
+        let cb = estimate_time(f, &p, (64, 1), &Target::gp104());
+        let (_hdr, trips) = cb.trips[0];
+        assert!((trips - 32.5).abs() < 1.0, "got {trips}");
+    }
+
+    #[test]
+    fn unroll_hint_reduces_cost() {
+        let t = Target::gp104();
+        let m0 = gemm_like();
+        let p0 = emit(&m0.kernels[0], &m0);
+        let c0 = estimate_time(&m0.kernels[0], &p0, (512, 1), &t);
+        let mut m1 = gemm_like();
+        // set unroll=8 on the loop header
+        let f = &mut m1.kernels[0];
+        let dt = crate::ir::dom::DomTree::compute(f);
+        let lf = crate::ir::loops::LoopForest::compute(f, &dt);
+        let hdr = lf.loops[0].header;
+        f.block_mut(hdr).unroll = 8;
+        let p1 = emit(&m1.kernels[0], &m1);
+        let c1 = estimate_time(&m1.kernels[0], &p1, (512, 1), &t);
+        assert!(c1.time_us < c0.time_us);
+        let ratio = c0.time_us / c1.time_us;
+        assert!(ratio > 1.05 && ratio < 2.0, "unroll win is moderate: {ratio:.2}");
+    }
+
+    #[test]
+    fn occupancy_degrades_with_registers() {
+        let m = gemm_like();
+        let f = &m.kernels[0];
+        let mut p = emit(f, &m);
+        let t = Target::gp104();
+        let c_low = estimate_time(f, &p, (512, 1), &t);
+        p.regs = 200;
+        let c_high = estimate_time(f, &p, (512, 1), &t);
+        assert!(c_high.time_us > c_low.time_us);
+        assert!(c_high.occupancy < c_low.occupancy);
+    }
+}

@@ -1,0 +1,392 @@
+//! SIMT functional executor over the IR.
+//!
+//! Runs a kernel for every point of its launch grid against real buffers.
+//! This is the validation half of the paper's methodology (§2.4): the DSE
+//! executes each candidate's compiled code on small inputs and compares
+//! against an independent reference (ours comes from the JAX/Pallas
+//! artifacts via PJRT). Miscompiles from the documented pass bugs show up
+//! here as wrong output, out-of-bounds accesses, or non-termination.
+
+use std::collections::HashMap;
+
+use crate::ir::{BlockId, Function, InstId, Op, Value};
+
+/// Global buffers, positionally aligned with kernel pointer params.
+#[derive(Debug, Clone)]
+pub struct Buffers {
+    pub bufs: Vec<Vec<f32>>,
+}
+
+impl Buffers {
+    pub fn new(sizes: &[usize]) -> Buffers {
+        Buffers {
+            bufs: sizes.iter().map(|&n| vec![0.0; n]).collect(),
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum ExecError {
+    OutOfBounds { buf: usize, index: i64 },
+    DivideByZero,
+    StepLimit,
+    Malformed(String),
+}
+
+impl std::fmt::Display for ExecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecError::OutOfBounds { buf, index } => {
+                write!(f, "out-of-bounds access: buffer {buf} index {index}")
+            }
+            ExecError::DivideByZero => write!(f, "integer divide by zero"),
+            ExecError::StepLimit => write!(f, "step limit exceeded (non-termination)"),
+            ExecError::Malformed(s) => write!(f, "malformed execution: {s}"),
+        }
+    }
+}
+impl std::error::Error for ExecError {}
+
+/// Per-thread value slot.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Slot {
+    I(i64),
+    F(f32),
+    /// pointer into a global buffer: (param index, byte offset)
+    P(u16, i64),
+    /// pointer into the thread's local depot: (alloca id, byte offset)
+    L(u32, i64),
+    Undef,
+}
+
+/// Execute `f` over an `nx × ny` grid (gid.0 fastest). Returns the total
+/// step count (all threads).
+pub fn run_kernel(
+    f: &Function,
+    grid: (usize, usize),
+    bufs: &mut Buffers,
+    step_limit: u64,
+) -> Result<u64, ExecError> {
+    let mut steps: u64 = 0;
+    for gy in 0..grid.1 {
+        for gx in 0..grid.0 {
+            run_thread(f, (gx as i64, gy as i64), grid, bufs, &mut steps, step_limit)?;
+        }
+    }
+    Ok(steps)
+}
+
+fn run_thread(
+    f: &Function,
+    gid: (i64, i64),
+    grid: (usize, usize),
+    bufs: &mut Buffers,
+    steps: &mut u64,
+    step_limit: u64,
+) -> Result<(), ExecError> {
+    let mut vals: Vec<Slot> = vec![Slot::Undef; f.insts.len()];
+    let mut local: HashMap<u32, Slot> = HashMap::new();
+
+    let read = |v: Value, vals: &[Slot]| -> Slot {
+        match v {
+            Value::ImmI(x) => Slot::I(x),
+            Value::ImmF(b) => Slot::F(f32::from_bits(b)),
+            Value::Arg(i) => Slot::P(i, 0),
+            Value::GlobalId(0) => Slot::I(gid.0),
+            Value::GlobalId(_) => Slot::I(gid.1),
+            Value::GlobalSize(0) => Slot::I(grid.0 as i64),
+            Value::GlobalSize(_) => Slot::I(grid.1 as i64),
+            Value::Inst(id) => vals[id.0 as usize],
+        }
+    };
+    let as_i = |s: Slot| -> Result<i64, ExecError> {
+        match s {
+            Slot::I(x) => Ok(x),
+            Slot::F(x) => Ok(x as i64),
+            _ => Err(ExecError::Malformed("int expected".into())),
+        }
+    };
+    let as_f = |s: Slot| -> Result<f32, ExecError> {
+        match s {
+            Slot::F(x) => Ok(x),
+            Slot::I(x) => Ok(x as f32),
+            _ => Err(ExecError::Malformed("float expected".into())),
+        }
+    };
+
+    let mut cur = f.entry;
+    let mut prev: Option<BlockId> = None;
+    loop {
+        // phi resolution: parallel copy on entry
+        if let Some(p) = prev {
+            let pi = f
+                .block(cur)
+                .pred_index(p)
+                .ok_or_else(|| ExecError::Malformed("edge without pred entry".into()))?;
+            let mut updates: Vec<(InstId, Slot)> = Vec::new();
+            for &i in &f.block(cur).insts {
+                let inst = f.inst(i);
+                if inst.op != Op::Phi {
+                    break;
+                }
+                updates.push((i, read(inst.args()[pi], &vals)));
+            }
+            for (i, s) in updates {
+                vals[i.0 as usize] = s;
+            }
+        }
+
+        let mut next: Option<BlockId> = None;
+        for &i in &f.block(cur).insts {
+            let inst = f.inst(i);
+            if inst.is_nop() || inst.op == Op::Phi {
+                continue;
+            }
+            *steps += 1;
+            if *steps > step_limit {
+                return Err(ExecError::StepLimit);
+            }
+            let a = |k: usize| read(inst.args()[k], &vals);
+            let out: Slot = match inst.op {
+                Op::Add => Slot::I(as_i(a(0))?.wrapping_add(as_i(a(1))?)),
+                Op::Sub => Slot::I(as_i(a(0))?.wrapping_sub(as_i(a(1))?)),
+                Op::Mul => Slot::I(as_i(a(0))?.wrapping_mul(as_i(a(1))?)),
+                Op::SDiv => {
+                    let d = as_i(a(1))?;
+                    if d == 0 {
+                        return Err(ExecError::DivideByZero);
+                    }
+                    Slot::I(as_i(a(0))?.wrapping_div(d))
+                }
+                Op::SRem => {
+                    let d = as_i(a(1))?;
+                    if d == 0 {
+                        return Err(ExecError::DivideByZero);
+                    }
+                    Slot::I(as_i(a(0))?.wrapping_rem(d))
+                }
+                Op::Shl => Slot::I(as_i(a(0))? << (as_i(a(1))? & 63)),
+                Op::AShr => Slot::I(as_i(a(0))? >> (as_i(a(1))? & 63)),
+                Op::And => Slot::I(as_i(a(0))? & as_i(a(1))?),
+                Op::Or => Slot::I(as_i(a(0))? | as_i(a(1))?),
+                Op::Xor => Slot::I(as_i(a(0))? ^ as_i(a(1))?),
+                Op::FAdd => Slot::F(as_f(a(0))? + as_f(a(1))?),
+                Op::FSub => Slot::F(as_f(a(0))? - as_f(a(1))?),
+                Op::FMul => Slot::F(as_f(a(0))? * as_f(a(1))?),
+                Op::FDiv => Slot::F(as_f(a(0))? / as_f(a(1))?),
+                Op::FSqrt => Slot::F(as_f(a(0))?.sqrt()),
+                Op::FAbs => Slot::F(as_f(a(0))?.abs()),
+                Op::FNeg => Slot::F(-as_f(a(0))?),
+                Op::FExp => Slot::F(as_f(a(0))?.exp()),
+                Op::Select => {
+                    if as_i(a(0))? != 0 {
+                        a(1)
+                    } else {
+                        a(2)
+                    }
+                }
+                Op::ICmp(p) => Slot::I(p.eval_i(as_i(a(0))?, as_i(a(1))?) as i64),
+                Op::FCmp(p) => Slot::I(p.eval_f(as_f(a(0))?, as_f(a(1))?) as i64),
+                Op::Sext | Op::Trunc => Slot::I(as_i(a(0))?),
+                Op::SiToFp => Slot::F(as_i(a(0))? as f32),
+                Op::FpToSi => Slot::I(as_f(a(0))? as i64),
+                Op::PtrAdd => match a(0) {
+                    Slot::P(b, off) => Slot::P(b, off + as_i(a(1))?),
+                    Slot::L(b, off) => Slot::L(b, off + as_i(a(1))?),
+                    _ => return Err(ExecError::Malformed("ptradd on non-pointer".into())),
+                },
+                Op::Alloca => Slot::L(i.0, 0),
+                Op::Load => match a(0) {
+                    Slot::P(b, off) => {
+                        let idx = off / 4;
+                        let buf = bufs
+                            .bufs
+                            .get(b as usize)
+                            .ok_or(ExecError::Malformed("bad buffer".into()))?;
+                        if off % 4 != 0 || idx < 0 || idx as usize >= buf.len() {
+                            return Err(ExecError::OutOfBounds {
+                                buf: b as usize,
+                                index: idx,
+                            });
+                        }
+                        Slot::F(buf[idx as usize])
+                    }
+                    Slot::L(slot, _) => *local.get(&slot).unwrap_or(&Slot::F(0.0)),
+                    _ => return Err(ExecError::Malformed("load from non-pointer".into())),
+                },
+                Op::Store => {
+                    let v = a(1);
+                    match a(0) {
+                        Slot::P(b, off) => {
+                            let idx = off / 4;
+                            let buf = bufs
+                                .bufs
+                                .get_mut(b as usize)
+                                .ok_or(ExecError::Malformed("bad buffer".into()))?;
+                            if off % 4 != 0 || idx < 0 || idx as usize >= buf.len() {
+                                return Err(ExecError::OutOfBounds {
+                                    buf: b as usize,
+                                    index: idx,
+                                });
+                            }
+                            buf[idx as usize] = as_f(v)?;
+                        }
+                        Slot::L(slot, _) => {
+                            local.insert(slot, v);
+                        }
+                        _ => return Err(ExecError::Malformed("store to non-pointer".into())),
+                    }
+                    Slot::Undef
+                }
+                Op::Br => {
+                    next = Some(f.block(cur).succs[0]);
+                    Slot::Undef
+                }
+                Op::CondBr => {
+                    let c = as_i(a(0))?;
+                    next = Some(if c != 0 {
+                        f.block(cur).succs[0]
+                    } else {
+                        f.block(cur).succs[1]
+                    });
+                    Slot::Undef
+                }
+                Op::Ret => return Ok(()),
+                Op::Nop | Op::Phi => unreachable!(),
+            };
+            vals[i.0 as usize] = out;
+        }
+        let Some(n) = next else {
+            return Err(ExecError::Malformed("block fell through".into()));
+        };
+        prev = Some(cur);
+        cur = n;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{AddrSpace, CmpPred, KernelBuilder, Ty};
+
+    #[test]
+    fn saxpy_computes() {
+        let mut b = KernelBuilder::new(
+            "saxpy",
+            &[
+                ("x", Ty::Ptr(AddrSpace::Global)),
+                ("y", Ty::Ptr(AddrSpace::Global)),
+            ],
+        );
+        let gid = b.gid(0);
+        let xv = b.load(b.param(0), gid);
+        let t = b.fmul(xv, b.fc(2.0));
+        let yv = b.load(b.param(1), gid);
+        let s = b.fadd(t, yv);
+        b.store(b.param(1), gid, s);
+        let f = b.finish();
+        let mut bufs = Buffers::new(&[8, 8]);
+        for i in 0..8 {
+            bufs.bufs[0][i] = i as f32;
+            bufs.bufs[1][i] = 1.0;
+        }
+        run_kernel(&f, (8, 1), &mut bufs, 1_000_000).unwrap();
+        for i in 0..8 {
+            assert_eq!(bufs.bufs[1][i], 2.0 * i as f32 + 1.0);
+        }
+    }
+
+    #[test]
+    fn loop_accumulation() {
+        let mut b = KernelBuilder::new(
+            "dot",
+            &[
+                ("a", Ty::Ptr(AddrSpace::Global)),
+                ("out", Ty::Ptr(AddrSpace::Global)),
+            ],
+        );
+        let n = b.i(16);
+        let (_h, acc) = b.for_loop_acc("i", b.i(0), n, 1, b.fc(0.0), |b, iv, acc| {
+            let v = b.load(b.param(0), iv);
+            b.fadd(acc, v)
+        });
+        b.store(b.param(1), b.i(0), acc);
+        let f = b.finish();
+        let mut bufs = Buffers::new(&[16, 1]);
+        for i in 0..16 {
+            bufs.bufs[0][i] = 1.0 + i as f32;
+        }
+        run_kernel(&f, (1, 1), &mut bufs, 1_000_000).unwrap();
+        assert_eq!(bufs.bufs[1][0], (1..=16).sum::<i32>() as f32);
+    }
+
+    #[test]
+    fn guard_respected() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let c = b.icmp(CmpPred::Lt, b.gid(0), b.i(4));
+        b.if_then(c, |b| {
+            b.store(b.param(0), b.gid(0), b.fc(1.0));
+        });
+        let f = b.finish();
+        let mut bufs = Buffers::new(&[8]);
+        run_kernel(&f, (8, 1), &mut bufs, 1_000_000).unwrap();
+        assert_eq!(&bufs.bufs[0][..], &[1.0, 1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn out_of_bounds_detected() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let idx = b.add(b.gid(0), b.i(100));
+        b.store(b.param(0), idx, b.fc(1.0));
+        let f = b.finish();
+        let mut bufs = Buffers::new(&[8]);
+        let err = run_kernel(&f, (1, 1), &mut bufs, 1_000_000).unwrap_err();
+        assert!(matches!(err, ExecError::OutOfBounds { .. }));
+    }
+
+    #[test]
+    fn step_limit_trips_on_long_loops() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let n = b.i(1_000_000);
+        b.for_loop("i", b.i(0), n, 1, |b, _| {
+            let v = b.load(b.param(0), b.i(0));
+            b.store(b.param(0), b.i(0), v);
+        });
+        let f = b.finish();
+        let mut bufs = Buffers::new(&[1]);
+        let err = run_kernel(&f, (1, 1), &mut bufs, 10_000).unwrap_err();
+        assert_eq!(err, ExecError::StepLimit);
+    }
+
+    #[test]
+    fn local_depot_roundtrip() {
+        use crate::passes::reg2mem::Reg2Mem;
+        use crate::passes::Pass;
+        // accumulate through a demoted phi: results must be identical
+        let mut b = KernelBuilder::new(
+            "k",
+            &[
+                ("a", Ty::Ptr(AddrSpace::Global)),
+                ("out", Ty::Ptr(AddrSpace::Global)),
+            ],
+        );
+        let n = b.i(8);
+        let (_h, acc) = b.for_loop_acc("i", b.i(0), n, 1, b.fc(0.0), |b, iv, acc| {
+            let v = b.load(b.param(0), iv);
+            b.fadd(acc, v)
+        });
+        b.store(b.param(1), b.i(0), acc);
+        let mut m = crate::ir::Module::new("t");
+        m.kernels.push(b.finish());
+        let mut bufs = Buffers::new(&[8, 1]);
+        for i in 0..8 {
+            bufs.bufs[0][i] = i as f32;
+        }
+        let mut b1 = bufs.clone();
+        run_kernel(&m.kernels[0], (1, 1), &mut b1, 1_000_000).unwrap();
+        Reg2Mem.run(&mut m).unwrap();
+        let mut b2 = bufs.clone();
+        run_kernel(&m.kernels[0], (1, 1), &mut b2, 1_000_000).unwrap();
+        assert_eq!(b1.bufs[1][0], b2.bufs[1][0]);
+    }
+}

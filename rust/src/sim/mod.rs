@@ -1,0 +1,11 @@
+//! The simulated GPU: a SIMT functional executor (used for validation,
+//! like the paper's CPU-reference check) and a static cost model over the
+//! vPTX stream (used for measurement, standing in for the GTX 1070).
+
+pub mod cost;
+pub mod exec;
+pub mod target;
+
+pub use cost::{estimate_time, CostBreakdown};
+pub use exec::{run_kernel, Buffers, ExecError};
+pub use target::{Target, TargetKind};

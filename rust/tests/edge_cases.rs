@@ -1,0 +1,148 @@
+//! Edge-case and robustness tests across the substrate surface.
+
+use phaseord::bench_suite::{benchmark_by_name, Variant};
+use phaseord::codegen::lower;
+use phaseord::dse::{EvalStatus, Explorer, SeqGen};
+use phaseord::ir::printer::print_function;
+use phaseord::ir::{AddrSpace, KernelBuilder, Ty};
+use phaseord::passes::{registry_names, run_sequence};
+use phaseord::sim::cost::estimate_time;
+use phaseord::sim::exec::{run_kernel, Buffers};
+use phaseord::sim::Target;
+
+/// A loop whose bound is below its start executes zero times — the cost
+/// model must price it at ~zero body frequency, and the interpreter must
+/// skip the body.
+#[test]
+fn zero_trip_loop() {
+    let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+    let hi = b.i(0);
+    b.for_loop("i", b.i(5), hi, 1, |b, iv| {
+        b.store(b.param(0), iv, b.fc(9.0));
+    });
+    b.store(b.param(0), b.i(0), b.fc(1.0));
+    let f = b.finish();
+    let mut bufs = Buffers::new(&[8]);
+    run_kernel(&f, (1, 1), &mut bufs, 1_000_000).unwrap();
+    assert_eq!(bufs.bufs[0][0], 1.0);
+    assert!(bufs.bufs[0][1..].iter().all(|&x| x == 0.0));
+    let mut m = phaseord::ir::Module::new("t");
+    m.kernels.push(f);
+    let (cleaned, prog) = lower(&m.kernels[0], &m);
+    let cb = estimate_time(&cleaned, &prog, (1, 1), &Target::gp104());
+    assert!(cb.cycles_per_thread < 100.0, "{}", cb.cycles_per_thread);
+}
+
+/// Step > 1 loops: trip counts and execution agree.
+#[test]
+fn strided_loop_trip_count() {
+    let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+    let hi = b.i(64);
+    b.for_loop("i", b.i(0), hi, 4, |b, iv| {
+        b.store(b.param(0), iv, b.fc(1.0));
+    });
+    let f = b.finish();
+    let mut bufs = Buffers::new(&[64]);
+    run_kernel(&f, (1, 1), &mut bufs, 1_000_000).unwrap();
+    assert_eq!(bufs.bufs[0].iter().filter(|&&x| x == 1.0).count(), 16);
+    let mut m = phaseord::ir::Module::new("t");
+    m.kernels.push(f);
+    let (cleaned, prog) = lower(&m.kernels[0], &m);
+    let cb = estimate_time(&cleaned, &prog, (1, 1), &Target::gp104());
+    let (_, trips) = cb.trips[0];
+    assert!((trips - 16.0).abs() < 0.5, "trips {trips}");
+}
+
+/// Every registered pass runs standalone on every benchmark without
+/// panicking (errors are fine; panics are not).
+#[test]
+fn every_pass_runs_standalone_everywhere() {
+    for b in phaseord::bench_suite::all_benchmarks() {
+        for p in registry_names() {
+            let mut built = b.build_small(Variant::OpenCl);
+            let _ = run_sequence(&mut built.module, &[p], true);
+        }
+    }
+}
+
+/// The printer renders every benchmark without panicking and includes
+/// block structure.
+#[test]
+fn printer_covers_all_benchmarks() {
+    for b in phaseord::bench_suite::all_benchmarks() {
+        let built = b.build_small(Variant::OpenCl);
+        for k in &built.module.kernels {
+            let text = print_function(k);
+            assert!(text.contains(&format!("kernel @{}", k.name)));
+            assert!(text.contains("ret"));
+        }
+    }
+}
+
+/// Long pass sequences (the 256-instance maximum) neither panic nor
+/// break validation on a representative benchmark.
+#[test]
+fn max_length_sequences_are_survivable() {
+    let b = benchmark_by_name("BICG").unwrap();
+    let golden = Explorer::golden_from_interpreter(&b);
+    let mut ex = Explorer::new(&b, Target::gp104(), golden);
+    let mut g = SeqGen::new(0xF0);
+    for _ in 0..8 {
+        let mut seq = g.next_seq();
+        while seq.len() < 256 {
+            seq.extend(g.next_seq());
+        }
+        seq.truncate(256);
+        let ev = ex.evaluate(&seq);
+        assert!(
+            matches!(
+                ev.status,
+                EvalStatus::Ok
+                    | EvalStatus::Crash(_)
+                    | EvalStatus::InvalidOutput
+                    | EvalStatus::Timeout
+                    | EvalStatus::ExecFailure(_)
+            ),
+            "unexpected state"
+        );
+    }
+}
+
+/// The cost model never returns NaN/negative time for any pass outcome.
+#[test]
+fn cost_model_outputs_are_sane() {
+    let b = benchmark_by_name("GRAMSCHM").unwrap();
+    let mut g = SeqGen::new(0x51);
+    for _ in 0..12 {
+        let seq = g.next_seq();
+        let mut built = b.build_full(Variant::OpenCl);
+        if !run_sequence(&mut built.module, &seq, false).is_ok() {
+            continue;
+        }
+        let t = phaseord::bench_suite::model_time_us(&built, &Target::gp104());
+        assert!(t.is_finite() && t > 0.0, "{seq:?} → {t}");
+    }
+}
+
+/// GoldenRunner degrades gracefully on a missing artifact.
+#[test]
+fn missing_artifact_is_an_error_not_a_panic() {
+    if let Ok(r) = phaseord::runtime::GoldenRunner::new("artifacts") {
+        assert!(!r.has_artifact("NOT-A-BENCHMARK"));
+        assert!(r.run("NOT-A-BENCHMARK").is_err());
+    }
+}
+
+/// Empty sequence through the full CLI plumbing equals baseline.
+#[test]
+fn cli_parse_roundtrip() {
+    use phaseord::coordinator::cli::parse_args;
+    let args: Vec<String> = ["fig5", "--perms", "7", "--out", "/tmp/x"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let a = parse_args(&args).unwrap();
+    assert_eq!(a.command, "fig5");
+    assert_eq!(a.cfg.n_perms, 7);
+    assert_eq!(a.out, std::path::PathBuf::from("/tmp/x"));
+}

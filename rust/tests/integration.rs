@@ -1,0 +1,205 @@
+//! Integration tests across the whole stack: DSE over real benchmarks,
+//! cross-experiment consistency, and the documented paper-shape facts.
+
+use phaseord::bench_suite::{all_benchmarks, benchmark_by_name, model_time_us, Variant};
+use phaseord::coordinator::experiments::{
+    fig2_table1, fig3_cross, fig7_features, ExpConfig, ExpCtx,
+};
+use phaseord::dse::{minimize_sequence, Explorer, SeqGen};
+use phaseord::sim::Target;
+use phaseord::util::geomean;
+
+fn small_cfg(n_seqs: usize) -> ExpConfig {
+    ExpConfig {
+        n_seqs,
+        seed: 0xFEED,
+        target: Target::gp104(),
+        n_perms: 16,
+        n_random_draws: 8,
+    }
+}
+
+#[test]
+fn paper_shape_fig2_holds_on_moderate_stream() {
+    let mut ctx = ExpCtx::new(small_cfg(120));
+    let rows = fig2_table1(&mut ctx);
+    let by = |n: &str| rows.iter().find(|r| r.bench == n).unwrap();
+
+    // convolutions/stencil: no win (paper Table 1 note)
+    for flat in ["2DCONV", "FDTD-2D"] {
+        assert!(
+            by(flat).speedup_over_llvm() < 1.05,
+            "{flat}: {}",
+            by(flat).speedup_over_llvm()
+        );
+    }
+    assert!(by("3DCONV").speedup_over_llvm() < 1.3);
+
+    // data mining benefits the most (paper: CORR 5.36x)
+    let corr = by("CORR").speedup_over_opencl();
+    for other in ["GEMM", "ATAX", "SYRK", "GESUMMV"] {
+        assert!(
+            corr > by(other).speedup_over_opencl(),
+            "CORR ({corr:.2}) must beat {other}"
+        );
+    }
+    assert!(corr > 3.0, "CORR speedup {corr:.2}");
+
+    // geomean band: the paper reports 1.65x over OpenCL; our substrate
+    // lands in the same regime (1.3–3.0)
+    let g = geomean(&rows.iter().map(|r| r.speedup_over_opencl()).collect::<Vec<_>>());
+    assert!((1.3..3.0).contains(&g), "geomean {g:.2}");
+
+    // CUDA baselines beat OpenCL baselines on most benchmarks (paper
+    // geomean 1.07x)
+    let cuda_wins = rows
+        .iter()
+        .filter(|r| r.t_cuda_us < r.t_opencl_src_us)
+        .count();
+    assert!(cuda_wins >= 10, "CUDA wins {cuda_wins}/15");
+}
+
+#[test]
+fn fig3_diagonal_is_best_and_failures_exist_shape() {
+    let mut ctx = ExpCtx::new(small_cfg(100));
+    let rows = fig2_table1(&mut ctx);
+    let m = fig3_cross(&mut ctx, &rows);
+    let n = m.benches.len();
+    // the diagonal (own sequence) is 1.0 by construction
+    for i in 0..n {
+        let d = m.ratio[i][i];
+        assert!(
+            (d - 1.0).abs() < 1e-6 || d > 0.99,
+            "{}: diagonal {d}",
+            m.benches[i]
+        );
+    }
+    // wide spread off-diagonal: some pair well below 0.9
+    let mut min_off = 1.0f64;
+    for i in 0..n {
+        for j in 0..n {
+            if i != j && m.ratio[i][j] >= 0.0 {
+                min_off = min_off.min(m.ratio[i][j]);
+            }
+        }
+    }
+    assert!(min_off < 0.9, "cross-application spread too narrow: {min_off}");
+}
+
+#[test]
+fn fig7_knn_beats_random_at_k1() {
+    let mut ctx = ExpCtx::new(small_cfg(100));
+    let rows = fig2_table1(&mut ctx);
+    let f = fig7_features(&mut ctx, &rows);
+    // the paper's core §4 claim, qualitative: kNN ≥ random for small K,
+    // and both converge by K=14 (all sequences evaluated)
+    assert!(
+        f.knn[0] >= f.random[0] * 0.98,
+        "kNN K=1 {:.3} vs random {:.3}",
+        f.knn[0],
+        f.random[0]
+    );
+    let last = f.ks.len() - 1;
+    assert!((f.knn[last] - f.random[last]).abs() / f.knn[last] < 0.05);
+    // monotone non-decreasing in K (best-so-far semantics)
+    for w in f.knn.windows(2) {
+        assert!(w[1] >= w[0] - 1e-9);
+    }
+}
+
+#[test]
+fn minimization_never_hurts_and_drops_noops() {
+    let b = benchmark_by_name("SYRK").unwrap();
+    let golden = Explorer::golden_from_interpreter(&b);
+    let mut ex = Explorer::new(&b, Target::gp104(), golden);
+    let seqs = SeqGen::stream(0x1234, 120);
+    let s = ex.explore(&seqs);
+    if s.best_seq.is_empty() {
+        return;
+    }
+    let before = s.best_time_us;
+    let (min_seq, after) = minimize_sequence(&mut ex, &s.best_seq.clone());
+    assert!(after <= before * 1.001);
+    assert!(min_seq.len() <= s.best_seq.len());
+    // analysis passes can never survive minimization
+    for p in ["print-memdeps", "aa-eval", "domtree", "loops", "instcount"] {
+        assert!(!min_seq.contains(&p), "no-op pass {p} survived");
+    }
+}
+
+#[test]
+fn amd_target_profile_differs_from_nvidia() {
+    // §3.1: per-benchmark improvements differ across devices
+    let nv = Target::gp104();
+    let amd = Target::fiji();
+    let mut ratios_nv = Vec::new();
+    let mut ratios_amd = Vec::new();
+    for b in all_benchmarks() {
+        let base_nv = model_time_us(&b.build_full(Variant::OpenCl), &nv);
+        let base_amd = model_time_us(&b.build_full(Variant::OpenCl), &amd);
+        let mut tuned = b.build_full(Variant::OpenCl);
+        let out = phaseord::passes::run_sequence(
+            &mut tuned.module,
+            &["cfl-anders-aa", "loop-reduce", "cfl-anders-aa", "licm"],
+            false,
+        );
+        assert!(out.is_ok());
+        ratios_nv.push(base_nv / model_time_us(&tuned, &nv));
+        ratios_amd.push(base_amd / model_time_us(&tuned, &amd));
+    }
+    // both targets see speedups, but the profiles must not be identical
+    assert!(geomean(&ratios_nv) > 1.2);
+    assert!(geomean(&ratios_amd) > 1.2);
+    let diff = ratios_nv
+        .iter()
+        .zip(&ratios_amd)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    assert!(diff > 0.05, "device profiles identical (max diff {diff})");
+}
+
+#[test]
+fn explorer_counts_are_consistent() {
+    let b = benchmark_by_name("COVAR").unwrap();
+    let golden = Explorer::golden_from_interpreter(&b);
+    let mut ex = Explorer::new(&b, Target::gp104(), golden);
+    let seqs = SeqGen::stream(0x77, 150);
+    let s = ex.explore(&seqs);
+    assert_eq!(s.n_ok + s.n_crash + s.n_invalid + s.n_timeout, 150);
+    assert!(s.best_time_us <= s.baseline_time_us);
+    // the shared-stream property: re-exploring gives identical results
+    let golden2 = Explorer::golden_from_interpreter(&b);
+    let mut ex2 = Explorer::new(&b, Target::gp104(), golden2);
+    let s2 = ex2.explore(&seqs);
+    assert_eq!(s.n_ok, s2.n_ok);
+    assert_eq!(s.best_time_us, s2.best_time_us);
+    assert_eq!(s.best_seq, s2.best_seq);
+}
+
+#[test]
+fn standard_levels_barely_help() {
+    // §3.1: "using the LLVM standard optimization level flags did not
+    // result in noticeable improvements ... for most benchmarks"
+    use phaseord::passes::manager::standard_level;
+    let mut improved = 0;
+    let mut total = 0;
+    for b in all_benchmarks() {
+        let golden = Explorer::golden_from_interpreter(&b);
+        let mut ex = Explorer::new(&b, Target::gp104(), golden);
+        let mut best = ex.baseline_time_us;
+        for lvl in ["-O1", "-O2", "-O3", "-Os"] {
+            let ev = ex.evaluate(&standard_level(lvl));
+            if ev.status.is_ok() {
+                best = best.min(ev.time_us);
+            }
+        }
+        total += 1;
+        if ex.baseline_time_us / best > 1.15 {
+            improved += 1;
+        }
+    }
+    assert!(
+        improved <= total / 3,
+        "-OX improved {improved}/{total} benchmarks by >15% — too strong"
+    );
+}

@@ -1,0 +1,179 @@
+//! Tests pinning the paper's *causal* claims (§3.4) to the substrate:
+//! each test is one sentence of the paper turned into an assertion.
+
+use phaseord::bench_suite::{benchmark_by_name, model_time_us, Variant};
+use phaseord::codegen::{lower, PtxKind};
+use phaseord::dse::Explorer;
+use phaseord::passes::run_sequence;
+use phaseord::sim::Target;
+
+fn tuned_time(bench: &str, seq: &[&'static str]) -> (f64, f64) {
+    let b = benchmark_by_name(bench).unwrap();
+    let t = Target::gp104();
+    let base = model_time_us(&b.build_full(Variant::OpenCl), &t);
+    let mut built = b.build_full(Variant::OpenCl);
+    let out = run_sequence(&mut built.module, seq, false);
+    assert!(out.is_ok(), "{bench} {seq:?}: {out:?}");
+    (base, model_time_us(&built, &t))
+}
+
+/// "the phase ordered version instead uses an accumulator register and
+/// performs the store only after all the loop computations are complete"
+/// — and the order of AA vs licm is what decides it.
+#[test]
+fn promotion_requires_aa_before_licm() {
+    let (base, with) = tuned_time("GEMM", &["cfl-anders-aa", "licm"]);
+    let (_, without) = tuned_time("GEMM", &["licm", "cfl-anders-aa"]);
+    assert!(base / with > 1.3, "right order wins: {:.2}", base / with);
+    assert!(
+        base / without < 1.15,
+        "wrong order must not promote: {:.2}",
+        base / without
+    );
+}
+
+/// "One possibility is that the NVIDIA OpenCL/CUDA compiler and LLVM w/o
+/// the use of special phase orders are unable to determine that there
+/// are no aliasing issues" — licm alone does nothing on the store.
+#[test]
+fn licm_alone_cannot_sink_the_store() {
+    for bench in ["GEMM", "SYRK", "ATAX", "MVT"] {
+        let (base, t) = tuned_time(bench, &["licm"]);
+        assert!(base / t < 1.15, "{bench}: licm alone gave {:.2}", base / t);
+    }
+}
+
+/// Fig. 6: the CUDA flavour's loads carry constant offsets on a shared
+/// base register; the OpenCL flavour re-derives each address.
+#[test]
+fn cuda_2dconv_loads_use_reg_plus_imm() {
+    let b = benchmark_by_name("2DCONV").unwrap();
+    let cuda = b.build_small(Variant::Cuda);
+    let (_, prog) = lower(&cuda.module.kernels[0], &cuda.module);
+    let text = prog.text();
+    assert!(
+        text.contains("ld.global.f32") && text.contains("+"),
+        "expected [reg+imm] loads:\n{text}"
+    );
+    // fewer address instructions than the OpenCL flavour
+    let ocl = b.build_small(Variant::OpenCl);
+    let (_, p_ocl) = lower(&ocl.module.kernels[0], &ocl.module);
+    let alu = |p: &phaseord::codegen::PtxProgram| {
+        p.insts
+            .iter()
+            .filter(|i| matches!(i.kind, PtxKind::IntAlu | PtxKind::Cvt))
+            .count()
+    };
+    assert!(
+        alu(&prog) * 2 < alu(&p_ocl),
+        "CUDA addressing must be much leaner: {} vs {}",
+        alu(&prog),
+        alu(&p_ocl)
+    );
+}
+
+/// "most of the time spent on the benchmark is due to global memory
+/// loads that are not removed or improved by any LLVM pass" (3DCONV).
+#[test]
+fn conv3d_is_load_bound_and_unimprovable() {
+    for seq in [
+        &["cfl-anders-aa", "licm"][..],
+        &["cfl-anders-aa", "loop-reduce", "cfl-anders-aa", "licm", "instcombine"][..],
+        &["loop-reduce", "loop-unroll", "gvn"][..],
+    ] {
+        let (base, t) = tuned_time("3DCONV", seq);
+        assert!(base / t < 1.2, "3DCONV {seq:?}: {:.2}", base / t);
+    }
+}
+
+/// GESUMMV has TWO memory accumulators in one loop; both must promote.
+#[test]
+fn gesummv_double_promotion() {
+    let b = benchmark_by_name("GESUMMV").unwrap();
+    let mut built = b.build_small(Variant::OpenCl);
+    let out = run_sequence(&mut built.module, &["cfl-anders-aa", "licm"], true);
+    assert!(out.is_ok());
+    // no store may remain inside any loop
+    use phaseord::ir::dom::DomTree;
+    use phaseord::ir::loops::LoopForest;
+    use phaseord::ir::Op;
+    let f = &built.module.kernels[0];
+    let dt = DomTree::compute(f);
+    let lf = LoopForest::compute(f, &dt);
+    let in_loop_stores: usize = lf
+        .loops
+        .iter()
+        .flat_map(|l| l.blocks.iter())
+        .flat_map(|&bb| f.block(bb).insts.iter())
+        .filter(|&&i| f.inst(i).op == Op::Store)
+        .count();
+    assert_eq!(in_loop_stores, 0, "both accumulators must leave the loop");
+}
+
+/// §2.4: identical generated code is evaluated once (the vPTX cache).
+#[test]
+fn identical_ptx_evaluated_once() {
+    let b = benchmark_by_name("BICG").unwrap();
+    let golden = Explorer::golden_from_interpreter(&b);
+    let mut ex = Explorer::new(&b, Target::gp104(), golden);
+    let a = ex.evaluate(&["instcombine"]);
+    // different sequence, same effect ⇒ same vPTX ⇒ cached verdict
+    let c = ex.evaluate(&["instcombine", "print-memdeps", "instcombine"]);
+    assert_eq!(a.ptx_hash, c.ptx_hash);
+    assert!(c.cached);
+}
+
+/// The CUDA baselines carry unroll 8; OpenCL baselines unroll 2 (§3.4).
+#[test]
+fn baseline_unroll_hints_match_paper() {
+    use phaseord::ir::dom::DomTree;
+    use phaseord::ir::loops::LoopForest;
+    let b = benchmark_by_name("GEMM").unwrap();
+    for (v, want) in [(Variant::OpenCl, 2u8), (Variant::Cuda, 8u8)] {
+        let built = b.build_small(v);
+        let f = &built.module.kernels[0];
+        let dt = DomTree::compute(f);
+        let lf = LoopForest::compute(f, &dt);
+        let innermost = lf.innermost_first()[0];
+        assert_eq!(
+            f.block(lf.loops[innermost].header).unroll,
+            want,
+            "{v:?} unroll hint"
+        );
+    }
+}
+
+/// Promotion survives the full CORR pipeline: the i-loop accumulator is
+/// the paper's 5× win, and it must also work with reg2mem + lowering in
+/// the mix (the Table 1 CORR sequence shape).
+#[test]
+fn corr_paper_style_sequence_wins_big() {
+    let (base, t) = tuned_time(
+        "CORR",
+        &[
+            "cfl-anders-aa",
+            "loop-reduce",
+            "gvn",
+            "cfl-anders-aa",
+            "licm",
+            "reg2mem",
+            "licm",
+            "nvptx-lower-alloca",
+        ],
+    );
+    assert!(base / t > 3.0, "CORR: {:.2}", base / t);
+}
+
+/// Timeout bucket: a sequence whose code still validates but runs the
+/// small inputs absurdly long gets cut off. (Constructed via the
+/// documented unswitch bug making a loop re-dispatch; if no such
+/// sequence exists the bucket stays empty — both acceptable.) Here we
+/// simply assert the plumbing: step budgets are finite.
+#[test]
+fn step_budget_is_finite() {
+    let b = benchmark_by_name("FDTD-2D").unwrap();
+    let built = b.build_small(Variant::OpenCl);
+    let mut bufs = phaseord::bench_suite::init_buffers(&built);
+    let steps = phaseord::bench_suite::execute(&built, &mut bufs, u64::MAX).unwrap();
+    assert!(steps > 0 && steps < 10_000_000);
+}

@@ -1,0 +1,177 @@
+//! Property-based tests over the compiler substrate (proptest_lite —
+//! the vendored crate set has no proptest, see Cargo.toml note).
+//!
+//! The two load-bearing invariants of the whole reproduction:
+//!  1. *Structural soundness*: no pass sequence, however absurd, may
+//!     produce verifier-rejected IR (that would be a crash bucket of our
+//!     own making, not a modelled one);
+//!  2. *Semantic soundness of the sound subset*: with the documented
+//!     bug carriers (dse/sink/loop-unswitch) excluded, every sequence
+//!     that compiles must compute exactly what the baseline computes.
+
+use phaseord::bench_suite::{all_benchmarks, execute, init_buffers, outputs_match, Variant};
+use phaseord::codegen::emit_module;
+use phaseord::ir::verifier::verify_module;
+use phaseord::passes::{registry_names, run_sequence, PassOutcome};
+use phaseord::proptest_lite::check;
+use phaseord::util::Rng;
+
+fn random_seq<'a>(rng: &mut Rng, names: &[&'a str], max_len: usize) -> Vec<&'a str> {
+    let len = 1 + rng.below(max_len);
+    (0..len).map(|_| names[rng.below(names.len())]).collect()
+}
+
+#[test]
+fn prop_no_sequence_breaks_the_verifier() {
+    let benches = all_benchmarks();
+    let names = registry_names();
+    check(
+        "verifier-clean-after-any-sequence",
+        0xA11CE,
+        60,
+        |rng| {
+            let b = rng.below(benches.len());
+            (b, random_seq(rng, &names, 48))
+        },
+        |(bi, seq)| {
+            let mut built = benches[*bi].build_small(Variant::OpenCl);
+            match run_sequence(&mut built.module, seq, true) {
+                PassOutcome::Ok | PassOutcome::Crash { .. } => Ok(()),
+                PassOutcome::VerifierFail { pass, error } => {
+                    Err(format!("{}: pass {pass} broke the IR: {error}", benches[*bi].name))
+                }
+                PassOutcome::UnknownPass(p) => Err(format!("unknown pass {p}")),
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_sound_subset_preserves_semantics() {
+    let benches = all_benchmarks();
+    // every pass except the documented unsoundness carriers
+    let names: Vec<&str> = registry_names()
+        .into_iter()
+        .filter(|n| !matches!(*n, "dse" | "sink" | "loop-unswitch"))
+        .collect();
+    check(
+        "sound-subset-semantics",
+        0xB0B,
+        40,
+        |rng| {
+            let b = rng.below(benches.len());
+            (b, random_seq(rng, &names, 32))
+        },
+        |(bi, seq)| {
+            let bench = &benches[*bi];
+            let golden = {
+                let built = bench.build_small(Variant::OpenCl);
+                let mut bufs = init_buffers(&built);
+                execute(&built, &mut bufs, 1 << 34).map_err(|e| e.to_string())?;
+                bufs
+            };
+            let mut built = bench.build_small(Variant::OpenCl);
+            match run_sequence(&mut built.module, seq, false) {
+                PassOutcome::Ok => {}
+                PassOutcome::Crash { .. } => return Ok(()), // modelled bucket
+                other => return Err(format!("{other:?}")),
+            }
+            let mut bufs = init_buffers(&built);
+            execute(&built, &mut bufs, 1 << 34)
+                .map_err(|e| format!("{}: {seq:?}: exec failed: {e}", bench.name))?;
+            if outputs_match(&built, &bufs, &golden, 0.01) {
+                Ok(())
+            } else {
+                Err(format!("{}: {seq:?}: wrong output", bench.name))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_codegen_is_deterministic() {
+    let benches = all_benchmarks();
+    let names = registry_names();
+    check(
+        "codegen-deterministic",
+        0xDE7,
+        25,
+        |rng| {
+            let b = rng.below(benches.len());
+            (b, random_seq(rng, &names, 24))
+        },
+        |(bi, seq)| {
+            let mut m1 = benches[*bi].build_small(Variant::OpenCl);
+            let mut m2 = benches[*bi].build_small(Variant::OpenCl);
+            let o1 = run_sequence(&mut m1.module, seq, false);
+            let o2 = run_sequence(&mut m2.module, seq, false);
+            if o1 != o2 {
+                return Err(format!("outcome diverged: {o1:?} vs {o2:?}"));
+            }
+            if !o1.is_ok() {
+                return Ok(());
+            }
+            let h1: Vec<u64> = emit_module(&m1.module).iter().map(|p| p.content_hash()).collect();
+            let h2: Vec<u64> = emit_module(&m2.module).iter().map(|p| p.content_hash()).collect();
+            if h1 == h2 {
+                Ok(())
+            } else {
+                Err("vPTX hashes diverged for identical input".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_interpreter_is_deterministic() {
+    let benches = all_benchmarks();
+    check(
+        "interpreter-deterministic",
+        0x1D,
+        15,
+        |rng| rng.below(benches.len()),
+        |&bi| {
+            let built = benches[bi].build_small(Variant::OpenCl);
+            let mut b1 = init_buffers(&built);
+            let mut b2 = init_buffers(&built);
+            execute(&built, &mut b1, 1 << 34).map_err(|e| e.to_string())?;
+            execute(&built, &mut b2, 1 << 34).map_err(|e| e.to_string())?;
+            for (x, y) in b1.bufs.iter().zip(&b2.bufs) {
+                if x != y {
+                    return Err(format!("{} nondeterministic", benches[bi].name));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_verified_modules_stay_verified_after_each_pass() {
+    // single-pass granularity: apply ONE random pass to a random
+    // intermediate state and verify
+    let benches = all_benchmarks();
+    let names = registry_names();
+    check(
+        "single-pass-preserves-validity",
+        0x5EED,
+        60,
+        |rng| {
+            let b = rng.below(benches.len());
+            let warm = random_seq(rng, &names, 16);
+            let next = names[rng.below(names.len())];
+            (b, warm, next)
+        },
+        |(bi, warm, next)| {
+            let mut built = benches[*bi].build_small(Variant::OpenCl);
+            if !run_sequence(&mut built.module, warm, false).is_ok() {
+                return Ok(()); // crashed earlier; nothing to check
+            }
+            match phaseord::passes::run_pass(&mut built.module, next) {
+                Ok(_) => verify_module(&built.module)
+                    .map_err(|e| format!("{next} on {}: {e}", benches[*bi].name)),
+                Err(_) => Ok(()),
+            }
+        },
+    );
+}
