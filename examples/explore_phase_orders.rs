@@ -33,15 +33,15 @@ fn main() {
         dt.as_secs_f64(),
         n as f64 / dt.as_secs_f64()
     );
-    if summary.best_seq.is_empty() {
-        println!("no improving phase order found (paper: the 2DCONV/3DCONV/FDTD-2D case)");
+    let Some(best_seq) = summary.best_seq().map(|s| s.to_vec()) else {
+        println!("baseline wins: no improving phase order found (paper: the 2DCONV/3DCONV/FDTD-2D case)");
         return;
-    }
+    };
     println!("best speedup over baseline: {:.2}x", summary.best_speedup());
-    let (min_seq, t) = minimize_sequence(&mut ex, &summary.best_seq.clone());
+    let (min_seq, t) = minimize_sequence(&mut ex, &best_seq);
     println!(
         "minimized ({} → {} passes): {}",
-        summary.best_seq.len(),
+        best_seq.len(),
         min_seq.len(),
         min_seq.iter().map(|p| format!("-{p}")).collect::<Vec<_>>().join(" ")
     );

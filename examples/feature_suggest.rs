@@ -27,10 +27,9 @@ fn main() {
         let golden = Explorer::golden_from_interpreter(b);
         let mut ex = Explorer::new(b, Target::gp104(), golden);
         let s = ex.explore(&stream);
-        let seq = if s.best_seq.is_empty() {
-            Vec::new()
-        } else {
-            minimize_sequence(&mut ex, &s.best_seq.clone()).0
+        let seq = match s.best_seq().map(|q| q.to_vec()) {
+            None => Vec::new(),
+            Some(best) => minimize_sequence(&mut ex, &best).0,
         };
         let built = b.build_small(Variant::OpenCl);
         refs.push((b.name.to_string(), extract_features(&built.module), seq));

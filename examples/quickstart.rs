@@ -2,13 +2,15 @@
 //! order, validate it against the golden reference, and compare the
 //! modelled GPU time against the baselines.
 //!
-//!     cargo run --release --example quickstart [BENCH] [passes...]
+//!     cargo run --release --example quickstart [BENCH] [passes-or-levels...]
 //!
+//! A `-O0|-O1|-O2|-O3|-Os` argument expands to that standard pipeline.
 //! Default: GEMM with the paper-style winning sequence.
 
 use phaseord::bench_suite::{benchmark_by_name, model_time_us, Variant};
 use phaseord::codegen::lower;
 use phaseord::dse::Explorer;
+use phaseord::passes::manager::standard_level;
 use phaseord::passes::registry_names;
 use phaseord::sim::Target;
 
@@ -16,16 +18,25 @@ fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let bench_name = args.first().map(String::as_str).unwrap_or("GEMM");
     let seq: Vec<&'static str> = if args.len() > 1 {
-        args[1..]
-            .iter()
-            .map(|a| {
-                let name = a.trim_start_matches('-');
-                registry_names()
-                    .into_iter()
-                    .find(|n| *n == name)
-                    .unwrap_or_else(|| panic!("unknown pass {name}"))
-            })
-            .collect()
+        let mut seq = Vec::new();
+        for a in &args[1..] {
+            if let Some(level) = standard_level(a) {
+                seq.extend(level);
+                continue;
+            }
+            let name = a.trim_start_matches('-');
+            match registry_names().into_iter().find(|n| *n == name) {
+                Some(p) => seq.push(p),
+                None => {
+                    eprintln!(
+                        "error: unknown pass or level '{a}' \
+                         (expected a registry pass name or -O0|-O1|-O2|-O3|-Os)"
+                    );
+                    std::process::exit(2);
+                }
+            }
+        }
+        seq
     } else {
         vec!["cfl-anders-aa", "loop-reduce", "cfl-anders-aa", "licm", "instcombine"]
     };
@@ -36,14 +47,14 @@ fn main() {
     });
     let target = Target::gp104();
 
-    // golden reference: PJRT artifacts if built, interpreter otherwise
+    // golden reference: AOT artifacts if built, interpreter otherwise
     let golden = match phaseord::runtime::GoldenRunner::from_env() {
         Ok(r) if r.has_artifact(bench.name) => {
-            println!("golden reference: JAX/Pallas artifact via PJRT");
+            println!("golden reference: JAX/Pallas AOT artifact");
             phaseord::runtime::golden_buffers(&r, &bench).expect("golden")
         }
         _ => {
-            println!("golden reference: interpreter (run `make artifacts` for PJRT)");
+            println!("golden reference: interpreter (run `make artifacts` for the JAX golden)");
             Explorer::golden_from_interpreter(&bench)
         }
     };

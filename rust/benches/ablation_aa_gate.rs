@@ -30,9 +30,9 @@ fn main() {
             let golden = Explorer::golden_from_interpreter(&b);
             let mut ex = Explorer::new(&b, Target::gp104(), golden);
             let base = ex.baseline_time_us;
-            let o3 = ex.evaluate(&standard_level("-O3"));
+            let o3 = ex.evaluate(&standard_level("-O3").expect("known level"));
             let mut gated = vec!["cfl-anders-aa"];
-            gated.extend(standard_level("-O3"));
+            gated.extend(standard_level("-O3").expect("known level"));
             let o3_aa = ex.evaluate(&gated);
             let best = ex.explore(&stream);
             rows.push((

@@ -1,0 +1,81 @@
+//! The parallel-engine acceptance benchmark: a 200-sequence ×
+//! 4-benchmark stream explored at `jobs=1` vs `jobs=N`, reporting the
+//! wall-clock speedup and verifying the summaries are bit-identical.
+//!
+//! Contexts are built once up front so the timed region isolates the
+//! evaluation engine (`explore_pairs` over fresh caches), not the
+//! per-benchmark golden/baseline construction.
+//!
+//! Set `PHASEORD_JOBS` to pin the parallel worker count (default: all
+//! cores); `PHASEORD_SEQS` to change the stream length.
+
+#[path = "harness.rs"]
+mod harness;
+
+use phaseord::bench_suite::benchmark_by_name;
+use phaseord::dse::engine::{self, CacheShards, EvalContext};
+use phaseord::dse::{ExplorationSummary, SeqGen};
+use phaseord::sim::Target;
+
+fn explore(ctxs: &[EvalContext], stream: &[Vec<&'static str>], jobs: usize) -> Vec<ExplorationSummary> {
+    // fresh caches per run for honest numbers
+    let caches: Vec<CacheShards> = ctxs.iter().map(|_| CacheShards::new()).collect();
+    let parts: Vec<(&EvalContext, &CacheShards)> = ctxs.iter().zip(caches.iter()).collect();
+    engine::explore_pairs(&parts, stream, jobs)
+}
+
+fn main() {
+    let jobs: usize = std::env::var("PHASEORD_JOBS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+        });
+    let n: usize = std::env::var("PHASEORD_SEQS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200);
+    let benches: Vec<_> = ["GEMM", "ATAX", "SYRK", "BICG"]
+        .iter()
+        .map(|name| benchmark_by_name(name).unwrap())
+        .collect();
+    let stream = SeqGen::stream(0xE27, n);
+    let target = Target::gp104();
+    let ctxs = engine::build_contexts(&benches, &target, 0);
+
+    let r1 = harness::bench(&format!("explore 4x{n} jobs=1"), 3, || {
+        explore(&ctxs, &stream, 1).iter().map(|s| s.n_ok).sum::<usize>()
+    });
+    let rn = harness::bench(&format!("explore 4x{n} jobs={jobs}"), 3, || {
+        explore(&ctxs, &stream, jobs).iter().map(|s| s.n_ok).sum::<usize>()
+    });
+    harness::throughput("evaluations", benches.len() * n, &rn);
+    let speedup = r1.min_ms / rn.min_ms;
+    println!("speedup jobs=1 → jobs={jobs}: {speedup:.2}x (min-over-min)");
+    // CI gates on a machine-appropriate floor via PHASEORD_MIN_SPEEDUP
+    // (a hard-coded 2x would flake on 1-2 core or throttled runners)
+    if let Some(min) = std::env::var("PHASEORD_MIN_SPEEDUP")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+    {
+        assert!(
+            speedup >= min,
+            "parallel engine speedup {speedup:.2}x below required {min:.2}x"
+        );
+    }
+
+    // determinism spot-check alongside the timing
+    let a = explore(&ctxs, &stream, 1);
+    let b = explore(&ctxs, &stream, jobs);
+    let mut identical = true;
+    for (x, y) in a.iter().zip(&b) {
+        identical &= x.winner == y.winner
+            && x.best_time_us.to_bits() == y.best_time_us.to_bits()
+            && (x.n_ok, x.n_crash, x.n_invalid, x.n_timeout, x.cache_hits)
+                == (y.n_ok, y.n_crash, y.n_invalid, y.n_timeout, y.cache_hits);
+    }
+    println!("summaries bit-identical across jobs: {identical}");
+    assert!(identical, "parallel engine diverged from serial results");
+}

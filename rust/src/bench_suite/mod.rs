@@ -84,6 +84,7 @@ impl BuiltBench {
     }
 }
 
+#[derive(Clone, Copy)]
 pub struct Benchmark {
     pub name: &'static str,
     pub family: &'static str,

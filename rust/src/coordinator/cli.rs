@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! repro <command> [--seqs N] [--seed S] [--target gp104|amd-fiji]
-//!                 [--perms N] [--draws N] [--out DIR] [--full]
+//!                 [--perms N] [--draws N] [--jobs N] [--out DIR] [--full]
 //!
 //! commands: fig2 table1 fig3 fig4 fig5 fig6 fig7 problems amd all
 //! ```
@@ -57,6 +57,13 @@ pub fn parse_args(argv: &[String]) -> Result<CliArgs, String> {
                     .parse()
                     .map_err(|e| format!("--draws: {e}"))?
             }
+            "--jobs" => {
+                cfg.jobs = it
+                    .next()
+                    .ok_or("--jobs needs a value")?
+                    .parse()
+                    .map_err(|e| format!("--jobs: {e}"))?
+            }
             "--target" => {
                 let t = it.next().ok_or("--target needs a value")?;
                 cfg.target = Target::by_name(t).ok_or_else(|| format!("unknown target {t}"))?;
@@ -83,18 +90,21 @@ pub fn parse_args(argv: &[String]) -> Result<CliArgs, String> {
 pub fn usage() -> String {
     "usage: repro <fig2|table1|fig3|fig4|fig5|fig6|fig7|problems|amd|all> \
      [--seqs N] [--seed S] [--target gp104|amd-fiji] [--perms N] [--draws N] \
-     [--out DIR] [--full]\n\
+     [--jobs N] [--out DIR] [--full]\n\
+     --jobs = evaluation worker threads (0 = all cores, the default); \
+     results are bit-identical for every value\n\
      --full = the paper's protocol (10000 sequences, 1000 permutations/draws)"
         .to_string()
 }
 
 fn fig2_cached(ctx: &mut ExpCtx) -> Vec<Fig2Row> {
     eprintln!(
-        "exploring {} sequences × {} benchmarks on {} (golden: {}) …",
+        "exploring {} sequences × {} benchmarks on {} with {} worker(s) (golden: {}) …",
         ctx.cfg.n_seqs,
         ctx.benchmarks.len(),
         ctx.cfg.target.name,
-        if ctx.used_pjrt_golden { "PJRT artifacts" } else { "interpreter" }
+        crate::dse::engine::resolve_jobs(ctx.cfg.jobs),
+        if ctx.used_pjrt_golden { "AOT artifacts" } else { "interpreter" }
     );
     fig2_table1(ctx)
 }
@@ -200,12 +210,22 @@ mod tests {
 
     #[test]
     fn parses_flags() {
-        let a = parse_args(&sv(&["fig2", "--seqs", "50", "--seed", "9", "--target", "amd-fiji"]))
-            .unwrap();
+        let a = parse_args(&sv(&[
+            "fig2", "--seqs", "50", "--seed", "9", "--target", "amd-fiji", "--jobs", "3",
+        ]))
+        .unwrap();
         assert_eq!(a.command, "fig2");
         assert_eq!(a.cfg.n_seqs, 50);
         assert_eq!(a.cfg.seed, 9);
         assert_eq!(a.cfg.target.name, "amd-fiji");
+        assert_eq!(a.cfg.jobs, 3);
+    }
+
+    #[test]
+    fn jobs_defaults_to_auto() {
+        let a = parse_args(&sv(&["fig2"])).unwrap();
+        assert_eq!(a.cfg.jobs, 0, "0 = all cores");
+        assert!(parse_args(&sv(&["fig2", "--jobs", "x"])).is_err());
     }
 
     #[test]

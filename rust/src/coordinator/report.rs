@@ -35,10 +35,9 @@ pub fn render_fig2(rows: &[Fig2Row]) -> String {
             r.speedup_over_cuda(),
             r.speedup_over_llvm(),
             r.speedup_over_llvm_ox(),
-            if r.best_seq.is_empty() {
-                "(none found)".to_string()
-            } else {
-                r.best_seq.iter().map(|p| format!("-{p}")).collect::<Vec<_>>().join(" ")
+            match &r.best_seq {
+                None => "(baseline — no improving order found)".to_string(),
+                Some(seq) => seq.iter().map(|p| format!("-{p}")).collect::<Vec<_>>().join(" "),
             }
         ));
     }
@@ -65,8 +64,13 @@ pub fn fig2_json(rows: &[Fig2Row]) -> Json {
                     ("speedup_over_opencl".into(), Json::n(r.speedup_over_opencl())),
                     ("speedup_over_cuda".into(), Json::n(r.speedup_over_cuda())),
                     (
+                        // null = baseline won (distinct from [] = the
+                        // empty sequence winning)
                         "best_seq".into(),
-                        Json::Arr(r.best_seq.iter().map(|p| Json::s(*p)).collect()),
+                        match &r.best_seq {
+                            None => Json::Null,
+                            Some(seq) => Json::Arr(seq.iter().map(|p| Json::s(*p)).collect()),
+                        },
                     ),
                 ])
             })
@@ -79,14 +83,16 @@ pub fn fig2_json(rows: &[Fig2Row]) -> Json {
 pub fn render_table1(rows: &[Fig2Row]) -> String {
     let mut s = String::from("Table 1 — best phase orders (minimized):\n");
     for r in rows {
-        if r.best_seq.is_empty() {
-            s.push_str(&format!("{:10} (no improving phase order found)\n", r.bench));
-        } else {
-            s.push_str(&format!(
+        match &r.best_seq {
+            None => s.push_str(&format!(
+                "{:10} (baseline — no improving phase order found)\n",
+                r.bench
+            )),
+            Some(seq) => s.push_str(&format!(
                 "{:10} {}\n",
                 r.bench,
-                r.best_seq.iter().map(|p| format!("-{p}")).collect::<Vec<_>>().join(" ")
-            ));
+                seq.iter().map(|p| format!("-{p}")).collect::<Vec<_>>().join(" ")
+            )),
         }
     }
     s
@@ -274,28 +280,43 @@ pub fn fig7_json(f: &Fig7Result) -> Json {
 mod tests {
     use super::*;
 
-    #[test]
-    fn fig2_render_contains_geomeans() {
-        let rows = vec![Fig2Row {
-            bench: "GEMM".into(),
+    fn row(bench: &str, best_seq: Option<Vec<&'static str>>, t_phase_us: f64) -> Fig2Row {
+        Fig2Row {
+            bench: bench.into(),
             t_opencl_src_us: 100.0,
             t_llvm_us: 100.0,
             t_llvm_ox_us: 95.0,
             best_ox_level: "-O3".into(),
             t_cuda_us: 90.0,
-            t_phase_us: 50.0,
-            best_seq: vec!["cfl-anders-aa", "licm"],
+            t_phase_us,
+            best_seq,
             n_ok: 1,
             n_crash: 0,
             n_invalid: 0,
             n_timeout: 0,
             cache_hits: 0,
-        }];
+        }
+    }
+
+    #[test]
+    fn fig2_render_contains_geomeans() {
+        let rows = vec![row("GEMM", Some(vec!["cfl-anders-aa", "licm"]), 50.0)];
         let s = render_fig2(&rows);
         assert!(s.contains("GEMM"));
         assert!(s.contains("geomean"));
         assert!(s.contains("-cfl-anders-aa -licm"));
         let j = fig2_json(&rows).to_string();
         assert!(j.contains("\"speedup_over_opencl\":2"));
+    }
+
+    #[test]
+    fn baseline_winner_renders_as_baseline_not_empty_sequence() {
+        let rows = vec![row("2DCONV", None, 100.0)];
+        let s = render_fig2(&rows);
+        assert!(s.contains("(baseline"), "{s}");
+        let t = render_table1(&rows);
+        assert!(t.contains("(baseline"), "{t}");
+        let j = fig2_json(&rows).to_string();
+        assert!(j.contains("\"best_seq\":null"), "{j}");
     }
 }

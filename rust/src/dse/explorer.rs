@@ -1,14 +1,15 @@
-//! The DSE evaluation loop.
+//! The DSE evaluation loop: outcome types plus the per-benchmark
+//! [`Explorer`] façade over the parallel evaluation engine
+//! ([`crate::dse::engine`]). The `Explorer` owns one immutable
+//! [`EvalContext`] and one [`CacheShards`] instance; batched drivers
+//! borrow both (via [`Explorer::parts`]) and fan evaluations out across
+//! a worker pool.
 
-use std::collections::HashMap;
-
-use crate::bench_suite::{
-    execute, init_buffers, model_time_us, outputs_match, Benchmark, BuiltBench, Variant,
-};
-use crate::passes::{run_sequence, PassOutcome};
-use crate::sim::exec::{Buffers, ExecError};
+use crate::bench_suite::{Benchmark, BuiltBench};
+use crate::sim::exec::Buffers;
 use crate::sim::target::Target;
-use crate::util::fnv1a;
+
+use super::engine::{self, CacheShards, EvalContext};
 
 /// §3.2 outcome buckets.
 #[derive(Debug, Clone, PartialEq)]
@@ -36,10 +37,37 @@ pub struct Evaluation {
     pub status: EvalStatus,
     /// modelled time (µs) at full size; f64::INFINITY when not OK
     pub time_us: f64,
-    /// content hash of the generated vPTX (cache key)
+    /// content hash of the generated vPTX across the full *and*
+    /// validation builds (the generated-code cache key; the verdict
+    /// covers validation, so the key must too). 0 = no code produced.
     pub ptx_hash: u64,
-    /// verdict came from the generated-code cache
+    /// verdict came from the two-level evaluation cache
     pub cached: bool,
+}
+
+/// What won an exploration: either no sequence beat the baseline (the
+/// `-O0` / no-passes compilation stays the best known), or a concrete
+/// phase order did. Carrying `Baseline` explicitly keeps "nothing found"
+/// distinguishable from "the empty sequence won" all the way into the
+/// reports.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Winner {
+    Baseline,
+    Sequence(Vec<&'static str>),
+}
+
+impl Winner {
+    pub fn is_baseline(&self) -> bool {
+        matches!(self, Winner::Baseline)
+    }
+
+    /// The winning phase order, if any sequence beat the baseline.
+    pub fn sequence(&self) -> Option<&[&'static str]> {
+        match self {
+            Winner::Baseline => None,
+            Winner::Sequence(s) => Some(s),
+        }
+    }
 }
 
 /// Aggregate exploration outcome.
@@ -47,7 +75,7 @@ pub struct Evaluation {
 pub struct ExplorationSummary {
     pub bench: String,
     pub baseline_time_us: f64,
-    pub best_seq: Vec<&'static str>,
+    pub winner: Winner,
     pub best_time_us: f64,
     pub evaluations: Vec<Evaluation>,
     pub n_ok: usize,
@@ -61,207 +89,75 @@ impl ExplorationSummary {
     pub fn best_speedup(&self) -> f64 {
         self.baseline_time_us / self.best_time_us
     }
+
+    /// The winning sequence, if one beat the baseline.
+    pub fn best_seq(&self) -> Option<&[&'static str]> {
+        self.winner.sequence()
+    }
 }
 
-/// Per-benchmark DSE driver.
+/// Per-benchmark DSE driver: one evaluation context + one shared cache.
 pub struct Explorer {
     pub name: String,
-    small: BuiltBench,
-    full: BuiltBench,
-    golden: Buffers,
-    target: Target,
     pub baseline_time_us: f64,
-    /// the paper's timeout: candidates slower than 20× baseline
-    timeout_factor: f64,
-    /// generated-code cache: vPTX hash → (status, time)
-    ptx_cache: HashMap<u64, (EvalStatus, f64)>,
-    /// per-sequence fitness memo (identical sequence re-queried)
-    seq_cache: HashMap<u64, Evaluation>,
-    step_limit: u64,
-    /// per-kernel baseline max trip counts — pessimistic fallback when a
-    /// candidate's loop bounds become unanalyzable
-    baseline_trips: Vec<f64>,
+    ctx: EvalContext,
+    caches: CacheShards,
 }
 
 impl Explorer {
-    /// `golden`: reference outputs for the small build (from the PJRT
-    /// artifacts via `runtime::golden`, or `golden_from_interpreter`).
+    /// `golden`: reference outputs for the small build (from the AOT
+    /// artifacts via `runtime::golden`, or [`golden_from_interpreter`]).
+    ///
+    /// [`golden_from_interpreter`]: Explorer::golden_from_interpreter
     pub fn new(bench: &Benchmark, target: Target, golden: Buffers) -> Explorer {
-        let small = bench.build_small(Variant::OpenCl);
-        let full = bench.build_full(Variant::OpenCl);
-        let baseline_time_us = model_time_us(&full, &target);
-        let baseline_trips = crate::bench_suite::baseline_max_trips(&full, &target);
-        // the paper's execution timeout, in interpreter steps: a sequence
-        // whose validation run needs ≫ the baseline's steps cannot be a
-        // performance winner anyway (§3.2)
-        let baseline_steps = {
-            let mut bufs = init_buffers(&small);
-            execute(&small, &mut bufs, u64::MAX).map(|s| s.max(10_000)).unwrap_or(10_000_000)
-        };
+        Explorer::from_context(EvalContext::new(bench, target, golden))
+    }
+
+    pub fn from_context(ctx: EvalContext) -> Explorer {
         Explorer {
-            name: bench.name.to_string(),
-            small,
-            full,
-            golden,
-            target,
-            baseline_time_us,
-            timeout_factor: 20.0,
-            ptx_cache: HashMap::new(),
-            seq_cache: HashMap::new(),
-            step_limit: baseline_steps.saturating_mul(64),
-            baseline_trips,
+            name: ctx.name.clone(),
+            baseline_time_us: ctx.baseline_time_us,
+            caches: CacheShards::new(),
+            ctx,
         }
     }
 
     /// Golden outputs by executing the *unoptimized* small build in the
-    /// interpreter (stand-in when PJRT artifacts are not on disk).
+    /// interpreter (stand-in when AOT artifacts are not on disk).
     pub fn golden_from_interpreter(bench: &Benchmark) -> Buffers {
-        let small = bench.build_small(Variant::OpenCl);
-        let mut bufs = init_buffers(&small);
-        execute(&small, &mut bufs, 400_000_000).expect("baseline executes");
-        bufs
+        engine::golden_from_interpreter(bench)
     }
 
     pub fn small_build(&self) -> &BuiltBench {
-        &self.small
+        self.ctx.small_build()
     }
     pub fn golden(&self) -> &Buffers {
-        &self.golden
+        self.ctx.golden()
+    }
+    pub fn context(&self) -> &EvalContext {
+        &self.ctx
     }
 
-    fn seq_key(seq: &[&str]) -> u64 {
-        fnv1a(seq.join(",").as_bytes())
+    /// The engine's view of this explorer: the immutable context plus
+    /// the shared cache (what `engine::explore_pairs` consumes).
+    pub fn parts(&self) -> (&EvalContext, &CacheShards) {
+        (&self.ctx, &self.caches)
     }
 
-    /// Evaluate one phase order end to end.
+    /// Evaluate one phase order end to end. (Concurrent callers go
+    /// through [`Explorer::parts`] and `EvalContext::evaluate` instead —
+    /// the cache layer is internally synchronized.)
     pub fn evaluate(&mut self, seq: &[&'static str]) -> Evaluation {
-        let key = Self::seq_key(seq);
-        if let Some(hit) = self.seq_cache.get(&key) {
-            let mut e = hit.clone();
-            e.cached = true;
-            return e;
-        }
-        let eval = self.evaluate_uncached(seq);
-        self.seq_cache.insert(key, eval.clone());
-        eval
+        self.ctx.evaluate(seq, &self.caches)
     }
 
-    fn evaluate_uncached(&mut self, seq: &[&'static str]) -> Evaluation {
-        // ---- 1. opt on the full-size module ----
-        let mut full = self.full.clone();
-        let out = run_sequence(&mut full.module, seq, false);
-        match out {
-            PassOutcome::Ok => {}
-            other => {
-                return Evaluation {
-                    status: EvalStatus::Crash(format!("{other:?}")),
-                    time_us: f64::INFINITY,
-                    ptx_hash: 0,
-                    cached: false,
-                }
-            }
-        }
-        // ---- 2. codegen + generated-code cache ----
-        let progs = crate::codegen::emit_module(&full.module);
-        let mut h: u64 = 0xcbf29ce484222325;
-        for p in &progs {
-            h ^= p.content_hash();
-            h = h.wrapping_mul(0x100000001b3);
-        }
-        if let Some((status, t)) = self.ptx_cache.get(&h) {
-            return Evaluation {
-                status: status.clone(),
-                time_us: *t,
-                ptx_hash: h,
-                cached: true,
-            };
-        }
-        // ---- 3. validation on small inputs ----
-        let mut small = self.small.clone();
-        let sout = run_sequence(&mut small.module, seq, false);
-        let status = match sout {
-            PassOutcome::Ok => {
-                let mut bufs = init_buffers(&small);
-                match execute(&small, &mut bufs, self.step_limit) {
-                    Ok(_) => {
-                        if outputs_match(&small, &bufs, &self.golden, 0.01) {
-                            EvalStatus::Ok
-                        } else {
-                            EvalStatus::InvalidOutput
-                        }
-                    }
-                    Err(ExecError::StepLimit) => EvalStatus::Timeout,
-                    Err(e) => EvalStatus::ExecFailure(e.to_string()),
-                }
-            }
-            other => EvalStatus::Crash(format!("{other:?}")),
-        };
-        // ---- 4. measurement ----
-        let time_us = if status.is_ok() {
-            let t = crate::bench_suite::model_time_us_ref(
-                &full,
-                &self.target,
-                Some(&self.baseline_trips),
-            );
-            if t > self.baseline_time_us * self.timeout_factor {
-                self.ptx_cache.insert(h, (EvalStatus::Timeout, f64::INFINITY));
-                return Evaluation {
-                    status: EvalStatus::Timeout,
-                    time_us: f64::INFINITY,
-                    ptx_hash: h,
-                    cached: false,
-                };
-            }
-            t
-        } else {
-            f64::INFINITY
-        };
-        self.ptx_cache.insert(h, (status.clone(), time_us));
-        Evaluation {
-            status,
-            time_us,
-            ptx_hash: h,
-            cached: false,
-        }
-    }
-
-    /// Run the full exploration over a sequence stream.
+    /// Run the full exploration over a sequence stream. Single-worker
+    /// instance of the engine: bit-identical to `explore_all` at any
+    /// `--jobs` level.
     pub fn explore(&mut self, seqs: &[Vec<&'static str>]) -> ExplorationSummary {
-        let mut best_seq: Vec<&'static str> = Vec::new();
-        let mut best_time = self.baseline_time_us;
-        let mut evals = Vec::with_capacity(seqs.len());
-        let (mut n_ok, mut n_crash, mut n_invalid, mut n_timeout, mut hits) = (0, 0, 0, 0, 0);
-        for seq in seqs {
-            let e = self.evaluate(seq);
-            if e.cached {
-                hits += 1;
-            }
-            match &e.status {
-                EvalStatus::Ok => {
-                    n_ok += 1;
-                    if e.time_us < best_time {
-                        best_time = e.time_us;
-                        best_seq = seq.clone();
-                    }
-                }
-                EvalStatus::Crash(_) => n_crash += 1,
-                EvalStatus::InvalidOutput | EvalStatus::ExecFailure(_) => n_invalid += 1,
-                EvalStatus::Timeout => n_timeout += 1,
-            }
-            evals.push(e);
-        }
-        ExplorationSummary {
-            bench: self.name.clone(),
-            baseline_time_us: self.baseline_time_us,
-            best_seq,
-            best_time_us: best_time,
-            evaluations: evals,
-            n_ok,
-            n_crash,
-            n_invalid,
-            n_timeout,
-            cache_hits: hits,
-        }
+        engine::explore_pairs(&[(&self.ctx, &self.caches)], seqs, 1)
+            .pop()
+            .expect("one summary per context")
     }
 }
 
@@ -336,5 +232,25 @@ mod tests {
         assert_eq!(s.evaluations.len(), 60);
         assert!(s.n_ok > 0);
         assert!(s.n_ok + s.n_crash + s.n_invalid + s.n_timeout == 60);
+    }
+
+    #[test]
+    fn validation_step_budget_uses_the_documented_timeout_factor() {
+        // regression: the step limit used to be a hard-coded 64× while
+        // the documented DSE timeout is 20× baseline
+        let e = explorer_for("ATAX");
+        let cx = e.context();
+        assert_eq!(cx.step_limit(), cx.baseline_steps() * 20);
+        assert!(cx.step_limit() < cx.baseline_steps() * 64);
+    }
+
+    #[test]
+    fn exploration_with_no_improvement_reports_baseline_winner() {
+        let mut e = explorer_for("GEMM");
+        let s = e.explore(&[]);
+        assert!(s.winner.is_baseline());
+        assert!(s.best_seq().is_none());
+        assert_eq!(s.best_time_us, s.baseline_time_us);
+        assert!((s.best_speedup() - 1.0).abs() < 1e-12);
     }
 }

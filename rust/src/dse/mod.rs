@@ -12,13 +12,20 @@
 //!      available, or from the unoptimized interpreter otherwise);
 //!   4. measure with the GPU cost model at the paper-default dataset
 //!      shape, with a timeout at 20× the baseline.
+//!
+//! The per-candidate pipeline lives in [`engine::EvalContext`]; the
+//! batched, multi-worker drivers ([`engine::explore_all`]) shard the
+//! (benchmark × sequence) grid across a `std::thread::scope` pool with
+//! deterministic merging — `--jobs 1` and `--jobs N` are bit-identical.
 
+pub mod engine;
 pub mod explorer;
 pub mod minimize;
 pub mod permute;
 pub mod seqgen;
 
-pub use explorer::{EvalStatus, Evaluation, Explorer, ExplorationSummary};
+pub use engine::{explore_all, CacheShards, EvalContext};
+pub use explorer::{EvalStatus, Evaluation, Explorer, ExplorationSummary, Winner};
 pub use minimize::minimize_sequence;
 pub use permute::permutation_study;
 pub use seqgen::SeqGen;

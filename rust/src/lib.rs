@@ -17,11 +17,13 @@
 //! * [`bench_suite`] — all 15 PolyBench/GPU benchmarks in IR, with OpenCL-
 //!   and CUDA-flavoured variants;
 //! * [`dse`] — the paper's contribution: the phase-ordering design-space
-//!   exploration engine (random sequences, caching, validation, top-k);
+//!   exploration engine (random sequences, sharded two-level caching,
+//!   validation, top-k), batched and parallel across worker threads with
+//!   deterministic, jobs-count-independent results;
 //! * [`features`] — MILEPOST-style static features, cosine k-NN suggestion
 //!   and the IterGraph comparator (the paper's §4 / Fig. 7);
-//! * [`runtime`] — PJRT loader for the JAX/Pallas golden references built
-//!   by `make artifacts` (three-layer AOT architecture);
+//! * [`runtime`] — loader for the JAX/Pallas golden artifacts built by
+//!   `make artifacts` (three-layer AOT architecture);
 //! * [`coordinator`] — CLI, experiment drivers and report writers.
 
 pub mod analysis;

@@ -1,11 +1,9 @@
 //! Golden buffer assembly: initialize a benchmark's buffers with the
-//! deterministic fill and overwrite the *output* buffers with the
-//! PJRT-executed JAX model's results. The DSE validator compares every
+//! deterministic fill and overwrite the *output* buffers with the JAX
+//! model's AOT-dumped results. The DSE validator compares every
 //! candidate compilation against these (paper §2.4).
 
-use anyhow::{bail, Result};
-
-use super::pjrt::GoldenRunner;
+use super::pjrt::{GoldenRunner, Result, RuntimeError};
 use crate::bench_suite::{init_buffers, Benchmark, Variant};
 use crate::sim::exec::Buffers;
 
@@ -15,22 +13,22 @@ pub fn golden_buffers(runner: &GoldenRunner, bench: &Benchmark) -> Result<Buffer
     let mut bufs = init_buffers(&built);
     let outs = runner.run(bench.name)?;
     if outs.len() != built.outputs.len() {
-        bail!(
+        return Err(RuntimeError(format!(
             "{}: artifact has {} outputs, benchmark declares {}",
             bench.name,
             outs.len(),
             built.outputs.len()
-        );
+        )));
     }
     for (slot, data) in built.outputs.iter().zip(outs) {
         if bufs.bufs[*slot].len() != data.len() {
-            bail!(
+            return Err(RuntimeError(format!(
                 "{}: output {} size mismatch ({} vs {})",
                 bench.name,
                 slot,
                 bufs.bufs[*slot].len(),
                 data.len()
-            );
+            )));
         }
         bufs.bufs[*slot] = data;
     }
@@ -44,13 +42,13 @@ mod tests {
 
     /// THE cross-language validation: for every benchmark, the rust
     /// interpreter executing the unoptimized OpenCL IR must agree with
-    /// the JAX model served through PJRT, within the paper's 1%.
+    /// the JAX model's AOT golden dump, within the paper's 1%.
     /// (Skipped when `make artifacts` hasn't run.)
     #[test]
-    fn interpreter_matches_pjrt_golden_for_all_benchmarks() {
+    fn interpreter_matches_aot_golden_for_all_benchmarks() {
         let runner = match GoldenRunner::from_env() {
             Ok(r) => r,
-            Err(e) => panic!("PJRT client unavailable: {e}"),
+            Err(e) => panic!("golden runner unavailable: {e}"),
         };
         if !runner.has_artifact("GEMM") {
             eprintln!("artifacts/ missing — run `make artifacts`; skipping");
@@ -64,7 +62,7 @@ mod tests {
             execute(&built, &mut got, 400_000_000).unwrap();
             assert!(
                 outputs_match(&built, &got, &golden, 0.01),
-                "{}: interpreter vs JAX/PJRT golden mismatch",
+                "{}: interpreter vs JAX golden mismatch",
                 b.name
             );
         }

@@ -1,10 +1,11 @@
-//! PJRT runtime: loads the AOT-lowered JAX/Pallas golden models
-//! (`artifacts/*.hlo.txt`, built once by `make artifacts`) and executes
-//! them on the XLA CPU client. This is the three-layer seam: Python
-//! authored the models, but at DSE time only this rust path runs.
+//! Golden-reference runtime: loads the AOT-dumped JAX/Pallas golden
+//! outputs (`artifacts/*.golden.txt`, built once by `make artifacts` /
+//! `python -m compile.aot`). This is the three-layer seam: Python
+//! authored and executed the models once at AOT time; at DSE time only
+//! this dependency-free rust path runs.
 
 pub mod golden;
 pub mod pjrt;
 
 pub use golden::golden_buffers;
-pub use pjrt::{artifacts_dir, GoldenRunner};
+pub use pjrt::{artifacts_dir, GoldenRunner, RuntimeError};

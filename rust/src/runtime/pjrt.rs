@@ -1,12 +1,41 @@
-//! Thin wrapper over the `xla` crate (PJRT C API, CPU plugin).
+//! Golden-artifact loader.
 //!
-//! Interchange format is HLO *text*: jax ≥ 0.5 serialized protos carry
-//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids (see /opt/xla-example/README.md).
+//! The JAX/Pallas golden models are lowered once, ahead of time, by
+//! `python -m compile.aot` (`make artifacts`), which writes two files per
+//! benchmark under `artifacts/`:
+//!
+//! * `<BENCH>.hlo.txt` — the lowered HLO text (kept for inspection and
+//!   for external PJRT tooling);
+//! * `<BENCH>.golden.txt` — the executed model's output buffers, the
+//!   numbers the DSE validator actually consumes.
+//!
+//! Earlier revisions executed the HLO at DSE time through the `xla`
+//! crate's PJRT bindings; the vendored crate set has neither `xla` nor
+//! `anyhow`, so the runner now reads the outputs dumped at AOT time.
+//! The three-layer seam is unchanged: Python authors and executes the
+//! models once, and at DSE time only this rust path runs — with zero
+//! external dependencies.
 
+use std::fmt;
 use std::path::{Path, PathBuf};
 
-use anyhow::{Context, Result};
+/// Runtime-layer failure (artifact missing/corrupt).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RuntimeError(pub String);
+
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+fn err(msg: impl Into<String>) -> RuntimeError {
+    RuntimeError(msg.into())
+}
 
 /// Default artifacts directory: `$PHASEORD_ARTIFACTS` or `./artifacts`.
 pub fn artifacts_dir() -> PathBuf {
@@ -15,17 +44,14 @@ pub fn artifacts_dir() -> PathBuf {
         .unwrap_or_else(|_| PathBuf::from("artifacts"))
 }
 
-/// A PJRT CPU client + compiled golden executables, loaded on demand.
+/// Loader for the AOT golden outputs, resolved on demand per benchmark.
 pub struct GoldenRunner {
-    client: xla::PjRtClient,
     dir: PathBuf,
 }
 
 impl GoldenRunner {
     pub fn new(dir: impl AsRef<Path>) -> Result<GoldenRunner> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(GoldenRunner {
-            client,
             dir: dir.as_ref().to_path_buf(),
         })
     }
@@ -34,39 +60,78 @@ impl GoldenRunner {
         Self::new(artifacts_dir())
     }
 
-    pub fn artifact_path(&self, bench: &str) -> PathBuf {
+    /// The lowered HLO text artifact (informational; not read at DSE time).
+    pub fn hlo_path(&self, bench: &str) -> PathBuf {
         self.dir.join(format!("{bench}.hlo.txt"))
+    }
+
+    /// The golden-output dump consumed by the validator.
+    pub fn artifact_path(&self, bench: &str) -> PathBuf {
+        self.dir.join(format!("{bench}.golden.txt"))
     }
 
     pub fn has_artifact(&self, bench: &str) -> bool {
         self.artifact_path(bench).exists()
     }
 
-    /// Execute a benchmark's golden model (zero-arg) and return its
-    /// output buffers (f32, flattened), in the model's declared order.
+    /// Load a benchmark's golden output buffers (f32, flattened), in the
+    /// model's declared order.
     pub fn run(&self, bench: &str) -> Result<Vec<Vec<f32>>> {
         let path = self.artifact_path(bench);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path not utf-8")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {bench}"))?;
-        let result = exe
-            .execute::<xla::Literal>(&[])
-            .with_context(|| format!("executing {bench}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        // models lower with return_tuple=True
-        let parts = lit.to_tuple().context("decomposing result tuple")?;
-        let mut out = Vec::with_capacity(parts.len());
-        for p in parts {
-            out.push(p.to_vec::<f32>().context("reading f32 output")?);
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| err(format!("reading {}: {e}", path.display())))?;
+        parse_golden(&text).map_err(|e| err(format!("{}: {}", path.display(), e.0)))
+    }
+}
+
+/// Artifact format: one output buffer per line, values space-separated
+/// (shortest-round-trip decimals written by `python -m compile.aot`);
+/// blank lines and `#` comments are skipped.
+fn parse_golden(text: &str) -> Result<Vec<Vec<f32>>> {
+    let mut out = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
         }
-        Ok(out)
+        let mut buf = Vec::new();
+        for tok in line.split_whitespace() {
+            let v: f32 = tok
+                .parse()
+                .map_err(|e| err(format!("line {}: bad f32 {tok:?}: {e}", ln + 1)))?;
+            buf.push(v);
+        }
+        out.push(buf);
+    }
+    if out.is_empty() {
+        return Err(err("no output buffers in artifact"));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_golden_roundtrip() {
+        let got = parse_golden("# comment\n1.5 2.25 -0.5\n\n0.125\n").unwrap();
+        assert_eq!(got, vec![vec![1.5, 2.25, -0.5], vec![0.125]]);
+    }
+
+    #[test]
+    fn parse_golden_rejects_garbage() {
+        assert!(parse_golden("").is_err());
+        assert!(parse_golden("1.0 nope 2.0").is_err());
+    }
+
+    #[test]
+    fn artifact_paths_are_per_bench() {
+        let r = GoldenRunner::new("artifacts").unwrap();
+        assert!(r
+            .artifact_path("GEMM")
+            .to_string_lossy()
+            .ends_with("GEMM.golden.txt"));
+        assert!(r.hlo_path("GEMM").to_string_lossy().ends_with("GEMM.hlo.txt"));
     }
 }

@@ -572,7 +572,7 @@ mod tests {
         let c0 = estimate_time(&m0.kernels[0], &p0, (512, 1), &t);
 
         let mut m1 = gemm_like();
-        let seq = standard_level("-O3");
+        let seq = standard_level("-O3").expect("known level");
         let out = run_sequence(&mut m1, &seq, true);
         assert_eq!(out, PassOutcome::Ok);
         let p1 = emit(&m1.kernels[0], &m1);

@@ -1,0 +1,142 @@
+//! Engine determinism and cache-consistency tests: the acceptance gate
+//! for the parallel DSE evaluation engine. `--jobs N` must be
+//! bit-identical to `--jobs 1`, and the sharded cache must serve the
+//! same verdicts no matter how many workers race on it.
+
+use phaseord::bench_suite::benchmark_by_name;
+use phaseord::dse::engine::{self, CacheShards, EvalContext};
+use phaseord::dse::{ExplorationSummary, Explorer, SeqGen};
+use phaseord::sim::Target;
+
+fn assert_bit_identical(a: &ExplorationSummary, b: &ExplorationSummary) {
+    assert_eq!(a.bench, b.bench);
+    assert_eq!(a.winner, b.winner, "{}: winners differ", a.bench);
+    assert_eq!(
+        a.baseline_time_us.to_bits(),
+        b.baseline_time_us.to_bits(),
+        "{}: baseline time differs",
+        a.bench
+    );
+    assert_eq!(
+        a.best_time_us.to_bits(),
+        b.best_time_us.to_bits(),
+        "{}: best time differs",
+        a.bench
+    );
+    assert_eq!(
+        (a.n_ok, a.n_crash, a.n_invalid, a.n_timeout, a.cache_hits),
+        (b.n_ok, b.n_crash, b.n_invalid, b.n_timeout, b.cache_hits),
+        "{}: outcome buckets differ",
+        a.bench
+    );
+    assert_eq!(a.evaluations.len(), b.evaluations.len());
+    for (i, (x, y)) in a.evaluations.iter().zip(&b.evaluations).enumerate() {
+        assert_eq!(x.status, y.status, "{} eval {i}", a.bench);
+        assert_eq!(
+            x.time_us.to_bits(),
+            y.time_us.to_bits(),
+            "{} eval {i}: time",
+            a.bench
+        );
+        assert_eq!(x.ptx_hash, y.ptx_hash, "{} eval {i}: ptx hash", a.bench);
+        assert_eq!(x.cached, y.cached, "{} eval {i}: cache attribution", a.bench);
+    }
+}
+
+#[test]
+fn jobs1_and_jobs4_are_bit_identical() {
+    let benches: Vec<_> = ["GEMM", "ATAX", "COVAR", "2DCONV"]
+        .iter()
+        .map(|n| benchmark_by_name(n).unwrap())
+        .collect();
+    let stream = SeqGen::stream(0xE27, 48);
+    let t = Target::gp104();
+    let serial = engine::explore_all(&benches, &stream, &t, 1);
+    let parallel = engine::explore_all(&benches, &stream, &t, 4);
+    assert_eq!(serial.len(), parallel.len());
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_bit_identical(a, b);
+    }
+    // at least one bucket must be non-trivial or the test proves nothing
+    assert!(serial.iter().any(|s| s.n_ok > 0));
+    assert!(serial.iter().any(|s| s.n_ok < stream.len()));
+}
+
+#[test]
+fn serial_explorer_matches_parallel_engine() {
+    let b = benchmark_by_name("SYRK").unwrap();
+    let stream = SeqGen::stream(0xBEE5, 40);
+    let t = Target::gp104();
+    let golden = Explorer::golden_from_interpreter(&b);
+    let mut ex = Explorer::new(&b, t.clone(), golden);
+    let serial = ex.explore(&stream);
+    let par = engine::explore_all(&[benchmark_by_name("SYRK").unwrap()], &stream, &t, 3)
+        .pop()
+        .unwrap();
+    assert_bit_identical(&serial, &par);
+}
+
+#[test]
+fn exploration_is_independent_of_cache_warmup() {
+    // the summary describes the stream, not the cache history: a warmed
+    // explorer must report the same summary as a cold one
+    let b = benchmark_by_name("BICG").unwrap();
+    let stream = SeqGen::stream(0x40, 25);
+    let t = Target::gp104();
+    let golden = Explorer::golden_from_interpreter(&b);
+    let mut cold = Explorer::new(&b, t.clone(), golden);
+    let want = cold.explore(&stream);
+    let golden = Explorer::golden_from_interpreter(&b);
+    let mut warm = Explorer::new(&b, t, golden);
+    for seq in stream.iter().take(10) {
+        warm.evaluate(seq); // pre-seed the caches
+    }
+    let got = warm.explore(&stream);
+    assert_bit_identical(&want, &got);
+}
+
+#[test]
+fn cache_is_consistent_under_concurrency() {
+    let b = benchmark_by_name("ATAX").unwrap();
+    let golden = engine::golden_from_interpreter(&b);
+    let cx = EvalContext::new(&b, Target::gp104(), golden);
+    let stream = SeqGen::stream(0xCAFE, 24);
+
+    // serial reference against a private cache
+    let ref_cache = CacheShards::new();
+    let want: Vec<_> = stream.iter().map(|s| cx.evaluate(s, &ref_cache)).collect();
+
+    // four workers hammer one shared cache, each walking the stream in a
+    // different order; every verdict must match the serial reference
+    let shared = CacheShards::new();
+    std::thread::scope(|scope| {
+        for (w, step) in [5usize, 7, 11, 13].into_iter().enumerate() {
+            let (cx, shared, stream, want) = (&cx, &shared, &stream, &want);
+            scope.spawn(move || {
+                // step is coprime to the stream length: a full permutation
+                for k in 0..stream.len() {
+                    let i = (k * step + w) % stream.len();
+                    let got = cx.evaluate(&stream[i], shared);
+                    assert_eq!(got.status, want[i].status, "seq {i}");
+                    assert_eq!(got.time_us.to_bits(), want[i].time_us.to_bits(), "seq {i}");
+                    assert_eq!(got.ptx_hash, want[i].ptx_hash, "seq {i}");
+                }
+            });
+        }
+    });
+    // the shared cache holds exactly the deterministic entry set
+    let (seq_entries, _ptx_entries) = shared.len();
+    let (ref_seq, ref_ptx) = ref_cache.len();
+    assert_eq!(seq_entries, ref_seq);
+    assert_eq!(shared.len().1, ref_ptx);
+}
+
+#[test]
+fn jobs_zero_resolves_to_all_cores_and_stays_identical() {
+    let benches = vec![benchmark_by_name("GESUMMV").unwrap()];
+    let stream = SeqGen::stream(0x9, 16);
+    let t = Target::gp104();
+    let auto = engine::explore_all(&benches, &stream, &t, 0);
+    let one = engine::explore_all(&benches, &stream, &t, 1);
+    assert_bit_identical(&auto[0], &one[0]);
+}

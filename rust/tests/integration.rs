@@ -16,6 +16,7 @@ fn small_cfg(n_seqs: usize) -> ExpConfig {
         target: Target::gp104(),
         n_perms: 16,
         n_random_draws: 8,
+        jobs: 0,
     }
 }
 
@@ -114,13 +115,13 @@ fn minimization_never_hurts_and_drops_noops() {
     let mut ex = Explorer::new(&b, Target::gp104(), golden);
     let seqs = SeqGen::stream(0x1234, 120);
     let s = ex.explore(&seqs);
-    if s.best_seq.is_empty() {
+    let Some(best_seq) = s.best_seq().map(|q| q.to_vec()) else {
         return;
-    }
+    };
     let before = s.best_time_us;
-    let (min_seq, after) = minimize_sequence(&mut ex, &s.best_seq.clone());
+    let (min_seq, after) = minimize_sequence(&mut ex, &best_seq);
     assert!(after <= before * 1.001);
-    assert!(min_seq.len() <= s.best_seq.len());
+    assert!(min_seq.len() <= best_seq.len());
     // analysis passes can never survive minimization
     for p in ["print-memdeps", "aa-eval", "domtree", "loops", "instcount"] {
         assert!(!min_seq.contains(&p), "no-op pass {p} survived");
@@ -173,7 +174,7 @@ fn explorer_counts_are_consistent() {
     let s2 = ex2.explore(&seqs);
     assert_eq!(s.n_ok, s2.n_ok);
     assert_eq!(s.best_time_us, s2.best_time_us);
-    assert_eq!(s.best_seq, s2.best_seq);
+    assert_eq!(s.winner, s2.winner);
 }
 
 #[test]
@@ -188,7 +189,7 @@ fn standard_levels_barely_help() {
         let mut ex = Explorer::new(&b, Target::gp104(), golden);
         let mut best = ex.baseline_time_us;
         for lvl in ["-O1", "-O2", "-O3", "-Os"] {
-            let ev = ex.evaluate(&standard_level(lvl));
+            let ev = ex.evaluate(&standard_level(lvl).expect("known level"));
             if ev.status.is_ok() {
                 best = best.min(ev.time_us);
             }
