@@ -25,7 +25,7 @@ fn main() {
                 continue;
             }
             let name = a.trim_start_matches('-');
-            match registry_names().into_iter().find(|n| *n == name) {
+            match registry_names().iter().copied().find(|n| *n == name) {
                 Some(p) => seq.push(p),
                 None => {
                     eprintln!(

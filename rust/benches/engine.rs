@@ -1,6 +1,9 @@
 //! The parallel-engine acceptance benchmark: a 200-sequence ×
 //! 4-benchmark stream explored at `jobs=1` vs `jobs=N`, reporting the
-//! wall-clock speedup and verifying the summaries are bit-identical.
+//! wall-clock speedup and verifying the summaries are bit-identical —
+//! plus the analysis-cache ablation: the same stream with the
+//! per-sequence `DomTree`/`LoopForest` cache disabled, so the speedup
+//! from the pass-manager redesign is measured, not asserted.
 //!
 //! Contexts are built once up front so the timed region isolates the
 //! evaluation engine (`explore_pairs` over fresh caches), not the
@@ -43,7 +46,7 @@ fn main() {
         .collect();
     let stream = SeqGen::stream(0xE27, n);
     let target = Target::gp104();
-    let ctxs = engine::build_contexts(&benches, &target, 0);
+    let mut ctxs = engine::build_contexts(&benches, &target, 0);
 
     let r1 = harness::bench(&format!("explore 4x{n} jobs=1"), 3, || {
         explore(&ctxs, &stream, 1).iter().map(|s| s.n_ok).sum::<usize>()
@@ -71,11 +74,35 @@ fn main() {
     let b = explore(&ctxs, &stream, jobs);
     let mut identical = true;
     for (x, y) in a.iter().zip(&b) {
-        identical &= x.winner == y.winner
-            && x.best_time_us.to_bits() == y.best_time_us.to_bits()
-            && (x.n_ok, x.n_crash, x.n_invalid, x.n_timeout, x.cache_hits)
-                == (y.n_ok, y.n_crash, y.n_invalid, y.n_timeout, y.cache_hits);
+        identical &= summaries_match(x, y);
     }
     println!("summaries bit-identical across jobs: {identical}");
     assert!(identical, "parallel engine diverged from serial results");
+
+    // ---- analysis-cache ablation: same stream, cache disabled ----
+    // `rn` above ran with the cache on (the production default); rerun
+    // with every context forced to recompute DomTree/LoopForest on every
+    // query. Results must stay bit-identical — only the time may move.
+    for cx in &mut ctxs {
+        cx.set_analysis_cache(false);
+    }
+    let r_off = harness::bench(&format!("explore 4x{n} jobs={jobs} analysis-cache=off"), 3, || {
+        explore(&ctxs, &stream, jobs).iter().map(|s| s.n_ok).sum::<usize>()
+    });
+    let off = explore(&ctxs, &stream, jobs);
+    let cache_speedup = r_off.min_ms / rn.min_ms;
+    println!("analysis-cache speedup at jobs={jobs}: {cache_speedup:.2}x (min-over-min)");
+    let mut same = true;
+    for (x, y) in b.iter().zip(&off) {
+        same &= summaries_match(x, y);
+    }
+    println!("summaries bit-identical across cache modes: {same}");
+    assert!(same, "analysis cache changed evaluation results");
+}
+
+fn summaries_match(x: &ExplorationSummary, y: &ExplorationSummary) -> bool {
+    x.winner == y.winner
+        && x.best_time_us.to_bits() == y.best_time_us.to_bits()
+        && (x.n_ok, x.n_crash, x.n_invalid, x.n_timeout, x.cache_hits)
+            == (y.n_ok, y.n_crash, y.n_invalid, y.n_timeout, y.cache_hits)
 }

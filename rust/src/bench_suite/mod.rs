@@ -23,7 +23,6 @@ pub mod linalg;
 pub mod stencil;
 
 use crate::ir::{Function, Module};
-use crate::passes::Pass;
 use crate::sim::exec::{run_kernel, Buffers, ExecError};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -238,14 +237,14 @@ pub fn outputs_match(b: &BuiltBench, got: &Buffers, want: &Buffers, tol: f32) ->
 /// straight-line accesses become base + constant-offset `[reg+imm]`
 /// form) and higher unroll.
 pub(crate) fn cudaify(m: &mut Module, unroll: u8) {
-    let _ = crate::passes::loop_reduce::LoopReduce.run(m);
+    let _ = crate::passes::run_single(&crate::passes::loop_reduce::LoopReduce, m);
     for f in &mut m.kernels {
         nvcc_addressing(f);
         set_innermost_unroll(f, unroll);
     }
     // NVCC's own toolchain: fresh analyses, none of our staleness
-    m.aa_stale = false;
-    m.cfg_dirty = false;
+    m.state.alias.stale = false;
+    m.state.cfg.dirty = false;
 }
 
 /// NVCC's constant-offset separation: rewrite `&buf[var_index + C]` as
@@ -325,10 +324,7 @@ pub(crate) fn nvcc_addressing(f: &mut Function) {
 }
 
 pub(crate) fn set_innermost_unroll(f: &mut Function, unroll: u8) {
-    use crate::ir::dom::DomTree;
-    use crate::ir::loops::LoopForest;
-    let dt = DomTree::compute(f);
-    let lf = LoopForest::compute(f, &dt);
+    let (_dt, lf) = crate::passes::analyses::analyses_of(f);
     for (li, l) in lf.loops.iter().enumerate() {
         let is_innermost = !lf.loops.iter().enumerate().any(|(oi, o)| {
             oi != li && o.depth > l.depth && o.blocks.iter().all(|b| l.blocks.contains(b))

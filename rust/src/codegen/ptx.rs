@@ -407,7 +407,7 @@ fn emit_cleaned(f: &Function, m: &Module) -> PtxProgram {
         regs,
         block_ranges,
         unroll,
-        outlined: m.loops_extracted,
+        outlined: m.loops_extracted(),
     }
 }
 
@@ -416,13 +416,13 @@ fn emit_cleaned(f: &Function, m: &Module) -> PtxProgram {
 fn backend_cleanup(f: &mut Function) {
     let mut scratch = Module::new("backend");
     scratch.kernels.push(std::mem::replace(f, Function::new("tmp")));
-    use crate::passes::Pass;
+    use crate::passes::run_single;
     // order mirrors the machine pipeline: fold CFG, CSE, hoist, fold CFG
-    let _ = crate::passes::instcombine::InstCombine.run(&mut scratch);
-    let _ = crate::passes::simplifycfg::SimplifyCfg.run(&mut scratch);
-    let _ = crate::passes::early_cse::EarlyCse.run(&mut scratch);
+    let _ = run_single(&crate::passes::instcombine::InstCombine, &mut scratch);
+    let _ = run_single(&crate::passes::simplifycfg::SimplifyCfg, &mut scratch);
+    let _ = run_single(&crate::passes::early_cse::EarlyCse, &mut scratch);
     let _ = crate::passes::licm::machine_hoist(&mut scratch.kernels[0]);
-    let _ = crate::passes::adce::Dce.run(&mut scratch);
+    let _ = run_single(&crate::passes::adce::Dce, &mut scratch);
     *f = scratch.kernels.pop().unwrap();
 }
 
@@ -450,7 +450,7 @@ pub fn classify(f: &Function, m: &Module, ptr: Value) -> MemClass {
     // alloca traffic first
     if let Some(local) = is_local(f, ptr, 0) {
         if local {
-            return if m.allocas_lowered {
+            return if m.allocas_lowered() {
                 MemClass::Local
             } else {
                 MemClass::GenericLocal
@@ -705,7 +705,7 @@ mod tests {
     #[test]
     fn classification_survives_loop_reduce() {
         use crate::passes::loop_reduce::LoopReduce;
-        use crate::passes::Pass;
+        use crate::passes::run_single;
         let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
         let gid = b.gid(0);
         let n = b.i(64);
@@ -717,7 +717,7 @@ mod tests {
             b.store(b.param(0), idx, w);
         });
         let mut m = mk_module(b.finish());
-        LoopReduce.run(&mut m).unwrap();
+        run_single(&LoopReduce, &mut m).unwrap();
         let p = emit(&m.kernels[0], &m);
         let n_coal = p
             .insts
@@ -736,21 +736,21 @@ mod tests {
     fn local_depot_classification() {
         use crate::passes::nvptx_lower_alloca::NvptxLowerAlloca;
         use crate::passes::reg2mem::Reg2Mem;
-        use crate::passes::Pass;
+        use crate::passes::run_single;
         let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
         let n = b.i(8);
         b.for_loop("i", b.i(0), n, 1, |b, iv| {
             b.store(b.param(0), iv, b.fc(1.0));
         });
         let mut m = mk_module(b.finish());
-        Reg2Mem.run(&mut m).unwrap();
+        run_single(&Reg2Mem, &mut m).unwrap();
         // before lowering: generic
         let p1 = emit(&m.kernels[0], &m);
         assert!(p1
             .insts
             .iter()
             .any(|i| matches!(i.kind, PtxKind::Ld(MemClass::GenericLocal))));
-        NvptxLowerAlloca.run(&mut m).unwrap();
+        run_single(&NvptxLowerAlloca, &mut m).unwrap();
         let p2 = emit(&m.kernels[0], &m);
         assert!(p2
             .insts

@@ -3,8 +3,9 @@
 //! ```text
 //! repro <command> [--seqs N] [--seed S] [--target gp104|amd-fiji]
 //!                 [--perms N] [--draws N] [--jobs N] [--out DIR] [--full]
+//!                 [--verify-each]
 //!
-//! commands: fig2 table1 fig3 fig4 fig5 fig6 fig7 problems amd all
+//! commands: fig2 table1 fig3 fig4 fig5 fig6 fig7 problems amd all passes
 //! ```
 
 use std::path::PathBuf;
@@ -75,6 +76,7 @@ pub fn parse_args(argv: &[String]) -> Result<CliArgs, String> {
                 cfg.n_perms = 1000;
                 cfg.n_random_draws = 1000;
             }
+            "--verify-each" => cfg.verify_each = true,
             "--help" | "-h" => return Err(usage()),
             flag if flag.starts_with("--") => return Err(format!("unknown flag {flag}\n{}", usage())),
             cmd if command.is_empty() => command = cmd.to_string(),
@@ -88,13 +90,41 @@ pub fn parse_args(argv: &[String]) -> Result<CliArgs, String> {
 }
 
 pub fn usage() -> String {
-    "usage: repro <fig2|table1|fig3|fig4|fig5|fig6|fig7|problems|amd|all> \
+    "usage: repro <fig2|table1|fig3|fig4|fig5|fig6|fig7|problems|amd|all|passes> \
      [--seqs N] [--seed S] [--target gp104|amd-fiji] [--perms N] [--draws N] \
-     [--jobs N] [--out DIR] [--full]\n\
+     [--jobs N] [--out DIR] [--full] [--verify-each]\n\
      --jobs = evaluation worker threads (0 = all cores, the default); \
      results are bit-identical for every value\n\
-     --full = the paper's protocol (10000 sequences, 1000 permutations/draws)"
+     --full = the paper's protocol (10000 sequences, 1000 permutations/draws)\n\
+     --verify-each = verify the IR after every changing pass of every \
+     evaluated sequence (slow; pinpoints the offending pass)\n\
+     passes = list the registry (name, kind, preserved analyses)"
         .to_string()
+}
+
+/// `repro passes` — the registry listing: name, transform vs analysis,
+/// and the declared preserve contract of each pass.
+fn render_passes() -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<22} {:<10} preserves-on-change\n",
+        "name", "kind"
+    ));
+    for &p in crate::passes::registry_ref() {
+        let kind = if p.is_analysis() { "analysis" } else { "transform" };
+        let preserved = p.preserves_on_change();
+        let pres = if preserved.is_empty() {
+            "(none)".to_string()
+        } else {
+            preserved
+                .iter()
+                .map(|a| a.name())
+                .collect::<Vec<_>>()
+                .join(", ")
+        };
+        out.push_str(&format!("{:<22} {:<10} {}\n", p.name(), kind, pres));
+    }
+    out
 }
 
 fn fig2_cached(ctx: &mut ExpCtx) -> Vec<Fig2Row> {
@@ -111,9 +141,13 @@ fn fig2_cached(ctx: &mut ExpCtx) -> Vec<Fig2Row> {
 
 pub fn run(args: CliArgs) -> Result<(), String> {
     let out = args.out.clone();
-    let mut ctx = ExpCtx::new(args.cfg.clone());
     let io = |e: std::io::Error| e.to_string();
     match args.command.as_str() {
+        // registry listing and fig6 need no exploration context — handle
+        // them before the (expensive) per-benchmark golden/baseline build
+        "passes" => {
+            print!("{}", render_passes());
+        }
         "fig6" => {
             let (cuda, ocl) = fig6_load_patterns();
             println!("=== Fig. 6(a): 2DCONV lowered CUDA-style (NVCC addressing) ===");
@@ -122,12 +156,12 @@ pub fn run(args: CliArgs) -> Result<(), String> {
             println!("{}", first_load_window(&ocl));
         }
         "fig2" | "table1" | "fig3" | "fig4" | "fig5" | "problems" | "fig7" | "amd" | "all" => {
+            let mut cfg = args.cfg.clone();
             if args.command == "amd" {
                 // same protocol, Fiji cost tables (§3.1 side experiment)
-                let mut cfg = args.cfg.clone();
                 cfg.target = Target::fiji();
-                ctx = ExpCtx::new(cfg);
             }
+            let mut ctx = ExpCtx::new(cfg);
             let rows = fig2_cached(&mut ctx);
             match args.command.as_str() {
                 "fig2" | "amd" => {
@@ -239,5 +273,41 @@ mod tests {
     fn rejects_unknown() {
         assert!(parse_args(&sv(&["fig2", "--bogus"])).is_err());
         assert!(parse_args(&sv(&[])).is_err());
+    }
+
+    #[test]
+    fn verify_each_flag_parses() {
+        let a = parse_args(&sv(&["fig2", "--verify-each"])).unwrap();
+        assert!(a.cfg.verify_each);
+        let a = parse_args(&sv(&["fig2"])).unwrap();
+        assert!(!a.cfg.verify_each);
+    }
+
+    #[test]
+    fn passes_listing_covers_the_registry() {
+        let a = parse_args(&sv(&["passes"])).unwrap();
+        assert_eq!(a.command, "passes");
+        let text = render_passes();
+        for &p in crate::passes::registry_ref() {
+            assert!(text.contains(p.name()), "missing {}", p.name());
+        }
+        assert!(text.contains("analysis"));
+        assert!(text.contains("transform"));
+        // the alias-breaking passes advertise their narrowed contract:
+        // CFG analyses survive, the alias summary does not
+        let row_of = |name: &str| {
+            text.lines()
+                .find(|l| l.starts_with(name))
+                .unwrap_or_else(|| panic!("no row for {name}"))
+                .to_string()
+        };
+        for narrowed in ["loop-reduce", "bb-vectorize"] {
+            let row = row_of(narrowed);
+            assert!(row.contains("domtree") && row.contains("loops"), "{row}");
+            assert!(!row.contains("alias-summary"), "{row}");
+        }
+        // CFG restructurers preserve nothing; flag-only passes everything
+        assert!(row_of("simplifycfg").contains("(none)"));
+        assert!(row_of("cfl-anders-aa").contains("alias-summary"));
     }
 }

@@ -27,6 +27,10 @@ pub struct ExpConfig {
     /// evaluation worker threads for the batched engine (0 = all cores).
     /// Results are bit-identical for every value.
     pub jobs: usize,
+    /// run the IR verifier after every changing pass of every evaluated
+    /// sequence (`--verify-each`) instead of once per sequence — the
+    /// test-suite verifier mode, reachable from the CLI
+    pub verify_each: bool,
 }
 
 impl Default for ExpConfig {
@@ -38,6 +42,7 @@ impl Default for ExpConfig {
             n_perms: 200,
             n_random_draws: 200,
             jobs: 0,
+            verify_each: false,
         }
     }
 }
@@ -80,7 +85,8 @@ impl ExpCtx {
             }
         });
         let mut explorers = HashMap::new();
-        for cx in ctxs {
+        for mut cx in ctxs {
+            cx.set_verify_each(cfg.verify_each);
             explorers.insert(cx.name.clone(), Explorer::from_context(cx));
         }
         ExpCtx {
@@ -447,7 +453,9 @@ pub fn fig7_features(ctx: &mut ExpCtx, table1: &[Fig2Row]) -> Fig7Result {
             for s in &samples {
                 let names: Vec<&'static str> = s
                     .iter()
-                    .filter_map(|p| crate::passes::registry_names().into_iter().find(|n| n == p))
+                    .filter_map(|p| {
+                        crate::passes::registry_names().iter().copied().find(|n| n == p)
+                    })
                     .collect();
                 let ev = ctx.explorer(qname).evaluate(&names);
                 if ev.status.is_ok() {
@@ -489,6 +497,7 @@ mod tests {
             n_perms: 10,
             n_random_draws: 5,
             jobs: 2,
+            verify_each: false,
         })
     }
 

@@ -33,7 +33,7 @@ use crate::bench_suite::{
     execute, init_buffers, model_time_us, model_time_us_ref, outputs_match, Benchmark, BuiltBench,
     Variant,
 };
-use crate::passes::{run_sequence, PassOutcome};
+use crate::passes::{run_sequence_with, AnalysisManager, PassOutcome};
 use crate::sim::exec::{Buffers, ExecError};
 use crate::sim::target::Target;
 use crate::util::fnv1a;
@@ -91,6 +91,12 @@ pub struct EvalContext {
     /// per-kernel baseline max trip counts — pessimistic fallback when a
     /// candidate's loop bounds become unanalyzable
     baseline_trips: Vec<f64>,
+    /// verify the module after every changing pass (the CLI's
+    /// `--verify-each`), instead of once per sequence
+    verify_each: bool,
+    /// serve cached `DomTree`/`LoopForest` across a sequence (production
+    /// default; the engine bench flips it off to measure the cache)
+    analysis_cache: bool,
 }
 
 impl EvalContext {
@@ -119,6 +125,30 @@ impl EvalContext {
             baseline_steps,
             step_limit: step_limit_for(baseline_steps, timeout_factor),
             baseline_trips,
+            verify_each: false,
+            analysis_cache: true,
+        }
+    }
+
+    /// Enable/disable per-pass verification (`repro ... --verify-each`).
+    /// Evaluation outcomes keep the same Ok/fail classification; a
+    /// verifier failure is attributed to the offending pass instead of
+    /// the end-of-sequence check.
+    pub fn set_verify_each(&mut self, on: bool) {
+        self.verify_each = on;
+    }
+
+    /// Enable/disable the per-sequence analysis cache (bench-only knob;
+    /// results are bit-identical either way, only the speed changes).
+    pub fn set_analysis_cache(&mut self, on: bool) {
+        self.analysis_cache = on;
+    }
+
+    fn fresh_manager(&self) -> AnalysisManager {
+        if self.analysis_cache {
+            AnalysisManager::new()
+        } else {
+            AnalysisManager::disabled()
         }
     }
 
@@ -160,7 +190,8 @@ impl EvalContext {
     fn evaluate_vs_ptx_cache(&self, seq: &[&'static str], cache: &CacheShards) -> Evaluation {
         // ---- 1. opt on the full-size module ----
         let mut full = self.full.clone();
-        match run_sequence(&mut full.module, seq, false) {
+        let mut am = self.fresh_manager();
+        match run_sequence_with(&mut full.module, seq, self.verify_each, &mut am) {
             PassOutcome::Ok => {}
             other => {
                 // no code produced: hash 0 is the "never cached" sentinel
@@ -187,7 +218,8 @@ impl EvalContext {
             fold(p.content_hash());
         }
         let mut small = self.small.clone();
-        let sout = run_sequence(&mut small.module, seq, false);
+        let mut am_small = self.fresh_manager();
+        let sout = run_sequence_with(&mut small.module, seq, self.verify_each, &mut am_small);
         match &sout {
             PassOutcome::Ok => {
                 for p in &crate::codegen::emit_module(&small.module) {

@@ -10,7 +10,7 @@ pub const MAX_SEQ_LEN: usize = 256;
 
 pub struct SeqGen {
     rng: Rng,
-    names: Vec<&'static str>,
+    names: &'static [&'static str],
 }
 
 impl SeqGen {

@@ -8,8 +8,6 @@
 //! "all 55 code features ... are represented").
 
 use crate::analysis::AffineCtx;
-use crate::ir::dom::DomTree;
-use crate::ir::loops::LoopForest;
 use crate::ir::{Function, Module, Op, Value};
 
 pub const NUM_FEATURES: usize = 55;
@@ -99,8 +97,7 @@ pub fn extract_features(m: &Module) -> FeatureVector {
 }
 
 fn extract_function(m: &Module, f: &Function, ft: &mut FeatureVector) {
-    let dt = DomTree::compute(f);
-    let lf = LoopForest::compute(f, &dt);
+    let (_dt, lf) = crate::passes::analyses::analyses_of(f);
     let mut live_blocks = 0.0;
     for bb in f.block_ids() {
         let blk = f.block(bb);

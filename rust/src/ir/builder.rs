@@ -297,8 +297,6 @@ impl KernelBuilder {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::ir::dom::DomTree;
-    use crate::ir::loops::LoopForest;
     use crate::ir::verifier::verify_function;
 
     /// Simple saxpy-like kernel: y[gid] = a*x[gid] + y[gid] built with the
@@ -338,8 +336,7 @@ mod tests {
         });
         let f = b.finish();
         verify_function(&f).expect("verifier clean");
-        let dt = DomTree::compute(&f);
-        let lf = LoopForest::compute(&f, &dt);
+        let (_dt, lf) = crate::passes::analyses::analyses_of(&f);
         assert_eq!(lf.loops.len(), 1);
         assert!(lf.loops[0].preheader.is_some());
         assert_eq!(lf.loops[0].latches.len(), 1);

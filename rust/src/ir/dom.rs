@@ -3,7 +3,7 @@
 use super::block::BlockId;
 use super::function::Function;
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct DomTree {
     /// Immediate dominator per block (entry's idom is itself). `None` for
     /// unreachable blocks.

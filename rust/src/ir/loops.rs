@@ -9,7 +9,7 @@ use super::block::BlockId;
 use super::dom::DomTree;
 use super::function::Function;
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Loop {
     pub header: BlockId,
     /// Back-edge sources (typically one latch in our structured kernels).
@@ -27,7 +27,7 @@ pub struct Loop {
     pub depth: u32,
 }
 
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct LoopForest {
     pub loops: Vec<Loop>,
 }

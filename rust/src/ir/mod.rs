@@ -38,6 +38,8 @@ pub use dom::DomTree;
 pub use function::{Function, Param};
 pub use inst::{CmpPred, Inst, InstId, Op, MAX_ARGS};
 pub use loops::{Loop, LoopForest};
-pub use module::Module;
+pub use module::{
+    AaPrecision, AliasSummary, AllocaForm, CfgFacts, Module, Outlining, PipelineState,
+};
 pub use types::{AddrSpace, Ty};
 pub use value::Value;

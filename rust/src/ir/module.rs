@@ -1,37 +1,92 @@
-//! Modules: a set of kernels plus pipeline-wide state that passes
+//! Modules: a set of kernels plus the typed pipeline-wide state passes
 //! communicate through (the stateful couplings phase ordering exploits).
 
 use super::function::Function;
 
-/// A translation unit: one PolyBench benchmark's kernel(s) plus the state
-/// that makes pass *order* matter beyond per-pass IR rewrites.
+/// Which alias analysis is installed. In LLVM 3.9 `cfl-anders-aa`
+/// existed but was *not* part of the default -O pipelines — which is why
+/// the paper's winning sequences lead with it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AaPrecision {
+    /// BasicAA: conservatively merges distinct global buffer params.
+    #[default]
+    Basic,
+    /// The context-sensitive CFL-Anders summary: per OpenCL 2.0 §3.4 of
+    /// the paper, distinct global buffer params cannot race, so memory
+    /// passes may treat them as non-aliasing.
+    CflAnders,
+}
+
+/// The installed alias summary and its freshness. The summary is
+/// computed over addressing *as it looked when `cfl-anders-aa` ran*;
+/// passes that rewrite addressing (`loop-reduce`, `bb-vectorize`) mark
+/// it stale, and `sink`'s unsound fast path consults the stale summary
+/// (documented bug model #4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct AliasSummary {
+    pub precision: AaPrecision,
+    pub stale: bool,
+}
+
+/// CFG freshness relative to the loop analyses. `jump-threading` /
+/// `simplifycfg` restructure without refreshing loop analyses and set
+/// `dirty`; `loop-unswitch` consults a cached invariance summary that
+/// this staleness corrupts (documented bug model #2); passes that
+/// recompute loop analyses (`licm`, `gvn`, `loop-reduce`) clear it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CfgFacts {
+    pub dirty: bool,
+}
+
+/// Where allocas live. After `nvptx-lower-alloca` they are
+/// `__local_depot` accesses that `mem2reg`/`sroa` can no longer raise
+/// (running them afterwards is a no-op, like the real passes on
+/// address-space-qualified allocas).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AllocaForm {
+    /// Generic allocas, still promotable to SSA.
+    #[default]
+    Generic,
+    /// Lowered into the per-thread `__local_depot` (PTX `.local`).
+    Depot,
+}
+
+/// Outlining state. `loop-extract-single` outlined a loop body, which
+/// codegen charges a one-off call overhead for (§3.4 SYR2K observation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Outlining {
+    pub loops_extracted: bool,
+}
+
+/// The typed inter-pass state — formerly four ad-hoc module bools
+/// (`precise_aa`, `aa_stale`, `cfg_dirty`, `allocas_lowered`) plus
+/// `loops_extracted`. The mapping is exact and the transitions are
+/// bit-for-bit those of the old flags (they are load-bearing for the
+/// paper's order-matters mechanism):
+///
+/// | old flag          | typed entry                                   |
+/// |-------------------|-----------------------------------------------|
+/// | `precise_aa`      | `alias.precision == AaPrecision::CflAnders`   |
+/// | `aa_stale`        | `alias.stale`                                 |
+/// | `cfg_dirty`       | `cfg.dirty`                                   |
+/// | `allocas_lowered` | `allocas == AllocaForm::Depot`                |
+/// | `loops_extracted` | `outlining.loops_extracted`                   |
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PipelineState {
+    pub alias: AliasSummary,
+    pub cfg: CfgFacts,
+    pub allocas: AllocaForm,
+    pub outlining: Outlining,
+}
+
+/// A translation unit: one PolyBench benchmark's kernel(s) plus the
+/// typed state that makes pass *order* matter beyond per-pass IR
+/// rewrites.
 #[derive(Debug, Clone)]
 pub struct Module {
     pub name: String,
     pub kernels: Vec<Function>,
-    /// Installed by `cfl-anders-aa`: a context-sensitive alias summary
-    /// that (per OpenCL 2.0 §3.4 of the paper) lets memory passes treat
-    /// distinct global buffer params as non-aliasing. Without it, BasicAA
-    /// conservatively merges them — which is why -O3 alone gets nothing.
-    pub precise_aa: bool,
-    /// The precise-AA summary is computed over addressing as it looked
-    /// when `cfl-anders-aa` ran. Passes that rewrite addressing
-    /// (`loop-reduce`, `bb-vectorize`) set this; `sink`'s unsound fast
-    /// path consults the stale summary (documented bug model #4).
-    pub aa_stale: bool,
-    /// `nvptx-lower-alloca` ran: allocas became `__local_depot` accesses.
-    /// `mem2reg`/`sroa` can no longer raise them (precondition violation =
-    /// the paper's compile-crash bucket).
-    pub allocas_lowered: bool,
-    /// `loop-extract-single` outlined a loop body (affects codegen
-    /// call overhead modelling; §3.4 SYR2K observation).
-    pub loops_extracted: bool,
-    /// CFG was restructured by `jump-threading`/`simplifycfg` since loop
-    /// analyses were last refreshed. `loop-unswitch` consults a cached
-    /// invariance summary that this invalidates (documented bug model #2);
-    /// passes that recompute loop analyses (`licm`, `gvn`, `loop-reduce`)
-    /// clear it.
-    pub cfg_dirty: bool,
+    pub state: PipelineState,
 }
 
 impl Module {
@@ -39,11 +94,63 @@ impl Module {
         Module {
             name: name.into(),
             kernels: Vec::new(),
-            precise_aa: false,
-            aa_stale: false,
-            allocas_lowered: false,
-            loops_extracted: false,
-            cfg_dirty: false,
+            state: PipelineState::default(),
         }
+    }
+
+    /// Is the precise (CFL-Anders) alias summary installed?
+    pub fn precise_aa(&self) -> bool {
+        self.state.alias.precision == AaPrecision::CflAnders
+    }
+
+    /// Was addressing rewritten since the alias summary was computed?
+    pub fn aa_stale(&self) -> bool {
+        self.state.alias.stale
+    }
+
+    /// Was the CFG restructured since loop analyses were last refreshed?
+    pub fn cfg_dirty(&self) -> bool {
+        self.state.cfg.dirty
+    }
+
+    /// Did `nvptx-lower-alloca` run (allocas are depot accesses)?
+    pub fn allocas_lowered(&self) -> bool {
+        self.state.allocas == AllocaForm::Depot
+    }
+
+    /// Did `loop-extract-single` outline a loop body?
+    pub fn loops_extracted(&self) -> bool {
+        self.state.outlining.loops_extracted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_module_state_matches_old_flag_defaults() {
+        let m = Module::new("t");
+        assert!(!m.precise_aa());
+        assert!(!m.aa_stale());
+        assert!(!m.cfg_dirty());
+        assert!(!m.allocas_lowered());
+        assert!(!m.loops_extracted());
+        assert_eq!(m.state, PipelineState::default());
+    }
+
+    #[test]
+    fn typed_entries_map_onto_the_old_flags() {
+        let mut m = Module::new("t");
+        m.state.alias.precision = AaPrecision::CflAnders;
+        assert!(m.precise_aa());
+        m.state.alias.stale = true;
+        assert!(m.aa_stale());
+        m.state.cfg.dirty = true;
+        assert!(m.cfg_dirty());
+        m.state.allocas = AllocaForm::Depot;
+        assert!(m.allocas_lowered());
+        m.state.outlining.loops_extracted = true;
+        assert!(m.loops_extracted());
     }
 }

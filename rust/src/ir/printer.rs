@@ -95,7 +95,10 @@ pub fn print_function(f: &Function) -> String {
 pub fn print_module(m: &Module) -> String {
     let mut s = format!(
         "; module {} precise_aa={} aa_stale={} allocas_lowered={}\n",
-        m.name, m.precise_aa, m.aa_stale, m.allocas_lowered
+        m.name,
+        m.precise_aa(),
+        m.aa_stale(),
+        m.allocas_lowered()
     );
     for k in &m.kernels {
         s.push_str(&print_function(k));

@@ -7,7 +7,6 @@
 
 use std::collections::HashSet;
 
-use super::dom::DomTree;
 use super::function::Function;
 use super::inst::{InstId, Op};
 use super::module::Module;
@@ -35,7 +34,10 @@ pub fn verify_module(m: &Module) -> Result<(), VerifyError> {
 }
 
 pub fn verify_function(f: &Function) -> Result<(), VerifyError> {
-    let dt = DomTree::compute(f);
+    // through the pass layer's one-shot constructor: analysis
+    // construction stays centralized in passes/ (the verifier runs on
+    // arbitrary module states, so there is no pipeline cache to share)
+    let dt = crate::passes::analyses::dom_of(f);
     let pos = f.inst_positions();
 
     // every reachable block: non-empty, terminator last and only last,

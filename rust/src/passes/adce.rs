@@ -4,8 +4,7 @@
 //! (loops whose body only advances the induction variable).
 
 use super::common::sweep_dead;
-use super::{Pass, PassError};
-use crate::ir::dom::DomTree;
+use super::{Analysis, AnalysisManager, Pass, PassError, PreservedAnalyses, ALL_ANALYSES};
 use crate::ir::loops::LoopForest;
 use crate::ir::{Function, Module, Op};
 
@@ -16,12 +15,20 @@ impl Pass for Dce {
     fn name(&self) -> &'static str {
         "dce"
     }
-    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
+    fn run(
+        &self,
+        m: &mut Module,
+        _am: &mut AnalysisManager,
+    ) -> Result<PreservedAnalyses, PassError> {
         let mut changed = false;
         for f in &mut m.kernels {
             changed |= sweep_dead(f) > 0;
         }
-        Ok(changed)
+        // pure instruction removal: CFG untouched
+        Ok(PreservedAnalyses::preserving(changed, ALL_ANALYSES))
+    }
+    fn preserves_on_change(&self) -> &'static [Analysis] {
+        ALL_ANALYSES
     }
 }
 
@@ -29,21 +36,41 @@ impl Pass for Adce {
     fn name(&self) -> &'static str {
         "adce"
     }
-    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
+    fn run(
+        &self,
+        m: &mut Module,
+        am: &mut AnalysisManager,
+    ) -> Result<PreservedAnalyses, PassError> {
         let mut changed = false;
-        for f in &mut m.kernels {
+        let mut cfg_changed = false;
+        for (fi, f) in m.kernels.iter_mut().enumerate() {
             changed |= sweep_dead(f) > 0;
-            changed |= delete_empty_loops(f);
+            // empty-loop deletion rewires the CFG; re-query fresh
+            // analyses after every deletion until a fixpoint (nests)
+            loop {
+                let lf = am.loop_forest(fi, f);
+                if !delete_one_empty_loop(f, &lf) {
+                    break;
+                }
+                am.invalidate(fi);
+                changed = true;
+                cfg_changed = true;
+            }
         }
-        Ok(changed)
+        Ok(if cfg_changed {
+            PreservedAnalyses::none()
+        } else {
+            PreservedAnalyses::preserving(changed, ALL_ANALYSES)
+        })
     }
+    // worst case (a loop was deleted) invalidates everything
 }
 
-/// Delete loops whose body computes nothing visible: no stores, no values
-/// used outside the loop. Rewires the preheader straight to the exit.
-fn delete_empty_loops(f: &mut Function) -> bool {
-    let dt = DomTree::compute(f);
-    let lf = LoopForest::compute(f, &dt);
+/// Delete one loop whose body computes nothing visible: no stores, no
+/// values used outside the loop. Rewires the preheader straight to the
+/// exit. Returns whether a loop was deleted (the caller re-queries
+/// analyses and retries, handling nests).
+fn delete_one_empty_loop(f: &mut Function, lf: &LoopForest) -> bool {
     let mut changed = false;
     'outer: for li in lf.innermost_first() {
         let l = &lf.loops[li];
@@ -107,12 +134,8 @@ fn delete_empty_loops(f: &mut Function) -> bool {
             f.block_mut(bb).succs.clear();
         }
         changed = true;
-        // loop structures changed; recompute on next pass run
+        // loop structures changed; the caller invalidates and retries
         break;
-    }
-    if changed {
-        // run again in case of nests
-        delete_empty_loops(f);
     }
     changed
 }
@@ -120,6 +143,7 @@ fn delete_empty_loops(f: &mut Function) -> bool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ir::dom::DomTree;
     use crate::ir::verifier::verify_function;
     use crate::ir::{AddrSpace, KernelBuilder, Ty};
 
@@ -132,7 +156,7 @@ mod tests {
         b.store(b.param(0), b.gid(0), b.fc(2.0));
         let mut m = Module::new("t");
         m.kernels.push(b.finish());
-        assert!(Dce.run(&mut m).unwrap());
+        assert!(crate::passes::run_single(&Dce, &mut m).unwrap());
         let f = &m.kernels[0];
         verify_function(f).unwrap();
         assert!(!f.insts.iter().any(|i| i.op == Op::Mul));
@@ -145,7 +169,7 @@ mod tests {
         b.store(b.param(0), b.gid(0), b.fc(2.0));
         let mut m = Module::new("t");
         m.kernels.push(b.finish());
-        Dce.run(&mut m).unwrap();
+        crate::passes::run_single(&Dce, &mut m).unwrap();
         assert!(m.kernels[0].insts.iter().any(|i| i.op == Op::Store));
     }
 
@@ -159,7 +183,7 @@ mod tests {
         b.store(b.param(0), b.gid(0), b.fc(1.0));
         let mut m = Module::new("t");
         m.kernels.push(b.finish());
-        assert!(Adce.run(&mut m).unwrap());
+        assert!(crate::passes::run_single(&Adce, &mut m).unwrap());
         let f = &m.kernels[0];
         verify_function(f).unwrap();
         let dt = DomTree::compute(f);
@@ -177,7 +201,7 @@ mod tests {
         });
         let mut m = Module::new("t");
         m.kernels.push(b.finish());
-        Adce.run(&mut m).unwrap();
+        crate::passes::run_single(&Adce, &mut m).unwrap();
         let f = &m.kernels[0];
         let dt = DomTree::compute(f);
         let lf = LoopForest::compute(f, &dt);

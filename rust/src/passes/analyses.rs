@@ -1,0 +1,420 @@
+//! The analysis layer of the new-PM-style pass manager: cached
+//! per-function analyses, preserved-analyses contracts, and the
+//! generation counters that key the cache.
+//!
+//! ## Why
+//!
+//! The DSE hot path is `run_sequence` over sequences of up to 256 pass
+//! instances (§2's 10000×15 `--full` protocol multiplies that by every
+//! (benchmark × sequence) work item). Before this layer existed, every
+//! loop-oriented pass recomputed `DomTree`/`LoopForest` from scratch on
+//! each invocation — `licm` alone recomputed them up to four times per
+//! run — even though most passes never touch the CFG those analyses are
+//! derived from. The [`AnalysisManager`] computes each analysis once and
+//! serves it from cache until a pass's [`PreservedAnalyses`] return value
+//! says the underlying function changed in a way that invalidates it.
+//!
+//! ## Lifecycle and invalidation rules
+//!
+//! * Analyses are cached **per function** (indexed by the kernel's
+//!   position in `Module::kernels`) and keyed by a per-function
+//!   **generation counter**.
+//! * A cached entry is served only while its recorded generation matches
+//!   the function's current generation; bumping the generation
+//!   (via [`AnalysisManager::invalidate`]) atomically retires every
+//!   cached analysis for that function.
+//! * After each pass, the driver calls [`AnalysisManager::apply`] with
+//!   the pass's returned [`PreservedAnalyses`]: analyses *not* in the
+//!   preserved set are invalidated for **all** functions (a module pass
+//!   may have touched any kernel).
+//! * Passes that mutate the CFG *mid-run* and then re-query (e.g.
+//!   `jump-threading`'s thread-then-rescan loop, `adce`'s empty-loop
+//!   deletion) call [`AnalysisManager::invalidate`] themselves between
+//!   mutation and re-query. The cache-coherence property test
+//!   (`rust/tests/properties.rs`) checks after every pass of random
+//!   sequences that every cached analysis equals a fresh recomputation —
+//!   a wrong preserved-set declaration fails that property.
+//!
+//! `DomTree` and `LoopForest` depend only on the CFG (blocks and edges),
+//! not on instruction contents, so straight-line rewrites (instcombine,
+//! gvn, dse, licm's code motion, reg2mem/mem2reg's slot rewriting)
+//! preserve both; only CFG-restructuring passes (simplifycfg, sccp's
+//! branch folding, jump-threading, loop-unswitch's region clone, adce's
+//! empty-loop deletion) invalidate them.
+//!
+//! The third tracked analysis, [`Analysis::AliasSummary`], is the
+//! *module-level* precise-AA summary installed by `cfl-anders-aa`. Its
+//! authoritative state lives in the typed module state
+//! (`Module::state.alias` — see `ir::module::PipelineState`), because its
+//! transitions are load-bearing for the paper's order-matters mechanism
+//! and must be preserved bit-for-bit; the preserved-set bit mirrors those
+//! transitions so `repro passes` can list which passes break it.
+
+use std::rc::Rc;
+
+use crate::ir::dom::DomTree;
+use crate::ir::loops::LoopForest;
+use crate::ir::Function;
+
+/// The analyses the manager tracks. `DomTree` and `LoopForest` are
+/// cached per function; `AliasSummary` is the module-level precise-AA
+/// summary whose state lives in `Module::state.alias` (the preserved-set
+/// bit documents which passes keep it valid).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Analysis {
+    DomTree,
+    LoopForest,
+    AliasSummary,
+}
+
+impl Analysis {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Analysis::DomTree => "domtree",
+            Analysis::LoopForest => "loops",
+            Analysis::AliasSummary => "alias-summary",
+        }
+    }
+
+    fn bit(&self) -> u8 {
+        match self {
+            Analysis::DomTree => 1,
+            Analysis::LoopForest => 2,
+            Analysis::AliasSummary => 4,
+        }
+    }
+}
+
+/// Every tracked analysis: what a pass that only flips module state (or
+/// rewrites without touching CFG or addressing shape) preserves.
+pub const ALL_ANALYSES: &[Analysis] =
+    &[Analysis::DomTree, Analysis::LoopForest, Analysis::AliasSummary];
+
+/// CFG-derived analyses only: what an addressing-rewriting pass
+/// (`loop-reduce`, `bb-vectorize`) preserves — the shapes the AA summary
+/// was computed over changed, so `AliasSummary` is dropped.
+pub const CFG_ANALYSES: &[Analysis] = &[Analysis::DomTree, Analysis::LoopForest];
+
+const ALL_MASK: u8 = 1 | 2 | 4;
+
+/// What a pass run left intact — the LLVM-new-PM `PreservedAnalyses`
+/// shape (all / none / explicit set), plus the legacy-PM `changed` bit
+/// the sequence driver needs for verify-after-change and the
+/// `run_pass → bool` compatibility surface.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PreservedAnalyses {
+    changed: bool,
+    mask: u8,
+}
+
+impl PreservedAnalyses {
+    /// Nothing changed: every analysis (and the IR) is untouched.
+    pub fn all() -> PreservedAnalyses {
+        PreservedAnalyses {
+            changed: false,
+            mask: ALL_MASK,
+        }
+    }
+
+    /// The IR changed and no analysis is assumed to survive.
+    pub fn none() -> PreservedAnalyses {
+        PreservedAnalyses {
+            changed: true,
+            mask: 0,
+        }
+    }
+
+    /// `none()` when `changed`, `all()` otherwise — the conservative
+    /// return for CFG-restructuring passes.
+    pub fn none_if(changed: bool) -> PreservedAnalyses {
+        if changed {
+            PreservedAnalyses::none()
+        } else {
+            PreservedAnalyses::all()
+        }
+    }
+
+    /// The pass changed something (IR or module state) but declares the
+    /// listed analyses still valid. When `changed` is false this is
+    /// exactly [`PreservedAnalyses::all`].
+    pub fn preserving(changed: bool, kinds: &[Analysis]) -> PreservedAnalyses {
+        if !changed {
+            return PreservedAnalyses::all();
+        }
+        let mut mask = 0u8;
+        for k in kinds {
+            mask |= k.bit();
+        }
+        PreservedAnalyses { changed: true, mask }
+    }
+
+    /// Did the pass change anything (IR or typed module state)? Drives
+    /// verify-after-each-pass and the `run_pass` boolean surface.
+    pub fn is_changed(&self) -> bool {
+        self.changed
+    }
+
+    pub fn preserves(&self, a: Analysis) -> bool {
+        self.mask & a.bit() != 0
+    }
+}
+
+/// Recomputation/hit counters — the observable that proves the cache
+/// actually works (see the `-O3` counter test and `cargo bench --bench
+/// engine`'s cache on/off comparison).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AnalysisStats {
+    pub dom_computed: u64,
+    pub dom_hits: u64,
+    pub loops_computed: u64,
+    pub loops_hits: u64,
+}
+
+#[derive(Default)]
+struct Slot {
+    /// Function generation: bumped on invalidation; cached entries carry
+    /// the generation they were computed at and are served only on match.
+    gen: u64,
+    dom: Option<(u64, Rc<DomTree>)>,
+    loops: Option<(u64, Rc<LoopForest>)>,
+}
+
+/// Per-pipeline analysis cache. One instance lives for the duration of a
+/// `run_sequence` (the engine creates a fresh one per evaluation, so
+/// worker threads never share one — `Rc`, not `Arc`, by design).
+pub struct AnalysisManager {
+    /// `false` = every query recomputes (the bench's baseline mode).
+    enabled: bool,
+    slots: Vec<Slot>,
+    stats: AnalysisStats,
+}
+
+impl Default for AnalysisManager {
+    fn default() -> Self {
+        AnalysisManager::new()
+    }
+}
+
+impl AnalysisManager {
+    pub fn new() -> AnalysisManager {
+        AnalysisManager {
+            enabled: true,
+            slots: Vec::new(),
+            stats: AnalysisStats::default(),
+        }
+    }
+
+    /// A manager that never serves from cache — used by the engine bench
+    /// to measure the cache's contribution, never by production paths.
+    pub fn disabled() -> AnalysisManager {
+        AnalysisManager {
+            enabled: false,
+            slots: Vec::new(),
+            stats: AnalysisStats::default(),
+        }
+    }
+
+    fn ensure(&mut self, fi: usize) {
+        if self.slots.len() <= fi {
+            self.slots.resize_with(fi + 1, Slot::default);
+        }
+    }
+
+    /// The dominator tree of kernel `fi` (`f` must be that kernel).
+    pub fn dom_tree(&mut self, fi: usize, f: &Function) -> Rc<DomTree> {
+        self.ensure(fi);
+        if self.enabled {
+            let slot = &self.slots[fi];
+            if let Some((g, dt)) = &slot.dom {
+                if *g == slot.gen {
+                    let dt = Rc::clone(dt);
+                    self.stats.dom_hits += 1;
+                    return dt;
+                }
+            }
+        }
+        let dt = Rc::new(DomTree::compute(f));
+        let slot = &mut self.slots[fi];
+        slot.dom = Some((slot.gen, Rc::clone(&dt)));
+        self.stats.dom_computed += 1;
+        dt
+    }
+
+    /// The loop forest of kernel `fi` (computes the dominator tree first
+    /// if it is not already cached).
+    pub fn loop_forest(&mut self, fi: usize, f: &Function) -> Rc<LoopForest> {
+        self.ensure(fi);
+        if self.enabled {
+            let slot = &self.slots[fi];
+            if let Some((g, lf)) = &slot.loops {
+                if *g == slot.gen {
+                    let lf = Rc::clone(lf);
+                    self.stats.loops_hits += 1;
+                    return lf;
+                }
+            }
+        }
+        let dt = self.dom_tree(fi, f);
+        let lf = Rc::new(LoopForest::compute(f, &dt));
+        let slot = &mut self.slots[fi];
+        slot.loops = Some((slot.gen, Rc::clone(&lf)));
+        self.stats.loops_computed += 1;
+        lf
+    }
+
+    /// Retire every cached analysis for kernel `fi` by bumping its
+    /// generation. Passes call this between a CFG mutation and a
+    /// re-query inside a single run.
+    pub fn invalidate(&mut self, fi: usize) {
+        self.ensure(fi);
+        let slot = &mut self.slots[fi];
+        slot.gen += 1;
+        slot.dom = None;
+        slot.loops = None;
+    }
+
+    /// Retire everything (used on pass error paths, where the module may
+    /// have been partially rewritten).
+    pub fn invalidate_all(&mut self) {
+        for fi in 0..self.slots.len() {
+            self.invalidate(fi);
+        }
+    }
+
+    /// Apply a pass's preserved-set: drop whatever it did not keep.
+    /// Called by the sequence driver after every pass.
+    pub fn apply(&mut self, pa: &PreservedAnalyses) {
+        if !pa.preserves(Analysis::DomTree) {
+            // the loop forest is derived from the dominator tree: losing
+            // the tree loses the forest too
+            self.invalidate_all();
+        } else if !pa.preserves(Analysis::LoopForest) {
+            for slot in &mut self.slots {
+                slot.loops = None;
+            }
+        }
+    }
+
+    /// Current generation of kernel `fi` (0 until first invalidation).
+    pub fn generation(&self, fi: usize) -> u64 {
+        self.slots.get(fi).map(|s| s.gen).unwrap_or(0)
+    }
+
+    pub fn stats(&self) -> AnalysisStats {
+        self.stats
+    }
+}
+
+/// One-shot analyses for a standalone function — the sanctioned
+/// constructor for consumers outside a pass pipeline (the cost model's
+/// lowered clones, feature extraction, builder finalization). Keeps
+/// `DomTree::compute`/`LoopForest::compute` call sites inside `passes/`.
+pub fn analyses_of(f: &Function) -> (Rc<DomTree>, Rc<LoopForest>) {
+    let dt = Rc::new(DomTree::compute(f));
+    let lf = Rc::new(LoopForest::compute(f, &dt));
+    (dt, lf)
+}
+
+/// One-shot dominator tree (verifier-style consumers that never need the
+/// loop forest).
+pub fn dom_of(f: &Function) -> Rc<DomTree> {
+    Rc::new(DomTree::compute(f))
+}
+
+/// Freshly computed, never-cached analyses — the reference value the
+/// cache-coherence property test compares cached entries against.
+pub fn fresh(f: &Function) -> (DomTree, LoopForest) {
+    let dt = DomTree::compute(f);
+    let lf = LoopForest::compute(f, &dt);
+    (dt, lf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{AddrSpace, KernelBuilder, Ty};
+
+    fn looped_fn() -> Function {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let n = b.i(8);
+        b.for_loop("i", b.i(0), n, 1, |b, iv| {
+            let v = b.load(b.param(0), iv);
+            b.store(b.param(0), iv, v);
+        });
+        b.finish()
+    }
+
+    #[test]
+    fn caches_until_invalidated() {
+        let f = looped_fn();
+        let mut am = AnalysisManager::new();
+        let d1 = am.dom_tree(0, &f);
+        let d2 = am.dom_tree(0, &f);
+        assert!(Rc::ptr_eq(&d1, &d2));
+        assert_eq!(am.stats().dom_computed, 1);
+        assert_eq!(am.stats().dom_hits, 1);
+        am.invalidate(0);
+        let d3 = am.dom_tree(0, &f);
+        assert!(!Rc::ptr_eq(&d1, &d3));
+        assert_eq!(am.stats().dom_computed, 2);
+        assert_eq!(am.generation(0), 1);
+    }
+
+    #[test]
+    fn loop_forest_reuses_cached_dom() {
+        let f = looped_fn();
+        let mut am = AnalysisManager::new();
+        let _ = am.loop_forest(0, &f);
+        assert_eq!(am.stats().dom_computed, 1);
+        assert_eq!(am.stats().loops_computed, 1);
+        let _ = am.loop_forest(0, &f);
+        assert_eq!(am.stats().loops_computed, 1);
+        assert_eq!(am.stats().loops_hits, 1);
+    }
+
+    #[test]
+    fn apply_preserved_sets() {
+        let f = looped_fn();
+        let mut am = AnalysisManager::new();
+        let _ = am.loop_forest(0, &f);
+        // preserving both: nothing dropped
+        am.apply(&PreservedAnalyses::preserving(true, ALL_ANALYSES));
+        assert_eq!(am.stats().dom_computed, 1);
+        let _ = am.loop_forest(0, &f);
+        assert_eq!(am.stats().loops_computed, 1);
+        // none: both recompute
+        am.apply(&PreservedAnalyses::none());
+        let _ = am.loop_forest(0, &f);
+        assert_eq!(am.stats().dom_computed, 2);
+        assert_eq!(am.stats().loops_computed, 2);
+    }
+
+    #[test]
+    fn disabled_manager_never_hits() {
+        let f = looped_fn();
+        let mut am = AnalysisManager::disabled();
+        let _ = am.dom_tree(0, &f);
+        let _ = am.dom_tree(0, &f);
+        assert_eq!(am.stats().dom_computed, 2);
+        assert_eq!(am.stats().dom_hits, 0);
+    }
+
+    #[test]
+    fn preserved_analyses_shapes() {
+        let all = PreservedAnalyses::all();
+        assert!(!all.is_changed());
+        assert!(all.preserves(Analysis::DomTree));
+        assert!(all.preserves(Analysis::AliasSummary));
+        let none = PreservedAnalyses::none();
+        assert!(none.is_changed());
+        assert!(!none.preserves(Analysis::DomTree));
+        let cfg = PreservedAnalyses::preserving(true, CFG_ANALYSES);
+        assert!(cfg.is_changed());
+        assert!(cfg.preserves(Analysis::DomTree));
+        assert!(cfg.preserves(Analysis::LoopForest));
+        assert!(!cfg.preserves(Analysis::AliasSummary));
+        assert_eq!(PreservedAnalyses::preserving(false, &[]), all);
+        assert_eq!(PreservedAnalyses::none_if(true), none);
+        assert_eq!(PreservedAnalyses::none_if(false), all);
+    }
+}

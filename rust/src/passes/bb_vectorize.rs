@@ -5,7 +5,7 @@
 //! proof is done here with the affine machinery; the fusion happens in the
 //! backend — matching how vector widening reaches PTX in practice.
 
-use super::{Pass, PassError};
+use super::{Analysis, AnalysisManager, Pass, PassError, PreservedAnalyses, CFG_ANALYSES};
 use crate::analysis::{AffineCtx, MemLoc};
 use crate::ir::{Function, Module, Op};
 
@@ -15,16 +15,24 @@ impl Pass for BbVectorize {
     fn name(&self) -> &'static str {
         "bb-vectorize"
     }
-    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
+    fn run(
+        &self,
+        m: &mut Module,
+        _am: &mut AnalysisManager,
+    ) -> Result<PreservedAnalyses, PassError> {
         let mut changed = false;
         for f in &mut m.kernels {
             changed |= vectorize_function(f);
         }
         if changed {
             // pairing rewrites the access shape the AA summary was built on
-            m.aa_stale = true;
+            m.state.alias.stale = true;
         }
-        Ok(changed)
+        // hints only (CFG intact), but the alias summary is retired
+        Ok(PreservedAnalyses::preserving(changed, CFG_ANALYSES))
+    }
+    fn preserves_on_change(&self) -> &'static [Analysis] {
+        CFG_ANALYSES
     }
 }
 
@@ -104,8 +112,8 @@ mod tests {
         b.store(b.param(0), even, s);
         let mut m = Module::new("t");
         m.kernels.push(b.finish());
-        assert!(BbVectorize.run(&mut m).unwrap());
-        assert!(m.aa_stale);
+        assert!(crate::passes::run_single(&BbVectorize, &mut m).unwrap());
+        assert!(m.aa_stale());
         let f = &m.kernels[0];
         assert!(f.block(f.entry).vectorize_hint);
     }
@@ -121,7 +129,7 @@ mod tests {
         b.store(b.param(0), b.gid(0), s);
         let mut m = Module::new("t");
         m.kernels.push(b.finish());
-        assert!(!BbVectorize.run(&mut m).unwrap());
+        assert!(!crate::passes::run_single(&BbVectorize, &mut m).unwrap());
     }
 
     #[test]
@@ -134,7 +142,7 @@ mod tests {
         b.store(b.param(0), b.gid(0), s);
         let mut m = Module::new("t");
         m.kernels.push(b.finish());
-        assert!(!BbVectorize.run(&mut m).unwrap());
+        assert!(!crate::passes::run_single(&BbVectorize, &mut m).unwrap());
     }
 
     #[test]
@@ -148,6 +156,6 @@ mod tests {
         b.store(b.param(0), b.gid(0), s);
         let mut m = Module::new("t");
         m.kernels.push(b.finish());
-        assert!(!BbVectorize.run(&mut m).unwrap());
+        assert!(!crate::passes::run_single(&BbVectorize, &mut m).unwrap());
     }
 }

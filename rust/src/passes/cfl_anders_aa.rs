@@ -4,8 +4,8 @@
 //! winning sequence because it unlocks `licm` store promotion and `dse`
 //! across distinct OpenCL buffer arguments.
 
-use super::{Pass, PassError};
-use crate::ir::Module;
+use super::{Analysis, AnalysisManager, Pass, PassError, PreservedAnalyses, ALL_ANALYSES};
+use crate::ir::{AaPrecision, AliasSummary, Module};
 
 pub struct CflAndersAa;
 
@@ -13,27 +13,38 @@ impl Pass for CflAndersAa {
     fn name(&self) -> &'static str {
         "cfl-anders-aa"
     }
-    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
-        let changed = !m.precise_aa || m.aa_stale;
-        m.precise_aa = true;
+    fn run(
+        &self,
+        m: &mut Module,
+        _am: &mut AnalysisManager,
+    ) -> Result<PreservedAnalyses, PassError> {
+        let changed = !m.precise_aa() || m.aa_stale();
         // freshly recomputed over current addressing
-        m.aa_stale = false;
-        Ok(changed)
+        m.state.alias = AliasSummary {
+            precision: AaPrecision::CflAnders,
+            stale: false,
+        };
+        // module-state-only change: every per-function analysis survives
+        Ok(PreservedAnalyses::preserving(changed, ALL_ANALYSES))
+    }
+    fn preserves_on_change(&self) -> &'static [Analysis] {
+        ALL_ANALYSES
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::passes::run_single;
 
     #[test]
     fn installs_and_refreshes() {
         let mut m = Module::new("t");
-        m.aa_stale = true;
-        assert!(CflAndersAa.run(&mut m).unwrap());
-        assert!(m.precise_aa);
-        assert!(!m.aa_stale);
+        m.state.alias.stale = true;
+        assert!(run_single(&CflAndersAa, &mut m).unwrap());
+        assert!(m.precise_aa());
+        assert!(!m.aa_stale());
         // idempotent second run reports no change
-        assert!(!CflAndersAa.run(&mut m).unwrap());
+        assert!(!run_single(&CflAndersAa, &mut m).unwrap());
     }
 }

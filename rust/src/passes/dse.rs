@@ -16,7 +16,7 @@
 //! rarely-exercised phase orders expose real miscompiles, and the
 //! Fig. 3 validation failures (e.g. GESUMMV/COVAR pairs).
 
-use super::{Pass, PassError};
+use super::{Analysis, AnalysisManager, Pass, PassError, PreservedAnalyses, ALL_ANALYSES};
 use crate::analysis::{alias, alias_syntactic, AffineCtx, AliasResult, MemLoc};
 use crate::ir::{Function, Module, Op};
 
@@ -26,13 +26,21 @@ impl Pass for Dse {
     fn name(&self) -> &'static str {
         "dse"
     }
-    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
-        let precise = m.precise_aa;
+    fn run(
+        &self,
+        m: &mut Module,
+        _am: &mut AnalysisManager,
+    ) -> Result<PreservedAnalyses, PassError> {
+        let precise = m.precise_aa();
         let mut changed = false;
         for f in &mut m.kernels {
             changed |= dse_function(f, precise);
         }
-        Ok(changed)
+        // store removal only: CFG untouched
+        Ok(PreservedAnalyses::preserving(changed, ALL_ANALYSES))
+    }
+    fn preserves_on_change(&self) -> &'static [Analysis] {
+        ALL_ANALYSES
     }
 }
 
@@ -100,9 +108,11 @@ mod tests {
 
     fn run(f: Function, precise: bool) -> Function {
         let mut m = Module::new("t");
-        m.precise_aa = precise;
+        if precise {
+            m.state.alias.precision = crate::ir::AaPrecision::CflAnders;
+        }
         m.kernels.push(f);
-        Dse.run(&mut m).unwrap();
+        crate::passes::run_single(&Dse, &mut m).unwrap();
         m.kernels.pop().unwrap()
     }
 

@@ -4,7 +4,7 @@
 use std::collections::HashMap;
 
 use super::common::vn_key;
-use super::{Pass, PassError};
+use super::{Analysis, AnalysisManager, Pass, PassError, PreservedAnalyses, ALL_ANALYSES};
 use crate::analysis::{alias, AffineCtx, AliasResult, MemLoc};
 use crate::ir::{Function, Module, Op, Value};
 
@@ -14,13 +14,21 @@ impl Pass for EarlyCse {
     fn name(&self) -> &'static str {
         "early-cse"
     }
-    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
-        let precise = m.precise_aa;
+    fn run(
+        &self,
+        m: &mut Module,
+        _am: &mut AnalysisManager,
+    ) -> Result<PreservedAnalyses, PassError> {
+        let precise = m.precise_aa();
         let mut changed = false;
         for f in &mut m.kernels {
             changed |= cse_function(f, precise);
         }
-        Ok(changed)
+        // block-local rewrites only: CFG untouched
+        Ok(PreservedAnalyses::preserving(changed, ALL_ANALYSES))
+    }
+    fn preserves_on_change(&self) -> &'static [Analysis] {
+        ALL_ANALYSES
     }
 }
 
@@ -90,9 +98,11 @@ mod tests {
 
     fn run(f: Function, precise: bool) -> Function {
         let mut m = Module::new("t");
-        m.precise_aa = precise;
+        if precise {
+            m.state.alias.precision = crate::ir::AaPrecision::CflAnders;
+        }
         m.kernels.push(f);
-        EarlyCse.run(&mut m).unwrap();
+        crate::passes::run_single(&EarlyCse, &mut m).unwrap();
         m.kernels.pop().unwrap()
     }
 

@@ -6,8 +6,10 @@
 
 use std::collections::HashMap;
 
+use std::rc::Rc;
+
 use super::common::vn_key;
-use super::{Pass, PassError};
+use super::{Analysis, AnalysisManager, Pass, PassError, PreservedAnalyses, ALL_ANALYSES};
 use crate::analysis::{alias, AffineCtx, AliasResult, MemLoc};
 use crate::ir::dom::DomTree;
 use crate::ir::{BlockId, Function, Module, Op, Value};
@@ -18,16 +20,25 @@ impl Pass for Gvn {
     fn name(&self) -> &'static str {
         "gvn"
     }
-    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
-        let precise = m.precise_aa;
+    fn run(
+        &self,
+        m: &mut Module,
+        am: &mut AnalysisManager,
+    ) -> Result<PreservedAnalyses, PassError> {
+        let precise = m.precise_aa();
         let mut changed = false;
-        for f in &mut m.kernels {
-            changed |= gvn_function(f, precise);
+        for (fi, f) in m.kernels.iter_mut().enumerate() {
+            let dt = am.dom_tree(fi, f);
+            changed |= gvn_function(f, precise, dt);
         }
         // gvn refreshes its analyses (incl. loop info): clears the stale
         // CFG marker that jump-threading leaves behind
-        m.cfg_dirty = false;
-        Ok(changed)
+        m.state.cfg.dirty = false;
+        // value replacement + instruction removal only: CFG untouched
+        Ok(PreservedAnalyses::preserving(changed, ALL_ANALYSES))
+    }
+    fn preserves_on_change(&self) -> &'static [Analysis] {
+        ALL_ANALYSES
     }
 }
 
@@ -36,11 +47,10 @@ struct GvnCtx {
     changed: bool,
     /// dom-tree children
     children: Vec<Vec<BlockId>>,
-    dt: DomTree,
+    dt: Rc<DomTree>,
 }
 
-fn gvn_function(f: &mut Function, precise: bool) -> bool {
-    let dt = DomTree::compute(f);
+fn gvn_function(f: &mut Function, precise: bool, dt: Rc<DomTree>) -> bool {
     let n = f.blocks.len();
     let mut children: Vec<Vec<BlockId>> = vec![Vec::new(); n];
     for b in f.block_ids() {
@@ -170,9 +180,11 @@ mod tests {
 
     fn run(f: Function, precise: bool) -> Function {
         let mut m = Module::new("t");
-        m.precise_aa = precise;
+        if precise {
+            m.state.alias.precision = crate::ir::AaPrecision::CflAnders;
+        }
         m.kernels.push(f);
-        Gvn.run(&mut m).unwrap();
+        crate::passes::run_single(&Gvn, &mut m).unwrap();
         m.kernels.pop().unwrap()
     }
 
@@ -227,8 +239,8 @@ mod tests {
     #[test]
     fn clears_cfg_dirty() {
         let mut m = Module::new("t");
-        m.cfg_dirty = true;
-        Gvn.run(&mut m).unwrap();
-        assert!(!m.cfg_dirty);
+        m.state.cfg.dirty = true;
+        crate::passes::run_single(&Gvn, &mut m).unwrap();
+        assert!(!m.cfg_dirty());
     }
 }

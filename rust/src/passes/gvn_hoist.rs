@@ -3,7 +3,7 @@
 //! divergent region — which the cost model charges for).
 
 use super::common::vn_key;
-use super::{Pass, PassError};
+use super::{Analysis, AnalysisManager, Pass, PassError, PreservedAnalyses, ALL_ANALYSES};
 use crate::ir::{Function, InstId, Module, Value};
 
 pub struct GvnHoist;
@@ -12,12 +12,20 @@ impl Pass for GvnHoist {
     fn name(&self) -> &'static str {
         "gvn-hoist"
     }
-    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
+    fn run(
+        &self,
+        m: &mut Module,
+        _am: &mut AnalysisManager,
+    ) -> Result<PreservedAnalyses, PassError> {
         let mut changed = false;
         for f in &mut m.kernels {
             changed |= hoist_function(f);
         }
-        Ok(changed)
+        // moves instructions between existing blocks: CFG untouched
+        Ok(PreservedAnalyses::preserving(changed, ALL_ANALYSES))
+    }
+    fn preserves_on_change(&self) -> &'static [Analysis] {
+        ALL_ANALYSES
     }
 }
 
@@ -102,7 +110,7 @@ mod tests {
         b.store(b.param(0), b.gid(0), v);
         let mut m = Module::new("t");
         m.kernels.push(b.finish());
-        assert!(GvnHoist.run(&mut m).unwrap());
+        assert!(crate::passes::run_single(&GvnHoist, &mut m).unwrap());
         let f = &m.kernels[0];
         verify_function(f).unwrap();
         // only one mul left, and it lives in the branch block (entry)
@@ -135,7 +143,7 @@ mod tests {
         b.store(b.param(0), b.gid(0), v);
         let mut m = Module::new("t");
         m.kernels.push(b.finish());
-        GvnHoist.run(&mut m).unwrap();
+        crate::passes::run_single(&GvnHoist, &mut m).unwrap();
         let f = &m.kernels[0];
         verify_function(f).unwrap();
         // muls differ through their (different) operands — both remain

@@ -3,7 +3,7 @@
 //! constant `ptradd` chains (shrinking the Fig. 6 address patterns).
 
 use super::common::const_fold;
-use super::{Pass, PassError};
+use super::{Analysis, AnalysisManager, Pass, PassError, PreservedAnalyses, ALL_ANALYSES};
 use crate::ir::{Function, Module, Op, Value};
 
 pub struct InstCombine;
@@ -12,12 +12,20 @@ impl Pass for InstCombine {
     fn name(&self) -> &'static str {
         "instcombine"
     }
-    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
+    fn run(
+        &self,
+        m: &mut Module,
+        _am: &mut AnalysisManager,
+    ) -> Result<PreservedAnalyses, PassError> {
         let mut changed = false;
         for f in &mut m.kernels {
             changed |= combine_function(f);
         }
-        Ok(changed)
+        // peephole rewrites never touch the CFG
+        Ok(PreservedAnalyses::preserving(changed, ALL_ANALYSES))
+    }
+    fn preserves_on_change(&self) -> &'static [Analysis] {
+        ALL_ANALYSES
     }
 }
 
@@ -208,7 +216,7 @@ mod tests {
     fn run_on(f: crate::ir::Function) -> crate::ir::Function {
         let mut m = Module::new("t");
         m.kernels.push(f);
-        InstCombine.run(&mut m).unwrap();
+        crate::passes::run_single(&InstCombine, &mut m).unwrap();
         m.kernels.pop().unwrap()
     }
 

@@ -6,7 +6,7 @@
 //! random sequences).
 
 use super::common::const_fold;
-use super::{Pass, PassError};
+use super::{AnalysisManager, Pass, PassError, PreservedAnalyses};
 use crate::ir::dom::DomTree;
 use crate::ir::{Function, Module, Op, Value};
 
@@ -17,7 +17,11 @@ impl Pass for Ipsccp {
     fn name(&self) -> &'static str {
         "ipsccp"
     }
-    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
+    fn run(
+        &self,
+        m: &mut Module,
+        _am: &mut AnalysisManager,
+    ) -> Result<PreservedAnalyses, PassError> {
         run_sccp(m)
     }
 }
@@ -26,17 +30,23 @@ impl Pass for Sccp {
     fn name(&self) -> &'static str {
         "sccp"
     }
-    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
+    fn run(
+        &self,
+        m: &mut Module,
+        _am: &mut AnalysisManager,
+    ) -> Result<PreservedAnalyses, PassError> {
         run_sccp(m)
     }
 }
 
-fn run_sccp(m: &mut Module) -> Result<bool, PassError> {
+fn run_sccp(m: &mut Module) -> Result<PreservedAnalyses, PassError> {
     let mut changed = false;
     for f in &mut m.kernels {
         changed |= sccp_function(f);
     }
-    Ok(changed)
+    // branch resolution deletes CFG edges: conservatively drop all
+    // (a fold-only run rarely pays the recompute; correctness first)
+    Ok(PreservedAnalyses::none_if(changed))
 }
 
 fn sccp_function(f: &mut Function) -> bool {
@@ -175,7 +185,7 @@ mod tests {
         b.store(b.param(0), b.gid(0), v);
         let mut m = Module::new("t");
         m.kernels.push(b.finish());
-        assert!(Ipsccp.run(&mut m).unwrap());
+        assert!(crate::passes::run_single(&Ipsccp, &mut m).unwrap());
         let f = &m.kernels[0];
         verify_function(f).unwrap();
         // the phi collapsed to the constant-true arm
@@ -192,7 +202,7 @@ mod tests {
         });
         let mut m = Module::new("t");
         m.kernels.push(b.finish());
-        Ipsccp.run(&mut m).unwrap();
+        crate::passes::run_single(&Ipsccp, &mut m).unwrap();
         let f = &m.kernels[0];
         verify_function(f).unwrap();
         assert!(f.insts.iter().any(|i| i.op == Op::CondBr));

@@ -5,7 +5,7 @@
 //! refreshing loop analyses: sets `cfg_dirty`, arming the unswitch
 //! staleness model (#2) until a loop pass recomputes.
 
-use super::{Pass, PassError};
+use super::{AnalysisManager, Pass, PassError, PreservedAnalyses};
 use crate::ir::dom::DomTree;
 use crate::ir::{BlockId, Function, Module, Op};
 
@@ -15,22 +15,28 @@ impl Pass for JumpThreading {
     fn name(&self) -> &'static str {
         "jump-threading"
     }
-    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
+    fn run(
+        &self,
+        m: &mut Module,
+        am: &mut AnalysisManager,
+    ) -> Result<PreservedAnalyses, PassError> {
         let mut changed = false;
-        for f in &mut m.kernels {
-            changed |= thread_function(f);
+        for (fi, f) in m.kernels.iter_mut().enumerate() {
+            changed |= thread_function(fi, f, am);
         }
         if changed {
-            m.cfg_dirty = true;
+            // restructured without refreshing loop analyses (bug model #2)
+            m.state.cfg.dirty = true;
         }
-        Ok(changed)
+        Ok(PreservedAnalyses::none_if(changed))
     }
 }
 
-fn thread_function(f: &mut Function) -> bool {
+fn thread_function(fi: usize, f: &mut Function, am: &mut AnalysisManager) -> bool {
     let mut changed = false;
     loop {
-        let Some((bb, known_true)) = find_threadable(f) else {
+        let dt = am.dom_tree(fi, f);
+        let Some((bb, known_true)) = find_threadable(f, &dt) else {
             break;
         };
         let term = f.terminator(bb).unwrap();
@@ -60,6 +66,7 @@ fn thread_function(f: &mut Function) -> bool {
             }
         }
         super::ipsccp::prune_unreachable(f);
+        am.invalidate(fi);
         changed = true;
     }
     changed
@@ -68,8 +75,7 @@ fn thread_function(f: &mut Function) -> bool {
 /// Find a block ending in `condbr c` where `c`'s value is decided by a
 /// dominating branch on the same SSA value, reached through a unique
 /// single-pred chain.
-fn find_threadable(f: &Function) -> Option<(BlockId, bool)> {
-    let dt = DomTree::compute(f);
+fn find_threadable(f: &Function, dt: &DomTree) -> Option<(BlockId, bool)> {
     for bb in f.block_ids() {
         if !dt.is_reachable(bb) {
             continue;
@@ -137,8 +143,8 @@ mod tests {
             .filter(|i| i.op == Op::CondBr)
             .count();
         assert_eq!(before, 2);
-        assert!(JumpThreading.run(&mut m).unwrap());
-        assert!(m.cfg_dirty);
+        assert!(crate::passes::run_single(&JumpThreading, &mut m).unwrap());
+        assert!(m.cfg_dirty());
         let f = &m.kernels[0];
         verify_function(f).unwrap();
         let after = f.insts.iter().filter(|i| i.op == Op::CondBr && !i.is_nop()).count();
@@ -158,6 +164,6 @@ mod tests {
         });
         let mut m = Module::new("t");
         m.kernels.push(b.finish());
-        assert!(!JumpThreading.run(&mut m).unwrap());
+        assert!(!crate::passes::run_single(&JumpThreading, &mut m).unwrap());
     }
 }

@@ -20,7 +20,7 @@
 
 
 use super::common::{is_invariant, loop_defs};
-use super::{Pass, PassError};
+use super::{Analysis, AnalysisManager, Pass, PassError, PreservedAnalyses, ALL_ANALYSES};
 use crate::analysis::{alias, AffineCtx, AliasResult, MemLoc};
 use crate::ir::dom::DomTree;
 use crate::ir::loops::LoopForest;
@@ -32,15 +32,24 @@ impl Pass for Licm {
     fn name(&self) -> &'static str {
         "licm"
     }
-    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
-        let precise = m.precise_aa;
+    fn run(
+        &self,
+        m: &mut Module,
+        am: &mut AnalysisManager,
+    ) -> Result<PreservedAnalyses, PassError> {
+        let precise = m.precise_aa();
         let mut changed = false;
-        for f in &mut m.kernels {
-            changed |= licm_function(f, precise);
+        for (fi, f) in m.kernels.iter_mut().enumerate() {
+            changed |= licm_function(fi, f, precise, am);
         }
         // licm recomputes loop analyses: clears jump-threading staleness
-        m.cfg_dirty = false;
-        Ok(changed)
+        m.state.cfg.dirty = false;
+        // code motion and accumulator rewiring never touch the CFG, so
+        // the cached analyses the fixpoint loop just used stay valid
+        Ok(PreservedAnalyses::preserving(changed, ALL_ANALYSES))
+    }
+    fn preserves_on_change(&self) -> &'static [Analysis] {
+        ALL_ANALYSES
     }
 }
 
@@ -48,10 +57,11 @@ impl Pass for Licm {
 /// *pure* loop-invariant computations only (never loads/stores — memory
 /// promotion needs alias information the machine layer doesn't have).
 pub fn machine_hoist(f: &mut Function) -> bool {
+    let mut am = AnalysisManager::new();
     let mut changed = false;
     for _ in 0..4 {
-        let dt = DomTree::compute(f);
-        let lf = LoopForest::compute(f, &dt);
+        let dt = am.dom_tree(0, f);
+        let lf = am.loop_forest(0, f);
         let mut round = false;
         for li in lf.innermost_first() {
             round |= hoist_loop_inner(f, &dt, &lf, li, false, false);
@@ -64,12 +74,14 @@ pub fn machine_hoist(f: &mut Function) -> bool {
     changed
 }
 
-fn licm_function(f: &mut Function, precise: bool) -> bool {
+fn licm_function(fi: usize, f: &mut Function, precise: bool, am: &mut AnalysisManager) -> bool {
     let mut changed = false;
-    // iterate until stable: hoisting in inner loops can expose outer ones
+    // iterate until stable: hoisting in inner loops can expose outer
+    // ones. The CFG never changes between rounds, so after round one the
+    // analyses are cache hits — the whole fixpoint costs one compute.
     for _ in 0..4 {
-        let dt = DomTree::compute(f);
-        let lf = LoopForest::compute(f, &dt);
+        let dt = am.dom_tree(fi, f);
+        let lf = am.loop_forest(fi, f);
         let mut round = false;
         for li in lf.innermost_first() {
             round |= hoist_loop(f, &dt, &lf, li, precise);
@@ -324,9 +336,9 @@ mod tests {
     #[test]
     fn promotes_store_with_precise_aa() {
         let mut m = Module::new("t");
-        m.precise_aa = true;
+        m.state.alias.precision = crate::ir::AaPrecision::CflAnders;
         m.kernels.push(gemm_like());
-        assert!(Licm.run(&mut m).unwrap());
+        assert!(crate::passes::run_single(&Licm, &mut m).unwrap());
         let f = &m.kernels[0];
         verify_function(f).unwrap_or_else(|e| panic!("{e}\n{}", print_function(f)));
         assert_eq!(count_in_loop(f, Op::Store), 0, "store sunk out of loop");
@@ -337,9 +349,9 @@ mod tests {
     #[test]
     fn no_promotion_under_basic_aa() {
         let mut m = Module::new("t");
-        m.precise_aa = false;
+
         m.kernels.push(gemm_like());
-        Licm.run(&mut m).unwrap();
+        crate::passes::run_single(&Licm, &mut m).unwrap();
         let f = &m.kernels[0];
         verify_function(f).unwrap();
         assert_eq!(count_in_loop(f, Op::Store), 1, "May-alias blocks promotion");
@@ -360,7 +372,7 @@ mod tests {
         });
         let mut m = Module::new("t");
         m.kernels.push(b.finish());
-        assert!(Licm.run(&mut m).unwrap());
+        assert!(crate::passes::run_single(&Licm, &mut m).unwrap());
         let f = &m.kernels[0];
         verify_function(f).unwrap();
         // the mul must now live in the preheader, not the loop
@@ -382,9 +394,9 @@ mod tests {
             });
         });
         let mut m = Module::new("t");
-        m.precise_aa = true;
+        m.state.alias.precision = crate::ir::AaPrecision::CflAnders;
         m.kernels.push(b.finish());
-        Licm.run(&mut m).unwrap();
+        crate::passes::run_single(&Licm, &mut m).unwrap();
         let f = &m.kernels[0];
         verify_function(f).unwrap();
         assert_eq!(count_in_loop(f, Op::Store), 1, "conditional store stays");
@@ -408,9 +420,9 @@ mod tests {
             b.store(b.param(1), iv, s);
         });
         let mut m = Module::new("t");
-        m.precise_aa = true;
+        m.state.alias.precision = crate::ir::AaPrecision::CflAnders;
         m.kernels.push(b.finish());
-        Licm.run(&mut m).unwrap();
+        crate::passes::run_single(&Licm, &mut m).unwrap();
         let f = &m.kernels[0];
         verify_function(f).unwrap();
         // x-load hoisted; y-load stays (varies)
@@ -442,9 +454,9 @@ mod tests {
             });
         });
         let mut m = Module::new("t");
-        m.precise_aa = true;
+        m.state.alias.precision = crate::ir::AaPrecision::CflAnders;
         m.kernels.push(b.finish());
-        assert!(Licm.run(&mut m).unwrap());
+        assert!(crate::passes::run_single(&Licm, &mut m).unwrap());
         let f = &m.kernels[0];
         verify_function(f).unwrap_or_else(|e| panic!("{e}\n{}", print_function(f)));
         // the inner loop must not contain stores anymore

@@ -5,9 +5,7 @@
 //! charges a one-off call overhead for, leaving the loop IR in place.
 //! With no loops there is nothing to extract: a no-op, like the real pass.
 
-use super::{Pass, PassError};
-use crate::ir::dom::DomTree;
-use crate::ir::loops::LoopForest;
+use super::{Analysis, AnalysisManager, Pass, PassError, PreservedAnalyses, ALL_ANALYSES};
 use crate::ir::Module;
 
 pub struct LoopExtractSingle;
@@ -16,19 +14,26 @@ impl Pass for LoopExtractSingle {
     fn name(&self) -> &'static str {
         "loop-extract-single"
     }
-    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
+    fn run(
+        &self,
+        m: &mut Module,
+        am: &mut AnalysisManager,
+    ) -> Result<PreservedAnalyses, PassError> {
         let mut any_loops = false;
-        for f in &m.kernels {
-            let dt = DomTree::compute(f);
-            let lf = LoopForest::compute(f, &dt);
+        for (fi, f) in m.kernels.iter().enumerate() {
+            let lf = am.loop_forest(fi, f);
             any_loops |= !lf.loops.is_empty();
         }
         if !any_loops {
-            return Ok(false);
+            return Ok(PreservedAnalyses::all());
         }
-        let changed = !m.loops_extracted;
-        m.loops_extracted = true;
-        Ok(changed)
+        let changed = !m.loops_extracted();
+        m.state.outlining.loops_extracted = true;
+        // flag-only change: the IR is untouched
+        Ok(PreservedAnalyses::preserving(changed, ALL_ANALYSES))
+    }
+    fn preserves_on_change(&self) -> &'static [Analysis] {
+        ALL_ANALYSES
     }
 }
 
@@ -43,8 +48,8 @@ mod tests {
         b.store(b.param(0), b.gid(0), b.fc(1.0));
         let mut m = Module::new("t");
         m.kernels.push(b.finish());
-        assert_eq!(LoopExtractSingle.run(&mut m), Ok(false));
-        assert!(!m.loops_extracted);
+        assert_eq!(crate::passes::run_single(&LoopExtractSingle, &mut m), Ok(false));
+        assert!(!m.loops_extracted());
     }
 
     #[test]
@@ -56,7 +61,7 @@ mod tests {
         });
         let mut m = Module::new("t");
         m.kernels.push(b.finish());
-        assert!(LoopExtractSingle.run(&mut m).unwrap());
-        assert!(m.loops_extracted);
+        assert!(crate::passes::run_single(&LoopExtractSingle, &mut m).unwrap());
+        assert!(m.loops_extracted());
     }
 }

@@ -14,10 +14,8 @@
 use std::collections::HashMap;
 
 use super::common::{is_invariant, loop_defs, sweep_dead};
-use super::{Pass, PassError};
+use super::{Analysis, AnalysisManager, Pass, PassError, PreservedAnalyses, CFG_ANALYSES};
 use crate::analysis::{AffineCtx, MemLoc, Root};
-use crate::ir::dom::DomTree;
-use crate::ir::loops::LoopForest;
 use crate::ir::{AddrSpace, Function, Inst, Module, Op, Ty, Value};
 
 pub struct LoopReduce;
@@ -26,22 +24,31 @@ impl Pass for LoopReduce {
     fn name(&self) -> &'static str {
         "loop-reduce"
     }
-    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
+    fn run(
+        &self,
+        m: &mut Module,
+        am: &mut AnalysisManager,
+    ) -> Result<PreservedAnalyses, PassError> {
         let mut changed = false;
-        for f in &mut m.kernels {
-            changed |= lsr_function(f);
+        for (fi, f) in m.kernels.iter_mut().enumerate() {
+            changed |= lsr_function(fi, f, am);
         }
         if changed {
-            m.aa_stale = true;
+            // the AA summary was computed over the old addressing
+            m.state.alias.stale = true;
         }
-        m.cfg_dirty = false;
-        Ok(changed)
+        m.state.cfg.dirty = false;
+        // pointer-induction rewrite keeps the CFG but retires the alias
+        // summary (hence CFG_ANALYSES, not ALL)
+        Ok(PreservedAnalyses::preserving(changed, CFG_ANALYSES))
+    }
+    fn preserves_on_change(&self) -> &'static [Analysis] {
+        CFG_ANALYSES
     }
 }
 
-fn lsr_function(f: &mut Function) -> bool {
-    let dt = DomTree::compute(f);
-    let lf = LoopForest::compute(f, &dt);
+fn lsr_function(fi: usize, f: &mut Function, am: &mut AnalysisManager) -> bool {
+    let lf = am.loop_forest(fi, f);
     let mut changed = false;
 
     for li in lf.innermost_first() {
@@ -226,6 +233,8 @@ fn lsr_function(f: &mut Function) -> bool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ir::dom::DomTree;
+    use crate::ir::loops::LoopForest;
     use crate::ir::printer::print_function;
     use crate::ir::verifier::verify_function;
     use crate::ir::{AddrSpace, KernelBuilder, Ty};
@@ -248,8 +257,8 @@ mod tests {
     fn rewrites_to_pointer_induction() {
         let mut m = Module::new("t");
         m.kernels.push(simple_stream());
-        assert!(LoopReduce.run(&mut m).unwrap());
-        assert!(m.aa_stale, "addressing rewrite must mark AA stale");
+        assert!(crate::passes::run_single(&LoopReduce, &mut m).unwrap());
+        assert!(m.aa_stale(), "addressing rewrite must mark AA stale");
         let f = &m.kernels[0];
         verify_function(f).unwrap_or_else(|e| panic!("{e}\n{}", print_function(f)));
         // the body should no longer contain sext/shl address arithmetic
@@ -277,7 +286,7 @@ mod tests {
         // structural spot-check: the latch increment is 4 bytes (stride 1)
         let mut m = Module::new("t");
         m.kernels.push(simple_stream());
-        LoopReduce.run(&mut m).unwrap();
+        crate::passes::run_single(&LoopReduce, &mut m).unwrap();
         let f = &m.kernels[0];
         let incr = f
             .insts
@@ -302,7 +311,7 @@ mod tests {
         });
         let mut m = Module::new("t");
         m.kernels.push(b.finish());
-        assert!(LoopReduce.run(&mut m).unwrap());
+        assert!(crate::passes::run_single(&LoopReduce, &mut m).unwrap());
         let f = &m.kernels[0];
         verify_function(f).unwrap();
         assert!(f
@@ -323,8 +332,8 @@ mod tests {
         });
         let mut m = Module::new("t");
         m.kernels.push(b.finish());
-        let changed = LoopReduce.run(&mut m).unwrap();
+        let changed = crate::passes::run_single(&LoopReduce, &mut m).unwrap();
         assert!(!changed);
-        assert!(!m.aa_stale);
+        assert!(!m.aa_stale());
     }
 }

@@ -6,9 +6,7 @@
 //! at 8–16). The pass picks a factor from the body size the way LLVM's
 //! unroller applies its size threshold: small bodies unroll more.
 
-use super::{Pass, PassError};
-use crate::ir::dom::DomTree;
-use crate::ir::loops::LoopForest;
+use super::{Analysis, AnalysisManager, Pass, PassError, PreservedAnalyses, ALL_ANALYSES};
 use crate::ir::Module;
 
 pub struct LoopUnroll;
@@ -21,11 +19,14 @@ impl Pass for LoopUnroll {
     fn name(&self) -> &'static str {
         "loop-unroll"
     }
-    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
+    fn run(
+        &self,
+        m: &mut Module,
+        am: &mut AnalysisManager,
+    ) -> Result<PreservedAnalyses, PassError> {
         let mut changed = false;
-        for f in &mut m.kernels {
-            let dt = DomTree::compute(f);
-            let lf = LoopForest::compute(f, &dt);
+        for (fi, f) in m.kernels.iter_mut().enumerate() {
+            let lf = am.loop_forest(fi, f);
             for l in &lf.loops {
                 // innermost only
                 let is_innermost = !lf
@@ -58,7 +59,11 @@ impl Pass for LoopUnroll {
                 }
             }
         }
-        Ok(changed)
+        // unroll hints only: CFG untouched
+        Ok(PreservedAnalyses::preserving(changed, ALL_ANALYSES))
+    }
+    fn preserves_on_change(&self) -> &'static [Analysis] {
+        ALL_ANALYSES
     }
 }
 
@@ -78,7 +83,7 @@ mod tests {
         });
         let mut m = Module::new("t");
         m.kernels.push(b.finish());
-        assert!(LoopUnroll.run(&mut m).unwrap());
+        assert!(crate::passes::run_single(&LoopUnroll, &mut m).unwrap());
         let f = &m.kernels[0];
         assert!(f.block(hdr).unroll >= 2);
     }
@@ -96,7 +101,7 @@ mod tests {
         });
         let mut m = Module::new("t");
         m.kernels.push(b.finish());
-        LoopUnroll.run(&mut m).unwrap();
+        crate::passes::run_single(&LoopUnroll, &mut m).unwrap();
         assert_eq!(m.kernels[0].block(outer).unroll, 1);
     }
 
@@ -111,7 +116,7 @@ mod tests {
         b.set_unroll(hdr, 16); // CUDA-style frontend hint
         let mut m = Module::new("t");
         m.kernels.push(b.finish());
-        LoopUnroll.run(&mut m).unwrap();
+        crate::passes::run_single(&LoopUnroll, &mut m).unwrap();
         assert_eq!(m.kernels[0].block(hdr).unroll, 16);
     }
 }

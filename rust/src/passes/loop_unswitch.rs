@@ -24,9 +24,7 @@
 use std::collections::HashMap;
 
 use super::common::{is_invariant, loop_defs};
-use super::{Pass, PassError};
-use crate::ir::dom::DomTree;
-use crate::ir::loops::LoopForest;
+use super::{AnalysisManager, Pass, PassError, PreservedAnalyses};
 use crate::ir::{Block, BlockId, Function, Inst, InstId, Module, Op, Value};
 
 pub struct LoopUnswitch;
@@ -45,22 +43,31 @@ impl Pass for LoopUnswitch {
     fn name(&self) -> &'static str {
         "loop-unswitch"
     }
-    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
-        let stale = m.cfg_dirty;
+    fn run(
+        &self,
+        m: &mut Module,
+        am: &mut AnalysisManager,
+    ) -> Result<PreservedAnalyses, PassError> {
+        let stale = m.cfg_dirty();
         let mut changed = false;
-        for f in &mut m.kernels {
-            changed |= unswitch_function(f, stale)?;
+        for (fi, f) in m.kernels.iter_mut().enumerate() {
+            changed |= unswitch_function(fi, f, stale, am)?;
         }
-        Ok(changed)
+        // region cloning rewires the CFG wholesale
+        Ok(PreservedAnalyses::none_if(changed))
     }
 }
 
-fn unswitch_function(f: &mut Function, stale: bool) -> Result<bool, PassError> {
+fn unswitch_function(
+    fi: usize,
+    f: &mut Function,
+    stale: bool,
+    am: &mut AnalysisManager,
+) -> Result<bool, PassError> {
     // one unswitch per invocation (like LLVM's one-candidate-at-a-time
     // behaviour under a size threshold); callers list the pass twice to
     // unswitch twice, as the paper's CORR/COVAR sequences do.
-    let dt = DomTree::compute(f);
-    let lf = LoopForest::compute(f, &dt);
+    let lf = am.loop_forest(fi, f);
     for li in lf.innermost_first() {
         let l = lf.loops[li].clone();
         let Some(ph) = l.preheader else { continue };
@@ -385,6 +392,8 @@ fn fold_condbr(f: &mut Function, bb: BlockId, term: InstId, keep_true: bool) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ir::dom::DomTree;
+    use crate::ir::loops::LoopForest;
     use crate::ir::printer::print_function;
     use crate::ir::verifier::verify_function;
     use crate::ir::{AddrSpace, CmpPred, KernelBuilder, Ty};
@@ -409,7 +418,7 @@ mod tests {
     fn unswitches_invariant_condition() {
         let mut m = Module::new("t");
         m.kernels.push(guarded_loop());
-        let changed = LoopUnswitch.run(&mut m).unwrap();
+        let changed = crate::passes::run_single(&LoopUnswitch, &mut m).unwrap();
         assert!(changed);
         let f = &m.kernels[0];
         verify_function(f).unwrap_or_else(|e| panic!("{e}\n{}", print_function(f)));
@@ -439,7 +448,7 @@ mod tests {
         });
         let mut m = Module::new("t");
         m.kernels.push(b.finish());
-        assert!(!LoopUnswitch.run(&mut m).unwrap());
+        assert!(!crate::passes::run_single(&LoopUnswitch, &mut m).unwrap());
     }
 
     #[test]
@@ -456,9 +465,9 @@ mod tests {
             });
         });
         let mut m = Module::new("t");
-        m.cfg_dirty = true;
+        m.state.cfg.dirty = true;
         m.kernels.push(b.finish());
-        let changed = LoopUnswitch.run(&mut m).unwrap();
+        let changed = crate::passes::run_single(&LoopUnswitch, &mut m).unwrap();
         assert!(changed, "stale summary lets the variant condition through");
         // result is still structurally valid — the bug is semantic,
         // caught by execution, not by the verifier
@@ -472,7 +481,7 @@ mod tests {
         // repeatedly unswitch until the budget trips
         let mut err = None;
         for _ in 0..64 {
-            match LoopUnswitch.run(&mut m) {
+            match crate::passes::run_single(&LoopUnswitch, &mut m) {
                 Ok(true) => continue,
                 Ok(false) => break,
                 Err(e) => {
@@ -504,7 +513,7 @@ mod tests {
         b.store(b.param(0), b.i(0), acc);
         let mut m = Module::new("t");
         m.kernels.push(b.finish());
-        let changed = LoopUnswitch.run(&mut m).unwrap();
+        let changed = crate::passes::run_single(&LoopUnswitch, &mut m).unwrap();
         let f = &m.kernels[0];
         verify_function(f).unwrap_or_else(|e| panic!("{e}\n{}", print_function(f)));
         let _ = changed;

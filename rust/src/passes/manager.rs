@@ -1,6 +1,17 @@
-//! The pass manager: runs named sequences over a module — the equivalent
-//! of `opt -pass1 -pass2 ...` in the paper's compilation flow (Fig. 1).
+//! The pass manager: runs named sequences over a module through the
+//! analysis manager — the equivalent of `opt -pass1 -pass2 ...` in the
+//! paper's compilation flow (Fig. 1), with new-PM-style cached analyses.
+//!
+//! The sequence driver owns the invalidation protocol: after every pass
+//! it applies the returned [`PreservedAnalyses`] to the
+//! [`AnalysisManager`], so cached `DomTree`/`LoopForest` survive exactly
+//! as long as the passes' contracts say they may. The DSE hot loop
+//! (`dse::engine`) creates one manager per evaluation and runs the whole
+//! sequence through it; tests and the property harness use
+//! [`run_sequence_with`] directly when they need the recomputation
+//! counters ([`AnalysisManager::stats`]).
 
+use super::analyses::{AnalysisManager, PreservedAnalyses};
 use super::{pass_by_name, PassError};
 use crate::ir::verifier::verify_module;
 use crate::ir::Module;
@@ -25,24 +36,60 @@ impl PassOutcome {
     }
 }
 
-/// Run one pass by name.
+/// Run one pass by name against a throwaway analysis manager; returns
+/// whether anything changed (the legacy boolean surface).
 pub fn run_pass(m: &mut Module, name: &str) -> Result<bool, PassError> {
-    let p = pass_by_name(name)
-        .ok_or_else(|| PassError::Precondition(format!("unknown pass {name}")))?;
-    p.run(m)
+    let mut am = AnalysisManager::new();
+    run_pass_with(m, name, &mut am).map(|pa| pa.is_changed())
 }
 
-/// Run a full sequence, stopping at the first crash. When `verify` is set
-/// the module is verified after every transforming pass (used by tests and
-/// the property harness; the DSE hot loop verifies once at the end).
+/// Run one pass by name through a live analysis manager, applying its
+/// preserved-set to the cache. On error the cache is fully retired (the
+/// pass may have partially rewritten the module before failing).
+pub fn run_pass_with(
+    m: &mut Module,
+    name: &str,
+    am: &mut AnalysisManager,
+) -> Result<PreservedAnalyses, PassError> {
+    let p = pass_by_name(name)
+        .ok_or_else(|| PassError::Precondition(format!("unknown pass {name}")))?;
+    match p.run(m, am) {
+        Ok(pa) => {
+            am.apply(&pa);
+            Ok(pa)
+        }
+        Err(e) => {
+            am.invalidate_all();
+            Err(e)
+        }
+    }
+}
+
+/// Run a full sequence with a fresh analysis manager, stopping at the
+/// first crash. When `verify` is set the module is verified after every
+/// changing pass (tests, the property harness, and the CLI's
+/// `--verify-each` mode; the DSE hot loop verifies once at the end).
 pub fn run_sequence(m: &mut Module, names: &[&str], verify: bool) -> PassOutcome {
+    let mut am = AnalysisManager::new();
+    run_sequence_with(m, names, verify, &mut am)
+}
+
+/// [`run_sequence`] over a caller-provided manager — the engine's entry
+/// point (it owns the manager to control caching and read the stats).
+pub fn run_sequence_with(
+    m: &mut Module,
+    names: &[&str],
+    verify: bool,
+    am: &mut AnalysisManager,
+) -> PassOutcome {
     for &name in names {
         let Some(p) = pass_by_name(name) else {
             return PassOutcome::UnknownPass(name.to_string());
         };
-        match p.run(m) {
-            Ok(changed) => {
-                if verify && changed {
+        match p.run(m, am) {
+            Ok(pa) => {
+                am.apply(&pa);
+                if verify && pa.is_changed() {
                     if let Err(e) = verify_module(m) {
                         return PassOutcome::VerifierFail {
                             pass: name.to_string(),
@@ -52,10 +99,11 @@ pub fn run_sequence(m: &mut Module, names: &[&str], verify: bool) -> PassOutcome
                 }
             }
             Err(e) => {
+                am.invalidate_all();
                 return PassOutcome::Crash {
                     pass: name.to_string(),
                     error: e.to_string(),
-                }
+                };
             }
         }
     }
@@ -177,5 +225,11 @@ mod tests {
     fn o3_lacks_cfl_anders_aa() {
         // The load-bearing fact behind the paper's "-OX barely helps".
         assert!(!standard_level("-O3").unwrap().contains(&"cfl-anders-aa"));
+    }
+
+    #[test]
+    fn unknown_pass_via_run_pass_is_an_error() {
+        let mut m = Module::new("t");
+        assert!(run_pass(&mut m, "nope").is_err());
     }
 }

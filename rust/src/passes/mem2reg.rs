@@ -8,7 +8,7 @@
 
 use std::collections::{HashMap, HashSet};
 
-use super::{Pass, PassError};
+use super::{Analysis, AnalysisManager, Pass, PassError, PreservedAnalyses, ALL_ANALYSES};
 use crate::ir::dom::DomTree;
 use crate::ir::{BlockId, Function, Inst, InstId, Module, Op, Ty, Value};
 
@@ -18,21 +18,29 @@ impl Pass for Mem2Reg {
     fn name(&self) -> &'static str {
         "mem2reg"
     }
-    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
-        if m.allocas_lowered {
+    fn run(
+        &self,
+        m: &mut Module,
+        am: &mut AnalysisManager,
+    ) -> Result<PreservedAnalyses, PassError> {
+        if m.allocas_lowered() {
             // depot accesses fail the promotability test — nothing to do
             // (like real mem2reg on address-space-qualified allocas)
-            return Ok(false);
+            return Ok(PreservedAnalyses::all());
         }
         let mut changed = false;
-        for f in &mut m.kernels {
-            changed |= promote_function(f);
+        for (fi, f) in m.kernels.iter_mut().enumerate() {
+            changed |= promote_function(fi, f, am);
         }
-        Ok(changed)
+        // phi insertion and slot rewriting: CFG untouched
+        Ok(PreservedAnalyses::preserving(changed, ALL_ANALYSES))
+    }
+    fn preserves_on_change(&self) -> &'static [Analysis] {
+        ALL_ANALYSES
     }
 }
 
-pub(crate) fn promote_function(f: &mut Function) -> bool {
+pub(crate) fn promote_function(fi: usize, f: &mut Function, am: &mut AnalysisManager) -> bool {
     // promotable: alloca whose only uses are load/store addresses
     let allocas: Vec<InstId> = f
         .insts
@@ -69,7 +77,7 @@ pub(crate) fn promote_function(f: &mut Function) -> bool {
         return false;
     }
 
-    let dt = DomTree::compute(f);
+    let dt = am.dom_tree(fi, f);
     let df = dominance_frontier(f, &dt);
     let blocks_of = f.inst_blocks();
 
@@ -247,9 +255,9 @@ mod tests {
         b.store(b.param(0), b.i(0), acc);
         let mut m = Module::new("t");
         m.kernels.push(b.finish());
-        Reg2Mem.run(&mut m).unwrap();
+        crate::passes::run_single(&Reg2Mem, &mut m).unwrap();
         assert!(!m.kernels[0].insts.iter().any(|i| i.op == Op::Phi));
-        assert!(Mem2Reg.run(&mut m).unwrap());
+        assert!(crate::passes::run_single(&Mem2Reg, &mut m).unwrap());
         let f = &m.kernels[0];
         verify_function(f).unwrap();
         assert!(f.insts.iter().any(|i| i.op == Op::Phi), "phis restored");
@@ -270,11 +278,11 @@ mod tests {
         });
         let mut m = Module::new("t");
         m.kernels.push(b.finish());
-        Reg2Mem.run(&mut m).unwrap();
-        NvptxLowerAlloca.run(&mut m).unwrap();
+        crate::passes::run_single(&Reg2Mem, &mut m).unwrap();
+        crate::passes::run_single(&NvptxLowerAlloca, &mut m).unwrap();
         // depot slots are not promotable: the pass declines, the allocas
         // stay
-        assert_eq!(Mem2Reg.run(&mut m), Ok(false));
+        assert_eq!(crate::passes::run_single(&Mem2Reg, &mut m), Ok(false));
         assert!(m.kernels[0].insts.iter().any(|i| i.op == Op::Alloca));
     }
 }

@@ -1,17 +1,45 @@
-//! The pass library: the reproduction's stand-in for LLVM 3.9's `opt`.
+//! The pass library: the reproduction's stand-in for LLVM 3.9's `opt`,
+//! rebuilt around an LLVM-new-PM-style pass & analysis manager.
 //!
 //! Every pass named in the paper's Table 1 exists here as a *real*
 //! transformation over the IR (not a lookup table): the speedups the DSE
-//! finds emerge from genuine pass interactions. Passes communicate through
-//! the IR and through the module-wide state (`precise_aa`, `aa_stale`,
-//! `cfg_dirty`, `allocas_lowered`), which is what makes *order* matter.
+//! finds emerge from genuine pass interactions. Passes communicate
+//! through the IR and through the typed module state
+//! ([`crate::ir::PipelineState`]: the alias summary and its staleness,
+//! CFG dirtiness, alloca form, outlining), which is what makes *order*
+//! matter.
 //!
-//! Unsound edge cases are deliberately present (documented per pass and in
-//! DESIGN.md §5): the paper observes that untested phase orders miscompile
-//! (13% invalid output) or crash (3% no IR), and the mechanism here is the
-//! same — real bugs caught (or not) by downstream validation.
+//! ## Architecture
+//!
+//! * [`Pass::run`] takes the module **and** an [`AnalysisManager`], and
+//!   returns [`PreservedAnalyses`] — all / none / an explicit set —
+//!   instead of a bare changed-bool. The manager caches per-function
+//!   `DomTree`/`LoopForest` keyed by generation counters and invalidates
+//!   them only when a pass's preserved-set says so (see
+//!   [`analyses`] for the lifecycle and invalidation rules). No caller
+//!   outside `passes/` constructs analyses directly; out-of-pipeline
+//!   consumers (cost model, features) go through
+//!   [`analyses::analyses_of`].
+//! * The registry is a zero-allocation static table
+//!   ([`registry_ref`]): `&'static dyn Pass` entries, with a
+//!   lazily-initialized name index behind [`pass_by_name`]. The DSE hot
+//!   loop resolves hundreds of pass names per sequence; nothing is boxed
+//!   or cloned per lookup.
+//! * [`run_sequence`] / [`manager::run_sequence_with`] drive sequences
+//!   through the manager; `repro passes` lists the registry with each
+//!   pass's declared preserve contract, and `--verify-each` exposes the
+//!   per-pass verifier mode from the CLI.
+//!
+//! Unsound edge cases are deliberately present (documented per pass and
+//! in DESIGN.md §5): the paper observes that untested phase orders
+//! miscompile (13% invalid output) or crash (3% no IR), and the
+//! mechanism here is the same — real bugs caught (or not) by downstream
+//! validation. The bug models ride on the typed module state exactly as
+//! they rode on the old ad-hoc flags; the state transitions are
+//! preserved bit-for-bit.
 
 pub mod adce;
+pub mod analyses;
 pub mod bb_vectorize;
 pub mod cfl_anders_aa;
 pub mod common;
@@ -36,7 +64,13 @@ pub mod simplifycfg;
 pub mod sink;
 pub mod sroa;
 
-pub use manager::{run_pass, run_sequence, PassOutcome};
+pub use analyses::{
+    Analysis, AnalysisManager, AnalysisStats, PreservedAnalyses, ALL_ANALYSES, CFG_ANALYSES,
+};
+pub use manager::{run_pass, run_pass_with, run_sequence, run_sequence_with, PassOutcome};
+
+use std::collections::HashMap;
+use std::sync::OnceLock;
 
 use crate::ir::Module;
 
@@ -61,16 +95,36 @@ impl std::fmt::Display for PassError {
 }
 impl std::error::Error for PassError {}
 
-/// A transformation or analysis pass. Stateless; all state is in the IR.
+/// A transformation or analysis pass. Stateless; all mutable state is in
+/// the IR, the typed module state, and the analysis manager.
 pub trait Pass: Sync {
     fn name(&self) -> &'static str;
-    /// Returns whether anything changed.
-    fn run(&self, m: &mut Module) -> Result<bool, PassError>;
+
+    /// Run over the module, obtaining `DomTree`/`LoopForest` through
+    /// `am` (never by constructing them directly), and report what
+    /// survived. A pass that mutates the CFG and re-queries analyses
+    /// within one run must call [`AnalysisManager::invalidate`] in
+    /// between.
+    fn run(
+        &self,
+        m: &mut Module,
+        am: &mut AnalysisManager,
+    ) -> Result<PreservedAnalyses, PassError>;
+
     /// Analysis-only (no IR mutation) — listed in the registry so random
     /// sequences contain realistic no-op picks, like `-print-memdeps` in
     /// the paper's GEMM sequence.
     fn is_analysis(&self) -> bool {
         false
+    }
+
+    /// The static preserve contract: the worst-case set of analyses this
+    /// pass keeps valid when it changes something. A specific `run` may
+    /// report preserving *more* (e.g. `adce` that only swept dead code
+    /// without deleting a loop), never less; the cache-coherence
+    /// property test catches over-claims. Surfaced by `repro passes`.
+    fn preserves_on_change(&self) -> &'static [Analysis] {
+        &[]
     }
 }
 
@@ -82,11 +136,18 @@ macro_rules! analysis_pass {
             fn name(&self) -> &'static str {
                 $name
             }
-            fn run(&self, _m: &mut Module) -> Result<bool, PassError> {
-                Ok(false)
+            fn run(
+                &self,
+                _m: &mut Module,
+                _am: &mut AnalysisManager,
+            ) -> Result<PreservedAnalyses, PassError> {
+                Ok(PreservedAnalyses::all())
             }
             fn is_analysis(&self) -> bool {
                 true
+            }
+            fn preserves_on_change(&self) -> &'static [Analysis] {
+                ALL_ANALYSES
             }
         }
     };
@@ -103,54 +164,75 @@ analysis_pass!(PrintAliasSets, "print-alias-sets");
 analysis_pass!(InstCount, "instcount");
 analysis_pass!(ModuleDebugInfo, "module-debuginfo");
 
-/// The full registry, in a stable order. Random sequence generation
-/// samples uniformly from these names (the paper samples from "all LLVM
-/// passes except -view-* and individually-broken ones").
-pub fn registry() -> Vec<Box<dyn Pass>> {
-    vec![
-        Box::new(cfl_anders_aa::CflAndersAa),
-        Box::new(instcombine::InstCombine),
-        Box::new(reassociate::Reassociate),
-        Box::new(early_cse::EarlyCse),
-        Box::new(gvn::Gvn),
-        Box::new(gvn_hoist::GvnHoist),
-        Box::new(dse::Dse),
-        Box::new(licm::Licm),
-        Box::new(sink::Sink),
-        Box::new(adce::Adce),
-        Box::new(adce::Dce),
-        Box::new(simplifycfg::SimplifyCfg),
-        Box::new(ipsccp::Ipsccp),
-        Box::new(ipsccp::Sccp),
-        Box::new(jump_threading::JumpThreading),
-        Box::new(loop_reduce::LoopReduce),
-        Box::new(loop_unroll::LoopUnroll),
-        Box::new(loop_unswitch::LoopUnswitch),
-        Box::new(loop_extract_single::LoopExtractSingle),
-        Box::new(reg2mem::Reg2Mem),
-        Box::new(mem2reg::Mem2Reg),
-        Box::new(sroa::Sroa),
-        Box::new(nvptx_lower_alloca::NvptxLowerAlloca),
-        Box::new(bb_vectorize::BbVectorize),
-        Box::new(PrintMemDeps),
-        Box::new(AaEval),
-        Box::new(DomTreePrinter),
-        Box::new(LoopsPrinter),
-        Box::new(ScalarEvolution),
-        Box::new(PrintAliasSets),
-        Box::new(InstCount),
-        Box::new(ModuleDebugInfo),
-    ]
+/// The full registry, in a stable order, as a zero-allocation static:
+/// every pass is a unit struct, so the table is `&'static dyn Pass`
+/// entries promoted at compile time. Random sequence generation samples
+/// uniformly from these names (the paper samples from "all LLVM passes
+/// except -view-* and individually-broken ones").
+static REGISTRY: [&dyn Pass; 32] = [
+    &cfl_anders_aa::CflAndersAa,
+    &instcombine::InstCombine,
+    &reassociate::Reassociate,
+    &early_cse::EarlyCse,
+    &gvn::Gvn,
+    &gvn_hoist::GvnHoist,
+    &dse::Dse,
+    &licm::Licm,
+    &sink::Sink,
+    &adce::Adce,
+    &adce::Dce,
+    &simplifycfg::SimplifyCfg,
+    &ipsccp::Ipsccp,
+    &ipsccp::Sccp,
+    &jump_threading::JumpThreading,
+    &loop_reduce::LoopReduce,
+    &loop_unroll::LoopUnroll,
+    &loop_unswitch::LoopUnswitch,
+    &loop_extract_single::LoopExtractSingle,
+    &reg2mem::Reg2Mem,
+    &mem2reg::Mem2Reg,
+    &sroa::Sroa,
+    &nvptx_lower_alloca::NvptxLowerAlloca,
+    &bb_vectorize::BbVectorize,
+    &PrintMemDeps,
+    &AaEval,
+    &DomTreePrinter,
+    &LoopsPrinter,
+    &ScalarEvolution,
+    &PrintAliasSets,
+    &InstCount,
+    &ModuleDebugInfo,
+];
+
+/// The registry as a static slice — no allocation, no boxing.
+pub fn registry_ref() -> &'static [&'static dyn Pass] {
+    &REGISTRY
 }
 
-/// All registered pass names (stable order).
-pub fn registry_names() -> Vec<&'static str> {
-    registry().iter().map(|p| p.name()).collect()
+/// All registered pass names (stable order), materialized once.
+pub fn registry_names() -> &'static [&'static str] {
+    static NAMES: OnceLock<Vec<&'static str>> = OnceLock::new();
+    NAMES
+        .get_or_init(|| REGISTRY.iter().map(|p| p.name()).collect())
+        .as_slice()
 }
 
-/// Look up one pass by name.
-pub fn pass_by_name(name: &str) -> Option<Box<dyn Pass>> {
-    registry().into_iter().find(|p| p.name() == name)
+/// Look up one pass by name through the lazily-built name index.
+pub fn pass_by_name(name: &str) -> Option<&'static dyn Pass> {
+    static INDEX: OnceLock<HashMap<&'static str, &'static dyn Pass>> = OnceLock::new();
+    INDEX
+        .get_or_init(|| REGISTRY.iter().map(|&p| (p.name(), p)).collect())
+        .get(name)
+        .copied()
+}
+
+/// Run one pass instance against a throwaway manager; returns whether
+/// anything changed. Convenience for unit tests and out-of-pipeline
+/// one-shot uses (backend cleanup, CUDA-flavour finalization) — pipeline
+/// code goes through [`manager::run_sequence_with`].
+pub fn run_single(p: &dyn Pass, m: &mut Module) -> Result<bool, PassError> {
+    let mut am = AnalysisManager::new();
+    p.run(m, &mut am).map(|pa| pa.is_changed())
 }
 
 #[cfg(test)]
@@ -188,10 +270,33 @@ mod tests {
 
     #[test]
     fn names_are_unique() {
-        let mut names = registry_names();
+        let mut names = registry_names().to_vec();
         names.sort();
         let n = names.len();
         names.dedup();
         assert_eq!(n, names.len());
+    }
+
+    #[test]
+    fn lookup_is_stable_and_total() {
+        for &p in registry_ref() {
+            let found = pass_by_name(p.name()).expect("registered pass resolves");
+            assert_eq!(found.name(), p.name());
+        }
+        assert!(pass_by_name("not-a-pass").is_none());
+    }
+
+    #[test]
+    fn analysis_passes_preserve_everything() {
+        for &p in registry_ref() {
+            if p.is_analysis() {
+                assert_eq!(
+                    p.preserves_on_change(),
+                    ALL_ANALYSES,
+                    "{} is analysis-only",
+                    p.name()
+                );
+            }
+        }
     }
 }

@@ -11,8 +11,8 @@
 //! running `mem2reg`/`sroa` afterwards is a pipeline error (the paper's
 //! compile-crash bucket).
 
-use super::{Pass, PassError};
-use crate::ir::{Module, Op};
+use super::{Analysis, AnalysisManager, Pass, PassError, PreservedAnalyses, ALL_ANALYSES};
+use crate::ir::{AllocaForm, Module, Op};
 
 pub struct NvptxLowerAlloca;
 
@@ -20,16 +20,23 @@ impl Pass for NvptxLowerAlloca {
     fn name(&self) -> &'static str {
         "nvptx-lower-alloca"
     }
-    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
+    fn run(
+        &self,
+        m: &mut Module,
+        _am: &mut AnalysisManager,
+    ) -> Result<PreservedAnalyses, PassError> {
         let has_allocas = m
             .kernels
             .iter()
             .any(|f| f.insts.iter().any(|i| i.op == Op::Alloca));
-        let changed = has_allocas && !m.allocas_lowered;
+        let changed = has_allocas && !m.allocas_lowered();
         if has_allocas {
-            m.allocas_lowered = true;
+            m.state.allocas = AllocaForm::Depot;
         }
-        Ok(changed)
+        Ok(PreservedAnalyses::preserving(changed, ALL_ANALYSES))
+    }
+    fn preserves_on_change(&self) -> &'static [Analysis] {
+        ALL_ANALYSES
     }
 }
 
@@ -37,6 +44,7 @@ impl Pass for NvptxLowerAlloca {
 mod tests {
     use super::*;
     use crate::ir::{AddrSpace, Inst, KernelBuilder, Ty, Value};
+    use crate::passes::run_single;
 
     #[test]
     fn lowers_when_allocas_present() {
@@ -48,14 +56,14 @@ mod tests {
         );
         let mut m = Module::new("t");
         m.kernels.push(b.finish());
-        assert!(NvptxLowerAlloca.run(&mut m).unwrap());
-        assert!(m.allocas_lowered);
+        assert!(run_single(&NvptxLowerAlloca, &mut m).unwrap());
+        assert!(m.allocas_lowered());
     }
 
     #[test]
     fn noop_without_allocas() {
         let mut m = Module::new("t");
-        assert!(!NvptxLowerAlloca.run(&mut m).unwrap());
-        assert!(!m.allocas_lowered);
+        assert!(!run_single(&NvptxLowerAlloca, &mut m).unwrap());
+        assert!(!m.allocas_lowered());
     }
 }

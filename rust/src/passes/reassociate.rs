@@ -4,7 +4,7 @@
 //! 1% for exactly this class of transformation.
 
 use super::common::value_order;
-use super::{Pass, PassError};
+use super::{Analysis, AnalysisManager, Pass, PassError, PreservedAnalyses, ALL_ANALYSES};
 use crate::ir::Module;
 
 pub struct Reassociate;
@@ -13,7 +13,11 @@ impl Pass for Reassociate {
     fn name(&self) -> &'static str {
         "reassociate"
     }
-    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
+    fn run(
+        &self,
+        m: &mut Module,
+        _am: &mut AnalysisManager,
+    ) -> Result<PreservedAnalyses, PassError> {
         let mut changed = false;
         for f in &mut m.kernels {
             for inst in f.insts.iter_mut() {
@@ -28,7 +32,11 @@ impl Pass for Reassociate {
                 }
             }
         }
-        Ok(changed)
+        // operand swaps only: CFG and addressing shape untouched
+        Ok(PreservedAnalyses::preserving(changed, ALL_ANALYSES))
+    }
+    fn preserves_on_change(&self) -> &'static [Analysis] {
+        ALL_ANALYSES
     }
 }
 
@@ -45,12 +53,12 @@ mod tests {
         b.store(b.param(0), x, b.fc(1.0));
         let mut m = Module::new("t");
         m.kernels.push(b.finish());
-        assert!(Reassociate.run(&mut m).unwrap());
+        assert!(crate::passes::run_single(&Reassociate, &mut m).unwrap());
         let f = &m.kernels[0];
         let add = f.insts.iter().find(|i| i.op == Op::Add).unwrap();
         assert_eq!(add.args()[0], Value::GlobalId(0));
         assert_eq!(add.args()[1], Value::ImmI(3));
         // second run: no change
-        assert!(!Reassociate.run(&mut m).unwrap());
+        assert!(!crate::passes::run_single(&Reassociate, &mut m).unwrap());
     }
 }

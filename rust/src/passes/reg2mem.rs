@@ -5,7 +5,7 @@
 //! the SSA graph in a way that keeps `licm`'s store promotion applicable
 //! (alloca traffic never aliases global buffers).
 
-use super::{Pass, PassError};
+use super::{Analysis, AnalysisManager, Pass, PassError, PreservedAnalyses, ALL_ANALYSES};
 use crate::ir::{AddrSpace, Function, Inst, InstId, Module, Op, Ty, Value};
 
 pub struct Reg2Mem;
@@ -14,12 +14,20 @@ impl Pass for Reg2Mem {
     fn name(&self) -> &'static str {
         "reg2mem"
     }
-    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
+    fn run(
+        &self,
+        m: &mut Module,
+        _am: &mut AnalysisManager,
+    ) -> Result<PreservedAnalyses, PassError> {
         let mut changed = false;
         for f in &mut m.kernels {
             changed |= demote_function(f);
         }
-        Ok(changed)
+        // phi demotion inserts slot traffic but never touches the CFG
+        Ok(PreservedAnalyses::preserving(changed, ALL_ANALYSES))
+    }
+    fn preserves_on_change(&self) -> &'static [Analysis] {
+        ALL_ANALYSES
     }
 }
 
@@ -88,7 +96,7 @@ mod tests {
         });
         let mut m = Module::new("t");
         m.kernels.push(b.finish());
-        assert!(Reg2Mem.run(&mut m).unwrap());
+        assert!(crate::passes::run_single(&Reg2Mem, &mut m).unwrap());
         let f = &m.kernels[0];
         verify_function(f).unwrap();
         assert!(!f.insts.iter().any(|i| i.op == Op::Phi), "no phis remain");
@@ -101,7 +109,7 @@ mod tests {
         b.store(b.param(0), b.gid(0), b.fc(1.0));
         let mut m = Module::new("t");
         m.kernels.push(b.finish());
-        assert!(!Reg2Mem.run(&mut m).unwrap());
+        assert!(!crate::passes::run_single(&Reg2Mem, &mut m).unwrap());
     }
 
     #[test]
@@ -117,7 +125,7 @@ mod tests {
         b.store(b.param(0), b.i(0), acc);
         let mut m = Module::new("t");
         m.kernels.push(b.finish());
-        Reg2Mem.run(&mut m).unwrap();
+        crate::passes::run_single(&Reg2Mem, &mut m).unwrap();
         let f = &m.kernels[0];
         verify_function(f).unwrap();
         let dt = DomTree::compute(f);

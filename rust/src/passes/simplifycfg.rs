@@ -4,7 +4,7 @@
 //! model (it restructures without refreshing loop analyses).
 
 use super::ipsccp::prune_unreachable;
-use super::{Pass, PassError};
+use super::{AnalysisManager, Pass, PassError, PreservedAnalyses};
 use crate::ir::{Function, Module, Op};
 
 pub struct SimplifyCfg;
@@ -13,15 +13,21 @@ impl Pass for SimplifyCfg {
     fn name(&self) -> &'static str {
         "simplifycfg"
     }
-    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
+    fn run(
+        &self,
+        m: &mut Module,
+        _am: &mut AnalysisManager,
+    ) -> Result<PreservedAnalyses, PassError> {
         let mut changed = false;
         for f in &mut m.kernels {
             changed |= simplify_function(f);
         }
         if changed {
-            m.cfg_dirty = true;
+            // restructured without refreshing loop analyses (bug model #2)
+            m.state.cfg.dirty = true;
         }
-        Ok(changed)
+        // CFG restructuring: nothing survives
+        Ok(PreservedAnalyses::none_if(changed))
     }
 }
 
@@ -169,8 +175,8 @@ mod tests {
             .block_ids()
             .filter(|&bb| !m.kernels[0].block(bb).insts.is_empty())
             .count();
-        assert!(SimplifyCfg.run(&mut m).unwrap());
-        assert!(m.cfg_dirty);
+        assert!(crate::passes::run_single(&SimplifyCfg, &mut m).unwrap());
+        assert!(m.cfg_dirty());
         let f = &m.kernels[0];
         verify_function(f).unwrap();
         let n_after = f
@@ -193,7 +199,7 @@ mod tests {
         });
         let mut m = Module::new("t");
         m.kernels.push(b.finish());
-        SimplifyCfg.run(&mut m).unwrap();
+        crate::passes::run_single(&SimplifyCfg, &mut m).unwrap();
         let f = &m.kernels[0];
         verify_function(f).unwrap();
         let dt = DomTree::compute(f);

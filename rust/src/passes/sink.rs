@@ -13,10 +13,8 @@
 
 use std::collections::HashMap;
 
-use super::{Pass, PassError};
+use super::{Analysis, AnalysisManager, Pass, PassError, PreservedAnalyses, ALL_ANALYSES};
 use crate::analysis::{alias, AffineCtx, AliasResult, MemLoc, Root};
-use crate::ir::dom::DomTree;
-use crate::ir::loops::LoopForest;
 use crate::ir::{BlockId, Function, InstId, Module, Op, Value};
 
 pub struct Sink;
@@ -25,20 +23,34 @@ impl Pass for Sink {
     fn name(&self) -> &'static str {
         "sink"
     }
-    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
-        let precise = m.precise_aa;
-        let stale = m.aa_stale;
+    fn run(
+        &self,
+        m: &mut Module,
+        am: &mut AnalysisManager,
+    ) -> Result<PreservedAnalyses, PassError> {
+        let precise = m.precise_aa();
+        let stale = m.aa_stale();
         let mut changed = false;
-        for f in &mut m.kernels {
-            changed |= sink_function(f, precise, stale);
+        for (fi, f) in m.kernels.iter_mut().enumerate() {
+            changed |= sink_function(fi, f, precise, stale, am);
         }
-        Ok(changed)
+        // moves instructions between existing blocks: CFG untouched
+        Ok(PreservedAnalyses::preserving(changed, ALL_ANALYSES))
+    }
+    fn preserves_on_change(&self) -> &'static [Analysis] {
+        ALL_ANALYSES
     }
 }
 
-fn sink_function(f: &mut Function, precise: bool, stale: bool) -> bool {
-    let dt = DomTree::compute(f);
-    let lf = LoopForest::compute(f, &dt);
+fn sink_function(
+    fi: usize,
+    f: &mut Function,
+    precise: bool,
+    stale: bool,
+    am: &mut AnalysisManager,
+) -> bool {
+    let dt = am.dom_tree(fi, f);
+    let lf = am.loop_forest(fi, f);
     let blocks_of = f.inst_blocks();
     let mut changed = false;
 
@@ -200,7 +212,7 @@ mod tests {
         });
         let mut m = Module::new("t");
         m.kernels.push(b.finish());
-        assert!(Sink.run(&mut m).unwrap());
+        assert!(crate::passes::run_single(&Sink, &mut m).unwrap());
         let f = &m.kernels[0];
         verify_function(f).unwrap();
         // the mul must no longer be in the entry block
@@ -224,7 +236,7 @@ mod tests {
         });
         let mut m = Module::new("t");
         m.kernels.push(b.finish());
-        Sink.run(&mut m).unwrap();
+        crate::passes::run_single(&Sink, &mut m).unwrap();
         let f = &m.kernels[0];
         verify_function(f).unwrap();
         let entry_ops: Vec<Op> = f
@@ -246,10 +258,10 @@ mod tests {
             b.store(b.param(0), b.gid(2), v);
         });
         let mut m = Module::new("t");
-        m.precise_aa = true;
-        m.aa_stale = false;
+        m.state.alias.precision = crate::ir::AaPrecision::CflAnders;
+        m.state.alias.stale = false;
         m.kernels.push(b.finish());
-        Sink.run(&mut m).unwrap();
+        crate::passes::run_single(&Sink, &mut m).unwrap();
         let f = &m.kernels[0];
         verify_function(f).unwrap();
         let entry_ops: Vec<Op> = f
@@ -271,10 +283,10 @@ mod tests {
             b.store(b.param(0), b.gid(2), v);
         });
         let mut m = Module::new("t");
-        m.precise_aa = true;
-        m.aa_stale = true; // e.g. loop-reduce ran after cfl-anders-aa
+        m.state.alias.precision = crate::ir::AaPrecision::CflAnders;
+        m.state.alias.stale = true; // e.g. loop-reduce ran after cfl-anders-aa
         m.kernels.push(b.finish());
-        Sink.run(&mut m).unwrap();
+        crate::passes::run_single(&Sink, &mut m).unwrap();
         let f = &m.kernels[0];
         verify_function(f).unwrap();
         let entry_ops: Vec<Op> = f

@@ -5,7 +5,7 @@
 //! Shares `mem2reg`'s precondition on lowered allocas.
 
 use super::mem2reg::promote_function;
-use super::{Pass, PassError};
+use super::{Analysis, AnalysisManager, Pass, PassError, PreservedAnalyses, ALL_ANALYSES};
 use crate::ir::Module;
 
 pub struct Sroa;
@@ -14,16 +14,24 @@ impl Pass for Sroa {
     fn name(&self) -> &'static str {
         "sroa"
     }
-    fn run(&self, m: &mut Module) -> Result<bool, PassError> {
-        if m.allocas_lowered {
+    fn run(
+        &self,
+        m: &mut Module,
+        am: &mut AnalysisManager,
+    ) -> Result<PreservedAnalyses, PassError> {
+        if m.allocas_lowered() {
             // depot slots are not promotable — no-op, like the real pass
-            return Ok(false);
+            return Ok(PreservedAnalyses::all());
         }
         let mut changed = false;
-        for f in &mut m.kernels {
-            changed |= promote_function(f);
+        for (fi, f) in m.kernels.iter_mut().enumerate() {
+            changed |= promote_function(fi, f, am);
         }
-        Ok(changed)
+        // same promotion machinery as mem2reg: CFG untouched
+        Ok(PreservedAnalyses::preserving(changed, ALL_ANALYSES))
+    }
+    fn preserves_on_change(&self) -> &'static [Analysis] {
+        ALL_ANALYSES
     }
 }
 
@@ -44,8 +52,8 @@ mod tests {
         });
         let mut m = Module::new("t");
         m.kernels.push(b.finish());
-        Reg2Mem.run(&mut m).unwrap();
-        assert!(Sroa.run(&mut m).unwrap());
+        crate::passes::run_single(&Reg2Mem, &mut m).unwrap();
+        assert!(crate::passes::run_single(&Sroa, &mut m).unwrap());
         let f = &m.kernels[0];
         verify_function(f).unwrap();
         assert!(!f.insts.iter().any(|i| i.op == Op::Alloca));

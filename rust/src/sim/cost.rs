@@ -57,8 +57,10 @@ pub fn estimate_time_unknown(
     target: &Target,
     unknown_trips: f64,
 ) -> CostBreakdown {
-    let dt = DomTree::compute(f);
-    let lf = LoopForest::compute(f, &dt);
+    // analyses come from the pass layer's sanctioned constructor — the
+    // cost model prices freshly lowered clones, so there is no pipeline
+    // cache to share, but construction stays centralized in passes/
+    let (dt, lf) = crate::passes::analyses::analyses_of(f);
 
     // ---- loop trip counts, outer-first, with averaged substitution ----
     let mut env: HashMap<Value, f64> = HashMap::new();
@@ -612,8 +614,7 @@ mod tests {
         let mut m1 = gemm_like();
         // set unroll=8 on the loop header
         let f = &mut m1.kernels[0];
-        let dt = crate::ir::dom::DomTree::compute(f);
-        let lf = crate::ir::loops::LoopForest::compute(f, &dt);
+        let (_dt, lf) = crate::passes::analyses::analyses_of(f);
         let hdr = lf.loops[0].header;
         f.block_mut(hdr).unroll = 8;
         let p1 = emit(&m1.kernels[0], &m1);

@@ -361,7 +361,7 @@ mod tests {
     #[test]
     fn local_depot_roundtrip() {
         use crate::passes::reg2mem::Reg2Mem;
-        use crate::passes::Pass;
+        use crate::passes::run_single;
         // accumulate through a demoted phi: results must be identical
         let mut b = KernelBuilder::new(
             "k",
@@ -384,7 +384,7 @@ mod tests {
         }
         let mut b1 = bufs.clone();
         run_kernel(&m.kernels[0], (1, 1), &mut b1, 1_000_000).unwrap();
-        Reg2Mem.run(&mut m).unwrap();
+        run_single(&Reg2Mem, &mut m).unwrap();
         let mut b2 = bufs.clone();
         run_kernel(&m.kernels[0], (1, 1), &mut b2, 1_000_000).unwrap();
         assert_eq!(b1.bufs[1][0], b2.bufs[1][0]);

@@ -58,7 +58,7 @@ fn strided_loop_trip_count() {
 #[test]
 fn every_pass_runs_standalone_everywhere() {
     for b in phaseord::bench_suite::all_benchmarks() {
-        for p in registry_names() {
+        for &p in registry_names() {
             let mut built = b.build_small(Variant::OpenCl);
             let _ = run_sequence(&mut built.module, &[p], true);
         }

@@ -17,6 +17,7 @@ fn small_cfg(n_seqs: usize) -> ExpConfig {
         n_perms: 16,
         n_random_draws: 8,
         jobs: 0,
+        verify_each: false,
     }
 }
 

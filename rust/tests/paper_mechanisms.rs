@@ -94,12 +94,9 @@ fn gesummv_double_promotion() {
     let out = run_sequence(&mut built.module, &["cfl-anders-aa", "licm"], true);
     assert!(out.is_ok());
     // no store may remain inside any loop
-    use phaseord::ir::dom::DomTree;
-    use phaseord::ir::loops::LoopForest;
     use phaseord::ir::Op;
     let f = &built.module.kernels[0];
-    let dt = DomTree::compute(f);
-    let lf = LoopForest::compute(f, &dt);
+    let (_dt, lf) = phaseord::passes::analyses::analyses_of(f);
     let in_loop_stores: usize = lf
         .loops
         .iter()
@@ -126,14 +123,11 @@ fn identical_ptx_evaluated_once() {
 /// The CUDA baselines carry unroll 8; OpenCL baselines unroll 2 (§3.4).
 #[test]
 fn baseline_unroll_hints_match_paper() {
-    use phaseord::ir::dom::DomTree;
-    use phaseord::ir::loops::LoopForest;
     let b = benchmark_by_name("GEMM").unwrap();
     for (v, want) in [(Variant::OpenCl, 2u8), (Variant::Cuda, 8u8)] {
         let built = b.build_small(v);
         let f = &built.module.kernels[0];
-        let dt = DomTree::compute(f);
-        let lf = LoopForest::compute(f, &dt);
+        let (_dt, lf) = phaseord::passes::analyses::analyses_of(f);
         let innermost = lf.innermost_first()[0];
         assert_eq!(
             f.block(lf.loops[innermost].header).unroll,

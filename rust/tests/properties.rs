@@ -1,18 +1,27 @@
 //! Property-based tests over the compiler substrate (proptest_lite —
 //! the vendored crate set has no proptest, see Cargo.toml note).
 //!
-//! The two load-bearing invariants of the whole reproduction:
+//! The load-bearing invariants of the whole reproduction:
 //!  1. *Structural soundness*: no pass sequence, however absurd, may
 //!     produce verifier-rejected IR (that would be a crash bucket of our
 //!     own making, not a modelled one);
 //!  2. *Semantic soundness of the sound subset*: with the documented
 //!     bug carriers (dse/sink/loop-unswitch) excluded, every sequence
-//!     that compiles must compute exactly what the baseline computes.
+//!     that compiles must compute exactly what the baseline computes;
+//!  3. *Analysis-cache coherence*: after every pass of any sequence, the
+//!     manager's cached `DomTree`/`LoopForest` must equal a fresh
+//!     recomputation — a pass declaring a wrong `PreservedAnalyses` set
+//!     fails here, not as a heisenbug three passes later.
 
-use phaseord::bench_suite::{all_benchmarks, execute, init_buffers, outputs_match, Variant};
+use phaseord::bench_suite::{
+    all_benchmarks, benchmark_by_name, execute, init_buffers, outputs_match, Variant,
+};
 use phaseord::codegen::emit_module;
 use phaseord::ir::verifier::verify_module;
-use phaseord::passes::{registry_names, run_sequence, PassOutcome};
+use phaseord::passes::manager::standard_level;
+use phaseord::passes::{
+    registry_names, run_pass_with, run_sequence, run_sequence_with, AnalysisManager, PassOutcome,
+};
 use phaseord::proptest_lite::check;
 use phaseord::util::Rng;
 
@@ -51,7 +60,8 @@ fn prop_sound_subset_preserves_semantics() {
     let benches = all_benchmarks();
     // every pass except the documented unsoundness carriers
     let names: Vec<&str> = registry_names()
-        .into_iter()
+        .iter()
+        .copied()
         .filter(|n| !matches!(*n, "dse" | "sink" | "loop-unswitch"))
         .collect();
     check(
@@ -143,6 +153,80 @@ fn prop_interpreter_is_deterministic() {
             }
             Ok(())
         },
+    );
+}
+
+#[test]
+fn prop_analysis_cache_is_coherent_after_every_pass() {
+    // the invalidation contract itself: run random sequences one pass at
+    // a time through a live manager; after every pass, whatever the
+    // cache would serve must equal a from-scratch recomputation.
+    let benches = all_benchmarks();
+    let names = registry_names();
+    check(
+        "analysis-cache-coherence",
+        0xCAC4E,
+        30,
+        |rng| {
+            let b = rng.below(benches.len());
+            (b, random_seq(rng, names, 20))
+        },
+        |(bi, seq)| {
+            let mut built = benches[*bi].build_small(Variant::OpenCl);
+            let mut am = AnalysisManager::new();
+            for &name in seq {
+                if run_pass_with(&mut built.module, name, &mut am).is_err() {
+                    return Ok(()); // modelled crash bucket
+                }
+                for (fi, f) in built.module.kernels.iter().enumerate() {
+                    let cached_dt = am.dom_tree(fi, f);
+                    let cached_lf = am.loop_forest(fi, f);
+                    let (fresh_dt, fresh_lf) = phaseord::passes::analyses::fresh(f);
+                    if *cached_dt != fresh_dt {
+                        return Err(format!(
+                            "{}: stale cached DomTree after {name}",
+                            benches[*bi].name
+                        ));
+                    }
+                    if *cached_lf != fresh_lf {
+                        return Err(format!(
+                            "{}: stale cached LoopForest after {name}",
+                            benches[*bi].name
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn o3_recomputes_domtree_strictly_fewer_times_than_pass_count() {
+    // the cache must actually hit on a straight-line standard pipeline:
+    // a -O3 run may not recompute the dominator tree once per pass.
+    let b = benchmark_by_name("GEMM").unwrap();
+    let mut built = b.build_small(Variant::OpenCl);
+    let seq = standard_level("-O3").expect("known level");
+    let mut am = AnalysisManager::new();
+    let out = run_sequence_with(&mut built.module, &seq, false, &mut am);
+    assert!(out.is_ok(), "{out:?}");
+    let st = am.stats();
+    let budget = (seq.len() * built.module.kernels.len()) as u64;
+    assert!(st.dom_computed > 0, "-O3 must consult the dominator tree");
+    assert!(
+        st.dom_computed < budget,
+        "cache never hit: {} DomTree recomputations for {budget} pass×kernel slots",
+        st.dom_computed
+    );
+    assert!(
+        st.loops_computed < budget,
+        "cache never hit: {} LoopForest recomputations for {budget} slots",
+        st.loops_computed
+    );
+    assert!(
+        st.dom_hits + st.loops_hits > 0,
+        "a standard pipeline must reuse cached analyses at least once"
     );
 }
 
