@@ -1,9 +1,15 @@
 //! The parallel-engine acceptance benchmark: a 200-sequence ×
 //! 4-benchmark stream explored at `jobs=1` vs `jobs=N`, reporting the
 //! wall-clock speedup and verifying the summaries are bit-identical —
-//! plus the analysis-cache ablation: the same stream with the
-//! per-sequence `DomTree`/`LoopForest` cache disabled, so the speedup
-//! from the pass-manager redesign is measured, not asserted.
+//! plus two ablations on the same stream:
+//!
+//! * **scheduler**: the legacy global atomic cursor vs the production
+//!   work-stealing scheduler with per-benchmark worker affinity, timed
+//!   head to head and asserted bit-identical (the determinism contract
+//!   does not depend on the scheduling policy);
+//! * **analysis cache**: the per-sequence `DomTree`/`LoopForest` cache
+//!   disabled, so the speedup from the pass-manager redesign is
+//!   measured, not asserted.
 //!
 //! Contexts are built once up front so the timed region isolates the
 //! evaluation engine (`explore_pairs` over fresh caches), not the
@@ -16,15 +22,24 @@
 mod harness;
 
 use phaseord::bench_suite::benchmark_by_name;
-use phaseord::dse::engine::{self, CacheShards, EvalContext};
+use phaseord::dse::engine::{self, CacheShards, EvalContext, Scheduler};
 use phaseord::dse::{ExplorationSummary, SeqGen};
 use phaseord::sim::Target;
 
-fn explore(ctxs: &[EvalContext], stream: &[Vec<&'static str>], jobs: usize) -> Vec<ExplorationSummary> {
+fn explore_sched(
+    ctxs: &[EvalContext],
+    stream: &[Vec<&'static str>],
+    jobs: usize,
+    sched: Scheduler,
+) -> Vec<ExplorationSummary> {
     // fresh caches per run for honest numbers
     let caches: Vec<CacheShards> = ctxs.iter().map(|_| CacheShards::new()).collect();
     let parts: Vec<(&EvalContext, &CacheShards)> = ctxs.iter().zip(caches.iter()).collect();
-    engine::explore_pairs(&parts, stream, jobs)
+    engine::explore_pairs_sched(&parts, stream, jobs, sched)
+}
+
+fn explore(ctxs: &[EvalContext], stream: &[Vec<&'static str>], jobs: usize) -> Vec<ExplorationSummary> {
+    explore_sched(ctxs, stream, jobs, Scheduler::WorkStealing)
 }
 
 fn main() {
@@ -78,6 +93,27 @@ fn main() {
     }
     println!("summaries bit-identical across jobs: {identical}");
     assert!(identical, "parallel engine diverged from serial results");
+
+    // ---- scheduler ablation: atomic cursor vs work-stealing ----
+    // `rn` above ran the production work-stealing scheduler; time the
+    // legacy cache-cold cursor on the same stream. Bit-identity across
+    // schedulers is the determinism acceptance gate for the scheduler
+    // swap (results merge by sequence index, never completion order).
+    let r_cursor = harness::bench(&format!("explore 4x{n} jobs={jobs} sched=cursor"), 3, || {
+        explore_sched(&ctxs, &stream, jobs, Scheduler::Cursor)
+            .iter()
+            .map(|s| s.n_ok)
+            .sum::<usize>()
+    });
+    let sched_speedup = r_cursor.min_ms / rn.min_ms;
+    println!("work-stealing vs cursor at jobs={jobs}: {sched_speedup:.2}x (min-over-min)");
+    let cursor_sums = explore_sched(&ctxs, &stream, jobs, Scheduler::Cursor);
+    let mut sched_same = true;
+    for (x, y) in b.iter().zip(&cursor_sums) {
+        sched_same &= summaries_match(x, y);
+    }
+    println!("summaries bit-identical across schedulers: {sched_same}");
+    assert!(sched_same, "work-stealing scheduler diverged from the cursor");
 
     // ---- analysis-cache ablation: same stream, cache disabled ----
     // `rn` above ran with the cache on (the production default); rerun

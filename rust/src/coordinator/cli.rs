@@ -3,10 +3,15 @@
 //! ```text
 //! repro <command> [--seqs N] [--seed S] [--target gp104|amd-fiji]
 //!                 [--perms N] [--draws N] [--jobs N] [--out DIR] [--full]
-//!                 [--verify-each]
+//!                 [--verify-each] [--shard I/N] [--emit-summary PATH]
 //!
-//! commands: fig2 table1 fig3 fig4 fig5 fig6 fig7 problems amd all passes
+//! commands: explore merge fig2 table1 fig3 fig4 fig5 fig6 fig7
+//!           problems amd all passes
 //! ```
+//!
+//! `explore` runs the raw DSE (optionally one shard of it) and `merge`
+//! folds shard files back together — see `docs/CLI.md` for a two-shard
+//! walkthrough.
 
 use std::path::PathBuf;
 
@@ -15,18 +20,28 @@ use super::experiments::{
     problem_stats, ExpConfig, ExpCtx, Fig2Row,
 };
 use super::report;
+use crate::dse::shard::{merge_shards, ShardRun, ShardSpec};
 use crate::sim::target::Target;
+use crate::util::{emit_json, load_json};
 
 pub struct CliArgs {
     pub command: String,
     pub cfg: ExpConfig,
     pub out: PathBuf,
+    /// positional arguments after the command — only `merge` takes any
+    /// (the shard files to fold)
+    pub files: Vec<PathBuf>,
+    /// `--emit-summary PATH`: `explore` writes its (mergeable) shard
+    /// file here; `merge` writes the folded summaries
+    pub emit_summary: Option<PathBuf>,
 }
 
 pub fn parse_args(argv: &[String]) -> Result<CliArgs, String> {
     let mut command = String::new();
     let mut cfg = ExpConfig::default();
     let mut out = PathBuf::from("results");
+    let mut files = Vec::new();
+    let mut emit_summary = None;
     let mut it = argv.iter().peekable();
     while let Some(a) = it.next() {
         match a.as_str() {
@@ -77,27 +92,67 @@ pub fn parse_args(argv: &[String]) -> Result<CliArgs, String> {
                 cfg.n_random_draws = 1000;
             }
             "--verify-each" => cfg.verify_each = true,
+            "--shard" => {
+                cfg.shard = Some(ShardSpec::parse(it.next().ok_or("--shard needs I/N")?)?)
+            }
+            "--emit-summary" => {
+                emit_summary = Some(PathBuf::from(
+                    it.next().ok_or("--emit-summary needs a path")?,
+                ))
+            }
             "--help" | "-h" => return Err(usage()),
             flag if flag.starts_with("--") => return Err(format!("unknown flag {flag}\n{}", usage())),
             cmd if command.is_empty() => command = cmd.to_string(),
+            extra if command == "merge" => files.push(PathBuf::from(extra)),
             extra => return Err(format!("unexpected argument {extra}\n{}", usage())),
         }
     }
     if command.is_empty() {
         return Err(usage());
     }
-    Ok(CliArgs { command, cfg, out })
+    if cfg.shard.is_some() && command != "explore" {
+        return Err(format!("--shard only applies to explore\n{}", usage()));
+    }
+    if emit_summary.is_some() && command != "explore" && command != "merge" {
+        return Err(format!(
+            "--emit-summary only applies to explore and merge\n{}",
+            usage()
+        ));
+    }
+    if cfg.shard.is_some_and(|s| s.count > 1) && emit_summary.is_none() {
+        return Err(
+            "--shard without --emit-summary would throw the shard's work away; \
+             add --emit-summary PATH"
+                .to_string(),
+        );
+    }
+    Ok(CliArgs {
+        command,
+        cfg,
+        out,
+        files,
+        emit_summary,
+    })
 }
 
 pub fn usage() -> String {
-    "usage: repro <fig2|table1|fig3|fig4|fig5|fig6|fig7|problems|amd|all|passes> \
+    "usage: repro <explore|merge|fig2|table1|fig3|fig4|fig5|fig6|fig7|problems|amd|all|passes> \
      [--seqs N] [--seed S] [--target gp104|amd-fiji] [--perms N] [--draws N] \
-     [--jobs N] [--out DIR] [--full] [--verify-each]\n\
+     [--jobs N] [--out DIR] [--full] [--verify-each] [--shard I/N] \
+     [--emit-summary PATH]\n\
      --jobs = evaluation worker threads (0 = all cores, the default); \
      results are bit-identical for every value\n\
      --full = the paper's protocol (10000 sequences, 1000 permutations/draws)\n\
      --verify-each = verify the IR after every changing pass of every \
      evaluated sequence (slow; pinpoints the offending pass)\n\
+     --shard I/N = evaluate the I-th of N slices of the (benchmark x sequence) \
+     grid (explore only; requires --emit-summary)\n\
+     --emit-summary PATH = explore: write the mergeable shard JSON; \
+     merge: write the folded summaries JSON\n\
+     explore = run the DSE over the shared stream and print per-benchmark \
+     summaries (the raw engine, no figure post-processing)\n\
+     merge <shard.json>... = fold shard files from sharded explore runs; \
+     bit-identical to the equivalent single-process explore\n\
      passes = list the registry (name, kind, preserved analyses)"
         .to_string()
 }
@@ -154,6 +209,73 @@ pub fn run(args: CliArgs) -> Result<(), String> {
             println!("{}", first_load_window(&cuda));
             println!("=== Fig. 6(b): 2DCONV lowered from OpenCL (naive chain) ===");
             println!("{}", first_load_window(&ocl));
+        }
+        // `merge` folds shard files — no exploration context needed either
+        "merge" => {
+            if args.files.is_empty() {
+                return Err(format!(
+                    "merge needs at least one shard file (written by \
+                     `repro explore --emit-summary`)\n{}",
+                    usage()
+                ));
+            }
+            let mut shards = Vec::new();
+            for f in &args.files {
+                let j = load_json(f)?;
+                shards.push(ShardRun::from_json(&j).map_err(|e| format!("{}: {e}", f.display()))?);
+            }
+            let summaries = merge_shards(&shards)?;
+            eprintln!(
+                "merged {} shard(s): {} sequences × {} benchmarks",
+                shards.len(),
+                shards[0].stream.len(),
+                summaries.len()
+            );
+            println!("{}", report::render_explore(&summaries));
+            if let Some(path) = &args.emit_summary {
+                emit_json(path, &report::summaries_json(&summaries)).map_err(io)?;
+            }
+        }
+        "explore" => {
+            let cfg = args.cfg.clone();
+            let spec = cfg.shard.unwrap_or_else(ShardSpec::full);
+            let ctx = ExpCtx::new(cfg);
+            eprintln!(
+                "exploring {} sequences × {} benchmarks on {} with {} worker(s), shard {spec} \
+                 (golden: {}) …",
+                ctx.cfg.n_seqs,
+                ctx.benchmarks.len(),
+                ctx.cfg.target.name,
+                crate::dse::engine::resolve_jobs(ctx.cfg.jobs),
+                if ctx.used_pjrt_golden { "AOT artifacts" } else { "interpreter" }
+            );
+            if spec.count > 1 {
+                // partial grid: emit the raw evaluation stream for merge
+                // (parse_args guarantees the emit path is present)
+                let run = ctx.explore_shard();
+                let path = args.emit_summary.as_ref().expect("checked at parse time");
+                emit_json(path, &run.to_json()).map_err(io)?;
+                println!(
+                    "shard {spec}: {} of {} grid evaluations → {}",
+                    run.n_items(),
+                    ctx.benchmarks.len() * ctx.stream.len(),
+                    path.display()
+                );
+            } else {
+                let summaries = ctx.explore_all();
+                println!("{}", report::render_explore(&summaries));
+                let (seq_memos, ptx_verdicts) = ctx.cache_totals();
+                eprintln!(
+                    "cache occupancy: {seq_memos} sequence memos, {ptx_verdicts} vPTX verdicts"
+                );
+                if let Some(path) = &args.emit_summary {
+                    // emit the mergeable 1/1 shard form straight from the
+                    // summaries in hand (the merge fold is idempotent)
+                    let run = ctx.package_summaries(&summaries);
+                    emit_json(path, &run.to_json()).map_err(io)?;
+                    eprintln!("wrote {}", path.display());
+                }
+            }
         }
         "fig2" | "table1" | "fig3" | "fig4" | "fig5" | "problems" | "fig7" | "amd" | "all" => {
             let mut cfg = args.cfg.clone();
@@ -273,6 +395,45 @@ mod tests {
     fn rejects_unknown() {
         assert!(parse_args(&sv(&["fig2", "--bogus"])).is_err());
         assert!(parse_args(&sv(&[])).is_err());
+    }
+
+    #[test]
+    fn shard_flag_parses_and_is_validated() {
+        let a = parse_args(&sv(&[
+            "explore", "--shard", "2/4", "--emit-summary", "out/s2.json",
+        ]))
+        .unwrap();
+        assert_eq!(a.command, "explore");
+        assert_eq!(a.cfg.shard, Some(ShardSpec::new(2, 4).unwrap()));
+        assert_eq!(a.emit_summary.as_deref(), Some(std::path::Path::new("out/s2.json")));
+        // malformed specs
+        for bad in ["0/2", "3/2", "x", "1/0"] {
+            assert!(
+                parse_args(&sv(&["explore", "--shard", bad, "--emit-summary", "x.json"])).is_err(),
+                "{bad} should be rejected"
+            );
+        }
+        // a real shard without an emit path would discard its work
+        assert!(parse_args(&sv(&["explore", "--shard", "1/2"])).is_err());
+        // 1/1 is the whole grid: printing the table is enough
+        assert!(parse_args(&sv(&["explore", "--shard", "1/1"])).is_ok());
+        // --shard is an explore-only flag
+        assert!(parse_args(&sv(&["fig2", "--shard", "1/2", "--emit-summary", "x.json"])).is_err());
+    }
+
+    #[test]
+    fn merge_takes_positional_files() {
+        let a = parse_args(&sv(&["merge", "a.json", "b.json"])).unwrap();
+        assert_eq!(a.command, "merge");
+        assert_eq!(
+            a.files,
+            vec![PathBuf::from("a.json"), PathBuf::from("b.json")]
+        );
+        // other commands still reject positionals
+        assert!(parse_args(&sv(&["fig2", "a.json"])).is_err());
+        // --emit-summary is valid on merge, rejected elsewhere
+        assert!(parse_args(&sv(&["merge", "a.json", "--emit-summary", "m.json"])).is_ok());
+        assert!(parse_args(&sv(&["fig5", "--emit-summary", "m.json"])).is_err());
     }
 
     #[test]

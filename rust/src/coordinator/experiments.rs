@@ -3,10 +3,12 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
 
 use crate::bench_suite::{all_benchmarks, model_time_us, Benchmark, Variant};
 use crate::dse::engine::{self, CacheShards, EvalContext};
 use crate::dse::permute::PermutationStudy;
+use crate::dse::shard::{ShardRun, ShardSpec};
 use crate::dse::{minimize_sequence, permutation_study, ExplorationSummary, Explorer, SeqGen};
 use crate::features::{extract_features, rank_by_similarity, FeatureVector, IterGraph};
 use crate::passes::manager::standard_level;
@@ -31,6 +33,10 @@ pub struct ExpConfig {
     /// sequence (`--verify-each`) instead of once per sequence — the
     /// test-suite verifier mode, reachable from the CLI
     pub verify_each: bool,
+    /// evaluate only this slice of the (benchmark × sequence) grid
+    /// (`--shard I/N`); `None` = the whole grid. Only `repro explore`
+    /// honours it — shard files are folded back by `repro merge`.
+    pub shard: Option<ShardSpec>,
 }
 
 impl Default for ExpConfig {
@@ -43,6 +49,7 @@ impl Default for ExpConfig {
             n_random_draws: 200,
             jobs: 0,
             verify_each: false,
+            shard: None,
         }
     }
 }
@@ -58,6 +65,11 @@ pub struct ExpCtx {
     pub stream: Vec<Vec<&'static str>>,
     explorers: HashMap<String, Explorer>,
     pub used_pjrt_golden: bool,
+    /// per-benchmark golden provenance (`"aot-artifacts"` or
+    /// `"interpreter"`): the AOT loader falls back per benchmark, and
+    /// shard files must record which source judged each benchmark's
+    /// verdicts (merge refuses to mix them)
+    pub golden_sources: HashMap<String, String>,
 }
 
 impl ExpCtx {
@@ -66,23 +78,29 @@ impl ExpCtx {
         let stream = SeqGen::stream(cfg.seed, cfg.n_seqs);
         let runner = GoldenRunner::from_env().ok();
         let used_pjrt = AtomicBool::new(false);
+        let sources: Mutex<HashMap<String, String>> = Mutex::new(HashMap::new());
         let ctxs = engine::build_contexts_with(&benchmarks, &cfg.target, cfg.jobs, |b| {
-            match &runner {
+            let (golden, src) = match &runner {
                 Some(r) if r.has_artifact(b.name) => match golden_buffers(r, b) {
                     Ok(g) => {
                         used_pjrt.store(true, Ordering::Relaxed);
-                        g
+                        (g, "aot-artifacts")
                     }
                     Err(e) => {
                         eprintln!(
                             "warning: {}: AOT golden failed ({e}); interpreter fallback",
                             b.name
                         );
-                        engine::golden_from_interpreter(b)
+                        (engine::golden_from_interpreter(b), "interpreter")
                     }
                 },
-                _ => engine::golden_from_interpreter(b),
-            }
+                _ => (engine::golden_from_interpreter(b), "interpreter"),
+            };
+            sources
+                .lock()
+                .unwrap()
+                .insert(b.name.to_string(), src.to_string());
+            golden
         });
         let mut explorers = HashMap::new();
         for mut cx in ctxs {
@@ -95,6 +113,7 @@ impl ExpCtx {
             stream,
             explorers,
             used_pjrt_golden: used_pjrt.into_inner(),
+            golden_sources: sources.into_inner().unwrap(),
         }
     }
 
@@ -113,6 +132,64 @@ impl ExpCtx {
             .map(|b| self.explorers[b.name].parts())
             .collect();
         engine::explore_pairs(&parts, &self.stream, self.cfg.jobs)
+    }
+
+    /// Evaluate this process's shard of the grid (`cfg.shard`, defaulting
+    /// to the whole grid) and package the raw evaluation streams for
+    /// `--emit-summary` / `repro merge`. Does **not** fold: cache
+    /// attribution is replayed over the combined stream at merge time.
+    pub fn explore_shard(&self) -> ShardRun {
+        let spec = self.cfg.shard.unwrap_or_else(ShardSpec::full);
+        let parts: Vec<(&EvalContext, &CacheShards)> = self
+            .benchmarks
+            .iter()
+            .map(|b| self.explorers[b.name].parts())
+            .collect();
+        // per-benchmark provenance: the AOT loader falls back to the
+        // interpreter per benchmark, and merge refuses mixed sources
+        let goldens: Vec<&str> = self
+            .benchmarks
+            .iter()
+            .map(|b| self.golden_sources[b.name].as_str())
+            .collect();
+        ShardRun::execute(
+            &parts,
+            &self.stream,
+            spec,
+            self.cfg.jobs,
+            self.cfg.target.name,
+            self.cfg.seed,
+            self.cfg.verify_each,
+            &goldens,
+        )
+    }
+
+    /// Package already-computed summaries as the mergeable `1/1` shard
+    /// file (the unsharded `--emit-summary` path) — no re-evaluation.
+    pub fn package_summaries(&self, summaries: &[ExplorationSummary]) -> ShardRun {
+        let goldens: Vec<&str> = self
+            .benchmarks
+            .iter()
+            .map(|b| self.golden_sources[b.name].as_str())
+            .collect();
+        ShardRun::from_summaries(
+            &self.stream,
+            summaries,
+            self.cfg.target.name,
+            self.cfg.seed,
+            self.cfg.verify_each,
+            &goldens,
+        )
+    }
+
+    /// Total live-cache occupancy across all benchmarks: (sequence-memo
+    /// entries, vPTX-verdict entries). Surfaced by `repro explore` after
+    /// a run; reads are post-pool snapshots (see [`CacheShards::len`]).
+    pub fn cache_totals(&self) -> (usize, usize) {
+        self.benchmarks.iter().fold((0, 0), |(seq, ptx), b| {
+            let (s, p) = self.explorers[b.name].parts().1.len();
+            (seq + s, ptx + p)
+        })
     }
 }
 
@@ -498,6 +575,7 @@ mod tests {
             n_random_draws: 5,
             jobs: 2,
             verify_each: false,
+            shard: None,
         })
     }
 

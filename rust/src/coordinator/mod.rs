@@ -1,5 +1,19 @@
-//! L3 coordinator: experiment drivers that regenerate every table and
-//! figure of the paper, report writers, and the CLI.
+//! The coordinator layer (L4): experiment drivers that regenerate every
+//! table and figure of the paper, report writers, and the CLI.
+//!
+//! * [`cli`] — the hand-rolled argument parser and dispatch for the
+//!   `repro` binary: `explore` / `merge` expose the raw engine (and its
+//!   sharded multi-process form), `fig2`…`fig7` / `table1` / `problems`
+//!   / `amd` / `all` regenerate the paper artifacts, `passes` lists the
+//!   registry. The full flag reference lives in `docs/CLI.md`.
+//! * [`experiments`] — [`ExpConfig`] (stream size, seed, target, jobs,
+//!   shard slice, verify-each) and [`ExpCtx`], which builds every
+//!   benchmark's evaluation context in parallel — golden buffers come
+//!   from the AOT artifacts when available, the interpreter otherwise —
+//!   and owns the per-benchmark caches; one driver per figure rides on
+//!   [`ExpCtx::explore_all`] (or [`ExpCtx::explore_shard`] for a
+//!   `--shard I/N` slice).
+//! * [`report`] — console tables and the JSON dumps under `results/`.
 
 pub mod cli;
 pub mod experiments;

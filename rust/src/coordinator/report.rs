@@ -8,11 +8,53 @@ use super::experiments::{
     fig2_geomeans, Fig2Row, Fig3Matrix, Fig4Scatter, Fig7Result, ProblemStats,
 };
 use crate::dse::permute::{histogram, PermutationStudy};
-use crate::util::Json;
+use crate::dse::ExplorationSummary;
+use crate::util::{geomean, Json};
 
 pub fn write_json(dir: &Path, name: &str, j: &Json) -> std::io::Result<()> {
     fs::create_dir_all(dir)?;
     fs::write(dir.join(name), j.to_string())
+}
+
+// ----------------------------------------------------- explore / merge
+
+/// The `repro explore` / `repro merge` console table: one row per
+/// benchmark straight off the [`ExplorationSummary`]s (no -OX probes or
+/// minimization — that's the fig2 pipeline).
+pub fn render_explore(summaries: &[ExplorationSummary]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:10} {:>12} {:>12} {:>8} | {:>6} {:>6} {:>8} {:>8} {:>6}  winning sequence\n",
+        "bench", "baseline", "best", "speedup", "ok", "crash", "invalid", "timeout", "hits"
+    ));
+    for r in summaries {
+        s.push_str(&format!(
+            "{:10} {:>12.1} {:>12.1} {:>8.2} | {:>6} {:>6} {:>8} {:>8} {:>6}  {}\n",
+            r.bench,
+            r.baseline_time_us,
+            r.best_time_us,
+            r.best_speedup(),
+            r.n_ok,
+            r.n_crash,
+            r.n_invalid,
+            r.n_timeout,
+            r.cache_hits,
+            match r.best_seq() {
+                None => "(baseline — no improving order found)".to_string(),
+                Some(seq) =>
+                    seq.iter().map(|p| format!("-{p}")).collect::<Vec<_>>().join(" "),
+            }
+        ));
+    }
+    let g = geomean(&summaries.iter().map(|r| r.best_speedup()).collect::<Vec<_>>());
+    s.push_str(&format!("geomean best-speedup over baseline: {g:.2}x\n"));
+    s
+}
+
+/// The merged summaries as a JSON array (the `repro merge --emit-summary`
+/// output; each element round-trips via [`ExplorationSummary::from_json`]).
+pub fn summaries_json(summaries: &[ExplorationSummary]) -> Json {
+    Json::Arr(summaries.iter().map(|s| s.to_json()).collect())
 }
 
 // ---------------------------------------------------------------- Fig. 2

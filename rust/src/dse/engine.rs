@@ -12,20 +12,34 @@
 //!   + generated-code/vPTX verdict cache), sharded behind mutexes so
 //!   concurrent workers rarely contend.
 //! * [`explore_all`] / [`explore_pairs`] — the batched entry points: a
-//!   `std::thread::scope` worker pool pulls (benchmark × sequence) work
-//!   items off an atomic cursor and evaluates them concurrently.
+//!   `std::thread::scope` worker pool evaluates (benchmark × sequence)
+//!   work items concurrently under a [`Scheduler`]. The default is a
+//!   work-stealing scheduler with per-benchmark worker affinity: each
+//!   worker owns a deque pre-filled with the benchmarks whose index
+//!   hashes to it, so consecutive items a worker processes usually share
+//!   an [`EvalContext`] (cache-warm module clones and golden buffers);
+//!   an idle worker steals from the back of the richest deque. The
+//!   legacy fair-but-cache-cold atomic cursor survives as
+//!   [`Scheduler::Cursor`] for the `cargo bench --bench engine`
+//!   ablation.
+//! * [`explore_shard`] — the distributed entry point: evaluates only the
+//!   grid items a [`crate::dse::shard::ShardSpec`] owns, for
+//!   `repro explore --shard I/N` / `repro merge`.
 //!
 //! **Determinism.** Evaluation is a pure function of (benchmark,
-//! sequence), so computed results are identical regardless of `jobs`.
-//! The scheduling-dependent observable is the cache: *which* evaluation
-//! got to reuse a live entry (and, for generated-code hits, whose
-//! verdict it adopted). [`summarize`] therefore replays cache semantics
-//! in stream order — repeats adopt the first occurrence's verdict and
-//! count as hits — making `jobs = 1` and `jobs = N` produce
-//! bit-identical [`ExplorationSummary`]s, independent of any cache
-//! warm-up that happened before the exploration.
+//! sequence), so computed results are identical regardless of `jobs` or
+//! scheduling. The scheduling-dependent observable is the cache: *which*
+//! evaluation got to reuse a live entry (and, for generated-code hits,
+//! whose verdict it adopted). [`summarize`] therefore replays cache
+//! semantics in stream order — repeats adopt the first occurrence's
+//! verdict and count as hits — making `jobs = 1` and `jobs = N` produce
+//! bit-identical [`ExplorationSummary`]s under either scheduler,
+//! independent of any cache warm-up that happened before the
+//! exploration. The same replay runs in [`summarize_stream`] when
+//! `repro merge` folds shard files, which is why a sharded multi-process
+//! run reproduces the single-process summary bit for bit.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -44,7 +58,14 @@ use super::explorer::{EvalStatus, Evaluation, ExplorationSummary, Winner};
 /// off, and the validation-run step budget derives from the same factor.
 pub const DEFAULT_TIMEOUT_FACTOR: f64 = 20.0;
 
-/// Resolve a `--jobs` value: 0 means "all available cores".
+/// Resolve a `--jobs` value into a concrete worker count.
+///
+/// `0` means "all available cores" (the CLI default): it resolves to
+/// `std::thread::available_parallelism()`, falling back to `1` when the
+/// platform cannot report a count. Any non-zero value is taken verbatim
+/// — callers that know their work-item count clamp separately (e.g.
+/// [`explore_pairs`] caps at the grid size). The return value is never
+/// `0`, so `jobs <= 1` reliably selects the serial path.
 pub fn resolve_jobs(jobs: usize) -> usize {
     if jobs == 0 {
         std::thread::available_parallelism()
@@ -333,7 +354,11 @@ impl CacheShards {
         self.shard(key).lock().unwrap().ptx.insert(key, (status, time_us));
     }
 
-    /// (sequence-memo entries, vPTX entries) across all shards.
+    /// (sequence-memo entries, vPTX entries) across all shards. Takes
+    /// every shard lock in turn, so the count is a consistent snapshot
+    /// only while no worker is writing — production callers (the CLI's
+    /// post-exploration occupancy report, the cache-consistency tests)
+    /// all read it after the pool has joined.
     pub fn len(&self) -> (usize, usize) {
         let mut seq = 0;
         let mut ptx = 0;
@@ -345,6 +370,8 @@ impl CacheShards {
         (seq, ptx)
     }
 
+    /// True when neither level holds an entry (fresh-cache assertion in
+    /// tests; the same post-join snapshot caveat as [`CacheShards::len`]).
     pub fn is_empty(&self) -> bool {
         self.len() == (0, 0)
     }
@@ -400,9 +427,171 @@ pub fn build_contexts(benches: &[Benchmark], target: &Target, jobs: usize) -> Ve
     build_contexts_with(benches, target, jobs, golden_from_interpreter)
 }
 
+/// How the worker pool hands out (benchmark × sequence) work items.
+/// Results are bit-identical under either policy (the merge is by
+/// sequence index, never completion order); only throughput differs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scheduler {
+    /// One global atomic cursor over the grid. Fair, but consecutive
+    /// items usually belong to *different* benchmarks, so every
+    /// evaluation re-touches a cold [`EvalContext`] (module clones,
+    /// golden buffers). Kept for the bench ablation.
+    Cursor,
+    /// Per-worker deques with per-benchmark affinity: all items of
+    /// benchmark `bi` start on worker `bi % jobs`'s deque, so a worker
+    /// streams through one benchmark's evaluations back to back; a
+    /// worker whose deque drains steals a batch from the back of the
+    /// richest deque. The production default.
+    WorkStealing,
+}
+
+/// Evaluate a set of grid items (`item = bi * stream.len() + si`) with
+/// `jobs` workers under `sched`, returning `(bi, si, eval)` triples in
+/// unspecified order. The shared building block behind
+/// [`explore_pairs`] (all items) and [`explore_shard`] (a shard's items).
+fn evaluate_items(
+    parts: &[(&EvalContext, &CacheShards)],
+    stream: &[Vec<&'static str>],
+    items: &[usize],
+    jobs: usize,
+    sched: Scheduler,
+) -> Vec<(usize, usize, Evaluation)> {
+    let ns = stream.len();
+    let jobs = resolve_jobs(jobs).min(items.len().max(1));
+    let eval_one = |i: usize| {
+        let (bi, si) = (i / ns, i % ns);
+        let (cx, cache) = parts[bi];
+        (bi, si, cx.evaluate(&stream[si], cache))
+    };
+    if jobs <= 1 {
+        return items.iter().map(|&i| eval_one(i)).collect();
+    }
+    let per_worker: Vec<Vec<(usize, usize, Evaluation)>> = match sched {
+        Scheduler::Cursor => {
+            let next = AtomicUsize::new(0);
+            std::thread::scope(|s| {
+                let handles: Vec<_> = (0..jobs)
+                    .map(|_| {
+                        s.spawn(|| {
+                            let mut out = Vec::new();
+                            loop {
+                                let k = next.fetch_add(1, Ordering::Relaxed);
+                                if k >= items.len() {
+                                    break;
+                                }
+                                out.push(eval_one(items[k]));
+                            }
+                            out
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("engine worker panicked"))
+                    .collect()
+            })
+        }
+        Scheduler::WorkStealing => {
+            // Seed the deques: benchmark bi's items land on worker
+            // bi % jobs, in stream order, so the owner drains them
+            // front-to-back against one cache-warm EvalContext.
+            let queues: Vec<Mutex<VecDeque<usize>>> =
+                (0..jobs).map(|_| Mutex::new(VecDeque::new())).collect();
+            for &i in items {
+                let w = (i / ns) % jobs;
+                queues[w].lock().unwrap().push_back(i);
+            }
+            let queues = &queues;
+            std::thread::scope(|s| {
+                let handles: Vec<_> = (0..jobs)
+                    .map(|w| {
+                        s.spawn(move || {
+                            let mut out = Vec::new();
+                            loop {
+                                let own = queues[w].lock().unwrap().pop_front();
+                                if let Some(i) = own {
+                                    out.push(eval_one(i));
+                                    continue;
+                                }
+                                // Own deque dry: steal from the richest.
+                                // Items are only ever removed, so "all
+                                // empty" is a stable termination signal
+                                // (a racing thief holds at most items it
+                                // will itself evaluate).
+                                let mut victim = None;
+                                let mut best = 0;
+                                for (qi, q) in queues.iter().enumerate() {
+                                    if qi == w {
+                                        continue;
+                                    }
+                                    let len = q.lock().unwrap().len();
+                                    if len > best {
+                                        best = len;
+                                        victim = Some(qi);
+                                    }
+                                }
+                                let Some(v) = victim else { break };
+                                // Take half the victim's tail (owner pops
+                                // the front), bank all but one locally.
+                                let mut stolen = Vec::new();
+                                {
+                                    let mut q = queues[v].lock().unwrap();
+                                    let take = q.len().div_ceil(2);
+                                    for _ in 0..take {
+                                        if let Some(i) = q.pop_back() {
+                                            stolen.push(i);
+                                        }
+                                    }
+                                }
+                                let Some(first) = stolen.pop() else {
+                                    continue; // raced with the owner; rescan
+                                };
+                                if !stolen.is_empty() {
+                                    let mut own = queues[w].lock().unwrap();
+                                    // stolen is the victim's tail reversed;
+                                    // re-reverse to keep stream order
+                                    for &i in stolen.iter().rev() {
+                                        own.push_back(i);
+                                    }
+                                }
+                                out.push(eval_one(first));
+                            }
+                            out
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("engine worker panicked"))
+                    .collect()
+            })
+        }
+    };
+    per_worker.into_iter().flatten().collect()
+}
+
 /// Batched exploration: evaluate every sequence of `stream` on every
 /// benchmark with `jobs` workers (0 = all cores) and fresh caches, and
 /// return one summary per benchmark, in input order.
+///
+/// # Example
+///
+/// ```
+/// use phaseord::bench_suite::benchmark_by_name;
+/// use phaseord::dse::engine::explore_all;
+/// use phaseord::sim::Target;
+///
+/// let benches = vec![benchmark_by_name("ATAX").unwrap()];
+/// // a tiny stream: two copies of the same one-pass sequence
+/// let stream = vec![vec!["instcombine"], vec!["instcombine"]];
+/// let summaries = explore_all(&benches, &stream, &Target::gp104(), 2);
+/// assert_eq!(summaries.len(), 1);
+/// assert_eq!(summaries[0].evaluations.len(), 2);
+/// // the repeat is served by the sequence memo, in stream order
+/// assert!(!summaries[0].evaluations[0].cached);
+/// assert!(summaries[0].evaluations[1].cached);
+/// assert_eq!(summaries[0].cache_hits, 1);
+/// ```
 pub fn explore_all(
     benches: &[Benchmark],
     stream: &[Vec<&'static str>],
@@ -417,7 +606,7 @@ pub fn explore_all(
 }
 
 /// The engine core: evaluate the full (context × sequence) grid over the
-/// given shared caches. Work items are pulled off an atomic cursor; the
+/// given shared caches with the default work-stealing scheduler. The
 /// merge is by (benchmark, sequence-index), never by completion order,
 /// so the result is identical for any `jobs`.
 pub fn explore_pairs(
@@ -425,48 +614,24 @@ pub fn explore_pairs(
     stream: &[Vec<&'static str>],
     jobs: usize,
 ) -> Vec<ExplorationSummary> {
+    explore_pairs_sched(parts, stream, jobs, Scheduler::WorkStealing)
+}
+
+/// [`explore_pairs`] with an explicit [`Scheduler`] — the bench ablation
+/// entry point (`cargo bench --bench engine` times Cursor vs
+/// WorkStealing and asserts their summaries are bit-identical).
+pub fn explore_pairs_sched(
+    parts: &[(&EvalContext, &CacheShards)],
+    stream: &[Vec<&'static str>],
+    jobs: usize,
+    sched: Scheduler,
+) -> Vec<ExplorationSummary> {
     let nb = parts.len();
     let ns = stream.len();
-    let total = nb * ns;
-    let jobs = resolve_jobs(jobs).min(total.max(1));
-
+    let items: Vec<usize> = (0..nb * ns).collect();
     let mut grid: Vec<Vec<Option<Evaluation>>> = (0..nb).map(|_| vec![None; ns]).collect();
-    if jobs <= 1 {
-        for (bi, &(cx, cache)) in parts.iter().enumerate() {
-            for (si, seq) in stream.iter().enumerate() {
-                grid[bi][si] = Some(cx.evaluate(seq, cache));
-            }
-        }
-    } else {
-        let next = AtomicUsize::new(0);
-        let per_worker: Vec<Vec<(usize, usize, Evaluation)>> = std::thread::scope(|s| {
-            let handles: Vec<_> = (0..jobs)
-                .map(|_| {
-                    s.spawn(|| {
-                        let mut out = Vec::new();
-                        loop {
-                            let i = next.fetch_add(1, Ordering::Relaxed);
-                            if i >= total {
-                                break;
-                            }
-                            let (bi, si) = (i / ns, i % ns);
-                            let (cx, cache) = parts[bi];
-                            out.push((bi, si, cx.evaluate(&stream[si], cache)));
-                        }
-                        out
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("engine worker panicked"))
-                .collect()
-        });
-        for worker in per_worker {
-            for (bi, si, e) in worker {
-                grid[bi][si] = Some(e);
-            }
-        }
+    for (bi, si, e) in evaluate_items(parts, stream, &items, jobs, sched) {
+        grid[bi][si] = Some(e);
     }
     parts
         .iter()
@@ -494,6 +659,31 @@ pub fn explore_pairs(
         .collect()
 }
 
+/// The distributed entry point: evaluate only the grid items `spec` owns
+/// and return, per benchmark, the `(sequence_index, Evaluation)` pairs in
+/// ascending sequence order — the raw material of a shard summary file.
+/// No [`summarize`] fold happens here: cache attribution is replayed at
+/// merge time over the *combined* stream, which is what makes the merged
+/// result bit-identical to a single-process run (see
+/// [`crate::dse::shard::merge_shards`]).
+pub fn explore_shard(
+    parts: &[(&EvalContext, &CacheShards)],
+    stream: &[Vec<&'static str>],
+    spec: crate::dse::shard::ShardSpec,
+    jobs: usize,
+) -> Vec<Vec<(usize, Evaluation)>> {
+    let nb = parts.len();
+    let ns = stream.len();
+    let items: Vec<usize> = (0..nb * ns).filter(|&i| spec.owns(i)).collect();
+    let mut rows: Vec<Vec<(usize, Evaluation)>> = (0..nb).map(|_| Vec::new()).collect();
+    let mut triples = evaluate_items(parts, stream, &items, jobs, Scheduler::WorkStealing);
+    triples.sort_by_key(|&(bi, si, _)| (bi, si));
+    for (bi, si, e) in triples {
+        rows[bi].push((si, e));
+    }
+    rows
+}
+
 /// Fold an ordered evaluation stream into an [`ExplorationSummary`].
 ///
 /// Cache semantics are re-derived here by replaying first-occurrence
@@ -509,12 +699,26 @@ pub fn summarize(
     stream: &[Vec<&'static str>],
     evals_raw: Vec<Evaluation>,
 ) -> ExplorationSummary {
+    summarize_stream(&cx.name, cx.baseline_time_us, stream, evals_raw)
+}
+
+/// [`summarize`] decoupled from a live [`EvalContext`]: the fold only
+/// needs the benchmark's name and baseline time, so `repro merge` can
+/// replay a reassembled cross-process stream without rebuilding contexts
+/// (see [`crate::dse::shard::merge_shards`]). Byte-for-byte the same
+/// fold the in-process engine applies.
+pub fn summarize_stream(
+    bench: &str,
+    baseline_time_us: f64,
+    stream: &[Vec<&'static str>],
+    evals_raw: Vec<Evaluation>,
+) -> ExplorationSummary {
     assert_eq!(stream.len(), evals_raw.len());
     let mut first_by_seq: HashMap<u64, Evaluation> = HashMap::new();
     let mut first_by_ptx: HashMap<u64, (EvalStatus, f64)> = HashMap::new();
     let mut evals = Vec::with_capacity(evals_raw.len());
     let (mut n_ok, mut n_crash, mut n_invalid, mut n_timeout, mut hits) = (0, 0, 0, 0, 0);
-    let mut best_time = cx.baseline_time_us;
+    let mut best_time = baseline_time_us;
     let mut winner = Winner::Baseline;
     for (seq, mut e) in stream.iter().zip(evals_raw) {
         let key = EvalContext::seq_key(seq);
@@ -559,8 +763,8 @@ pub fn summarize(
         evals.push(e);
     }
     ExplorationSummary {
-        bench: cx.name.clone(),
-        baseline_time_us: cx.baseline_time_us,
+        bench: bench.to_string(),
+        baseline_time_us,
         winner,
         best_time_us: best_time,
         evaluations: evals,

@@ -4,12 +4,78 @@
 //! [`EvalContext`] and one [`CacheShards`] instance; batched drivers
 //! borrow both (via [`Explorer::parts`]) and fan evaluations out across
 //! a worker pool.
+//!
+//! The outcome types ([`Evaluation`], [`ExplorationSummary`], [`Winner`],
+//! [`EvalStatus`]) carry std-only JSON (de)serialization so evaluation
+//! streams can cross process boundaries: `repro explore --emit-summary`
+//! writes them, `repro merge` reads them back and folds
+//! ([`crate::dse::shard`]). Round-trips are bit-exact — f64s use Rust's
+//! shortest-round-trip formatting, hashes travel as hex strings.
 
 use crate::bench_suite::{Benchmark, BuiltBench};
 use crate::sim::exec::Buffers;
 use crate::sim::target::Target;
+use crate::util::Json;
 
 use super::engine::{self, CacheShards, EvalContext};
+
+/// Resolve a pass name from a JSON file back to its `&'static str`
+/// registry spelling (sequences are interned against the registry).
+pub fn intern_pass(name: &str) -> Result<&'static str, String> {
+    crate::passes::pass_by_name(name)
+        .map(|p| p.name())
+        .ok_or_else(|| format!("unknown pass {name:?}"))
+}
+
+/// A pass sequence as a JSON array of registry names.
+pub fn seq_to_json(seq: &[&'static str]) -> Json {
+    Json::Arr(seq.iter().map(|p| Json::s(*p)).collect())
+}
+
+/// Parse a JSON array of pass names, interning each against the registry.
+pub fn seq_from_json(j: &Json) -> Result<Vec<&'static str>, String> {
+    j.as_arr()
+        .ok_or("sequence: expected an array")?
+        .iter()
+        .map(|p| intern_pass(p.as_str().ok_or("sequence: pass name must be a string")?))
+        .collect()
+}
+
+/// `u64` → `"0x…"` (JSON numbers are f64: exact only to 2^53, so hashes
+/// travel as hex strings).
+pub(crate) fn hash_to_json(h: u64) -> Json {
+    Json::Str(format!("{h:#018x}"))
+}
+
+pub(crate) fn hash_from_json(j: &Json) -> Result<u64, String> {
+    let s = j.as_str().ok_or("hash: expected a hex string")?;
+    let hex = s
+        .strip_prefix("0x")
+        .ok_or_else(|| format!("hash {s:?}: missing 0x prefix"))?;
+    u64::from_str_radix(hex, 16).map_err(|e| format!("hash {s:?}: {e}"))
+}
+
+/// `f64` → JSON, mapping non-finite times (failed evaluations carry
+/// `f64::INFINITY`) to `null`.
+fn time_to_json(t: f64) -> Json {
+    if t.is_finite() {
+        Json::n(t)
+    } else {
+        Json::Null
+    }
+}
+
+fn time_from_json(j: &Json) -> Result<f64, String> {
+    if j.is_null() {
+        Ok(f64::INFINITY)
+    } else {
+        j.as_f64().ok_or_else(|| "time: expected number or null".to_string())
+    }
+}
+
+fn field<'a>(j: &'a Json, key: &str, what: &str) -> Result<&'a Json, String> {
+    j.get(key).ok_or_else(|| format!("{what}: missing field {key:?}"))
+}
 
 /// §3.2 outcome buckets.
 #[derive(Debug, Clone, PartialEq)]
@@ -30,6 +96,38 @@ impl EvalStatus {
     pub fn is_ok(&self) -> bool {
         matches!(self, EvalStatus::Ok)
     }
+
+    /// `"ok"` / `"invalid-output"` / `"timeout"`, or `{"crash": msg}` /
+    /// `{"exec-failure": msg}` for the message-carrying buckets.
+    pub fn to_json(&self) -> Json {
+        match self {
+            EvalStatus::Ok => Json::s("ok"),
+            EvalStatus::InvalidOutput => Json::s("invalid-output"),
+            EvalStatus::Timeout => Json::s("timeout"),
+            EvalStatus::Crash(m) => Json::Obj(vec![("crash".into(), Json::s(m.as_str()))]),
+            EvalStatus::ExecFailure(m) => {
+                Json::Obj(vec![("exec-failure".into(), Json::s(m.as_str()))])
+            }
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<EvalStatus, String> {
+        if let Some(s) = j.as_str() {
+            return match s {
+                "ok" => Ok(EvalStatus::Ok),
+                "invalid-output" => Ok(EvalStatus::InvalidOutput),
+                "timeout" => Ok(EvalStatus::Timeout),
+                other => Err(format!("unknown status {other:?}")),
+            };
+        }
+        if let Some(m) = j.get("crash").and_then(|v| v.as_str()) {
+            return Ok(EvalStatus::Crash(m.to_string()));
+        }
+        if let Some(m) = j.get("exec-failure").and_then(|v| v.as_str()) {
+            return Ok(EvalStatus::ExecFailure(m.to_string()));
+        }
+        Err("status: expected a status string or {crash|exec-failure: msg}".to_string())
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -43,6 +141,28 @@ pub struct Evaluation {
     pub ptx_hash: u64,
     /// verdict came from the two-level evaluation cache
     pub cached: bool,
+}
+
+impl Evaluation {
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("status".into(), self.status.to_json()),
+            ("time_us".into(), time_to_json(self.time_us)),
+            ("ptx_hash".into(), hash_to_json(self.ptx_hash)),
+            ("cached".into(), Json::Bool(self.cached)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Evaluation, String> {
+        Ok(Evaluation {
+            status: EvalStatus::from_json(field(j, "status", "evaluation")?)?,
+            time_us: time_from_json(field(j, "time_us", "evaluation")?)?,
+            ptx_hash: hash_from_json(field(j, "ptx_hash", "evaluation")?)?,
+            cached: field(j, "cached", "evaluation")?
+                .as_bool()
+                .ok_or("evaluation: cached must be a bool")?,
+        })
+    }
 }
 
 /// What won an exploration: either no sequence beat the baseline (the
@@ -66,6 +186,23 @@ impl Winner {
         match self {
             Winner::Baseline => None,
             Winner::Sequence(s) => Some(s),
+        }
+    }
+
+    /// `null` = baseline won (the same convention as the fig2 JSON:
+    /// distinct from `[]`, the empty sequence winning).
+    pub fn to_json(&self) -> Json {
+        match self {
+            Winner::Baseline => Json::Null,
+            Winner::Sequence(s) => seq_to_json(s),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Winner, String> {
+        if j.is_null() {
+            Ok(Winner::Baseline)
+        } else {
+            seq_from_json(j).map(Winner::Sequence)
         }
     }
 }
@@ -93,6 +230,56 @@ impl ExplorationSummary {
     /// The winning sequence, if one beat the baseline.
     pub fn best_seq(&self) -> Option<&[&'static str]> {
         self.winner.sequence()
+    }
+
+    /// Full summary — including the per-sequence evaluation stream — as
+    /// JSON. [`ExplorationSummary::from_json`] restores it bit-exactly.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("bench".into(), Json::s(self.bench.as_str())),
+            ("baseline_time_us".into(), Json::n(self.baseline_time_us)),
+            ("winner".into(), self.winner.to_json()),
+            ("best_time_us".into(), time_to_json(self.best_time_us)),
+            (
+                "evaluations".into(),
+                Json::Arr(self.evaluations.iter().map(|e| e.to_json()).collect()),
+            ),
+            ("n_ok".into(), Json::n(self.n_ok as f64)),
+            ("n_crash".into(), Json::n(self.n_crash as f64)),
+            ("n_invalid".into(), Json::n(self.n_invalid as f64)),
+            ("n_timeout".into(), Json::n(self.n_timeout as f64)),
+            ("cache_hits".into(), Json::n(self.cache_hits as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ExplorationSummary, String> {
+        let count = |key: &str| -> Result<usize, String> {
+            field(j, key, "summary")?
+                .as_usize()
+                .ok_or_else(|| format!("summary: {key} must be a non-negative integer"))
+        };
+        Ok(ExplorationSummary {
+            bench: field(j, "bench", "summary")?
+                .as_str()
+                .ok_or("summary: bench must be a string")?
+                .to_string(),
+            baseline_time_us: field(j, "baseline_time_us", "summary")?
+                .as_f64()
+                .ok_or("summary: baseline_time_us must be a number")?,
+            winner: Winner::from_json(field(j, "winner", "summary")?)?,
+            best_time_us: time_from_json(field(j, "best_time_us", "summary")?)?,
+            evaluations: field(j, "evaluations", "summary")?
+                .as_arr()
+                .ok_or("summary: evaluations must be an array")?
+                .iter()
+                .map(Evaluation::from_json)
+                .collect::<Result<Vec<_>, _>>()?,
+            n_ok: count("n_ok")?,
+            n_crash: count("n_crash")?,
+            n_invalid: count("n_invalid")?,
+            n_timeout: count("n_timeout")?,
+            cache_hits: count("cache_hits")?,
+        })
     }
 }
 
@@ -242,6 +429,77 @@ mod tests {
         let cx = e.context();
         assert_eq!(cx.step_limit(), cx.baseline_steps() * 20);
         assert!(cx.step_limit() < cx.baseline_steps() * 64);
+    }
+
+    #[test]
+    fn evaluation_json_roundtrip_is_bit_exact() {
+        let cases = vec![
+            Evaluation {
+                status: EvalStatus::Ok,
+                time_us: 1234.567_890_123,
+                ptx_hash: 0xDEAD_BEEF_CAFE_F00D,
+                cached: true,
+            },
+            Evaluation {
+                status: EvalStatus::Crash("pass \"gvn\" exploded:\n\tbudget".into()),
+                time_us: f64::INFINITY,
+                ptx_hash: 0,
+                cached: false,
+            },
+            Evaluation {
+                status: EvalStatus::ExecFailure("OOB at k=3".into()),
+                time_us: f64::INFINITY,
+                ptx_hash: u64::MAX,
+                cached: false,
+            },
+            Evaluation {
+                status: EvalStatus::Timeout,
+                time_us: f64::INFINITY,
+                ptx_hash: 0x1,
+                cached: true,
+            },
+        ];
+        for e in cases {
+            let text = e.to_json().to_string();
+            let back = Evaluation::from_json(&crate::util::Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back.status, e.status, "{text}");
+            assert_eq!(back.time_us.to_bits(), e.time_us.to_bits(), "{text}");
+            assert_eq!(back.ptx_hash, e.ptx_hash, "{text}");
+            assert_eq!(back.cached, e.cached, "{text}");
+        }
+    }
+
+    #[test]
+    fn summary_json_roundtrip_is_bit_exact() {
+        let mut e = explorer_for("ATAX");
+        let stream = SeqGen::stream(0xD1CE, 12);
+        let s = e.explore(&stream);
+        let text = s.to_json().to_string();
+        let back =
+            ExplorationSummary::from_json(&crate::util::Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.bench, s.bench);
+        assert_eq!(back.winner, s.winner);
+        assert_eq!(back.baseline_time_us.to_bits(), s.baseline_time_us.to_bits());
+        assert_eq!(back.best_time_us.to_bits(), s.best_time_us.to_bits());
+        assert_eq!(
+            (back.n_ok, back.n_crash, back.n_invalid, back.n_timeout, back.cache_hits),
+            (s.n_ok, s.n_crash, s.n_invalid, s.n_timeout, s.cache_hits)
+        );
+        assert_eq!(back.evaluations.len(), s.evaluations.len());
+        for (x, y) in back.evaluations.iter().zip(&s.evaluations) {
+            assert_eq!(x.status, y.status);
+            assert_eq!(x.time_us.to_bits(), y.time_us.to_bits());
+            assert_eq!(x.ptx_hash, y.ptx_hash);
+            assert_eq!(x.cached, y.cached);
+        }
+    }
+
+    #[test]
+    fn seq_interning_rejects_unknown_passes() {
+        let j = crate::util::Json::parse(r#"["licm", "not-a-pass"]"#).unwrap();
+        assert!(seq_from_json(&j).is_err());
+        let j = crate::util::Json::parse(r#"["licm", "gvn"]"#).unwrap();
+        assert_eq!(seq_from_json(&j).unwrap(), vec!["licm", "gvn"]);
     }
 
     #[test]

@@ -14,18 +14,25 @@
 //!      shape, with a timeout at 20× the baseline.
 //!
 //! The per-candidate pipeline lives in [`engine::EvalContext`]; the
-//! batched, multi-worker drivers ([`engine::explore_all`]) shard the
-//! (benchmark × sequence) grid across a `std::thread::scope` pool with
-//! deterministic merging — `--jobs 1` and `--jobs N` are bit-identical.
+//! batched, multi-worker drivers ([`engine::explore_all`]) spread the
+//! (benchmark × sequence) grid across a `std::thread::scope` pool — a
+//! work-stealing scheduler with per-benchmark worker affinity — with
+//! deterministic merging: `--jobs 1` and `--jobs N` are bit-identical.
+//! The same grid also partitions across *processes*: [`shard`] splits it
+//! round-robin (`repro explore --shard I/N`), serializes raw evaluation
+//! streams to JSON, and folds shard files back into summaries that are
+//! bit-identical to a single-process run (`repro merge`).
 
 pub mod engine;
 pub mod explorer;
 pub mod minimize;
 pub mod permute;
 pub mod seqgen;
+pub mod shard;
 
-pub use engine::{explore_all, CacheShards, EvalContext};
+pub use engine::{explore_all, CacheShards, EvalContext, Scheduler};
 pub use explorer::{EvalStatus, Evaluation, Explorer, ExplorationSummary, Winner};
 pub use minimize::minimize_sequence;
 pub use permute::permutation_study;
 pub use seqgen::SeqGen;
+pub use shard::{merge_shards, ShardRun, ShardSpec};

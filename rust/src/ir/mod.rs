@@ -18,6 +18,12 @@
 //!   cost model (like `llvm.loop.unroll` metadata feeding the backend),
 //!   not as body duplication; the paper's unroll observations are made at
 //!   the PTX level, which our codegen reproduces from the hint.
+//! - Cross-pass module state is *typed* ([`PipelineState`]: the alias
+//!   summary and its staleness, CFG facts, alloca form, outlining)
+//!   rather than ad-hoc flags — the order-matters mechanism the DSE
+//!   explores. Structural invariants are enforced by [`verifier`]
+//!   (every pass sequence must leave verifier-clean IR; the CLI's
+//!   `--verify-each` runs it after every changing pass).
 
 pub mod block;
 pub mod builder;

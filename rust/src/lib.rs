@@ -18,13 +18,18 @@
 //!   and CUDA-flavoured variants;
 //! * [`dse`] — the paper's contribution: the phase-ordering design-space
 //!   exploration engine (random sequences, sharded two-level caching,
-//!   validation, top-k), batched and parallel across worker threads with
-//!   deterministic, jobs-count-independent results;
+//!   validation, top-k), batched across a work-stealing worker pool with
+//!   deterministic, jobs-count-independent results, and partitionable
+//!   across processes with bit-identical mergeable summaries
+//!   ([`dse::shard`]);
 //! * [`features`] — MILEPOST-style static features, cosine k-NN suggestion
 //!   and the IterGraph comparator (the paper's §4 / Fig. 7);
 //! * [`runtime`] — loader for the JAX/Pallas golden artifacts built by
 //!   `make artifacts` (three-layer AOT architecture);
 //! * [`coordinator`] — CLI, experiment drivers and report writers.
+//!
+//! `docs/ARCHITECTURE.md` maps the four layers in prose;
+//! `docs/CLI.md` is the `repro` command reference.
 
 pub mod analysis;
 pub mod bench_suite;

@@ -1,6 +1,7 @@
 //! Small no-dependency utilities: a deterministic PRNG (the vendored crate
-//! set has no `rand`), geometric-mean helpers, and a tiny JSON writer used
-//! by the report layer.
+//! set has no `rand`), geometric-mean helpers, and a tiny JSON layer
+//! (writer **and** parser) used by the report layer and the shard
+//! summary files (`repro explore --emit-summary` / `repro merge`).
 
 /// SplitMix64 — used to seed and to derive per-stream seeds.
 #[inline]
@@ -173,6 +174,288 @@ impl Json {
         self.write(&mut s);
         s
     }
+
+    // -------------------------------------------------------- accessors
+
+    /// Object field lookup (`None` for non-objects / missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(kvs) => kvs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// Non-negative integral number (JSON numbers are f64; exact up to
+    /// 2^53 — larger integers are serialized as hex strings instead).
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Json::Num(v) if *v >= 0.0 && v.fract() == 0.0 && *v <= 9_007_199_254_740_992.0 => {
+                Some(*v as usize)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(xs) => Some(xs),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, Json::Null)
+    }
+
+    // ----------------------------------------------------------- parser
+
+    /// Parse a JSON document (the inverse of [`Json::write`]). Strict
+    /// enough for the files this crate writes itself: one top-level
+    /// value, full escape handling, no trailing garbage.
+    pub fn parse(src: &str) -> Result<Json, String> {
+        let mut p = JsonParser {
+            b: src.as_bytes(),
+            i: 0,
+        };
+        p.skip_ws();
+        let v = p.value(0)?;
+        p.skip_ws();
+        if p.i != p.b.len() {
+            return Err(format!("trailing characters at byte {}", p.i));
+        }
+        Ok(v)
+    }
+}
+
+/// Maximum nesting depth accepted by [`Json::parse`] — the shard files
+/// nest 5 levels; 128 is a defensive bound against stack exhaustion.
+const JSON_MAX_DEPTH: usize = 128;
+
+struct JsonParser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> JsonParser<'a> {
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!(
+                "expected '{}' at byte {} (found {:?})",
+                c as char,
+                self.i,
+                self.peek().map(|b| b as char)
+            ))
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(format!("invalid literal at byte {}", self.i))
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json, String> {
+        if depth > JSON_MAX_DEPTH {
+            return Err("JSON nesting too deep".to_string());
+        }
+        match self.peek() {
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'"') => self.string().map(Json::Str),
+            Some(b'[') => {
+                self.i += 1;
+                let mut xs = Vec::new();
+                self.skip_ws();
+                if self.peek() == Some(b']') {
+                    self.i += 1;
+                    return Ok(Json::Arr(xs));
+                }
+                loop {
+                    self.skip_ws();
+                    xs.push(self.value(depth + 1)?);
+                    self.skip_ws();
+                    match self.peek() {
+                        Some(b',') => self.i += 1,
+                        Some(b']') => {
+                            self.i += 1;
+                            return Ok(Json::Arr(xs));
+                        }
+                        _ => return Err(format!("expected ',' or ']' at byte {}", self.i)),
+                    }
+                }
+            }
+            Some(b'{') => {
+                self.i += 1;
+                let mut kvs = Vec::new();
+                self.skip_ws();
+                if self.peek() == Some(b'}') {
+                    self.i += 1;
+                    return Ok(Json::Obj(kvs));
+                }
+                loop {
+                    self.skip_ws();
+                    let k = self.string()?;
+                    self.skip_ws();
+                    self.expect(b':')?;
+                    self.skip_ws();
+                    let v = self.value(depth + 1)?;
+                    kvs.push((k, v));
+                    self.skip_ws();
+                    match self.peek() {
+                        Some(b',') => self.i += 1,
+                        Some(b'}') => {
+                            self.i += 1;
+                            return Ok(Json::Obj(kvs));
+                        }
+                        _ => return Err(format!("expected ',' or '}}' at byte {}", self.i)),
+                    }
+                }
+            }
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            other => Err(format!("unexpected {:?} at byte {}", other.map(|b| b as char), self.i)),
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-') {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i]).expect("ASCII number slice");
+        s.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|e| format!("bad number {s:?} at byte {start}: {e}"))
+    }
+
+    fn hex4(&mut self) -> Result<u32, String> {
+        if self.i + 4 > self.b.len() {
+            return Err("truncated \\u escape".to_string());
+        }
+        let s = std::str::from_utf8(&self.b[self.i..self.i + 4])
+            .map_err(|_| "non-ASCII \\u escape".to_string())?;
+        let v = u32::from_str_radix(s, 16).map_err(|_| format!("bad \\u escape {s:?}"))?;
+        self.i += 4;
+        Ok(v)
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out: Vec<u8> = Vec::new();
+        loop {
+            match self.peek() {
+                None => return Err("unterminated string".to_string()),
+                Some(b'"') => {
+                    self.i += 1;
+                    return String::from_utf8(out).map_err(|e| format!("invalid UTF-8: {e}"));
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    let esc = self.peek().ok_or("truncated escape")?;
+                    self.i += 1;
+                    match esc {
+                        b'"' => out.push(b'"'),
+                        b'\\' => out.push(b'\\'),
+                        b'/' => out.push(b'/'),
+                        b'b' => out.push(0x08),
+                        b'f' => out.push(0x0c),
+                        b'n' => out.push(b'\n'),
+                        b'r' => out.push(b'\r'),
+                        b't' => out.push(b'\t'),
+                        b'u' => {
+                            let hi = self.hex4()?;
+                            let cp = if (0xD800..0xDC00).contains(&hi) {
+                                // surrogate pair: a second \uXXXX must follow
+                                if self.peek() != Some(b'\\') {
+                                    return Err("lone high surrogate".to_string());
+                                }
+                                self.i += 1;
+                                self.expect(b'u')?;
+                                let lo = self.hex4()?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    return Err("invalid low surrogate".to_string());
+                                }
+                                0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                            } else {
+                                hi
+                            };
+                            let c = char::from_u32(cp)
+                                .ok_or_else(|| format!("invalid codepoint U+{cp:04X}"))?;
+                            let mut buf = [0u8; 4];
+                            out.extend_from_slice(c.encode_utf8(&mut buf).as_bytes());
+                        }
+                        other => return Err(format!("bad escape '\\{}'", other as char)),
+                    }
+                }
+                Some(c) => {
+                    out.push(c);
+                    self.i += 1;
+                }
+            }
+        }
+    }
+}
+
+/// Write a JSON value to a file, creating parent directories as needed
+/// (the `--emit-summary` path of `repro explore`).
+pub fn emit_json(path: &std::path::Path, j: &Json) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, j.to_string())
+}
+
+/// Read and parse a JSON file (the `repro merge` input path).
+pub fn load_json(path: &std::path::Path) -> Result<Json, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("{}: {e}", path.display()))?;
+    Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))
 }
 
 #[cfg(test)]
@@ -222,5 +505,95 @@ mod tests {
     #[test]
     fn fnv_differs() {
         assert_ne!(fnv1a(b"abc"), fnv1a(b"abd"));
+    }
+
+    // ------------------------------------------------------ JSON parser
+
+    #[test]
+    fn parse_roundtrips_writer_output() {
+        let j = Json::Obj(vec![
+            ("name".into(), Json::s("GEMM")),
+            ("t".into(), Json::n(123.456)),
+            ("neg".into(), Json::n(-0.5)),
+            ("flag".into(), Json::Bool(true)),
+            ("none".into(), Json::Null),
+            (
+                "seq".into(),
+                Json::Arr(vec![Json::s("licm"), Json::s("gvn")]),
+            ),
+            ("weird\"key\n".into(), Json::s("v\\al\tue\u{1}")),
+        ]);
+        let text = j.to_string();
+        let back = Json::parse(&text).unwrap();
+        // the writer is canonical: writing the parse yields the same text
+        assert_eq!(back.to_string(), text);
+    }
+
+    #[test]
+    fn parse_handles_floats_exactly() {
+        // Rust's f64 Display is shortest-round-trip, so write → parse
+        // must restore the exact bits (the merge bit-identity contract)
+        for v in [
+            1.0,
+            0.1,
+            1e-300,
+            123_456_789.123_456_78,
+            f64::MIN_POSITIVE,
+            f64::MAX,
+            -3.141592653589793,
+        ] {
+            let text = Json::n(v).to_string();
+            let got = Json::parse(&text).unwrap().as_f64().unwrap();
+            assert_eq!(got.to_bits(), v.to_bits(), "{v} → {text}");
+        }
+    }
+
+    #[test]
+    fn parse_escapes_and_unicode() {
+        let j = Json::parse(r#""a\"b\\c\ndAé""#).unwrap();
+        assert_eq!(j.as_str().unwrap(), "a\"b\\c\ndAé");
+        // raw non-ASCII passes through the plain-byte path (🜁 U+1F701)
+        let j = Json::parse(r#""🜁""#).unwrap();
+        assert_eq!(j.as_str().unwrap(), "\u{1F701}");
+        // \u escapes: BMP codepoints, and a real surrogate pair — the
+        // escaped spelling of 😀 (U+1F600) that foreign writers may emit
+        let j = Json::parse(r#""\u0041\u00e9""#).unwrap();
+        assert_eq!(j.as_str().unwrap(), "A\u{e9}");
+        let j = Json::parse(r#""x\ud83d\ude00y""#).unwrap();
+        assert_eq!(j.as_str().unwrap(), "x\u{1F600}y");
+        // lone or malformed surrogates are rejected, not mangled
+        for bad in [r#""\ud83d""#, r#""\ud83dx""#, r#""\ud83dA""#, r#""\ude00""#] {
+            assert!(Json::parse(bad).is_err(), "{bad} should not parse");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        for bad in [
+            "",
+            "{",
+            "[1,]",
+            "{\"a\":}",
+            "tru",
+            "1.2.3",
+            "\"unterminated",
+            "[1] trailing",
+            "{\"a\" 1}",
+        ] {
+            assert!(Json::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn accessors() {
+        let j = Json::parse(r#"{"a": 3, "b": [1, 2], "c": "x", "d": null}"#).unwrap();
+        assert_eq!(j.get("a").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("a").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("b").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(j.get("c").unwrap().as_str(), Some("x"));
+        assert!(j.get("d").unwrap().is_null());
+        assert!(j.get("missing").is_none());
+        assert_eq!(Json::n(-1.0).as_usize(), None);
+        assert_eq!(Json::n(1.5).as_usize(), None);
     }
 }
