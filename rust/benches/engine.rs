@@ -23,6 +23,7 @@ mod harness;
 
 use phaseord::bench_suite::benchmark_by_name;
 use phaseord::dse::engine::{self, CacheShards, EvalContext, Scheduler};
+use phaseord::dse::strategy::{FixedStream, HillClimb, SearchStrategy, DEFAULT_ROUND};
 use phaseord::dse::{ExplorationSummary, SeqGen};
 use phaseord::sim::Target;
 
@@ -114,6 +115,57 @@ fn main() {
     }
     println!("summaries bit-identical across schedulers: {sched_same}");
     assert!(sched_same, "work-stealing scheduler diverged from the cursor");
+
+    // ---- strategy ablation: fixed stream vs hill-climbing, same budget ----
+    // 2DCONV joins the pool: the paper's no-improving-order benchmark is
+    // where an iterative strategy provably cannot lose to a random
+    // stream (both floor at the baseline).
+    let conv = engine::build_contexts(&[benchmark_by_name("2DCONV").unwrap()], &target, 0);
+    let abl_ctxs: Vec<&EvalContext> = ctxs.iter().chain(conv.iter()).collect();
+    let nb = abl_ctxs.len();
+    let per_bench = 40usize;
+    let run_strategy = |mk: &dyn Fn() -> Box<dyn SearchStrategy>, budget: usize| {
+        // fresh caches per run for honest numbers
+        let caches: Vec<CacheShards> = abl_ctxs.iter().map(|_| CacheShards::new()).collect();
+        let parts: Vec<(&EvalContext, &CacheShards)> =
+            abl_ctxs.iter().copied().zip(caches.iter()).collect();
+        let mut s = mk();
+        engine::run(s.as_mut(), &parts, budget, jobs)
+    };
+    let fx_stream = SeqGen::stream(0xAB1A, per_bench);
+    let mk_fixed = || -> Box<dyn SearchStrategy> {
+        Box::new(FixedStream::new(fx_stream.clone(), nb))
+    };
+    let mk_hc = || -> Box<dyn SearchStrategy> {
+        Box::new(HillClimb::new(nb, 0xAB1A, DEFAULT_ROUND))
+    };
+    let r_fx = harness::bench(&format!("strategy=fixed {nb}x{per_bench}"), 1, || {
+        run_strategy(&mk_fixed, usize::MAX).iter().map(|s| s.n_ok).sum::<usize>()
+    });
+    let r_hc = harness::bench(&format!("strategy=hillclimb {nb}x{per_bench}"), 1, || {
+        run_strategy(&mk_hc, per_bench * nb).iter().map(|s| s.n_ok).sum::<usize>()
+    });
+    println!(
+        "strategy wall-clock fixed vs hillclimb: {:.2}x (min-over-min)",
+        r_fx.min_ms / r_hc.min_ms
+    );
+    let fx = run_strategy(&mk_fixed, usize::MAX);
+    let hc = run_strategy(&mk_hc, per_bench * nb);
+    let mut wins = 0;
+    for (f, h) in fx.iter().zip(&hc) {
+        let ge = h.best_time_us <= f.best_time_us;
+        wins += ge as usize;
+        println!(
+            "  {:10} fixed best {:>12.1} µs | hillclimb best {:>12.1} µs | hillclimb ≥ fixed: {ge}",
+            f.bench, f.best_time_us, h.best_time_us
+        );
+    }
+    println!("hillclimb found a ≥-as-good winner on {wins}/{nb} benchmarks at the same budget");
+    assert!(
+        wins >= 1,
+        "hillclimb must match or beat the fixed stream on at least one benchmark \
+         within the same {per_bench}-evaluation budget"
+    );
 
     // ---- analysis-cache ablation: same stream, cache disabled ----
     // `rn` above ran with the cache on (the production default); rerun

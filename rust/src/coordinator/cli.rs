@@ -4,14 +4,16 @@
 //! repro <command> [--seqs N] [--seed S] [--target gp104|amd-fiji]
 //!                 [--perms N] [--draws N] [--jobs N] [--out DIR] [--full]
 //!                 [--verify-each] [--shard I/N] [--emit-summary PATH]
+//!                 [--strategy fixed|permute|hillclimb|knn] [--budget N]
+//!                 [--k K]
 //!
 //! commands: explore merge fig2 table1 fig3 fig4 fig5 fig6 fig7
 //!           problems amd all passes
 //! ```
 //!
-//! `explore` runs the raw DSE (optionally one shard of it) and `merge`
-//! folds shard files back together — see `docs/CLI.md` for a two-shard
-//! walkthrough.
+//! `explore` runs the DSE under the selected search strategy
+//! (optionally one shard of the fixed-stream grid) and `merge` folds
+//! shard files back together — see `docs/CLI.md` for walkthroughs.
 
 use std::path::PathBuf;
 
@@ -21,6 +23,7 @@ use super::experiments::{
 };
 use super::report;
 use crate::dse::shard::{merge_shards, ShardRun, ShardSpec};
+use crate::dse::strategy::StrategyKind;
 use crate::sim::target::Target;
 use crate::util::{emit_json, load_json};
 
@@ -42,6 +45,7 @@ pub fn parse_args(argv: &[String]) -> Result<CliArgs, String> {
     let mut out = PathBuf::from("results");
     let mut files = Vec::new();
     let mut emit_summary = None;
+    let (mut strategy_set, mut budget_set, mut k_set, mut seqs_set) = (false, false, false, false);
     let mut it = argv.iter().peekable();
     while let Some(a) = it.next() {
         match a.as_str() {
@@ -50,7 +54,8 @@ pub fn parse_args(argv: &[String]) -> Result<CliArgs, String> {
                     .next()
                     .ok_or("--seqs needs a value")?
                     .parse()
-                    .map_err(|e| format!("--seqs: {e}"))?
+                    .map_err(|e| format!("--seqs: {e}"))?;
+                seqs_set = true;
             }
             "--seed" => {
                 cfg.seed = it
@@ -86,12 +91,40 @@ pub fn parse_args(argv: &[String]) -> Result<CliArgs, String> {
             }
             "--out" => out = PathBuf::from(it.next().ok_or("--out needs a value")?),
             "--full" => {
-                // the paper's full protocol
+                // the paper's full protocol. Sets the stream length, so
+                // it participates in the --seqs/--budget ambiguity check
                 cfg.n_seqs = 10_000;
                 cfg.n_perms = 1000;
                 cfg.n_random_draws = 1000;
+                seqs_set = true;
             }
             "--verify-each" => cfg.verify_each = true,
+            "--strategy" => {
+                cfg.strategy = StrategyKind::parse(it.next().ok_or("--strategy needs a value")?)?;
+                strategy_set = true;
+            }
+            "--budget" => {
+                cfg.budget = it
+                    .next()
+                    .ok_or("--budget needs a value")?
+                    .parse()
+                    .map_err(|e| format!("--budget: {e}"))?;
+                if cfg.budget == 0 {
+                    return Err("--budget must be >= 1".to_string());
+                }
+                budget_set = true;
+            }
+            "--k" => {
+                cfg.knn_k = it
+                    .next()
+                    .ok_or("--k needs a value")?
+                    .parse()
+                    .map_err(|e| format!("--k: {e}"))?;
+                if cfg.knn_k == 0 {
+                    return Err("--k must be >= 1".to_string());
+                }
+                k_set = true;
+            }
             "--shard" => {
                 cfg.shard = Some(ShardSpec::parse(it.next().ok_or("--shard needs I/N")?)?)
             }
@@ -110,8 +143,34 @@ pub fn parse_args(argv: &[String]) -> Result<CliArgs, String> {
     if command.is_empty() {
         return Err(usage());
     }
+    if (strategy_set || budget_set || k_set) && command != "explore" {
+        return Err(format!(
+            "--strategy/--budget/--k only apply to explore\n{}",
+            usage()
+        ));
+    }
     if cfg.shard.is_some() && command != "explore" {
         return Err(format!("--shard only applies to explore\n{}", usage()));
+    }
+    if cfg.shard.is_some() && cfg.strategy != StrategyKind::Fixed {
+        return Err(format!(
+            "--shard only applies to --strategy fixed (adaptive strategies cannot \
+             partition a grid that does not exist up front)\n{}",
+            usage()
+        ));
+    }
+    if cfg.strategy == StrategyKind::Fixed && budget_set {
+        // for the fixed strategy the budget *is* the stream length;
+        // refuse the ambiguous spelling rather than silently preferring
+        // one flag over the other
+        if seqs_set && cfg.n_seqs != cfg.budget {
+            return Err(
+                "--seqs and --budget are the same knob for --strategy fixed (the stream \
+                 length); pass one of them"
+                    .to_string(),
+            );
+        }
+        cfg.n_seqs = cfg.budget;
     }
     if emit_summary.is_some() && command != "explore" && command != "merge" {
         return Err(format!(
@@ -123,6 +182,13 @@ pub fn parse_args(argv: &[String]) -> Result<CliArgs, String> {
         return Err(
             "--shard without --emit-summary would throw the shard's work away; \
              add --emit-summary PATH"
+                .to_string(),
+        );
+    }
+    if emit_summary.is_some() && command == "explore" && cfg.strategy != StrategyKind::Fixed {
+        return Err(
+            "--emit-summary requires --strategy fixed: shard files describe the shared \
+             fixed stream, which adaptive strategies do not have"
                 .to_string(),
         );
     }
@@ -139,20 +205,29 @@ pub fn usage() -> String {
     "usage: repro <explore|merge|fig2|table1|fig3|fig4|fig5|fig6|fig7|problems|amd|all|passes> \
      [--seqs N] [--seed S] [--target gp104|amd-fiji] [--perms N] [--draws N] \
      [--jobs N] [--out DIR] [--full] [--verify-each] [--shard I/N] \
-     [--emit-summary PATH]\n\
+     [--emit-summary PATH] [--strategy fixed|permute|hillclimb|knn] \
+     [--budget N] [--k K]\n\
      --jobs = evaluation worker threads (0 = all cores, the default); \
      results are bit-identical for every value\n\
      --full = the paper's protocol (10000 sequences, 1000 permutations/draws)\n\
      --verify-each = verify the IR after every changing pass of every \
      evaluated sequence (slow; pinpoints the offending pass)\n\
+     --strategy = the search strategy explore drives (default fixed = the \
+     shared random stream); permute/hillclimb/knn are adaptive\n\
+     --budget N = evaluations per benchmark for adaptive strategies \
+     (default: --seqs); for --strategy fixed it is the stream length\n\
+     --k K = neighbor count for --strategy knn (default 3; the paper \
+     reports K=1 and K=3)\n\
      --shard I/N = evaluate the I-th of N slices of the (benchmark x sequence) \
-     grid (explore only; requires --emit-summary)\n\
-     --emit-summary PATH = explore: write the mergeable shard JSON; \
-     merge: write the folded summaries JSON\n\
-     explore = run the DSE over the shared stream and print per-benchmark \
-     summaries (the raw engine, no figure post-processing)\n\
-     merge <shard.json>... = fold shard files from sharded explore runs; \
-     bit-identical to the equivalent single-process explore\n\
+     grid (explore with --strategy fixed only; requires --emit-summary)\n\
+     --emit-summary PATH = explore: write the mergeable shard JSON \
+     (compact stream-descriptor form); merge: write the folded summaries \
+     JSON\n\
+     explore = run the DSE under the selected strategy and print \
+     per-benchmark summaries (the raw engine, no figure post-processing)\n\
+     merge <shard.json>... = fold shard files from sharded explore runs \
+     (descriptor or legacy full-stream form, or a mix); bit-identical to \
+     the equivalent single-process explore\n\
      passes = list the registry (name, kind, preserved analyses)"
         .to_string()
 }
@@ -228,7 +303,7 @@ pub fn run(args: CliArgs) -> Result<(), String> {
             eprintln!(
                 "merged {} shard(s): {} sequences × {} benchmarks",
                 shards.len(),
-                shards[0].stream.len(),
+                shards[0].n_seqs(),
                 summaries.len()
             );
             println!("{}", report::render_explore(&summaries));
@@ -238,6 +313,41 @@ pub fn run(args: CliArgs) -> Result<(), String> {
         }
         "explore" => {
             let cfg = args.cfg.clone();
+            if cfg.strategy != StrategyKind::Fixed {
+                // adaptive strategies: no grid, no shard files — run the
+                // strategy loop and print what it proposed
+                let ctx = ExpCtx::new(cfg);
+                eprintln!(
+                    "exploring with strategy {} (budget {} per benchmark) × {} benchmarks on {} \
+                     with {} worker(s) (golden: {}) …",
+                    ctx.cfg.strategy.name(),
+                    ctx.budget_per_bench(),
+                    ctx.benchmarks.len(),
+                    ctx.cfg.target.name,
+                    crate::dse::engine::resolve_jobs(ctx.cfg.jobs),
+                    if ctx.used_pjrt_golden { "AOT artifacts" } else { "interpreter" }
+                );
+                if matches!(ctx.cfg.strategy, StrategyKind::Permute | StrategyKind::Knn) {
+                    // these seed from reference winners, which come from
+                    // a full shared-stream exploration first — often the
+                    // dominant cost, so say it is happening
+                    eprintln!(
+                        "reference pool: exploring the {}-sequence shared stream first \
+                         (adjust with --seqs) …",
+                        ctx.cfg.n_seqs
+                    );
+                }
+                let summaries = ctx.explore_strategy();
+                println!(
+                    "{}",
+                    report::render_explore_strategy(ctx.cfg.strategy.name(), &summaries)
+                );
+                let (seq_memos, ptx_verdicts) = ctx.cache_totals();
+                eprintln!(
+                    "cache occupancy: {seq_memos} sequence memos, {ptx_verdicts} vPTX verdicts"
+                );
+                return Ok(());
+            }
             let spec = cfg.shard.unwrap_or_else(ShardSpec::full);
             let ctx = ExpCtx::new(cfg);
             eprintln!(
@@ -251,8 +361,10 @@ pub fn run(args: CliArgs) -> Result<(), String> {
             );
             if spec.count > 1 {
                 // partial grid: emit the raw evaluation stream for merge
-                // (parse_args guarantees the emit path is present)
-                let run = ctx.explore_shard();
+                // (parse_args guarantees the emit path is present).
+                // compact() swaps the embedded stream for the seeded
+                // descriptor — the stream is --seed/--seqs-derived here
+                let run = ctx.explore_shard().compact()?;
                 let path = args.emit_summary.as_ref().expect("checked at parse time");
                 emit_json(path, &run.to_json()).map_err(io)?;
                 println!(
@@ -270,8 +382,9 @@ pub fn run(args: CliArgs) -> Result<(), String> {
                 );
                 if let Some(path) = &args.emit_summary {
                     // emit the mergeable 1/1 shard form straight from the
-                    // summaries in hand (the merge fold is idempotent)
-                    let run = ctx.package_summaries(&summaries);
+                    // summaries in hand (the merge fold is idempotent),
+                    // with the stream compacted to its descriptor
+                    let run = ctx.package_summaries(&summaries).compact()?;
                     emit_json(path, &run.to_json()).map_err(io)?;
                     eprintln!("wrote {}", path.display());
                 }
@@ -434,6 +547,60 @@ mod tests {
         // --emit-summary is valid on merge, rejected elsewhere
         assert!(parse_args(&sv(&["merge", "a.json", "--emit-summary", "m.json"])).is_ok());
         assert!(parse_args(&sv(&["fig5", "--emit-summary", "m.json"])).is_err());
+    }
+
+    #[test]
+    fn strategy_flags_parse_and_are_validated() {
+        // defaults: fixed strategy, budget 0 (= --seqs), k = 3
+        let a = parse_args(&sv(&["explore"])).unwrap();
+        assert_eq!(a.cfg.strategy, StrategyKind::Fixed);
+        assert_eq!(a.cfg.budget, 0);
+        assert_eq!(a.cfg.knn_k, 3);
+        // the adaptive strategies parse with their knobs
+        let a = parse_args(&sv(&["explore", "--strategy", "hillclimb", "--budget", "64"])).unwrap();
+        assert_eq!(a.cfg.strategy, StrategyKind::HillClimb);
+        assert_eq!(a.cfg.budget, 64);
+        let a = parse_args(&sv(&["explore", "--strategy", "knn", "--k", "1"])).unwrap();
+        assert_eq!(a.cfg.strategy, StrategyKind::Knn);
+        assert_eq!(a.cfg.knn_k, 1);
+        let a = parse_args(&sv(&["explore", "--strategy", "permute", "--budget", "20"])).unwrap();
+        assert_eq!(a.cfg.strategy, StrategyKind::Permute);
+        // for the fixed strategy --budget is the stream length
+        let a = parse_args(&sv(&["explore", "--strategy", "fixed", "--budget", "77"])).unwrap();
+        assert_eq!(a.cfg.n_seqs, 77);
+        // …so passing both knobs with different values is ambiguous
+        assert!(parse_args(&sv(&[
+            "explore", "--strategy", "fixed", "--seqs", "100", "--budget", "50",
+        ]))
+        .is_err());
+        // --full sets the stream length too: shrinking it with --budget
+        // must be refused, not silently applied
+        assert!(parse_args(&sv(&["explore", "--full", "--budget", "50"])).is_err());
+        // for the adaptive strategies the two knobs are independent
+        // (--seqs sizes the reference exploration, --budget the search)
+        assert!(parse_args(&sv(&[
+            "explore", "--strategy", "knn", "--seqs", "100", "--budget", "50",
+        ]))
+        .is_ok());
+        // bad values
+        assert!(parse_args(&sv(&["explore", "--strategy", "genetic"])).is_err());
+        assert!(parse_args(&sv(&["explore", "--budget", "0"])).is_err());
+        assert!(parse_args(&sv(&["explore", "--k", "0"])).is_err());
+        // strategy flags are explore-only
+        assert!(parse_args(&sv(&["fig2", "--strategy", "hillclimb"])).is_err());
+        assert!(parse_args(&sv(&["fig2", "--budget", "5"])).is_err());
+        assert!(parse_args(&sv(&["merge", "a.json", "--k", "3"])).is_err());
+        // sharding partitions the fixed grid only
+        assert!(parse_args(&sv(&[
+            "explore", "--strategy", "hillclimb", "--shard", "1/2", "--emit-summary", "x.json",
+        ]))
+        .is_err());
+        // shard files embed/describe the fixed stream: adaptive
+        // strategies cannot emit them
+        assert!(parse_args(&sv(&[
+            "explore", "--strategy", "knn", "--emit-summary", "x.json",
+        ]))
+        .is_err());
     }
 
     #[test]

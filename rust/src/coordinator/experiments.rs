@@ -7,10 +7,12 @@ use std::sync::Mutex;
 
 use crate::bench_suite::{all_benchmarks, model_time_us, Benchmark, Variant};
 use crate::dse::engine::{self, CacheShards, EvalContext};
-use crate::dse::permute::PermutationStudy;
 use crate::dse::shard::{ShardRun, ShardSpec};
+use crate::dse::strategy::{
+    HillClimb, KnnSeeded, Permute, PermutationStudy, SearchStrategy, StrategyKind, DEFAULT_ROUND,
+};
 use crate::dse::{minimize_sequence, permutation_study, ExplorationSummary, Explorer, SeqGen};
-use crate::features::{extract_features, rank_by_similarity, FeatureVector, IterGraph};
+use crate::features::{extract_features, rank_neighbors, FeatureVector, IterGraph};
 use crate::passes::manager::standard_level;
 use crate::runtime::{golden_buffers, GoldenRunner};
 use crate::sim::target::Target;
@@ -37,6 +39,15 @@ pub struct ExpConfig {
     /// (`--shard I/N`); `None` = the whole grid. Only `repro explore`
     /// honours it — shard files are folded back by `repro merge`.
     pub shard: Option<ShardSpec>,
+    /// which search strategy `repro explore` drives (`--strategy`);
+    /// everything but `Fixed` is adaptive and cannot be sharded
+    pub strategy: StrategyKind,
+    /// evaluation budget *per benchmark* for adaptive strategies
+    /// (`--budget`); 0 = default to `n_seqs`. For `--strategy fixed`
+    /// the CLI folds it into `n_seqs` at parse time.
+    pub budget: usize,
+    /// neighbor count for `--strategy knn` (`--k`, §4.2 uses 1 and 3)
+    pub knn_k: usize,
 }
 
 impl Default for ExpConfig {
@@ -50,6 +61,9 @@ impl Default for ExpConfig {
             jobs: 0,
             verify_each: false,
             shard: None,
+            strategy: StrategyKind::Fixed,
+            budget: 0,
+            knn_k: 3,
         }
     }
 }
@@ -121,17 +135,97 @@ impl ExpCtx {
         self.explorers.get_mut(name).expect("known benchmark")
     }
 
-    /// Batched parallel exploration of the shared stream across all
-    /// benchmarks (the engine entry point every figure driver goes
-    /// through). Seeds the per-benchmark caches, so the follow-up
-    /// figure-specific evaluations mostly hit.
-    pub fn explore_all(&self) -> Vec<ExplorationSummary> {
-        let parts: Vec<(&EvalContext, &CacheShards)> = self
-            .benchmarks
+    /// The engine's view of every benchmark: `(EvalContext, CacheShards)`
+    /// pairs in benchmark order — what `engine::run` / `explore_pairs`
+    /// consume.
+    pub fn parts(&self) -> Vec<(&EvalContext, &CacheShards)> {
+        self.benchmarks
             .iter()
             .map(|b| self.explorers[b.name].parts())
-            .collect();
-        engine::explore_pairs(&parts, &self.stream, self.cfg.jobs)
+            .collect()
+    }
+
+    /// Batched parallel exploration of the shared stream across all
+    /// benchmarks (the entry point every figure driver goes through) —
+    /// semantically the
+    /// [`FixedStream`](crate::dse::strategy::FixedStream) strategy
+    /// through `engine::run`
+    /// (golden-tested bit-identical), implemented via the zero-copy
+    /// grid walk so the shared stream is not duplicated per benchmark
+    /// at `--full` scale. Seeds the per-benchmark caches, so the
+    /// follow-up figure-specific evaluations mostly hit.
+    pub fn explore_all(&self) -> Vec<ExplorationSummary> {
+        engine::explore_pairs(&self.parts(), &self.stream, self.cfg.jobs)
+    }
+
+    /// Drive any [`SearchStrategy`] over all benchmarks, capped at
+    /// `budget` total evaluations (`usize::MAX` = let the strategy
+    /// exhaust itself).
+    pub fn run_strategy(
+        &self,
+        strategy: &mut dyn SearchStrategy,
+        budget: usize,
+    ) -> Vec<ExplorationSummary> {
+        engine::run(strategy, &self.parts(), budget, self.cfg.jobs)
+    }
+
+    /// The per-benchmark evaluation budget adaptive strategies work
+    /// with: `--budget`, defaulting to the stream length.
+    pub fn budget_per_bench(&self) -> usize {
+        if self.cfg.budget == 0 {
+            self.cfg.n_seqs
+        } else {
+            self.cfg.budget
+        }
+    }
+
+    /// `repro explore --strategy …` end to end: construct the configured
+    /// strategy and run it. The adaptive strategies that need reference
+    /// winners (`permute` seeds permutations of each benchmark's best
+    /// order; `knn` seeds from the winners of the nearest reference
+    /// benchmarks, §4.2) first run the shared-stream exploration to
+    /// obtain them — the same protocol the paper uses, and every phase
+    /// is deterministic at any `--jobs` level.
+    pub fn explore_strategy(&self) -> Vec<ExplorationSummary> {
+        let nb = self.benchmarks.len();
+        let per_bench = self.budget_per_bench();
+        match self.cfg.strategy {
+            StrategyKind::Fixed => self.explore_all(),
+            StrategyKind::HillClimb => {
+                let mut s = HillClimb::new(nb, self.cfg.seed ^ 0xC11B, DEFAULT_ROUND);
+                self.run_strategy(&mut s, per_bench * nb)
+            }
+            StrategyKind::Permute => {
+                let bases = winning_sequences(&self.explore_all());
+                let mut s = Permute::new(bases, per_bench.saturating_sub(1), self.cfg.seed ^ 0x515);
+                self.run_strategy(&mut s, per_bench * nb)
+            }
+            StrategyKind::Knn => {
+                let winners = winning_sequences(&self.explore_all());
+                let feats = self.feature_vectors();
+                let mut s = KnnSeeded::new(
+                    &feats,
+                    &winners,
+                    self.cfg.knn_k,
+                    self.cfg.seed ^ 0x4A2,
+                    DEFAULT_ROUND,
+                );
+                self.run_strategy(&mut s, per_bench * nb)
+            }
+        }
+    }
+
+    /// MILEPOST-style feature vectors of every benchmark's unoptimized
+    /// OpenCL build, in benchmark order (§4.1 — shared by fig7 and the
+    /// kNN strategy).
+    pub fn feature_vectors(&self) -> Vec<(String, FeatureVector)> {
+        self.benchmarks
+            .iter()
+            .map(|b| {
+                let built = b.build_small(Variant::OpenCl);
+                (b.name.to_string(), extract_features(&built.module))
+            })
+            .collect()
     }
 
     /// Evaluate this process's shard of the grid (`cfg.shard`, defaulting
@@ -140,11 +234,7 @@ impl ExpCtx {
     /// attribution is replayed over the combined stream at merge time.
     pub fn explore_shard(&self) -> ShardRun {
         let spec = self.cfg.shard.unwrap_or_else(ShardSpec::full);
-        let parts: Vec<(&EvalContext, &CacheShards)> = self
-            .benchmarks
-            .iter()
-            .map(|b| self.explorers[b.name].parts())
-            .collect();
+        let parts = self.parts();
         // per-benchmark provenance: the AOT loader falls back to the
         // interpreter per benchmark, and merge refuses mixed sources
         let goldens: Vec<&str> = self
@@ -191,6 +281,15 @@ impl ExpCtx {
             (seq + s, ptx + p)
         })
     }
+}
+
+/// Each summary's winning sequence (`None` = baseline won) — the
+/// reference pool the permute/knn strategies seed from.
+pub fn winning_sequences(summaries: &[ExplorationSummary]) -> Vec<Option<Vec<&'static str>>> {
+    summaries
+        .iter()
+        .map(|s| s.winner.sequence().map(|q| q.to_vec()))
+        .collect()
 }
 
 // ------------------------------------------------------------ Fig. 2 + Table 1
@@ -440,14 +539,7 @@ pub struct Fig7Result {
 /// random selection vs IterGraph.
 pub fn fig7_features(ctx: &mut ExpCtx, table1: &[Fig2Row]) -> Fig7Result {
     // feature vectors of all benchmarks (unoptimized OpenCL IR)
-    let feats: Vec<(String, FeatureVector)> = ctx
-        .benchmarks
-        .iter()
-        .map(|b| {
-            let built = b.build_small(Variant::OpenCl);
-            (b.name.to_string(), extract_features(&built.module))
-        })
-        .collect();
+    let feats: Vec<(String, FeatureVector)> = ctx.feature_vectors();
     // a benchmark whose DSE found nothing suggests the empty order (-O0)
     let seq_of: HashMap<String, Vec<&'static str>> = table1
         .iter()
@@ -461,14 +553,16 @@ pub fn fig7_features(ctx: &mut ExpCtx, table1: &[Fig2Row]) -> Fig7Result {
 
     let bench_names: Vec<String> = feats.iter().map(|(n, _)| n.clone()).collect();
     for (qi, qname) in bench_names.iter().enumerate() {
-        // leave-one-out reference set
-        let refs: Vec<(String, FeatureVector)> = feats
+        // leave-one-out reference set — only the names are needed here
+        // (the feature-vector side lives inside rank_neighbors)
+        let refs: Vec<&String> = bench_names
             .iter()
             .enumerate()
             .filter(|(i, _)| *i != qi)
-            .map(|(_, x)| x.clone())
+            .map(|(_, n)| n)
             .collect();
-        let order = rank_by_similarity(&feats[qi].1, &refs);
+        // the same leave-one-out ranking the KnnSeeded strategy uses
+        let order = rank_neighbors(qi, &feats);
         let base = ctx.explorer(qname).baseline_time_us;
 
         // ---- kNN: evaluate the K most-similar benchmarks' sequences,
@@ -476,8 +570,8 @@ pub fn fig7_features(ctx: &mut ExpCtx, table1: &[Fig2Row]) -> Fig7Result {
         {
             let mut cur = base;
             let mut prefix = Vec::new();
-            for &ri in &order {
-                let seq = seq_of[&refs[ri].0].clone();
+            for &(gi, _sim) in &order {
+                let seq = seq_of[&feats[gi].0].clone();
                 let ev = ctx.explorer(qname).evaluate(&seq);
                 if ev.status.is_ok() {
                     cur = cur.min(ev.time_us);
@@ -500,7 +594,7 @@ pub fn fig7_features(ctx: &mut ExpCtx, table1: &[Fig2Row]) -> Fig7Result {
                 let mut cur = base;
                 let mut prefix = Vec::new();
                 for &ri in &idx {
-                    let seq = seq_of[&refs[ri].0].clone();
+                    let seq = seq_of[refs[ri]].clone();
                     let ev = ctx.explorer(qname).evaluate(&seq);
                     if ev.status.is_ok() {
                         cur = cur.min(ev.time_us);
@@ -521,7 +615,7 @@ pub fn fig7_features(ctx: &mut ExpCtx, table1: &[Fig2Row]) -> Fig7Result {
         {
             let train: Vec<Vec<&'static str>> = refs
                 .iter()
-                .map(|(n, _)| seq_of[n].clone())
+                .map(|&n| seq_of[n].clone())
                 .collect();
             let graph = IterGraph::build(&train);
             let samples = graph.sample_k(*ks.last().unwrap(), ctx.cfg.seed ^ 0x16E2);
@@ -574,8 +668,7 @@ mod tests {
             n_perms: 10,
             n_random_draws: 5,
             jobs: 2,
-            verify_each: false,
-            shard: None,
+            ..ExpConfig::default()
         })
     }
 

@@ -7,7 +7,7 @@ use std::path::Path;
 use super::experiments::{
     fig2_geomeans, Fig2Row, Fig3Matrix, Fig4Scatter, Fig7Result, ProblemStats,
 };
-use crate::dse::permute::{histogram, PermutationStudy};
+use crate::dse::strategy::{histogram, PermutationStudy};
 use crate::dse::ExplorationSummary;
 use crate::util::{geomean, Json};
 
@@ -17,6 +17,19 @@ pub fn write_json(dir: &Path, name: &str, j: &Json) -> std::io::Result<()> {
 }
 
 // ----------------------------------------------------- explore / merge
+
+/// [`render_explore`] with a strategy-run headline: which strategy ran
+/// and how many evaluations each benchmark's summary folds over (the
+/// per-benchmark proposal streams of adaptive strategies need not have
+/// equal lengths).
+pub fn render_explore_strategy(strategy: &str, summaries: &[ExplorationSummary]) -> String {
+    let total: usize = summaries.iter().map(|s| s.evaluations.len()).sum();
+    format!(
+        "strategy {strategy}: {total} evaluations across {} benchmark(s)\n{}",
+        summaries.len(),
+        render_explore(summaries)
+    )
+}
 
 /// The `repro explore` / `repro merge` console table: one row per
 /// benchmark straight off the [`ExplorationSummary`]s (no -OX probes or

@@ -11,17 +11,26 @@
 //! * [`CacheShards`] — the two-level evaluation cache (per-sequence memo
 //!   + generated-code/vPTX verdict cache), sharded behind mutexes so
 //!   concurrent workers rarely contend.
-//! * [`explore_all`] / [`explore_pairs`] — the batched entry points: a
-//!   `std::thread::scope` worker pool evaluates (benchmark × sequence)
-//!   work items concurrently under a [`Scheduler`]. The default is a
-//!   work-stealing scheduler with per-benchmark worker affinity: each
-//!   worker owns a deque pre-filled with the benchmarks whose index
-//!   hashes to it, so consecutive items a worker processes usually share
-//!   an [`EvalContext`] (cache-warm module clones and golden buffers);
-//!   an idle worker steals from the back of the richest deque. The
-//!   legacy fair-but-cache-cold atomic cursor survives as
-//!   [`Scheduler::Cursor`] for the `cargo bench --bench engine`
-//!   ablation.
+//! * [`run`] — the strategy loop: a
+//!   [`SearchStrategy`](crate::dse::strategy::SearchStrategy) proposes
+//!   batches of `(benchmark, sequence)` candidates, the pool evaluates
+//!   each batch, and the observations are replayed back in proposal
+//!   order.
+//! * [`explore_pairs`] — the pre-materialized grid walk: semantically
+//!   the [`FixedStream`](crate::dse::strategy::FixedStream) instance of
+//!   [`run`] (golden-tested bit-identical), kept as the
+//!   [`explore_all`]/shard/bench entry point because it summarizes
+//!   against the one shared stream instead of per-benchmark proposal
+//!   copies. A `std::thread::scope` worker pool
+//!   evaluates (benchmark × sequence) work items concurrently under a
+//!   [`Scheduler`]. The default is a work-stealing scheduler with
+//!   per-benchmark worker affinity: each worker owns a deque pre-filled
+//!   with the benchmarks whose index hashes to it, so consecutive items
+//!   a worker processes usually share an [`EvalContext`] (cache-warm
+//!   module clones and golden buffers); an idle worker steals from the
+//!   back of the richest deque. The legacy fair-but-cache-cold atomic
+//!   cursor survives as [`Scheduler::Cursor`] for the
+//!   `cargo bench --bench engine` ablation.
 //! * [`explore_shard`] — the distributed entry point: evaluates only the
 //!   grid items a [`crate::dse::shard::ShardSpec`] owns, for
 //!   `repro explore --shard I/N` / `repro merge`.
@@ -53,6 +62,7 @@ use crate::sim::target::Target;
 use crate::util::fnv1a;
 
 use super::explorer::{EvalStatus, Evaluation, ExplorationSummary, Winner};
+use super::strategy::{Proposal, SearchStrategy};
 
 /// The paper's DSE timeout: candidates slower than 20× baseline are cut
 /// off, and the validation-run step budget derives from the same factor.
@@ -445,28 +455,28 @@ pub enum Scheduler {
     WorkStealing,
 }
 
-/// Evaluate a set of grid items (`item = bi * stream.len() + si`) with
-/// `jobs` workers under `sched`, returning `(bi, si, eval)` triples in
-/// unspecified order. The shared building block behind
-/// [`explore_pairs`] (all items) and [`explore_shard`] (a shard's items).
-fn evaluate_items(
-    parts: &[(&EvalContext, &CacheShards)],
-    stream: &[Vec<&'static str>],
-    items: &[usize],
+/// The shared worker pool: evaluate `items` (opaque indices) with
+/// `jobs` workers under `sched`, returning `(item, result)` pairs in
+/// unspecified order. `affinity(item)` names the benchmark an item
+/// belongs to — the work-stealing scheduler seeds worker
+/// `affinity(item) % jobs`'s deque with it, in `items` order, so one
+/// worker streams through a benchmark's items back to back. Both the
+/// grid walk ([`evaluate_items`]) and the strategy batches
+/// ([`evaluate_batch`]) run through here.
+fn run_pool<T, F, A>(
     jobs: usize,
+    items: &[usize],
+    affinity: A,
+    eval_one: F,
     sched: Scheduler,
-) -> Vec<(usize, usize, Evaluation)> {
-    let ns = stream.len();
-    let jobs = resolve_jobs(jobs).min(items.len().max(1));
-    let eval_one = |i: usize| {
-        let (bi, si) = (i / ns, i % ns);
-        let (cx, cache) = parts[bi];
-        (bi, si, cx.evaluate(&stream[si], cache))
-    };
-    if jobs <= 1 {
-        return items.iter().map(|&i| eval_one(i)).collect();
-    }
-    let per_worker: Vec<Vec<(usize, usize, Evaluation)>> = match sched {
+) -> Vec<(usize, T)>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+    A: Fn(usize) -> usize,
+{
+    let eval_one = &eval_one;
+    let per_worker: Vec<Vec<(usize, T)>> = match sched {
         Scheduler::Cursor => {
             let next = AtomicUsize::new(0);
             std::thread::scope(|s| {
@@ -479,7 +489,7 @@ fn evaluate_items(
                                 if k >= items.len() {
                                     break;
                                 }
-                                out.push(eval_one(items[k]));
+                                out.push((items[k], eval_one(items[k])));
                             }
                             out
                         })
@@ -493,12 +503,12 @@ fn evaluate_items(
         }
         Scheduler::WorkStealing => {
             // Seed the deques: benchmark bi's items land on worker
-            // bi % jobs, in stream order, so the owner drains them
+            // bi % jobs, in `items` order, so the owner drains them
             // front-to-back against one cache-warm EvalContext.
             let queues: Vec<Mutex<VecDeque<usize>>> =
                 (0..jobs).map(|_| Mutex::new(VecDeque::new())).collect();
             for &i in items {
-                let w = (i / ns) % jobs;
+                let w = affinity(i) % jobs;
                 queues[w].lock().unwrap().push_back(i);
             }
             let queues = &queues;
@@ -510,7 +520,7 @@ fn evaluate_items(
                             loop {
                                 let own = queues[w].lock().unwrap().pop_front();
                                 if let Some(i) = own {
-                                    out.push(eval_one(i));
+                                    out.push((i, eval_one(i)));
                                     continue;
                                 }
                                 // Own deque dry: steal from the richest.
@@ -554,7 +564,7 @@ fn evaluate_items(
                                         own.push_back(i);
                                     }
                                 }
-                                out.push(eval_one(first));
+                                out.push((first, eval_one(first)));
                             }
                             out
                         })
@@ -568,6 +578,61 @@ fn evaluate_items(
         }
     };
     per_worker.into_iter().flatten().collect()
+}
+
+/// Evaluate a set of grid items (`item = bi * stream.len() + si`) with
+/// `jobs` workers under `sched`, returning `(bi, si, eval)` triples in
+/// unspecified order. The grid instance of [`run_pool`], shared by
+/// [`explore_pairs`] (all items) and [`explore_shard`] (a shard's items).
+fn evaluate_items(
+    parts: &[(&EvalContext, &CacheShards)],
+    stream: &[Vec<&'static str>],
+    items: &[usize],
+    jobs: usize,
+    sched: Scheduler,
+) -> Vec<(usize, usize, Evaluation)> {
+    let ns = stream.len();
+    let jobs = resolve_jobs(jobs).min(items.len().max(1));
+    let eval_one = |i: usize| {
+        let (cx, cache) = parts[i / ns];
+        cx.evaluate(&stream[i % ns], cache)
+    };
+    if jobs <= 1 {
+        return items.iter().map(|&i| (i / ns, i % ns, eval_one(i))).collect();
+    }
+    run_pool(jobs, items, |i| i / ns, eval_one, sched)
+        .into_iter()
+        .map(|(i, e)| (i / ns, i % ns, e))
+        .collect()
+}
+
+/// Evaluate one strategy batch (proposal order in, evaluation order
+/// out). The batch instance of [`run_pool`]: items are batch positions,
+/// affinity is each proposal's benchmark, and the results are merged
+/// back by position — never completion order — so the output is
+/// identical for any `jobs`.
+fn evaluate_batch(
+    parts: &[(&EvalContext, &CacheShards)],
+    batch: &[Proposal],
+    jobs: usize,
+) -> Vec<Evaluation> {
+    let jobs = resolve_jobs(jobs).min(batch.len().max(1));
+    let eval_one = |k: usize| {
+        let p = &batch[k];
+        let (cx, cache) = parts[p.bench];
+        cx.evaluate(&p.seq, cache)
+    };
+    if jobs <= 1 {
+        return (0..batch.len()).map(eval_one).collect();
+    }
+    let items: Vec<usize> = (0..batch.len()).collect();
+    let mut out: Vec<Option<Evaluation>> = vec![None; batch.len()];
+    for (k, e) in run_pool(jobs, &items, |k| batch[k].bench, eval_one, Scheduler::WorkStealing) {
+        out[k] = Some(e);
+    }
+    out.into_iter()
+        .map(|o| o.expect("every batch item evaluated"))
+        .collect()
 }
 
 /// Batched exploration: evaluate every sequence of `stream` on every
@@ -602,6 +667,11 @@ pub fn explore_all(
     let caches: Vec<CacheShards> = ctxs.iter().map(|_| CacheShards::new()).collect();
     let parts: Vec<(&EvalContext, &CacheShards)> =
         ctxs.iter().zip(caches.iter()).collect();
+    // Semantically this is `run(FixedStream)` — golden-tested
+    // bit-identical in rust/tests/strategy.rs — but the grid walk
+    // summarizes every benchmark against the one shared stream instead
+    // of retaining per-benchmark owned proposal streams, which matters
+    // at the paper's 15 × 10 000 scale.
     explore_pairs(&parts, stream, jobs)
 }
 
@@ -714,37 +784,13 @@ pub fn summarize_stream(
     evals_raw: Vec<Evaluation>,
 ) -> ExplorationSummary {
     assert_eq!(stream.len(), evals_raw.len());
-    let mut first_by_seq: HashMap<u64, Evaluation> = HashMap::new();
-    let mut first_by_ptx: HashMap<u64, (EvalStatus, f64)> = HashMap::new();
+    let mut replay = ReplayState::new();
     let mut evals = Vec::with_capacity(evals_raw.len());
     let (mut n_ok, mut n_crash, mut n_invalid, mut n_timeout, mut hits) = (0, 0, 0, 0, 0);
     let mut best_time = baseline_time_us;
     let mut winner = Winner::Baseline;
-    for (seq, mut e) in stream.iter().zip(evals_raw) {
-        let key = EvalContext::seq_key(seq);
-        // hash 0 = no code was produced (full-build crash): such an
-        // evaluation neither hits nor seeds the generated-code cache
-        let no_code = e.ptx_hash == 0;
-        if let Some(first) = first_by_seq.get(&key) {
-            // repeated sequence: the memo serves the first verdict
-            e = first.clone();
-            e.cached = true;
-        } else {
-            match first_by_ptx.get(&e.ptx_hash) {
-                Some((status, t)) if !no_code => {
-                    e.status = status.clone();
-                    e.time_us = *t;
-                    e.cached = true;
-                }
-                _ => {
-                    e.cached = false;
-                    if !no_code {
-                        first_by_ptx.insert(e.ptx_hash, (e.status.clone(), e.time_us));
-                    }
-                }
-            }
-            first_by_seq.insert(key, e.clone());
-        }
+    for (seq, raw) in stream.iter().zip(evals_raw) {
+        let e = replay.canon(seq, raw);
         if e.cached {
             hits += 1;
         }
@@ -774,6 +820,133 @@ pub fn summarize_stream(
         n_timeout,
         cache_hits: hits,
     }
+}
+
+/// Incremental stream-order cache-attribution replay — the mechanism
+/// inside [`summarize_stream`], exposed so the strategy loop
+/// ([`run`]) can canonicalize evaluations *before* handing them to
+/// `SearchStrategy::observe`. Repeats adopt the first occurrence's
+/// verdict (sequence memo first, then generated-code hash) and count
+/// as `cached`; the replay is idempotent, so folding already-canonical
+/// evaluations reproduces them bit for bit.
+struct ReplayState {
+    first_by_seq: HashMap<u64, Evaluation>,
+    first_by_ptx: HashMap<u64, (EvalStatus, f64)>,
+}
+
+impl ReplayState {
+    fn new() -> ReplayState {
+        ReplayState {
+            first_by_seq: HashMap::new(),
+            first_by_ptx: HashMap::new(),
+        }
+    }
+
+    /// Canonicalize the next evaluation of the stream.
+    fn canon(&mut self, seq: &[&'static str], mut e: Evaluation) -> Evaluation {
+        let key = EvalContext::seq_key(seq);
+        // hash 0 = no code was produced (full-build crash): such an
+        // evaluation neither hits nor seeds the generated-code cache
+        let no_code = e.ptx_hash == 0;
+        if let Some(first) = self.first_by_seq.get(&key) {
+            // repeated sequence: the memo serves the first verdict
+            e = first.clone();
+            e.cached = true;
+        } else {
+            match self.first_by_ptx.get(&e.ptx_hash) {
+                Some((status, t)) if !no_code => {
+                    e.status = status.clone();
+                    e.time_us = *t;
+                    e.cached = true;
+                }
+                _ => {
+                    e.cached = false;
+                    if !no_code {
+                        self.first_by_ptx
+                            .insert(e.ptx_hash, (e.status.clone(), e.time_us));
+                    }
+                }
+            }
+            self.first_by_seq.insert(key, e.clone());
+        }
+        e
+    }
+}
+
+// ------------------------------------------------------------------ strategy loop
+
+/// Drive a [`SearchStrategy`] to completion: ask it for batches of
+/// proposals, evaluate each batch through the work-stealing pool, and
+/// replay the observations back in proposal order. Returns one
+/// [`ExplorationSummary`] per context, folded over exactly the
+/// sequences the strategy proposed for that benchmark (in proposal
+/// order).
+///
+/// `budget` caps the total number of evaluations across all benchmarks
+/// (`usize::MAX` = let the strategy exhaust itself); proposals beyond
+/// it are dropped unobserved. The loop ends at the budget or at the
+/// first empty batch.
+///
+/// **Determinism.** Everything the strategy sees is independent of
+/// `jobs`: batches are evaluated in full before any observation is
+/// delivered, evaluations are pure functions of `(benchmark,
+/// sequence)`, and each one is canonicalized against the stream-order
+/// first occurrence (the `ReplayState` replay) before `observe` — so the
+/// `cached` flags match what the serial cache would have served. Same
+/// strategy + seed + budget ⇒ bit-identical summaries at every `jobs`
+/// level (property-tested in `rust/tests/strategy.rs`). Like
+/// [`explore_pairs`], the live caches are re-seeded with the canonical
+/// verdicts afterwards, so follow-up evaluations are
+/// scheduling-independent too.
+pub fn run(
+    strategy: &mut dyn SearchStrategy,
+    parts: &[(&EvalContext, &CacheShards)],
+    budget: usize,
+    jobs: usize,
+) -> Vec<ExplorationSummary> {
+    let nb = parts.len();
+    let mut streams: Vec<Vec<Vec<&'static str>>> = vec![Vec::new(); nb];
+    let mut evals: Vec<Vec<Evaluation>> = vec![Vec::new(); nb];
+    let mut replay: Vec<ReplayState> = (0..nb).map(|_| ReplayState::new()).collect();
+    let mut remaining = budget;
+    while remaining > 0 {
+        let mut batch = strategy.propose(remaining);
+        if batch.is_empty() {
+            break;
+        }
+        batch.truncate(remaining);
+        for p in &batch {
+            assert!(
+                p.bench < nb,
+                "strategy proposed benchmark {} but only {nb} are loaded",
+                p.bench
+            );
+        }
+        let results = evaluate_batch(parts, &batch, jobs);
+        remaining -= batch.len();
+        for (p, raw) in batch.into_iter().zip(results) {
+            let e = replay[p.bench].canon(&p.seq, raw);
+            strategy.observe(&p, &e);
+            // move the proposal's sequence into the per-bench stream —
+            // no second copy of what can be a full-grid batch
+            streams[p.bench].push(p.seq);
+            evals[p.bench].push(e);
+        }
+    }
+    let mut out = Vec::with_capacity(nb);
+    for (bi, &(cx, cache)) in parts.iter().enumerate() {
+        let summary = summarize(cx, &streams[bi], std::mem::take(&mut evals[bi]));
+        // Re-seed the live cache with the canonical verdicts, exactly as
+        // explore_pairs does (see the comment there).
+        for (seq, e) in streams[bi].iter().zip(&summary.evaluations) {
+            cache.put_seq(EvalContext::seq_key(seq), e.clone());
+            if e.ptx_hash != 0 {
+                cache.put_ptx(e.ptx_hash, e.status.clone(), e.time_us);
+            }
+        }
+        out.push(summary);
+    }
+    out
 }
 
 /// Everything the worker pool shares across threads must be `Send + Sync`

@@ -1,9 +1,12 @@
 //! The DSE evaluation loop: outcome types plus the per-benchmark
-//! [`Explorer`] façade over the parallel evaluation engine
-//! ([`crate::dse::engine`]). The `Explorer` owns one immutable
+//! [`Explorer`] façade over the strategy-driven evaluation engine
+//! ([`crate::dse::engine::run`]). The `Explorer` owns one immutable
 //! [`EvalContext`] and one [`CacheShards`] instance; batched drivers
 //! borrow both (via [`Explorer::parts`]) and fan evaluations out across
-//! a worker pool.
+//! a worker pool, while [`Explorer::explore`] /
+//! [`Explorer::explore_with`] run a
+//! [`SearchStrategy`](crate::dse::strategy::SearchStrategy) serially
+//! over this one benchmark.
 //!
 //! The outcome types ([`Evaluation`], [`ExplorationSummary`], [`Winner`],
 //! [`EvalStatus`]) carry std-only JSON (de)serialization so evaluation
@@ -18,6 +21,7 @@ use crate::sim::target::Target;
 use crate::util::Json;
 
 use super::engine::{self, CacheShards, EvalContext};
+use super::strategy::{FixedStream, SearchStrategy};
 
 /// Resolve a pass name from a JSON file back to its `&'static str`
 /// registry spelling (sequences are interned against the registry).
@@ -338,11 +342,27 @@ impl Explorer {
         self.ctx.evaluate(seq, &self.caches)
     }
 
-    /// Run the full exploration over a sequence stream. Single-worker
-    /// instance of the engine: bit-identical to `explore_all` at any
-    /// `--jobs` level.
+    /// Run the full exploration over a sequence stream: the
+    /// single-benchmark, single-worker [`FixedStream`] instance of
+    /// [`engine::run`] — bit-identical to `explore_all` at any `--jobs`
+    /// level.
     pub fn explore(&mut self, seqs: &[Vec<&'static str>]) -> ExplorationSummary {
-        engine::explore_pairs(&[(&self.ctx, &self.caches)], seqs, 1)
+        let mut strategy = FixedStream::new(seqs.to_vec(), 1);
+        engine::run(&mut strategy, &[(&self.ctx, &self.caches)], usize::MAX, 1)
+            .pop()
+            .expect("one summary per context")
+    }
+
+    /// Drive any [`SearchStrategy`] over this benchmark alone —
+    /// `strategy` proposals must use bench index 0. Returns the summary
+    /// of everything the strategy proposed, capped at `budget`
+    /// evaluations.
+    pub fn explore_with(
+        &mut self,
+        strategy: &mut dyn SearchStrategy,
+        budget: usize,
+    ) -> ExplorationSummary {
+        engine::run(strategy, &[(&self.ctx, &self.caches)], budget, 1)
             .pop()
             .expect("one summary per context")
     }

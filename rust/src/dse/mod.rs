@@ -13,26 +13,33 @@
 //!   4. measure with the GPU cost model at the paper-default dataset
 //!      shape, with a timeout at 20× the baseline.
 //!
-//! The per-candidate pipeline lives in [`engine::EvalContext`]; the
-//! batched, multi-worker drivers ([`engine::explore_all`]) spread the
-//! (benchmark × sequence) grid across a `std::thread::scope` pool — a
-//! work-stealing scheduler with per-benchmark worker affinity — with
-//! deterministic merging: `--jobs 1` and `--jobs N` are bit-identical.
-//! The same grid also partitions across *processes*: [`shard`] splits it
-//! round-robin (`repro explore --shard I/N`), serializes raw evaluation
-//! streams to JSON, and folds shard files back into summaries that are
-//! bit-identical to a single-process run (`repro merge`).
+//! The per-candidate pipeline lives in [`engine::EvalContext`]. What to
+//! evaluate is decided by a pluggable [`strategy::SearchStrategy`]
+//! (`repro explore --strategy fixed|permute|hillclimb|knn`): the engine
+//! loop ([`engine::run`]) asks the strategy for batches of proposals,
+//! spreads each batch across a `std::thread::scope` pool — a
+//! work-stealing scheduler with per-benchmark worker affinity — and
+//! replays the observations in proposal order, so `--jobs 1` and
+//! `--jobs N` are bit-identical for *every* strategy. The
+//! pre-materialized shared-stream protocol is the
+//! [`strategy::FixedStream`] instance; its grid also partitions across
+//! *processes*: [`shard`] splits it round-robin (`repro explore --shard
+//! I/N`), serializes raw evaluation streams to JSON (full stream or the
+//! compact `{strategy, seed, budget, stream_hash}` descriptor), and
+//! folds shard files back into summaries that are bit-identical to a
+//! single-process run (`repro merge`).
 
 pub mod engine;
 pub mod explorer;
-pub mod minimize;
-pub mod permute;
 pub mod seqgen;
 pub mod shard;
+pub mod strategy;
 
 pub use engine::{explore_all, CacheShards, EvalContext, Scheduler};
 pub use explorer::{EvalStatus, Evaluation, Explorer, ExplorationSummary, Winner};
-pub use minimize::minimize_sequence;
-pub use permute::permutation_study;
 pub use seqgen::SeqGen;
-pub use shard::{merge_shards, ShardRun, ShardSpec};
+pub use shard::{merge_shards, ShardRun, ShardSpec, StreamSpec};
+pub use strategy::{
+    minimize_sequence, permutation_study, FixedStream, HillClimb, KnnSeeded, Permute, Proposal,
+    SearchStrategy, StrategyKind,
+};

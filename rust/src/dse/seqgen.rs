@@ -42,6 +42,34 @@ impl SeqGen {
     }
 }
 
+/// Order-sensitive FNV-1a fingerprint of a sequence stream: passes
+/// joined by `,` within a sequence, sequences separated by `\n` —
+/// injective because pass names contain neither byte. Compact shard
+/// descriptors ([`crate::dse::shard::StreamSpec::Seeded`]) carry this
+/// so `repro merge` can prove its locally re-expanded
+/// `SeqGen::stream(seed, budget)` is the stream the shard actually
+/// evaluated (a mismatch means a different pass registry or generator
+/// version).
+pub fn stream_fingerprint(stream: &[Vec<&'static str>]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut fold = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    };
+    for seq in stream {
+        for (i, p) in seq.iter().enumerate() {
+            if i > 0 {
+                fold(b",");
+            }
+            fold(p.as_bytes());
+        }
+        fold(b"\n");
+    }
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -62,6 +90,22 @@ mod tests {
             let s = g.next_seq();
             assert!(!s.is_empty() && s.len() <= MAX_SEQ_LEN);
         }
+    }
+
+    #[test]
+    fn stream_fingerprint_is_order_and_boundary_sensitive() {
+        let a = SeqGen::stream(42, 10);
+        assert_eq!(stream_fingerprint(&a), stream_fingerprint(&a));
+        assert_ne!(stream_fingerprint(&a), stream_fingerprint(&SeqGen::stream(43, 10)));
+        assert_ne!(stream_fingerprint(&a), stream_fingerprint(&SeqGen::stream(42, 9)));
+        // sequence boundaries matter: ["licm","gvn"] vs ["licm"],["gvn"]
+        let joined = vec![vec!["licm", "gvn"]];
+        let split = vec![vec!["licm"], vec!["gvn"]];
+        assert_ne!(stream_fingerprint(&joined), stream_fingerprint(&split));
+        // order within a sequence matters
+        let swapped = vec![vec!["gvn", "licm"]];
+        assert_ne!(stream_fingerprint(&joined), stream_fingerprint(&swapped));
+        assert_eq!(stream_fingerprint(&[]), 0xcbf29ce484222325);
     }
 
     #[test]

@@ -32,6 +32,17 @@
 //! The files themselves are the vendored JSON layer ([`crate::util::Json`])
 //! end to end: f64s travel in shortest-round-trip decimal, hashes as hex
 //! strings, pass names re-interned against the registry on load.
+//!
+//! **Stream forms.** The shared stream travels in one of two forms
+//! ([`StreamSpec`]): the legacy v1 layout embeds the *full* stream in
+//! every shard file (~N× redundancy across an N-way split), while the
+//! v2 layout replaces it with a compact strategy descriptor
+//! `{strategy: "fixed", seed, budget, stream_hash}` that `merge`
+//! re-expands locally via `SeqGen::stream(seed, budget)` and verifies
+//! against the fingerprint. `merge` accepts both forms — and any mix of
+//! them — because validation compares the *expanded* streams; a
+//! descriptor-form merge is bit-identical to a full-stream merge
+//! (golden-tested in `rust/tests/engine.rs`).
 
 use std::fmt;
 
@@ -41,10 +52,59 @@ use super::engine::{self, CacheShards, EvalContext};
 use super::explorer::{
     hash_from_json, hash_to_json, seq_from_json, seq_to_json, Evaluation, ExplorationSummary,
 };
+use super::seqgen::{stream_fingerprint, SeqGen};
 
-/// Schema tag written into every shard file; `merge` refuses anything
-/// else rather than guessing at a layout.
+/// Schema tag of the legacy full-stream shard layout; `merge` refuses
+/// unknown schemas rather than guessing at a layout.
 pub const SHARD_SCHEMA: &str = "phaseord-shard-v1";
+
+/// Schema tag of the compact-descriptor shard layout (the form
+/// `repro explore --emit-summary` writes).
+pub const SHARD_SCHEMA_V2: &str = "phaseord-shard-v2";
+
+/// How a shard file carries the shared sequence stream.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StreamSpec {
+    /// Legacy v1 form: the full stream embedded in the file.
+    Inline(Vec<Vec<&'static str>>),
+    /// Compact v2 descriptor: the stream is `SeqGen::stream(seed,
+    /// budget)` (the shard's `seed` field), fingerprinted with
+    /// [`stream_fingerprint`] so a reader with a different pass
+    /// registry or generator fails loudly instead of folding against
+    /// the wrong stream.
+    Seeded { budget: usize, stream_hash: u64 },
+}
+
+impl StreamSpec {
+    /// Number of sequences in the stream, without expanding it.
+    pub fn n_seqs(&self) -> usize {
+        match self {
+            StreamSpec::Inline(s) => s.len(),
+            StreamSpec::Seeded { budget, .. } => *budget,
+        }
+    }
+
+    /// Materialize the stream. `seed` is the owning shard's stream
+    /// seed; for the descriptor form the re-expanded stream must match
+    /// the recorded fingerprint.
+    pub fn expand(&self, seed: u64) -> Result<Vec<Vec<&'static str>>, String> {
+        match self {
+            StreamSpec::Inline(s) => Ok(s.clone()),
+            StreamSpec::Seeded { budget, stream_hash } => {
+                let s = SeqGen::stream(seed, *budget);
+                let h = stream_fingerprint(&s);
+                if h != *stream_hash {
+                    return Err(format!(
+                        "stream descriptor mismatch: seed {seed:#x} × {budget} re-expands to \
+                         fingerprint {h:#018x} but the file says {stream_hash:#018x} — \
+                         different pass registry or generator version?"
+                    ));
+                }
+                Ok(s)
+            }
+        }
+    }
+}
 
 /// Which slice of the (benchmark × sequence) grid a process owns.
 ///
@@ -158,9 +218,10 @@ pub struct ShardRun {
     /// verdicts) for sequences that break the IR mid-pipeline, so shards
     /// must agree on it
     pub verify_each: bool,
-    /// the full shared sequence stream (not just the owned slice): the
-    /// merge fold needs every sequence to replay cache attribution
-    pub stream: Vec<Vec<&'static str>>,
+    /// the full shared sequence stream (not just the owned slice) —
+    /// embedded or as the compact seeded descriptor: the merge fold
+    /// needs every sequence to replay cache attribution
+    pub stream: StreamSpec,
     pub benches: Vec<ShardBench>,
 }
 
@@ -187,7 +248,7 @@ impl ShardRun {
             target: target.to_string(),
             seed,
             verify_each,
-            stream: stream.to_vec(),
+            stream: StreamSpec::Inline(stream.to_vec()),
             benches: parts
                 .iter()
                 .zip(goldens)
@@ -222,7 +283,7 @@ impl ShardRun {
             target: target.to_string(),
             seed,
             verify_each,
-            stream: stream.to_vec(),
+            stream: StreamSpec::Inline(stream.to_vec()),
             benches: summaries
                 .iter()
                 .zip(goldens)
@@ -244,17 +305,58 @@ impl ShardRun {
         self.benches.iter().map(|b| b.items.len()).sum()
     }
 
+    /// Number of sequences in the shared stream (both forms).
+    pub fn n_seqs(&self) -> usize {
+        self.stream.n_seqs()
+    }
+
+    /// Swap an embedded stream for the compact seeded descriptor — the
+    /// shard-file compaction that removes the ~N× stream redundancy of
+    /// an N-way split. Only sound when the embedded stream really is
+    /// `SeqGen::stream(self.seed, len)` (always true for streams the
+    /// CLI derives from `--seed`/`--seqs`), which is verified here;
+    /// hand-built streams stay inline. A descriptor-form run is
+    /// returned unchanged.
+    pub fn compact(mut self) -> Result<ShardRun, String> {
+        if let StreamSpec::Inline(s) = &self.stream {
+            if *s != SeqGen::stream(self.seed, s.len()) {
+                return Err(format!(
+                    "cannot compact: stream is not SeqGen::stream({:#x}, {})",
+                    self.seed,
+                    s.len()
+                ));
+            }
+            self.stream = StreamSpec::Seeded {
+                budget: s.len(),
+                stream_hash: stream_fingerprint(s),
+            };
+        }
+        Ok(self)
+    }
+
     pub fn to_json(&self) -> Json {
+        let (schema, stream_json) = match &self.stream {
+            StreamSpec::Inline(s) => (
+                SHARD_SCHEMA,
+                Json::Arr(s.iter().map(|q| seq_to_json(q)).collect()),
+            ),
+            StreamSpec::Seeded { budget, stream_hash } => (
+                SHARD_SCHEMA_V2,
+                Json::Obj(vec![
+                    ("strategy".into(), Json::s("fixed")),
+                    ("seed".into(), hash_to_json(self.seed)),
+                    ("budget".into(), Json::n(*budget as f64)),
+                    ("stream_hash".into(), hash_to_json(*stream_hash)),
+                ]),
+            ),
+        };
         Json::Obj(vec![
-            ("schema".into(), Json::s(SHARD_SCHEMA)),
+            ("schema".into(), Json::s(schema)),
             ("shard".into(), self.spec.to_json()),
             ("target".into(), Json::s(self.target.as_str())),
             ("seed".into(), hash_to_json(self.seed)), // u64: hex string, not f64
             ("verify_each".into(), Json::Bool(self.verify_each)),
-            (
-                "stream".into(),
-                Json::Arr(self.stream.iter().map(|s| seq_to_json(s)).collect()),
-            ),
+            ("stream".into(), stream_json),
             (
                 "benches".into(),
                 Json::Arr(
@@ -289,11 +391,11 @@ impl ShardRun {
 
     pub fn from_json(j: &Json) -> Result<ShardRun, String> {
         match j.get("schema").and_then(|v| v.as_str()) {
-            Some(SHARD_SCHEMA) => {}
+            Some(SHARD_SCHEMA) | Some(SHARD_SCHEMA_V2) => {}
             other => {
                 return Err(format!(
-                    "not a {SHARD_SCHEMA} file (schema: {other:?}) — was this written by \
-                     `repro explore --emit-summary`?"
+                    "not a {SHARD_SCHEMA}/{SHARD_SCHEMA_V2} file (schema: {other:?}) — was \
+                     this written by `repro explore --emit-summary`?"
                 ))
             }
         }
@@ -309,13 +411,47 @@ impl ShardRun {
             .get("verify_each")
             .and_then(|v| v.as_bool())
             .ok_or("shard file: missing verify_each")?;
-        let stream = j
-            .get("stream")
-            .and_then(|v| v.as_arr())
-            .ok_or("shard file: missing stream")?
-            .iter()
-            .map(seq_from_json)
-            .collect::<Result<Vec<_>, _>>()?;
+        let sj = j.get("stream").ok_or("shard file: missing stream")?;
+        let stream = if let Some(seqs) = sj.as_arr() {
+            // legacy/inline form: the full stream embedded in the file
+            StreamSpec::Inline(
+                seqs.iter()
+                    .map(seq_from_json)
+                    .collect::<Result<Vec<_>, _>>()?,
+            )
+        } else {
+            // compact descriptor form
+            match sj.get("strategy").and_then(|v| v.as_str()) {
+                Some("fixed") => {}
+                other => {
+                    return Err(format!(
+                        "shard file: stream descriptor strategy {other:?} — only \"fixed\" \
+                         streams can be re-expanded by merge"
+                    ))
+                }
+            }
+            let dseed = hash_from_json(
+                sj.get("seed")
+                    .ok_or("shard file: stream descriptor missing seed")?,
+            )
+            .map_err(|e| format!("shard file: stream descriptor seed: {e}"))?;
+            if dseed != seed {
+                return Err(format!(
+                    "shard file: stream descriptor seed {dseed:#x} disagrees with the \
+                     run seed {seed:#x}"
+                ));
+            }
+            let budget = sj
+                .get("budget")
+                .and_then(|v| v.as_usize())
+                .ok_or("shard file: stream descriptor budget must be a non-negative integer")?;
+            let stream_hash = hash_from_json(
+                sj.get("stream_hash")
+                    .ok_or("shard file: stream descriptor missing stream_hash")?,
+            )
+            .map_err(|e| format!("shard file: stream descriptor stream_hash: {e}"))?;
+            StreamSpec::Seeded { budget, stream_hash }
+        };
         let mut benches = Vec::new();
         for bj in j
             .get("benches")
@@ -384,6 +520,10 @@ impl ShardRun {
 /// the in-process engine does.
 pub fn merge_shards(shards: &[ShardRun]) -> Result<Vec<ExplorationSummary>, String> {
     let first = shards.first().ok_or("merge: no shard files given")?;
+    let first_stream = first
+        .stream
+        .expand(first.seed)
+        .map_err(|e| format!("merge: shard {}: {e}", first.spec))?;
     let count = first.spec.count;
     if shards.len() != count {
         return Err(format!(
@@ -420,7 +560,24 @@ pub fn merge_shards(shards: &[ShardRun]) -> Result<Vec<ExplorationSummary>, Stri
                     .to_string(),
             );
         }
-        if s.stream != first.stream {
+        // Streams must agree, but re-expansion is only needed for
+        // mixed forms: two descriptors with the same (already-checked)
+        // seed agree iff budget and fingerprint agree, and the first
+        // shard's expansion above already verified that fingerprint.
+        let same_stream = match (&s.stream, &first.stream) {
+            (
+                StreamSpec::Seeded { budget: a, stream_hash: ha },
+                StreamSpec::Seeded { budget: b, stream_hash: hb },
+            ) => a == b && ha == hb,
+            (StreamSpec::Inline(sa), _) => *sa == first_stream,
+            (StreamSpec::Seeded { .. }, StreamSpec::Inline(_)) => {
+                s.stream
+                    .expand(s.seed)
+                    .map_err(|e| format!("merge: shard {}: {e}", s.spec))?
+                    == first_stream
+            }
+        };
+        if !same_stream {
             return Err("merge: shards disagree on the sequence stream".to_string());
         }
         if s.benches.len() != first.benches.len()
@@ -449,7 +606,7 @@ pub fn merge_shards(shards: &[ShardRun]) -> Result<Vec<ExplorationSummary>, Stri
         }
     }
 
-    let ns = first.stream.len();
+    let ns = first_stream.len();
     let mut out = Vec::with_capacity(first.benches.len());
     for (bi, proto) in first.benches.iter().enumerate() {
         let mut row: Vec<Option<Evaluation>> = vec![None; ns];
@@ -491,7 +648,7 @@ pub fn merge_shards(shards: &[ShardRun]) -> Result<Vec<ExplorationSummary>, Stri
         out.push(engine::summarize_stream(
             &proto.bench,
             proto.baseline_time_us,
-            &first.stream,
+            &first_stream,
             evals,
         ));
     }
@@ -544,7 +701,7 @@ mod tests {
             target: "nvidia-gp104".to_string(),
             seed,
             verify_each: false,
-            stream: vec![vec!["licm"], vec!["gvn"]],
+            stream: StreamSpec::Inline(vec![vec!["licm"], vec!["gvn"]]),
             benches: vec![ShardBench {
                 bench: "GEMM".to_string(),
                 golden: "interpreter".to_string(),
@@ -569,7 +726,7 @@ mod tests {
             "target mismatch"
         );
         let mut other_stream = run(2, 2, 7);
-        other_stream.stream = vec![vec!["licm"], vec!["dse"]];
+        other_stream.stream = StreamSpec::Inline(vec![vec!["licm"], vec!["dse"]]);
         assert!(
             merge_shards(&[run(1, 2, 7), other_stream]).is_err(),
             "stream mismatch"
@@ -595,5 +752,105 @@ mod tests {
     fn shard_file_schema_is_checked() {
         let j = Json::parse(r#"{"schema": "something-else"}"#).unwrap();
         assert!(ShardRun::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn seeded_stream_spec_expands_and_checks_fingerprint() {
+        let stream = SeqGen::stream(0xD00D, 8);
+        let good = StreamSpec::Seeded {
+            budget: 8,
+            stream_hash: stream_fingerprint(&stream),
+        };
+        assert_eq!(good.n_seqs(), 8);
+        assert_eq!(good.expand(0xD00D).unwrap(), stream);
+        // wrong fingerprint (e.g. a different registry wrote the file)
+        let bad = StreamSpec::Seeded {
+            budget: 8,
+            stream_hash: 0x1234,
+        };
+        let err = bad.expand(0xD00D).unwrap_err();
+        assert!(err.contains("mismatch"), "{err}");
+        // wrong seed re-expands to a different stream → caught too
+        assert!(good.expand(0xD00E).is_err());
+        // inline expansion is the identity
+        let inline = StreamSpec::Inline(stream.clone());
+        assert_eq!(inline.expand(0).unwrap(), stream);
+    }
+
+    #[test]
+    fn compact_verifies_the_stream_is_seed_derived() {
+        let seed = 0xFEED;
+        let stream = SeqGen::stream(seed, 5);
+        let mk = |stream: Vec<Vec<&'static str>>| ShardRun {
+            spec: ShardSpec::full(),
+            target: "nvidia-gp104".to_string(),
+            seed,
+            verify_each: false,
+            stream: StreamSpec::Inline(stream),
+            benches: Vec::new(),
+        };
+        let c = mk(stream.clone()).compact().unwrap();
+        assert_eq!(
+            c.stream,
+            StreamSpec::Seeded {
+                budget: 5,
+                stream_hash: stream_fingerprint(&stream)
+            }
+        );
+        assert_eq!(c.n_seqs(), 5);
+        // compacting twice is a no-op
+        assert_eq!(c.clone().compact().unwrap().stream, c.stream);
+        // a hand-built stream cannot be compacted
+        assert!(mk(vec![vec!["licm"]]).compact().is_err());
+    }
+
+    #[test]
+    fn descriptor_shard_file_roundtrips_and_is_smaller() {
+        let seed = 0xC0FFEE;
+        let stream = SeqGen::stream(seed, 12);
+        let run = ShardRun {
+            spec: ShardSpec::full(),
+            target: "nvidia-gp104".to_string(),
+            seed,
+            verify_each: false,
+            stream: StreamSpec::Inline(stream.clone()),
+            benches: vec![ShardBench {
+                bench: "GEMM".to_string(),
+                golden: "interpreter".to_string(),
+                baseline_time_us: 100.0,
+                items: Vec::new(),
+            }],
+        };
+        let full_text = run.to_json().to_string();
+        assert!(full_text.contains(SHARD_SCHEMA));
+        let compacted = run.clone().compact().unwrap();
+        let desc_text = compacted.to_json().to_string();
+        assert!(desc_text.contains(SHARD_SCHEMA_V2));
+        assert!(desc_text.contains("stream_hash"));
+        assert!(
+            desc_text.len() < full_text.len() / 4,
+            "descriptor form should be much smaller: {} vs {} bytes",
+            desc_text.len(),
+            full_text.len()
+        );
+        // both forms parse back and expand to the same stream
+        let a = ShardRun::from_json(&Json::parse(&full_text).unwrap()).unwrap();
+        let b = ShardRun::from_json(&Json::parse(&desc_text).unwrap()).unwrap();
+        assert_eq!(a.stream.expand(seed).unwrap(), stream);
+        assert_eq!(b.stream, compacted.stream);
+        assert_eq!(b.stream.expand(seed).unwrap(), stream);
+        // a descriptor whose seed disagrees with the run seed is
+        // rejected (replacen(1) tampers only the top-level seed; the
+        // descriptor's copy keeps the original value)
+        let tampered = desc_text.replacen(
+            "\"seed\":\"0x0000000000c0ffee\"",
+            "\"seed\":\"0x0000000000c0ffed\"",
+            1,
+        );
+        assert_ne!(tampered, desc_text, "the seed field must be present to tamper");
+        assert!(
+            ShardRun::from_json(&Json::parse(&tampered).unwrap()).is_err(),
+            "mismatched descriptor seed must not parse"
+        );
     }
 }

@@ -1,0 +1,822 @@
+//! Pluggable search strategies over the evaluation engine.
+//!
+//! The paper's exploration is *iterative* (§3): a search process decides
+//! what to evaluate next, possibly based on what it has already seen —
+//! a pre-materialized random stream is just the simplest instance. This
+//! module is the strategy side of that split: a [`SearchStrategy`]
+//! proposes batches of `(benchmark, sequence)` candidates and observes
+//! the resulting [`Evaluation`]s; the engine ([`engine::run`](crate::dse::engine::run)) owns
+//! evaluation, parallelism, caching, and summarization.
+//!
+//! **Determinism contract.** Same strategy + same seed + any `--jobs`
+//! value ⇒ bit-identical
+//! [`ExplorationSummary`](crate::dse::ExplorationSummary)s. The engine
+//! guarantees
+//! its half by evaluating each proposed batch through the work-stealing
+//! pool (evaluations are pure functions of `(benchmark, sequence)`),
+//! canonicalizing cache attribution with the stream-order replay, and
+//! feeding observations back *in proposal order*. A strategy holds up
+//! its half by drawing randomness only from its own seeded [`Rng`]s
+//! during `propose` and by reacting only to the observations it is
+//! handed — never to wall clock, thread identity, or the raw live-cache
+//! state (the `cached` flags it observes are already canonicalized).
+//!
+//! Shipped strategies:
+//!
+//! * [`FixedStream`] — the paper's §3 protocol: a shared pre-materialized
+//!   sequence stream evaluated on every benchmark. Bit-identical to the
+//!   grid-walking [`engine::explore_pairs`](crate::dse::engine::explore_pairs) over the same stream.
+//! * [`Permute`] — the Fig. 5 study: each benchmark's base sequence plus
+//!   random permutations of it (order is the variable under test).
+//! * [`HillClimb`] — iterative local search: mutate the best-so-far
+//!   sequence (insert / delete / swap / replace of pass instances),
+//!   keeping the best validated candidate per benchmark.
+//! * [`KnnSeeded`] — §4.2: seed each benchmark's search with the winning
+//!   sequences of its k most-similar reference benchmarks (cosine
+//!   similarity over MILEPOST-style features), then refine locally.
+//!
+//! The strategy layer also owns the two post-passes over a finished
+//! search: [`minimize_sequence`] (Table 1's "passes that resulted in no
+//! performance improvement were eliminated") and the Fig. 5 reporting
+//! types ([`PermutationStudy`], [`histogram`]).
+
+use crate::features::{rank_neighbors, FeatureVector};
+use crate::passes::registry_names;
+use crate::util::Rng;
+
+use super::explorer::{Evaluation, Explorer};
+use super::seqgen::{SeqGen, MAX_SEQ_LEN};
+
+/// Mutations proposed per benchmark per adaptive round (the batch the
+/// engine evaluates in parallel between observations).
+pub const DEFAULT_ROUND: usize = 8;
+
+/// One candidate the strategy wants evaluated: a benchmark index (into
+/// the `parts` slice handed to [`engine::run`](crate::dse::engine::run)) and a phase order.
+#[derive(Debug, Clone)]
+pub struct Proposal {
+    pub bench: usize,
+    pub seq: Vec<&'static str>,
+}
+
+/// A search process over phase orders. The engine drives the loop:
+/// `propose` a batch (at most `budget` proposals — anything beyond it is
+/// dropped unevaluated), evaluate it in parallel, then `observe` every
+/// result in proposal order. An empty batch ends the search.
+pub trait SearchStrategy {
+    /// The CLI spelling of this strategy (`--strategy <name>`).
+    fn name(&self) -> &'static str;
+
+    /// The next batch of candidates. `budget` is the number of
+    /// evaluations the engine will still accept; returning more is
+    /// allowed but the excess is silently discarded (and never
+    /// observed), so batch sizing against `budget` keeps the strategy's
+    /// RNG aligned with what actually ran.
+    fn propose(&mut self, budget: usize) -> Vec<Proposal>;
+
+    /// Feed back one evaluated proposal. Called once per evaluated
+    /// proposal, in proposal order, after the whole batch completed —
+    /// the evaluation is canonicalized (stream-order cache replay), so
+    /// it is the same bytes at every `--jobs` level.
+    fn observe(&mut self, proposal: &Proposal, eval: &Evaluation);
+}
+
+/// The CLI-facing strategy selector (`repro explore --strategy …`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StrategyKind {
+    Fixed,
+    Permute,
+    HillClimb,
+    Knn,
+}
+
+impl StrategyKind {
+    pub fn parse(s: &str) -> Result<StrategyKind, String> {
+        match s {
+            "fixed" => Ok(StrategyKind::Fixed),
+            "permute" => Ok(StrategyKind::Permute),
+            "hillclimb" => Ok(StrategyKind::HillClimb),
+            "knn" => Ok(StrategyKind::Knn),
+            other => Err(format!(
+                "unknown strategy {other:?} (want fixed|permute|hillclimb|knn)"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StrategyKind::Fixed => "fixed",
+            StrategyKind::Permute => "permute",
+            StrategyKind::HillClimb => "hillclimb",
+            StrategyKind::Knn => "knn",
+        }
+    }
+}
+
+// ------------------------------------------------------------ FixedStream
+
+/// The non-adaptive baseline: a shared, pre-materialized sequence stream
+/// evaluated on every benchmark — exactly the paper's §3 protocol and
+/// the pre-strategy `explore_all` behaviour. Proposals walk the
+/// (benchmark × sequence) grid *sequence-major* (every benchmark's
+/// sequence 0, then every benchmark's sequence 1, …), so a
+/// budget-capped batch still spans all benchmarks and the work-stealing
+/// pool's per-benchmark affinity has every deque seeded; each
+/// benchmark's own proposal stream remains the shared stream in order,
+/// so the resulting summaries are bit-identical to
+/// [`engine::explore_pairs`](crate::dse::engine::explore_pairs) over
+/// the same stream (golden-tested in `rust/tests/strategy.rs`).
+pub struct FixedStream {
+    stream: Vec<Vec<&'static str>>,
+    n_benches: usize,
+    /// flat cursor over the `n_benches × stream.len()` grid
+    next: usize,
+}
+
+/// Cap on a single [`FixedStream`] batch: enough to keep every worker
+/// saturated, small enough that the in-flight owned copies of the
+/// stream's sequences stay bounded on the paper's 15 × 10 000 grid
+/// (the strategy is observation-free, so batch boundaries cannot
+/// change what it proposes).
+const FIXED_BATCH: usize = 4096;
+
+impl FixedStream {
+    pub fn new(stream: Vec<Vec<&'static str>>, n_benches: usize) -> FixedStream {
+        FixedStream {
+            stream,
+            n_benches,
+            next: 0,
+        }
+    }
+}
+
+impl SearchStrategy for FixedStream {
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+
+    fn propose(&mut self, budget: usize) -> Vec<Proposal> {
+        let ns = self.stream.len();
+        let total = ns * self.n_benches;
+        let budget = budget.min(FIXED_BATCH);
+        let mut out = Vec::new();
+        while self.next < total && out.len() < budget {
+            // sequence-major: si = next / nb, bench = next % nb
+            let (si, bi) = (self.next / self.n_benches, self.next % self.n_benches);
+            out.push(Proposal {
+                bench: bi,
+                seq: self.stream[si].clone(),
+            });
+            self.next += 1;
+        }
+        out
+    }
+
+    fn observe(&mut self, _proposal: &Proposal, _eval: &Evaluation) {}
+}
+
+// ------------------------------------------------------------ mutation
+
+/// One local edit of a phase order: insert / delete / swap / replace of
+/// a pass instance, uniformly chosen (ops that need a non-empty or
+/// longer sequence fall back to insert; insert at the 256-instance cap
+/// falls back to replace). The building block of [`HillClimb`] and the
+/// [`KnnSeeded`] refinement phase.
+fn mutate(
+    rng: &mut Rng,
+    names: &'static [&'static str],
+    seq: &[&'static str],
+) -> Vec<&'static str> {
+    let mut out = seq.to_vec();
+    match rng.below(4) {
+        1 if !out.is_empty() => {
+            let k = rng.below(out.len());
+            out.remove(k);
+        }
+        2 if out.len() >= 2 => {
+            // draw b from the other len-1 positions: a == b would be a
+            // no-op that wastes a budget slot on a guaranteed cache hit
+            let a = rng.below(out.len());
+            let mut b = rng.below(out.len() - 1);
+            if b >= a {
+                b += 1;
+            }
+            out.swap(a, b);
+        }
+        3 if !out.is_empty() => {
+            let k = rng.below(out.len());
+            out[k] = names[rng.below(names.len())];
+        }
+        _ => {
+            if out.len() >= MAX_SEQ_LEN {
+                let k = rng.below(out.len());
+                out[k] = names[rng.below(names.len())];
+            } else {
+                let pos = rng.below(out.len() + 1);
+                out.insert(pos, names[rng.below(names.len())]);
+            }
+        }
+    }
+    out
+}
+
+/// Per-benchmark local-search state: a seeded RNG plus the best
+/// validated candidate seen so far (seeded with the empty sequence —
+/// the `-O0` baseline — so "best" is always at least as good as not
+/// optimizing).
+struct Climber {
+    rng: Rng,
+    best_seq: Vec<&'static str>,
+    best_time: f64,
+}
+
+impl Climber {
+    fn new(seed: u64) -> Climber {
+        Climber {
+            rng: Rng::new(seed),
+            best_seq: Vec::new(),
+            best_time: f64::INFINITY,
+        }
+    }
+
+    fn next_candidate(&mut self, names: &'static [&'static str]) -> Vec<&'static str> {
+        mutate(&mut self.rng, names, &self.best_seq)
+    }
+
+    fn observe(&mut self, seq: &[&'static str], e: &Evaluation) {
+        if e.status.is_ok() && e.time_us < self.best_time {
+            self.best_time = e.time_us;
+            self.best_seq = seq.to_vec();
+        }
+    }
+}
+
+// ------------------------------------------------------------ HillClimb
+
+/// Iterative local search, the simplest adaptive strategy: per
+/// benchmark, keep the best-so-far sequence and propose
+/// [`DEFAULT_ROUND`]-sized batches of single-edit mutations of it
+/// (insert / delete / swap / replace). The first round proposes the
+/// empty sequence, anchoring "best" at the `-O0` baseline; a mutation
+/// is adopted only when it validates and is strictly faster.
+pub struct HillClimb {
+    climbers: Vec<Climber>,
+    names: &'static [&'static str],
+    round_size: usize,
+    bootstrapped: bool,
+}
+
+impl HillClimb {
+    pub fn new(n_benches: usize, seed: u64, round_size: usize) -> HillClimb {
+        HillClimb {
+            climbers: (0..n_benches)
+                .map(|bi| Climber::new(seed ^ (bi as u64).wrapping_mul(0x9E3779B97F4A7C15)))
+                .collect(),
+            names: registry_names(),
+            round_size: round_size.max(1),
+            bootstrapped: false,
+        }
+    }
+
+    /// The best validated `(sequence, time)` for a benchmark so far
+    /// (time is `INFINITY` until something — at least the bootstrap
+    /// empty sequence — has been observed).
+    pub fn best(&self, bench: usize) -> (&[&'static str], f64) {
+        let c = &self.climbers[bench];
+        (&c.best_seq, c.best_time)
+    }
+}
+
+impl SearchStrategy for HillClimb {
+    fn name(&self) -> &'static str {
+        "hillclimb"
+    }
+
+    fn propose(&mut self, budget: usize) -> Vec<Proposal> {
+        let mut out = Vec::new();
+        if !self.bootstrapped {
+            self.bootstrapped = true;
+            for bi in 0..self.climbers.len() {
+                if out.len() >= budget {
+                    return out;
+                }
+                out.push(Proposal {
+                    bench: bi,
+                    seq: Vec::new(),
+                });
+            }
+            return out;
+        }
+        // interleave benchmarks so a budget cut mid-round spreads evenly
+        for _ in 0..self.round_size {
+            for (bi, c) in self.climbers.iter_mut().enumerate() {
+                if out.len() >= budget {
+                    return out;
+                }
+                out.push(Proposal {
+                    bench: bi,
+                    seq: c.next_candidate(self.names),
+                });
+            }
+        }
+        out
+    }
+
+    fn observe(&mut self, proposal: &Proposal, eval: &Evaluation) {
+        self.climbers[proposal.bench].observe(&proposal.seq, eval);
+    }
+}
+
+// ------------------------------------------------------------ KnnSeeded
+
+/// §4.2's feature-based suggestion as a strategy: each benchmark's
+/// search is seeded with the winning sequences of its `k` most-similar
+/// reference benchmarks (cosine similarity over the MILEPOST-style
+/// feature vectors, leave-one-out), then refined with the same local
+/// mutations as [`HillClimb`]. A reference benchmark whose own search
+/// found no winner contributes the empty sequence (the paper's `-O0`
+/// fallback).
+pub struct KnnSeeded {
+    /// per query benchmark: the neighbor sequences to try, nearest first
+    seeds: Vec<Vec<Vec<&'static str>>>,
+    /// per query benchmark: how many seeds have been proposed
+    seed_next: Vec<usize>,
+    /// the bootstrap + refinement machinery, shared with [`HillClimb`]
+    /// by composition: its first round is the `-O0` anchor, its later
+    /// rounds mutate the best observed candidate (which, here, the
+    /// neighbor seeds have usually set)
+    climb: HillClimb,
+    bootstrapped: bool,
+}
+
+impl KnnSeeded {
+    /// `feats[i]` / `winners[i]` describe benchmark `i`: its feature
+    /// vector (with a display name) and the best sequence its own
+    /// exploration found (`None` = baseline won). Ranking is
+    /// leave-one-out within this set.
+    pub fn new(
+        feats: &[(String, FeatureVector)],
+        winners: &[Option<Vec<&'static str>>],
+        k: usize,
+        seed: u64,
+        round_size: usize,
+    ) -> KnnSeeded {
+        assert_eq!(
+            feats.len(),
+            winners.len(),
+            "one winner slot per feature vector"
+        );
+        let nb = feats.len();
+        let mut seeds = Vec::with_capacity(nb);
+        for qi in 0..nb {
+            // shared §4.2 leave-one-out ranking: global indices back
+            // into feats/winners, nearest first
+            seeds.push(
+                rank_neighbors(qi, feats)
+                    .iter()
+                    .take(k)
+                    .map(|&(gi, _sim)| winners[gi].clone().unwrap_or_default())
+                    .collect(),
+            );
+        }
+        KnnSeeded {
+            seeds,
+            seed_next: vec![0; nb],
+            climb: HillClimb::new(nb, seed, round_size),
+            bootstrapped: false,
+        }
+    }
+
+    /// The neighbor sequences queued for a benchmark (test hook).
+    pub fn seeds_for(&self, bench: usize) -> &[Vec<&'static str>] {
+        &self.seeds[bench]
+    }
+}
+
+impl SearchStrategy for KnnSeeded {
+    fn name(&self) -> &'static str {
+        "knn"
+    }
+
+    fn propose(&mut self, budget: usize) -> Vec<Proposal> {
+        // round 0: delegate the -O0 anchor to the climber's bootstrap
+        if !self.bootstrapped {
+            self.bootstrapped = true;
+            return self.climb.propose(budget);
+        }
+        // seeding rounds: one neighbor sequence per benchmark per round,
+        // nearest neighbor first
+        let mut out = Vec::new();
+        for bi in 0..self.seeds.len() {
+            if self.seed_next[bi] < self.seeds[bi].len() {
+                if out.len() >= budget {
+                    return out;
+                }
+                let seq = self.seeds[bi][self.seed_next[bi]].clone();
+                self.seed_next[bi] += 1;
+                out.push(Proposal { bench: bi, seq });
+            }
+        }
+        if !out.is_empty() {
+            return out;
+        }
+        // refinement: the climber's mutation rounds, now walking from
+        // the best seeded sequence its observations recorded
+        self.climb.propose(budget)
+    }
+
+    fn observe(&mut self, proposal: &Proposal, eval: &Evaluation) {
+        self.climb.observe(proposal, eval);
+    }
+}
+
+// ------------------------------------------------------------ Permute
+
+/// The Fig. 5 study as a strategy: per benchmark, propose the base
+/// sequence first (the reference the permutations are measured
+/// against), then random permutations of it. Non-adaptive — order is
+/// the variable under test, so nothing reacts to the observations.
+/// Benchmarks with no base (`None`: their exploration found no winner)
+/// are skipped, mirroring the paper's exclusion of 2DCONV/3DCONV/
+/// FDTD-2D.
+pub struct Permute {
+    bases: Vec<Option<Vec<&'static str>>>,
+    gens: Vec<SeqGen>,
+    n_perms: usize,
+    /// per bench: proposals emitted so far (0 = base next, `i` in
+    /// `1..=n_perms` = `i`-th permutation next)
+    emitted: Vec<usize>,
+}
+
+impl Permute {
+    /// Every benchmark's permutation generator is seeded with the same
+    /// `seed`, matching the original Fig. 5 driver (studies are
+    /// independent per benchmark).
+    pub fn new(bases: Vec<Option<Vec<&'static str>>>, n_perms: usize, seed: u64) -> Permute {
+        let n = bases.len();
+        Permute {
+            bases,
+            gens: (0..n).map(|_| SeqGen::new(seed)).collect(),
+            n_perms,
+            emitted: vec![0; n],
+        }
+    }
+}
+
+impl SearchStrategy for Permute {
+    fn name(&self) -> &'static str {
+        "permute"
+    }
+
+    fn propose(&mut self, budget: usize) -> Vec<Proposal> {
+        let mut out = Vec::new();
+        loop {
+            let mut progressed = false;
+            for bi in 0..self.bases.len() {
+                let Some(base) = &self.bases[bi] else { continue };
+                if self.emitted[bi] > self.n_perms {
+                    continue;
+                }
+                if out.len() >= budget {
+                    return out;
+                }
+                let seq = if self.emitted[bi] == 0 {
+                    base.clone()
+                } else {
+                    self.gens[bi].permute(base)
+                };
+                self.emitted[bi] += 1;
+                out.push(Proposal { bench: bi, seq });
+                progressed = true;
+            }
+            if !progressed {
+                return out;
+            }
+        }
+    }
+
+    fn observe(&mut self, _proposal: &Proposal, _eval: &Evaluation) {}
+}
+
+// ------------------------------------------------------------ Fig. 5 study
+
+/// Fig. 5 outcome: the impact of pass *order* — relative performance of
+/// random permutations of a benchmark's best sequence.
+#[derive(Debug, Clone)]
+pub struct PermutationStudy {
+    pub bench: String,
+    pub best_time_us: f64,
+    /// per-permutation relative performance: best_time / perm_time
+    /// (≤ 1; 0 encodes crash/invalid/timeout, plotted at y=0 like Fig. 4)
+    pub rel_perf: Vec<f64>,
+}
+
+/// Run the Fig. 5 study for one benchmark through the [`Permute`]
+/// strategy: evaluate `best_seq` plus `n_perms` random permutations of
+/// it and report the relative-performance distribution.
+pub fn permutation_study(
+    e: &mut Explorer,
+    best_seq: &[&'static str],
+    n_perms: usize,
+    seed: u64,
+) -> PermutationStudy {
+    let mut strategy = Permute::new(vec![Some(best_seq.to_vec())], n_perms, seed);
+    let summary = e.explore_with(&mut strategy, usize::MAX);
+    // evaluations[0] is the base sequence; the rest are its permutations
+    let best_time = summary.evaluations[0].time_us;
+    let rel_perf = summary.evaluations[1..]
+        .iter()
+        .map(|ev| {
+            if ev.status.is_ok() {
+                (best_time / ev.time_us).min(1.0)
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    PermutationStudy {
+        bench: e.name.clone(),
+        best_time_us: best_time,
+        rel_perf,
+    }
+}
+
+/// Histogram helper for the Fig. 5 rendering: bucket relative
+/// performance into `nbuckets` bins over (0, 1] plus a failure bin.
+pub fn histogram(rel_perf: &[f64], nbuckets: usize) -> Vec<(String, usize)> {
+    let mut out = vec![0usize; nbuckets + 1];
+    for &r in rel_perf {
+        if r <= 0.0 {
+            out[0] += 1;
+        } else {
+            let b = ((r * nbuckets as f64).ceil() as usize).clamp(1, nbuckets);
+            out[b] += 1;
+        }
+    }
+    let mut labelled = vec![("fail".to_string(), out[0])];
+    for b in 1..=nbuckets {
+        let lo = (b - 1) as f64 / nbuckets as f64;
+        let hi = b as f64 / nbuckets as f64;
+        labelled.push((format!("{:.0}-{:.0}%", lo * 100.0, hi * 100.0), out[b]));
+    }
+    labelled
+}
+
+// ------------------------------------------------------------ Minimize
+
+/// The `Minimize` post-pass over a winning sequence: "compiler passes
+/// that resulted in no performance improvement were eliminated from the
+/// compiler phase orders" (Table 1 caption). Greedy single-pass
+/// dropping: remove a pass if the sequence still validates and is not
+/// measurably slower. Run it on a strategy's winner after the search,
+/// not during it.
+pub fn minimize_sequence(e: &mut Explorer, seq: &[&'static str]) -> (Vec<&'static str>, f64) {
+    let mut cur: Vec<&'static str> = seq.to_vec();
+    let base = e.evaluate(&cur);
+    let mut cur_time = base.time_us;
+    loop {
+        let mut dropped = false;
+        let mut k = 0;
+        while k < cur.len() {
+            let mut cand = cur.clone();
+            cand.remove(k);
+            let ev = e.evaluate(&cand);
+            if ev.status.is_ok() && ev.time_us <= cur_time * 1.001 {
+                cur = cand;
+                cur_time = ev.time_us.min(cur_time);
+                dropped = true;
+            } else {
+                k += 1;
+            }
+        }
+        if !dropped {
+            break;
+        }
+    }
+    (cur, cur_time)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite::benchmark_by_name;
+    use crate::sim::target::Target;
+
+    fn explorer_for(name: &str) -> Explorer {
+        let b = benchmark_by_name(name).unwrap();
+        let golden = Explorer::golden_from_interpreter(&b);
+        Explorer::new(&b, Target::gp104(), golden)
+    }
+
+    #[test]
+    fn strategy_kind_parses_and_rejects() {
+        assert_eq!(StrategyKind::parse("fixed").unwrap(), StrategyKind::Fixed);
+        assert_eq!(StrategyKind::parse("permute").unwrap(), StrategyKind::Permute);
+        assert_eq!(
+            StrategyKind::parse("hillclimb").unwrap(),
+            StrategyKind::HillClimb
+        );
+        assert_eq!(StrategyKind::parse("knn").unwrap(), StrategyKind::Knn);
+        for k in [
+            StrategyKind::Fixed,
+            StrategyKind::Permute,
+            StrategyKind::HillClimb,
+            StrategyKind::Knn,
+        ] {
+            assert_eq!(StrategyKind::parse(k.name()).unwrap(), k);
+        }
+        assert!(StrategyKind::parse("genetic").is_err());
+        assert!(StrategyKind::parse("").is_err());
+    }
+
+    #[test]
+    fn fixed_stream_proposes_sequence_major_in_stream_order() {
+        let stream = vec![vec!["licm"], vec!["gvn"], vec!["dse"]];
+        let mut s = FixedStream::new(stream.clone(), 2);
+        // budget-limited batches continue where the last one stopped
+        let a = s.propose(4);
+        let b = s.propose(usize::MAX);
+        assert_eq!(a.len(), 4);
+        assert_eq!(b.len(), 2);
+        let all: Vec<Proposal> = a.into_iter().chain(b).collect();
+        for (k, p) in all.iter().enumerate() {
+            // sequence-major: batches interleave benchmarks…
+            assert_eq!(p.bench, k % 2);
+            assert_eq!(p.seq, stream[k / 2]);
+        }
+        // …while each benchmark's own proposal stream is the shared
+        // stream in order (the bit-identicality precondition)
+        for bench in 0..2 {
+            let per_bench: Vec<_> = all.iter().filter(|p| p.bench == bench).collect();
+            for (si, p) in per_bench.iter().enumerate() {
+                assert_eq!(p.seq, stream[si]);
+            }
+        }
+        assert!(s.propose(usize::MAX).is_empty(), "stream exhausted");
+    }
+
+    #[test]
+    fn mutate_stays_in_bounds_and_on_registry() {
+        let names = registry_names();
+        let mut rng = Rng::new(0xF1A7);
+        let mut seq: Vec<&'static str> = Vec::new();
+        for _ in 0..500 {
+            seq = mutate(&mut rng, names, &seq);
+            assert!(seq.len() <= MAX_SEQ_LEN);
+            for p in &seq {
+                assert!(names.contains(p), "{p} not in registry");
+            }
+        }
+        // a capped sequence must not grow past the cap
+        let full: Vec<&'static str> = (0..MAX_SEQ_LEN).map(|i| names[i % names.len()]).collect();
+        for _ in 0..50 {
+            let m = mutate(&mut rng, names, &full);
+            assert!(m.len() <= MAX_SEQ_LEN);
+        }
+    }
+
+    #[test]
+    fn hillclimb_bootstraps_with_the_empty_sequence_and_keeps_best() {
+        let mut s = HillClimb::new(2, 7, 3);
+        let boot = s.propose(usize::MAX);
+        assert_eq!(boot.len(), 2);
+        assert!(boot.iter().all(|p| p.seq.is_empty()));
+        // observing a fast valid result adopts it; a slower one does not
+        let fast = Evaluation {
+            status: crate::dse::EvalStatus::Ok,
+            time_us: 10.0,
+            ptx_hash: 1,
+            cached: false,
+        };
+        let slow = Evaluation {
+            time_us: 20.0,
+            ..fast.clone()
+        };
+        let p = Proposal {
+            bench: 0,
+            seq: vec!["licm"],
+        };
+        s.observe(&p, &fast);
+        assert_eq!(s.best(0), (&["licm"][..], 10.0));
+        let q = Proposal {
+            bench: 0,
+            seq: vec!["gvn"],
+        };
+        s.observe(&q, &slow);
+        assert_eq!(s.best(0).0, &["licm"][..], "slower candidate rejected");
+        // a failing faster candidate is rejected too
+        let bad = Evaluation {
+            status: crate::dse::EvalStatus::InvalidOutput,
+            time_us: 1.0,
+            ptx_hash: 2,
+            cached: false,
+        };
+        s.observe(&q, &bad);
+        assert_eq!(s.best(0).0, &["licm"][..]);
+        // round batches mutate the best-so-far, 3 per bench
+        let round = s.propose(usize::MAX);
+        assert_eq!(round.len(), 6);
+        assert_eq!(round.iter().filter(|p| p.bench == 0).count(), 3);
+    }
+
+    #[test]
+    fn knn_seeds_come_from_nearest_neighbors() {
+        let v = |f: &dyn Fn(usize) -> f64| {
+            let mut out = [0.0; crate::features::NUM_FEATURES];
+            for (i, slot) in out.iter_mut().enumerate() {
+                *slot = f(i);
+            }
+            out
+        };
+        let q = v(&|i| (i % 5) as f64);
+        let close = v(&|i| (i % 5) as f64 + 0.01);
+        let far = v(&|i| ((i * 13) % 7) as f64);
+        let feats = vec![
+            ("query".to_string(), q),
+            ("close".to_string(), close),
+            ("far".to_string(), far),
+        ];
+        let winners = vec![
+            None,
+            Some(vec!["licm", "gvn"]),
+            Some(vec!["dse"]),
+        ];
+        let s = KnnSeeded::new(&feats, &winners, 1, 0x11, DEFAULT_ROUND);
+        // query's single nearest neighbor is "close", so its winner seeds
+        assert_eq!(s.seeds_for(0), &[vec!["licm", "gvn"]]);
+        // a k larger than the reference set is clamped by take()
+        let s3 = KnnSeeded::new(&feats, &winners, 10, 0x11, DEFAULT_ROUND);
+        assert_eq!(s3.seeds_for(0).len(), 2);
+        // a winner-less neighbor contributes the -O0 fallback
+        let s_far = KnnSeeded::new(&feats, &winners, 2, 0x11, DEFAULT_ROUND);
+        assert_eq!(s_far.seeds_for(1).len(), 2);
+        assert!(s_far.seeds_for(1).contains(&Vec::new()), "query has no winner");
+    }
+
+    #[test]
+    fn permute_emits_base_then_permutations_per_bench() {
+        let base = vec!["licm", "dse", "gvn"];
+        let mut s = Permute::new(vec![Some(base.clone()), None], 4, 9);
+        let all = s.propose(usize::MAX);
+        // bench 1 has no base: skipped entirely
+        assert_eq!(all.len(), 5);
+        assert!(all.iter().all(|p| p.bench == 0));
+        assert_eq!(all[0].seq, base);
+        for p in &all[1..] {
+            let mut a = base.clone();
+            let mut b = p.seq.clone();
+            a.sort();
+            b.sort();
+            assert_eq!(a, b, "permutation preserves the multiset");
+        }
+        assert!(s.propose(usize::MAX).is_empty());
+    }
+
+    #[test]
+    fn permutations_degrade_or_match() {
+        let mut e = explorer_for("GEMM");
+        let best = vec!["cfl-anders-aa", "loop-reduce", "cfl-anders-aa", "licm"];
+        let study = permutation_study(&mut e, &best, 24, 99);
+        assert_eq!(study.rel_perf.len(), 24);
+        assert!(study.rel_perf.iter().all(|&r| (0.0..=1.0).contains(&r)));
+        // order matters: at least one permutation must be strictly worse
+        assert!(
+            study.rel_perf.iter().any(|&r| r < 0.999),
+            "some permutation should lose the promotion: {:?}",
+            study.rel_perf
+        );
+    }
+
+    #[test]
+    fn histogram_buckets_sum() {
+        let rel = vec![0.0, 0.1, 0.5, 0.95, 1.0, 1.0];
+        let h = histogram(&rel, 10);
+        let total: usize = h.iter().map(|(_, c)| c).sum();
+        assert_eq!(total, rel.len());
+        assert_eq!(h[0].1, 1); // one failure
+    }
+
+    #[test]
+    fn minimize_drops_noop_passes() {
+        let mut e = explorer_for("GEMM");
+        let seq = vec![
+            "print-memdeps",
+            "cfl-anders-aa",
+            "aa-eval",
+            "loop-reduce",
+            "cfl-anders-aa",
+            "licm",
+            "domtree",
+        ];
+        let before = e.evaluate(&seq);
+        let (min_seq, t) = minimize_sequence(&mut e, &seq);
+        assert!(t <= before.time_us * 1.001);
+        assert!(min_seq.len() < seq.len());
+        assert!(!min_seq.contains(&"print-memdeps"));
+        assert!(!min_seq.contains(&"aa-eval"));
+        assert!(!min_seq.contains(&"domtree"));
+        // the essential pair must survive
+        assert!(min_seq.contains(&"licm"));
+        assert!(min_seq.contains(&"cfl-anders-aa"));
+    }
+}

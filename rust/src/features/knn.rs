@@ -19,13 +19,18 @@ pub fn cosine_similarity(a: &FeatureVector, b: &FeatureVector) -> f64 {
 }
 
 /// Rank reference entries by descending similarity to the query.
-/// Returns indices into `refs`.
-pub fn rank_by_similarity(query: &FeatureVector, refs: &[(String, FeatureVector)]) -> Vec<usize> {
-    let mut idx: Vec<usize> = (0..refs.len()).collect();
-    let mut sims: Vec<f64> = refs
+/// Returns `(index into refs, cosine similarity)` pairs so consumers
+/// (the kNN-seeded search strategy, the fig7 report) can surface the
+/// similarity without recomputing it.
+pub fn rank_by_similarity(
+    query: &FeatureVector,
+    refs: &[(String, FeatureVector)],
+) -> Vec<(usize, f64)> {
+    let sims: Vec<f64> = refs
         .iter()
         .map(|(_, v)| cosine_similarity(query, v))
         .collect();
+    let mut idx: Vec<usize> = (0..refs.len()).collect();
     // stable order on ties for reproducibility
     idx.sort_by(|&a, &b| {
         sims[b]
@@ -33,8 +38,26 @@ pub fn rank_by_similarity(query: &FeatureVector, refs: &[(String, FeatureVector)
             .unwrap_or(std::cmp::Ordering::Equal)
             .then(a.cmp(&b))
     });
-    let _ = &mut sims;
-    idx
+    idx.into_iter().map(|i| (i, sims[i])).collect()
+}
+
+/// Leave-one-out neighbor ranking (§4.2): rank every entry except `qi`
+/// by descending similarity to entry `qi`, returning `(global index
+/// into feats, similarity)` pairs. The one implementation of the
+/// protocol shared by the kNN-seeded search strategy and the fig7
+/// driver — keep them agreeing by construction.
+pub fn rank_neighbors(qi: usize, feats: &[(String, FeatureVector)]) -> Vec<(usize, f64)> {
+    let refs: Vec<(String, FeatureVector)> = feats
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| *i != qi)
+        .map(|(_, x)| x.clone())
+        .collect();
+    // ref indices skip qi: everything at or past it shifts up by one
+    rank_by_similarity(&feats[qi].1, &refs)
+        .into_iter()
+        .map(|(ri, sim)| (if ri < qi { ri } else { ri + 1 }, sim))
+        .collect()
 }
 
 #[cfg(test)]
@@ -70,7 +93,31 @@ mod tests {
         let far = v(|i| ((i * 13) % 7) as f64);
         let refs = vec![("far".to_string(), far), ("close".to_string(), close)];
         let order = rank_by_similarity(&q, &refs);
-        assert_eq!(order[0], 1);
+        assert_eq!(order[0].0, 1);
+        // the returned similarities are the cosine similarities, in
+        // descending order
+        assert!((order[0].1 - cosine_similarity(&q, &refs[1].1)).abs() < 1e-15);
+        assert!((order[1].1 - cosine_similarity(&q, &refs[0].1)).abs() < 1e-15);
+        assert!(order[0].1 >= order[1].1);
+    }
+
+    #[test]
+    fn leave_one_out_ranking_returns_global_indices() {
+        let q = v(|i| (i % 5) as f64);
+        let close = v(|i| (i % 5) as f64 + 0.01);
+        let far = v(|i| ((i * 13) % 7) as f64);
+        let feats = vec![
+            ("far".to_string(), far),
+            ("query".to_string(), q),
+            ("close".to_string(), close),
+        ];
+        // query sits at index 1: neighbors are 0 ("far") and 2 ("close")
+        let order = rank_neighbors(1, &feats);
+        assert_eq!(order.len(), 2);
+        assert_eq!(order[0].0, 2, "nearest neighbor is the global index of close");
+        assert_eq!(order[1].0, 0);
+        assert!((order[0].1 - cosine_similarity(&feats[1].1, &feats[2].1)).abs() < 1e-15);
+        assert!(!order.iter().any(|&(gi, _)| gi == 1), "query never ranks itself");
     }
 
     #[test]

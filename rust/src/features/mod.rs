@@ -12,5 +12,5 @@ pub mod knn;
 pub mod milepost;
 
 pub use itergraph::IterGraph;
-pub use knn::{cosine_similarity, rank_by_similarity};
+pub use knn::{cosine_similarity, rank_by_similarity, rank_neighbors};
 pub use milepost::{extract_features, FeatureVector, NUM_FEATURES};

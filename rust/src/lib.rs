@@ -17,8 +17,10 @@
 //! * [`bench_suite`] — all 15 PolyBench/GPU benchmarks in IR, with OpenCL-
 //!   and CUDA-flavoured variants;
 //! * [`dse`] — the paper's contribution: the phase-ordering design-space
-//!   exploration engine (random sequences, sharded two-level caching,
-//!   validation, top-k), batched across a work-stealing worker pool with
+//!   exploration engine (sharded two-level caching, validation, top-k)
+//!   driven by pluggable search strategies ([`dse::strategy`]: fixed
+//!   random stream, Fig. 5 permutations, hill-climbing, §4.2
+//!   kNN-seeded), batched across a work-stealing worker pool with
 //!   deterministic, jobs-count-independent results, and partitionable
 //!   across processes with bit-identical mergeable summaries
 //!   ([`dse::shard`]);

@@ -8,7 +8,7 @@
 
 use phaseord::bench_suite::benchmark_by_name;
 use phaseord::dse::engine::{self, CacheShards, EvalContext, Scheduler};
-use phaseord::dse::shard::{merge_shards, ShardRun, ShardSpec};
+use phaseord::dse::shard::{merge_shards, ShardRun, ShardSpec, StreamSpec};
 use phaseord::dse::{ExplorationSummary, Explorer, SeqGen};
 use phaseord::proptest_lite::check;
 use phaseord::sim::Target;
@@ -242,6 +242,78 @@ fn sharded_json_roundtrip_merge_matches_unsharded() {
     let reread = ShardRun::from_json(&Json::parse(&text).unwrap()).unwrap();
     let refolded = merge_shards(&[reread]).unwrap();
     for (a, b) in want.iter().zip(&refolded) {
+        assert_bit_identical(a, b);
+    }
+}
+
+/// The shard-compaction acceptance test: sharded runs whose stream came
+/// from `--seed`/`--seqs` can swap the embedded stream for the compact
+/// `{strategy, seed, budget, stream_hash}` descriptor (`ShardRun::
+/// compact`), and merging the descriptor-form files — through the real
+/// JSON boundary — is bit-identical to merging the legacy full-stream
+/// files. Mixing the two forms in one merge works too, because merge
+/// validation compares the *expanded* streams.
+#[test]
+fn descriptor_form_merge_is_bit_identical_to_full_stream_merge() {
+    let benches: Vec<_> = ["GEMM", "ATAX"]
+        .iter()
+        .map(|n| benchmark_by_name(n).unwrap())
+        .collect();
+    let seed = 0x5EAF;
+    let stream = SeqGen::stream(seed, 24);
+    let t = Target::gp104();
+
+    let mut full_files: Vec<String> = Vec::new();
+    let mut desc_files: Vec<String> = Vec::new();
+    for index in 1..=2 {
+        let spec = ShardSpec::new(index, 2).unwrap();
+        let ctxs = engine::build_contexts(&benches, &t, 2);
+        let caches: Vec<CacheShards> = ctxs.iter().map(|_| CacheShards::new()).collect();
+        let parts: Vec<(&EvalContext, &CacheShards)> = ctxs.iter().zip(caches.iter()).collect();
+        let run = ShardRun::execute(
+            &parts,
+            &stream,
+            spec,
+            2,
+            "nvidia-gp104",
+            seed,
+            false,
+            &["interpreter", "interpreter"],
+        );
+        full_files.push(run.to_json().to_string());
+        let compacted = run.compact().expect("seed-derived stream compacts");
+        assert!(matches!(compacted.stream, StreamSpec::Seeded { .. }));
+        desc_files.push(compacted.to_json().to_string());
+    }
+    // the descriptor files are dramatically smaller — the point of the
+    // compaction (the full stream is ~24 sequences of up to 256 names)
+    for (full, desc) in full_files.iter().zip(&desc_files) {
+        assert!(
+            desc.len() < full.len() / 2,
+            "descriptor file should be much smaller: {} vs {} bytes",
+            desc.len(),
+            full.len()
+        );
+    }
+    let parse_all = |files: &[String]| -> Vec<ShardRun> {
+        files
+            .iter()
+            .map(|text| ShardRun::from_json(&Json::parse(text).unwrap()).unwrap())
+            .collect()
+    };
+    let want = merge_shards(&parse_all(&full_files)).unwrap();
+    let got = merge_shards(&parse_all(&desc_files)).unwrap();
+    assert_eq!(want.len(), got.len());
+    for (a, b) in want.iter().zip(&got) {
+        assert_bit_identical(a, b);
+    }
+    // a mixed merge (one legacy file, one descriptor file) folds too
+    let mixed = vec![
+        ShardRun::from_json(&Json::parse(&full_files[0]).unwrap()).unwrap(),
+        ShardRun::from_json(&Json::parse(&desc_files[1]).unwrap()).unwrap(),
+    ];
+    let got_mixed = merge_shards(&mixed).unwrap();
+    for (a, b) in want.iter().zip(&got_mixed) {
         assert_bit_identical(a, b);
     }
 }

@@ -1,0 +1,325 @@
+//! SearchStrategy contract tests: the acceptance gate for the strategy
+//! redesign. `--strategy fixed` must be bit-identical to the
+//! pre-redesign grid exploration (`engine::explore_pairs`, the code
+//! path shard evaluation still runs), every shipped strategy must be
+//! deterministic under `--jobs 1` vs `--jobs N`, and the §4.2 kNN
+//! protocol must reproduce end to end from the CLI configuration with
+//! deterministic output across `--jobs` settings.
+
+use phaseord::bench_suite::{benchmark_by_name, Variant};
+use phaseord::coordinator::experiments::{ExpConfig, ExpCtx};
+use phaseord::dse::engine::{self, CacheShards, EvalContext};
+use phaseord::dse::strategy::{
+    FixedStream, HillClimb, KnnSeeded, Permute, SearchStrategy, StrategyKind, DEFAULT_ROUND,
+};
+use phaseord::dse::{ExplorationSummary, SeqGen};
+use phaseord::features::{extract_features, FeatureVector};
+use phaseord::proptest_lite::check;
+use phaseord::sim::Target;
+use phaseord::util::Rng;
+
+fn assert_bit_identical(a: &ExplorationSummary, b: &ExplorationSummary) {
+    assert_eq!(a.bench, b.bench);
+    assert_eq!(a.winner, b.winner, "{}: winners differ", a.bench);
+    assert_eq!(
+        a.baseline_time_us.to_bits(),
+        b.baseline_time_us.to_bits(),
+        "{}: baseline time differs",
+        a.bench
+    );
+    assert_eq!(
+        a.best_time_us.to_bits(),
+        b.best_time_us.to_bits(),
+        "{}: best time differs",
+        a.bench
+    );
+    assert_eq!(
+        (a.n_ok, a.n_crash, a.n_invalid, a.n_timeout, a.cache_hits),
+        (b.n_ok, b.n_crash, b.n_invalid, b.n_timeout, b.cache_hits),
+        "{}: outcome buckets differ",
+        a.bench
+    );
+    assert_eq!(a.evaluations.len(), b.evaluations.len(), "{}", a.bench);
+    for (i, (x, y)) in a.evaluations.iter().zip(&b.evaluations).enumerate() {
+        assert_eq!(x.status, y.status, "{} eval {i}", a.bench);
+        assert_eq!(
+            x.time_us.to_bits(),
+            y.time_us.to_bits(),
+            "{} eval {i}: time",
+            a.bench
+        );
+        assert_eq!(x.ptx_hash, y.ptx_hash, "{} eval {i}: ptx hash", a.bench);
+        assert_eq!(x.cached, y.cached, "{} eval {i}: cache attribution", a.bench);
+    }
+}
+
+/// Run a freshly-constructed strategy over fresh caches (each run is
+/// its own "process": nothing leaks between the runs being compared).
+fn run_fresh(
+    ctxs: &[EvalContext],
+    mk: &dyn Fn() -> Box<dyn SearchStrategy>,
+    budget: usize,
+    jobs: usize,
+) -> Vec<ExplorationSummary> {
+    let caches: Vec<CacheShards> = ctxs.iter().map(|_| CacheShards::new()).collect();
+    let parts: Vec<(&EvalContext, &CacheShards)> = ctxs.iter().zip(caches.iter()).collect();
+    let mut s = mk();
+    engine::run(s.as_mut(), &parts, budget, jobs)
+}
+
+/// The acceptance golden: the FixedStream strategy through
+/// `engine::run` is bit-identical to the pre-redesign grid walk
+/// (`explore_pairs`) over the seed protocol's stream — same winners,
+/// same `cached` attribution, same counters, at every jobs level.
+#[test]
+fn fixed_strategy_is_bit_identical_to_the_grid_exploration() {
+    let benches: Vec<_> = ["GEMM", "ATAX", "2DCONV"]
+        .iter()
+        .map(|n| benchmark_by_name(n).unwrap())
+        .collect();
+    // the seed protocol's default seed, a short prefix of its stream
+    let stream = SeqGen::stream(0xC0FFEE, 36);
+    let t = Target::gp104();
+    let ctxs = engine::build_contexts(&benches, &t, 0);
+
+    let want = {
+        let caches: Vec<CacheShards> = ctxs.iter().map(|_| CacheShards::new()).collect();
+        let parts: Vec<(&EvalContext, &CacheShards)> = ctxs.iter().zip(caches.iter()).collect();
+        engine::explore_pairs(&parts, &stream, 2)
+    };
+    for jobs in [1, 4] {
+        let got = run_fresh(
+            &ctxs,
+            &|| -> Box<dyn SearchStrategy> { Box::new(FixedStream::new(stream.clone(), 3)) },
+            usize::MAX,
+            jobs,
+        );
+        assert_eq!(want.len(), got.len());
+        for (a, b) in want.iter().zip(&got) {
+            assert_bit_identical(a, b);
+        }
+    }
+    // the comparison is non-trivial: some evaluations succeed, some not
+    assert!(want.iter().any(|s| s.n_ok > 0));
+    assert!(want.iter().any(|s| s.n_ok < stream.len()));
+}
+
+fn feats_and_winners(
+    benches: &[&str],
+) -> (Vec<(String, FeatureVector)>, Vec<Option<Vec<&'static str>>>) {
+    let feats = benches
+        .iter()
+        .map(|n| {
+            let b = benchmark_by_name(n).unwrap();
+            (
+                n.to_string(),
+                extract_features(&b.build_small(Variant::OpenCl).module),
+            )
+        })
+        .collect();
+    // a known-good GEMM order as every reference winner: whatever the
+    // neighbor ranking picks, the seeded sequence is a real winner
+    let winners = benches
+        .iter()
+        .map(|_| Some(vec!["cfl-anders-aa", "loop-reduce", "cfl-anders-aa", "licm"]))
+        .collect();
+    (feats, winners)
+}
+
+/// The strategy-contract property: every shipped strategy produces
+/// bit-identical summaries at `--jobs 1` and `--jobs 4` (fresh caches
+/// and a fresh strategy instance per run, so nothing but the contract
+/// makes them agree).
+#[test]
+fn every_shipped_strategy_is_deterministic_across_jobs() {
+    let names = ["GEMM", "ATAX"];
+    let benches: Vec<_> = names.iter().map(|n| benchmark_by_name(n).unwrap()).collect();
+    let t = Target::gp104();
+    let ctxs = engine::build_contexts(&benches, &t, 0);
+    let stream = SeqGen::stream(0xD1CE, 20);
+    let (feats, winners) = feats_and_winners(&names);
+
+    let cases: Vec<(&str, usize, Box<dyn Fn() -> Box<dyn SearchStrategy>>)> = vec![
+        (
+            "fixed",
+            usize::MAX,
+            Box::new({
+                let stream = stream.clone();
+                move || -> Box<dyn SearchStrategy> {
+                    Box::new(FixedStream::new(stream.clone(), 2))
+                }
+            }),
+        ),
+        (
+            "permute",
+            usize::MAX,
+            Box::new({
+                let winners = winners.clone();
+                move || -> Box<dyn SearchStrategy> {
+                    Box::new(Permute::new(winners.clone(), 10, 0x515))
+                }
+            }),
+        ),
+        (
+            "hillclimb",
+            2 * 18,
+            Box::new(|| -> Box<dyn SearchStrategy> {
+                Box::new(HillClimb::new(2, 0xC11B, DEFAULT_ROUND))
+            }),
+        ),
+        (
+            "knn",
+            2 * 12,
+            Box::new({
+                let (feats, winners) = (feats.clone(), winners.clone());
+                move || -> Box<dyn SearchStrategy> {
+                    Box::new(KnnSeeded::new(&feats, &winners, 1, 0x4A2, DEFAULT_ROUND))
+                }
+            }),
+        ),
+    ];
+    for (name, budget, mk) in &cases {
+        let serial = run_fresh(&ctxs, mk.as_ref(), *budget, 1);
+        let parallel = run_fresh(&ctxs, mk.as_ref(), *budget, 4);
+        assert_eq!(serial.len(), parallel.len(), "{name}");
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_bit_identical(a, b);
+        }
+        assert!(
+            serial.iter().any(|s| !s.evaluations.is_empty()),
+            "{name}: the run must evaluate something or the test proves nothing"
+        );
+    }
+}
+
+/// Property instance of the same contract: random per-benchmark budgets
+/// and seeds for the adaptive hill-climber, `--jobs 1` vs `--jobs 3`.
+#[test]
+fn prop_hillclimb_deterministic_for_random_budgets_and_seeds() {
+    let benches = vec![benchmark_by_name("BICG").unwrap()];
+    let t = Target::gp104();
+    let ctxs = engine::build_contexts(&benches, &t, 0);
+    check(
+        "hillclimb-jobs-determinism",
+        0x5EED,
+        3,
+        |rng: &mut Rng| (1 + rng.below(14), rng.next_u64()),
+        |&(budget, seed)| {
+            let mk = move || -> Box<dyn SearchStrategy> {
+                Box::new(HillClimb::new(1, seed, DEFAULT_ROUND))
+            };
+            let a = run_fresh(&ctxs, &mk, budget, 1);
+            let b = run_fresh(&ctxs, &mk, budget, 3);
+            if a[0].evaluations.len() != budget {
+                return Err(format!(
+                    "budget not honoured: {} evaluations for budget {budget}",
+                    a[0].evaluations.len()
+                ));
+            }
+            for (x, y) in a.iter().zip(&b) {
+                if x.winner != y.winner
+                    || x.best_time_us.to_bits() != y.best_time_us.to_bits()
+                    || x.cache_hits != y.cache_hits
+                    || x.evaluations.len() != y.evaluations.len()
+                {
+                    return Err("jobs=1 vs jobs=3 diverged".to_string());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The hill-climber anchors at the `-O0` baseline (its first proposal
+/// is the empty sequence) and never reports a best above it.
+#[test]
+fn hillclimb_bootstraps_at_baseline_and_respects_the_budget() {
+    let benches: Vec<_> = ["GEMM", "ATAX"]
+        .iter()
+        .map(|n| benchmark_by_name(n).unwrap())
+        .collect();
+    let t = Target::gp104();
+    let ctxs = engine::build_contexts(&benches, &t, 0);
+    let budget_per_bench = 10;
+    let got = run_fresh(
+        &ctxs,
+        &|| -> Box<dyn SearchStrategy> { Box::new(HillClimb::new(2, 7, DEFAULT_ROUND)) },
+        2 * budget_per_bench,
+        2,
+    );
+    let total: usize = got.iter().map(|s| s.evaluations.len()).sum();
+    assert_eq!(total, 2 * budget_per_bench, "the budget is a hard cap");
+    for s in &got {
+        assert!(!s.evaluations.is_empty());
+        // evaluation 0 is the bootstrap empty sequence: valid, ~baseline
+        assert!(s.evaluations[0].status.is_ok(), "{}", s.bench);
+        assert!(
+            (s.evaluations[0].time_us - s.baseline_time_us).abs()
+                <= 1e-9 * s.baseline_time_us,
+            "{}",
+            s.bench
+        );
+        assert!(s.best_time_us <= s.baseline_time_us, "{}", s.bench);
+    }
+}
+
+/// kNN seeding pays off: with every reference winner set to a sequence
+/// that is a known GEMM winner, the seeded search must recover a
+/// speedup on GEMM within a handful of evaluations.
+#[test]
+fn knn_seeded_search_recovers_the_neighbor_winner() {
+    let names = ["GEMM", "SYRK", "ATAX"];
+    let benches: Vec<_> = names.iter().map(|n| benchmark_by_name(n).unwrap()).collect();
+    let t = Target::gp104();
+    let ctxs = engine::build_contexts(&benches, &t, 0);
+    let (feats, winners) = feats_and_winners(&names);
+    let got = run_fresh(
+        &ctxs,
+        &{
+            let (feats, winners) = (feats.clone(), winners.clone());
+            move || -> Box<dyn SearchStrategy> {
+                Box::new(KnnSeeded::new(&feats, &winners, 1, 0x4A2, DEFAULT_ROUND))
+            }
+        },
+        3 * 8,
+        2,
+    );
+    let gemm = &got[0];
+    assert_eq!(gemm.bench, "GEMM");
+    assert!(
+        gemm.best_speedup() > 1.2,
+        "the seeded winner must beat the GEMM baseline: {}",
+        gemm.best_speedup()
+    );
+}
+
+/// The §4.2 protocol end to end through the CLI configuration
+/// (`repro explore --strategy knn --k 1|3 --budget N --jobs J`): the
+/// reference pool comes from the shared-stream exploration, the query
+/// search is seeded from its nearest neighbors, and the output is
+/// deterministic across `--jobs` settings for both paper K values.
+#[test]
+fn knn_cli_protocol_is_deterministic_across_jobs_for_k1_and_k3() {
+    for k in [1usize, 3] {
+        let cfg_for = |jobs: usize| ExpConfig {
+            n_seqs: 8,
+            seed: 0xFACE,
+            budget: 6,
+            knn_k: k,
+            strategy: StrategyKind::Knn,
+            jobs,
+            ..ExpConfig::default()
+        };
+        let a = ExpCtx::new(cfg_for(1)).explore_strategy();
+        let b = ExpCtx::new(cfg_for(2)).explore_strategy();
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.len(), 15, "all benchmarks explored");
+        for (x, y) in a.iter().zip(&b) {
+            assert_bit_identical(x, y);
+        }
+        // every benchmark got its bootstrap + k seeds + refinement
+        for s in &a {
+            assert_eq!(s.evaluations.len(), 6, "{} (k={k})", s.bench);
+        }
+    }
+}
