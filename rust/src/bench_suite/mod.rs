@@ -194,6 +194,29 @@ pub fn model_time_us_ref(
     total * b.seq_repeat as f64
 }
 
+/// Price a pre-lowered build: `lowered` carries each kernel's cleaned
+/// function, vPTX program and CFG analyses
+/// ([`crate::sim::cost::LoweredKernel`], aligned with `infos`), so the
+/// compile-once artifact of the staged evaluator can be measured on any
+/// number of targets without re-lowering. Bit-identical to
+/// [`model_time_us_ref`] over the module the artifact was lowered from.
+pub fn model_time_us_lowered(
+    lowered: &[crate::sim::cost::LoweredKernel],
+    infos: &[KernelInfo],
+    seq_repeat: usize,
+    target: &crate::sim::target::Target,
+    unknown_trips: Option<&[f64]>,
+) -> f64 {
+    let mut total = 0.0;
+    for (ki, (lk, info)) in lowered.iter().zip(infos).enumerate() {
+        let unknown = unknown_trips
+            .and_then(|u| u.get(ki).copied())
+            .unwrap_or(crate::sim::cost::UNKNOWN_TRIPS_DEFAULT);
+        total += lk.estimate(info.grid, target, unknown).time_us * info.repeat as f64;
+    }
+    total * seq_repeat as f64
+}
+
 /// Per-kernel maximum baseline trip count (the DSE's pessimistic
 /// fallback for analysis-defeating transformations).
 pub fn baseline_max_trips(b: &BuiltBench, target: &crate::sim::target::Target) -> Vec<f64> {

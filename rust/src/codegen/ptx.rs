@@ -112,6 +112,12 @@ pub fn emit(f: &Function, m: &Module) -> PtxProgram {
 /// Backend entry point returning both the machine-cleaned IR and its
 /// vPTX. Cost analysis must run over the *cleaned* function (block ids
 /// in `block_ranges` refer to it).
+///
+/// The DSE's compile stage keeps both halves — wrapped with their CFG
+/// analyses as a `sim::cost::LoweredKernel` — so one lowering serves
+/// the artifact hash *and* every per-target measurement; [`emit`] is
+/// the discard-the-function shorthand for consumers that only need the
+/// instruction stream.
 pub fn lower(f: &Function, m: &Module) -> (Function, PtxProgram) {
     let mut fc = f.clone();
     backend_cleanup(&mut fc);

@@ -7,19 +7,21 @@
 //!                 [--strategy fixed|permute|hillclimb|knn] [--budget N]
 //!                 [--k K]
 //!
-//! commands: explore merge fig2 table1 fig3 fig4 fig5 fig6 fig7
-//!           problems amd all passes
+//! commands: explore merge transfer fig2 table1 fig3 fig4 fig5 fig6
+//!           fig7 problems amd all passes targets
 //! ```
 //!
 //! `explore` runs the DSE under the selected search strategy
-//! (optionally one shard of the fixed-stream grid) and `merge` folds
-//! shard files back together — see `docs/CLI.md` for walkthroughs.
+//! (optionally one shard of the fixed-stream grid), `merge` folds
+//! shard files back together, and `transfer` cross-evaluates every
+//! target's winning orders on every other target (the §3.1 experiment)
+//! — see `docs/CLI.md` for walkthroughs.
 
 use std::path::PathBuf;
 
 use super::experiments::{
     fig2_table1, fig3_cross, fig4_scatter, fig5_permutations, fig6_load_patterns, fig7_features,
-    problem_stats, ExpConfig, ExpCtx, Fig2Row,
+    problem_stats, transfer_matrix, ExpConfig, ExpCtx, Fig2Row,
 };
 use super::report;
 use crate::dse::shard::{merge_shards, ShardRun, ShardSpec};
@@ -46,6 +48,7 @@ pub fn parse_args(argv: &[String]) -> Result<CliArgs, String> {
     let mut files = Vec::new();
     let mut emit_summary = None;
     let (mut strategy_set, mut budget_set, mut k_set, mut seqs_set) = (false, false, false, false);
+    let mut target_set = false;
     let mut it = argv.iter().peekable();
     while let Some(a) = it.next() {
         match a.as_str() {
@@ -87,7 +90,9 @@ pub fn parse_args(argv: &[String]) -> Result<CliArgs, String> {
             }
             "--target" => {
                 let t = it.next().ok_or("--target needs a value")?;
-                cfg.target = Target::by_name(t).ok_or_else(|| format!("unknown target {t}"))?;
+                cfg.target = Target::by_name(t)
+                    .ok_or_else(|| format!("unknown target {t} (see `repro targets`)"))?;
+                target_set = true;
             }
             "--out" => out = PathBuf::from(it.next().ok_or("--out needs a value")?),
             "--full" => {
@@ -149,6 +154,13 @@ pub fn parse_args(argv: &[String]) -> Result<CliArgs, String> {
             usage()
         ));
     }
+    if target_set && command == "transfer" {
+        return Err(
+            "transfer always evaluates every registered target (see `repro targets`); \
+             --target would contradict that — drop it"
+                .to_string(),
+        );
+    }
     if cfg.shard.is_some() && command != "explore" {
         return Err(format!("--shard only applies to explore\n{}", usage()));
     }
@@ -202,7 +214,8 @@ pub fn parse_args(argv: &[String]) -> Result<CliArgs, String> {
 }
 
 pub fn usage() -> String {
-    "usage: repro <explore|merge|fig2|table1|fig3|fig4|fig5|fig6|fig7|problems|amd|all|passes> \
+    "usage: repro <explore|merge|transfer|fig2|table1|fig3|fig4|fig5|fig6|fig7|problems|amd|all|\
+     passes|targets> \
      [--seqs N] [--seed S] [--target gp104|amd-fiji] [--perms N] [--draws N] \
      [--jobs N] [--out DIR] [--full] [--verify-each] [--shard I/N] \
      [--emit-summary PATH] [--strategy fixed|permute|hillclimb|knn] \
@@ -228,8 +241,35 @@ pub fn usage() -> String {
      merge <shard.json>... = fold shard files from sharded explore runs \
      (descriptor or legacy full-stream form, or a mix); bit-identical to \
      the equivalent single-process explore\n\
-     passes = list the registry (name, kind, preserved analyses)"
+     transfer = the §3.1 cross-device experiment: explore on every \
+     registered target, then compile each winning order ONCE and \
+     measure/validate it on every target (rejects --target; writes \
+     transfer.json under --out)\n\
+     passes = list the registry (name, kind, preserved analyses)\n\
+     targets = list the registered device models (--target values)"
         .to_string()
+}
+
+/// `repro targets` — the device-model registry listing: every `--target`
+/// value, its cost-table identity, and the headline hardware numbers.
+fn render_targets() -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<14} {:<26} {:>7} {:>10} {:>12}  aliases\n",
+        "name", "kind", "SMs/CUs", "clock", "regs/thread"
+    ));
+    for t in Target::all() {
+        out.push_str(&format!(
+            "{:<14} {:<26} {:>7} {:>7.2}GHz {:>12}  {}\n",
+            t.name,
+            t.kind.describe(),
+            t.sms as u32,
+            t.clock_ghz,
+            t.reg_budget as u32,
+            t.aliases().join(", ")
+        ));
+    }
+    out
 }
 
 /// `repro passes` — the registry listing: name, transform vs analysis,
@@ -277,6 +317,17 @@ pub fn run(args: CliArgs) -> Result<(), String> {
         // them before the (expensive) per-benchmark golden/baseline build
         "passes" => {
             print!("{}", render_passes());
+        }
+        "targets" => {
+            print!("{}", render_targets());
+        }
+        // §3.1 cross-device transfer: explore per target, compile each
+        // winning order once, price the artifact everywhere
+        "transfer" => {
+            let m = transfer_matrix(&args.cfg);
+            println!("{}", report::render_transfer(&m));
+            report::write_json(&out, "transfer.json", &report::transfer_json(&m)).map_err(io)?;
+            eprintln!("wrote {}", out.join("transfer.json").display());
         }
         "fig6" => {
             let (cuda, ocl) = fig6_load_patterns();
@@ -601,6 +652,38 @@ mod tests {
             "explore", "--strategy", "knn", "--emit-summary", "x.json",
         ]))
         .is_err());
+    }
+
+    #[test]
+    fn targets_and_transfer_parse_and_validate() {
+        let a = parse_args(&sv(&["targets"])).unwrap();
+        assert_eq!(a.command, "targets");
+        let a = parse_args(&sv(&["transfer", "--seqs", "16", "--jobs", "2"])).unwrap();
+        assert_eq!(a.command, "transfer");
+        assert_eq!(a.cfg.n_seqs, 16);
+        // transfer always spans every registered target: picking one
+        // with --target is a contradiction, not a preference
+        assert!(parse_args(&sv(&["transfer", "--target", "gp104"])).is_err());
+        // strategy/shard/emit flags stay explore-only
+        assert!(parse_args(&sv(&["transfer", "--strategy", "hillclimb"])).is_err());
+        assert!(
+            parse_args(&sv(&["transfer", "--shard", "1/2", "--emit-summary", "x.json"])).is_err()
+        );
+        assert!(parse_args(&sv(&["transfer", "--emit-summary", "x.json"])).is_err());
+        // --target still works everywhere else
+        assert!(parse_args(&sv(&["explore", "--target", "amd-fiji"])).is_ok());
+    }
+
+    #[test]
+    fn targets_listing_covers_the_registry() {
+        let text = render_targets();
+        for t in Target::all() {
+            assert!(text.contains(t.name), "missing {}", t.name);
+            assert!(text.contains(t.kind.describe()), "missing kind of {}", t.name);
+            for alias in t.aliases() {
+                assert!(text.contains(alias), "missing alias {alias}");
+            }
+        }
     }
 
     #[test]

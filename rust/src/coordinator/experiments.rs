@@ -135,6 +135,13 @@ impl ExpCtx {
         self.explorers.get_mut(name).expect("known benchmark")
     }
 
+    /// Immutable view of one benchmark's evaluation context (the staged
+    /// compiler + backend pair) — what the transfer driver compiles and
+    /// judges artifacts through.
+    pub fn eval_context(&self, name: &str) -> &EvalContext {
+        self.explorers[name].context()
+    }
+
     /// The engine's view of every benchmark: `(EvalContext, CacheShards)`
     /// pairs in benchmark order — what `engine::run` / `explore_pairs`
     /// consume.
@@ -290,6 +297,118 @@ pub fn winning_sequences(summaries: &[ExplorationSummary]) -> Vec<Option<Vec<&'s
         .iter()
         .map(|s| s.winner.sequence().map(|q| q.to_vec()))
         .collect()
+}
+
+// ------------------------------------------------------------ §3.1 transfer
+
+/// The `repro transfer` outcome: each registered target's specialized
+/// winning orders, cross-evaluated on every registered target.
+#[derive(Debug, Clone)]
+pub struct TransferMatrix {
+    /// registered target names, in [`Target::all`] order (owner order ==
+    /// eval order)
+    pub targets: Vec<String>,
+    pub benches: Vec<String>,
+    /// `winners[oi][bi]`: the order target `oi`'s exploration found for
+    /// benchmark `bi` (`None` = baseline won; it cross-applies as the
+    /// empty sequence, the paper's `-O0` fallback)
+    pub winners: Vec<Vec<Option<Vec<&'static str>>>>,
+    /// `ratio[oi][ei][bi]`: speedup of owner `oi`'s winner for benchmark
+    /// `bi` on eval target `ei`, relative to `ei`'s *own baseline*
+    /// (`-1.0` = the order failed validation there). The diagonal
+    /// `oi == ei` reproduces each exploration's own best speedups.
+    pub ratio: Vec<Vec<Vec<f64>>>,
+    /// compile calls spent on the cross-evaluation: exactly one per
+    /// distinct `(benchmark, winning order)` artifact, **independent of
+    /// the target count** — the compile-once contract, asserted in
+    /// `rust/tests/evaluator.rs`.
+    pub compiles: u64,
+}
+
+/// Run the §3.1 cross-device transfer experiment: one fixed-stream
+/// exploration per registered target (each under its own cost tables),
+/// then compile every distinct winning order **once** —
+/// [`Compiler`](crate::dse::Compiler) is target-independent — and
+/// validate + price the artifact under every target's backend.
+/// `cfg.target` is ignored: the experiment always spans [`Target::all`].
+pub fn transfer_matrix(cfg: &ExpConfig) -> TransferMatrix {
+    let targets = Target::all();
+    let mut ctxs: Vec<ExpCtx> = Vec::with_capacity(targets.len());
+    for t in &targets {
+        let mut c = cfg.clone();
+        c.target = t.clone();
+        ctxs.push(ExpCtx::new(c));
+    }
+    let benches: Vec<String> = ctxs[0]
+        .benchmarks
+        .iter()
+        .map(|b| b.name.to_string())
+        .collect();
+    let mut winners: Vec<Vec<Option<Vec<&'static str>>>> = Vec::with_capacity(targets.len());
+    for (ti, ctx) in ctxs.iter().enumerate() {
+        eprintln!(
+            "transfer: exploring {} sequences × {} benchmarks on {} ({}/{}) …",
+            ctx.cfg.n_seqs,
+            benches.len(),
+            targets[ti].name,
+            ti + 1,
+            targets.len()
+        );
+        winners.push(winning_sequences(&ctx.explore_all()));
+    }
+    // Cross-evaluation. Artifacts come from ctxs[0]'s compilers (every
+    // target's compiler holds identical builds — compilation is
+    // target-independent), deduplicated per (benchmark, order) so the
+    // compile count cannot depend on how many targets are evaluated.
+    let count_compiles = |c: &ExpCtx| -> u64 {
+        c.benchmarks
+            .iter()
+            .map(|b| c.eval_context(b.name).compiler().compile_count())
+            .sum()
+    };
+    let compiles_before = count_compiles(&ctxs[0]);
+    let nt = targets.len();
+    let nb = benches.len();
+    let mut ratio = vec![vec![vec![0.0f64; nb]; nt]; nt];
+    for (bi, bname) in benches.iter().enumerate() {
+        let compile_cx = ctxs[0].eval_context(bname);
+        // memoized per distinct order: compile once AND judge once per
+        // eval target — owners sharing a winner (common: the baseline
+        // fallback) reuse the whole judged row, not just the artifact
+        let mut judged: HashMap<u64, Vec<f64>> = HashMap::new();
+        for oi in 0..nt {
+            let seq: &[&'static str] = winners[oi][bi].as_deref().unwrap_or(&[]);
+            let key = EvalContext::seq_key(seq);
+            let row = judged.entry(key).or_insert_with(|| {
+                match compile_cx.compile(seq) {
+                    // a winner that does not even compile cannot transfer
+                    Err(_) => vec![-1.0; nt],
+                    Ok(ck) => (0..nt)
+                        .map(|ei| {
+                            let cx = ctxs[ei].eval_context(bname);
+                            let ev = cx.evaluate_artifact(&ck);
+                            if ev.status.is_ok() {
+                                cx.baseline_time_us / ev.time_us
+                            } else {
+                                -1.0
+                            }
+                        })
+                        .collect(),
+                }
+            });
+            for ei in 0..nt {
+                ratio[oi][ei][bi] = row[ei];
+            }
+        }
+    }
+    let compiles = count_compiles(&ctxs[0]) - compiles_before;
+    TransferMatrix {
+        targets: targets.iter().map(|t| t.name.to_string()).collect(),
+        benches,
+        winners,
+        ratio,
+        compiles,
+    }
 }
 
 // ------------------------------------------------------------ Fig. 2 + Table 1

@@ -5,7 +5,7 @@ use std::fs;
 use std::path::Path;
 
 use super::experiments::{
-    fig2_geomeans, Fig2Row, Fig3Matrix, Fig4Scatter, Fig7Result, ProblemStats,
+    fig2_geomeans, Fig2Row, Fig3Matrix, Fig4Scatter, Fig7Result, ProblemStats, TransferMatrix,
 };
 use crate::dse::strategy::{histogram, PermutationStudy};
 use crate::dse::ExplorationSummary;
@@ -68,6 +68,151 @@ pub fn render_explore(summaries: &[ExplorationSummary]) -> String {
 /// output; each element round-trips via [`ExplorationSummary::from_json`]).
 pub fn summaries_json(summaries: &[ExplorationSummary]) -> Json {
     Json::Arr(summaries.iter().map(|s| s.to_json()).collect())
+}
+
+// ----------------------------------------------------- §3.1 transfer
+
+/// Per-cell aggregate of a transfer matrix: geomean speedup over the
+/// benchmarks whose order validated on the eval target, plus the count
+/// of benchmarks whose order did not.
+fn transfer_cells(m: &TransferMatrix) -> (Vec<Vec<f64>>, Vec<Vec<usize>>) {
+    let nt = m.targets.len();
+    let mut g = vec![vec![0.0f64; nt]; nt];
+    let mut fails = vec![vec![0usize; nt]; nt];
+    for oi in 0..nt {
+        for ei in 0..nt {
+            let ok: Vec<f64> = m.ratio[oi][ei].iter().copied().filter(|&r| r >= 0.0).collect();
+            fails[oi][ei] = m.ratio[oi][ei].len() - ok.len();
+            g[oi][ei] = geomean(&ok);
+        }
+    }
+    (g, fails)
+}
+
+/// The `repro transfer` console report: the §3.1 cross-device matrix
+/// (geomean speedup of each target's specialized orders on every
+/// target, relative to the eval target's own baseline) plus the
+/// per-benchmark detail rows.
+pub fn render_transfer(m: &TransferMatrix) -> String {
+    let (g, fails) = transfer_cells(m);
+    let nt = m.targets.len();
+    let mut s = String::from(
+        "§3.1 cross-device transfer — geomean speedup vs each device's own baseline\n\
+         (rows: device the orders were specialized on; cols: device they run on)\n\n",
+    );
+    s.push_str(&format!("{:>24}", "orders from \\ run on"));
+    for t in &m.targets {
+        s.push_str(&format!(" {:>14}", t));
+    }
+    s.push('\n');
+    for oi in 0..nt {
+        s.push_str(&format!("{:>24}", m.targets[oi]));
+        for ei in 0..nt {
+            // render into a cell first so fail-count suffixes cannot
+            // shift the column grid
+            let cell = if fails[oi][ei] > 0 {
+                format!("{:.2} ({}F)", g[oi][ei], fails[oi][ei])
+            } else {
+                format!("{:.2}", g[oi][ei])
+            };
+            s.push_str(&format!(" {cell:>14}"));
+        }
+        s.push('\n');
+    }
+    s.push_str("\nper-benchmark detail (owner→eval speedup; FAIL = did not validate):\n");
+    for (bi, b) in m.benches.iter().enumerate() {
+        s.push_str(&format!("{:10}", b));
+        for oi in 0..nt {
+            for ei in 0..nt {
+                let v = m.ratio[oi][ei][bi];
+                let cell = if v < 0.0 {
+                    "FAIL".to_string()
+                } else {
+                    format!("{v:.2}")
+                };
+                s.push_str(&format!(" {}→{} {:>5}", oi, ei, cell));
+            }
+        }
+        s.push('\n');
+    }
+    s.push_str(&format!(
+        "compiled {} artifact(s) for {} target(s) — the compile count is \
+         independent of the target count (compile-once)\n",
+        m.compiles, nt
+    ));
+    s
+}
+
+/// The `repro transfer` JSON dump (`results/transfer.json`): the raw
+/// ratio tensor plus the per-cell geomean/fail aggregates the CI smoke
+/// step checks for non-degeneracy.
+pub fn transfer_json(m: &TransferMatrix) -> Json {
+    let (g, fails) = transfer_cells(m);
+    Json::Obj(vec![
+        (
+            "targets".into(),
+            Json::Arr(m.targets.iter().map(Json::s).collect()),
+        ),
+        (
+            "benches".into(),
+            Json::Arr(m.benches.iter().map(Json::s).collect()),
+        ),
+        (
+            "winners".into(),
+            Json::Arr(
+                m.winners
+                    .iter()
+                    .map(|per_owner| {
+                        Json::Arr(
+                            per_owner
+                                .iter()
+                                .map(|w| match w {
+                                    None => Json::Null,
+                                    Some(seq) => {
+                                        Json::Arr(seq.iter().map(|p| Json::s(*p)).collect())
+                                    }
+                                })
+                                .collect(),
+                        )
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "ratio".into(),
+            Json::Arr(
+                m.ratio
+                    .iter()
+                    .map(|per_owner| {
+                        Json::Arr(
+                            per_owner
+                                .iter()
+                                .map(|row| Json::Arr(row.iter().map(|&v| Json::n(v)).collect()))
+                                .collect(),
+                        )
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "geomean".into(),
+            Json::Arr(
+                g.iter()
+                    .map(|row| Json::Arr(row.iter().map(|&v| Json::n(v)).collect()))
+                    .collect(),
+            ),
+        ),
+        (
+            "fails".into(),
+            Json::Arr(
+                fails
+                    .iter()
+                    .map(|row| Json::Arr(row.iter().map(|&v| Json::n(v as f64)).collect()))
+                    .collect(),
+            ),
+        ),
+        ("compiles".into(), Json::n(m.compiles as f64)),
+    ])
 }
 
 // ---------------------------------------------------------------- Fig. 2
@@ -362,6 +507,41 @@ mod tests {
         assert!(s.contains("-cfl-anders-aa -licm"));
         let j = fig2_json(&rows).to_string();
         assert!(j.contains("\"speedup_over_opencl\":2"));
+    }
+
+    #[test]
+    fn transfer_render_and_json_carry_the_matrix() {
+        let m = TransferMatrix {
+            targets: vec!["nvidia-gp104".into(), "amd-fiji".into()],
+            benches: vec!["GEMM".into(), "ATAX".into()],
+            winners: vec![
+                vec![Some(vec!["licm"]), None],
+                vec![None, Some(vec!["gvn", "dse"])],
+            ],
+            ratio: vec![
+                vec![vec![1.8, 1.0], vec![1.2, -1.0]],
+                vec![vec![1.0, 1.0], vec![1.3, 1.1]],
+            ],
+            compiles: 3,
+        };
+        let s = render_transfer(&m);
+        assert!(s.contains("nvidia-gp104") && s.contains("amd-fiji"), "{s}");
+        assert!(s.contains("FAIL"), "{s}");
+        assert!(s.contains("compiled 3 artifact(s)"), "{s}");
+        let j = transfer_json(&m).to_string();
+        assert!(j.contains("\"compiles\":3"), "{j}");
+        assert!(j.contains("\"geomean\""), "{j}");
+        assert!(j.contains("\"fails\""), "{j}");
+        // it round-trips through the vendored parser
+        let back = Json::parse(&j).unwrap();
+        assert_eq!(
+            back.get("targets").and_then(|t| t.as_arr()).map(|a| a.len()),
+            Some(2)
+        );
+        // one failed cell → fails[0][1] == 1 and its geomean skips it
+        let fails = back.get("fails").and_then(|f| f.as_arr()).unwrap();
+        let row0 = fails[0].as_arr().unwrap();
+        assert_eq!(row0[1].as_usize(), Some(1));
     }
 
     #[test]

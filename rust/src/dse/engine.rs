@@ -4,13 +4,17 @@
 //! (§3.2) — is embarrassingly parallel, and this module is the only
 //! place that exploits it. The moving parts:
 //!
-//! * [`EvalContext`] — the *immutable* per-benchmark evaluation state
-//!   (small/full builds, golden buffers, baseline time, baseline trip
-//!   counts, step budget). Shared by reference across workers; every
-//!   evaluation clones the module it mutates.
-//! * [`CacheShards`] — the two-level evaluation cache (per-sequence memo
-//!   + generated-code/vPTX verdict cache), sharded behind mutexes so
-//!   concurrent workers rarely contend.
+//! * [`EvalContext`] — the *immutable* per-benchmark evaluation state:
+//!   a target-independent [`Compiler`] (small/full builds) paired with
+//!   one per-target [`SimBackend`] (cost tables, baseline trips, step
+//!   budget) plus the golden buffers. Shared by reference across
+//!   workers; every evaluation clones the module it mutates. The
+//!   evaluation itself is the staged **compile → validate → measure**
+//!   pipeline of [`crate::dse::evaluator`].
+//! * [`CacheShards`] — the two-level evaluation cache (per-sequence
+//!   memo → artifact hash; per-`(artifact, device)` verdict table),
+//!   sharded behind mutexes so concurrent workers rarely contend. One
+//!   instance can serve a benchmark across every target.
 //! * [`run`] — the strategy loop: a
 //!   [`SearchStrategy`](crate::dse::strategy::SearchStrategy) proposes
 //!   batches of `(benchmark, sequence)` candidates, the pool evaluates
@@ -48,19 +52,18 @@
 //! `repro merge` folds shard files, which is why a sharded multi-process
 //! run reproduces the single-process summary bit for bit.
 
+use std::collections::hash_map::Entry;
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use crate::bench_suite::{
-    execute, init_buffers, model_time_us, model_time_us_ref, outputs_match, Benchmark, BuiltBench,
-    Variant,
-};
-use crate::passes::{run_sequence_with, AnalysisManager, PassOutcome};
-use crate::sim::exec::{Buffers, ExecError};
+use crate::bench_suite::{execute, init_buffers, model_time_us, Benchmark, BuiltBench, Variant};
+use crate::passes::PassOutcome;
+use crate::sim::exec::Buffers;
 use crate::sim::target::Target;
 use crate::util::fnv1a;
 
+use super::evaluator::{Compiler, CompiledKernel, EvalBackend, SimBackend};
 use super::explorer::{EvalStatus, Evaluation, ExplorationSummary, Winner};
 use super::strategy::{Proposal, SearchStrategy};
 
@@ -105,29 +108,26 @@ pub fn golden_from_interpreter(bench: &Benchmark) -> Buffers {
 
 // ------------------------------------------------------------------ context
 
-/// Immutable per-benchmark evaluation state. Construction does all the
-/// expensive one-off work (builds, golden execution, baseline trips);
-/// after that, any number of workers can evaluate sequences through a
-/// shared `&EvalContext` concurrently.
+/// Immutable per-benchmark evaluation state: the target-independent
+/// [`Compiler`] paired with one per-target [`SimBackend`] plus the
+/// golden buffers and baseline numbers the DSE policy needs.
+/// Construction does all the expensive one-off work (builds, golden
+/// execution, baseline trips); after that, any number of workers can
+/// evaluate sequences through a shared `&EvalContext` concurrently.
+///
+/// An evaluation is the staged pipeline **compile → validate →
+/// measure** (see [`crate::dse::evaluator`]): the compile stage
+/// produces a target-independent [`CompiledKernel`], the backend
+/// attaches a per-device verdict, and the 20× timeout policy lives
+/// here, between the two.
 pub struct EvalContext {
     pub name: String,
-    small: BuiltBench,
-    full: BuiltBench,
+    compiler: Compiler,
+    backend: SimBackend,
     golden: Buffers,
-    target: Target,
     pub baseline_time_us: f64,
     timeout_factor: f64,
     baseline_steps: u64,
-    step_limit: u64,
-    /// per-kernel baseline max trip counts — pessimistic fallback when a
-    /// candidate's loop bounds become unanalyzable
-    baseline_trips: Vec<f64>,
-    /// verify the module after every changing pass (the CLI's
-    /// `--verify-each`), instead of once per sequence
-    verify_each: bool,
-    /// serve cached `DomTree`/`LoopForest` across a sequence (production
-    /// default; the engine bench flips it off to measure the cache)
-    analysis_cache: bool,
 }
 
 impl EvalContext {
@@ -145,19 +145,15 @@ impl EvalContext {
                 .unwrap_or(10_000_000)
         };
         let timeout_factor = DEFAULT_TIMEOUT_FACTOR;
+        let step_limit = step_limit_for(baseline_steps, timeout_factor);
         EvalContext {
             name: bench.name.to_string(),
-            small,
-            full,
+            compiler: Compiler::from_builds(small, full),
+            backend: SimBackend::new(target, baseline_trips, step_limit),
             golden,
-            target,
             baseline_time_us,
             timeout_factor,
             baseline_steps,
-            step_limit: step_limit_for(baseline_steps, timeout_factor),
-            baseline_trips,
-            verify_each: false,
-            analysis_cache: true,
         }
     }
 
@@ -166,31 +162,45 @@ impl EvalContext {
     /// verifier failure is attributed to the offending pass instead of
     /// the end-of-sequence check.
     pub fn set_verify_each(&mut self, on: bool) {
-        self.verify_each = on;
+        self.compiler.set_verify_each(on);
     }
 
     /// Enable/disable the per-sequence analysis cache (bench-only knob;
     /// results are bit-identical either way, only the speed changes).
     pub fn set_analysis_cache(&mut self, on: bool) {
-        self.analysis_cache = on;
+        self.compiler.set_analysis_cache(on);
     }
 
-    fn fresh_manager(&self) -> AnalysisManager {
-        if self.analysis_cache {
-            AnalysisManager::new()
-        } else {
-            AnalysisManager::disabled()
-        }
+    /// Override the validation step budget (see
+    /// [`SimBackend::set_step_limit`]).
+    pub fn set_step_limit(&mut self, limit: u64) {
+        self.backend.set_step_limit(limit);
+    }
+
+    /// The compile stage: shared with `repro transfer`, which compiles a
+    /// winning order once here and prices the artifact on every target.
+    pub fn compiler(&self) -> &Compiler {
+        &self.compiler
+    }
+
+    /// The per-device measure/validate stage.
+    pub fn backend(&self) -> &SimBackend {
+        &self.backend
+    }
+
+    /// The device identity evaluations verdict-cache under.
+    pub fn device(&self) -> &'static str {
+        self.backend.device()
     }
 
     pub fn small_build(&self) -> &BuiltBench {
-        &self.small
+        self.compiler.small_build()
     }
     pub fn golden(&self) -> &Buffers {
         &self.golden
     }
     pub fn target(&self) -> &Target {
-        &self.target
+        self.backend.target()
     }
     pub fn timeout_factor(&self) -> f64 {
         self.timeout_factor
@@ -199,69 +209,53 @@ impl EvalContext {
         self.baseline_steps
     }
     pub fn step_limit(&self) -> u64 {
-        self.step_limit
+        self.backend.step_limit()
     }
 
-    pub(crate) fn seq_key(seq: &[&str]) -> u64 {
+    /// Stable key of a phase order — the sequence-memo key.
+    pub fn seq_key(seq: &[&str]) -> u64 {
         fnv1a(seq.join(",").as_bytes())
+    }
+
+    /// Compile one phase order without evaluating it: the entry point of
+    /// the cross-device transfer path (compile once here, then
+    /// [`EvalContext::evaluate_artifact`] on any number of contexts of
+    /// the *same benchmark*).
+    pub fn compile(&self, seq: &[&'static str]) -> Result<CompiledKernel, PassOutcome> {
+        self.compiler.compile(seq)
     }
 
     /// Evaluate one phase order end to end, through the shared cache.
     pub fn evaluate(&self, seq: &[&'static str], cache: &CacheShards) -> Evaluation {
         let key = Self::seq_key(seq);
-        if let Some(mut hit) = cache.get_seq(key) {
-            hit.cached = true;
+        if let Some(hit) = cache.lookup_seq(key, self.device()) {
             return hit;
         }
-        let eval = self.evaluate_vs_ptx_cache(seq, cache);
-        cache.put_seq(key, eval.clone());
+        let eval = self.evaluate_staged(seq, cache);
+        cache.memo_seq(key, &eval, self.device());
         eval
     }
 
-    fn evaluate_vs_ptx_cache(&self, seq: &[&'static str], cache: &CacheShards) -> Evaluation {
-        // ---- 1. opt on the full-size module ----
-        let mut full = self.full.clone();
-        let mut am = self.fresh_manager();
-        match run_sequence_with(&mut full.module, seq, self.verify_each, &mut am) {
-            PassOutcome::Ok => {}
-            other => {
+    /// The staged pipeline behind [`EvalContext::evaluate`]: compile →
+    /// verdict-cache probe → validate → measure (with the 20× timeout
+    /// policy between validate and the returned measurement).
+    fn evaluate_staged(&self, seq: &[&'static str], cache: &CacheShards) -> Evaluation {
+        // ---- 1. compile (target-independent) ----
+        let artifact = match self.compiler.compile(seq) {
+            Ok(ck) => ck,
+            Err(other) => {
                 // no code produced: hash 0 is the "never cached" sentinel
                 return Evaluation {
                     status: EvalStatus::Crash(format!("{other:?}")),
                     time_us: f64::INFINITY,
                     ptx_hash: 0,
                     cached: false,
-                }
+                };
             }
-        }
-        // ---- 2. codegen on both builds + the generated-code cache ----
-        // The cached verdict covers validation, and validation runs the
-        // *small* build — so the cache key must cover the small build's
-        // generated code too, or two sequences that agree on the full
-        // code but diverge at validation size would wrongly share (and,
-        // under concurrency, race on) a verdict.
-        let mut h: u64 = 0xcbf29ce484222325;
-        let mut fold = |x: u64| {
-            h ^= x;
-            h = h.wrapping_mul(0x100000001b3);
         };
-        for p in &crate::codegen::emit_module(&full.module) {
-            fold(p.content_hash());
-        }
-        let mut small = self.small.clone();
-        let mut am_small = self.fresh_manager();
-        let sout = run_sequence_with(&mut small.module, seq, self.verify_each, &mut am_small);
-        match &sout {
-            PassOutcome::Ok => {
-                for p in &crate::codegen::emit_module(&small.module) {
-                    fold(p.content_hash());
-                }
-            }
-            // a small-build pass crash is part of the verdict; key it by
-            // its (deterministic) outcome so equal keys imply equal fate
-            other => fold(crate::util::fnv1a(format!("{other:?}").as_bytes())),
-        }
-        if let Some((status, t)) = cache.get_ptx(h) {
+        let h = artifact.artifact_hash;
+        // ---- 2. the generated-code verdict cache, per device ----
+        if let Some((status, t)) = cache.get_verdict(h, self.device()) {
             return Evaluation {
                 status,
                 time_us: t,
@@ -269,29 +263,26 @@ impl EvalContext {
                 cached: true,
             };
         }
-        // ---- 3. validation on small inputs ----
-        let status = match sout {
-            PassOutcome::Ok => {
-                let mut bufs = init_buffers(&small);
-                match execute(&small, &mut bufs, self.step_limit) {
-                    Ok(_) => {
-                        if outputs_match(&small, &bufs, &self.golden, 0.01) {
-                            EvalStatus::Ok
-                        } else {
-                            EvalStatus::InvalidOutput
-                        }
-                    }
-                    Err(ExecError::StepLimit) => EvalStatus::Timeout,
-                    Err(e) => EvalStatus::ExecFailure(e.to_string()),
-                }
-            }
-            other => EvalStatus::Crash(format!("{other:?}")),
-        };
-        // ---- 4. measurement ----
+        // ---- 3. validate, 4. measure ----
+        // (the verdict reaches the cache via the caller's `memo_seq`,
+        // which writes both the memo and this device's verdict column)
+        self.judge_artifact(&artifact)
+    }
+
+    /// Validate + measure an already-compiled artifact on this context's
+    /// backend, bypassing every cache — the cross-device half of `repro
+    /// transfer`. The artifact must come from this benchmark (any
+    /// target's context of it: compilation is target-independent).
+    pub fn evaluate_artifact(&self, artifact: &CompiledKernel) -> Evaluation {
+        self.judge_artifact(artifact)
+    }
+
+    fn judge_artifact(&self, artifact: &CompiledKernel) -> Evaluation {
+        let h = artifact.artifact_hash;
+        let status = self.backend.validate(artifact, &self.golden);
         let time_us = if status.is_ok() {
-            let t = model_time_us_ref(&full, &self.target, Some(&self.baseline_trips));
-            if t > self.baseline_time_us * self.timeout_factor {
-                cache.put_ptx(h, EvalStatus::Timeout, f64::INFINITY);
+            let m = self.backend.measure(artifact);
+            if m.time_us > self.baseline_time_us * self.timeout_factor {
                 return Evaluation {
                     status: EvalStatus::Timeout,
                     time_us: f64::INFINITY,
@@ -299,11 +290,10 @@ impl EvalContext {
                     cached: false,
                 };
             }
-            t
+            m.time_us
         } else {
             f64::INFINITY
         };
-        cache.put_ptx(h, status.clone(), time_us);
         Evaluation {
             status,
             time_us,
@@ -317,19 +307,42 @@ impl EvalContext {
 
 const N_SHARDS: usize = 16;
 
+/// How a sequence memo resolves. The memo is **target-independent**
+/// (compilation is), so one entry serves every device; only the verdict
+/// is per device.
+#[derive(Debug, Clone)]
+enum SeqMemo {
+    /// compiled to an artifact: the verdict lives in the per-device
+    /// verdict table under `(hash, device)`
+    Artifact(u64),
+    /// the full-build pass run produced no code: the failure — and its
+    /// message — is target-independent and never enters the verdict
+    /// table (hash 0 is not a code identity)
+    NoCode(Evaluation),
+}
+
 #[derive(Default)]
 struct Shard {
-    /// per-sequence fitness memo (identical sequence re-queried)
-    seq: HashMap<u64, Evaluation>,
-    /// generated-code cache: vPTX hash → (status, time)
-    ptx: HashMap<u64, (EvalStatus, f64)>,
+    /// per-sequence memo: sequence key → compiled-artifact hash (or the
+    /// target-independent no-code failure)
+    seq: HashMap<u64, SeqMemo>,
+    /// generated-code verdict cache: (artifact hash, device) →
+    /// (status, time) — one compile, priced per target
+    verdict: HashMap<(u64, &'static str), (EvalStatus, f64)>,
 }
 
 /// The two-level evaluation cache, sharded by key so concurrent workers
 /// contend only when they touch the same shard. Both levels store
-/// values that are deterministic functions of their key (the sequence
-/// key, and the combined full+validation generated-code hash), so
-/// "last writer wins" races are benign: racers write equal values.
+/// values that are deterministic functions of their key — the sequence
+/// key maps to the artifact hash (a pure function of the sequence), and
+/// `(artifact_hash, device)` determines the verdict — so insertion is
+/// **first-write-wins**: a later write with the same key must carry the
+/// same value (debug-asserted), and racers simply keep the first entry.
+///
+/// Keying verdicts by `(artifact_hash, device)` is what lets one
+/// `CacheShards` serve a benchmark across *all* targets: a second
+/// target reuses the sequence memo (and the no-code failures) for free
+/// and only fills in its own verdict column.
 pub struct CacheShards {
     shards: Vec<Mutex<Shard>>,
 }
@@ -351,33 +364,108 @@ impl CacheShards {
         &self.shards[(key % N_SHARDS as u64) as usize]
     }
 
-    pub fn get_seq(&self, key: u64) -> Option<Evaluation> {
-        self.shard(key).lock().unwrap().seq.get(&key).cloned()
-    }
-    pub fn put_seq(&self, key: u64, e: Evaluation) {
-        self.shard(key).lock().unwrap().seq.insert(key, e);
-    }
-    pub fn get_ptx(&self, key: u64) -> Option<(EvalStatus, f64)> {
-        self.shard(key).lock().unwrap().ptx.get(&key).cloned()
-    }
-    pub fn put_ptx(&self, key: u64, status: EvalStatus, time_us: f64) {
-        self.shard(key).lock().unwrap().ptx.insert(key, (status, time_us));
+    /// Resolve a sequence memo for one device: a no-code failure is
+    /// served directly; an artifact memo resolves through the verdict
+    /// table and misses when this device has not judged the artifact
+    /// yet (the caller then recompiles and fills the column in).
+    pub fn lookup_seq(&self, key: u64, device: &'static str) -> Option<Evaluation> {
+        let memo = self.shard(key).lock().unwrap().seq.get(&key).cloned()?;
+        match memo {
+            SeqMemo::NoCode(mut e) => {
+                e.cached = true;
+                Some(e)
+            }
+            SeqMemo::Artifact(h) => {
+                let (status, time_us) = self.get_verdict(h, device)?;
+                Some(Evaluation {
+                    status,
+                    time_us,
+                    ptx_hash: h,
+                    cached: true,
+                })
+            }
+        }
     }
 
-    /// (sequence-memo entries, vPTX entries) across all shards. Takes
+    /// Memoize an evaluated sequence: the artifact hash goes into the
+    /// sequence memo and the verdict into this device's column (no-code
+    /// failures memo whole). First-write-wins on both levels; the
+    /// scheduling-dependent `cached` flag is never stored.
+    pub fn memo_seq(&self, key: u64, e: &Evaluation, device: &'static str) {
+        if e.ptx_hash != 0 {
+            self.put_verdict(e.ptx_hash, device, e.status.clone(), e.time_us);
+        }
+        let mut g = self.shard(key).lock().unwrap();
+        match g.seq.entry(key) {
+            Entry::Occupied(o) => match o.get() {
+                SeqMemo::Artifact(h) => debug_assert!(
+                    e.ptx_hash == *h,
+                    "sequence-memo collision with a different artifact: \
+                     key {key:#x} maps to {h:#x}, writer carries {:#x}",
+                    e.ptx_hash
+                ),
+                SeqMemo::NoCode(first) => debug_assert!(
+                    e.ptx_hash == 0 && first.status == e.status,
+                    "sequence-memo collision with a different no-code verdict (key {key:#x})"
+                ),
+            },
+            Entry::Vacant(v) => {
+                if e.ptx_hash == 0 {
+                    v.insert(SeqMemo::NoCode(Evaluation {
+                        cached: false,
+                        ..e.clone()
+                    }));
+                } else {
+                    v.insert(SeqMemo::Artifact(e.ptx_hash));
+                }
+            }
+        }
+    }
+
+    pub fn get_verdict(&self, hash: u64, device: &'static str) -> Option<(EvalStatus, f64)> {
+        self.shard(hash)
+            .lock()
+            .unwrap()
+            .verdict
+            .get(&(hash, device))
+            .cloned()
+    }
+
+    /// First-write-wins verdict insertion: on a 64-bit hash collision —
+    /// or a racing equal-value write — the first entry is kept, and a
+    /// colliding write must carry the same verdict (debug-asserted;
+    /// verdicts are pure functions of `(hash, device)`).
+    pub fn put_verdict(&self, hash: u64, device: &'static str, status: EvalStatus, time_us: f64) {
+        let mut g = self.shard(hash).lock().unwrap();
+        match g.verdict.entry((hash, device)) {
+            Entry::Occupied(o) => {
+                let (s0, t0) = o.get();
+                debug_assert!(
+                    *s0 == status && t0.to_bits() == time_us.to_bits(),
+                    "verdict-cache collision: ({hash:#x}, {device}) holds {s0:?}/{t0} but the \
+                     writer carries {status:?}/{time_us}"
+                );
+            }
+            Entry::Vacant(v) => {
+                v.insert((status, time_us));
+            }
+        }
+    }
+
+    /// (sequence-memo entries, verdict entries) across all shards. Takes
     /// every shard lock in turn, so the count is a consistent snapshot
     /// only while no worker is writing — production callers (the CLI's
     /// post-exploration occupancy report, the cache-consistency tests)
     /// all read it after the pool has joined.
     pub fn len(&self) -> (usize, usize) {
         let mut seq = 0;
-        let mut ptx = 0;
+        let mut verdict = 0;
         for s in &self.shards {
             let g = s.lock().unwrap();
             seq += g.seq.len();
-            ptx += g.ptx.len();
+            verdict += g.verdict.len();
         }
-        (seq, ptx)
+        (seq, verdict)
     }
 
     /// True when neither level holds an entry (fresh-cache assertion in
@@ -706,25 +794,19 @@ pub fn explore_pairs_sched(
     parts
         .iter()
         .zip(grid)
-        .map(|(&(cx, cache), row)| {
+        .map(|(&(cx, _cache), row)| {
             let evals: Vec<Evaluation> = row
                 .into_iter()
                 .map(|o| o.expect("every work item evaluated"))
                 .collect();
-            let summary = summarize(cx, stream, evals);
-            // Re-seed the live cache with the canonical (stream-order)
-            // verdicts. During the parallel phase, racing workers may
-            // have stored whichever verdict they computed; overwriting
-            // with the replayed values makes the cache state — and hence
-            // every post-exploration consumer (minimization, -OX probes,
-            // cross-application) — independent of scheduling too.
-            for (seq, e) in stream.iter().zip(&summary.evaluations) {
-                cache.put_seq(EvalContext::seq_key(seq), e.clone());
-                if e.ptx_hash != 0 {
-                    cache.put_ptx(e.ptx_hash, e.status.clone(), e.time_us);
-                }
-            }
-            summary
+            // No cache re-seeding is needed after the fold: the memo
+            // maps sequences to artifact hashes and the verdict table to
+            // per-device verdicts — both pure functions of their keys,
+            // with the scheduling-dependent `cached` attribution never
+            // stored — so the live caches are already independent of
+            // scheduling for every post-exploration consumer
+            // (minimization, -OX probes, cross-application).
+            summarize(cx, stream, evals)
         })
         .collect()
 }
@@ -894,10 +976,9 @@ impl ReplayState {
 /// first occurrence (the `ReplayState` replay) before `observe` — so the
 /// `cached` flags match what the serial cache would have served. Same
 /// strategy + seed + budget ⇒ bit-identical summaries at every `jobs`
-/// level (property-tested in `rust/tests/strategy.rs`). Like
-/// [`explore_pairs`], the live caches are re-seeded with the canonical
-/// verdicts afterwards, so follow-up evaluations are
-/// scheduling-independent too.
+/// level (property-tested in `rust/tests/strategy.rs`). The live caches
+/// end up scheduling-independent too: the memo/verdict split stores
+/// only pure functions of its keys, never the `cached` attribution.
 pub fn run(
     strategy: &mut dyn SearchStrategy,
     parts: &[(&EvalContext, &CacheShards)],
@@ -934,40 +1015,37 @@ pub fn run(
         }
     }
     let mut out = Vec::with_capacity(nb);
-    for (bi, &(cx, cache)) in parts.iter().enumerate() {
-        let summary = summarize(cx, &streams[bi], std::mem::take(&mut evals[bi]));
-        // Re-seed the live cache with the canonical verdicts, exactly as
-        // explore_pairs does (see the comment there).
-        for (seq, e) in streams[bi].iter().zip(&summary.evaluations) {
-            cache.put_seq(EvalContext::seq_key(seq), e.clone());
-            if e.ptx_hash != 0 {
-                cache.put_ptx(e.ptx_hash, e.status.clone(), e.time_us);
-            }
-        }
-        out.push(summary);
+    for (bi, &(cx, _cache)) in parts.iter().enumerate() {
+        // no cache re-seeding: the memo/verdict split stores only pure
+        // functions of its keys (see the comment in `explore_pairs_sched`)
+        out.push(summarize(cx, &streams[bi], std::mem::take(&mut evals[bi])));
     }
     out
-}
-
-/// Everything the worker pool shares across threads must be `Send + Sync`
-/// (all IR/bench data is plain owned data — checked at compile time).
-#[allow(dead_code)]
-fn _assert_send_sync() {
-    fn ok<T: Send + Sync>() {}
-    ok::<Benchmark>();
-    ok::<BuiltBench>();
-    ok::<crate::ir::Module>();
-    ok::<Target>();
-    ok::<Buffers>();
-    ok::<EvalContext>();
-    ok::<CacheShards>();
-    ok::<Evaluation>();
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::bench_suite::benchmark_by_name;
+
+    /// Everything the worker pool shares across threads must be
+    /// `Send + Sync` (all IR/bench data is plain owned data — checked at
+    /// compile time). The compile-stage artifact is deliberately *not*
+    /// in this list: a `CompiledKernel` is thread-confined by design.
+    #[test]
+    fn shared_engine_types_are_send_sync() {
+        fn ok<T: Send + Sync>() {}
+        ok::<Benchmark>();
+        ok::<BuiltBench>();
+        ok::<crate::ir::Module>();
+        ok::<Target>();
+        ok::<Buffers>();
+        ok::<Compiler>();
+        ok::<SimBackend>();
+        ok::<EvalContext>();
+        ok::<CacheShards>();
+        ok::<Evaluation>();
+    }
 
     #[test]
     fn step_limit_derives_from_timeout_factor() {
@@ -990,13 +1068,57 @@ mod tests {
         let c = CacheShards::new();
         assert!(c.is_empty());
         for k in 0..64u64 {
-            c.put_ptx(k, EvalStatus::Ok, k as f64);
+            c.put_verdict(k, "nvidia-gp104", EvalStatus::Ok, k as f64);
         }
         for k in 0..64u64 {
-            assert_eq!(c.get_ptx(k), Some((EvalStatus::Ok, k as f64)));
+            assert_eq!(c.get_verdict(k, "nvidia-gp104"), Some((EvalStatus::Ok, k as f64)));
+            // verdicts are per device: another target's column is empty
+            assert_eq!(c.get_verdict(k, "amd-fiji"), None);
         }
-        assert_eq!(c.get_ptx(999), None);
+        assert_eq!(c.get_verdict(999, "nvidia-gp104"), None);
         assert_eq!(c.len(), (0, 64));
+        // first-write-wins: re-writing the same verdict is a no-op …
+        c.put_verdict(1, "nvidia-gp104", EvalStatus::Ok, 1.0);
+        assert_eq!(c.len(), (0, 64));
+        // … and another device's verdict for the same artifact is a new
+        // column, not an overwrite
+        c.put_verdict(1, "amd-fiji", EvalStatus::Ok, 3.0);
+        assert_eq!(c.get_verdict(1, "nvidia-gp104"), Some((EvalStatus::Ok, 1.0)));
+        assert_eq!(c.get_verdict(1, "amd-fiji"), Some((EvalStatus::Ok, 3.0)));
+        assert_eq!(c.len(), (0, 65));
+    }
+
+    #[test]
+    fn seq_memo_resolves_through_the_per_device_verdict_table() {
+        let c = CacheShards::new();
+        let e = Evaluation {
+            status: EvalStatus::Ok,
+            time_us: 5.0,
+            ptx_hash: 0xAB,
+            cached: false,
+        };
+        c.memo_seq(7, &e, "nvidia-gp104");
+        let hit = c.lookup_seq(7, "nvidia-gp104").unwrap();
+        assert!(hit.cached);
+        assert_eq!(hit.time_us, 5.0);
+        assert_eq!(hit.ptx_hash, 0xAB);
+        assert_eq!(hit.status, EvalStatus::Ok);
+        // same sequence, other device: the artifact hash is known but
+        // that device has no verdict yet — a miss, not a wrong hit
+        assert!(c.lookup_seq(7, "amd-fiji").is_none());
+        // no-code failures memo whole and serve every device (compile
+        // failures are target-independent)
+        let crash = Evaluation {
+            status: EvalStatus::Crash("boom".into()),
+            time_us: f64::INFINITY,
+            ptx_hash: 0,
+            cached: false,
+        };
+        c.memo_seq(9, &crash, "nvidia-gp104");
+        let hit = c.lookup_seq(9, "amd-fiji").unwrap();
+        assert!(hit.cached);
+        assert!(matches!(hit.status, EvalStatus::Crash(_)));
+        assert_eq!(c.len(), (2, 1));
     }
 
     #[test]

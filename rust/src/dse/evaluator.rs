@@ -1,0 +1,406 @@
+//! The staged evaluation layer: **compile → measure → validate** with
+//! typed artifacts.
+//!
+//! The paper's §3.1 side experiment shows that specialized phase orders
+//! are *device-specific* — orders found for the NVIDIA GPU do not
+//! transfer to AMD Fiji — which is why `sim::target` carries one cost
+//! table per device. The monolithic `evaluate` this module replaces
+//! fused compilation, measurement and validation into one body, so a
+//! whole exploration could only ever be priced on a single target. The
+//! split here makes the target boundary explicit:
+//!
+//! * [`Compiler::compile`]`(seq) -> `[`CompiledKernel`] — the
+//!   **target-independent** stage: run the phase order on the full-size
+//!   and validation-size builds, lower the full build to vPTX (keeping
+//!   the cleaned functions and their CFG analyses as
+//!   [`LoweredKernel`]s), and fingerprint the generated code with the
+//!   combined [`CompiledKernel::artifact_hash`]. The carried
+//!   [`LoweredKernel`]s are what makes measurement on a second target
+//!   free of analysis recomputation; the artifact additionally exposes
+//!   the final [`AnalysisManager`] snapshot of the pass run so a
+//!   sibling consumer querying the *optimized module's*
+//!   `DomTree`/`LoopForest` is served from the compile-time cache.
+//! * [`EvalBackend`] — the **per-device** stage: `measure` prices the
+//!   artifact's generated code, `validate` executes its validation
+//!   build against golden outputs. The two are independent
+//!   capabilities; the engine invokes `validate` first and prices only
+//!   artifacts that passed (failed candidates carry no time), so the
+//!   executed order is compile → validate → measure. The first
+//!   implementation, [`SimBackend`], pairs the GP104-/Fiji-like cost
+//!   model (`sim::cost`) with the SIMT executor (`sim::exec`),
+//!   instantiated per [`Target`].
+//!
+//! Because the compile stage is target-independent, one compile serves
+//! any number of backends: `repro transfer` compiles each benchmark's
+//! winning order exactly once and then measures/validates the artifact
+//! on every registered target (the compile count is observable via
+//! [`Compiler::compile_count`] and asserted independent of the target
+//! count in `rust/tests/evaluator.rs`). The engine's caches mirror the
+//! same split: the sequence memo maps to an artifact hash and the
+//! verdict cache is keyed `(artifact_hash, device)` — see
+//! `dse::engine::CacheShards`.
+//!
+//! Artifacts are deliberately **thread-confined** (the analysis
+//! snapshot and the lowered kernels hold `Rc`s): a worker compiles,
+//! measures and drops its artifact locally, and only the plain-data
+//! [`Evaluation`](crate::dse::Evaluation) crosses threads.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::bench_suite::{
+    execute, init_buffers, model_time_us_lowered, outputs_match, BuiltBench,
+};
+use crate::passes::{run_sequence_with, AnalysisManager, AnalysisStats, PassOutcome};
+use crate::sim::cost::LoweredKernel;
+use crate::sim::exec::{Buffers, ExecError};
+use crate::sim::target::Target;
+
+use super::explorer::EvalStatus;
+
+/// §2.4's 1% relative output tolerance for validation.
+pub const VALIDATION_TOLERANCE: f32 = 0.01;
+
+// ------------------------------------------------------------------ compile
+
+/// The compile stage: turns a phase order into a target-independent
+/// [`CompiledKernel`]. One `Compiler` exists per benchmark (inside the
+/// engine's `EvalContext`); it owns the unoptimized full-size and
+/// validation-size builds and clones them per compile, so any number of
+/// workers can compile through a shared `&Compiler` concurrently.
+pub struct Compiler {
+    small: BuiltBench,
+    full: BuiltBench,
+    /// verify the module after every changing pass (`--verify-each`)
+    /// instead of once per sequence
+    verify_each: bool,
+    /// serve cached `DomTree`/`LoopForest` across a sequence (production
+    /// default; the engine bench flips it off to measure the cache)
+    analysis_cache: bool,
+    /// total [`Compiler::compile`] calls — the observable behind the
+    /// compile-once contract of `repro transfer`
+    compiles: AtomicU64,
+}
+
+impl Compiler {
+    /// `small`/`full`: the benchmark's unoptimized validation-size and
+    /// full-size builds (what every compile clones and optimizes).
+    pub fn from_builds(small: BuiltBench, full: BuiltBench) -> Compiler {
+        Compiler {
+            small,
+            full,
+            verify_each: false,
+            analysis_cache: true,
+            compiles: AtomicU64::new(0),
+        }
+    }
+
+    /// The unoptimized validation-size build.
+    pub fn small_build(&self) -> &BuiltBench {
+        &self.small
+    }
+
+    /// The unoptimized full-size build.
+    pub fn full_build(&self) -> &BuiltBench {
+        &self.full
+    }
+
+    /// Enable/disable per-pass verification (`repro ... --verify-each`).
+    pub fn set_verify_each(&mut self, on: bool) {
+        self.verify_each = on;
+    }
+
+    /// Enable/disable the per-sequence analysis cache (bench-only knob;
+    /// results are bit-identical either way, only the speed changes).
+    pub fn set_analysis_cache(&mut self, on: bool) {
+        self.analysis_cache = on;
+    }
+
+    /// How many times [`Compiler::compile`] has run. `repro transfer`'s
+    /// compile-once contract is counter-asserted on this: evaluating a
+    /// winning order on N targets moves it by exactly 1.
+    pub fn compile_count(&self) -> u64 {
+        self.compiles.load(Ordering::Relaxed)
+    }
+
+    fn fresh_manager(&self) -> AnalysisManager {
+        if self.analysis_cache {
+            AnalysisManager::new()
+        } else {
+            AnalysisManager::disabled()
+        }
+    }
+
+    /// Run one phase order through both builds and package the
+    /// target-independent artifact. `Err` is the full-build pass
+    /// outcome when no optimized IR was produced (the paper's "no
+    /// optimized IR" bucket) — there is no code to hash, measure or
+    /// validate, so there is no artifact either.
+    pub fn compile(&self, seq: &[&'static str]) -> Result<CompiledKernel, PassOutcome> {
+        self.compiles.fetch_add(1, Ordering::Relaxed);
+        // ---- opt on the full-size module ----
+        let mut full = self.full.clone();
+        let mut am = self.fresh_manager();
+        match run_sequence_with(&mut full.module, seq, self.verify_each, &mut am) {
+            PassOutcome::Ok => {}
+            other => return Err(other),
+        }
+        // ---- one lowering serves the artifact hash and every later
+        // measurement: cleaned functions and CFG analyses are kept ----
+        let lowered: Vec<LoweredKernel> = full
+            .module
+            .kernels
+            .iter()
+            .map(|k| LoweredKernel::lower(k, &full.module))
+            .collect();
+        // The verdict a backend attaches to this artifact covers
+        // validation, and validation runs the *small* build — so the
+        // artifact hash must cover the small build's generated code too,
+        // or two orders that agree on the full code but diverge at
+        // validation size would wrongly share a verdict.
+        let mut h: u64 = 0xcbf29ce484222325;
+        let mut fold = |x: u64| {
+            h ^= x;
+            h = h.wrapping_mul(0x100000001b3);
+        };
+        for lk in &lowered {
+            fold(lk.prog.content_hash());
+        }
+        let mut small = self.small.clone();
+        let mut am_small = self.fresh_manager();
+        let small_outcome =
+            run_sequence_with(&mut small.module, seq, self.verify_each, &mut am_small);
+        match &small_outcome {
+            PassOutcome::Ok => {
+                for p in &crate::codegen::emit_module(&small.module) {
+                    fold(p.content_hash());
+                }
+            }
+            // a small-build pass crash is part of the verdict; key it by
+            // its (deterministic) outcome so equal hashes imply equal fate
+            other => fold(crate::util::fnv1a(format!("{other:?}").as_bytes())),
+        }
+        Ok(CompiledKernel {
+            full,
+            lowered,
+            small,
+            small_outcome,
+            artifact_hash: h,
+            analyses: am,
+        })
+    }
+}
+
+/// The compile stage's typed artifact: everything target-independent
+/// that one phase order produced. Compile once, then hand it to any
+/// number of [`EvalBackend`]s.
+pub struct CompiledKernel {
+    /// optimized full-size build (the program measurement prices)
+    pub full: BuiltBench,
+    /// the full build's backend lowering — cleaned functions, vPTX
+    /// programs and (lazily computed) CFG analyses — shared by every
+    /// per-target measurement
+    pub lowered: Vec<LoweredKernel>,
+    /// optimized validation-size build (what [`EvalBackend::validate`]
+    /// executes)
+    pub small: BuiltBench,
+    /// outcome of the validation build's pass run: a crash here is part
+    /// of the verdict (it is keyed into the artifact hash), not a
+    /// compile error
+    pub small_outcome: PassOutcome,
+    /// combined content hash over the full and validation vPTX — the
+    /// generated-code identity the verdict cache keys on (never 0; 0 is
+    /// the engine's "no code produced" sentinel)
+    pub artifact_hash: u64,
+    /// final analysis-manager snapshot of the full-build pass run
+    analyses: AnalysisManager,
+}
+
+impl CompiledKernel {
+    /// The carried analysis snapshot: a sibling consumer querying the
+    /// optimized module's `DomTree`/`LoopForest` is served from the
+    /// compile-time cache instead of recomputing.
+    pub fn analyses_mut(&mut self) -> &mut AnalysisManager {
+        &mut self.analyses
+    }
+
+    /// Recomputation/hit counters of the carried snapshot.
+    pub fn analysis_stats(&self) -> AnalysisStats {
+        self.analyses.stats()
+    }
+}
+
+// ------------------------------------------------------------------ backend
+
+/// What a backend reports for one artifact on its device.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Measurement {
+    /// modelled wall time (µs) at the full dataset shape
+    pub time_us: f64,
+}
+
+/// The per-device half of the staged evaluator. A backend owns
+/// everything device-specific about pricing and running one benchmark's
+/// artifacts; the compile stage knows nothing about it, which is what
+/// makes compile-once/measure-on-N-targets work.
+pub trait EvalBackend {
+    /// Stable device identity — the target half of the engine's verdict
+    /// cache key `(artifact_hash, device)`.
+    fn device(&self) -> &'static str;
+
+    /// Price the artifact's generated code on this device.
+    fn measure(&self, artifact: &CompiledKernel) -> Measurement;
+
+    /// Execute the artifact's validation build against golden outputs
+    /// and bucket the outcome (§3.2): wrong output, execution failure,
+    /// step-budget timeout, or a validation-build pass crash.
+    fn validate(&self, artifact: &CompiledKernel, golden: &Buffers) -> EvalStatus;
+}
+
+/// The first [`EvalBackend`]: the GP104-/Fiji-like static cost model
+/// for `measure` and the SIMT functional executor for `validate`,
+/// instantiated per benchmark × [`Target`].
+pub struct SimBackend {
+    target: Target,
+    /// per-kernel baseline max trip counts — pessimistic measurement
+    /// fallback when a candidate's loop bounds become unanalyzable
+    baseline_trips: Vec<f64>,
+    /// validation step budget (20× the baseline's interpreter steps)
+    step_limit: u64,
+}
+
+impl SimBackend {
+    /// `baseline_trips`: per-kernel baseline maximum trip counts on this
+    /// target (`bench_suite::baseline_max_trips`); `step_limit`: the
+    /// validation step budget (`engine::step_limit_for`).
+    pub fn new(target: Target, baseline_trips: Vec<f64>, step_limit: u64) -> SimBackend {
+        SimBackend {
+            target,
+            baseline_trips,
+            step_limit,
+        }
+    }
+
+    pub fn target(&self) -> &Target {
+        &self.target
+    }
+
+    pub fn step_limit(&self) -> u64 {
+        self.step_limit
+    }
+
+    /// Override the validation step budget. Production budgets derive
+    /// from the baseline probe; tests use this to drive the executor
+    /// into its `StepLimit` path through a full `evaluate` call.
+    pub fn set_step_limit(&mut self, limit: u64) {
+        self.step_limit = limit;
+    }
+}
+
+impl EvalBackend for SimBackend {
+    fn device(&self) -> &'static str {
+        self.target.name
+    }
+
+    fn measure(&self, artifact: &CompiledKernel) -> Measurement {
+        Measurement {
+            time_us: model_time_us_lowered(
+                &artifact.lowered,
+                &artifact.full.kernels,
+                artifact.full.seq_repeat,
+                &self.target,
+                Some(&self.baseline_trips),
+            ),
+        }
+    }
+
+    fn validate(&self, artifact: &CompiledKernel, golden: &Buffers) -> EvalStatus {
+        match &artifact.small_outcome {
+            PassOutcome::Ok => {
+                let mut bufs = init_buffers(&artifact.small);
+                match execute(&artifact.small, &mut bufs, self.step_limit) {
+                    Ok(_) => {
+                        if outputs_match(&artifact.small, &bufs, golden, VALIDATION_TOLERANCE) {
+                            EvalStatus::Ok
+                        } else {
+                            EvalStatus::InvalidOutput
+                        }
+                    }
+                    Err(ExecError::StepLimit) => EvalStatus::Timeout,
+                    Err(e) => EvalStatus::ExecFailure(e.to_string()),
+                }
+            }
+            other => EvalStatus::Crash(format!("{other:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite::{benchmark_by_name, Variant};
+
+    fn compiler_for(name: &str) -> Compiler {
+        let b = benchmark_by_name(name).unwrap();
+        Compiler::from_builds(b.build_small(Variant::OpenCl), b.build_full(Variant::OpenCl))
+    }
+
+    #[test]
+    fn compile_is_deterministic_and_counted() {
+        let c = compiler_for("GEMM");
+        assert_eq!(c.compile_count(), 0);
+        let a = c.compile(&[]).unwrap();
+        let b = c.compile(&[]).unwrap();
+        assert_eq!(c.compile_count(), 2);
+        assert_eq!(a.artifact_hash, b.artifact_hash);
+        assert_ne!(a.artifact_hash, 0, "0 is the no-code sentinel");
+        // an order that changes the generated code changes the identity
+        let seq = ["cfl-anders-aa", "loop-reduce", "cfl-anders-aa", "licm"];
+        let d = c.compile(&seq).unwrap();
+        assert_ne!(a.artifact_hash, d.artifact_hash);
+        assert!(matches!(d.small_outcome, PassOutcome::Ok));
+    }
+
+    #[test]
+    fn artifact_carries_a_warm_analysis_snapshot() {
+        let c = compiler_for("GEMM");
+        let mut ck = c.compile(&["cfl-anders-aa", "licm"]).unwrap();
+        let before = ck.analysis_stats();
+        assert!(
+            before.dom_computed + before.loops_computed > 0,
+            "licm queries the manager during the compile"
+        );
+        // a sibling consumer re-querying the optimized module's analyses
+        // is served from the carried snapshot — no recomputation
+        let f0 = ck.full.module.kernels[0].clone();
+        let _ = ck.analyses_mut().dom_tree(0, &f0);
+        let after = ck.analysis_stats();
+        assert_eq!(after.dom_computed, before.dom_computed);
+        assert_eq!(after.dom_hits, before.dom_hits + 1);
+    }
+
+    #[test]
+    fn one_artifact_prices_differently_per_backend() {
+        let b = benchmark_by_name("GEMM").unwrap();
+        let c = compiler_for("GEMM");
+        let seq = ["cfl-anders-aa", "loop-reduce", "cfl-anders-aa", "licm"];
+        let ck = c.compile(&seq).unwrap();
+        let full = b.build_full(Variant::OpenCl);
+        let backends: Vec<SimBackend> = Target::all()
+            .into_iter()
+            .map(|t| {
+                let trips = crate::bench_suite::baseline_max_trips(&full, &t);
+                SimBackend::new(t, trips, 1_000_000)
+            })
+            .collect();
+        let times: Vec<f64> = backends.iter().map(|be| be.measure(&ck).time_us).collect();
+        assert_eq!(c.compile_count(), 1, "one compile, every backend");
+        assert!(times.iter().all(|t| t.is_finite() && *t > 0.0));
+        assert_ne!(
+            times[0].to_bits(),
+            times[1].to_bits(),
+            "the two cost tables must price the same code differently"
+        );
+        assert_eq!(backends[0].device(), "nvidia-gp104");
+        assert_eq!(backends[1].device(), "amd-fiji");
+    }
+}

@@ -1,9 +1,10 @@
 //! The DSE evaluation loop: outcome types plus the per-benchmark
 //! [`Explorer`] façade over the strategy-driven evaluation engine
 //! ([`crate::dse::engine::run`]). The `Explorer` owns one immutable
-//! [`EvalContext`] and one [`CacheShards`] instance; batched drivers
-//! borrow both (via [`Explorer::parts`]) and fan evaluations out across
-//! a worker pool, while [`Explorer::explore`] /
+//! [`EvalContext`] — the staged compile → measure → validate evaluator
+//! of [`crate::dse::evaluator`] — and one [`CacheShards`] instance;
+//! batched drivers borrow both (via [`Explorer::parts`]) and fan
+//! evaluations out across a worker pool, while [`Explorer::explore`] /
 //! [`Explorer::explore_with`] run a
 //! [`SearchStrategy`](crate::dse::strategy::SearchStrategy) serially
 //! over this one benchmark.

@@ -13,7 +13,14 @@
 //!   4. measure with the GPU cost model at the paper-default dataset
 //!      shape, with a timeout at 20× the baseline.
 //!
-//! The per-candidate pipeline lives in [`engine::EvalContext`]. What to
+//! The per-candidate pipeline lives in [`engine::EvalContext`], staged
+//! through the [`evaluator`] API: a target-independent
+//! [`evaluator::Compiler`] produces a typed
+//! [`evaluator::CompiledKernel`] artifact, and a per-device
+//! [`evaluator::EvalBackend`] (cost model + SIMT executor) attaches the
+//! verdict (validate first, then measure what validated) — so one
+//! compile is priced on any number of targets (`repro transfer`, the
+//! §3.1 cross-device experiment). What to
 //! evaluate is decided by a pluggable [`strategy::SearchStrategy`]
 //! (`repro explore --strategy fixed|permute|hillclimb|knn`): the engine
 //! loop ([`engine::run`]) asks the strategy for batches of proposals,
@@ -30,12 +37,14 @@
 //! single-process run (`repro merge`).
 
 pub mod engine;
+pub mod evaluator;
 pub mod explorer;
 pub mod seqgen;
 pub mod shard;
 pub mod strategy;
 
 pub use engine::{explore_all, CacheShards, EvalContext, Scheduler};
+pub use evaluator::{CompiledKernel, Compiler, EvalBackend, Measurement, SimBackend};
 pub use explorer::{EvalStatus, Evaluation, Explorer, ExplorationSummary, Winner};
 pub use seqgen::SeqGen;
 pub use shard::{merge_shards, ShardRun, ShardSpec, StreamSpec};

@@ -544,8 +544,10 @@ pub fn merge_shards(shards: &[ShardRun]) -> Result<Vec<ExplorationSummary>, Stri
         }
         if s.target != first.target {
             return Err(format!(
-                "merge: shards from different targets ({} vs {})",
-                first.target, s.target
+                "merge: shard {} ran on target {} but shard {} ran on target {} — \
+                 cross-target shards cannot fold into one summary (the cost tables \
+                 differ; use `repro transfer` for cross-device evaluation)",
+                first.spec, first.target, s.spec, s.target
             ));
         }
         if s.seed != first.seed {
@@ -721,10 +723,13 @@ mod tests {
         );
         let mut other_target = run(2, 2, 7);
         other_target.target = "amd-fiji".to_string();
+        let err = merge_shards(&[run(1, 2, 7), other_target]).unwrap_err();
+        // the message must name BOTH targets (and which shard ran where)
         assert!(
-            merge_shards(&[run(1, 2, 7), other_target]).is_err(),
-            "target mismatch"
+            err.contains("nvidia-gp104") && err.contains("amd-fiji"),
+            "{err}"
         );
+        assert!(err.contains("1/2") && err.contains("2/2"), "{err}");
         let mut other_stream = run(2, 2, 7);
         other_stream.stream = StreamSpec::Inline(vec![vec!["licm"], vec!["dse"]]);
         assert!(

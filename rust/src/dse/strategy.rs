@@ -6,7 +6,10 @@
 //! module is the strategy side of that split: a [`SearchStrategy`]
 //! proposes batches of `(benchmark, sequence)` candidates and observes
 //! the resulting [`Evaluation`]s; the engine ([`engine::run`](crate::dse::engine::run)) owns
-//! evaluation, parallelism, caching, and summarization.
+//! evaluation — the staged compile → measure → validate pipeline of
+//! [`crate::dse::evaluator`] — plus parallelism, caching, and
+//! summarization. Strategies stay device-agnostic: the same strategy
+//! runs unchanged against any evaluation backend/target.
 //!
 //! **Determinism contract.** Same strategy + same seed + any `--jobs`
 //! value ⇒ bit-identical

@@ -10,13 +10,15 @@
 //! Only *relative* numbers matter: every experiment reports ratios
 //! between variants priced by the same model.
 
+use std::cell::OnceCell;
 use std::collections::HashMap;
+use std::rc::Rc;
 
 use crate::analysis::AffineCtx;
 use crate::codegen::{MemClass, PtxKind, PtxProgram};
 use crate::ir::dom::DomTree;
 use crate::ir::loops::LoopForest;
-use crate::ir::{BlockId, Function, Op, Value};
+use crate::ir::{BlockId, Function, Module, Op, Value};
 use crate::sim::target::Target;
 
 #[derive(Debug, Clone)]
@@ -61,7 +63,24 @@ pub fn estimate_time_unknown(
     // cost model prices freshly lowered clones, so there is no pipeline
     // cache to share, but construction stays centralized in passes/
     let (dt, lf) = crate::passes::analyses::analyses_of(f);
+    estimate_time_analyzed(f, prog, grid, target, unknown_trips, &dt, &lf)
+}
 
+/// [`estimate_time_unknown`] with caller-provided CFG analyses — the
+/// compile-once artifact path (see [`LoweredKernel`]): a
+/// [`DomTree`]/[`LoopForest`] computed once at compile time is reused by
+/// every per-target pricing of the same generated code. `dt`/`lf` must
+/// be `f`'s own analyses; the result is bit-identical to recomputing
+/// them.
+pub fn estimate_time_analyzed(
+    f: &Function,
+    prog: &PtxProgram,
+    grid: (usize, usize),
+    target: &Target,
+    unknown_trips: f64,
+    dt: &DomTree,
+    lf: &LoopForest,
+) -> CostBreakdown {
     // ---- loop trip counts, outer-first, with averaged substitution ----
     let mut env: HashMap<Value, f64> = HashMap::new();
     env.insert(Value::GlobalId(0), (grid.0.max(1) as f64 - 1.0) / 2.0);
@@ -73,12 +92,12 @@ pub fn estimate_time_unknown(
     loop_order.sort_by_key(|&i| lf.loops[i].depth);
     let mut trips: HashMap<usize, f64> = HashMap::new();
     for &li in &loop_order {
-        let t = trip_count(f, &lf, li, &mut env).unwrap_or(unknown_trips);
+        let t = trip_count(f, lf, li, &mut env).unwrap_or(unknown_trips);
         trips.insert(li, t.max(0.0));
     }
 
     // ---- block frequencies ----
-    let freq = block_freqs(f, &dt, &lf, &trips);
+    let freq = block_freqs(f, dt, lf, &trips);
 
     // ---- price each block (roofline-style: ALU issues overlap with
     // in-flight memory latency, so a block costs max(mem, alu) plus a
@@ -181,6 +200,57 @@ pub fn estimate_time_unknown(
             .iter()
             .map(|(&li, &t)| (lf.loops[li].header, t))
             .collect(),
+    }
+}
+
+/// One kernel of a compile-stage artifact: the backend-cleaned function,
+/// its vPTX program, and the CFG analyses the cost model prices with.
+/// The DSE's compile stage (`dse::evaluator::Compiler`) lowers each
+/// kernel exactly once; measuring the artifact on another target then
+/// re-walks only the cost tables — the lowering and its
+/// `DomTree`/`LoopForest` are never recomputed (the ROADMAP's
+/// analysis-sharing-across-the-evaluation-boundary item).
+///
+/// Thread-confined by design (`Rc`, like the analysis manager): an
+/// artifact lives and dies on the worker that compiled it.
+pub struct LoweredKernel {
+    /// the machine-cleaned clone the vPTX block ranges refer to
+    pub func: Function,
+    pub prog: PtxProgram,
+    /// computed on first pricing: artifacts that fail validation are
+    /// never measured, so they never pay for analyses either
+    analyses: OnceCell<(Rc<DomTree>, Rc<LoopForest>)>,
+}
+
+impl LoweredKernel {
+    /// Lower one kernel of `m` through the backend
+    /// ([`crate::codegen::lower`]), keeping the cleaned function the
+    /// cost model needs.
+    pub fn lower(k: &Function, m: &Module) -> LoweredKernel {
+        let (func, prog) = crate::codegen::lower(k, m);
+        LoweredKernel {
+            func,
+            prog,
+            analyses: OnceCell::new(),
+        }
+    }
+
+    /// The cleaned function's `DomTree`/`LoopForest`, computed on first
+    /// use and shared by every later estimate.
+    pub fn analyses(&self) -> &(Rc<DomTree>, Rc<LoopForest>) {
+        self.analyses
+            .get_or_init(|| crate::passes::analyses::analyses_of(&self.func))
+    }
+
+    /// [`estimate_time_analyzed`] over the carried analyses.
+    pub fn estimate(
+        &self,
+        grid: (usize, usize),
+        target: &Target,
+        unknown_trips: f64,
+    ) -> CostBreakdown {
+        let (dt, lf) = self.analyses();
+        estimate_time_analyzed(&self.func, &self.prog, grid, target, unknown_trips, dt, lf)
     }
 }
 
@@ -622,6 +692,26 @@ mod tests {
         assert!(c1.time_us < c0.time_us);
         let ratio = c0.time_us / c1.time_us;
         assert!(ratio > 1.05 && ratio < 2.0, "unroll win is moderate: {ratio:.2}");
+    }
+
+    #[test]
+    fn lowered_kernel_estimate_matches_fresh_lowering_on_every_target() {
+        // the compile-once artifact path must price bit-identically to a
+        // fresh lower+analyze on each registered target
+        let m = gemm_like();
+        let lk = LoweredKernel::lower(&m.kernels[0], &m);
+        for t in Target::all() {
+            let (f, p) = crate::codegen::lower(&m.kernels[0], &m);
+            let fresh = estimate_time(&f, &p, (512, 1), &t);
+            let got = lk.estimate((512, 1), &t, UNKNOWN_TRIPS_DEFAULT);
+            assert_eq!(got.time_us.to_bits(), fresh.time_us.to_bits(), "{}", t.name);
+            assert_eq!(got.cycles_per_thread.to_bits(), fresh.cycles_per_thread.to_bits());
+        }
+        // the analyses were computed once, then shared across targets
+        let (dt_a, _) = lk.analyses();
+        let dt_a = std::rc::Rc::clone(dt_a);
+        let (dt_b, _) = lk.analyses();
+        assert!(std::rc::Rc::ptr_eq(&dt_a, dt_b));
     }
 
     #[test]

@@ -6,6 +6,15 @@
 //! against an independent reference (ours comes from the JAX/Pallas
 //! artifacts via PJRT). Miscompiles from the documented pass bugs show up
 //! here as wrong output, out-of-bounds accesses, or non-termination.
+//!
+//! The staged evaluator's validate stage
+//! (`dse::evaluator::SimBackend::validate`) maps [`ExecError`] into the
+//! §3.2 outcome buckets: `StepLimit` becomes `EvalStatus::Timeout`;
+//! every other execution error (`OutOfBounds`, `DivideByZero`,
+//! `Malformed`) an `EvalStatus::ExecFailure`; and a pass crash on the
+//! validation build an `EvalStatus::Crash`. All three paths are
+//! exercised through a full `evaluate` call in
+//! `rust/tests/evaluator.rs`.
 
 use std::collections::HashMap;
 

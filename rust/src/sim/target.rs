@@ -14,6 +14,16 @@ pub enum TargetKind {
     AmdFiji,
 }
 
+impl TargetKind {
+    /// Human-readable device description (the `repro targets` listing).
+    pub fn describe(&self) -> &'static str {
+        match self {
+            TargetKind::NvidiaGp104 => "NVIDIA GP104 (GTX 1070)",
+            TargetKind::AmdFiji => "AMD Fiji (R9 Fury X)",
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct Target {
     pub kind: TargetKind,
@@ -122,6 +132,23 @@ impl Target {
         }
     }
 
+    /// Every registered device model, in registry order. `repro targets`
+    /// lists this set and `repro transfer` evaluates winning phase
+    /// orders across all of it, so adding a target here is enough to
+    /// make it discoverable and transfer-evaluated.
+    pub fn all() -> Vec<Target> {
+        vec![Target::gp104(), Target::fiji()]
+    }
+
+    /// The short `--target` spellings accepted for this device besides
+    /// its canonical [`Target::name`].
+    pub fn aliases(&self) -> &'static [&'static str] {
+        match self.kind {
+            TargetKind::NvidiaGp104 => &["gp104", "nvidia"],
+            TargetKind::AmdFiji => &["fiji", "amd"],
+        }
+    }
+
     pub fn by_name(name: &str) -> Option<Target> {
         match name {
             "nvidia-gp104" | "gp104" | "nvidia" => Some(Target::gp104()),
@@ -150,6 +177,21 @@ mod tests {
         assert_eq!(Target::by_name("gp104").unwrap().kind, TargetKind::NvidiaGp104);
         assert_eq!(Target::by_name("amd-fiji").unwrap().kind, TargetKind::AmdFiji);
         assert!(Target::by_name("tpu").is_none());
+    }
+
+    #[test]
+    fn registry_names_and_aliases_all_resolve() {
+        let all = Target::all();
+        assert_eq!(all.len(), 2);
+        for t in &all {
+            assert_eq!(Target::by_name(t.name).unwrap().kind, t.kind);
+            for a in t.aliases() {
+                assert_eq!(Target::by_name(a).unwrap().kind, t.kind, "alias {a}");
+            }
+            assert!(!t.kind.describe().is_empty());
+        }
+        // registry names are unique (the verdict cache keys on them)
+        assert_ne!(all[0].name, all[1].name);
     }
 
     #[test]

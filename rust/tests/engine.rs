@@ -138,6 +138,23 @@ fn cache_is_consistent_under_concurrency() {
 }
 
 #[test]
+fn fiji_exploration_is_jobs_deterministic_too() {
+    // the determinism contract is per target, not just for the default
+    // gp104 tables — the artifact/verdict cache split keys verdicts by
+    // (hash, device), and fiji's column must behave identically
+    let benches = vec![benchmark_by_name("GEMM").unwrap()];
+    let mut stream = SeqGen::stream(0xF111, 18);
+    stream.push(Vec::new()); // the -O0 anchor: always validates
+    let t = Target::fiji();
+    let serial = engine::explore_all(&benches, &stream, &t, 1);
+    let parallel = engine::explore_all(&benches, &stream, &t, 3);
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_bit_identical(a, b);
+    }
+    assert!(serial[0].n_ok > 0, "the fiji run must evaluate something real");
+}
+
+#[test]
 fn jobs_zero_resolves_to_all_cores_and_stays_identical() {
     let benches = vec![benchmark_by_name("GESUMMV").unwrap()];
     let stream = SeqGen::stream(0x9, 16);

@@ -1,0 +1,361 @@
+//! Acceptance tests for the staged compile → measure → validate
+//! evaluator redesign:
+//!
+//! * the staged pipeline is **bit-identical** to the pre-redesign
+//!   monolithic evaluation (reconstructed here from public pieces);
+//! * one compile serves any number of targets (`repro transfer`'s
+//!   compile-once contract, counter-asserted);
+//! * the SIMT executor's failure paths (`OutOfBounds`, `DivideByZero`,
+//!   `StepLimit`) surface as the right `EvalStatus` variants through a
+//!   full `evaluate` call;
+//! * the split cache (sequence memo → artifact hash, per-device verdict
+//!   table) serves one benchmark across targets without cross-device
+//!   contamination.
+
+use phaseord::bench_suite::{
+    baseline_max_trips, benchmark_by_name, execute, init_buffers, model_time_us_ref,
+    outputs_match, Benchmark, BuiltBench, Dims, KernelInfo, Variant,
+};
+use phaseord::codegen::emit_module;
+use phaseord::coordinator::experiments::{transfer_matrix, ExpConfig, ExpCtx};
+use phaseord::dse::engine::{self, CacheShards, EvalContext};
+use phaseord::dse::{EvalStatus, Explorer, SeqGen};
+use phaseord::ir::{AddrSpace, KernelBuilder, Module, Op, Ty};
+use phaseord::passes::{run_sequence, PassOutcome};
+use phaseord::sim::exec::{Buffers, ExecError};
+use phaseord::sim::Target;
+use phaseord::util::fnv1a;
+
+// ------------------------------------------------------------ golden
+
+/// The pre-redesign monolithic evaluation pipeline, reconstructed from
+/// public pieces exactly as `EvalContext::evaluate` used to fuse it:
+/// opt on both builds → combined vPTX hash → validate on small inputs →
+/// measure with the cost model under the 20× timeout. No caches.
+fn monolithic_eval(
+    b: &Benchmark,
+    target: &Target,
+    golden: &Buffers,
+    baseline_time_us: f64,
+    baseline_trips: &[f64],
+    step_limit: u64,
+    seq: &[&'static str],
+) -> (EvalStatus, f64, u64) {
+    let mut full = b.build_full(Variant::OpenCl);
+    match run_sequence(&mut full.module, seq, false) {
+        PassOutcome::Ok => {}
+        other => return (EvalStatus::Crash(format!("{other:?}")), f64::INFINITY, 0),
+    }
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut fold = |x: u64| {
+        h ^= x;
+        h = h.wrapping_mul(0x100000001b3);
+    };
+    for p in &emit_module(&full.module) {
+        fold(p.content_hash());
+    }
+    let mut small = b.build_small(Variant::OpenCl);
+    let sout = run_sequence(&mut small.module, seq, false);
+    match &sout {
+        PassOutcome::Ok => {
+            for p in &emit_module(&small.module) {
+                fold(p.content_hash());
+            }
+        }
+        other => fold(fnv1a(format!("{other:?}").as_bytes())),
+    }
+    let status = match sout {
+        PassOutcome::Ok => {
+            let mut bufs = init_buffers(&small);
+            match execute(&small, &mut bufs, step_limit) {
+                Ok(_) => {
+                    if outputs_match(&small, &bufs, golden, 0.01) {
+                        EvalStatus::Ok
+                    } else {
+                        EvalStatus::InvalidOutput
+                    }
+                }
+                Err(ExecError::StepLimit) => EvalStatus::Timeout,
+                Err(e) => EvalStatus::ExecFailure(e.to_string()),
+            }
+        }
+        other => EvalStatus::Crash(format!("{other:?}")),
+    };
+    let time_us = if status.is_ok() {
+        let t = model_time_us_ref(&full, target, Some(baseline_trips));
+        if t > baseline_time_us * 20.0 {
+            return (EvalStatus::Timeout, f64::INFINITY, h);
+        }
+        t
+    } else {
+        f64::INFINITY
+    };
+    (status, time_us, h)
+}
+
+/// The redesign's golden: over a random stream, the staged evaluator
+/// must reproduce the monolithic pipeline bit for bit — same status,
+/// same time (to the last f64 bit), same artifact hash.
+#[test]
+fn staged_evaluator_is_bit_identical_to_the_monolithic_pipeline() {
+    // COVAR exercises the invalid-output bucket too (dse bug model)
+    for name in ["COVAR", "GEMM"] {
+        let b = benchmark_by_name(name).unwrap();
+        let target = Target::gp104();
+        let golden = Explorer::golden_from_interpreter(&b);
+        let cx = EvalContext::new(&b, target.clone(), golden.clone());
+        let trips = baseline_max_trips(&b.build_full(Variant::OpenCl), &target);
+        let stream = SeqGen::stream(0x90D, 12);
+        for seq in &stream {
+            // fresh cache per sequence: the monolith has no cache at all
+            let got = cx.evaluate(seq, &CacheShards::new());
+            let (status, time_us, hash) = monolithic_eval(
+                &b,
+                &target,
+                &golden,
+                cx.baseline_time_us,
+                &trips,
+                cx.step_limit(),
+                seq,
+            );
+            assert_eq!(got.status, status, "{name} {seq:?}");
+            assert_eq!(got.time_us.to_bits(), time_us.to_bits(), "{name} {seq:?}");
+            assert_eq!(got.ptx_hash, hash, "{name} {seq:?}");
+            assert!(!got.cached, "{name} {seq:?}");
+        }
+    }
+}
+
+// ------------------------------------------------------------ transfer
+
+#[test]
+fn compile_once_measures_on_every_target() {
+    let b = benchmark_by_name("GEMM").unwrap();
+    let golden = engine::golden_from_interpreter(&b);
+    let cx_gp = EvalContext::new(&b, Target::gp104(), golden.clone());
+    let cx_fj = EvalContext::new(&b, Target::fiji(), golden);
+    let seq: Vec<&'static str> = vec!["cfl-anders-aa", "loop-reduce", "cfl-anders-aa", "licm"];
+    let before = cx_gp.compiler().compile_count();
+    let ck = cx_gp.compile(&seq).expect("the winning order compiles");
+    let on_gp = cx_gp.evaluate_artifact(&ck);
+    let on_fj = cx_fj.evaluate_artifact(&ck);
+    // ONE compile served both targets
+    assert_eq!(cx_gp.compiler().compile_count(), before + 1);
+    assert_eq!(cx_fj.compiler().compile_count(), 0);
+    assert!(on_gp.status.is_ok() && on_fj.status.is_ok());
+    assert_eq!(on_gp.ptx_hash, on_fj.ptx_hash, "same artifact identity");
+    // …and each measurement is bit-identical to a fully staged
+    // evaluation on that target
+    let gp_full = cx_gp.evaluate(&seq, &CacheShards::new());
+    let fj_full = cx_fj.evaluate(&seq, &CacheShards::new());
+    assert_eq!(on_gp.time_us.to_bits(), gp_full.time_us.to_bits());
+    assert_eq!(on_fj.time_us.to_bits(), fj_full.time_us.to_bits());
+    // the §3.1 phenomenon is visible: the same order prices differently
+    assert_ne!(on_gp.time_us.to_bits(), on_fj.time_us.to_bits());
+}
+
+#[test]
+fn one_cache_serves_a_benchmark_across_targets() {
+    let b = benchmark_by_name("GEMM").unwrap();
+    let golden = engine::golden_from_interpreter(&b);
+    let cx_gp = EvalContext::new(&b, Target::gp104(), golden.clone());
+    let cx_fj = EvalContext::new(&b, Target::fiji(), golden);
+    let shared = CacheShards::new();
+    let seq: Vec<&'static str> = vec!["cfl-anders-aa", "loop-reduce", "cfl-anders-aa", "licm"];
+    let on_gp = cx_gp.evaluate(&seq, &shared);
+    let on_fj = cx_fj.evaluate(&seq, &shared);
+    assert_eq!(on_gp.ptx_hash, on_fj.ptx_hash);
+    assert!(
+        !on_fj.cached,
+        "fiji's first verdict must be computed, never served from gp104's column"
+    );
+    assert_ne!(on_gp.time_us.to_bits(), on_fj.time_us.to_bits());
+    // each equals an isolated single-target evaluation (no contamination)
+    let solo = cx_fj.evaluate(&seq, &CacheShards::new());
+    assert_eq!(solo.status, on_fj.status);
+    assert_eq!(solo.time_us.to_bits(), on_fj.time_us.to_bits());
+    // now both device columns are filled: both hit
+    assert!(cx_gp.evaluate(&seq, &shared).cached);
+    assert!(cx_fj.evaluate(&seq, &shared).cached);
+    let (memos, verdicts) = shared.len();
+    assert_eq!(memos, 1, "one target-independent sequence memo");
+    assert_eq!(verdicts, 2, "one verdict per (artifact, device)");
+}
+
+/// End-to-end `repro transfer`: the compile count equals the number of
+/// distinct (benchmark, winning order) artifacts — independent of the
+/// target count — and the matrix diagonal reproduces each exploration's
+/// own speedups.
+#[test]
+fn transfer_compiles_once_per_artifact_and_matches_the_diagonal() {
+    let cfg = ExpConfig {
+        n_seqs: 8,
+        seed: 0xFACE,
+        jobs: 2,
+        ..ExpConfig::default()
+    };
+    let m = transfer_matrix(&cfg);
+    assert_eq!(m.targets, vec!["nvidia-gp104".to_string(), "amd-fiji".to_string()]);
+    assert_eq!(m.benches.len(), 15);
+    assert_eq!(m.winners.len(), 2);
+    assert_eq!(m.ratio.len(), 2);
+    // compile-once: one compile per distinct (benchmark, order) pair,
+    // not per (benchmark, order, target)
+    let mut expected = 0u64;
+    for bi in 0..m.benches.len() {
+        let distinct: std::collections::HashSet<Vec<&'static str>> = m
+            .winners
+            .iter()
+            .map(|per_owner| per_owner[bi].clone().unwrap_or_default())
+            .collect();
+        expected += distinct.len() as u64;
+    }
+    assert_eq!(m.compiles, expected, "compile count must not scale with targets");
+    // diagonal = each target's own exploration outcome
+    let own = ExpCtx::new(cfg.clone()).explore_all();
+    for (bi, s) in own.iter().enumerate() {
+        assert_eq!(s.bench, m.benches[bi]);
+        let got = m.ratio[0][0][bi];
+        let want = s.best_speedup();
+        assert!(got >= 0.0, "{}: own winner must validate on its own target", s.bench);
+        assert!(
+            (got - want).abs() <= 1e-9 * want,
+            "{}: diagonal {got} vs exploration {want}",
+            s.bench
+        );
+    }
+    // every cell is a real verdict: positive speedup or an explicit fail
+    for oi in 0..2 {
+        for ei in 0..2 {
+            for (bi, _) in m.benches.iter().enumerate() {
+                let v = m.ratio[oi][ei][bi];
+                assert!(v == -1.0 || v > 0.0, "[{oi}][{ei}][{bi}] = {v}");
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------ failure paths
+
+fn synthetic(name: &'static str, build: fn(&Dims, Variant) -> BuiltBench) -> Benchmark {
+    let d = Dims { n: 8, m: 8, tmax: 1 };
+    Benchmark {
+        name,
+        family: "synthetic",
+        dims_full: d,
+        dims_small: d,
+        build,
+    }
+}
+
+/// Every thread stores 100 elements past the 8-element buffer.
+fn build_oob(_d: &Dims, _v: Variant) -> BuiltBench {
+    let mut b = KernelBuilder::new("oob", &[("a", Ty::Ptr(AddrSpace::Global))]);
+    let idx = b.add(b.gid(0), b.i(100));
+    b.store(b.param(0), idx, b.fc(1.0));
+    let mut m = Module::new("oob");
+    m.kernels.push(b.finish());
+    BuiltBench {
+        module: m,
+        kernels: vec![KernelInfo { grid: (4, 1), repeat: 1 }],
+        buf_sizes: vec![8],
+        outputs: vec![0],
+        seq_repeat: 1,
+        host_step: None,
+    }
+}
+
+/// An integer division by a constant zero on every thread.
+fn build_div0(_d: &Dims, _v: Variant) -> BuiltBench {
+    let mut b = KernelBuilder::new("div0", &[("a", Ty::Ptr(AddrSpace::Global))]);
+    let q = b.bin(Op::SDiv, Ty::I64, b.gid(0), b.i(0));
+    b.store(b.param(0), q, b.fc(1.0));
+    let mut m = Module::new("div0");
+    m.kernels.push(b.finish());
+    BuiltBench {
+        module: m,
+        kernels: vec![KernelInfo { grid: (4, 1), repeat: 1 }],
+        buf_sizes: vec![8],
+        outputs: vec![0],
+        seq_repeat: 1,
+        host_step: None,
+    }
+}
+
+/// A long (but terminating) loop: validates under the derived budget,
+/// times out under a tightened one.
+fn build_spin(_d: &Dims, _v: Variant) -> BuiltBench {
+    let mut b = KernelBuilder::new("spin", &[("a", Ty::Ptr(AddrSpace::Global))]);
+    let n = b.i(50_000);
+    b.for_loop("i", b.i(0), n, 1, |b, _iv| {
+        let v = b.load(b.param(0), b.i(0));
+        b.store(b.param(0), b.i(0), v);
+    });
+    let mut m = Module::new("spin");
+    m.kernels.push(b.finish());
+    BuiltBench {
+        module: m,
+        kernels: vec![KernelInfo { grid: (1, 1), repeat: 1 }],
+        buf_sizes: vec![1],
+        outputs: vec![0],
+        seq_repeat: 1,
+        host_step: None,
+    }
+}
+
+/// `ExecError::OutOfBounds` surfaces as `EvalStatus::ExecFailure`
+/// through a full `evaluate` call (not just at the executor boundary).
+#[test]
+fn out_of_bounds_surfaces_as_exec_failure() {
+    let b = synthetic("OOB-SYN", build_oob);
+    let golden = init_buffers(&b.build_small(Variant::OpenCl));
+    let cx = EvalContext::new(&b, Target::gp104(), golden);
+    let ev = cx.evaluate(&[], &CacheShards::new());
+    match &ev.status {
+        EvalStatus::ExecFailure(msg) => {
+            assert!(msg.contains("out-of-bounds"), "{msg}");
+        }
+        other => panic!("want ExecFailure(out-of-bounds), got {other:?}"),
+    }
+    assert!(ev.time_us.is_infinite(), "failed candidates carry no time");
+    assert_ne!(ev.ptx_hash, 0, "code WAS generated; the failure is at run time");
+}
+
+/// `ExecError::DivideByZero` surfaces as `EvalStatus::ExecFailure`.
+#[test]
+fn divide_by_zero_surfaces_as_exec_failure() {
+    let b = synthetic("DIV0-SYN", build_div0);
+    let golden = init_buffers(&b.build_small(Variant::OpenCl));
+    let cx = EvalContext::new(&b, Target::gp104(), golden);
+    let ev = cx.evaluate(&[], &CacheShards::new());
+    match &ev.status {
+        EvalStatus::ExecFailure(msg) => {
+            assert!(msg.contains("divide by zero"), "{msg}");
+        }
+        other => panic!("want ExecFailure(divide by zero), got {other:?}"),
+    }
+    assert!(ev.time_us.is_infinite());
+}
+
+/// `ExecError::StepLimit` surfaces as `EvalStatus::Timeout` through a
+/// full `evaluate` call: the same kernel validates under the derived
+/// 20× budget and times out under a tightened one.
+#[test]
+fn step_limit_surfaces_as_timeout() {
+    let b = synthetic("SPIN-SYN", build_spin);
+    let golden = {
+        let small = b.build_small(Variant::OpenCl);
+        let mut bufs = init_buffers(&small);
+        execute(&small, &mut bufs, u64::MAX).expect("the spin kernel terminates");
+        bufs
+    };
+    let mut cx = EvalContext::new(&b, Target::gp104(), golden);
+    // sanity: under the derived budget the kernel validates fine
+    let ok = cx.evaluate(&[], &CacheShards::new());
+    assert!(ok.status.is_ok(), "{:?}", ok.status);
+    // tighten the budget far below the kernel's real step count
+    cx.set_step_limit(1_000);
+    let ev = cx.evaluate(&[], &CacheShards::new());
+    assert_eq!(ev.status, EvalStatus::Timeout);
+    assert!(ev.time_us.is_infinite());
+}
