@@ -9,7 +9,11 @@
 //!   does not depend on the scheduling policy);
 //! * **analysis cache**: the per-sequence `DomTree`/`LoopForest` cache
 //!   disabled, so the speedup from the pass-manager redesign is
-//!   measured, not asserted.
+//!   measured, not asserted;
+//! * **register allocation**: occupancy feedback from the allocator on
+//!   vs off over a register-heavy benchmark pool — bit-identical across
+//!   job counts within each mode, and at least one benchmark's winning
+//!   order must change across modes (the feedback is load-bearing).
 //!
 //! Contexts are built once up front so the timed region isolates the
 //! evaluation engine (`explore_pairs` over fresh caches), not the
@@ -186,6 +190,65 @@ fn main() {
     }
     println!("summaries bit-identical across cache modes: {same}");
     assert!(same, "analysis cache changed evaluation results");
+
+    // ---- allocation ablation: occupancy feedback on vs off ----
+    // A register-heavy pool, where allocation actually bites. Within
+    // each mode the engine must stay bit-identical across job counts
+    // (allocation is a pure function of the lowered code and target);
+    // across modes at least one benchmark's winning order must change —
+    // occupancy feedback is load-bearing, not a constant factor.
+    let alloc_names = ["GEMM", "SYR2K", "COVAR", "CORR", "3MM", "FDTD-2D"];
+    let alloc_benches: Vec<_> = alloc_names
+        .iter()
+        .map(|name| benchmark_by_name(name).unwrap())
+        .collect();
+    let alloc_stream = SeqGen::stream(0xA110, 120);
+    let mut mode_ms = [0.0f64; 2];
+    let mut mode_summaries: Vec<Vec<ExplorationSummary>> = Vec::new();
+    for (mi, &feedback) in [true, false].iter().enumerate() {
+        let mut cxs = engine::build_contexts(&alloc_benches, &target, 0);
+        for cx in &mut cxs {
+            cx.set_allocation(feedback);
+        }
+        let label = if feedback { "on" } else { "off" };
+        let r = harness::bench(
+            &format!("explore {}x120 jobs={jobs} alloc={label}", alloc_names.len()),
+            1,
+            || explore(&cxs, &alloc_stream, jobs).iter().map(|s| s.n_ok).sum::<usize>(),
+        );
+        mode_ms[mi] = r.min_ms;
+        let s1 = explore(&cxs, &alloc_stream, 1);
+        let sn = explore(&cxs, &alloc_stream, jobs);
+        let mut alloc_same = true;
+        for (x, y) in s1.iter().zip(&sn) {
+            alloc_same &= summaries_match(x, y);
+        }
+        println!("summaries bit-identical across jobs with alloc={label}: {alloc_same}");
+        assert!(alloc_same, "alloc={label} broke cross-jobs determinism");
+        mode_summaries.push(sn);
+    }
+    println!(
+        "allocation-feedback cost at jobs={jobs}: {:.2}x (min-over-min)",
+        mode_ms[0] / mode_ms[1]
+    );
+    let mut moved = 0;
+    for (on, off) in mode_summaries[0].iter().zip(&mode_summaries[1]) {
+        let changed = on.winner != off.winner;
+        moved += changed as usize;
+        println!(
+            "  {:10} winner changes with occupancy feedback: {changed}",
+            on.bench
+        );
+    }
+    println!(
+        "occupancy feedback changed the winner on {moved}/{} benchmarks",
+        alloc_names.len()
+    );
+    assert!(
+        moved >= 1,
+        "occupancy feedback never changed a winning order — the allocator's \
+         regs/thread cannot be reaching the cost model"
+    );
 }
 
 fn summaries_match(x: &ExplorationSummary, y: &ExplorationSummary) -> bool {

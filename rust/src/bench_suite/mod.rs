@@ -177,21 +177,37 @@ pub fn model_time_us(b: &BuiltBench, target: &crate::sim::target::Target) -> f64
 /// Like [`model_time_us`], but with per-kernel fallback trip counts for
 /// loops whose bounds the analysis can no longer see (supplied by the
 /// DSE from the *baseline* build — see `sim::cost::estimate_time_unknown`).
+/// Goes through the same [`crate::sim::cost::LoweredKernel`] path as the
+/// staged evaluator (allocation feedback on), so reference and staged
+/// pricing stay bit-identical by construction.
 pub fn model_time_us_ref(
     b: &BuiltBench,
     target: &crate::sim::target::Target,
     unknown_trips: Option<&[f64]>,
 ) -> f64 {
-    let mut total = 0.0;
-    for (ki, (k, info)) in b.module.kernels.iter().zip(&b.kernels).enumerate() {
-        let (cleaned, prog) = crate::codegen::lower(k, &b.module);
-        let unknown = unknown_trips
-            .and_then(|u| u.get(ki).copied())
-            .unwrap_or(crate::sim::cost::UNKNOWN_TRIPS_DEFAULT);
-        let cb = crate::sim::cost::estimate_time_unknown(&cleaned, &prog, info.grid, target, unknown);
-        total += cb.time_us * info.repeat as f64;
-    }
-    total * b.seq_repeat as f64
+    model_time_us_mode(b, target, unknown_trips, true)
+}
+
+/// [`model_time_us_ref`] with an explicit allocation-feedback mode: the
+/// ablation entry point. `alloc_feedback = false` prices the vreg
+/// programs at full occupancy (the pre-allocator model).
+pub fn model_time_us_mode(
+    b: &BuiltBench,
+    target: &crate::sim::target::Target,
+    unknown_trips: Option<&[f64]>,
+    alloc_feedback: bool,
+) -> f64 {
+    let lowered: Vec<crate::sim::cost::LoweredKernel> = b
+        .module
+        .kernels
+        .iter()
+        .map(|k| {
+            let mut lk = crate::sim::cost::LoweredKernel::lower(k, &b.module);
+            lk.set_alloc_feedback(alloc_feedback);
+            lk
+        })
+        .collect();
+    model_time_us_lowered(&lowered, &b.kernels, b.seq_repeat, target, unknown_trips)
 }
 
 /// Price a pre-lowered build: `lowered` carries each kernel's cleaned

@@ -1,0 +1,661 @@
+//! Machine IR: the tokenized, virtual-register form of a lowered kernel.
+//!
+//! [`lower_mir`] ports the instruction selection of the vPTX emitter
+//! (folded `[reg+imm]` addressing, fma fusion, `ld.v2` pairing) but keeps
+//! every operand symbolic: a [`MirInst`] is a sequence of [`MirTok`]s
+//! where instruction results are `Def(vreg)` and SSA operands are
+//! `Use(vreg)` instead of pre-rendered strings. That is exactly the
+//! information register allocation needs — `regalloc` computes live
+//! ranges over the token stream, assigns physical registers against a
+//! target [`crate::sim::target::RegFile`], and re-renders the program
+//! with `%r<n>`/`%p<n>` names plus spill traffic. Rendering without
+//! allocation ([`MirFunction::render_vreg`]) reproduces the classic
+//! unbounded-vreg vPTX used for artifact hashing and debugging.
+//!
+//! Virtual register ids are IR instruction ids, so allocation is a pure
+//! function of the lowered function — the determinism invariant the DSE
+//! caches rely on.
+
+use std::collections::{BTreeMap, HashMap};
+
+use super::ptx::{classify, find_pairs, pair_first, space_str, PtxInst, PtxKind, PtxProgram};
+use crate::ir::{BlockId, Function, InstId, Module, Op, Ty, Value};
+
+/// Physical register class a virtual register allocates from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RegClass {
+    /// general-purpose (`%r<n>`)
+    Gpr,
+    /// predicate (`%p<n>`, comparison results)
+    Pred,
+}
+
+/// Value width used when a spilled vreg round-trips through the
+/// `__local_depot` (`ld.local.<suffix>` / `st.local.<suffix>`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpillTy {
+    F32,
+    B32,
+    B64,
+    Pred,
+}
+
+impl SpillTy {
+    pub fn suffix(self) -> &'static str {
+        match self {
+            SpillTy::F32 => "f32",
+            SpillTy::B32 => "b32",
+            SpillTy::B64 => "b64",
+            SpillTy::Pred => "b8",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VregInfo {
+    pub class: RegClass,
+    pub ty: SpillTy,
+}
+
+/// One token of a machine instruction's rendering.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MirTok {
+    /// literal text (mnemonics, immediates, arguments, special registers)
+    Lit(String),
+    /// read of a virtual register
+    Use(u32),
+    /// write of a virtual register
+    Def(u32),
+}
+
+/// A machine instruction: cost-model kind + owning block + rendering
+/// tokens. An instruction with no tokens is structural only (phis): it
+/// occupies a live-range position but renders nothing.
+#[derive(Debug, Clone)]
+pub struct MirInst {
+    pub kind: PtxKind,
+    pub block: BlockId,
+    pub toks: Vec<MirTok>,
+    /// vregs defined here without appearing as a `Def` token: the second
+    /// element of a `ld.v2` pair and phi results.
+    pub ghost_defs: Vec<u32>,
+}
+
+impl MirInst {
+    /// Structural-only instruction (renders nothing).
+    pub fn is_ghost(&self) -> bool {
+        self.toks.is_empty()
+    }
+}
+
+/// A lowered kernel in machine form, ready for register allocation.
+#[derive(Debug, Clone)]
+pub struct MirFunction {
+    pub kernel: String,
+    pub insts: Vec<MirInst>,
+    /// every defined vreg with its class and spill width (BTreeMap: the
+    /// allocator iterates this, and iteration order must be stable)
+    pub vregs: BTreeMap<u32, VregInfo>,
+    /// extra reads that have no token: phi inputs, charged at the last
+    /// instruction of the incoming predecessor block
+    pub ghost_uses: Vec<(u32, usize)>,
+    /// per-block instruction index ranges, in emission (RPO) order
+    pub block_spans: Vec<(BlockId, usize, usize)>,
+    pub unroll: HashMap<BlockId, u8>,
+    pub outlined: bool,
+    /// instruction index ranges `[start, end]` (inclusive) covered by a
+    /// CFG back edge: any live range intersecting a span is extended to
+    /// its end, so loop-carried and loop-invariant values stay live
+    /// through the whole loop body
+    pub loop_spans: Vec<(usize, usize)>,
+}
+
+fn spill_ty(ty: Ty) -> SpillTy {
+    match ty {
+        Ty::F32 => SpillTy::F32,
+        Ty::I64 | Ty::Ptr(_) => SpillTy::B64,
+        Ty::I1 => SpillTy::Pred,
+        _ => SpillTy::B32,
+    }
+}
+
+fn vreg_info(op: Op, ty: Ty) -> VregInfo {
+    if matches!(op, Op::ICmp(_) | Op::FCmp(_)) || ty == Ty::I1 {
+        VregInfo {
+            class: RegClass::Pred,
+            ty: SpillTy::Pred,
+        }
+    } else {
+        VregInfo {
+            class: RegClass::Gpr,
+            ty: spill_ty(ty),
+        }
+    }
+}
+
+impl MirFunction {
+    pub fn n_vregs(&self) -> u32 {
+        self.vregs.len() as u32
+    }
+
+    /// Info for a vreg that appears in the stream; uses of dead slots
+    /// (possible in never-executed paths) default to a 32-bit GPR.
+    pub fn vreg(&self, v: u32) -> VregInfo {
+        self.vregs.get(&v).copied().unwrap_or(VregInfo {
+            class: RegClass::Gpr,
+            ty: SpillTy::B32,
+        })
+    }
+
+    /// Render the unallocated virtual-register form: operands keep their
+    /// SSA-derived `%v<n>` names and `regs` reports the vreg count. This
+    /// is the artifact-hash / debug rendering; the cost model walks the
+    /// same instruction structure.
+    pub fn render_vreg(&self) -> PtxProgram {
+        let mut out: Vec<PtxInst> = Vec::new();
+        let mut block_ranges = HashMap::new();
+        for &(bb, s, e) in &self.block_spans {
+            let start = out.len();
+            for mi in &self.insts[s..e] {
+                if mi.is_ghost() {
+                    continue;
+                }
+                let mut text = String::new();
+                for t in &mi.toks {
+                    match t {
+                        MirTok::Lit(l) => text.push_str(l),
+                        MirTok::Use(v) | MirTok::Def(v) => text.push_str(&format!("%v{v}")),
+                    }
+                }
+                out.push(PtxInst {
+                    kind: mi.kind,
+                    block: bb,
+                    text,
+                });
+            }
+            block_ranges.insert(bb, (start, out.len()));
+        }
+        PtxProgram {
+            kernel: self.kernel.clone(),
+            insts: out,
+            regs: self.n_vregs(),
+            block_ranges,
+            unroll: self.unroll.clone(),
+            outlined: self.outlined,
+        }
+    }
+}
+
+/// Lower a machine-cleaned function to MIR. Instruction selection is the
+/// vPTX emitter's, token-for-token: the vreg rendering of the result is
+/// the program [`super::ptx::emit`] returns.
+pub fn lower_mir(f: &Function, m: &Module) -> MirFunction {
+    let mut insts: Vec<MirInst> = Vec::new();
+    let mut block_spans: Vec<(BlockId, usize, usize)> = Vec::new();
+    let mut unroll = HashMap::new();
+    let mut phi_flows: Vec<(u32, BlockId)> = Vec::new();
+
+    // [reg+imm] addressing: a `ptradd p, C` used exclusively as load/store
+    // addresses folds into the access and costs no instruction.
+    let mut folded_addrs: Vec<InstId> = Vec::new();
+    for (k, inst) in f.insts.iter().enumerate() {
+        if inst.is_nop() || inst.op != Op::PtrAdd {
+            continue;
+        }
+        if !matches!(inst.args()[1], Value::ImmI(_)) {
+            continue;
+        }
+        let id = InstId(k as u32);
+        let v = Value::Inst(id);
+        let mut only_addr_uses = true;
+        let mut any_use = false;
+        for other in f.insts.iter().filter(|i| !i.is_nop()) {
+            for (ai, &a) in other.args().iter().enumerate() {
+                if a == v {
+                    any_use = true;
+                    if !(other.op.is_memory() && ai == 0) {
+                        only_addr_uses = false;
+                    }
+                }
+            }
+        }
+        if any_use && only_addr_uses {
+            folded_addrs.push(id);
+        }
+    }
+    let fold_ptr = |v: Value| -> Option<(Value, i64)> {
+        let id = v.as_inst()?;
+        if !folded_addrs.contains(&id) {
+            return None;
+        }
+        let inst = f.inst(id);
+        Some((inst.args()[0], inst.args()[1].as_imm_i().unwrap()))
+    };
+
+    // fma fusion candidates: fadd(fmul(a,b), c) where the fmul has
+    // exactly one use
+    let mut fused_muls: Vec<InstId> = Vec::new();
+    for bb in f.block_ids() {
+        for &i in &f.block(bb).insts {
+            let inst = f.inst(i);
+            if inst.op != Op::FAdd {
+                continue;
+            }
+            for &a in inst.args() {
+                if let Value::Inst(mi) = a {
+                    if f.inst(mi).op == Op::FMul && f.num_uses(mi) == 1 {
+                        fused_muls.push(mi);
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    let operand = |v: Option<Value>| -> MirTok {
+        match v {
+            Some(Value::Inst(id)) => MirTok::Use(id.0),
+            Some(v) => MirTok::Lit(crate::ir::printer::print_value(v)),
+            None => MirTok::Lit(String::new()),
+        }
+    };
+
+    let rpo = f.rpo();
+    for &bb in &rpo {
+        let start = insts.len();
+        if f.block(bb).unroll > 1 {
+            unroll.insert(bb, f.block(bb).unroll);
+        }
+        // v2 pairing inside hinted blocks: every second element of an
+        // adjacent pair folds into its first's LdV2
+        let mut paired: Vec<InstId> = Vec::new();
+        if f.block(bb).vectorize_hint {
+            paired = find_pairs(f, bb);
+        }
+        for &i in &f.block(bb).insts {
+            let inst = f.inst(i);
+            if inst.is_nop() {
+                continue;
+            }
+            let arg = |k: usize| operand(inst.args().get(k).copied());
+            let lit = |s: &str| MirTok::Lit(s.to_string());
+            let mut push = |kind: PtxKind, toks: Vec<MirTok>| {
+                insts.push(MirInst {
+                    kind,
+                    block: bb,
+                    toks,
+                    ghost_defs: Vec::new(),
+                })
+            };
+            match inst.op {
+                Op::Nop => {}
+                Op::Add | Op::Sub | Op::And | Op::Or | Op::Xor => push(
+                    PtxKind::IntAlu,
+                    vec![
+                        MirTok::Lit(format!("{}.s32 ", inst.op.mnemonic())),
+                        MirTok::Def(i.0),
+                        lit(", "),
+                        arg(0),
+                        lit(", "),
+                        arg(1),
+                    ],
+                ),
+                Op::Shl | Op::AShr => push(
+                    PtxKind::IntAlu,
+                    vec![
+                        MirTok::Lit(format!("{}.b64 ", inst.op.mnemonic())),
+                        MirTok::Def(i.0),
+                        lit(", "),
+                        arg(0),
+                        lit(", "),
+                        arg(1),
+                    ],
+                ),
+                Op::Mul | Op::SDiv | Op::SRem => push(
+                    PtxKind::IntMul,
+                    vec![
+                        MirTok::Lit(format!("{}.lo.s32 ", inst.op.mnemonic())),
+                        MirTok::Def(i.0),
+                        lit(", "),
+                        arg(0),
+                        lit(", "),
+                        arg(1),
+                    ],
+                ),
+                Op::Sext | Op::Trunc => push(
+                    PtxKind::Cvt,
+                    vec![lit("cvt.s64.s32 "), MirTok::Def(i.0), lit(", "), arg(0)],
+                ),
+                Op::SiToFp | Op::FpToSi => push(
+                    PtxKind::Cvt,
+                    vec![lit("cvt.rn.f32.s32 "), MirTok::Def(i.0), lit(", "), arg(0)],
+                ),
+                Op::FAdd => {
+                    let fused_with = inst.args().iter().find_map(|&x| match x {
+                        Value::Inst(mi) if fused_muls.contains(&mi) => Some(mi),
+                        _ => None,
+                    });
+                    if let Some(mi) = fused_with {
+                        let minst = f.inst(mi);
+                        let other = inst.args().iter().copied().find(|&x| x != Value::Inst(mi));
+                        push(
+                            PtxKind::Fma,
+                            vec![
+                                lit("fma.rn.f32 "),
+                                MirTok::Def(i.0),
+                                lit(", "),
+                                operand(Some(minst.args()[0])),
+                                lit(", "),
+                                operand(Some(minst.args()[1])),
+                                lit(", "),
+                                operand(other),
+                            ],
+                        );
+                    } else {
+                        push(
+                            PtxKind::FAdd,
+                            vec![lit("add.f32 "), MirTok::Def(i.0), lit(", "), arg(0), lit(", "), arg(1)],
+                        );
+                    }
+                }
+                Op::FSub => push(
+                    PtxKind::FAdd,
+                    vec![lit("sub.f32 "), MirTok::Def(i.0), lit(", "), arg(0), lit(", "), arg(1)],
+                ),
+                Op::FMul => {
+                    if fused_muls.contains(&i) {
+                        // folded into the consuming fma
+                    } else {
+                        push(
+                            PtxKind::FMul,
+                            vec![lit("mul.f32 "), MirTok::Def(i.0), lit(", "), arg(0), lit(", "), arg(1)],
+                        );
+                    }
+                }
+                Op::FDiv => push(
+                    PtxKind::FDiv,
+                    vec![lit("div.rn.f32 "), MirTok::Def(i.0), lit(", "), arg(0), lit(", "), arg(1)],
+                ),
+                Op::FSqrt => push(
+                    PtxKind::Sqrt,
+                    vec![lit("sqrt.rn.f32 "), MirTok::Def(i.0), lit(", "), arg(0)],
+                ),
+                Op::FAbs | Op::FNeg => push(
+                    PtxKind::FAdd,
+                    vec![
+                        MirTok::Lit(format!("{}.f32 ", inst.op.mnemonic())),
+                        MirTok::Def(i.0),
+                        lit(", "),
+                        arg(0),
+                    ],
+                ),
+                Op::FExp => push(
+                    PtxKind::Exp,
+                    vec![lit("ex2.approx.f32 "), MirTok::Def(i.0), lit(", "), arg(0)],
+                ),
+                Op::Select => push(
+                    PtxKind::Sel,
+                    vec![
+                        lit("selp.f32 "),
+                        MirTok::Def(i.0),
+                        lit(", "),
+                        arg(1),
+                        lit(", "),
+                        arg(2),
+                        lit(", "),
+                        arg(0),
+                    ],
+                ),
+                Op::ICmp(p) | Op::FCmp(p) => push(
+                    PtxKind::Setp,
+                    vec![
+                        MirTok::Lit(format!("setp.{p:?}.f32 ").to_lowercase()),
+                        MirTok::Def(i.0),
+                        lit(", "),
+                        arg(0),
+                        lit(", "),
+                        arg(1),
+                    ],
+                ),
+                Op::PtrAdd => {
+                    if folded_addrs.contains(&i) {
+                        // folded into the consuming access: no instruction
+                    } else {
+                        push(
+                            PtxKind::IntAlu,
+                            vec![lit("add.s64 "), MirTok::Def(i.0), lit(", "), arg(0), lit(", "), arg(1)],
+                        )
+                    }
+                }
+                Op::Load => {
+                    let class = classify(f, m, inst.args()[0]);
+                    let space = space_str(class);
+                    if paired.contains(&i) {
+                        // second element of a v2 pair: folded into LdV2
+                    } else if let Some(second) =
+                        paired.iter().copied().find(|&s| pair_first(f, bb, s) == Some(i))
+                    {
+                        insts.push(MirInst {
+                            kind: PtxKind::LdV2(class),
+                            block: bb,
+                            toks: vec![
+                                MirTok::Lit(format!("ld.{space}.v2.f32 {{")),
+                                MirTok::Def(i.0),
+                                lit(", _}, ["),
+                                arg(0),
+                                lit("]"),
+                            ],
+                            ghost_defs: vec![second.0],
+                        });
+                    } else if let Some((base, off)) = fold_ptr(inst.args()[0]) {
+                        push(
+                            PtxKind::Ld(class),
+                            vec![
+                                MirTok::Lit(format!("ld.{space}.f32 ")),
+                                MirTok::Def(i.0),
+                                lit(", ["),
+                                operand(Some(base)),
+                                MirTok::Lit(format!("+{off}]")),
+                            ],
+                        );
+                    } else {
+                        push(
+                            PtxKind::Ld(class),
+                            vec![
+                                MirTok::Lit(format!("ld.{space}.f32 ")),
+                                MirTok::Def(i.0),
+                                lit(", ["),
+                                arg(0),
+                                lit("]"),
+                            ],
+                        );
+                    }
+                }
+                Op::Store => {
+                    let class = classify(f, m, inst.args()[0]);
+                    let space = space_str(class);
+                    if let Some((base, off)) = fold_ptr(inst.args()[0]) {
+                        push(
+                            PtxKind::St(class),
+                            vec![
+                                MirTok::Lit(format!("st.{space}.f32 [")),
+                                operand(Some(base)),
+                                MirTok::Lit(format!("+{off}], ")),
+                                arg(1),
+                            ],
+                        );
+                    } else {
+                        push(
+                            PtxKind::St(class),
+                            vec![
+                                MirTok::Lit(format!("st.{space}.f32 [")),
+                                arg(0),
+                                lit("], "),
+                                arg(1),
+                            ],
+                        );
+                    }
+                }
+                Op::Alloca => {
+                    // materializes as depot pointer arithmetic
+                    push(
+                        PtxKind::IntAlu,
+                        vec![
+                            lit("add.u64 "),
+                            MirTok::Def(i.0),
+                            lit(", %SPL, 0  // __local_depot slot"),
+                        ],
+                    );
+                }
+                Op::Phi => {
+                    // no instruction, but the result occupies a register
+                    // from the top of this block, and each incoming value
+                    // must stay live to the end of its predecessor
+                    insts.push(MirInst {
+                        kind: PtxKind::IntAlu,
+                        block: bb,
+                        toks: vec![],
+                        ghost_defs: vec![i.0],
+                    });
+                    for (pi, &a) in inst.args().iter().enumerate() {
+                        if let (Some(&pb), Value::Inst(src)) = (f.block(bb).preds.get(pi), a) {
+                            if src != i {
+                                phi_flows.push((src.0, pb));
+                            }
+                        }
+                    }
+                }
+                Op::Br => push(
+                    PtxKind::Bra,
+                    vec![MirTok::Lit(format!("bra $B{}", f.block(bb).succs[0].0))],
+                ),
+                Op::CondBr => push(
+                    PtxKind::Bra,
+                    vec![
+                        lit("@"),
+                        arg(0),
+                        MirTok::Lit(format!(
+                            " bra $B{}; bra $B{}",
+                            f.block(bb).succs[0].0,
+                            f.block(bb).succs[1].0
+                        )),
+                    ],
+                ),
+                Op::Ret => push(PtxKind::Ret, vec![lit("ret")]),
+            }
+        }
+        block_spans.push((bb, start, insts.len()));
+    }
+
+    // register every defined vreg with its class and spill width (vreg id
+    // = IR instruction id, so the defining op/type is right there)
+    let mut vregs: BTreeMap<u32, VregInfo> = BTreeMap::new();
+    for mi in &insts {
+        for t in &mi.toks {
+            if let MirTok::Def(v) = *t {
+                let inst = f.inst(InstId(v));
+                vregs.entry(v).or_insert_with(|| vreg_info(inst.op, inst.ty));
+            }
+        }
+        for &g in &mi.ghost_defs {
+            let inst = f.inst(InstId(g));
+            vregs.entry(g).or_insert_with(|| vreg_info(inst.op, inst.ty));
+        }
+    }
+
+    // resolve phi inputs to ghost uses at the last instruction of the
+    // incoming predecessor block
+    let mut block_last: HashMap<BlockId, usize> = HashMap::new();
+    for &(bb, s, e) in &block_spans {
+        if e > s {
+            block_last.insert(bb, e - 1);
+        }
+    }
+    let mut ghost_uses: Vec<(u32, usize)> = Vec::new();
+    for (src, pb) in phi_flows {
+        if let Some(&last) = block_last.get(&pb) {
+            ghost_uses.push((src, last));
+        }
+    }
+
+    // back edges: an edge bb -> s where s was emitted at or before bb
+    let order_pos: HashMap<BlockId, usize> = block_spans
+        .iter()
+        .enumerate()
+        .map(|(idx, &(bb, _, _))| (bb, idx))
+        .collect();
+    let mut loop_spans: Vec<(usize, usize)> = Vec::new();
+    for (idx, &(bb, s, e)) in block_spans.iter().enumerate() {
+        if e == s {
+            continue;
+        }
+        for &succ in &f.block(bb).succs {
+            if let Some(&sp) = order_pos.get(&succ) {
+                if sp <= idx {
+                    let span_start = block_spans[sp].1;
+                    loop_spans.push((span_start, e - 1));
+                }
+            }
+        }
+    }
+    loop_spans.sort_unstable();
+    loop_spans.dedup();
+
+    MirFunction {
+        kernel: f.name.clone(),
+        insts,
+        vregs,
+        ghost_uses,
+        block_spans,
+        unroll,
+        outlined: m.loops_extracted(),
+        loop_spans,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{AddrSpace, KernelBuilder, Ty};
+
+    fn mk_module(f: Function) -> Module {
+        let mut m = Module::new("t");
+        m.kernels.push(f);
+        m
+    }
+
+    #[test]
+    fn loop_kernel_has_back_edge_span_and_phi_flow() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let n = b.i(64);
+        b.for_loop("i", b.i(0), n, 1, |b, iv| {
+            let v = b.load(b.param(0), iv);
+            let w = b.fadd(v, b.fc(1.0));
+            b.store(b.param(0), iv, w);
+        });
+        let m = mk_module(b.finish());
+        let (_, mir, _) = crate::codegen::ptx::lower_full(&m.kernels[0], &m);
+        assert!(!mir.loop_spans.is_empty(), "loop kernel must expose a back-edge span");
+        assert!(!mir.ghost_uses.is_empty(), "induction phi inputs must flow");
+        for &(s, e) in &mir.loop_spans {
+            assert!(s <= e && e < mir.insts.len());
+        }
+    }
+
+    #[test]
+    fn vreg_rendering_matches_emitter_structure() {
+        let mut b = KernelBuilder::new("k", &[("a", Ty::Ptr(AddrSpace::Global))]);
+        let idx = b.add(b.gid(0), b.i(3));
+        let v = b.load(b.param(0), idx);
+        b.store(b.param(0), idx, v);
+        let m = mk_module(b.finish());
+        let (_, mir, prog) = crate::codegen::ptx::lower_full(&m.kernels[0], &m);
+        // same instruction count and kinds as the rendered program
+        let rendered: Vec<_> = mir.insts.iter().filter(|i| !i.is_ghost()).map(|i| i.kind).collect();
+        let emitted: Vec<_> = prog.insts.iter().map(|i| i.kind).collect();
+        assert_eq!(rendered, emitted);
+        assert!(prog.text().contains("%v"), "{}", prog.text());
+        assert!(mir.n_vregs() > 0);
+        assert_eq!(prog.regs, mir.n_vregs());
+    }
+}

@@ -4,11 +4,20 @@
 //! where the paper's observables live: the load address patterns of
 //! Fig. 6, `ld.v2` pairing from `bb-vectorize` hints, FMA fusion,
 //! `__local_depot` accesses, per-access coalescing class, register
-//! pressure, and loop unroll factors. The cost model (`sim::cost`) prices
-//! this stream; the functional executor (`sim::exec`) runs the IR the
-//! stream was generated from (the backend translation is 1:1 by
-//! construction, so IR semantics == vPTX semantics).
+//! pressure, and loop unroll factors. Lowering goes through a machine
+//! IR (`mir`) with virtual registers; `regalloc` runs per-target
+//! linear-scan allocation against the device's `RegFile`, reporting
+//! exact regs-per-thread and inserting spill/reload traffic. The cost
+//! model (`sim::cost`) prices this stream; the functional executor
+//! (`sim::exec`) runs the IR the stream was generated from (the backend
+//! translation is 1:1 by construction, so IR semantics == vPTX
+//! semantics — allocation only renames registers and adds depot
+//! round-trips, it never changes the executed IR).
 
+pub mod mir;
 pub mod ptx;
+pub mod regalloc;
 
-pub use ptx::{emit, emit_module, lower, MemClass, PtxInst, PtxKind, PtxProgram};
+pub use mir::{MirFunction, MirInst, MirTok, RegClass};
+pub use ptx::{emit, emit_module, lower, lower_full, MemClass, PtxInst, PtxKind, PtxProgram};
+pub use regalloc::{allocate, allocate_program, AllocStats, AllocatedKernel, Allocation};

@@ -57,7 +57,9 @@ pub struct PtxInst {
 pub struct PtxProgram {
     pub kernel: String,
     pub insts: Vec<PtxInst>,
-    /// virtual register estimate (occupancy input)
+    /// register count (occupancy input): the vreg count for the
+    /// unallocated rendering, the allocator-reported physical
+    /// regs-per-thread for an allocated one
     pub regs: u32,
     /// per-block instruction index ranges (cost model walks by block)
     pub block_ranges: HashMap<BlockId, (usize, usize)>,
@@ -69,7 +71,7 @@ pub struct PtxProgram {
 
 impl PtxProgram {
     pub fn text(&self) -> String {
-        let mut s = format!("// vPTX for kernel {} (regs≈{})\n", self.kernel, self.regs);
+        let mut s = format!("// vPTX for kernel {} (regs={})\n", self.kernel, self.regs);
         let mut cur_block = None;
         for i in &self.insts {
             if cur_block != Some(i.block) {
@@ -119,302 +121,21 @@ pub fn emit(f: &Function, m: &Module) -> PtxProgram {
 /// the discard-the-function shorthand for consumers that only need the
 /// instruction stream.
 pub fn lower(f: &Function, m: &Module) -> (Function, PtxProgram) {
-    let mut fc = f.clone();
-    backend_cleanup(&mut fc);
-    let prog = emit_cleaned(&fc, m);
+    let (fc, _mir, prog) = lower_full(f, m);
     (fc, prog)
 }
 
-fn emit_cleaned(f: &Function, m: &Module) -> PtxProgram {
-    let mut insts: Vec<PtxInst> = Vec::new();
-    let mut block_ranges = HashMap::new();
-    let mut unroll = HashMap::new();
-
-    // [reg+imm] addressing: a `ptradd p, C` used exclusively as load/store
-    // addresses folds into the access (PTX `ld [%p+C]`) and costs no
-    // instruction — how NVCC-style addressing gets its 1-instruction
-    // loads (Fig. 6a).
-    let mut folded_addrs: Vec<InstId> = Vec::new();
-    for (k, inst) in f.insts.iter().enumerate() {
-        if inst.is_nop() || inst.op != Op::PtrAdd {
-            continue;
-        }
-        if !matches!(inst.args()[1], Value::ImmI(_)) {
-            continue;
-        }
-        let id = InstId(k as u32);
-        let v = Value::Inst(id);
-        let mut only_addr_uses = true;
-        let mut any_use = false;
-        for other in f.insts.iter().filter(|i| !i.is_nop()) {
-            for (ai, &a) in other.args().iter().enumerate() {
-                if a == v {
-                    any_use = true;
-                    if !(other.op.is_memory() && ai == 0) {
-                        only_addr_uses = false;
-                    }
-                }
-            }
-        }
-        if any_use && only_addr_uses {
-            folded_addrs.push(id);
-        }
-    }
-    let fold_ptr = |v: Value| -> Option<(Value, i64)> {
-        let id = v.as_inst()?;
-        if !folded_addrs.contains(&id) {
-            return None;
-        }
-        let inst = f.inst(id);
-        Some((inst.args()[0], inst.args()[1].as_imm_i().unwrap()))
-    };
-
-    // fma fusion candidates: fadd(fmul(a,b), c) or fadd(c, fmul(a,b))
-    // where the fmul has exactly one use
-    let mut fused_muls: Vec<InstId> = Vec::new();
-    for bb in f.block_ids() {
-        for &i in &f.block(bb).insts {
-            let inst = f.inst(i);
-            if inst.op != Op::FAdd {
-                continue;
-            }
-            for &a in inst.args() {
-                if let Value::Inst(mi) = a {
-                    if f.inst(mi).op == Op::FMul && f.num_uses(mi) == 1 {
-                        fused_muls.push(mi);
-                        break;
-                    }
-                }
-            }
-        }
-    }
-
-    let rpo = f.rpo();
-    for &bb in &rpo {
-        let start = insts.len();
-        if f.block(bb).unroll > 1 {
-            unroll.insert(bb, f.block(bb).unroll);
-        }
-        // v2 pairing inside hinted blocks: mark every second element of an
-        // adjacent pair
-        let mut paired: Vec<InstId> = Vec::new();
-        if f.block(bb).vectorize_hint {
-            paired = find_pairs(f, bb);
-        }
-        for &i in &f.block(bb).insts {
-            let inst = f.inst(i);
-            if inst.is_nop() {
-                continue;
-            }
-            let dst = format!("%r{}", i.0);
-            let a = |k: usize| pretty(inst.args().get(k).copied());
-            let push = |insts: &mut Vec<PtxInst>, kind: PtxKind, text: String| {
-                insts.push(PtxInst {
-                    kind,
-                    block: bb,
-                    text,
-                })
-            };
-            match inst.op {
-                Op::Nop => {}
-                Op::Add | Op::Sub | Op::And | Op::Or | Op::Xor => push(
-                    &mut insts,
-                    PtxKind::IntAlu,
-                    format!("{}.s32 {dst}, {}, {}", inst.op.mnemonic(), a(0), a(1)),
-                ),
-                Op::Shl | Op::AShr => push(
-                    &mut insts,
-                    PtxKind::IntAlu,
-                    format!("{}.b64 {dst}, {}, {}", inst.op.mnemonic(), a(0), a(1)),
-                ),
-                Op::Mul | Op::SDiv | Op::SRem => push(
-                    &mut insts,
-                    PtxKind::IntMul,
-                    format!("{}.lo.s32 {dst}, {}, {}", inst.op.mnemonic(), a(0), a(1)),
-                ),
-                Op::Sext | Op::Trunc => push(
-                    &mut insts,
-                    PtxKind::Cvt,
-                    format!("cvt.s64.s32 {dst}, {}", a(0)),
-                ),
-                Op::SiToFp | Op::FpToSi => push(
-                    &mut insts,
-                    PtxKind::Cvt,
-                    format!("cvt.rn.f32.s32 {dst}, {}", a(0)),
-                ),
-                Op::FAdd => {
-                    // fused form?
-                    let fused_with = inst.args().iter().find_map(|&x| match x {
-                        Value::Inst(mi) if fused_muls.contains(&mi) => Some(mi),
-                        _ => None,
-                    });
-                    if let Some(mi) = fused_with {
-                        let minst = f.inst(mi);
-                        let other: Vec<String> = inst
-                            .args()
-                            .iter()
-                            .filter(|&&x| x != Value::Inst(mi))
-                            .map(|&x| pretty(Some(x)))
-                            .collect();
-                        push(
-                            &mut insts,
-                            PtxKind::Fma,
-                            format!(
-                                "fma.rn.f32 {dst}, {}, {}, {}",
-                                pretty(Some(minst.args()[0])),
-                                pretty(Some(minst.args()[1])),
-                                other.first().cloned().unwrap_or_default()
-                            ),
-                        );
-                    } else {
-                        push(
-                            &mut insts,
-                            PtxKind::FAdd,
-                            format!("add.f32 {dst}, {}, {}", a(0), a(1)),
-                        );
-                    }
-                }
-                Op::FSub => push(
-                    &mut insts,
-                    PtxKind::FAdd,
-                    format!("sub.f32 {dst}, {}, {}", a(0), a(1)),
-                ),
-                Op::FMul => {
-                    if fused_muls.contains(&i) {
-                        // folded into the consuming fma
-                    } else {
-                        push(
-                            &mut insts,
-                            PtxKind::FMul,
-                            format!("mul.f32 {dst}, {}, {}", a(0), a(1)),
-                        );
-                    }
-                }
-                Op::FDiv => push(
-                    &mut insts,
-                    PtxKind::FDiv,
-                    format!("div.rn.f32 {dst}, {}, {}", a(0), a(1)),
-                ),
-                Op::FSqrt => push(&mut insts, PtxKind::Sqrt, format!("sqrt.rn.f32 {dst}, {}", a(0))),
-                Op::FAbs | Op::FNeg => push(
-                    &mut insts,
-                    PtxKind::FAdd,
-                    format!("{}.f32 {dst}, {}", inst.op.mnemonic(), a(0)),
-                ),
-                Op::FExp => push(&mut insts, PtxKind::Exp, format!("ex2.approx.f32 {dst}, {}", a(0))),
-                Op::Select => push(
-                    &mut insts,
-                    PtxKind::Sel,
-                    format!("selp.f32 {dst}, {}, {}, {}", a(1), a(2), a(0)),
-                ),
-                Op::ICmp(p) | Op::FCmp(p) => push(
-                    &mut insts,
-                    PtxKind::Setp,
-                    format!("setp.{:?}.f32 {dst}, {}, {}", p, a(0), a(1)).to_lowercase(),
-                ),
-                Op::PtrAdd => {
-                    if folded_addrs.contains(&i) {
-                        // folded into the consuming access: no instruction
-                    } else {
-                        push(
-                            &mut insts,
-                            PtxKind::IntAlu,
-                            format!("add.s64 {dst}, {}, {}", a(0), a(1)),
-                        )
-                    }
-                }
-                Op::Load => {
-                    let class = classify(f, m, inst.args()[0]);
-                    let space = space_str(class);
-                    if paired.contains(&i) {
-                        // second element of a v2 pair: folded into LdV2
-                    } else if f.block(bb).vectorize_hint
-                        && find_pairs(f, bb)
-                            .iter()
-                            .any(|&second| pair_first(f, bb, second) == Some(i))
-                    {
-                        push(
-                            &mut insts,
-                            PtxKind::LdV2(class),
-                            format!("ld.{space}.v2.f32 {{{dst}, _}}, [{}]", a(0)),
-                        );
-                    } else if let Some((base, off)) = fold_ptr(inst.args()[0]) {
-                        push(
-                            &mut insts,
-                            PtxKind::Ld(class),
-                            format!("ld.{space}.f32 {dst}, [{}+{off}]", pretty(Some(base))),
-                        );
-                    } else {
-                        push(
-                            &mut insts,
-                            PtxKind::Ld(class),
-                            format!("ld.{space}.f32 {dst}, [{}]", a(0)),
-                        );
-                    }
-                }
-                Op::Store => {
-                    let class = classify(f, m, inst.args()[0]);
-                    let space = space_str(class);
-                    if let Some((base, off)) = fold_ptr(inst.args()[0]) {
-                        push(
-                            &mut insts,
-                            PtxKind::St(class),
-                            format!("st.{space}.f32 [{}+{off}], {}", pretty(Some(base)), a(1)),
-                        );
-                    } else {
-                        push(
-                            &mut insts,
-                            PtxKind::St(class),
-                            format!("st.{space}.f32 [{}], {}", a(0), a(1)),
-                        );
-                    }
-                }
-                Op::Alloca => {
-                    // materializes as depot pointer arithmetic
-                    push(
-                        &mut insts,
-                        PtxKind::IntAlu,
-                        format!("add.u64 {dst}, %SPL, 0  // __local_depot slot"),
-                    );
-                }
-                Op::Phi => { /* register assignment; no instruction */ }
-                Op::Br => push(&mut insts, PtxKind::Bra, format!("bra $B{}", f.block(bb).succs[0].0)),
-                Op::CondBr => {
-                    push(
-                        &mut insts,
-                        PtxKind::Bra,
-                        format!(
-                            "@{} bra $B{}; bra $B{}",
-                            a(0),
-                            f.block(bb).succs[0].0,
-                            f.block(bb).succs[1].0
-                        ),
-                    );
-                }
-                Op::Ret => push(&mut insts, PtxKind::Ret, "ret".to_string()),
-            }
-        }
-        block_ranges.insert(bb, (start, insts.len()));
-    }
-
-    // register estimate: live SSA values ≈ produced values + phis, damped
-    // (virtual → physical mapping reuses registers); floor at 12 like a
-    // minimal kernel frame
-    let produced = f
-        .insts
-        .iter()
-        .filter(|i| !i.is_nop() && !matches!(i.op, Op::Store | Op::Br | Op::CondBr | Op::Ret))
-        .count() as u32;
-    let regs = 12 + produced / 3;
-
-    PtxProgram {
-        kernel: f.name.clone(),
-        insts,
-        regs,
-        block_ranges,
-        unroll,
-        outlined: m.loops_extracted(),
-    }
+/// Full backend entry point: machine-cleaned IR, its MIR (the register
+/// allocator's input) and the unallocated vreg rendering. The MIR is
+/// what per-target allocation runs on
+/// ([`crate::codegen::regalloc::allocate_program`]); the rendering is
+/// the artifact-hash / debug program.
+pub fn lower_full(f: &Function, m: &Module) -> (Function, super::mir::MirFunction, PtxProgram) {
+    let mut fc = f.clone();
+    backend_cleanup(&mut fc);
+    let mir = super::mir::lower_mir(&fc, m);
+    let prog = mir.render_vreg();
+    (fc, mir, prog)
 }
 
 /// Machine-level cleanup pipeline (sound, AA-free): block-local CSE,
@@ -432,18 +153,11 @@ fn backend_cleanup(f: &mut Function) {
     *f = scratch.kernels.pop().unwrap();
 }
 
-fn space_str(c: MemClass) -> &'static str {
+pub(crate) fn space_str(c: MemClass) -> &'static str {
     match c {
         MemClass::Local => "local",
         MemClass::GenericLocal => "generic",
         _ => "global",
-    }
-}
-
-fn pretty(v: Option<Value>) -> String {
-    match v {
-        None => String::new(),
-        Some(v) => crate::ir::printer::print_value(v),
     }
 }
 
@@ -570,7 +284,7 @@ fn induction_base(f: &Function, id: InstId) -> Option<Value> {
 }
 
 /// Second elements of adjacent load pairs in a hinted block.
-fn find_pairs(f: &Function, bb: BlockId) -> Vec<InstId> {
+pub(crate) fn find_pairs(f: &Function, bb: BlockId) -> Vec<InstId> {
     let mut out = Vec::new();
     let ids = &f.block(bb).insts;
     let mut prev_loads: Vec<(InstId, MemLoc)> = Vec::new();
@@ -608,7 +322,7 @@ fn find_pairs(f: &Function, bb: BlockId) -> Vec<InstId> {
 }
 
 /// The first element whose pair-second is `second` (for emission).
-fn pair_first(f: &Function, bb: BlockId, second: InstId) -> Option<InstId> {
+pub(crate) fn pair_first(f: &Function, bb: BlockId, second: InstId) -> Option<InstId> {
     let ids = &f.block(bb).insts;
     let mut cx = AffineCtx::new(f);
     let sloc = MemLoc::resolve(&mut cx, f.inst(second).args()[0]);

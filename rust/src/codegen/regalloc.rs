@@ -1,0 +1,524 @@
+//! Deterministic linear-scan register allocation over MIR.
+//!
+//! Live ranges are computed from the token stream of a
+//! [`MirFunction`] (including ghost defs/uses for phis, `ld.v2` pair
+//! seconds and phi inputs), conservatively extended across CFG back
+//! edges so loop-carried and loop-invariant values stay live through
+//! whole loop bodies. Allocation runs the classic Poletto–Sarkar scan
+//! per register class against a target [`RegFile`]; when the pool is
+//! exhausted the interval with the furthest end is spilled to a
+//! `__local_depot` slot and every remaining use/def round-trips through
+//! reserved scratch registers as `ld.local`/`st.local` traffic — which
+//! the cost model prices through the existing local-memory table
+//! entries.
+//!
+//! Everything here is pure and ordered (sorted `Vec`s and `BTreeMap`s,
+//! no hash-map iteration), so allocation is a deterministic function of
+//! `(lowered function, register file)` — the invariant that keeps DSE
+//! summaries bit-identical across `--jobs`, shards and strategies.
+
+use std::collections::BTreeMap;
+
+use super::mir::{MirFunction, MirTok, RegClass};
+use super::ptx::{MemClass, PtxInst, PtxKind, PtxProgram};
+use crate::sim::target::RegFile;
+
+/// GPR scratch registers reserved for spill reloads (an instruction
+/// reads at most three register operands, e.g. `fma`).
+pub const GPR_SCRATCH: u32 = 3;
+/// Predicate scratch registers reserved for spill reloads.
+pub const PRED_SCRATCH: u32 = 1;
+/// Depot bytes per spill slot (one f32/b64 value, 8-byte aligned).
+pub const SPILL_SLOT_BYTES: u32 = 8;
+
+/// Where a vreg lives after allocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Loc {
+    /// physical register index within its class
+    Reg(u32),
+    /// `__local_depot` spill slot
+    Slot(u32),
+}
+
+/// Exact per-kernel allocation results — the numbers the old
+/// `12 + produced/3` estimate guessed at.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AllocStats {
+    /// virtual registers in the lowered function
+    pub vregs: u32,
+    /// physical GPRs used, including spill scratch — the occupancy input
+    pub regs_per_thread: u32,
+    /// physical predicate registers used
+    pub preds: u32,
+    /// distinct depot slots created by spilling
+    pub spill_slots: u32,
+    /// reload instructions inserted (`ld.local`)
+    pub spill_loads: u32,
+    /// spill-store instructions inserted (`st.local`)
+    pub spill_stores: u32,
+}
+
+/// A pure assignment: vreg → location, plus the live ranges it was
+/// computed from (exposed so tests can check interval disjointness).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Allocation {
+    pub assign: BTreeMap<u32, Loc>,
+    /// inclusive instruction-index live range per vreg
+    pub ranges: BTreeMap<u32, (usize, usize)>,
+    /// allocatable GPRs actually used (excluding scratch)
+    pub gprs: u32,
+    /// allocatable predicate registers actually used
+    pub preds: u32,
+    pub spill_slots: u32,
+    /// allocatable GPR pool size; scratch registers start at this index
+    pub gpr_cap: u32,
+    /// allocatable predicate pool size; scratch starts here
+    pub pred_cap: u32,
+}
+
+/// An allocated kernel: the physically-renamed program (with spill
+/// traffic materialized as instructions) plus its statistics.
+#[derive(Debug, Clone)]
+pub struct AllocatedKernel {
+    pub prog: PtxProgram,
+    pub stats: AllocStats,
+}
+
+/// Compute live ranges and run the per-class linear scan. Pure function
+/// of `(mir, rf)`.
+pub fn allocate(mir: &MirFunction, rf: &RegFile) -> Allocation {
+    let gpr_cap = rf.max_per_thread.saturating_sub(GPR_SCRATCH).max(1);
+    let pred_cap = rf.pred.saturating_sub(PRED_SCRATCH).max(1);
+
+    // live ranges over instruction indices
+    let mut ranges: BTreeMap<u32, (usize, usize)> = BTreeMap::new();
+    let mut touch = |ranges: &mut BTreeMap<u32, (usize, usize)>, v: u32, pos: usize| {
+        let r = ranges.entry(v).or_insert((pos, pos));
+        r.0 = r.0.min(pos);
+        r.1 = r.1.max(pos);
+    };
+    for (idx, inst) in mir.insts.iter().enumerate() {
+        for t in &inst.toks {
+            match *t {
+                MirTok::Use(v) | MirTok::Def(v) => touch(&mut ranges, v, idx),
+                MirTok::Lit(_) => {}
+            }
+        }
+        for &g in &inst.ghost_defs {
+            touch(&mut ranges, g, idx);
+        }
+    }
+    for &(v, pos) in &mir.ghost_uses {
+        touch(&mut ranges, v, pos);
+    }
+
+    // extend across back edges until fixpoint (spans can nest)
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for &(s, e) in &mir.loop_spans {
+            for r in ranges.values_mut() {
+                if r.0 <= e && r.1 >= s && r.1 < e {
+                    r.1 = e;
+                    changed = true;
+                }
+            }
+        }
+    }
+
+    // split intervals by class, ordered by (start, vreg)
+    let mut gpr_iv: Vec<(usize, usize, u32)> = Vec::new();
+    let mut pred_iv: Vec<(usize, usize, u32)> = Vec::new();
+    for (&v, &(s, e)) in &ranges {
+        match mir.vreg(v).class {
+            RegClass::Gpr => gpr_iv.push((s, e, v)),
+            RegClass::Pred => pred_iv.push((s, e, v)),
+        }
+    }
+    gpr_iv.sort_unstable_by_key(|&(s, _, v)| (s, v));
+    pred_iv.sort_unstable_by_key(|&(s, _, v)| (s, v));
+
+    let mut assign: BTreeMap<u32, Loc> = BTreeMap::new();
+    let mut next_slot = 0u32;
+    let gprs = scan(&gpr_iv, gpr_cap, &mut next_slot, &mut assign);
+    let preds = scan(&pred_iv, pred_cap, &mut next_slot, &mut assign);
+
+    Allocation {
+        assign,
+        ranges,
+        gprs,
+        preds,
+        spill_slots: next_slot,
+        gpr_cap,
+        pred_cap,
+    }
+}
+
+/// One class's linear scan. Returns the number of physical registers
+/// used. Intervals must be sorted by (start, vreg).
+fn scan(
+    intervals: &[(usize, usize, u32)],
+    cap: u32,
+    next_slot: &mut u32,
+    assign: &mut BTreeMap<u32, Loc>,
+) -> u32 {
+    // (end, vreg, phys) — kept unsorted, victim picked by max (end, vreg)
+    let mut active: Vec<(usize, u32, u32)> = Vec::new();
+    let mut free: Vec<u32> = (0..cap).rev().collect(); // pop() yields smallest
+    let mut used = 0u32;
+    for &(s, e, v) in intervals {
+        let mut i = 0;
+        while i < active.len() {
+            if active[i].0 < s {
+                free.push(active[i].2);
+                active.remove(i);
+            } else {
+                i += 1;
+            }
+        }
+        free.sort_unstable_by(|a, b| b.cmp(a));
+        if let Some(p) = free.pop() {
+            assign.insert(v, Loc::Reg(p));
+            used = used.max(p + 1);
+            active.push((e, v, p));
+        } else if let Some(victim) = active
+            .iter()
+            .enumerate()
+            .max_by_key(|&(_, &(ae, av, _))| (ae, av))
+            .map(|(i, _)| i)
+        {
+            let (ae, av, ap) = active[victim];
+            if (e, v) < (ae, av) {
+                // current interval ends sooner: steal the victim's register
+                assign.insert(av, Loc::Slot(*next_slot));
+                *next_slot += 1;
+                assign.insert(v, Loc::Reg(ap));
+                active.remove(victim);
+                active.push((e, v, ap));
+            } else {
+                assign.insert(v, Loc::Slot(*next_slot));
+                *next_slot += 1;
+            }
+        } else {
+            // cap == 0 pool (degenerate RegFile): everything spills
+            assign.insert(v, Loc::Slot(*next_slot));
+            *next_slot += 1;
+        }
+    }
+    used
+}
+
+fn phys_name(class: RegClass, p: u32) -> String {
+    match class {
+        RegClass::Gpr => format!("%r{p}"),
+        RegClass::Pred => format!("%p{p}"),
+    }
+}
+
+/// Render the allocated program: substitute physical names, insert
+/// reload (`ld.local`) instructions before each use of a spilled vreg
+/// and a spill store (`st.local`) after each definition of one. The
+/// inserted instructions carry the enclosing block id, so loop-frequency
+/// weighting prices spill traffic automatically.
+pub fn apply(mir: &MirFunction, alloc: &Allocation) -> AllocatedKernel {
+    let mut out: Vec<PtxInst> = Vec::new();
+    let mut block_ranges = std::collections::HashMap::new();
+    let mut spill_loads = 0u32;
+    let mut spill_stores = 0u32;
+    let mut gpr_spilled = false;
+    let mut pred_spilled = false;
+
+    for &(bb, s, e) in &mir.block_spans {
+        let start = out.len();
+        for mi in &mir.insts[s..e] {
+            if mi.is_ghost() {
+                continue;
+            }
+            // distinct spilled uses, in token order, mapped to scratch regs
+            let mut gpr_scr: Vec<(u32, u32)> = Vec::new(); // (vreg, slot)
+            let mut pred_scr: Vec<(u32, u32)> = Vec::new();
+            for t in &mi.toks {
+                if let MirTok::Use(v) = *t {
+                    if let Some(&Loc::Slot(slot)) = alloc.assign.get(&v) {
+                        let (list, cap) = match mir.vreg(v).class {
+                            RegClass::Gpr => (&mut gpr_scr, GPR_SCRATCH),
+                            RegClass::Pred => (&mut pred_scr, PRED_SCRATCH),
+                        };
+                        if !list.iter().any(|&(x, _)| x == v) && (list.len() as u32) < cap {
+                            list.push((v, slot));
+                        }
+                    }
+                }
+            }
+            for (j, &(v, slot)) in gpr_scr.iter().enumerate() {
+                out.push(PtxInst {
+                    kind: PtxKind::Ld(MemClass::Local),
+                    block: bb,
+                    text: format!(
+                        "ld.local.{} %r{}, [%SPL+{}]  // reload %v{v}",
+                        mir.vreg(v).ty.suffix(),
+                        alloc.gpr_cap + j as u32,
+                        slot * SPILL_SLOT_BYTES
+                    ),
+                });
+                spill_loads += 1;
+                gpr_spilled = true;
+            }
+            for (j, &(v, slot)) in pred_scr.iter().enumerate() {
+                out.push(PtxInst {
+                    kind: PtxKind::Ld(MemClass::Local),
+                    block: bb,
+                    text: format!(
+                        "ld.local.b8 %p{}, [%SPL+{}]  // reload %v{v}",
+                        alloc.pred_cap + j as u32,
+                        slot * SPILL_SLOT_BYTES
+                    ),
+                });
+                spill_loads += 1;
+                pred_spilled = true;
+            }
+            // render the instruction itself
+            let mut spilled_def: Option<u32> = None;
+            let mut text = String::new();
+            for t in &mi.toks {
+                match t {
+                    MirTok::Lit(l) => text.push_str(l),
+                    MirTok::Use(v) => {
+                        let info = mir.vreg(*v);
+                        let name = match alloc.assign.get(v) {
+                            Some(&Loc::Reg(p)) => phys_name(info.class, p),
+                            Some(&Loc::Slot(_)) => {
+                                let (list, base) = match info.class {
+                                    RegClass::Gpr => (&gpr_scr, alloc.gpr_cap),
+                                    RegClass::Pred => (&pred_scr, alloc.pred_cap),
+                                };
+                                let j = list.iter().position(|&(x, _)| x == *v).unwrap_or(0);
+                                phys_name(info.class, base + j as u32)
+                            }
+                            None => format!("%v{v}"),
+                        };
+                        text.push_str(&name);
+                    }
+                    MirTok::Def(v) => {
+                        let info = mir.vreg(*v);
+                        let name = match alloc.assign.get(v) {
+                            Some(&Loc::Reg(p)) => phys_name(info.class, p),
+                            Some(&Loc::Slot(_)) => {
+                                // write into scratch 0, stored right after
+                                spilled_def = Some(*v);
+                                match info.class {
+                                    RegClass::Gpr => {
+                                        gpr_spilled = true;
+                                        phys_name(info.class, alloc.gpr_cap)
+                                    }
+                                    RegClass::Pred => {
+                                        pred_spilled = true;
+                                        phys_name(info.class, alloc.pred_cap)
+                                    }
+                                }
+                            }
+                            None => format!("%v{v}"),
+                        };
+                        text.push_str(&name);
+                    }
+                }
+            }
+            out.push(PtxInst {
+                kind: mi.kind,
+                block: bb,
+                text,
+            });
+            if let Some(v) = spilled_def {
+                let info = mir.vreg(v);
+                let slot = match alloc.assign.get(&v) {
+                    Some(&Loc::Slot(slot)) => slot,
+                    _ => 0,
+                };
+                let (base, suffix) = match info.class {
+                    RegClass::Gpr => (alloc.gpr_cap, info.ty.suffix()),
+                    RegClass::Pred => (alloc.pred_cap, "b8"),
+                };
+                out.push(PtxInst {
+                    kind: PtxKind::St(MemClass::Local),
+                    block: bb,
+                    text: format!(
+                        "st.local.{suffix} [%SPL+{}], {}  // spill %v{v}",
+                        slot * SPILL_SLOT_BYTES,
+                        phys_name(info.class, base)
+                    ),
+                });
+                spill_stores += 1;
+            }
+        }
+        block_ranges.insert(bb, (start, out.len()));
+    }
+
+    let regs_per_thread = alloc.gprs + if gpr_spilled { GPR_SCRATCH } else { 0 };
+    let preds = alloc.preds + if pred_spilled { PRED_SCRATCH } else { 0 };
+    let stats = AllocStats {
+        vregs: mir.n_vregs(),
+        regs_per_thread,
+        preds,
+        spill_slots: alloc.spill_slots,
+        spill_loads,
+        spill_stores,
+    };
+    let prog = PtxProgram {
+        kernel: mir.kernel.clone(),
+        insts: out,
+        regs: regs_per_thread,
+        block_ranges,
+        unroll: mir.unroll.clone(),
+        outlined: mir.outlined,
+    };
+    AllocatedKernel { prog, stats }
+}
+
+/// Allocate and render in one step — the per-target entry point used by
+/// [`crate::sim::cost::LoweredKernel::allocated`].
+pub fn allocate_program(mir: &MirFunction, rf: &RegFile) -> AllocatedKernel {
+    apply(mir, &allocate(mir, rf))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::mir::{MirInst, SpillTy, VregInfo};
+    use crate::ir::BlockId;
+
+    /// N defs followed by N uses in reverse order: every range overlaps
+    /// the middle, so pressure equals N.
+    fn pressure_mir(n: u32) -> MirFunction {
+        let bb = BlockId(0);
+        let mut insts = Vec::new();
+        let mut vregs = BTreeMap::new();
+        for v in 0..n {
+            insts.push(MirInst {
+                kind: PtxKind::FAdd,
+                block: bb,
+                toks: vec![
+                    MirTok::Lit("add.f32 ".into()),
+                    MirTok::Def(v),
+                    MirTok::Lit(", 0.0, 0.0".into()),
+                ],
+                ghost_defs: vec![],
+            });
+            vregs.insert(
+                v,
+                VregInfo {
+                    class: RegClass::Gpr,
+                    ty: SpillTy::F32,
+                },
+            );
+        }
+        for v in (0..n).rev() {
+            insts.push(MirInst {
+                kind: PtxKind::St(MemClass::Coalesced),
+                block: bb,
+                toks: vec![
+                    MirTok::Lit("st.global.f32 [%arg0], ".into()),
+                    MirTok::Use(v),
+                ],
+                ghost_defs: vec![],
+            });
+        }
+        let len = insts.len();
+        MirFunction {
+            kernel: "hot".into(),
+            insts,
+            vregs,
+            ghost_uses: vec![],
+            block_spans: vec![(bb, 0, len)],
+            unroll: Default::default(),
+            outlined: false,
+            loop_spans: vec![],
+        }
+    }
+
+    #[test]
+    fn high_pressure_spills_but_respects_the_budget() {
+        let rf = crate::sim::Target::gp104().regs;
+        let ak = allocate_program(&pressure_mir(180), &rf);
+        assert!(ak.stats.spill_slots > 0, "180 live vregs must spill on a 128-reg file");
+        assert!(ak.stats.regs_per_thread <= rf.max_per_thread);
+        assert_eq!(ak.stats.regs_per_thread, rf.max_per_thread, "spilling implies a full file");
+        assert!(ak.stats.spill_loads >= ak.stats.spill_slots);
+        let ld_local = ak
+            .prog
+            .insts
+            .iter()
+            .filter(|i| i.kind == PtxKind::Ld(MemClass::Local))
+            .count() as u32;
+        let st_local = ak
+            .prog
+            .insts
+            .iter()
+            .filter(|i| i.kind == PtxKind::St(MemClass::Local))
+            .count() as u32;
+        assert_eq!(ld_local, ak.stats.spill_loads);
+        assert_eq!(st_local, ak.stats.spill_stores);
+        assert!(ak.prog.text().contains("ld.local."), "{}", ak.prog.text());
+        assert!(ak.prog.text().contains("st.local."), "{}", ak.prog.text());
+    }
+
+    #[test]
+    fn low_pressure_allocates_without_spills() {
+        let rf = crate::sim::Target::gp104().regs;
+        let ak = allocate_program(&pressure_mir(8), &rf);
+        assert_eq!(ak.stats.spill_slots, 0);
+        assert_eq!(ak.stats.spill_loads, 0);
+        assert_eq!(ak.stats.regs_per_thread, 8);
+        assert!(ak.prog.text().contains("%r0"), "{}", ak.prog.text());
+    }
+
+    #[test]
+    fn tiny_register_file_still_terminates_and_stays_bounded() {
+        let rf = RegFile {
+            gpr: 4,
+            pred: 2,
+            max_per_thread: 6,
+        };
+        let ak = allocate_program(&pressure_mir(40), &rf);
+        assert!(ak.stats.spill_slots > 0);
+        assert!(ak.stats.regs_per_thread <= rf.max_per_thread);
+    }
+
+    #[test]
+    fn allocation_is_deterministic() {
+        let mir = pressure_mir(150);
+        let rf = crate::sim::Target::fiji().regs;
+        let a1 = allocate(&mir, &rf);
+        let a2 = allocate(&mir, &rf);
+        assert_eq!(a1, a2);
+        let t1 = apply(&mir, &a1).prog.text();
+        let t2 = apply(&mir, &a2).prog.text();
+        assert_eq!(t1, t2);
+    }
+
+    #[test]
+    fn same_register_never_hosts_overlapping_ranges() {
+        let mir = pressure_mir(150);
+        let alloc = allocate(&mir, &crate::sim::Target::gp104().regs);
+        let regs: Vec<(u32, u32)> = alloc
+            .assign
+            .iter()
+            .filter_map(|(&v, l)| match l {
+                Loc::Reg(p) => Some((v, *p)),
+                Loc::Slot(_) => None,
+            })
+            .collect();
+        for (i, &(v1, p1)) in regs.iter().enumerate() {
+            for &(v2, p2) in &regs[i + 1..] {
+                if p1 != p2 {
+                    continue;
+                }
+                let (s1, e1) = alloc.ranges[&v1];
+                let (s2, e2) = alloc.ranges[&v2];
+                assert!(
+                    e1 < s2 || e2 < s1,
+                    "vregs {v1} and {v2} share %r{p1} with overlapping ranges"
+                );
+            }
+        }
+    }
+}

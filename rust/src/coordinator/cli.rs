@@ -5,10 +5,10 @@
 //!                 [--perms N] [--draws N] [--jobs N] [--out DIR] [--full]
 //!                 [--verify-each] [--shard I/N] [--emit-summary PATH]
 //!                 [--strategy fixed|permute|hillclimb|knn] [--budget N]
-//!                 [--k K]
+//!                 [--k K] [--seq p1,p2,...]
 //!
-//! commands: explore merge transfer fig2 table1 fig3 fig4 fig5 fig6
-//!           fig7 problems amd all passes targets
+//! commands: explore merge transfer lower fig2 table1 fig3 fig4 fig5
+//!           fig6 fig7 problems amd all passes targets
 //! ```
 //!
 //! `explore` runs the DSE under the selected search strategy
@@ -39,6 +39,12 @@ pub struct CliArgs {
     /// `--emit-summary PATH`: `explore` writes its (mergeable) shard
     /// file here; `merge` writes the folded summaries
     pub emit_summary: Option<PathBuf>,
+    /// `lower`'s positional benchmark name
+    pub bench: String,
+    /// `--seq p1,p2,…`: the phase order `lower` applies before lowering
+    /// (validated against the pass registry at parse time); `None` = the
+    /// unoptimized build
+    pub lower_seq: Option<Vec<&'static str>>,
 }
 
 pub fn parse_args(argv: &[String]) -> Result<CliArgs, String> {
@@ -47,6 +53,8 @@ pub fn parse_args(argv: &[String]) -> Result<CliArgs, String> {
     let mut out = PathBuf::from("results");
     let mut files = Vec::new();
     let mut emit_summary = None;
+    let mut bench = String::new();
+    let mut lower_seq: Option<Vec<&'static str>> = None;
     let (mut strategy_set, mut budget_set, mut k_set, mut seqs_set) = (false, false, false, false);
     let mut target_set = false;
     let mut it = argv.iter().peekable();
@@ -138,10 +146,26 @@ pub fn parse_args(argv: &[String]) -> Result<CliArgs, String> {
                     it.next().ok_or("--emit-summary needs a path")?,
                 ))
             }
+            "--seq" => {
+                let spec = it.next().ok_or("--seq needs a comma-separated pass list")?;
+                let mut seq = Vec::new();
+                for name in spec.split(',').filter(|s| !s.is_empty()) {
+                    let resolved = crate::passes::registry_names()
+                        .iter()
+                        .copied()
+                        .find(|n| *n == name)
+                        .ok_or_else(|| {
+                            format!("--seq: unknown pass {name} (see `repro passes`)")
+                        })?;
+                    seq.push(resolved);
+                }
+                lower_seq = Some(seq);
+            }
             "--help" | "-h" => return Err(usage()),
             flag if flag.starts_with("--") => return Err(format!("unknown flag {flag}\n{}", usage())),
             cmd if command.is_empty() => command = cmd.to_string(),
             extra if command == "merge" => files.push(PathBuf::from(extra)),
+            extra if command == "lower" && bench.is_empty() => bench = extra.to_string(),
             extra => return Err(format!("unexpected argument {extra}\n{}", usage())),
         }
     }
@@ -204,22 +228,33 @@ pub fn parse_args(argv: &[String]) -> Result<CliArgs, String> {
                 .to_string(),
         );
     }
+    if lower_seq.is_some() && command != "lower" {
+        return Err(format!("--seq only applies to lower\n{}", usage()));
+    }
+    if command == "lower" && bench.is_empty() {
+        return Err(format!(
+            "lower needs a benchmark name (e.g. `repro lower GEMM`)\n{}",
+            usage()
+        ));
+    }
     Ok(CliArgs {
         command,
         cfg,
         out,
         files,
         emit_summary,
+        bench,
+        lower_seq,
     })
 }
 
 pub fn usage() -> String {
-    "usage: repro <explore|merge|transfer|fig2|table1|fig3|fig4|fig5|fig6|fig7|problems|amd|all|\
-     passes|targets> \
+    "usage: repro <explore|merge|transfer|lower|fig2|table1|fig3|fig4|fig5|fig6|fig7|problems|amd|\
+     all|passes|targets> \
      [--seqs N] [--seed S] [--target gp104|amd-fiji] [--perms N] [--draws N] \
      [--jobs N] [--out DIR] [--full] [--verify-each] [--shard I/N] \
      [--emit-summary PATH] [--strategy fixed|permute|hillclimb|knn] \
-     [--budget N] [--k K]\n\
+     [--budget N] [--k K] [--seq p1,p2,...]\n\
      --jobs = evaluation worker threads (0 = all cores, the default); \
      results are bit-identical for every value\n\
      --full = the paper's protocol (10000 sequences, 1000 permutations/draws)\n\
@@ -245,6 +280,10 @@ pub fn usage() -> String {
      registered target, then compile each winning order ONCE and \
      measure/validate it on every target (rejects --target; writes \
      transfer.json under --out)\n\
+     lower <bench> [--seq p1,p2,...] [--target T] = print the allocated \
+     vPTX of one benchmark (optionally after a phase order) plus \
+     per-kernel regs/spills/occupancy — the register-allocation debug \
+     view\n\
      passes = list the registry (name, kind, preserved analyses)\n\
      targets = list the registered device models (--target values)"
         .to_string()
@@ -255,17 +294,21 @@ pub fn usage() -> String {
 fn render_targets() -> String {
     let mut out = String::new();
     out.push_str(&format!(
-        "{:<14} {:<26} {:>7} {:>10} {:>12}  aliases\n",
-        "name", "kind", "SMs/CUs", "clock", "regs/thread"
+        "{:<14} {:<26} {:>7} {:>10} {:>14} {:>12}  aliases\n",
+        "name", "kind", "SMs/CUs", "clock", "gpr/pred/max", "warps/SM"
     ));
     for t in Target::all() {
         out.push_str(&format!(
-            "{:<14} {:<26} {:>7} {:>7.2}GHz {:>12}  {}\n",
+            "{:<14} {:<26} {:>7} {:>7.2}GHz {:>14} {:>12}  {}\n",
             t.name,
             t.kind.describe(),
             t.sms as u32,
             t.clock_ghz,
-            t.reg_budget as u32,
+            format!("{}/{}/{}", t.regs.gpr, t.regs.pred, t.regs.max_per_thread),
+            format!(
+                "{}-{}",
+                t.min_resident_warps as u32, t.max_warps_per_sm as u32
+            ),
             t.aliases().join(", ")
         ));
     }
@@ -321,6 +364,48 @@ pub fn run(args: CliArgs) -> Result<(), String> {
         "targets" => {
             print!("{}", render_targets());
         }
+        // `repro lower` — the backend debug view: allocated vPTX plus
+        // the per-kernel allocation stats the cost model prices
+        "lower" => {
+            let b = crate::bench_suite::benchmark_by_name(&args.bench)
+                .ok_or_else(|| format!("unknown benchmark {}", args.bench))?;
+            let mut built = b.build_full(crate::bench_suite::Variant::OpenCl);
+            let seq: Vec<&'static str> = args.lower_seq.clone().unwrap_or_default();
+            if !seq.is_empty() {
+                let mut am = crate::passes::AnalysisManager::new();
+                match crate::passes::run_sequence_with(&mut built.module, &seq, false, &mut am) {
+                    crate::passes::PassOutcome::Ok => {}
+                    other => {
+                        return Err(format!(
+                            "lower {}: the phase order failed before lowering: {other:?}",
+                            args.bench
+                        ))
+                    }
+                }
+            }
+            let target = &args.cfg.target;
+            println!(
+                "{}: {} kernel(s), target {}, order [{}]",
+                args.bench,
+                built.module.kernels.len(),
+                target.name,
+                seq.join(", ")
+            );
+            for k in &built.module.kernels {
+                let lk = crate::sim::cost::LoweredKernel::lower(k, &built.module);
+                let ak = lk.allocated(target);
+                println!("\n{}", ak.prog.text());
+                println!(
+                    "kernel {}: regs/thread {} spill slots {} (loads {} stores {}) occupancy {:.2}",
+                    ak.prog.kernel,
+                    ak.stats.regs_per_thread,
+                    ak.stats.spill_slots,
+                    ak.stats.spill_loads,
+                    ak.stats.spill_stores,
+                    crate::sim::cost::occupancy(ak.stats.regs_per_thread, target)
+                );
+            }
+        }
         // §3.1 cross-device transfer: explore per target, compile each
         // winning order once, price the artifact everywhere
         "transfer" => {
@@ -357,7 +442,16 @@ pub fn run(args: CliArgs) -> Result<(), String> {
                 shards[0].n_seqs(),
                 summaries.len()
             );
-            println!("{}", report::render_explore(&summaries));
+            // merge_shards refused cross-target mixes, so shard 0 names
+            // the target every verdict was judged on — the one the
+            // winner tables' allocation columns must be computed against
+            let target = Target::by_name(&shards[0].target).ok_or_else(|| {
+                format!(
+                    "shard file target {} is not in the registry (see `repro targets`)",
+                    shards[0].target
+                )
+            })?;
+            println!("{}", report::render_explore(&summaries, &target));
             if let Some(path) = &args.emit_summary {
                 emit_json(path, &report::summaries_json(&summaries)).map_err(io)?;
             }
@@ -391,7 +485,11 @@ pub fn run(args: CliArgs) -> Result<(), String> {
                 let summaries = ctx.explore_strategy();
                 println!(
                     "{}",
-                    report::render_explore_strategy(ctx.cfg.strategy.name(), &summaries)
+                    report::render_explore_strategy(
+                        ctx.cfg.strategy.name(),
+                        &summaries,
+                        &ctx.cfg.target
+                    )
                 );
                 let (seq_memos, ptx_verdicts) = ctx.cache_totals();
                 eprintln!(
@@ -426,7 +524,7 @@ pub fn run(args: CliArgs) -> Result<(), String> {
                 );
             } else {
                 let summaries = ctx.explore_all();
-                println!("{}", report::render_explore(&summaries));
+                println!("{}", report::render_explore(&summaries, &ctx.cfg.target));
                 let (seq_memos, ptx_verdicts) = ctx.cache_totals();
                 eprintln!(
                     "cache occupancy: {seq_memos} sequence memos, {ptx_verdicts} vPTX verdicts"
@@ -684,6 +782,31 @@ mod tests {
                 assert!(text.contains(alias), "missing alias {alias}");
             }
         }
+    }
+
+    #[test]
+    fn lower_parses_and_is_validated() {
+        let a = parse_args(&sv(&["lower", "GEMM"])).unwrap();
+        assert_eq!(a.command, "lower");
+        assert_eq!(a.bench, "GEMM");
+        assert!(a.lower_seq.is_none());
+        // --seq resolves against the pass registry at parse time
+        let a = parse_args(&sv(&[
+            "lower", "ATAX", "--seq", "cfl-anders-aa,licm", "--target", "amd-fiji",
+        ]))
+        .unwrap();
+        assert_eq!(a.bench, "ATAX");
+        assert_eq!(a.lower_seq.as_deref(), Some(&["cfl-anders-aa", "licm"][..]));
+        assert_eq!(a.cfg.target.name, "amd-fiji");
+        // unknown passes are a parse error, not a runtime surprise
+        assert!(parse_args(&sv(&["lower", "GEMM", "--seq", "no-such-pass"])).is_err());
+        // the benchmark positional is mandatory
+        assert!(parse_args(&sv(&["lower"])).is_err());
+        // --seq is lower-only; positionals stay rejected elsewhere
+        assert!(parse_args(&sv(&["explore", "--seq", "licm"])).is_err());
+        assert!(parse_args(&sv(&["fig2", "GEMM"])).is_err());
+        // exactly one benchmark: a second positional is an error
+        assert!(parse_args(&sv(&["lower", "GEMM", "ATAX"])).is_err());
     }
 
     #[test]

@@ -5,7 +5,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
 
-use crate::bench_suite::{all_benchmarks, model_time_us, Benchmark, Variant};
+use crate::bench_suite::{all_benchmarks, benchmark_by_name, model_time_us, Benchmark, Variant};
 use crate::dse::engine::{self, CacheShards, EvalContext};
 use crate::dse::shard::{ShardRun, ShardSpec};
 use crate::dse::strategy::{
@@ -288,6 +288,37 @@ impl ExpCtx {
             (seq + s, ptx + p)
         })
     }
+}
+
+/// Allocation summary of one benchmark's winning order on `target`:
+/// `(max regs/thread, total spill slots, min occupancy)` across the
+/// full build's kernels — the regs/spills/occupancy columns the
+/// `repro explore` / `repro merge` winner tables render. Recomputed at
+/// render time from the order (allocation is a pure function of the
+/// lowered code and the target), so summary/shard JSON schemas carry no
+/// allocation state. `None` when the benchmark is unknown or the order
+/// no longer compiles.
+pub fn winner_alloc_info(
+    bench: &str,
+    seq: Option<&[&'static str]>,
+    target: &Target,
+) -> Option<(u32, u32, f64)> {
+    let b = benchmark_by_name(bench)?;
+    let compiler = crate::dse::Compiler::from_builds(
+        b.build_small(Variant::OpenCl),
+        b.build_full(Variant::OpenCl),
+    );
+    let ck = compiler.compile(seq.unwrap_or(&[])).ok()?;
+    let mut regs = 0u32;
+    let mut spills = 0u32;
+    let mut occ = 1.0f64;
+    for lk in &ck.lowered {
+        let ak = lk.allocated(target);
+        regs = regs.max(ak.stats.regs_per_thread);
+        spills += ak.stats.spill_slots;
+        occ = occ.min(crate::sim::cost::occupancy(ak.stats.regs_per_thread, target));
+    }
+    Some((regs, spills, occ))
 }
 
 /// Each summary's winning sequence (`None` = baseline won) — the
@@ -789,6 +820,17 @@ mod tests {
             jobs: 2,
             ..ExpConfig::default()
         })
+    }
+
+    #[test]
+    fn winner_alloc_info_reports_budget_respecting_allocations() {
+        let t = Target::gp104();
+        let (regs, _spills, occ) = winner_alloc_info("GEMM", None, &t).unwrap();
+        assert!(regs > 0, "a real kernel allocates at least one register");
+        assert!(regs <= t.regs.max_per_thread, "allocator respects the budget");
+        assert!(occ > 0.0 && occ <= 1.0);
+        // unknown benchmarks render as "no info", not a panic
+        assert!(winner_alloc_info("NOPE", None, &t).is_none());
     }
 
     #[test]

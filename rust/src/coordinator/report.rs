@@ -5,10 +5,12 @@ use std::fs;
 use std::path::Path;
 
 use super::experiments::{
-    fig2_geomeans, Fig2Row, Fig3Matrix, Fig4Scatter, Fig7Result, ProblemStats, TransferMatrix,
+    fig2_geomeans, winner_alloc_info, Fig2Row, Fig3Matrix, Fig4Scatter, Fig7Result, ProblemStats,
+    TransferMatrix,
 };
 use crate::dse::strategy::{histogram, PermutationStudy};
 use crate::dse::ExplorationSummary;
+use crate::sim::target::Target;
 use crate::util::{geomean, Json};
 
 pub fn write_json(dir: &Path, name: &str, j: &Json) -> std::io::Result<()> {
@@ -22,27 +24,51 @@ pub fn write_json(dir: &Path, name: &str, j: &Json) -> std::io::Result<()> {
 /// and how many evaluations each benchmark's summary folds over (the
 /// per-benchmark proposal streams of adaptive strategies need not have
 /// equal lengths).
-pub fn render_explore_strategy(strategy: &str, summaries: &[ExplorationSummary]) -> String {
+pub fn render_explore_strategy(
+    strategy: &str,
+    summaries: &[ExplorationSummary],
+    target: &Target,
+) -> String {
     let total: usize = summaries.iter().map(|s| s.evaluations.len()).sum();
     format!(
         "strategy {strategy}: {total} evaluations across {} benchmark(s)\n{}",
         summaries.len(),
-        render_explore(summaries)
+        render_explore(summaries, target)
     )
 }
 
 /// The `repro explore` / `repro merge` console table: one row per
 /// benchmark straight off the [`ExplorationSummary`]s (no -OX probes or
-/// minimization — that's the fig2 pipeline).
-pub fn render_explore(summaries: &[ExplorationSummary]) -> String {
+/// minimization — that's the fig2 pipeline). The regs/spills/occ columns
+/// are the winning order's allocation on `target`, recomputed at render
+/// time via [`winner_alloc_info`] (summary JSON carries no allocation
+/// state); `?` marks a winner that no longer compiles.
+pub fn render_explore(summaries: &[ExplorationSummary], target: &Target) -> String {
     let mut s = String::new();
     s.push_str(&format!(
-        "{:10} {:>12} {:>12} {:>8} | {:>6} {:>6} {:>8} {:>8} {:>6}  winning sequence\n",
-        "bench", "baseline", "best", "speedup", "ok", "crash", "invalid", "timeout", "hits"
+        "{:10} {:>12} {:>12} {:>8} | {:>6} {:>6} {:>8} {:>8} {:>6} | {:>4} {:>6} {:>5}  winning sequence\n",
+        "bench",
+        "baseline",
+        "best",
+        "speedup",
+        "ok",
+        "crash",
+        "invalid",
+        "timeout",
+        "hits",
+        "regs",
+        "spills",
+        "occ"
     ));
     for r in summaries {
+        let (regs, spills, occ) = match winner_alloc_info(&r.bench, r.best_seq(), target) {
+            Some((regs, spills, occ)) => {
+                (regs.to_string(), spills.to_string(), format!("{occ:.2}"))
+            }
+            None => ("?".to_string(), "?".to_string(), "?".to_string()),
+        };
         s.push_str(&format!(
-            "{:10} {:>12.1} {:>12.1} {:>8.2} | {:>6} {:>6} {:>8} {:>8} {:>6}  {}\n",
+            "{:10} {:>12.1} {:>12.1} {:>8.2} | {:>6} {:>6} {:>8} {:>8} {:>6} | {:>4} {:>6} {:>5}  {}\n",
             r.bench,
             r.baseline_time_us,
             r.best_time_us,
@@ -52,6 +78,9 @@ pub fn render_explore(summaries: &[ExplorationSummary]) -> String {
             r.n_invalid,
             r.n_timeout,
             r.cache_hits,
+            regs,
+            spills,
+            occ,
             match r.best_seq() {
                 None => "(baseline — no improving order found)".to_string(),
                 Some(seq) =>

@@ -171,6 +171,20 @@ impl EvalContext {
         self.compiler.set_analysis_cache(on);
     }
 
+    /// Enable/disable register-allocation feedback (the ablation knob —
+    /// see [`Compiler::set_allocation`]). The baseline time is re-priced
+    /// under the same mode, so winner-vs-baseline comparisons stay
+    /// internally consistent within a mode.
+    pub fn set_allocation(&mut self, on: bool) {
+        self.compiler.set_allocation(on);
+        self.baseline_time_us = crate::bench_suite::model_time_us_mode(
+            self.compiler.full_build(),
+            self.backend.target(),
+            None,
+            on,
+        );
+    }
+
     /// Override the validation step budget (see
     /// [`SimBackend::set_step_limit`]).
     pub fn set_step_limit(&mut self, limit: u64) {

@@ -76,6 +76,10 @@ pub struct Compiler {
     /// serve cached `DomTree`/`LoopForest` across a sequence (production
     /// default; the engine bench flips it off to measure the cache)
     analysis_cache: bool,
+    /// price artifacts with per-target register allocation feedback
+    /// (production default; the ablation flips it off to price the vreg
+    /// programs at full occupancy)
+    alloc_feedback: bool,
     /// total [`Compiler::compile`] calls — the observable behind the
     /// compile-once contract of `repro transfer`
     compiles: AtomicU64,
@@ -90,6 +94,7 @@ impl Compiler {
             full,
             verify_each: false,
             analysis_cache: true,
+            alloc_feedback: true,
             compiles: AtomicU64::new(0),
         }
     }
@@ -113,6 +118,15 @@ impl Compiler {
     /// results are bit-identical either way, only the speed changes).
     pub fn set_analysis_cache(&mut self, on: bool) {
         self.analysis_cache = on;
+    }
+
+    /// Enable/disable register-allocation feedback on the artifacts this
+    /// compiler produces (the ablation knob — see
+    /// [`LoweredKernel::set_alloc_feedback`]). The artifact *hash* is
+    /// unaffected: it always covers the per-target allocated code, so
+    /// verdict-cache identities stay comparable across modes.
+    pub fn set_allocation(&mut self, on: bool) {
+        self.alloc_feedback = on;
     }
 
     /// How many times [`Compiler::compile`] has run. `repro transfer`'s
@@ -150,7 +164,11 @@ impl Compiler {
             .module
             .kernels
             .iter()
-            .map(|k| LoweredKernel::lower(k, &full.module))
+            .map(|k| {
+                let mut lk = LoweredKernel::lower(k, &full.module);
+                lk.set_alloc_feedback(self.alloc_feedback);
+                lk
+            })
             .collect();
         // The verdict a backend attaches to this artifact covers
         // validation, and validation runs the *small* build — so the
@@ -164,6 +182,18 @@ impl Compiler {
         };
         for lk in &lowered {
             fold(lk.prog.content_hash());
+        }
+        // The allocated code is part of the artifact identity too: the
+        // measurement prices physical registers and spill traffic, so
+        // two orders whose vreg programs agree but allocate differently
+        // must not share a verdict. Folded for every registered target
+        // (registry order) — the hash stays device-independent and mode-
+        // independent, as the verdict cache's `(artifact, device)` key
+        // requires.
+        for t in Target::all() {
+            for lk in &lowered {
+                fold(lk.allocated(&t).prog.content_hash());
+            }
         }
         let mut small = self.small.clone();
         let mut am_small = self.fresh_manager();
@@ -207,9 +237,10 @@ pub struct CompiledKernel {
     /// of the verdict (it is keyed into the artifact hash), not a
     /// compile error
     pub small_outcome: PassOutcome,
-    /// combined content hash over the full and validation vPTX — the
-    /// generated-code identity the verdict cache keys on (never 0; 0 is
-    /// the engine's "no code produced" sentinel)
+    /// combined content hash over the full build's vreg vPTX, its
+    /// per-target allocated renderings (registry order), and the
+    /// validation vPTX — the generated-code identity the verdict cache
+    /// keys on (never 0; 0 is the engine's "no code produced" sentinel)
     pub artifact_hash: u64,
     /// final analysis-manager snapshot of the full-build pass run
     analyses: AnalysisManager,

@@ -10,12 +10,12 @@
 //! Only *relative* numbers matter: every experiment reports ratios
 //! between variants priced by the same model.
 
-use std::cell::OnceCell;
+use std::cell::{OnceCell, RefCell};
 use std::collections::HashMap;
 use std::rc::Rc;
 
 use crate::analysis::AffineCtx;
-use crate::codegen::{MemClass, PtxKind, PtxProgram};
+use crate::codegen::{AllocatedKernel, MemClass, MirFunction, PtxKind, PtxProgram};
 use crate::ir::dom::DomTree;
 use crate::ir::loops::LoopForest;
 use crate::ir::{BlockId, Function, Module, Op, Value};
@@ -63,7 +63,24 @@ pub fn estimate_time_unknown(
     // cost model prices freshly lowered clones, so there is no pipeline
     // cache to share, but construction stays centralized in passes/
     let (dt, lf) = crate::passes::analyses::analyses_of(f);
-    estimate_time_analyzed(f, prog, grid, target, unknown_trips, &dt, &lf)
+    estimate_time_analyzed(f, prog, grid, target, unknown_trips, prog.regs, &dt, &lf)
+}
+
+/// Occupancy from the registers one thread holds. Up to the target's
+/// full-occupancy knee (`regs.gpr`, register file / maximum resident
+/// threads) every warp slot fills; past it the resident-warp count —
+/// and with it the latency-hiding factor — declines as `gpr / regs`.
+/// The floor is the share of warp slots the scheduler can always keep
+/// resident (`min_resident_warps / max_warps_per_sm`), a per-target
+/// quantity: NVIDIA and Fiji degrade differently under the same
+/// register pressure. `regs_per_thread == 0` means "no allocation
+/// feedback" and prices at full occupancy.
+pub fn occupancy(regs_per_thread: u32, target: &Target) -> f64 {
+    if regs_per_thread == 0 {
+        return 1.0;
+    }
+    let floor = target.min_resident_warps / target.max_warps_per_sm;
+    (target.regs.gpr as f64 / regs_per_thread as f64).clamp(floor, 1.0)
 }
 
 /// [`estimate_time_unknown`] with caller-provided CFG analyses — the
@@ -71,13 +88,16 @@ pub fn estimate_time_unknown(
 /// [`DomTree`]/[`LoopForest`] computed once at compile time is reused by
 /// every per-target pricing of the same generated code. `dt`/`lf` must
 /// be `f`'s own analyses; the result is bit-identical to recomputing
-/// them.
+/// them. `regs_per_thread` is the occupancy input — the allocator's
+/// exact per-thread register count when the caller has one, `prog.regs`
+/// otherwise (0 = assume full occupancy).
 pub fn estimate_time_analyzed(
     f: &Function,
     prog: &PtxProgram,
     grid: (usize, usize),
     target: &Target,
     unknown_trips: f64,
+    regs_per_thread: u32,
     dt: &DomTree,
     lf: &LoopForest,
 ) -> CostBreakdown {
@@ -187,7 +207,7 @@ pub fn estimate_time_analyzed(
 
     let threads = (grid.0 * grid.1) as f64;
     let warps = (threads / 32.0).ceil().max(1.0);
-    let occupancy = (target.reg_budget / prog.regs as f64).clamp(0.25, 1.0);
+    let occupancy = occupancy(regs_per_thread, target);
     let time_us = cycles * warps / (target.sms * occupancy * target.clock_ghz * 1000.0);
 
     CostBreakdown {
@@ -204,35 +224,83 @@ pub fn estimate_time_analyzed(
 }
 
 /// One kernel of a compile-stage artifact: the backend-cleaned function,
-/// its vPTX program, and the CFG analyses the cost model prices with.
-/// The DSE's compile stage (`dse::evaluator::Compiler`) lowers each
-/// kernel exactly once; measuring the artifact on another target then
-/// re-walks only the cost tables — the lowering and its
-/// `DomTree`/`LoopForest` are never recomputed (the ROADMAP's
+/// its machine IR and vreg-rendered vPTX program, and the CFG analyses
+/// the cost model prices with. The DSE's compile stage
+/// (`dse::evaluator::Compiler`) lowers each kernel exactly once;
+/// measuring the artifact on another target then runs only the
+/// per-target register allocator (cached here) and re-walks the cost
+/// tables — the lowering and its `DomTree`/`LoopForest` are never
+/// recomputed (the ROADMAP's
 /// analysis-sharing-across-the-evaluation-boundary item).
 ///
-/// Thread-confined by design (`Rc`, like the analysis manager): an
-/// artifact lives and dies on the worker that compiled it.
+/// Thread-confined by design (`Rc`/`RefCell`, like the analysis
+/// manager): an artifact lives and dies on the worker that compiled it.
 pub struct LoweredKernel {
     /// the machine-cleaned clone the vPTX block ranges refer to
     pub func: Function,
+    /// the virtual-register rendering (pre-allocation)
     pub prog: PtxProgram,
+    /// the machine IR the per-target allocator consumes
+    pub mir: MirFunction,
+    /// when false, pricing uses the vreg program at full occupancy
+    /// (the allocation-feedback ablation knob)
+    feedback: bool,
     /// computed on first pricing: artifacts that fail validation are
     /// never measured, so they never pay for analyses either
     analyses: OnceCell<(Rc<DomTree>, Rc<LoopForest>)>,
+    /// per-target allocation results, keyed by `Target::name` —
+    /// allocation is a pure function of (machine IR, register file), so
+    /// caching here is invisible except in time
+    allocs: RefCell<Vec<(&'static str, Rc<AllocatedKernel>)>>,
 }
 
 impl LoweredKernel {
     /// Lower one kernel of `m` through the backend
-    /// ([`crate::codegen::lower`]), keeping the cleaned function the
-    /// cost model needs.
+    /// ([`crate::codegen::lower_full`]), keeping the cleaned function
+    /// the cost model needs and the machine IR the allocator needs.
     pub fn lower(k: &Function, m: &Module) -> LoweredKernel {
-        let (func, prog) = crate::codegen::lower(k, m);
+        let (func, mir, prog) = crate::codegen::lower_full(k, m);
         LoweredKernel {
             func,
             prog,
+            mir,
+            feedback: true,
             analyses: OnceCell::new(),
+            allocs: RefCell::new(Vec::new()),
         }
+    }
+
+    /// Toggle allocation feedback: off prices the vreg program with
+    /// occupancy pinned at 1.0 (no spills, no register pressure) — the
+    /// pre-allocator behaviour, kept as an ablation mode.
+    pub fn set_alloc_feedback(&mut self, on: bool) {
+        self.feedback = on;
+    }
+
+    /// Whether pricing uses the per-target allocation (see
+    /// [`LoweredKernel::set_alloc_feedback`]).
+    pub fn alloc_feedback(&self) -> bool {
+        self.feedback
+    }
+
+    /// This kernel allocated against `target`'s register file, computed
+    /// on first use per target and cached for every later pricing or
+    /// hash of the same artifact.
+    pub fn allocated(&self, target: &Target) -> Rc<AllocatedKernel> {
+        if let Some((_, ak)) = self
+            .allocs
+            .borrow()
+            .iter()
+            .find(|(name, _)| *name == target.name)
+        {
+            return Rc::clone(ak);
+        }
+        let ak = Rc::new(crate::codegen::regalloc::allocate_program(
+            &self.mir,
+            &target.regs,
+        ));
+        self.allocs.borrow_mut().push((target.name, Rc::clone(&ak)));
+        ak
     }
 
     /// The cleaned function's `DomTree`/`LoopForest`, computed on first
@@ -242,7 +310,11 @@ impl LoweredKernel {
             .get_or_init(|| crate::passes::analyses::analyses_of(&self.func))
     }
 
-    /// [`estimate_time_analyzed`] over the carried analyses.
+    /// [`estimate_time_analyzed`] over the carried analyses. With
+    /// allocation feedback on (the default) this prices the *allocated*
+    /// program — physical registers, spill/reload traffic, occupancy
+    /// from the allocator's exact regs-per-thread; with it off, the
+    /// vreg program at full occupancy.
     pub fn estimate(
         &self,
         grid: (usize, usize),
@@ -250,7 +322,21 @@ impl LoweredKernel {
         unknown_trips: f64,
     ) -> CostBreakdown {
         let (dt, lf) = self.analyses();
-        estimate_time_analyzed(&self.func, &self.prog, grid, target, unknown_trips, dt, lf)
+        if self.feedback {
+            let ak = self.allocated(target);
+            estimate_time_analyzed(
+                &self.func,
+                &ak.prog,
+                grid,
+                target,
+                unknown_trips,
+                ak.stats.regs_per_thread,
+                dt,
+                lf,
+            )
+        } else {
+            estimate_time_analyzed(&self.func, &self.prog, grid, target, unknown_trips, 0, dt, lf)
+        }
     }
 }
 
@@ -697,15 +783,21 @@ mod tests {
     #[test]
     fn lowered_kernel_estimate_matches_fresh_lowering_on_every_target() {
         // the compile-once artifact path must price bit-identically to a
-        // fresh lower+analyze on each registered target
+        // fresh lower+allocate+analyze on each registered target —
+        // allocation is a pure function of (machine IR, register file),
+        // so the per-target cache inside the artifact must be invisible
         let m = gemm_like();
         let lk = LoweredKernel::lower(&m.kernels[0], &m);
         for t in Target::all() {
-            let (f, p) = crate::codegen::lower(&m.kernels[0], &m);
-            let fresh = estimate_time(&f, &p, (512, 1), &t);
+            let fresh_lk = LoweredKernel::lower(&m.kernels[0], &m);
+            let fresh = fresh_lk.estimate((512, 1), &t, UNKNOWN_TRIPS_DEFAULT);
             let got = lk.estimate((512, 1), &t, UNKNOWN_TRIPS_DEFAULT);
             assert_eq!(got.time_us.to_bits(), fresh.time_us.to_bits(), "{}", t.name);
             assert_eq!(got.cycles_per_thread.to_bits(), fresh.cycles_per_thread.to_bits());
+            // repeated allocation requests hit the cache
+            let a = lk.allocated(&t);
+            let b = lk.allocated(&t);
+            assert!(std::rc::Rc::ptr_eq(&a, &b));
         }
         // the analyses were computed once, then shared across targets
         let (dt_a, _) = lk.analyses();
@@ -725,5 +817,40 @@ mod tests {
         let c_high = estimate_time(f, &p, (512, 1), &t);
         assert!(c_high.time_us > c_low.time_us);
         assert!(c_high.occupancy < c_low.occupancy);
+    }
+
+    #[test]
+    fn occupancy_floor_is_per_target() {
+        let nv = Target::gp104();
+        let amd = Target::fiji();
+        // zero means "no feedback": full occupancy on both targets
+        assert_eq!(occupancy(0, &nv), 1.0);
+        assert_eq!(occupancy(0, &amd), 1.0);
+        // below the knee: full occupancy
+        assert_eq!(occupancy(nv.regs.gpr, &nv), 1.0);
+        assert_eq!(occupancy(8, &nv), 1.0);
+        // above the knee: proportional decline
+        let half = occupancy(nv.regs.gpr * 2, &nv);
+        assert!((half - 0.5).abs() < 1e-9, "got {half}");
+        // pathological pressure bottoms out at the per-target floor,
+        // which differs between the two devices (the satellite contract)
+        let f_nv = occupancy(10_000, &nv);
+        let f_amd = occupancy(10_000, &amd);
+        assert!((f_nv - nv.min_resident_warps / nv.max_warps_per_sm).abs() < 1e-9);
+        assert!((f_amd - amd.min_resident_warps / amd.max_warps_per_sm).abs() < 1e-9);
+        assert!((f_nv - f_amd).abs() > 1e-6);
+    }
+
+    #[test]
+    fn alloc_feedback_off_prices_the_vreg_program_at_full_occupancy() {
+        let m = gemm_like();
+        let mut lk = LoweredKernel::lower(&m.kernels[0], &m);
+        assert!(lk.alloc_feedback());
+        lk.set_alloc_feedback(false);
+        for t in Target::all() {
+            let cb = lk.estimate((512, 1), &t, UNKNOWN_TRIPS_DEFAULT);
+            assert_eq!(cb.occupancy, 1.0, "{}", t.name);
+            assert!(cb.time_us.is_finite() && cb.time_us > 0.0);
+        }
     }
 }

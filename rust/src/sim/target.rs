@@ -14,6 +14,24 @@ pub enum TargetKind {
     AmdFiji,
 }
 
+/// Physical register classes available to one thread, per target.
+///
+/// `gpr` is the per-thread general-purpose allocation at which occupancy
+/// is still 100% (register file size / maximum resident threads); past
+/// it, fewer warps fit on an SM and occupancy degrades proportionally
+/// (see [`crate::sim::cost::occupancy`]). `max_per_thread` is the ISA
+/// ceiling: the allocator spills to the `__local_depot` rather than
+/// exceed it. `pred` bounds predicate registers the same way.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RegFile {
+    /// general-purpose 32-bit registers per thread at full occupancy
+    pub gpr: u32,
+    /// predicate registers per thread
+    pub pred: u32,
+    /// hard cap on GPRs per thread before the backend must spill
+    pub max_per_thread: u32,
+}
+
 impl TargetKind {
     /// Human-readable device description (the `repro targets` listing).
     pub fn describe(&self) -> &'static str {
@@ -32,8 +50,14 @@ pub struct Target {
     pub sms: f64,
     /// effective GHz (relative scale only)
     pub clock_ghz: f64,
-    /// registers per thread before occupancy degrades
-    pub reg_budget: f64,
+    /// physical register file (allocation budget + occupancy knee)
+    pub regs: RegFile,
+    /// hardware warp-slot ceiling per SM (occupancy denominator)
+    pub max_warps_per_sm: f64,
+    /// warps the scheduler keeps resident even under worst-case register
+    /// pressure — the occupancy floor is `min_resident_warps /
+    /// max_warps_per_sm`, so NVIDIA and Fiji degrade differently
+    pub min_resident_warps: f64,
     // ---- per-instruction cycles ----
     pub int_alu: f64,
     pub int_mul: f64,
@@ -70,7 +94,15 @@ impl Target {
             name: "nvidia-gp104",
             sms: 15.0,
             clock_ghz: 1.68,
-            reg_budget: 64.0,
+            // 65536 regs per SM / 2048 resident threads = 32 at full
+            // occupancy; ptxas caps a thread at 128 before spilling
+            regs: RegFile {
+                gpr: 32,
+                pred: 8,
+                max_per_thread: 128,
+            },
+            max_warps_per_sm: 64.0,
+            min_resident_warps: 16.0,
             int_alu: 1.0,
             int_mul: 2.0,
             cvt: 1.0,
@@ -104,7 +136,15 @@ impl Target {
             name: "amd-fiji",
             sms: 14.0, // 56 CUs grouped ≈ 14 shader arrays for scale
             clock_ghz: 1.05,
-            reg_budget: 84.0,
+            // GCN3: 256 VGPRs per SIMD lane shared by up to 10 waves —
+            // a bigger per-thread budget but a lower warp-slot ceiling
+            regs: RegFile {
+                gpr: 40,
+                pred: 16,
+                max_per_thread: 160,
+            },
+            max_warps_per_sm: 40.0,
+            min_resident_warps: 8.0,
             int_alu: 1.2, // no ptxas cleanup of address arithmetic
             int_mul: 2.4,
             cvt: 1.2,
@@ -192,6 +232,21 @@ mod tests {
         }
         // registry names are unique (the verdict cache keys on them)
         assert_ne!(all[0].name, all[1].name);
+    }
+
+    #[test]
+    fn register_files_are_sane_and_floors_differ() {
+        for t in Target::all() {
+            assert!(t.regs.gpr > 0 && t.regs.gpr <= t.regs.max_per_thread, "{}", t.name);
+            assert!(t.regs.pred >= 2, "{}", t.name);
+            assert!(t.min_resident_warps > 0.0 && t.min_resident_warps < t.max_warps_per_sm);
+        }
+        // the satellite contract: the occupancy floor is per-target, not a
+        // shared magic number
+        let nv = Target::gp104();
+        let amd = Target::fiji();
+        let floor = |t: &Target| t.min_resident_warps / t.max_warps_per_sm;
+        assert!((floor(&nv) - floor(&amd)).abs() > 1e-6);
     }
 
     #[test]

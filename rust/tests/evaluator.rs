@@ -22,6 +22,7 @@ use phaseord::dse::engine::{self, CacheShards, EvalContext};
 use phaseord::dse::{EvalStatus, Explorer, SeqGen};
 use phaseord::ir::{AddrSpace, KernelBuilder, Module, Op, Ty};
 use phaseord::passes::{run_sequence, PassOutcome};
+use phaseord::sim::cost::LoweredKernel;
 use phaseord::sim::exec::{Buffers, ExecError};
 use phaseord::sim::Target;
 use phaseord::util::fnv1a;
@@ -53,6 +54,19 @@ fn monolithic_eval(
     };
     for p in &emit_module(&full.module) {
         fold(p.content_hash());
+    }
+    // the artifact identity also covers the per-target allocated code
+    // (registry order), exactly as Compiler::compile folds it
+    let lowered: Vec<LoweredKernel> = full
+        .module
+        .kernels
+        .iter()
+        .map(|k| LoweredKernel::lower(k, &full.module))
+        .collect();
+    for t in Target::all() {
+        for lk in &lowered {
+            fold(lk.allocated(&t).prog.content_hash());
+        }
     }
     let mut small = b.build_small(Variant::OpenCl);
     let sout = run_sequence(&mut small.module, seq, false);

@@ -16,8 +16,11 @@
 use phaseord::bench_suite::{
     all_benchmarks, benchmark_by_name, execute, init_buffers, outputs_match, Variant,
 };
-use phaseord::codegen::emit_module;
+use phaseord::codegen::{allocate, allocate_program, emit_module, lower_full};
+use phaseord::dse::Compiler;
 use phaseord::ir::verifier::verify_module;
+use phaseord::sim::cost::LoweredKernel;
+use phaseord::sim::target::Target;
 use phaseord::passes::manager::standard_level;
 use phaseord::passes::{
     registry_names, run_pass_with, run_sequence, run_sequence_with, AnalysisManager, PassOutcome,
@@ -227,6 +230,184 @@ fn o3_recomputes_domtree_strictly_fewer_times_than_pass_count() {
     assert!(
         st.dom_hits + st.loops_hits > 0,
         "a standard pipeline must reuse cached analyses at least once"
+    );
+}
+
+#[test]
+fn prop_allocation_respects_the_register_file() {
+    // the allocator's budget contract: whatever IR a random phase order
+    // leaves behind, the allocated register counts fit the target's
+    // register file (spilling, not over-allocation, absorbs pressure)
+    let benches = all_benchmarks();
+    let names = registry_names();
+    check(
+        "allocation-respects-budget",
+        0xA110C,
+        25,
+        |rng| {
+            let b = rng.below(benches.len());
+            (b, random_seq(rng, names, 24))
+        },
+        |(bi, seq)| {
+            let mut built = benches[*bi].build_full(Variant::OpenCl);
+            if !run_sequence(&mut built.module, seq, false).is_ok() {
+                return Ok(()); // modelled crash bucket
+            }
+            for t in Target::all() {
+                for k in &built.module.kernels {
+                    let (_f, mir, _vreg) = lower_full(k, &built.module);
+                    let ak = allocate_program(&mir, &t.regs);
+                    if ak.stats.regs_per_thread > t.regs.max_per_thread {
+                        return Err(format!(
+                            "{} on {}: {} regs/thread exceeds the {}-reg budget",
+                            benches[*bi].name, t.name, ak.stats.regs_per_thread,
+                            t.regs.max_per_thread
+                        ));
+                    }
+                    if ak.stats.preds > t.regs.pred {
+                        return Err(format!(
+                            "{} on {}: {} predicate regs exceed the {}-pred file",
+                            benches[*bi].name, t.name, ak.stats.preds, t.regs.pred
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_allocation_mode_is_semantics_preserving() {
+    // the ablation knob only changes *pricing*: with allocation feedback
+    // on or off, the same phase order must produce the same compile
+    // outcome, the same artifact identity, and bit-identical executor
+    // outputs on the validation build
+    let benches = all_benchmarks();
+    let names = registry_names();
+    check(
+        "allocation-mode-semantics",
+        0x0FF5E,
+        15,
+        |rng| {
+            let b = rng.below(benches.len());
+            (b, random_seq(rng, names, 20))
+        },
+        |(bi, seq)| {
+            let bench = &benches[*bi];
+            let mk = || {
+                Compiler::from_builds(
+                    bench.build_small(Variant::OpenCl),
+                    bench.build_full(Variant::OpenCl),
+                )
+            };
+            let c_on = mk();
+            let mut c_off = mk();
+            c_off.set_allocation(false);
+            match (c_on.compile(seq), c_off.compile(seq)) {
+                (Err(a), Err(b)) => {
+                    if format!("{a:?}") == format!("{b:?}") {
+                        Ok(())
+                    } else {
+                        Err(format!("compile outcome diverged: {a:?} vs {b:?}"))
+                    }
+                }
+                (Ok(on), Ok(off)) => {
+                    if on.artifact_hash != off.artifact_hash {
+                        return Err(format!(
+                            "{}: artifact identity depends on the ablation mode",
+                            bench.name
+                        ));
+                    }
+                    let run = |ck: &phaseord::dse::CompiledKernel| {
+                        if !matches!(ck.small_outcome, PassOutcome::Ok) {
+                            return None;
+                        }
+                        let mut bufs = init_buffers(&ck.small);
+                        execute(&ck.small, &mut bufs, 1 << 34).ok().map(|_| bufs)
+                    };
+                    match (run(&on), run(&off)) {
+                        (None, None) => Ok(()),
+                        (Some(b1), Some(b2)) => {
+                            for (x, y) in b1.bufs.iter().zip(&b2.bufs) {
+                                if x != y {
+                                    return Err(format!(
+                                        "{}: {seq:?}: executor outputs differ across \
+                                         allocation modes",
+                                        bench.name
+                                    ));
+                                }
+                            }
+                            Ok(())
+                        }
+                        _ => Err(format!(
+                            "{}: validation fate diverged across allocation modes",
+                            bench.name
+                        )),
+                    }
+                }
+                _ => Err(format!(
+                    "{}: one allocation mode compiled, the other did not",
+                    bench.name
+                )),
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_allocation_is_deterministic() {
+    // allocation is a pure function of (lowered function, target): two
+    // allocations of the same MIR — and two through independently
+    // lowered kernels — must agree on the assignment, the stats, and the
+    // rendered physical code
+    let benches = all_benchmarks();
+    let names = registry_names();
+    check(
+        "allocation-deterministic",
+        0xD37A11,
+        20,
+        |rng| {
+            let b = rng.below(benches.len());
+            (b, random_seq(rng, names, 20))
+        },
+        |(bi, seq)| {
+            let mut built = benches[*bi].build_full(Variant::OpenCl);
+            if !run_sequence(&mut built.module, seq, false).is_ok() {
+                return Ok(()); // modelled crash bucket
+            }
+            for t in Target::all() {
+                for k in &built.module.kernels {
+                    let (_f, mir, _vreg) = lower_full(k, &built.module);
+                    if allocate(&mir, &t.regs) != allocate(&mir, &t.regs) {
+                        return Err(format!(
+                            "{} on {}: assignment nondeterministic",
+                            benches[*bi].name, t.name
+                        ));
+                    }
+                    let a1 = allocate_program(&mir, &t.regs);
+                    let a2 = allocate_program(&mir, &t.regs);
+                    let lk1 = LoweredKernel::lower(k, &built.module);
+                    let lk2 = LoweredKernel::lower(k, &built.module);
+                    let k1 = lk1.allocated(&t);
+                    let k2 = lk2.allocated(&t);
+                    if a1.stats != a2.stats || a1.stats != k1.stats || k1.stats != k2.stats {
+                        return Err(format!(
+                            "{} on {}: allocation stats nondeterministic",
+                            benches[*bi].name, t.name
+                        ));
+                    }
+                    let texts = [a1.prog.text(), a2.prog.text(), k1.prog.text(), k2.prog.text()];
+                    if texts.iter().any(|x| *x != texts[0]) {
+                        return Err(format!(
+                            "{} on {}: rendered physical code nondeterministic",
+                            benches[*bi].name, t.name
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
     );
 }
 
