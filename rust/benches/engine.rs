@@ -13,7 +13,11 @@
 //! * **register allocation**: occupancy feedback from the allocator on
 //!   vs off over a register-heavy benchmark pool — bit-identical across
 //!   job counts within each mode, and at least one benchmark's winning
-//!   order must change across modes (the feedback is load-bearing).
+//!   order must change across modes (the feedback is load-bearing);
+//! * **store**: the same stream explored cold (empty `--store`
+//!   directory, compile + persist) vs warm (reloaded from the cold
+//!   run's store) — bit-identical summaries, zero compiles when warm,
+//!   and the wall-clock delta a persisted store buys a repeated run.
 //!
 //! Contexts are built once up front so the timed region isolates the
 //! evaluation engine (`explore_pairs` over fresh caches), not the
@@ -28,7 +32,7 @@ mod harness;
 use phaseord::bench_suite::benchmark_by_name;
 use phaseord::dse::engine::{self, CacheShards, EvalContext, Scheduler};
 use phaseord::dse::strategy::{FixedStream, HillClimb, SearchStrategy, DEFAULT_ROUND};
-use phaseord::dse::{ExplorationSummary, SeqGen};
+use phaseord::dse::{ExplorationSummary, SeqGen, Store};
 use phaseord::sim::Target;
 
 fn explore_sched(
@@ -249,6 +253,82 @@ fn main() {
         "occupancy feedback never changed a winning order — the allocator's \
          regs/thread cannot be reaching the cost model"
     );
+
+    // ---- store ablation: cold vs warm runs at equal budgets ----
+    // the same stream explored from an empty artifact store (compile
+    // everything, then persist) vs from the store the cold run left
+    // behind (compile nothing). Summaries must stay bit-identical; the
+    // wall-clock delta is what `--store DIR` buys a repeated run.
+    let store_dir =
+        std::env::temp_dir().join(format!("phaseord-bench-store-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&store_dir);
+    let store = Store::with_targets(&store_dir, vec![target.clone()]);
+    let store_ctxs = engine::build_contexts(&benches, &target, 0);
+    let compile_total =
+        |cxs: &[EvalContext]| cxs.iter().map(|c| c.compiler().compile_count()).sum::<u64>();
+    let r_cold = harness::bench(&format!("explore 4x{n} jobs={jobs} store=cold"), 1, || {
+        let _ = std::fs::remove_dir_all(&store_dir);
+        let caches: Vec<CacheShards> = store_ctxs.iter().map(|_| CacheShards::new()).collect();
+        let parts: Vec<(&EvalContext, &CacheShards)> =
+            store_ctxs.iter().zip(caches.iter()).collect();
+        let out = engine::explore_pairs(&parts, &stream, jobs);
+        let generation = store.bump_generation().expect("store dir is writable");
+        for (bench, cache) in benches.iter().zip(&caches) {
+            store.persist(bench, cache, generation).expect("persist");
+        }
+        out.iter().map(|s| s.n_ok).sum::<usize>()
+    });
+    let r_warm = harness::bench(&format!("explore 4x{n} jobs={jobs} store=warm"), 1, || {
+        let caches: Vec<CacheShards> = store_ctxs.iter().map(|_| CacheShards::new()).collect();
+        for (bench, cache) in benches.iter().zip(&caches) {
+            store.warm(bench, cache);
+        }
+        let parts: Vec<(&EvalContext, &CacheShards)> =
+            store_ctxs.iter().zip(caches.iter()).collect();
+        explore_pairs_sum(&parts, &stream, jobs)
+    });
+    println!(
+        "warm store vs cold at jobs={jobs}: {:.2}x (min-over-min)",
+        r_cold.min_ms / r_warm.min_ms
+    );
+    // correctness alongside the timing: bit-identical and compile-free
+    let want = {
+        let caches: Vec<CacheShards> = store_ctxs.iter().map(|_| CacheShards::new()).collect();
+        let parts: Vec<(&EvalContext, &CacheShards)> =
+            store_ctxs.iter().zip(caches.iter()).collect();
+        engine::explore_pairs(&parts, &stream, jobs)
+    };
+    let caches: Vec<CacheShards> = store_ctxs.iter().map(|_| CacheShards::new()).collect();
+    for (bench, cache) in benches.iter().zip(&caches) {
+        store.warm(bench, cache);
+    }
+    let before = compile_total(&store_ctxs);
+    let warm_sums = {
+        let parts: Vec<(&EvalContext, &CacheShards)> =
+            store_ctxs.iter().zip(caches.iter()).collect();
+        engine::explore_pairs(&parts, &stream, jobs)
+    };
+    let warm_compiles = compile_total(&store_ctxs) - before;
+    println!("warm-store compiles over the full stream: {warm_compiles}");
+    assert_eq!(warm_compiles, 0, "a warm store must serve every artifact");
+    let mut store_same = true;
+    for (x, y) in want.iter().zip(&warm_sums) {
+        store_same &= summaries_match(x, y);
+    }
+    println!("summaries bit-identical across cold/warm store: {store_same}");
+    assert!(store_same, "the warm store changed evaluation results");
+    let _ = std::fs::remove_dir_all(&store_dir);
+}
+
+fn explore_pairs_sum(
+    parts: &[(&EvalContext, &CacheShards)],
+    stream: &[Vec<&'static str>],
+    jobs: usize,
+) -> usize {
+    engine::explore_pairs(parts, stream, jobs)
+        .iter()
+        .map(|s| s.n_ok)
+        .sum()
 }
 
 fn summaries_match(x: &ExplorationSummary, y: &ExplorationSummary) -> bool {

@@ -5,17 +5,20 @@
 //!                 [--perms N] [--draws N] [--jobs N] [--out DIR] [--full]
 //!                 [--verify-each] [--shard I/N] [--emit-summary PATH]
 //!                 [--strategy fixed|permute|hillclimb|knn] [--budget N]
-//!                 [--k K] [--seq p1,p2,...]
+//!                 [--k K] [--seq p1,p2,...] [--store DIR] [--max-mb N]
 //!
-//! commands: explore merge transfer lower fig2 table1 fig3 fig4 fig5
-//!           fig6 fig7 problems amd all passes targets
+//! commands: explore merge transfer serve cache lower fig2 table1 fig3
+//!           fig4 fig5 fig6 fig7 problems amd all passes targets
 //! ```
 //!
 //! `explore` runs the DSE under the selected search strategy
 //! (optionally one shard of the fixed-stream grid), `merge` folds
 //! shard files back together, and `transfer` cross-evaluates every
-//! target's winning orders on every other target (the §3.1 experiment)
-//! — see `docs/CLI.md` for walkthroughs.
+//! target's winning orders on every other target (the §3.1 experiment).
+//! `--store DIR` makes all three read-through and persist the on-disk
+//! artifact store ([`crate::dse::store`]); `serve` answers NDJSON
+//! explore/transfer queries from the warm store, and `cache stats|gc`
+//! inspect and bound it — see `docs/CLI.md` for walkthroughs.
 
 use std::path::PathBuf;
 
@@ -26,6 +29,7 @@ use super::experiments::{
 use super::report;
 use crate::dse::shard::{merge_shards, ShardRun, ShardSpec};
 use crate::dse::strategy::StrategyKind;
+use crate::dse::{CacheShards, EvalContext, Store};
 use crate::sim::target::Target;
 use crate::util::{emit_json, load_json};
 
@@ -45,6 +49,10 @@ pub struct CliArgs {
     /// (validated against the pass registry at parse time); `None` = the
     /// unoptimized build
     pub lower_seq: Option<Vec<&'static str>>,
+    /// `cache`'s positional action (`stats` or `gc`)
+    pub cache_action: String,
+    /// `--max-mb N`: the `cache gc` size budget (default 256)
+    pub max_mb: Option<u64>,
 }
 
 pub fn parse_args(argv: &[String]) -> Result<CliArgs, String> {
@@ -55,6 +63,8 @@ pub fn parse_args(argv: &[String]) -> Result<CliArgs, String> {
     let mut emit_summary = None;
     let mut bench = String::new();
     let mut lower_seq: Option<Vec<&'static str>> = None;
+    let mut cache_action = String::new();
+    let mut max_mb = None;
     let (mut strategy_set, mut budget_set, mut k_set, mut seqs_set) = (false, false, false, false);
     let mut target_set = false;
     let mut it = argv.iter().peekable();
@@ -161,11 +171,25 @@ pub fn parse_args(argv: &[String]) -> Result<CliArgs, String> {
                 }
                 lower_seq = Some(seq);
             }
+            "--store" => {
+                cfg.store = Some(PathBuf::from(it.next().ok_or("--store needs a directory")?))
+            }
+            "--max-mb" => {
+                max_mb = Some(
+                    it.next()
+                        .ok_or("--max-mb needs a value")?
+                        .parse()
+                        .map_err(|e| format!("--max-mb: {e}"))?,
+                )
+            }
             "--help" | "-h" => return Err(usage()),
             flag if flag.starts_with("--") => return Err(format!("unknown flag {flag}\n{}", usage())),
             cmd if command.is_empty() => command = cmd.to_string(),
             extra if command == "merge" => files.push(PathBuf::from(extra)),
             extra if command == "lower" && bench.is_empty() => bench = extra.to_string(),
+            extra if command == "cache" && cache_action.is_empty() => {
+                cache_action = extra.to_string()
+            }
             extra => return Err(format!("unexpected argument {extra}\n{}", usage())),
         }
     }
@@ -237,6 +261,29 @@ pub fn parse_args(argv: &[String]) -> Result<CliArgs, String> {
             usage()
         ));
     }
+    if cfg.store.is_some()
+        && !matches!(
+            command.as_str(),
+            "explore" | "transfer" | "merge" | "serve" | "cache"
+        )
+    {
+        return Err(format!(
+            "--store only applies to explore, transfer, merge, serve, and cache\n{}",
+            usage()
+        ));
+    }
+    if matches!(command.as_str(), "serve" | "cache") && cfg.store.is_none() {
+        return Err(format!("{command} requires --store DIR\n{}", usage()));
+    }
+    if command == "cache" && !matches!(cache_action.as_str(), "stats" | "gc") {
+        return Err(format!(
+            "cache needs an action: `repro cache stats|gc --store DIR`\n{}",
+            usage()
+        ));
+    }
+    if max_mb.is_some() && !(command == "cache" && cache_action == "gc") {
+        return Err(format!("--max-mb only applies to cache gc\n{}", usage()));
+    }
     Ok(CliArgs {
         command,
         cfg,
@@ -245,16 +292,18 @@ pub fn parse_args(argv: &[String]) -> Result<CliArgs, String> {
         emit_summary,
         bench,
         lower_seq,
+        cache_action,
+        max_mb,
     })
 }
 
 pub fn usage() -> String {
-    "usage: repro <explore|merge|transfer|lower|fig2|table1|fig3|fig4|fig5|fig6|fig7|problems|amd|\
-     all|passes|targets> \
+    "usage: repro <explore|merge|transfer|serve|cache|lower|fig2|table1|fig3|fig4|fig5|fig6|fig7|\
+     problems|amd|all|passes|targets> \
      [--seqs N] [--seed S] [--target gp104|amd-fiji] [--perms N] [--draws N] \
      [--jobs N] [--out DIR] [--full] [--verify-each] [--shard I/N] \
      [--emit-summary PATH] [--strategy fixed|permute|hillclimb|knn] \
-     [--budget N] [--k K] [--seq p1,p2,...]\n\
+     [--budget N] [--k K] [--seq p1,p2,...] [--store DIR] [--max-mb N]\n\
      --jobs = evaluation worker threads (0 = all cores, the default); \
      results are bit-identical for every value\n\
      --full = the paper's protocol (10000 sequences, 1000 permutations/draws)\n\
@@ -276,10 +325,19 @@ pub fn usage() -> String {
      merge <shard.json>... = fold shard files from sharded explore runs \
      (descriptor or legacy full-stream form, or a mix); bit-identical to \
      the equivalent single-process explore\n\
+     --store DIR = warm both cache levels from the on-disk artifact \
+     store before exploring and persist them back after (explore, \
+     transfer, merge; epoch-stale entries are re-evaluated incrementally)\n\
      transfer = the §3.1 cross-device experiment: explore on every \
      registered target, then compile each winning order ONCE and \
      measure/validate it on every target (rejects --target; writes \
      transfer.json under --out)\n\
+     serve = daemon loop answering newline-delimited JSON explore/\
+     transfer/stats queries on stdin from the warm store (requires \
+     --store DIR)\n\
+     cache stats|gc = print the store's per-table entry counts, bytes \
+     and epochs, or evict oldest-generation tables past --max-mb N \
+     (default 256; requires --store DIR)\n\
      lower <bench> [--seq p1,p2,...] [--target T] = print the allocated \
      vPTX of one benchmark (optionally after a phase order) plus \
      per-kernel regs/spills/occupancy — the register-allocation debug \
@@ -406,6 +464,24 @@ pub fn run(args: CliArgs) -> Result<(), String> {
                 );
             }
         }
+        // the store daemon: NDJSON queries over stdin/stdout, answered
+        // from (and persisted back into) the warm artifact store
+        "serve" => {
+            super::serve::serve(&args.cfg)?;
+        }
+        // store maintenance: inspect table occupancy or bound its size
+        "cache" => {
+            let dir = args.cfg.store.as_ref().expect("checked at parse time");
+            let store = Store::open(dir);
+            match args.cache_action.as_str() {
+                "stats" => print!("{}", report::render_cache_stats(&store.stats(), dir)),
+                "gc" => {
+                    let budget = args.max_mb.unwrap_or(256) * 1024 * 1024;
+                    print!("{}", report::render_gc(&store.gc(budget), budget));
+                }
+                _ => unreachable!("validated at parse time"),
+            }
+        }
         // §3.1 cross-device transfer: explore per target, compile each
         // winning order once, price the artifact everywhere
         "transfer" => {
@@ -455,6 +531,28 @@ pub fn run(args: CliArgs) -> Result<(), String> {
             if let Some(path) = &args.emit_summary {
                 emit_json(path, &report::summaries_json(&summaries)).map_err(io)?;
             }
+            if let Some(dir) = &args.cfg.store {
+                // fold the merged evaluations into the store: re-seed a
+                // fresh cache per benchmark from (stream × evaluations)
+                // through the same first-write-wins path the engine uses
+                let store = Store::open(dir);
+                let generation = store.bump_generation().map_err(io)?;
+                let stream = shards[0].stream.expand(shards[0].seed)?;
+                for s in &summaries {
+                    let b = crate::bench_suite::benchmark_by_name(&s.bench)
+                        .ok_or_else(|| format!("merged benchmark {} is unknown", s.bench))?;
+                    let cache = CacheShards::new();
+                    for (seq, e) in stream.iter().zip(&s.evaluations) {
+                        cache.memo_seq(EvalContext::seq_key(seq), e, target.name);
+                    }
+                    store.persist(&b, &cache, generation).map_err(io)?;
+                }
+                eprintln!(
+                    "store: persisted {} merged benchmark table(s) to {}",
+                    summaries.len(),
+                    dir.display()
+                );
+            }
         }
         "explore" => {
             let cfg = args.cfg.clone();
@@ -495,6 +593,7 @@ pub fn run(args: CliArgs) -> Result<(), String> {
                 eprintln!(
                     "cache occupancy: {seq_memos} sequence memos, {ptx_verdicts} vPTX verdicts"
                 );
+                ctx.persist_store().map_err(io)?;
                 return Ok(());
             }
             let spec = cfg.shard.unwrap_or_else(ShardSpec::full);
@@ -522,6 +621,7 @@ pub fn run(args: CliArgs) -> Result<(), String> {
                     ctx.benchmarks.len() * ctx.stream.len(),
                     path.display()
                 );
+                ctx.persist_store().map_err(io)?;
             } else {
                 let summaries = ctx.explore_all();
                 println!("{}", report::render_explore(&summaries, &ctx.cfg.target));
@@ -537,6 +637,7 @@ pub fn run(args: CliArgs) -> Result<(), String> {
                     emit_json(path, &run.to_json()).map_err(io)?;
                     eprintln!("wrote {}", path.display());
                 }
+                ctx.persist_store().map_err(io)?;
             }
         }
         "fig2" | "table1" | "fig3" | "fig4" | "fig5" | "problems" | "fig7" | "amd" | "all" => {
@@ -843,5 +944,35 @@ mod tests {
         // CFG restructurers preserve nothing; flag-only passes everything
         assert!(row_of("simplifycfg").contains("(none)"));
         assert!(row_of("cfl-anders-aa").contains("alias-summary"));
+    }
+
+    #[test]
+    fn store_and_cache_flags_parse_and_validate() {
+        // --store rides on the exploration commands …
+        for cmd in ["explore", "transfer", "serve"] {
+            let a = parse_args(&sv(&[cmd, "--store", "st"])).unwrap();
+            assert_eq!(a.cfg.store.as_deref(), Some(std::path::Path::new("st")));
+        }
+        let a = parse_args(&sv(&["merge", "a.json", "--store", "st"])).unwrap();
+        assert_eq!(a.cfg.store.as_deref(), Some(std::path::Path::new("st")));
+        // … and nowhere else
+        assert!(parse_args(&sv(&["fig2", "--store", "st"])).is_err());
+        assert!(parse_args(&sv(&["lower", "GEMM", "--store", "st"])).is_err());
+        // serve is meaningless without a store to serve from
+        assert!(parse_args(&sv(&["serve"])).is_err());
+        // cache needs a store and exactly one known action
+        let a = parse_args(&sv(&["cache", "stats", "--store", "st"])).unwrap();
+        assert_eq!(a.command, "cache");
+        assert_eq!(a.cache_action, "stats");
+        assert!(a.max_mb.is_none());
+        let a = parse_args(&sv(&["cache", "gc", "--store", "st", "--max-mb", "10"])).unwrap();
+        assert_eq!(a.cache_action, "gc");
+        assert_eq!(a.max_mb, Some(10));
+        assert!(parse_args(&sv(&["cache", "stats"])).is_err(), "no --store");
+        assert!(parse_args(&sv(&["cache", "--store", "st"])).is_err(), "no action");
+        assert!(parse_args(&sv(&["cache", "shrink", "--store", "st"])).is_err());
+        // --max-mb belongs to `cache gc` alone
+        assert!(parse_args(&sv(&["cache", "stats", "--store", "st", "--max-mb", "9"])).is_err());
+        assert!(parse_args(&sv(&["explore", "--store", "st", "--max-mb", "9"])).is_err());
     }
 }

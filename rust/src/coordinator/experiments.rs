@@ -2,12 +2,14 @@
 //! table/figure).
 
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
 
 use crate::bench_suite::{all_benchmarks, benchmark_by_name, model_time_us, Benchmark, Variant};
 use crate::dse::engine::{self, CacheShards, EvalContext};
 use crate::dse::shard::{ShardRun, ShardSpec};
+use crate::dse::store::{Store, WarmStats};
 use crate::dse::strategy::{
     HillClimb, KnnSeeded, Permute, PermutationStudy, SearchStrategy, StrategyKind, DEFAULT_ROUND,
 };
@@ -48,6 +50,10 @@ pub struct ExpConfig {
     pub budget: usize,
     /// neighbor count for `--strategy knn` (`--k`, §4.2 uses 1 and 3)
     pub knn_k: usize,
+    /// on-disk artifact store directory (`--store DIR`): warm both
+    /// cache levels from it at context construction and persist them
+    /// back after a run ([`crate::dse::store`]); `None` = cache-cold
+    pub store: Option<PathBuf>,
 }
 
 impl Default for ExpConfig {
@@ -64,6 +70,7 @@ impl Default for ExpConfig {
             strategy: StrategyKind::Fixed,
             budget: 0,
             knn_k: 3,
+            store: None,
         }
     }
 }
@@ -84,6 +91,14 @@ pub struct ExpCtx {
     /// shard files must record which source judged each benchmark's
     /// verdicts (merge refuses to mix them)
     pub golden_sources: HashMap<String, String>,
+    /// open handle on `cfg.store` (both cache levels were warmed from
+    /// it at construction)
+    store: Option<Store>,
+    /// what the store warm-up seeded (zeros when cache-cold)
+    pub warm_stats: WarmStats,
+    /// `Compiler::compile` calls already spent at construction time —
+    /// the baseline [`ExpCtx::run_compiles`] subtracts
+    compiles_at_start: u64,
 }
 
 impl ExpCtx {
@@ -121,14 +136,37 @@ impl ExpCtx {
             cx.set_verify_each(cfg.verify_each);
             explorers.insert(cx.name.clone(), Explorer::from_context(cx));
         }
-        ExpCtx {
+        // warm both cache levels from the on-disk store before any
+        // evaluation, so the first lookup of a stored cell hits
+        let mut store = None;
+        let mut warm_stats = WarmStats::default();
+        if let Some(dir) = &cfg.store {
+            let st = Store::open(dir);
+            for b in &benchmarks {
+                warm_stats.add(st.warm(b, explorers[b.name].parts().1));
+            }
+            eprintln!(
+                "store {}: warmed {} sequence memos + {} verdicts ({} stale dropped)",
+                dir.display(),
+                warm_stats.seq_loaded,
+                warm_stats.verdict_loaded,
+                warm_stats.seq_stale + warm_stats.verdict_stale
+            );
+            store = Some(st);
+        }
+        let mut ctx = ExpCtx {
             cfg,
             benchmarks,
             stream,
             explorers,
             used_pjrt_golden: used_pjrt.into_inner(),
             golden_sources: sources.into_inner().unwrap(),
-        }
+            store,
+            warm_stats,
+            compiles_at_start: 0,
+        };
+        ctx.compiles_at_start = ctx.compile_totals();
+        ctx
     }
 
     pub fn explorer(&mut self, name: &str) -> &mut Explorer {
@@ -288,6 +326,52 @@ impl ExpCtx {
             (seq + s, ptx + p)
         })
     }
+
+    /// Total `Compiler::compile` calls across all benchmark contexts
+    /// (the compile-once counter, post-pool snapshot).
+    pub fn compile_totals(&self) -> u64 {
+        self.benchmarks
+            .iter()
+            .map(|b| self.eval_context(b.name).compiler().compile_count())
+            .sum()
+    }
+
+    /// Compile calls spent since construction — what exploration
+    /// actually paid. Zero on a fully warm store, the acceptance
+    /// invariant the CI warm-store smoke asserts.
+    pub fn run_compiles(&self) -> u64 {
+        self.compile_totals() - self.compiles_at_start
+    }
+
+    pub fn has_store(&self) -> bool {
+        self.store.is_some()
+    }
+
+    /// Persist every benchmark's caches back into the store under one
+    /// fresh generation, plus `last-run.json` with this run's
+    /// warm/compile accounting (the summaries themselves must stay
+    /// bit-identical warm vs cold, so the stats live here instead).
+    pub fn persist_store(&self) -> std::io::Result<()> {
+        let Some(st) = &self.store else {
+            return Ok(());
+        };
+        let generation = st.bump_generation()?;
+        for b in &self.benchmarks {
+            st.persist(b, self.explorers[b.name].parts().1, generation)?;
+        }
+        let run = super::report::store_run_json(
+            self.run_compiles(),
+            &self.warm_stats,
+            self.cache_totals(),
+        );
+        crate::util::emit_json(&st.dir().join("last-run.json"), &run)?;
+        eprintln!(
+            "store: persisted generation {generation} ({} benchmark tables) to {}",
+            self.benchmarks.len(),
+            st.dir().display()
+        );
+        Ok(())
+    }
 }
 
 /// Allocation summary of one benchmark's winning order on `target`:
@@ -433,6 +517,14 @@ pub fn transfer_matrix(cfg: &ExpConfig) -> TransferMatrix {
         }
     }
     let compiles = count_compiles(&ctxs[0]) - compiles_before;
+    // persist each target's exploration caches (sequence memos are
+    // shared per benchmark file; each context contributes its own
+    // device's verdict column, merged under matching epochs)
+    for ctx in &ctxs {
+        if let Err(e) = ctx.persist_store() {
+            eprintln!("warning: store persist failed: {e}");
+        }
+    }
     TransferMatrix {
         targets: targets.iter().map(|t| t.name.to_string()).collect(),
         benches,

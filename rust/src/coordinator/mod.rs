@@ -14,9 +14,14 @@
 //!   [`ExpCtx::explore_all`] (or [`ExpCtx::explore_shard`] for a
 //!   `--shard I/N` slice).
 //! * [`report`] — console tables and the JSON dumps under `results/`.
+//! * [`serve`] — the `repro serve` daemon: newline-delimited JSON
+//!   explore/transfer queries over stdin/stdout, answered from the warm
+//!   `--store DIR` artifact store with per-query hit/miss/compile
+//!   accounting.
 
 pub mod cli;
 pub mod experiments;
 pub mod report;
+pub mod serve;
 
 pub use experiments::{ExpConfig, ExpCtx};

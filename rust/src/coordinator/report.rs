@@ -8,6 +8,7 @@ use super::experiments::{
     fig2_geomeans, winner_alloc_info, Fig2Row, Fig3Matrix, Fig4Scatter, Fig7Result, ProblemStats,
     TransferMatrix,
 };
+use crate::dse::store::{GcReport, StoreStats, WarmStats, RUN_SCHEMA};
 use crate::dse::strategy::{histogram, PermutationStudy};
 use crate::dse::ExplorationSummary;
 use crate::sim::target::Target;
@@ -97,6 +98,69 @@ pub fn render_explore(summaries: &[ExplorationSummary], target: &Target) -> Stri
 /// output; each element round-trips via [`ExplorationSummary::from_json`]).
 pub fn summaries_json(summaries: &[ExplorationSummary]) -> Json {
     Json::Arr(summaries.iter().map(|s| s.to_json()).collect())
+}
+
+// ----------------------------------------------------- artifact store
+
+/// `DIR/last-run.json`: warm/compile accounting of the latest batch run
+/// against an artifact store. The CI warm-store smoke reads it —
+/// `compiles` must be 0 on a fully warm second run. Kept out of the
+/// summary JSON on purpose: summaries are bit-identical warm vs cold.
+pub fn store_run_json(compiles: u64, warm: &WarmStats, cache_totals: (usize, usize)) -> Json {
+    Json::Obj(vec![
+        ("schema".into(), Json::s(RUN_SCHEMA)),
+        ("compiles".into(), Json::n(compiles as f64)),
+        ("seq_warm".into(), Json::n(warm.seq_loaded as f64)),
+        ("verdict_warm".into(), Json::n(warm.verdict_loaded as f64)),
+        ("seq_stale".into(), Json::n(warm.seq_stale as f64)),
+        ("verdict_stale".into(), Json::n(warm.verdict_stale as f64)),
+        ("seq_memos".into(), Json::n(cache_totals.0 as f64)),
+        ("verdicts".into(), Json::n(cache_totals.1 as f64)),
+    ])
+}
+
+/// The `repro cache stats` console table: per benchmark table, entry
+/// counts, bytes, generation, and the epoch fingerprint of each level.
+pub fn render_cache_stats(s: &StoreStats, dir: &Path) -> String {
+    let mut out = format!(
+        "store {} — generation {}, {} table(s), {} bytes\n",
+        dir.display(),
+        s.generation,
+        s.benches.len(),
+        s.total_bytes
+    );
+    out.push_str(&format!(
+        "{:10} {:>8} {:>5} {:>6}  {:>18}  per-device verdicts\n",
+        "bench", "bytes", "gen", "memos", "seq epoch"
+    ));
+    for b in &s.benches {
+        let verdicts = b
+            .verdicts
+            .iter()
+            .map(|t| format!("{}: {} @ {:#018x}", t.device, t.entries, t.epoch))
+            .collect::<Vec<_>>()
+            .join(" | ");
+        out.push_str(&format!(
+            "{:10} {:>8} {:>5} {:>6}  {:#018x}  {}\n",
+            b.bench, b.bytes, b.generation, b.seq_entries, b.seq_epoch, verdicts
+        ));
+    }
+    out
+}
+
+/// The `repro cache gc` console report.
+pub fn render_gc(r: &GcReport, max_bytes: u64) -> String {
+    let mut out = format!(
+        "gc: {} → {} bytes (budget {}), {} table(s) evicted\n",
+        r.bytes_before,
+        r.bytes_after,
+        max_bytes,
+        r.evicted.len()
+    );
+    for f in &r.evicted {
+        out.push_str(&format!("  evicted {f}\n"));
+    }
+    out
 }
 
 // ----------------------------------------------------- §3.1 transfer
@@ -571,6 +635,50 @@ mod tests {
         let fails = back.get("fails").and_then(|f| f.as_arr()).unwrap();
         let row0 = fails[0].as_arr().unwrap();
         assert_eq!(row0[1].as_usize(), Some(1));
+    }
+
+    #[test]
+    fn store_reports_render_and_parse() {
+        let warm = WarmStats {
+            seq_loaded: 5,
+            verdict_loaded: 4,
+            seq_stale: 1,
+            verdict_stale: 0,
+        };
+        let j = store_run_json(0, &warm, (6, 4)).to_string();
+        let back = Json::parse(&j).unwrap();
+        assert_eq!(back.get("compiles").and_then(|c| c.as_usize()), Some(0));
+        assert_eq!(back.get("seq_warm").and_then(|c| c.as_usize()), Some(5));
+        assert_eq!(back.get("schema").and_then(|s| s.as_str()), Some(RUN_SCHEMA));
+
+        let stats = StoreStats {
+            generation: 3,
+            total_bytes: 1234,
+            benches: vec![crate::dse::store::BenchStats {
+                file: "bench-GEMM.json".into(),
+                bench: "GEMM".into(),
+                bytes: 1234,
+                generation: 3,
+                seq_entries: 6,
+                seq_epoch: 0xAB,
+                verdicts: vec![crate::dse::store::TableStats {
+                    device: "nvidia-gp104".into(),
+                    entries: 4,
+                    epoch: 0xCD,
+                }],
+            }],
+        };
+        let s = render_cache_stats(&stats, Path::new("/tmp/store"));
+        assert!(s.contains("generation 3"), "{s}");
+        assert!(s.contains("GEMM") && s.contains("nvidia-gp104: 4"), "{s}");
+
+        let gc = GcReport {
+            bytes_before: 2000,
+            bytes_after: 900,
+            evicted: vec!["bench-ATAX.json".into()],
+        };
+        let g = render_gc(&gc, 1000);
+        assert!(g.contains("evicted bench-ATAX.json"), "{g}");
     }
 
     #[test]

@@ -1,0 +1,292 @@
+//! `repro serve` — a persistent exploration service over the artifact
+//! store.
+//!
+//! The daemon answers newline-delimited JSON requests on stdin with one
+//! JSON response line on stdout each (std-only — no sockets; pipe the
+//! process from any driver). Evaluation contexts are built once per
+//! target and kept warm across queries, and both cache levels are
+//! seeded from `--store DIR` at construction and persisted back after
+//! every explore query — so a repeated query compiles nothing and the
+//! store keeps growing monotonically. Logs go to stderr; stdout carries
+//! only responses.
+//!
+//! Requests (`op` selects; unknown fields are ignored):
+//!
+//! ```text
+//! {"op":"ping"}
+//! {"op":"explore","seqs":N,"seed":S,"target":"gp104","jobs":J}
+//! {"op":"transfer","seqs":N,"seed":S}
+//! {"op":"stats"}
+//! {"op":"shutdown"}
+//! ```
+//!
+//! `seed` is accepted as a JSON number or a `"0x…"` hex string. Every
+//! response carries `"ok"`; explore responses add the summaries (bit-
+//! identical to a cold batch run of the same stream) and per-query
+//! `stats` — evaluations, warm-served count, and the compile count
+//! (zero once the store covers the stream). A malformed request gets
+//! `{"ok":false,"error":…}` and the loop continues; EOF or `shutdown`
+//! ends it. Misses are distributed the usual way: shard descriptor
+//! files (`StreamSpec::Seeded`) stay the wire format, and `repro merge
+//! --store` folds shard results back into the same store this daemon
+//! serves from.
+
+use std::collections::HashMap;
+use std::io::{BufRead, Write};
+
+use super::experiments::{transfer_matrix, ExpConfig, ExpCtx};
+use super::report;
+use crate::dse::engine;
+use crate::dse::{SeqGen, Store};
+use crate::sim::target::Target;
+use crate::util::Json;
+
+/// Run the daemon loop over real stdin/stdout until EOF or `shutdown`.
+pub fn serve(cfg: &ExpConfig) -> Result<(), String> {
+    if cfg.store.is_none() {
+        return Err("serve requires --store DIR".into());
+    }
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    serve_loop(cfg, &mut stdin.lock(), &mut stdout.lock())
+}
+
+/// The testable core of [`serve`]: reads requests from `input`, writes
+/// one response line per request to `output`.
+pub fn serve_loop(
+    cfg: &ExpConfig,
+    input: &mut dyn BufRead,
+    output: &mut dyn Write,
+) -> Result<(), String> {
+    let mut ctxs: HashMap<String, ExpCtx> = HashMap::new();
+    let mut served = 0u64;
+    for line in input.lines() {
+        let line = line.map_err(|e| format!("stdin: {e}"))?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (resp, shutdown) = match handle(cfg, &mut ctxs, line) {
+            Ok(r) => r,
+            Err(e) => (
+                Json::Obj(vec![
+                    ("ok".into(), Json::Bool(false)),
+                    ("error".into(), Json::s(e)),
+                ]),
+                false,
+            ),
+        };
+        served += 1;
+        writeln!(output, "{}", resp.to_string()).map_err(|e| format!("stdout: {e}"))?;
+        output.flush().map_err(|e| format!("stdout: {e}"))?;
+        if shutdown {
+            break;
+        }
+    }
+    eprintln!("serve: {served} response(s) served");
+    Ok(())
+}
+
+fn ok_obj(fields: Vec<(&str, Json)>) -> Json {
+    let mut obj = vec![("ok".to_string(), Json::Bool(true))];
+    obj.extend(fields.into_iter().map(|(k, v)| (k.to_string(), v)));
+    Json::Obj(obj)
+}
+
+fn parse_seed(j: Option<&Json>) -> Result<Option<u64>, String> {
+    match j {
+        None | Some(Json::Null) => Ok(None),
+        Some(Json::Num(n)) => Ok(Some(*n as u64)),
+        Some(Json::Str(s)) => {
+            let digits = s.trim_start_matches("0x");
+            u64::from_str_radix(digits, 16)
+                .map(Some)
+                .map_err(|e| format!("bad seed {s:?}: {e}"))
+        }
+        Some(_) => Err("seed must be a number or a 0x… hex string".into()),
+    }
+}
+
+fn handle(
+    cfg: &ExpConfig,
+    ctxs: &mut HashMap<String, ExpCtx>,
+    line: &str,
+) -> Result<(Json, bool), String> {
+    let q = Json::parse(line).map_err(|e| format!("bad request: {e}"))?;
+    let op = q
+        .get("op")
+        .and_then(|o| o.as_str())
+        .ok_or("request without an \"op\" field")?;
+    match op {
+        "ping" => Ok((ok_obj(vec![("op", Json::s("ping"))]), false)),
+        "shutdown" => Ok((ok_obj(vec![("op", Json::s("shutdown"))]), true)),
+        "stats" => {
+            let store = Store::open(cfg.store.clone().expect("serve requires a store"));
+            let s = store.stats();
+            let benches = s
+                .benches
+                .iter()
+                .map(|b| {
+                    Json::Obj(vec![
+                        ("bench".into(), Json::s(&b.bench)),
+                        ("bytes".into(), Json::n(b.bytes as f64)),
+                        ("gen".into(), Json::n(b.generation as f64)),
+                        ("seq_entries".into(), Json::n(b.seq_entries as f64)),
+                        (
+                            "verdicts".into(),
+                            Json::Arr(
+                                b.verdicts
+                                    .iter()
+                                    .map(|t| {
+                                        Json::Obj(vec![
+                                            ("device".into(), Json::s(&t.device)),
+                                            ("entries".into(), Json::n(t.entries as f64)),
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                    ])
+                })
+                .collect();
+            Ok((
+                ok_obj(vec![
+                    ("op", Json::s("stats")),
+                    ("generation", Json::n(s.generation as f64)),
+                    ("total_bytes", Json::n(s.total_bytes as f64)),
+                    ("benches", Json::Arr(benches)),
+                ]),
+                false,
+            ))
+        }
+        "explore" => {
+            let n = q
+                .get("seqs")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(cfg.n_seqs);
+            let seed = parse_seed(q.get("seed"))?.unwrap_or(cfg.seed);
+            let jobs = q.get("jobs").and_then(|v| v.as_usize()).unwrap_or(cfg.jobs);
+            let tname = q
+                .get("target")
+                .and_then(|v| v.as_str())
+                .unwrap_or(cfg.target.name);
+            let target =
+                Target::by_name(tname).ok_or_else(|| format!("unknown target {tname:?}"))?;
+            let ctx = ctxs.entry(target.name.to_string()).or_insert_with(|| {
+                eprintln!("serve: building evaluation contexts for {} …", target.name);
+                let mut c = cfg.clone();
+                c.target = target.clone();
+                // queries carry their own streams; skip the default one
+                c.n_seqs = 0;
+                ExpCtx::new(c)
+            });
+            let stream = SeqGen::stream(seed, n);
+            let before = ctx.compile_totals();
+            let summaries = engine::explore_pairs(&ctx.parts(), &stream, jobs);
+            let compiles = ctx.compile_totals() - before;
+            let evaluations: usize = summaries.iter().map(|s| s.evaluations.len()).sum();
+            let stream_hits: usize = summaries.iter().map(|s| s.cache_hits).sum();
+            if let Err(e) = ctx.persist_store() {
+                eprintln!("warning: store persist failed: {e}");
+            }
+            let (seq_memos, verdicts) = ctx.cache_totals();
+            let stats = Json::Obj(vec![
+                ("evaluations".into(), Json::n(evaluations as f64)),
+                (
+                    "served_warm".into(),
+                    Json::n((evaluations as u64 - compiles) as f64),
+                ),
+                ("compiles".into(), Json::n(compiles as f64)),
+                ("stream_hits".into(), Json::n(stream_hits as f64)),
+                ("seq_memos".into(), Json::n(seq_memos as f64)),
+                ("verdicts".into(), Json::n(verdicts as f64)),
+            ]);
+            Ok((
+                ok_obj(vec![
+                    ("op", Json::s("explore")),
+                    ("target", Json::s(target.name)),
+                    ("seqs", Json::n(n as f64)),
+                    ("summaries", report::summaries_json(&summaries)),
+                    ("stats", stats),
+                ]),
+                false,
+            ))
+        }
+        "transfer" => {
+            let mut c = cfg.clone();
+            if let Some(n) = q.get("seqs").and_then(|v| v.as_usize()) {
+                c.n_seqs = n;
+            }
+            if let Some(seed) = parse_seed(q.get("seed"))? {
+                c.seed = seed;
+            }
+            let m = transfer_matrix(&c);
+            Ok((
+                ok_obj(vec![
+                    ("op", Json::s("transfer")),
+                    ("transfer", report::transfer_json(&m)),
+                ]),
+                false,
+            ))
+        }
+        other => Err(format!("unknown op {other:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn serve_loop_answers_queries_and_keeps_the_context_warm() {
+        let dir = std::env::temp_dir().join(format!("phaseord-serve-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = ExpConfig {
+            n_seqs: 0,
+            jobs: 2,
+            store: Some(dir.clone()),
+            ..ExpConfig::default()
+        };
+        let input = "\
+            {\"op\":\"ping\"}\n\
+            this is not json\n\
+            {\"op\":\"explore\",\"seqs\":3,\"seed\":9,\"jobs\":1}\n\
+            {\"op\":\"explore\",\"seqs\":3,\"seed\":\"0x9\",\"jobs\":2}\n\
+            {\"op\":\"stats\"}\n\
+            {\"op\":\"shutdown\"}\n\
+            {\"op\":\"ping\"}\n";
+        let mut out = Vec::new();
+        serve_loop(&cfg, &mut Cursor::new(input), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+        // shutdown stops the loop: the trailing ping is never served
+        assert_eq!(lines.len(), 6, "{text}");
+        assert_eq!(lines[0].get("ok").and_then(|o| o.as_bool()), Some(true));
+        assert_eq!(lines[1].get("ok").and_then(|o| o.as_bool()), Some(false));
+        assert!(lines[1].get("error").is_some());
+
+        // first explore compiles; the identical second one is fully warm
+        // (and `--jobs` cannot change the summaries)
+        let stats = |l: &Json, k: &str| {
+            l.get("stats").and_then(|s| s.get(k)).and_then(|v| v.as_usize())
+        };
+        assert!(stats(&lines[2], "compiles").unwrap() > 0, "{text}");
+        assert_eq!(stats(&lines[3], "compiles"), Some(0), "{text}");
+        assert_eq!(stats(&lines[2], "evaluations"), stats(&lines[3], "evaluations"));
+        let summaries = |l: &Json| l.get("summaries").unwrap().to_string();
+        assert_eq!(summaries(&lines[2]), summaries(&lines[3]));
+
+        // the persisted store is visible to the stats op
+        assert_eq!(lines[4].get("op").and_then(|o| o.as_str()), Some("stats"));
+        assert!(
+            lines[4]
+                .get("benches")
+                .and_then(|b| b.as_arr())
+                .is_some_and(|b| !b.is_empty()),
+            "{text}"
+        );
+        assert_eq!(lines[5].get("op").and_then(|o| o.as_str()), Some("shutdown"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -323,9 +323,10 @@ const N_SHARDS: usize = 16;
 
 /// How a sequence memo resolves. The memo is **target-independent**
 /// (compilation is), so one entry serves every device; only the verdict
-/// is per device.
+/// is per device. Public so the on-disk store ([`crate::dse::store`])
+/// can snapshot and re-seed entries without re-deriving them.
 #[derive(Debug, Clone)]
-enum SeqMemo {
+pub enum SeqMemo {
     /// compiled to an artifact: the verdict lives in the per-device
     /// verdict table under `(hash, device)`
     Artifact(u64),
@@ -343,6 +344,62 @@ struct Shard {
     /// generated-code verdict cache: (artifact hash, device) →
     /// (status, time) — one compile, priced per target
     verdict: HashMap<(u64, &'static str), (EvalStatus, f64)>,
+}
+
+/// The one first-write-wins insertion point for the sequence-memo
+/// level. Both writers — the in-memory evaluation path
+/// ([`CacheShards::memo_seq`]) and the on-disk store's warm path
+/// ([`CacheShards::seed_seq`]) — route through here, so the collision
+/// `debug_assert!`s cannot drift between the two: a later write with
+/// the same key must carry the same memo, and racers keep the first.
+fn seq_first_write(map: &mut HashMap<u64, SeqMemo>, key: u64, memo: SeqMemo) {
+    match map.entry(key) {
+        Entry::Occupied(o) => match (o.get(), &memo) {
+            (SeqMemo::Artifact(h0), SeqMemo::Artifact(h1)) => debug_assert!(
+                h0 == h1,
+                "sequence-memo collision with a different artifact: \
+                 key {key:#x} maps to {h0:#x}, writer carries {h1:#x}"
+            ),
+            (SeqMemo::NoCode(e0), SeqMemo::NoCode(e1)) => debug_assert!(
+                e0.status == e1.status,
+                "sequence-memo collision with a different no-code verdict (key {key:#x})"
+            ),
+            _ => debug_assert!(
+                false,
+                "sequence-memo collision across kinds (key {key:#x}): artifact vs no-code"
+            ),
+        },
+        Entry::Vacant(v) => {
+            v.insert(memo);
+        }
+    }
+}
+
+/// First-write-wins insertion for the verdict level, shared by the
+/// in-memory path ([`CacheShards::put_verdict`]) and the store's warm
+/// path for the same no-drift reason as [`seq_first_write`]. Verdicts
+/// are pure functions of `(hash, device)`, so a colliding write must
+/// carry a bit-identical verdict (debug-asserted).
+fn verdict_first_write(
+    map: &mut HashMap<(u64, &'static str), (EvalStatus, f64)>,
+    hash: u64,
+    device: &'static str,
+    status: EvalStatus,
+    time_us: f64,
+) {
+    match map.entry((hash, device)) {
+        Entry::Occupied(o) => {
+            let (s0, t0) = o.get();
+            debug_assert!(
+                *s0 == status && t0.to_bits() == time_us.to_bits(),
+                "verdict-cache collision: ({hash:#x}, {device}) holds {s0:?}/{t0} but the \
+                 writer carries {status:?}/{time_us}"
+            );
+        }
+        Entry::Vacant(v) => {
+            v.insert((status, time_us));
+        }
+    }
 }
 
 /// The two-level evaluation cache, sharded by key so concurrent workers
@@ -408,32 +465,23 @@ impl CacheShards {
     pub fn memo_seq(&self, key: u64, e: &Evaluation, device: &'static str) {
         if e.ptx_hash != 0 {
             self.put_verdict(e.ptx_hash, device, e.status.clone(), e.time_us);
+            self.seed_seq(key, SeqMemo::Artifact(e.ptx_hash));
+        } else {
+            self.seed_seq(key, SeqMemo::NoCode(e.clone()));
         }
-        let mut g = self.shard(key).lock().unwrap();
-        match g.seq.entry(key) {
-            Entry::Occupied(o) => match o.get() {
-                SeqMemo::Artifact(h) => debug_assert!(
-                    e.ptx_hash == *h,
-                    "sequence-memo collision with a different artifact: \
-                     key {key:#x} maps to {h:#x}, writer carries {:#x}",
-                    e.ptx_hash
-                ),
-                SeqMemo::NoCode(first) => debug_assert!(
-                    e.ptx_hash == 0 && first.status == e.status,
-                    "sequence-memo collision with a different no-code verdict (key {key:#x})"
-                ),
-            },
-            Entry::Vacant(v) => {
-                if e.ptx_hash == 0 {
-                    v.insert(SeqMemo::NoCode(Evaluation {
-                        cached: false,
-                        ..e.clone()
-                    }));
-                } else {
-                    v.insert(SeqMemo::Artifact(e.ptx_hash));
-                }
-            }
-        }
+    }
+
+    /// Insert one pre-resolved sequence memo (the store's warm path;
+    /// also the tail of [`CacheShards::memo_seq`]). The
+    /// scheduling-dependent `cached` flag is normalized away, and the
+    /// write shares the first-write-wins collision handling with the
+    /// in-memory path via [`seq_first_write`].
+    pub fn seed_seq(&self, key: u64, memo: SeqMemo) {
+        let memo = match memo {
+            SeqMemo::NoCode(e) => SeqMemo::NoCode(Evaluation { cached: false, ..e }),
+            m => m,
+        };
+        seq_first_write(&mut self.shard(key).lock().unwrap().seq, key, memo);
     }
 
     pub fn get_verdict(&self, hash: u64, device: &'static str) -> Option<(EvalStatus, f64)> {
@@ -451,19 +499,34 @@ impl CacheShards {
     /// verdicts are pure functions of `(hash, device)`).
     pub fn put_verdict(&self, hash: u64, device: &'static str, status: EvalStatus, time_us: f64) {
         let mut g = self.shard(hash).lock().unwrap();
-        match g.verdict.entry((hash, device)) {
-            Entry::Occupied(o) => {
-                let (s0, t0) = o.get();
-                debug_assert!(
-                    *s0 == status && t0.to_bits() == time_us.to_bits(),
-                    "verdict-cache collision: ({hash:#x}, {device}) holds {s0:?}/{t0} but the \
-                     writer carries {status:?}/{time_us}"
-                );
-            }
-            Entry::Vacant(v) => {
-                v.insert((status, time_us));
-            }
+        verdict_first_write(&mut g.verdict, hash, device, status, time_us);
+    }
+
+    /// Snapshot every sequence memo (unordered; the store sorts by key
+    /// before serializing). Same post-join consistency caveat as
+    /// [`CacheShards::len`].
+    pub fn snapshot_seq(&self) -> Vec<(u64, SeqMemo)> {
+        let mut out = Vec::new();
+        for s in &self.shards {
+            let g = s.lock().unwrap();
+            out.extend(g.seq.iter().map(|(k, m)| (*k, m.clone())));
         }
+        out
+    }
+
+    /// Snapshot every `(artifact hash, device) → verdict` entry, same
+    /// caveats as [`CacheShards::snapshot_seq`].
+    pub fn snapshot_verdicts(&self) -> Vec<(u64, &'static str, EvalStatus, f64)> {
+        let mut out = Vec::new();
+        for s in &self.shards {
+            let g = s.lock().unwrap();
+            out.extend(
+                g.verdict
+                    .iter()
+                    .map(|((h, d), (s, t))| (*h, *d, s.clone(), *t)),
+            );
+        }
+        out
     }
 
     /// (sequence-memo entries, verdict entries) across all shards. Takes

@@ -38,7 +38,10 @@
 //! count in `rust/tests/evaluator.rs`). The engine's caches mirror the
 //! same split: the sequence memo maps to an artifact hash and the
 //! verdict cache is keyed `(artifact_hash, device)` — see
-//! `dse::engine::CacheShards`.
+//! `dse::engine::CacheShards` — and the persistent artifact store
+//! (`dse::store`, `--store DIR`) keeps both tables on disk under the
+//! same keys, epoch-guarded so a stale cost table strands only its
+//! device's verdict column.
 //!
 //! Artifacts are deliberately **thread-confined** (the analysis
 //! snapshot and the lowered kernels hold `Rc`s): a worker compiles,

@@ -34,20 +34,24 @@
 //! I/N`), serializes raw evaluation streams to JSON (full stream or the
 //! compact `{strategy, seed, budget, stream_hash}` descriptor), and
 //! folds shard files back into summaries that are bit-identical to a
-//! single-process run (`repro merge`).
+//! single-process run (`repro merge`). Both cache levels persist
+//! between processes through the epoch-guarded on-disk [`store`]
+//! (`--store DIR` on `repro explore|transfer|merge|serve`).
 
 pub mod engine;
 pub mod evaluator;
 pub mod explorer;
 pub mod seqgen;
 pub mod shard;
+pub mod store;
 pub mod strategy;
 
-pub use engine::{explore_all, CacheShards, EvalContext, Scheduler};
+pub use engine::{explore_all, CacheShards, EvalContext, Scheduler, SeqMemo};
 pub use evaluator::{CompiledKernel, Compiler, EvalBackend, Measurement, SimBackend};
 pub use explorer::{EvalStatus, Evaluation, Explorer, ExplorationSummary, Winner};
 pub use seqgen::SeqGen;
 pub use shard::{merge_shards, ShardRun, ShardSpec, StreamSpec};
+pub use store::{Store, WarmStats};
 pub use strategy::{
     minimize_sequence, permutation_study, FixedStream, HillClimb, KnnSeeded, Permute, Proposal,
     SearchStrategy, StrategyKind,

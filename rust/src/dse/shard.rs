@@ -43,6 +43,12 @@
 //! them — because validation compares the *expanded* streams; a
 //! descriptor-form merge is bit-identical to a full-stream merge
 //! (golden-tested in `rust/tests/engine.rs`).
+//!
+//! Shard descriptors are also the wire format for the persistent
+//! exploration service: a `repro serve --store DIR` miss is distributed
+//! as ordinary shard runs, and `repro merge --store DIR` folds their
+//! evaluations back into the artifact store ([`crate::dse::store`])
+//! the daemon answers from.
 
 use std::fmt;
 

@@ -1,0 +1,820 @@
+//! On-disk, content-addressed artifact store for exploration results.
+//!
+//! Every `repro` process used to start cache-cold and die with its
+//! in-memory [`CacheShards`] — the compile→measure→validate work was
+//! re-paid on every invocation even though verdicts are pure functions
+//! of `(artifact_hash, device)`. This module persists both cache levels
+//! between runs:
+//!
+//! ```text
+//!   DIR/meta.json            monotonic store generation (for `cache gc`)
+//!   DIR/bench-<NAME>.json    one document per benchmark:
+//!       seq      { epoch, [ key → artifact | no-code verdict ] }
+//!       verdicts [ per device: { epoch, [ artifact → status, time ] } ]
+//!   DIR/last-run.json        warm/compile stats of the latest batch run
+//! ```
+//!
+//! **Epoch fingerprints** make invalidation incremental. Each table
+//! carries the FNV-folded fingerprint of exactly the inputs that could
+//! change its meaning:
+//!
+//! * the **sequence-memo table** is guarded by [`Store::seq_epoch`] =
+//!   fold(pass registry listing, benchmark identity, every registered
+//!   `RegFile`) — register files are folded because the artifact hash
+//!   covers each target's allocated rendering, so a `RegFile` change
+//!   renames every artifact;
+//! * each **device verdict column** is guarded by
+//!   [`Store::device_epoch`] = fold(benchmark identity,
+//!   [`Target::cost_fingerprint`]) — so retuning one device's cost
+//!   table invalidates only that device's column, and the sequence
+//!   memos plus every other device's verdicts stay warm.
+//!
+//! Entries under a matching epoch are re-seeded into [`CacheShards`]
+//! through the same first-write-wins helpers the in-memory path uses;
+//! entries under a stale epoch are dropped and re-evaluated on demand
+//! (an artifact memo whose device column is empty makes
+//! `CacheShards::lookup_seq` miss, which recompiles exactly the
+//! invalidated cells). The declared epoch inputs are *listings* — a
+//! pass or kernel-builder whose registered identity is unchanged but
+//! whose implementation changed is caught by content addressing at the
+//! artifact level; delete the store (or `repro cache gc --max-mb 0`)
+//! after such a change.
+//!
+//! A corrupt or truncated store file is never fatal: it is skipped with
+//! a warning on load and rewritten wholesale on the next persist.
+//! Summaries stay bit-identical across cold store / warm store /
+//! `--jobs N` because the `cached` attribution flag is never stored and
+//! replay canonicalization re-derives it in stream order.
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::bench_suite::Benchmark;
+use crate::dse::engine::{CacheShards, SeqMemo};
+use crate::dse::explorer::{hash_from_json, hash_to_json, EvalStatus, Evaluation};
+use crate::passes::registry_ref;
+use crate::sim::target::Target;
+use crate::util::{emit_json, fnv1a, load_json, Json};
+
+/// Schema tag of a per-benchmark table file.
+pub const STORE_SCHEMA: &str = "phaseord-store-v1";
+/// Schema tag of `meta.json`.
+pub const META_SCHEMA: &str = "phaseord-store-meta-v1";
+/// Schema tag of `last-run.json` (written by the coordinator layer).
+pub const RUN_SCHEMA: &str = "phaseord-store-run-v1";
+
+// ---------------------------------------------------------------- epochs
+
+fn fold_u64(h: &mut u64, v: u64) {
+    for b in v.to_le_bytes() {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x100000001b3);
+    }
+}
+
+fn fold_str(h: &mut u64, s: &str) {
+    fold_u64(h, s.len() as u64);
+    fold_u64(h, fnv1a(s.as_bytes()));
+}
+
+/// Fingerprint of the pass-registry *listing*: every registered pass's
+/// name, analysis flag, and preservation contract, in registry order.
+/// Adding, removing, reordering, or re-contracting a pass flips it.
+pub fn pass_epoch() -> u64 {
+    let mut h = fnv1a(b"phaseord-pass-registry");
+    for p in registry_ref() {
+        fold_str(&mut h, p.name());
+        fold_u64(&mut h, p.is_analysis() as u64);
+        let preserved = p.preserves_on_change();
+        fold_u64(&mut h, preserved.len() as u64);
+        for a in preserved {
+            fold_str(&mut h, a.name());
+        }
+    }
+    h
+}
+
+/// Fingerprint of one benchmark's declared identity: name, family, and
+/// both problem-size presets.
+pub fn bench_epoch(b: &Benchmark) -> u64 {
+    let mut h = fnv1a(b"phaseord-bench");
+    fold_str(&mut h, b.name);
+    fold_str(&mut h, b.family);
+    for d in [&b.dims_full, &b.dims_small] {
+        fold_u64(&mut h, d.n as u64);
+        fold_u64(&mut h, d.m as u64);
+        fold_u64(&mut h, d.tmax as u64);
+    }
+    h
+}
+
+/// Fingerprint of every registered register file. Folded into the
+/// sequence-memo epoch because artifact hashes cover each target's
+/// allocated rendering — a `RegFile` change renames every artifact, so
+/// stale memos would otherwise trip the collision asserts.
+pub fn regfile_epoch(targets: &[Target]) -> u64 {
+    let mut h = fnv1a(b"phaseord-regfiles");
+    fold_u64(&mut h, targets.len() as u64);
+    for t in targets {
+        fold_str(&mut h, t.name);
+        fold_u64(&mut h, t.regs.gpr as u64);
+        fold_u64(&mut h, t.regs.pred as u64);
+        fold_u64(&mut h, t.regs.max_per_thread as u64);
+    }
+    h
+}
+
+// ---------------------------------------------------------------- stats
+
+/// What one [`Store::warm`] call seeded and skipped.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WarmStats {
+    /// sequence memos re-seeded under a matching epoch
+    pub seq_loaded: usize,
+    /// sequence memos dropped (stale epoch)
+    pub seq_stale: usize,
+    /// verdicts re-seeded under matching per-device epochs
+    pub verdict_loaded: usize,
+    /// verdicts dropped (stale epoch or unregistered device)
+    pub verdict_stale: usize,
+}
+
+impl WarmStats {
+    pub fn add(&mut self, o: WarmStats) {
+        self.seq_loaded += o.seq_loaded;
+        self.seq_stale += o.seq_stale;
+        self.verdict_loaded += o.verdict_loaded;
+        self.verdict_stale += o.verdict_stale;
+    }
+
+    pub fn loaded(&self) -> usize {
+        self.seq_loaded + self.verdict_loaded
+    }
+}
+
+/// `cache stats` row for one device's verdict column.
+#[derive(Debug, Clone)]
+pub struct TableStats {
+    pub device: String,
+    pub entries: usize,
+    pub epoch: u64,
+}
+
+/// `cache stats` row for one benchmark table file.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub file: String,
+    pub bench: String,
+    pub bytes: u64,
+    pub generation: u64,
+    pub seq_entries: usize,
+    pub seq_epoch: u64,
+    pub verdicts: Vec<TableStats>,
+}
+
+/// Everything `repro cache stats` prints.
+#[derive(Debug, Clone, Default)]
+pub struct StoreStats {
+    pub generation: u64,
+    pub total_bytes: u64,
+    pub benches: Vec<BenchStats>,
+}
+
+/// What `repro cache gc` evicted.
+#[derive(Debug, Clone, Default)]
+pub struct GcReport {
+    pub bytes_before: u64,
+    pub bytes_after: u64,
+    /// file names evicted, oldest generation first
+    pub evicted: Vec<String>,
+}
+
+// ---------------------------------------------------------------- store
+
+/// Handle on one store directory. Cheap to construct; every operation
+/// re-reads the directory, so concurrent batch runs interleave safely
+/// at file granularity (persist is merge-then-rewrite per benchmark).
+pub struct Store {
+    dir: PathBuf,
+    targets: Vec<Target>,
+}
+
+impl Store {
+    /// Open (creating if needed is deferred to the first persist) a
+    /// store over the production target registry.
+    pub fn open(dir: impl Into<PathBuf>) -> Store {
+        Store::with_targets(dir, Target::all())
+    }
+
+    /// Open a store over an explicit target set — the test/ablation
+    /// knob: perturbing a [`Target`]'s cost table or `RegFile` here
+    /// flips the corresponding epochs without mutating any global.
+    pub fn with_targets(dir: impl Into<PathBuf>, targets: Vec<Target>) -> Store {
+        Store {
+            dir: dir.into(),
+            targets,
+        }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Epoch guarding a benchmark's sequence-memo table.
+    pub fn seq_epoch(&self, bench: &Benchmark) -> u64 {
+        let mut h = fnv1a(b"phaseord-seq-epoch");
+        fold_u64(&mut h, pass_epoch());
+        fold_u64(&mut h, bench_epoch(bench));
+        fold_u64(&mut h, regfile_epoch(&self.targets));
+        h
+    }
+
+    /// Epoch guarding one device's verdict column for a benchmark.
+    pub fn device_epoch(&self, bench: &Benchmark, t: &Target) -> u64 {
+        let mut h = fnv1a(b"phaseord-device-epoch");
+        fold_u64(&mut h, bench_epoch(bench));
+        fold_u64(&mut h, t.cost_fingerprint());
+        h
+    }
+
+    fn bench_path(&self, bench: &str) -> PathBuf {
+        let safe: String = bench
+            .chars()
+            .map(|c| {
+                if c.is_ascii_alphanumeric() || c == '-' || c == '_' {
+                    c
+                } else {
+                    '_'
+                }
+            })
+            .collect();
+        self.dir.join(format!("bench-{safe}.json"))
+    }
+
+    fn meta_path(&self) -> PathBuf {
+        self.dir.join("meta.json")
+    }
+
+    /// Current store generation (0 for a fresh or unreadable store).
+    pub fn generation(&self) -> u64 {
+        load_json(&self.meta_path())
+            .ok()
+            .and_then(|j| j.get("generation").and_then(|g| g.as_f64()))
+            .map(|g| g as u64)
+            .unwrap_or(0)
+    }
+
+    /// Advance and return the store generation. One generation is
+    /// shared by every table a batch run persists, so `cache gc` can
+    /// order whole runs by age.
+    pub fn bump_generation(&self) -> io::Result<u64> {
+        let gen = self.generation() + 1;
+        let j = Json::Obj(vec![
+            ("schema".into(), Json::s(META_SCHEMA)),
+            ("generation".into(), Json::Num(gen as f64)),
+        ]);
+        emit_json(&self.meta_path(), &j)?;
+        Ok(gen)
+    }
+
+    /// Seed `cache` with every stored entry whose epoch still matches.
+    /// All registered devices' columns are seeded (cross-device warmth
+    /// is what makes `repro transfer` cheap), through the same
+    /// first-write-wins helpers as the in-memory path. A missing file
+    /// is a cold start; a corrupt one is skipped with a warning.
+    pub fn warm(&self, bench: &Benchmark, cache: &CacheShards) -> WarmStats {
+        let path = self.bench_path(bench.name);
+        if !path.exists() {
+            return WarmStats::default();
+        }
+        let doc = match load_json(&path) {
+            Ok(d) => d,
+            Err(e) => {
+                eprintln!("store: ignoring corrupt {}: {e}", path.display());
+                return WarmStats::default();
+            }
+        };
+        match self.warm_from(&doc, bench, cache) {
+            Ok(stats) => stats,
+            Err(e) => {
+                eprintln!("store: ignoring malformed {}: {e}", path.display());
+                WarmStats::default()
+            }
+        }
+    }
+
+    fn warm_from(
+        &self,
+        doc: &Json,
+        bench: &Benchmark,
+        cache: &CacheShards,
+    ) -> Result<WarmStats, String> {
+        if doc.get("schema").and_then(|s| s.as_str()) != Some(STORE_SCHEMA) {
+            return Err(format!("not a {STORE_SCHEMA} document"));
+        }
+        let mut stats = WarmStats::default();
+
+        let seq = doc.get("seq").ok_or("missing seq table")?;
+        let entries = seq
+            .get("entries")
+            .and_then(|e| e.as_arr())
+            .ok_or("missing seq entries")?;
+        let epoch = hash_from_json(seq.get("epoch").ok_or("missing seq epoch")?)?;
+        if epoch == self.seq_epoch(bench) {
+            for e in entries {
+                let (key, memo) = seq_entry_from_json(e)?;
+                cache.seed_seq(key, memo);
+                stats.seq_loaded += 1;
+            }
+        } else {
+            stats.seq_stale += entries.len();
+        }
+
+        let tables = doc
+            .get("verdicts")
+            .and_then(|v| v.as_arr())
+            .ok_or("missing verdict tables")?;
+        for table in tables {
+            let device = table
+                .get("device")
+                .and_then(|d| d.as_str())
+                .ok_or("verdict table without device")?;
+            let entries = table
+                .get("entries")
+                .and_then(|e| e.as_arr())
+                .ok_or("verdict table without entries")?;
+            let epoch = hash_from_json(table.get("epoch").ok_or("verdict table without epoch")?)?;
+            // the verdict cache keys on the canonical &'static name, so
+            // the device must resolve in this store's registry
+            let target = self.targets.iter().find(|t| t.name == device);
+            match target {
+                Some(t) if epoch == self.device_epoch(bench, t) => {
+                    for e in entries {
+                        let (hash, status, time_us) = verdict_entry_from_json(e)?;
+                        cache.put_verdict(hash, t.name, status, time_us);
+                        stats.verdict_loaded += 1;
+                    }
+                }
+                _ => stats.verdict_stale += entries.len(),
+            }
+        }
+        Ok(stats)
+    }
+
+    /// Merge `cache` into the on-disk table for `bench` and rewrite the
+    /// file. Disk entries under a still-matching epoch are kept (a
+    /// shard run that only touched part of the stream must not erase
+    /// the rest); stale tables and unregistered devices are dropped.
+    /// Entries are sorted by key so equal content means equal bytes.
+    pub fn persist(
+        &self,
+        bench: &Benchmark,
+        cache: &CacheShards,
+        generation: u64,
+    ) -> io::Result<()> {
+        let path = self.bench_path(bench.name);
+        let disk = if path.exists() {
+            load_json(&path).ok()
+        } else {
+            None
+        };
+
+        // sequence-memo table: disk (same epoch only) ∪ snapshot
+        let seq_epoch = self.seq_epoch(bench);
+        let mut seq: Vec<(u64, SeqMemo)> = Vec::new();
+        if let Some(doc) = &disk {
+            if let Some(t) = doc.get("seq") {
+                let same = t
+                    .get("epoch")
+                    .and_then(|e| hash_from_json(e).ok())
+                    .is_some_and(|e| e == seq_epoch);
+                if same {
+                    for e in t.get("entries").and_then(|e| e.as_arr()).unwrap_or(&[]) {
+                        if let Ok(kv) = seq_entry_from_json(e) {
+                            seq.push(kv);
+                        }
+                    }
+                }
+            }
+        }
+        for (k, m) in cache.snapshot_seq() {
+            if !seq.iter().any(|(k0, _)| *k0 == k) {
+                seq.push((k, m));
+            }
+        }
+        seq.sort_by_key(|(k, _)| *k);
+
+        // verdict tables: per registered device, disk (same epoch) ∪ snapshot
+        let snapshot = cache.snapshot_verdicts();
+        let mut tables = Vec::new();
+        for t in &self.targets {
+            let epoch = self.device_epoch(bench, t);
+            let mut column: Vec<(u64, EvalStatus, f64)> = Vec::new();
+            if let Some(doc) = &disk {
+                for table in doc.get("verdicts").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+                    let same_device = table.get("device").and_then(|d| d.as_str()) == Some(t.name);
+                    let same_epoch = table
+                        .get("epoch")
+                        .and_then(|e| hash_from_json(e).ok())
+                        .is_some_and(|e| e == epoch);
+                    if same_device && same_epoch {
+                        for e in table.get("entries").and_then(|e| e.as_arr()).unwrap_or(&[]) {
+                            if let Ok(v) = verdict_entry_from_json(e) {
+                                column.push(v);
+                            }
+                        }
+                    }
+                }
+            }
+            for (h, d, s, time) in &snapshot {
+                if *d == t.name && !column.iter().any(|(h0, _, _)| h0 == h) {
+                    column.push((*h, s.clone(), *time));
+                }
+            }
+            if column.is_empty() {
+                continue;
+            }
+            column.sort_by_key(|(h, _, _)| *h);
+            tables.push(Json::Obj(vec![
+                ("device".into(), Json::s(t.name)),
+                ("epoch".into(), hash_to_json(epoch)),
+                (
+                    "entries".into(),
+                    Json::Arr(column.iter().map(verdict_entry_to_json).collect()),
+                ),
+            ]));
+        }
+
+        let doc = Json::Obj(vec![
+            ("schema".into(), Json::s(STORE_SCHEMA)),
+            ("bench".into(), Json::s(bench.name)),
+            ("gen".into(), Json::Num(generation as f64)),
+            (
+                "seq".into(),
+                Json::Obj(vec![
+                    ("epoch".into(), hash_to_json(seq_epoch)),
+                    (
+                        "entries".into(),
+                        Json::Arr(seq.iter().map(seq_entry_to_json).collect()),
+                    ),
+                ]),
+            ),
+            ("verdicts".into(), Json::Arr(tables)),
+        ]);
+        emit_json(&path, &doc)
+    }
+
+    /// Enumerate every readable benchmark table (corrupt files are
+    /// skipped with a warning) for `repro cache stats`.
+    pub fn stats(&self) -> StoreStats {
+        let mut out = StoreStats {
+            generation: self.generation(),
+            ..StoreStats::default()
+        };
+        for (path, bytes) in self.bench_files() {
+            out.total_bytes += bytes;
+            let doc = match load_json(&path) {
+                Ok(d) => d,
+                Err(e) => {
+                    eprintln!("store: ignoring corrupt {}: {e}", path.display());
+                    continue;
+                }
+            };
+            let Some(bench) = doc.get("bench").and_then(|b| b.as_str()) else {
+                eprintln!("store: ignoring malformed {}", path.display());
+                continue;
+            };
+            let seq_entries = doc
+                .get("seq")
+                .and_then(|s| s.get("entries"))
+                .and_then(|e| e.as_arr())
+                .map_or(0, |e| e.len());
+            let seq_epoch = doc
+                .get("seq")
+                .and_then(|s| s.get("epoch"))
+                .and_then(|e| hash_from_json(e).ok())
+                .unwrap_or(0);
+            let mut verdicts = Vec::new();
+            for table in doc.get("verdicts").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+                verdicts.push(TableStats {
+                    device: table
+                        .get("device")
+                        .and_then(|d| d.as_str())
+                        .unwrap_or("?")
+                        .to_string(),
+                    entries: table
+                        .get("entries")
+                        .and_then(|e| e.as_arr())
+                        .map_or(0, |e| e.len()),
+                    epoch: table
+                        .get("epoch")
+                        .and_then(|e| hash_from_json(e).ok())
+                        .unwrap_or(0),
+                });
+            }
+            out.benches.push(BenchStats {
+                file: path
+                    .file_name()
+                    .map(|f| f.to_string_lossy().into_owned())
+                    .unwrap_or_default(),
+                bench: bench.to_string(),
+                bytes,
+                generation: doc.get("gen").and_then(|g| g.as_f64()).unwrap_or(0.0) as u64,
+                seq_entries,
+                seq_epoch,
+                verdicts,
+            });
+        }
+        out.benches.sort_by(|a, b| a.bench.cmp(&b.bench));
+        out
+    }
+
+    /// Evict whole benchmark tables, oldest generation first (name as
+    /// tiebreak), until the store fits `max_bytes`. Unreadable files
+    /// count as generation 0, so junk is evicted first. `meta.json` is
+    /// never evicted.
+    pub fn gc(&self, max_bytes: u64) -> GcReport {
+        let mut files: Vec<(u64, PathBuf, u64)> = self
+            .bench_files()
+            .into_iter()
+            .map(|(path, bytes)| {
+                let gen = load_json(&path)
+                    .ok()
+                    .and_then(|d| d.get("gen").and_then(|g| g.as_f64()))
+                    .unwrap_or(0.0) as u64;
+                (gen, path, bytes)
+            })
+            .collect();
+        files.sort_by(|a, b| (a.0, &a.1).cmp(&(b.0, &b.1)));
+        let mut report = GcReport {
+            bytes_before: files.iter().map(|f| f.2).sum(),
+            ..GcReport::default()
+        };
+        report.bytes_after = report.bytes_before;
+        for (_, path, bytes) in files {
+            if report.bytes_after <= max_bytes {
+                break;
+            }
+            match fs::remove_file(&path) {
+                Ok(()) => {
+                    report.bytes_after -= bytes;
+                    let name = path
+                        .file_name()
+                        .map(|f| f.to_string_lossy().into_owned())
+                        .unwrap_or_default();
+                    report.evicted.push(name);
+                }
+                Err(e) => eprintln!("store: could not evict {}: {e}", path.display()),
+            }
+        }
+        report
+    }
+
+    fn bench_files(&self) -> Vec<(PathBuf, u64)> {
+        let mut out = Vec::new();
+        let Ok(dir) = fs::read_dir(&self.dir) else {
+            return out;
+        };
+        for entry in dir.flatten() {
+            let path = entry.path();
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if name.starts_with("bench-") && name.ends_with(".json") {
+                let bytes = entry.metadata().map(|m| m.len()).unwrap_or(0);
+                out.push((path, bytes));
+            }
+        }
+        out.sort();
+        out
+    }
+}
+
+// ------------------------------------------------------------- entry json
+
+fn seq_entry_to_json(entry: &(u64, SeqMemo)) -> Json {
+    let (key, memo) = entry;
+    let mut obj = vec![("key".into(), hash_to_json(*key))];
+    match memo {
+        SeqMemo::Artifact(h) => obj.push(("artifact".into(), hash_to_json(*h))),
+        SeqMemo::NoCode(e) => obj.push(("nocode".into(), e.to_json())),
+    }
+    Json::Obj(obj)
+}
+
+fn seq_entry_from_json(j: &Json) -> Result<(u64, SeqMemo), String> {
+    let key = hash_from_json(j.get("key").ok_or("seq entry without key")?)?;
+    if let Some(a) = j.get("artifact") {
+        let h = hash_from_json(a)?;
+        if h == 0 {
+            return Err("artifact memo with the no-code sentinel hash".into());
+        }
+        return Ok((key, SeqMemo::Artifact(h)));
+    }
+    let e = Evaluation::from_json(j.get("nocode").ok_or("seq entry without artifact or nocode")?)?;
+    if e.ptx_hash != 0 {
+        return Err("no-code memo carrying an artifact hash".into());
+    }
+    Ok((key, SeqMemo::NoCode(e)))
+}
+
+fn verdict_entry_to_json(entry: &(u64, EvalStatus, f64)) -> Json {
+    let (hash, status, time_us) = entry;
+    let time = if time_us.is_finite() {
+        Json::Num(*time_us)
+    } else {
+        Json::Null
+    };
+    Json::Obj(vec![
+        ("artifact".into(), hash_to_json(*hash)),
+        ("status".into(), status.to_json()),
+        ("time_us".into(), time),
+    ])
+}
+
+fn verdict_entry_from_json(j: &Json) -> Result<(u64, EvalStatus, f64), String> {
+    let hash = hash_from_json(j.get("artifact").ok_or("verdict without artifact")?)?;
+    if hash == 0 {
+        return Err("verdict keyed on the no-code sentinel hash".into());
+    }
+    let status = EvalStatus::from_json(j.get("status").ok_or("verdict without status")?)?;
+    let time = j.get("time_us").ok_or("verdict without time_us")?;
+    let time_us = if time.is_null() {
+        f64::INFINITY
+    } else {
+        time.as_f64().ok_or("non-numeric time_us")?
+    };
+    Ok((hash, status, time_us))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite::benchmark_by_name;
+
+    fn tmp_store(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("phaseord-store-{}-{tag}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn eval(hash: u64, time_us: f64) -> Evaluation {
+        Evaluation {
+            status: EvalStatus::Ok,
+            time_us,
+            ptx_hash: hash,
+            cached: false,
+        }
+    }
+
+    #[test]
+    fn epochs_are_deterministic_and_input_sensitive() {
+        let bench = benchmark_by_name("GEMM").unwrap();
+        let atax = benchmark_by_name("ATAX").unwrap();
+        let a = Store::open(tmp_store("epoch-a"));
+        let b = Store::open(tmp_store("epoch-b"));
+        assert_eq!(a.seq_epoch(&bench), b.seq_epoch(&bench));
+        assert_ne!(a.seq_epoch(&bench), a.seq_epoch(&atax));
+
+        let gp = Target::gp104();
+        let fj = Target::fiji();
+        assert_ne!(a.device_epoch(&bench, &gp), a.device_epoch(&bench, &fj));
+
+        // cost retune flips only that device's epoch, not the seq epoch
+        let mut hot = Target::gp104();
+        hot.int_alu *= 4.0;
+        let c = Store::with_targets(tmp_store("epoch-c"), vec![hot.clone(), Target::fiji()]);
+        assert_ne!(c.device_epoch(&bench, &hot), a.device_epoch(&bench, &gp));
+        assert_eq!(c.device_epoch(&bench, &fj), a.device_epoch(&bench, &fj));
+        assert_eq!(c.seq_epoch(&bench), a.seq_epoch(&bench));
+
+        // a RegFile change flips the seq epoch (artifact hashes move)
+        let mut fat = Target::gp104();
+        fat.regs.gpr += 8;
+        let d = Store::with_targets(tmp_store("epoch-d"), vec![fat, Target::fiji()]);
+        assert_ne!(d.seq_epoch(&bench), a.seq_epoch(&bench));
+    }
+
+    #[test]
+    fn tables_round_trip_through_disk() {
+        let bench = benchmark_by_name("GEMM").unwrap();
+        let dir = tmp_store("round-trip");
+        let store = Store::open(&dir);
+        let device = Target::gp104().name;
+
+        let cache = CacheShards::new();
+        cache.memo_seq(11, &eval(0xAB, 120.5), device);
+        cache.memo_seq(12, &eval(0xCD, f64::INFINITY), device);
+        cache.memo_seq(
+            13,
+            &Evaluation {
+                status: EvalStatus::Crash("verifier".into()),
+                time_us: f64::INFINITY,
+                ptx_hash: 0,
+                cached: false,
+            },
+            device,
+        );
+        let gen = store.bump_generation().unwrap();
+        store.persist(&bench, &cache, gen).unwrap();
+
+        let warmed = CacheShards::new();
+        let stats = store.warm(&bench, &warmed);
+        assert_eq!(stats.seq_loaded, 3);
+        assert_eq!(stats.verdict_loaded, 2);
+        assert_eq!(stats.seq_stale + stats.verdict_stale, 0);
+        assert_eq!(warmed.len(), cache.len());
+        let hit = warmed.lookup_seq(11, device).unwrap();
+        assert_eq!(hit.ptx_hash, 0xAB);
+        assert_eq!(hit.time_us.to_bits(), 120.5f64.to_bits());
+        let nocode = warmed.lookup_seq(13, device).unwrap();
+        assert_eq!(nocode.status, EvalStatus::Crash("verifier".into()));
+        // persisting the warmed cache again is byte-stable
+        store.persist(&bench, &warmed, gen).unwrap();
+        let warmed2 = CacheShards::new();
+        assert_eq!(store.warm(&bench, &warmed2).loaded(), 5);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stale_epochs_drop_only_their_table() {
+        let bench = benchmark_by_name("GEMM").unwrap();
+        let dir = tmp_store("stale");
+        let store = Store::open(&dir);
+        let cache = CacheShards::new();
+        cache.memo_seq(21, &eval(0xE1, 9.0), Target::gp104().name);
+        cache.memo_seq(22, &eval(0xE2, 7.0), Target::fiji().name);
+        store.persist(&bench, &cache, 1).unwrap();
+
+        // retune one device: its column goes stale, everything else warm
+        let mut hot = Target::gp104();
+        hot.int_alu *= 4.0;
+        let retuned = Store::with_targets(&dir, vec![hot, Target::fiji()]);
+        let warmed = CacheShards::new();
+        let stats = retuned.warm(&bench, &warmed);
+        assert_eq!(stats.seq_loaded, 2);
+        assert_eq!(stats.verdict_loaded, 1);
+        assert_eq!(stats.verdict_stale, 1);
+        // the memo resolves for the untouched device, misses for the hot one
+        assert!(warmed.lookup_seq(22, Target::fiji().name).is_some());
+        assert!(warmed.lookup_seq(21, Target::gp104().name).is_none());
+
+        // a RegFile flip stales the whole seq table
+        let mut fat = Target::gp104();
+        fat.regs.gpr += 8;
+        let refat = Store::with_targets(&dir, vec![fat, Target::fiji()]);
+        let cold = CacheShards::new();
+        let stats = refat.warm(&bench, &cold);
+        assert_eq!(stats.seq_loaded, 0);
+        assert_eq!(stats.seq_stale, 2);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_files_warn_and_never_panic() {
+        let bench = benchmark_by_name("GEMM").unwrap();
+        let dir = tmp_store("corrupt");
+        fs::create_dir_all(&dir).unwrap();
+        fs::write(dir.join("bench-GEMM.json"), b"{\"schema\": \"phaseord-sto").unwrap();
+        fs::write(dir.join("meta.json"), b"not json at all").unwrap();
+        let store = Store::open(&dir);
+        assert_eq!(store.generation(), 0);
+        let cache = CacheShards::new();
+        assert_eq!(store.warm(&bench, &cache), WarmStats::default());
+        assert!(cache.is_empty());
+        assert!(store.stats().benches.is_empty());
+        // a persist rewrites the junk and recovers the store
+        cache.memo_seq(31, &eval(0xF1, 4.0), Target::gp104().name);
+        let gen = store.bump_generation().unwrap();
+        store.persist(&bench, &cache, gen).unwrap();
+        assert_eq!(store.generation(), 1);
+        assert_eq!(store.warm(&bench, &CacheShards::new()).loaded(), 2);
+        assert_eq!(store.stats().benches.len(), 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_evicts_oldest_generation_first() {
+        let dir = tmp_store("gc");
+        let store = Store::open(&dir);
+        for (bench, gen) in [("GEMM", 1u64), ("ATAX", 2), ("SYRK", 3)] {
+            let b = benchmark_by_name(bench).unwrap();
+            let cache = CacheShards::new();
+            cache.memo_seq(gen, &eval(gen + 0x100, gen as f64), Target::gp104().name);
+            store.persist(&b, &cache, gen).unwrap();
+        }
+        let before = store.stats();
+        assert_eq!(before.benches.len(), 3);
+        // budget of one file: the two oldest generations go
+        let keep = before.benches.iter().map(|b| b.bytes).max().unwrap();
+        let report = store.gc(keep);
+        assert_eq!(report.evicted, vec!["bench-GEMM.json", "bench-ATAX.json"]);
+        assert!(report.bytes_after <= keep && report.bytes_after < report.bytes_before);
+        let after = store.stats();
+        assert_eq!(after.benches.len(), 1);
+        assert_eq!(after.benches[0].bench, "SYRK");
+        // under budget: nothing to do
+        assert!(store.gc(u64::MAX).evicted.is_empty());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

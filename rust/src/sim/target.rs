@@ -197,6 +197,62 @@ impl Target {
         }
     }
 
+    /// Fold this device's complete performance model — name, machine
+    /// shape, register file, and every per-instruction cost — into one
+    /// FNV-folded fingerprint. The on-disk store uses it as the epoch
+    /// of this device's verdict column ([`crate::dse::store`]): any
+    /// model change flips the fingerprint and invalidates exactly that
+    /// column, leaving sequence memos and other devices' verdicts warm.
+    ///
+    /// Every field of [`Target`] is `pub`, so tests perturb the model
+    /// directly (e.g. `t.int_alu *= 4.0`) to exercise invalidation.
+    /// When adding a field to [`Target`], fold it here too.
+    pub fn cost_fingerprint(&self) -> u64 {
+        let mut h = crate::util::fnv1a(self.name.as_bytes());
+        let mut fold = |v: u64| {
+            for b in v.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        };
+        fold(self.regs.gpr as u64);
+        fold(self.regs.pred as u64);
+        fold(self.regs.max_per_thread as u64);
+        for v in [
+            self.sms,
+            self.clock_ghz,
+            self.max_warps_per_sm,
+            self.min_resident_warps,
+            self.int_alu,
+            self.int_mul,
+            self.cvt,
+            self.setp,
+            self.bra,
+            self.fadd,
+            self.fmul,
+            self.fma,
+            self.fdiv,
+            self.sqrt,
+            self.exp,
+            self.sel,
+            self.ld_coal,
+            self.ld_bcast,
+            self.ld_strided,
+            self.ld_v2,
+            self.st_coal,
+            self.st_bcast,
+            self.st_strided,
+            self.ld_local,
+            self.st_local,
+            self.ld_generic,
+            self.st_generic,
+            self.call_overhead,
+        ] {
+            fold(v.to_bits());
+        }
+        h
+    }
+
     /// Memory-latency overlap factor for an unrolled loop body: unrolling
     /// exposes independent loads the scheduler can overlap (the §3.4
     /// unroll-factor effect). Calibrated against the paper's attribution:
@@ -247,6 +303,22 @@ mod tests {
         let amd = Target::fiji();
         let floor = |t: &Target| t.min_resident_warps / t.max_warps_per_sm;
         assert!((floor(&nv) - floor(&amd)).abs() > 1e-6);
+    }
+
+    #[test]
+    fn cost_fingerprint_tracks_the_model() {
+        let base = Target::gp104();
+        // deterministic, distinct per device
+        assert_eq!(base.cost_fingerprint(), Target::gp104().cost_fingerprint());
+        assert_ne!(base.cost_fingerprint(), Target::fiji().cost_fingerprint());
+        // any cost perturbation flips the epoch (the store's test knob)
+        let mut t = Target::gp104();
+        t.int_alu *= 4.0;
+        assert_ne!(t.cost_fingerprint(), base.cost_fingerprint());
+        // ... and so does a register-file change
+        let mut t = Target::gp104();
+        t.regs.gpr -= 8;
+        assert_ne!(t.cost_fingerprint(), base.cost_fingerprint());
     }
 
     #[test]

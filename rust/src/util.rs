@@ -441,7 +441,10 @@ impl<'a> JsonParser<'a> {
 }
 
 /// Write a JSON value to a file, creating parent directories as needed
-/// (the `--emit-summary` path of `repro explore`).
+/// (the `--emit-summary` path of `repro explore`, and every file the
+/// `--store DIR` artifact store emits — the single-line compact output
+/// is what keeps store files and NDJSON `repro serve` responses
+/// newline-free).
 pub fn emit_json(path: &std::path::Path, j: &Json) -> std::io::Result<()> {
     if let Some(dir) = path.parent() {
         if !dir.as_os_str().is_empty() {
@@ -451,7 +454,9 @@ pub fn emit_json(path: &std::path::Path, j: &Json) -> std::io::Result<()> {
     std::fs::write(path, j.to_string())
 }
 
-/// Read and parse a JSON file (the `repro merge` input path).
+/// Read and parse a JSON file (the `repro merge` input path and the
+/// artifact store's warm path — store callers treat an `Err` as a
+/// cold start, never a panic).
 pub fn load_json(path: &std::path::Path) -> Result<Json, String> {
     let text = std::fs::read_to_string(path)
         .map_err(|e| format!("{}: {e}", path.display()))?;

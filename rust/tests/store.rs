@@ -1,0 +1,266 @@
+//! Acceptance tests for the persistent artifact store (`--store DIR`):
+//! a warm store must reproduce a cold run bit-identically with zero
+//! `Compiler::compile` calls, flipping an epoch input must invalidate
+//! exactly the affected cells, and a corrupt store file must degrade to
+//! a cold start — a warning, never a panic.
+
+use std::path::PathBuf;
+
+use phaseord::bench_suite::benchmark_by_name;
+use phaseord::dse::engine::{self, CacheShards, EvalContext};
+use phaseord::dse::{ExplorationSummary, SeqGen, Store};
+use phaseord::sim::Target;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("phaseord-storetest-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn assert_bit_identical(a: &ExplorationSummary, b: &ExplorationSummary) {
+    assert_eq!(a.bench, b.bench);
+    assert_eq!(a.winner, b.winner, "{}: winners differ", a.bench);
+    assert_eq!(
+        a.baseline_time_us.to_bits(),
+        b.baseline_time_us.to_bits(),
+        "{}: baseline time differs",
+        a.bench
+    );
+    assert_eq!(
+        a.best_time_us.to_bits(),
+        b.best_time_us.to_bits(),
+        "{}: best time differs",
+        a.bench
+    );
+    assert_eq!(
+        (a.n_ok, a.n_crash, a.n_invalid, a.n_timeout, a.cache_hits),
+        (b.n_ok, b.n_crash, b.n_invalid, b.n_timeout, b.cache_hits),
+        "{}: outcome buckets differ",
+        a.bench
+    );
+    assert_eq!(a.evaluations.len(), b.evaluations.len());
+    for (i, (x, y)) in a.evaluations.iter().zip(&b.evaluations).enumerate() {
+        assert_eq!(x.status, y.status, "{} eval {i}", a.bench);
+        assert_eq!(
+            x.time_us.to_bits(),
+            y.time_us.to_bits(),
+            "{} eval {i}: time",
+            a.bench
+        );
+        assert_eq!(x.ptx_hash, y.ptx_hash, "{} eval {i}: ptx hash", a.bench);
+        assert_eq!(x.cached, y.cached, "{} eval {i}: cache attribution", a.bench);
+    }
+}
+
+fn compile_total(ctxs: &[EvalContext]) -> u64 {
+    ctxs.iter().map(|c| c.compiler().compile_count()).sum()
+}
+
+fn explore(
+    ctxs: &[EvalContext],
+    caches: &[CacheShards],
+    stream: &[Vec<&'static str>],
+    jobs: usize,
+) -> Vec<ExplorationSummary> {
+    let parts: Vec<(&EvalContext, &CacheShards)> = ctxs.iter().zip(caches.iter()).collect();
+    engine::explore_pairs(&parts, stream, jobs)
+}
+
+/// The headline acceptance invariant: persist a cold run, reload it in
+/// a fresh "process" (fresh contexts, fresh caches), and the warm
+/// exploration is bit-identical — same summaries, same `cached`
+/// attribution — while calling `Compiler::compile` exactly zero times,
+/// at 1 and at 2 workers.
+#[test]
+fn warm_store_round_trip_is_bit_identical_and_compile_free() {
+    let dir = tmp_dir("roundtrip");
+    let benches: Vec<_> = ["GEMM", "ATAX"]
+        .iter()
+        .map(|n| benchmark_by_name(n).unwrap())
+        .collect();
+    let stream = SeqGen::stream(0x510E, 24);
+    let t = Target::gp104();
+    let store = Store::with_targets(&dir, vec![t.clone()]);
+
+    // cold run: everything compiles, then the caches hit the disk
+    let ctxs = engine::build_contexts(&benches, &t, 2);
+    let caches: Vec<CacheShards> = ctxs.iter().map(|_| CacheShards::new()).collect();
+    let before = compile_total(&ctxs);
+    let want = explore(&ctxs, &caches, &stream, 2);
+    assert!(compile_total(&ctxs) - before > 0, "a cold run must compile");
+    let generation = store.bump_generation().unwrap();
+    for (b, cache) in benches.iter().zip(&caches) {
+        store.persist(b, cache, generation).unwrap();
+    }
+
+    // warm runs: fresh contexts and caches, seeded only from disk
+    for jobs in [1usize, 2] {
+        let ctxs = engine::build_contexts(&benches, &t, 2);
+        let caches: Vec<CacheShards> = ctxs.iter().map(|_| CacheShards::new()).collect();
+        let mut loaded = 0;
+        for (b, cache) in benches.iter().zip(&caches) {
+            let stats = store.warm(b, cache);
+            assert_eq!(stats.seq_stale, 0, "nothing changed: no stale drops");
+            assert_eq!(stats.verdict_stale, 0);
+            loaded += stats.loaded();
+        }
+        assert!(loaded > 0, "the warm pass must actually seed the caches");
+        let before = compile_total(&ctxs);
+        let got = explore(&ctxs, &caches, &stream, jobs);
+        assert_eq!(
+            compile_total(&ctxs) - before,
+            0,
+            "a fully warm store serves the whole stream without compiling (jobs {jobs})"
+        );
+        assert_eq!(want.len(), got.len());
+        for (a, b) in want.iter().zip(&got) {
+            assert_bit_identical(a, b);
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Epoch granularity: perturbing a cost-table knob renames only the
+/// device's verdict column — the sequence-memo table stays warm, so the
+/// re-run recompiles exactly one representative per distinct artifact
+/// (fewer compiles than cold). Perturbing the `RegFile` renames every
+/// artifact, so the whole store for that device goes stale and the run
+/// recompiles from scratch — without panicking on the stale file.
+#[test]
+fn cost_table_epoch_invalidates_only_verdict_cells() {
+    let dir = tmp_dir("epochs");
+    let b = benchmark_by_name("GEMM").unwrap();
+    let benches = vec![b.clone()];
+    let t = Target::gp104();
+    // analysis-only orders produce the same artifact as the baseline, so
+    // distinct sequence memos provably converge on shared artifacts
+    let stream: Vec<Vec<&'static str>> = vec![
+        vec![],
+        vec!["cfl-anders-aa"],
+        vec!["licm"],
+        vec!["cfl-anders-aa", "licm"],
+        vec!["licm"], // stream-level duplicate: replayed as a hit
+    ];
+
+    // cold: every distinct sequence key compiles exactly once
+    let ctxs = engine::build_contexts(&benches, &t, 1);
+    let caches: Vec<CacheShards> = ctxs.iter().map(|_| CacheShards::new()).collect();
+    let before = compile_total(&ctxs);
+    let want = explore(&ctxs, &caches, &stream, 1);
+    let cold_compiles = compile_total(&ctxs) - before;
+    assert_eq!(cold_compiles, 4, "four distinct keys, one duplicate");
+    let evals = &want[0].evaluations;
+    assert!(evals[4].cached, "the duplicate order replays as a hit");
+    assert_eq!(
+        evals[0].ptx_hash, evals[1].ptx_hash,
+        "an analysis-only order must share the baseline artifact \
+         (the premise the partial-invalidation assertion rests on)"
+    );
+    let store = Store::with_targets(&dir, vec![t.clone()]);
+    let generation = store.bump_generation().unwrap();
+    store.persist(&b, &caches[0], generation).unwrap();
+
+    // cost knob: verdict column stale, sequence memos still warm
+    let mut pert = Target::gp104();
+    pert.int_alu *= 4.0;
+    let pert_store = Store::with_targets(&dir, vec![pert.clone()]);
+    let ctxs = engine::build_contexts(&benches, &pert, 1);
+    let caches: Vec<CacheShards> = ctxs.iter().map(|_| CacheShards::new()).collect();
+    let stats = pert_store.warm(&b, &caches[0]);
+    assert!(stats.seq_loaded > 0, "sequence memos survive a cost change");
+    assert_eq!(stats.seq_stale, 0);
+    assert_eq!(stats.verdict_loaded, 0, "stale verdicts must not be served");
+    assert!(stats.verdict_stale > 0);
+    let before = compile_total(&ctxs);
+    let got = explore(&ctxs, &caches, &stream, 1);
+    let warm_compiles = compile_total(&ctxs) - before;
+    assert!(
+        warm_compiles > 0 && warm_compiles < cold_compiles,
+        "only invalidated cells re-evaluate: {warm_compiles} of {cold_compiles}"
+    );
+    // the partially-warm run is still bit-identical to a cold run on
+    // the perturbed device
+    let ref_ctxs = engine::build_contexts(&benches, &pert, 1);
+    let ref_caches: Vec<CacheShards> = ref_ctxs.iter().map(|_| CacheShards::new()).collect();
+    let reference = explore(&ref_ctxs, &ref_caches, &stream, 1);
+    for (a, b2) in reference.iter().zip(&got) {
+        assert_bit_identical(a, b2);
+    }
+
+    // RegFile knob: artifacts are renamed, everything goes stale
+    let mut reg = Target::gp104();
+    reg.regs.gpr -= 8;
+    let reg_store = Store::with_targets(&dir, vec![reg.clone()]);
+    let ctxs = engine::build_contexts(&benches, &reg, 1);
+    let caches: Vec<CacheShards> = ctxs.iter().map(|_| CacheShards::new()).collect();
+    let stats = reg_store.warm(&b, &caches[0]);
+    assert_eq!(stats.seq_loaded, 0, "a RegFile change renames every artifact");
+    assert!(stats.seq_stale > 0);
+    assert_eq!(stats.verdict_loaded, 0);
+    let before = compile_total(&ctxs);
+    let got = explore(&ctxs, &caches, &stream, 1);
+    assert_eq!(
+        compile_total(&ctxs) - before,
+        cold_compiles,
+        "a fully stale store is a cold start"
+    );
+    let ref_ctxs = engine::build_contexts(&benches, &reg, 1);
+    let ref_caches: Vec<CacheShards> = ref_ctxs.iter().map(|_| CacheShards::new()).collect();
+    let reference = explore(&ref_ctxs, &ref_caches, &stream, 1);
+    for (a, b2) in reference.iter().zip(&got) {
+        assert_bit_identical(a, b2);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Corrupt or truncated store files are a warning and a cold start,
+/// never a panic — and they do not poison the surviving files.
+#[test]
+fn corrupt_store_files_degrade_to_cold_start() {
+    let dir = tmp_dir("corrupt");
+    let benches: Vec<_> = ["GEMM", "ATAX"]
+        .iter()
+        .map(|n| benchmark_by_name(n).unwrap())
+        .collect();
+    let stream = SeqGen::stream(0xC0, 8);
+    let t = Target::gp104();
+    let store = Store::with_targets(&dir, vec![t.clone()]);
+
+    let ctxs = engine::build_contexts(&benches, &t, 2);
+    let caches: Vec<CacheShards> = ctxs.iter().map(|_| CacheShards::new()).collect();
+    let want = explore(&ctxs, &caches, &stream, 1);
+    let generation = store.bump_generation().unwrap();
+    for (b, cache) in benches.iter().zip(&caches) {
+        store.persist(b, cache, generation).unwrap();
+    }
+
+    // truncate GEMM's table mid-document and scribble over the meta file
+    let gemm = dir.join("bench-GEMM.json");
+    let text = std::fs::read_to_string(&gemm).unwrap();
+    std::fs::write(&gemm, &text[..text.len() / 2]).unwrap();
+    std::fs::write(dir.join("meta.json"), "not json at all").unwrap();
+
+    // warming survives: GEMM is a cold start, ATAX is still warm
+    let ctxs = engine::build_contexts(&benches, &t, 2);
+    let caches: Vec<CacheShards> = ctxs.iter().map(|_| CacheShards::new()).collect();
+    let gemm_stats = store.warm(&benches[0], &caches[0]);
+    assert_eq!(gemm_stats.loaded(), 0, "a truncated file seeds nothing");
+    let atax_stats = store.warm(&benches[1], &caches[1]);
+    assert!(atax_stats.loaded() > 0, "the intact file still warms");
+    let got = explore(&ctxs, &caches, &stream, 1);
+    for (a, b) in want.iter().zip(&got) {
+        assert_bit_identical(a, b);
+    }
+
+    // the maintenance surfaces shrug too: generation restarts from 0,
+    // stats skips the corrupt file, gc can still evict it
+    assert_eq!(store.generation(), 0);
+    assert_eq!(store.bump_generation().unwrap(), 1);
+    let stats = store.stats();
+    assert_eq!(stats.benches.len(), 1, "only the intact table is listed");
+    assert_eq!(stats.benches[0].bench, "ATAX");
+    let report = store.gc(0);
+    assert_eq!(report.bytes_after, 0, "gc to zero clears every table file");
+    assert!(report.evicted.iter().any(|f| f.contains("GEMM")));
+    let _ = std::fs::remove_dir_all(&dir);
+}
