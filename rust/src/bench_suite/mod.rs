@@ -233,6 +233,62 @@ pub fn model_time_us_lowered(
     total * seq_repeat as f64
 }
 
+/// The full objective vector — `(time_us, energy_uj, code_size)` — for a
+/// pre-lowered build. The time fold is kept textually identical to
+/// [`model_time_us_lowered`] so `--objective time` stays bit-identical
+/// to the scalar pipeline; energy scales with launches the same way
+/// (each repeat spends the joules again), while code size is a *static*
+/// property of the generated program and ignores repeat counts.
+pub fn model_objectives_lowered(
+    lowered: &[crate::sim::cost::LoweredKernel],
+    infos: &[KernelInfo],
+    seq_repeat: usize,
+    target: &crate::sim::target::Target,
+    unknown_trips: Option<&[f64]>,
+) -> (f64, f64, f64) {
+    let mut total = 0.0;
+    let mut energy = 0.0;
+    let mut size = 0.0;
+    for (ki, (lk, info)) in lowered.iter().zip(infos).enumerate() {
+        let unknown = unknown_trips
+            .and_then(|u| u.get(ki).copied())
+            .unwrap_or(crate::sim::cost::UNKNOWN_TRIPS_DEFAULT);
+        let cb = lk.estimate(info.grid, target, unknown);
+        total += cb.time_us * info.repeat as f64;
+        energy += crate::sim::cost::estimate_energy_uj(&cb, info.grid, target) * info.repeat as f64;
+        size += lk.code_size(target);
+    }
+    (total * seq_repeat as f64, energy * seq_repeat as f64, size)
+}
+
+/// [`model_objectives_lowered`] over a fresh lowering of `b`, with an
+/// explicit allocation-feedback mode — the objective-vector sibling of
+/// [`model_time_us_mode`]; `.0` is bit-identical to it.
+pub fn model_objectives_mode(
+    b: &BuiltBench,
+    target: &crate::sim::target::Target,
+    unknown_trips: Option<&[f64]>,
+    alloc_feedback: bool,
+) -> (f64, f64, f64) {
+    let lowered: Vec<crate::sim::cost::LoweredKernel> = b
+        .module
+        .kernels
+        .iter()
+        .map(|k| {
+            let mut lk = crate::sim::cost::LoweredKernel::lower(k, &b.module);
+            lk.set_alloc_feedback(alloc_feedback);
+            lk
+        })
+        .collect();
+    model_objectives_lowered(&lowered, &b.kernels, b.seq_repeat, target, unknown_trips)
+}
+
+/// Baseline objective vector for a built benchmark (feedback on, no
+/// trip-count overrides) — `.0` is bit-identical to [`model_time_us`].
+pub fn model_objectives(b: &BuiltBench, target: &crate::sim::target::Target) -> (f64, f64, f64) {
+    model_objectives_mode(b, target, None, true)
+}
+
 /// Per-kernel maximum baseline trip count (the DSE's pessimistic
 /// fallback for analysis-defeating transformations).
 pub fn baseline_max_trips(b: &BuiltBench, target: &crate::sim::target::Target) -> Vec<f64> {

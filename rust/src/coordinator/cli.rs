@@ -6,6 +6,7 @@
 //!                 [--verify-each] [--shard I/N] [--emit-summary PATH]
 //!                 [--strategy fixed|permute|hillclimb|knn] [--budget N]
 //!                 [--k K] [--seq p1,p2,...] [--store DIR] [--max-mb N]
+//!                 [--objective time|energy|size|pareto]
 //!
 //! commands: explore merge transfer serve cache lower fig2 table1 fig3
 //!           fig4 fig5 fig6 fig7 problems amd all passes targets
@@ -27,9 +28,9 @@ use super::experiments::{
     problem_stats, transfer_matrix, ExpConfig, ExpCtx, Fig2Row,
 };
 use super::report;
-use crate::dse::shard::{merge_shards, ShardRun, ShardSpec};
+use crate::dse::shard::{merge_shards_obj, ShardRun, ShardSpec};
 use crate::dse::strategy::StrategyKind;
-use crate::dse::{CacheShards, EvalContext, Store};
+use crate::dse::{CacheShards, EvalContext, Objective, Store};
 use crate::sim::target::Target;
 use crate::util::{emit_json, load_json};
 
@@ -67,6 +68,7 @@ pub fn parse_args(argv: &[String]) -> Result<CliArgs, String> {
     let mut max_mb = None;
     let (mut strategy_set, mut budget_set, mut k_set, mut seqs_set) = (false, false, false, false);
     let mut target_set = false;
+    let mut objective_set = false;
     let mut it = argv.iter().peekable();
     while let Some(a) = it.next() {
         match a.as_str() {
@@ -174,6 +176,10 @@ pub fn parse_args(argv: &[String]) -> Result<CliArgs, String> {
             "--store" => {
                 cfg.store = Some(PathBuf::from(it.next().ok_or("--store needs a directory")?))
             }
+            "--objective" => {
+                cfg.objective = Objective::parse(it.next().ok_or("--objective needs a value")?)?;
+                objective_set = true;
+            }
             "--max-mb" => {
                 max_mb = Some(
                     it.next()
@@ -252,6 +258,13 @@ pub fn parse_args(argv: &[String]) -> Result<CliArgs, String> {
                 .to_string(),
         );
     }
+    if objective_set && !matches!(command.as_str(), "explore" | "merge" | "serve") {
+        return Err(format!(
+            "--objective only applies to explore, merge, and serve (the figure \
+             drivers reproduce the paper's time-only protocol)\n{}",
+            usage()
+        ));
+    }
     if lower_seq.is_some() && command != "lower" {
         return Err(format!("--seq only applies to lower\n{}", usage()));
     }
@@ -303,7 +316,8 @@ pub fn usage() -> String {
      [--seqs N] [--seed S] [--target gp104|amd-fiji] [--perms N] [--draws N] \
      [--jobs N] [--out DIR] [--full] [--verify-each] [--shard I/N] \
      [--emit-summary PATH] [--strategy fixed|permute|hillclimb|knn] \
-     [--budget N] [--k K] [--seq p1,p2,...] [--store DIR] [--max-mb N]\n\
+     [--budget N] [--k K] [--seq p1,p2,...] [--store DIR] [--max-mb N] \
+     [--objective time|energy|size|pareto]\n\
      --jobs = evaluation worker threads (0 = all cores, the default); \
      results are bit-identical for every value\n\
      --full = the paper's protocol (10000 sequences, 1000 permutations/draws)\n\
@@ -317,6 +331,11 @@ pub fn usage() -> String {
      reports K=1 and K=3)\n\
      --shard I/N = evaluate the I-th of N slices of the (benchmark x sequence) \
      grid (explore with --strategy fixed only; requires --emit-summary)\n\
+     --objective time|energy|size|pareto = what the winner fold minimizes \
+     (explore, merge, serve; default time). energy/size pick the winner by \
+     modelled energy or allocated code size; pareto keeps time winners and \
+     renders the per-benchmark non-dominated front. The evaluation grid and \
+     every cache are objective-independent\n\
      --emit-summary PATH = explore: write the mergeable shard JSON \
      (compact stream-descriptor form); merge: write the folded summaries \
      JSON\n\
@@ -511,7 +530,7 @@ pub fn run(args: CliArgs) -> Result<(), String> {
                 let j = load_json(f)?;
                 shards.push(ShardRun::from_json(&j).map_err(|e| format!("{}: {e}", f.display()))?);
             }
-            let summaries = merge_shards(&shards)?;
+            let summaries = merge_shards_obj(&shards, args.cfg.objective)?;
             eprintln!(
                 "merged {} shard(s): {} sequences × {} benchmarks",
                 shards.len(),
@@ -851,6 +870,33 @@ mod tests {
             "explore", "--strategy", "knn", "--emit-summary", "x.json",
         ]))
         .is_err());
+    }
+
+    #[test]
+    fn objective_flag_parses_and_is_validated() {
+        // default: the paper's time-only protocol
+        let a = parse_args(&sv(&["explore"])).unwrap();
+        assert_eq!(a.cfg.objective, Objective::Time);
+        for (name, want) in [
+            ("time", Objective::Time),
+            ("energy", Objective::Energy),
+            ("size", Objective::Size),
+            ("pareto", Objective::Pareto),
+        ] {
+            let a = parse_args(&sv(&["explore", "--objective", name])).unwrap();
+            assert_eq!(a.cfg.objective, want, "{name}");
+        }
+        // merge and serve re-fold under an objective too
+        assert!(parse_args(&sv(&["merge", "a.json", "--objective", "pareto"])).is_ok());
+        assert!(parse_args(&sv(&["serve", "--store", "st", "--objective", "energy"])).is_ok());
+        // unknown objectives fail at parse time with the full menu
+        let err = parse_args(&sv(&["explore", "--objective", "carbon"])).unwrap_err();
+        assert!(err.contains("time|energy|size|pareto"), "{err}");
+        assert!(parse_args(&sv(&["explore", "--objective"])).is_err());
+        // figure drivers reproduce the paper's protocol: time only
+        assert!(parse_args(&sv(&["fig2", "--objective", "energy"])).is_err());
+        assert!(parse_args(&sv(&["transfer", "--objective", "size"])).is_err());
+        assert!(parse_args(&sv(&["lower", "GEMM", "--objective", "time"])).is_err());
     }
 
     #[test]

@@ -13,7 +13,9 @@ use crate::dse::store::{Store, WarmStats};
 use crate::dse::strategy::{
     HillClimb, KnnSeeded, Permute, PermutationStudy, SearchStrategy, StrategyKind, DEFAULT_ROUND,
 };
-use crate::dse::{minimize_sequence, permutation_study, ExplorationSummary, Explorer, SeqGen};
+use crate::dse::{
+    minimize_sequence, permutation_study, ExplorationSummary, Explorer, Objective, SeqGen,
+};
 use crate::features::{extract_features, rank_neighbors, FeatureVector, IterGraph};
 use crate::passes::manager::standard_level;
 use crate::runtime::{golden_buffers, GoldenRunner};
@@ -54,6 +56,11 @@ pub struct ExpConfig {
     /// cache levels from it at context construction and persist them
     /// back after a run ([`crate::dse::store`]); `None` = cache-cold
     pub store: Option<PathBuf>,
+    /// what the winner fold minimizes (`--objective
+    /// time|energy|size|pareto`); the evaluation grid and every cache
+    /// are objective-independent, so switching it re-folds the same
+    /// measurements
+    pub objective: Objective,
 }
 
 impl Default for ExpConfig {
@@ -71,6 +78,7 @@ impl Default for ExpConfig {
             budget: 0,
             knn_k: 3,
             store: None,
+            objective: Objective::Time,
         }
     }
 }
@@ -200,7 +208,7 @@ impl ExpCtx {
     /// at `--full` scale. Seeds the per-benchmark caches, so the
     /// follow-up figure-specific evaluations mostly hit.
     pub fn explore_all(&self) -> Vec<ExplorationSummary> {
-        engine::explore_pairs(&self.parts(), &self.stream, self.cfg.jobs)
+        engine::explore_pairs_obj(&self.parts(), &self.stream, self.cfg.jobs, self.cfg.objective)
     }
 
     /// Drive any [`SearchStrategy`] over all benchmarks, capped at
@@ -211,7 +219,7 @@ impl ExpCtx {
         strategy: &mut dyn SearchStrategy,
         budget: usize,
     ) -> Vec<ExplorationSummary> {
-        engine::run(strategy, &self.parts(), budget, self.cfg.jobs)
+        engine::run_obj(strategy, &self.parts(), budget, self.cfg.jobs, self.cfg.objective)
     }
 
     /// The per-benchmark evaluation budget adaptive strategies work
@@ -238,6 +246,7 @@ impl ExpCtx {
             StrategyKind::Fixed => self.explore_all(),
             StrategyKind::HillClimb => {
                 let mut s = HillClimb::new(nb, self.cfg.seed ^ 0xC11B, DEFAULT_ROUND);
+                s.set_objective(self.cfg.objective);
                 self.run_strategy(&mut s, per_bench * nb)
             }
             StrategyKind::Permute => {
@@ -255,6 +264,7 @@ impl ExpCtx {
                     self.cfg.seed ^ 0x4A2,
                     DEFAULT_ROUND,
                 );
+                s.set_objective(self.cfg.objective);
                 self.run_strategy(&mut s, per_bench * nb)
             }
         }

@@ -10,7 +10,7 @@ use super::experiments::{
 };
 use crate::dse::store::{GcReport, StoreStats, WarmStats, RUN_SCHEMA};
 use crate::dse::strategy::{histogram, PermutationStudy};
-use crate::dse::ExplorationSummary;
+use crate::dse::{ExplorationSummary, Objective};
 use crate::sim::target::Target;
 use crate::util::{geomean, Json};
 
@@ -91,6 +91,58 @@ pub fn render_explore(summaries: &[ExplorationSummary], target: &Target) -> Stri
     }
     let g = geomean(&summaries.iter().map(|r| r.best_speedup()).collect::<Vec<_>>());
     s.push_str(&format!("geomean best-speedup over baseline: {g:.2}x\n"));
+    // The objective appendix. `--objective time` emits nothing extra so
+    // its console output stays byte-identical to the scalar-era report.
+    match summaries.first().map(|r| r.objective).unwrap_or_default() {
+        Objective::Time => {}
+        obj @ (Objective::Energy | Objective::Size) => {
+            let unit = if obj == Objective::Energy { "uJ" } else { " insts" };
+            s.push_str(&format!(
+                "objective {}: winners minimize the {} component (best/speedup \
+                 columns above still report the winners' time)\n",
+                obj.name(),
+                obj.name()
+            ));
+            for r in summaries {
+                let (b, w) = if obj == Objective::Energy {
+                    (r.baseline_energy_uj, r.best_energy_uj)
+                } else {
+                    (r.baseline_code_size, r.best_code_size)
+                };
+                s.push_str(&format!(
+                    "  {:10} baseline {b:.1}{unit} -> best {w:.1}{unit}\n",
+                    r.bench
+                ));
+            }
+        }
+        Objective::Pareto => s.push_str(&render_pareto(summaries)),
+    }
+    s
+}
+
+/// The `--objective pareto` appendix: each benchmark's non-dominated
+/// (time, energy, size) front, baseline included — the same points
+/// `summary.pareto` carries into the JSON dump, in the same canonical
+/// order, so console and JSON agree byte-for-byte on the front.
+pub fn render_pareto(summaries: &[ExplorationSummary]) -> String {
+    let mut s = String::from(
+        "Pareto fronts — mutually non-dominated (time, energy, size) points, baseline included:\n",
+    );
+    for r in summaries {
+        s.push_str(&format!("{}: {} point(s)\n", r.bench, r.pareto.len()));
+        for p in &r.pareto {
+            let label = match p.winner.sequence() {
+                None => "(baseline)".to_string(),
+                Some(seq) => {
+                    seq.iter().map(|q| format!("-{q}")).collect::<Vec<_>>().join(" ")
+                }
+            };
+            s.push_str(&format!(
+                "  {:>12.1}us {:>12.1}uJ {:>8.0} insts  {label}\n",
+                p.obj.time_us, p.obj.energy_uj, p.obj.code_size
+            ));
+        }
+    }
     s
 }
 
@@ -679,6 +731,61 @@ mod tests {
         };
         let g = render_gc(&gc, 1000);
         assert!(g.contains("evicted bench-ATAX.json"), "{g}");
+    }
+
+    fn summary(objective: Objective) -> ExplorationSummary {
+        use crate::dse::{ObjVec, ParetoPoint, Winner};
+        ExplorationSummary {
+            bench: "synthetic".into(),
+            baseline_time_us: 100.0,
+            baseline_energy_uj: 300.0,
+            baseline_code_size: 60.0,
+            objective,
+            winner: Winner::Sequence(vec!["licm"]),
+            best_time_us: 50.0,
+            best_energy_uj: 400.0,
+            best_code_size: 55.0,
+            pareto: vec![
+                ParetoPoint {
+                    winner: Winner::Sequence(vec!["licm"]),
+                    obj: ObjVec { time_us: 50.0, energy_uj: 400.0, code_size: 55.0 },
+                },
+                ParetoPoint {
+                    winner: Winner::Baseline,
+                    obj: ObjVec { time_us: 100.0, energy_uj: 300.0, code_size: 60.0 },
+                },
+            ],
+            evaluations: vec![],
+            n_ok: 1,
+            n_crash: 0,
+            n_invalid: 0,
+            n_timeout: 0,
+            cache_hits: 0,
+        }
+    }
+
+    #[test]
+    fn time_objective_report_has_no_appendix() {
+        let s = render_explore(&[summary(Objective::Time)], &Target::gp104());
+        assert!(s.ends_with("x\n"), "{s}");
+        assert!(!s.contains("objective") && !s.contains("Pareto"), "{s}");
+    }
+
+    #[test]
+    fn energy_objective_report_appends_the_energy_detail() {
+        let s = render_explore(&[summary(Objective::Energy)], &Target::gp104());
+        assert!(s.contains("objective energy"), "{s}");
+        assert!(s.contains("baseline 300.0uJ -> best 400.0uJ"), "{s}");
+    }
+
+    #[test]
+    fn pareto_objective_report_renders_every_front_point() {
+        let s = render_explore(&[summary(Objective::Pareto)], &Target::gp104());
+        assert!(s.contains("Pareto fronts"), "{s}");
+        assert!(s.contains("synthetic: 2 point(s)"), "{s}");
+        assert!(s.contains("(baseline)"), "{s}");
+        assert!(s.contains("-licm"), "{s}");
+        assert!(s.contains("50.0us") && s.contains("400.0uJ"), "{s}");
     }
 
     #[test]

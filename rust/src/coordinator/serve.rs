@@ -14,7 +14,7 @@
 //!
 //! ```text
 //! {"op":"ping"}
-//! {"op":"explore","seqs":N,"seed":S,"target":"gp104","jobs":J}
+//! {"op":"explore","seqs":N,"seed":S,"target":"gp104","jobs":J,"objective":"time"}
 //! {"op":"transfer","seqs":N,"seed":S}
 //! {"op":"stats"}
 //! {"op":"shutdown"}
@@ -37,7 +37,7 @@ use std::io::{BufRead, Write};
 use super::experiments::{transfer_matrix, ExpConfig, ExpCtx};
 use super::report;
 use crate::dse::engine;
-use crate::dse::{SeqGen, Store};
+use crate::dse::{Objective, SeqGen, Store};
 use crate::sim::target::Target;
 use crate::util::Json;
 
@@ -172,6 +172,13 @@ fn handle(
                 .unwrap_or(cfg.target.name);
             let target =
                 Target::by_name(tname).ok_or_else(|| format!("unknown target {tname:?}"))?;
+            // per-query objective, falling back to the daemon's
+            // `--objective` (caches are objective-independent, so one
+            // warm context answers every objective)
+            let objective = match q.get("objective").and_then(|v| v.as_str()) {
+                Some(s) => Objective::parse(s)?,
+                None => cfg.objective,
+            };
             let ctx = ctxs.entry(target.name.to_string()).or_insert_with(|| {
                 eprintln!("serve: building evaluation contexts for {} …", target.name);
                 let mut c = cfg.clone();
@@ -182,7 +189,7 @@ fn handle(
             });
             let stream = SeqGen::stream(seed, n);
             let before = ctx.compile_totals();
-            let summaries = engine::explore_pairs(&ctx.parts(), &stream, jobs);
+            let summaries = engine::explore_pairs_obj(&ctx.parts(), &stream, jobs, objective);
             let compiles = ctx.compile_totals() - before;
             let evaluations: usize = summaries.iter().map(|s| s.evaluations.len()).sum();
             let stream_hits: usize = summaries.iter().map(|s| s.cache_hits).sum();
@@ -205,6 +212,7 @@ fn handle(
                 ok_obj(vec![
                     ("op", Json::s("explore")),
                     ("target", Json::s(target.name)),
+                    ("objective", Json::s(objective.name())),
                     ("seqs", Json::n(n as f64)),
                     ("summaries", report::summaries_json(&summaries)),
                     ("stats", stats),
@@ -253,6 +261,7 @@ mod tests {
             this is not json\n\
             {\"op\":\"explore\",\"seqs\":3,\"seed\":9,\"jobs\":1}\n\
             {\"op\":\"explore\",\"seqs\":3,\"seed\":\"0x9\",\"jobs\":2}\n\
+            {\"op\":\"explore\",\"seqs\":3,\"seed\":9,\"jobs\":1,\"objective\":\"pareto\"}\n\
             {\"op\":\"stats\"}\n\
             {\"op\":\"shutdown\"}\n\
             {\"op\":\"ping\"}\n";
@@ -261,7 +270,7 @@ mod tests {
         let text = String::from_utf8(out).unwrap();
         let lines: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
         // shutdown stops the loop: the trailing ping is never served
-        assert_eq!(lines.len(), 6, "{text}");
+        assert_eq!(lines.len(), 7, "{text}");
         assert_eq!(lines[0].get("ok").and_then(|o| o.as_bool()), Some(true));
         assert_eq!(lines[1].get("ok").and_then(|o| o.as_bool()), Some(false));
         assert!(lines[1].get("error").is_some());
@@ -277,16 +286,25 @@ mod tests {
         let summaries = |l: &Json| l.get("summaries").unwrap().to_string();
         assert_eq!(summaries(&lines[2]), summaries(&lines[3]));
 
+        // a per-query objective re-folds the warm caches — no compiles —
+        // and the response echoes what it minimized
+        assert_eq!(stats(&lines[4], "compiles"), Some(0), "{text}");
+        assert_eq!(
+            lines[4].get("objective").and_then(|o| o.as_str()),
+            Some("pareto")
+        );
+        assert!(summaries(&lines[4]).contains("pareto"), "{text}");
+
         // the persisted store is visible to the stats op
-        assert_eq!(lines[4].get("op").and_then(|o| o.as_str()), Some("stats"));
+        assert_eq!(lines[5].get("op").and_then(|o| o.as_str()), Some("stats"));
         assert!(
-            lines[4]
+            lines[5]
                 .get("benches")
                 .and_then(|b| b.as_arr())
                 .is_some_and(|b| !b.is_empty()),
             "{text}"
         );
-        assert_eq!(lines[5].get("op").and_then(|o| o.as_str()), Some("shutdown"));
+        assert_eq!(lines[6].get("op").and_then(|o| o.as_str()), Some("shutdown"));
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -57,14 +57,16 @@ use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use crate::bench_suite::{execute, init_buffers, model_time_us, Benchmark, BuiltBench, Variant};
+use crate::bench_suite::{execute, init_buffers, model_objectives, Benchmark, BuiltBench, Variant};
 use crate::passes::PassOutcome;
 use crate::sim::exec::Buffers;
 use crate::sim::target::Target;
 use crate::util::fnv1a;
 
 use super::evaluator::{Compiler, CompiledKernel, EvalBackend, SimBackend};
-use super::explorer::{EvalStatus, Evaluation, ExplorationSummary, Winner};
+use super::explorer::{
+    pareto_front, EvalStatus, Evaluation, ExplorationSummary, ObjVec, Objective, Winner,
+};
 use super::strategy::{Proposal, SearchStrategy};
 
 /// The paper's DSE timeout: candidates slower than 20× baseline are cut
@@ -126,6 +128,9 @@ pub struct EvalContext {
     backend: SimBackend,
     golden: Buffers,
     pub baseline_time_us: f64,
+    /// the baseline's full objective vector; `baseline_obj.time_us ==
+    /// baseline_time_us` bit for bit (both come from the same pricing)
+    baseline_obj: ObjVec,
     timeout_factor: f64,
     baseline_steps: u64,
 }
@@ -136,7 +141,13 @@ impl EvalContext {
     pub fn new(bench: &Benchmark, target: Target, golden: Buffers) -> EvalContext {
         let small = bench.build_small(Variant::OpenCl);
         let full = bench.build_full(Variant::OpenCl);
-        let baseline_time_us = model_time_us(&full, &target);
+        let (baseline_time_us, baseline_energy_uj, baseline_code_size) =
+            model_objectives(&full, &target);
+        let baseline_obj = ObjVec {
+            time_us: baseline_time_us,
+            energy_uj: baseline_energy_uj,
+            code_size: baseline_code_size,
+        };
         let baseline_trips = crate::bench_suite::baseline_max_trips(&full, &target);
         let baseline_steps = {
             let mut bufs = init_buffers(&small);
@@ -152,6 +163,7 @@ impl EvalContext {
             backend: SimBackend::new(target, baseline_trips, step_limit),
             golden,
             baseline_time_us,
+            baseline_obj,
             timeout_factor,
             baseline_steps,
         }
@@ -177,12 +189,14 @@ impl EvalContext {
     /// internally consistent within a mode.
     pub fn set_allocation(&mut self, on: bool) {
         self.compiler.set_allocation(on);
-        self.baseline_time_us = crate::bench_suite::model_time_us_mode(
+        let (t, e, s) = crate::bench_suite::model_objectives_mode(
             self.compiler.full_build(),
             self.backend.target(),
             None,
             on,
         );
+        self.baseline_time_us = t;
+        self.baseline_obj = ObjVec { time_us: t, energy_uj: e, code_size: s };
     }
 
     /// Override the validation step budget (see
@@ -221,6 +235,11 @@ impl EvalContext {
     }
     pub fn baseline_steps(&self) -> u64 {
         self.baseline_steps
+    }
+    /// The baseline's full objective vector (time component bit-equal to
+    /// [`EvalContext::baseline_time_us`]).
+    pub fn baseline_obj(&self) -> ObjVec {
+        self.baseline_obj
     }
     pub fn step_limit(&self) -> u64 {
         self.backend.step_limit()
@@ -262,6 +281,8 @@ impl EvalContext {
                 return Evaluation {
                     status: EvalStatus::Crash(format!("{other:?}")),
                     time_us: f64::INFINITY,
+                    energy_uj: f64::INFINITY,
+                    code_size: f64::INFINITY,
                     ptx_hash: 0,
                     cached: false,
                 };
@@ -269,10 +290,12 @@ impl EvalContext {
         };
         let h = artifact.artifact_hash;
         // ---- 2. the generated-code verdict cache, per device ----
-        if let Some((status, t)) = cache.get_verdict(h, self.device()) {
+        if let Some((status, obj)) = cache.get_verdict(h, self.device()) {
             return Evaluation {
                 status,
-                time_us: t,
+                time_us: obj.time_us,
+                energy_uj: obj.energy_uj,
+                code_size: obj.code_size,
                 ptx_hash: h,
                 cached: true,
             };
@@ -294,23 +317,29 @@ impl EvalContext {
     fn judge_artifact(&self, artifact: &CompiledKernel) -> Evaluation {
         let h = artifact.artifact_hash;
         let status = self.backend.validate(artifact, &self.golden);
-        let time_us = if status.is_ok() {
+        let obj = if status.is_ok() {
             let m = self.backend.measure(artifact);
+            // the timeout policy stays a pure time policy: energy and
+            // size never cut a candidate off
             if m.time_us > self.baseline_time_us * self.timeout_factor {
                 return Evaluation {
                     status: EvalStatus::Timeout,
                     time_us: f64::INFINITY,
+                    energy_uj: f64::INFINITY,
+                    code_size: f64::INFINITY,
                     ptx_hash: h,
                     cached: false,
                 };
             }
-            m.time_us
+            m.obj()
         } else {
-            f64::INFINITY
+            ObjVec::infinite()
         };
         Evaluation {
             status,
-            time_us,
+            time_us: obj.time_us,
+            energy_uj: obj.energy_uj,
+            code_size: obj.code_size,
             ptx_hash: h,
             cached: false,
         }
@@ -342,8 +371,8 @@ struct Shard {
     /// target-independent no-code failure)
     seq: HashMap<u64, SeqMemo>,
     /// generated-code verdict cache: (artifact hash, device) →
-    /// (status, time) — one compile, priced per target
-    verdict: HashMap<(u64, &'static str), (EvalStatus, f64)>,
+    /// (status, objective vector) — one compile, priced per target
+    verdict: HashMap<(u64, &'static str), (EvalStatus, ObjVec)>,
 }
 
 /// The one first-write-wins insertion point for the sequence-memo
@@ -381,23 +410,23 @@ fn seq_first_write(map: &mut HashMap<u64, SeqMemo>, key: u64, memo: SeqMemo) {
 /// are pure functions of `(hash, device)`, so a colliding write must
 /// carry a bit-identical verdict (debug-asserted).
 fn verdict_first_write(
-    map: &mut HashMap<(u64, &'static str), (EvalStatus, f64)>,
+    map: &mut HashMap<(u64, &'static str), (EvalStatus, ObjVec)>,
     hash: u64,
     device: &'static str,
     status: EvalStatus,
-    time_us: f64,
+    obj: ObjVec,
 ) {
     match map.entry((hash, device)) {
         Entry::Occupied(o) => {
-            let (s0, t0) = o.get();
+            let (s0, o0) = o.get();
             debug_assert!(
-                *s0 == status && t0.to_bits() == time_us.to_bits(),
-                "verdict-cache collision: ({hash:#x}, {device}) holds {s0:?}/{t0} but the \
-                 writer carries {status:?}/{time_us}"
+                *s0 == status && o0.bits() == obj.bits(),
+                "verdict-cache collision: ({hash:#x}, {device}) holds {s0:?}/{o0:?} but the \
+                 writer carries {status:?}/{obj:?}"
             );
         }
         Entry::Vacant(v) => {
-            v.insert((status, time_us));
+            v.insert((status, obj));
         }
     }
 }
@@ -447,10 +476,12 @@ impl CacheShards {
                 Some(e)
             }
             SeqMemo::Artifact(h) => {
-                let (status, time_us) = self.get_verdict(h, device)?;
+                let (status, obj) = self.get_verdict(h, device)?;
                 Some(Evaluation {
                     status,
-                    time_us,
+                    time_us: obj.time_us,
+                    energy_uj: obj.energy_uj,
+                    code_size: obj.code_size,
                     ptx_hash: h,
                     cached: true,
                 })
@@ -464,7 +495,7 @@ impl CacheShards {
     /// scheduling-dependent `cached` flag is never stored.
     pub fn memo_seq(&self, key: u64, e: &Evaluation, device: &'static str) {
         if e.ptx_hash != 0 {
-            self.put_verdict(e.ptx_hash, device, e.status.clone(), e.time_us);
+            self.put_verdict(e.ptx_hash, device, e.status.clone(), e.obj());
             self.seed_seq(key, SeqMemo::Artifact(e.ptx_hash));
         } else {
             self.seed_seq(key, SeqMemo::NoCode(e.clone()));
@@ -484,7 +515,7 @@ impl CacheShards {
         seq_first_write(&mut self.shard(key).lock().unwrap().seq, key, memo);
     }
 
-    pub fn get_verdict(&self, hash: u64, device: &'static str) -> Option<(EvalStatus, f64)> {
+    pub fn get_verdict(&self, hash: u64, device: &'static str) -> Option<(EvalStatus, ObjVec)> {
         self.shard(hash)
             .lock()
             .unwrap()
@@ -497,9 +528,9 @@ impl CacheShards {
     /// or a racing equal-value write — the first entry is kept, and a
     /// colliding write must carry the same verdict (debug-asserted;
     /// verdicts are pure functions of `(hash, device)`).
-    pub fn put_verdict(&self, hash: u64, device: &'static str, status: EvalStatus, time_us: f64) {
+    pub fn put_verdict(&self, hash: u64, device: &'static str, status: EvalStatus, obj: ObjVec) {
         let mut g = self.shard(hash).lock().unwrap();
-        verdict_first_write(&mut g.verdict, hash, device, status, time_us);
+        verdict_first_write(&mut g.verdict, hash, device, status, obj);
     }
 
     /// Snapshot every sequence memo (unordered; the store sorts by key
@@ -516,14 +547,14 @@ impl CacheShards {
 
     /// Snapshot every `(artifact hash, device) → verdict` entry, same
     /// caveats as [`CacheShards::snapshot_seq`].
-    pub fn snapshot_verdicts(&self) -> Vec<(u64, &'static str, EvalStatus, f64)> {
+    pub fn snapshot_verdicts(&self) -> Vec<(u64, &'static str, EvalStatus, ObjVec)> {
         let mut out = Vec::new();
         for s in &self.shards {
             let g = s.lock().unwrap();
             out.extend(
                 g.verdict
                     .iter()
-                    .map(|((h, d), (s, t))| (*h, *d, s.clone(), *t)),
+                    .map(|((h, d), (s, o))| (*h, *d, s.clone(), *o)),
             );
         }
         out
@@ -852,6 +883,19 @@ pub fn explore_pairs(
     explore_pairs_sched(parts, stream, jobs, Scheduler::WorkStealing)
 }
 
+/// [`explore_pairs`] minimizing an explicit [`Objective`] — what
+/// `repro explore --objective …` drives. The evaluation grid (and with
+/// it every cache) is objective-independent; only the winner fold and
+/// the rendered front differ.
+pub fn explore_pairs_obj(
+    parts: &[(&EvalContext, &CacheShards)],
+    stream: &[Vec<&'static str>],
+    jobs: usize,
+    objective: Objective,
+) -> Vec<ExplorationSummary> {
+    explore_pairs_sched_obj(parts, stream, jobs, Scheduler::WorkStealing, objective)
+}
+
 /// [`explore_pairs`] with an explicit [`Scheduler`] — the bench ablation
 /// entry point (`cargo bench --bench engine` times Cursor vs
 /// WorkStealing and asserts their summaries are bit-identical).
@@ -860,6 +904,17 @@ pub fn explore_pairs_sched(
     stream: &[Vec<&'static str>],
     jobs: usize,
     sched: Scheduler,
+) -> Vec<ExplorationSummary> {
+    explore_pairs_sched_obj(parts, stream, jobs, sched, Objective::Time)
+}
+
+/// The full-control variant: explicit scheduler *and* objective.
+pub fn explore_pairs_sched_obj(
+    parts: &[(&EvalContext, &CacheShards)],
+    stream: &[Vec<&'static str>],
+    jobs: usize,
+    sched: Scheduler,
+    objective: Objective,
 ) -> Vec<ExplorationSummary> {
     let nb = parts.len();
     let ns = stream.len();
@@ -883,7 +938,7 @@ pub fn explore_pairs_sched(
             // stored — so the live caches are already independent of
             // scheduling for every post-exploration consumer
             // (minimization, -OX probes, cross-application).
-            summarize(cx, stream, evals)
+            summarize_obj(cx, stream, evals, objective)
         })
         .collect()
 }
@@ -928,25 +983,61 @@ pub fn summarize(
     stream: &[Vec<&'static str>],
     evals_raw: Vec<Evaluation>,
 ) -> ExplorationSummary {
-    summarize_stream(&cx.name, cx.baseline_time_us, stream, evals_raw)
+    summarize_obj(cx, stream, evals_raw, Objective::Time)
+}
+
+/// [`summarize`] minimizing an explicit [`Objective`], folded against
+/// the context's full baseline vector.
+pub fn summarize_obj(
+    cx: &EvalContext,
+    stream: &[Vec<&'static str>],
+    evals_raw: Vec<Evaluation>,
+    objective: Objective,
+) -> ExplorationSummary {
+    summarize_stream_obj(&cx.name, cx.baseline_obj(), stream, evals_raw, objective)
 }
 
 /// [`summarize`] decoupled from a live [`EvalContext`]: the fold only
 /// needs the benchmark's name and baseline time, so `repro merge` can
 /// replay a reassembled cross-process stream without rebuilding contexts
 /// (see [`crate::dse::shard::merge_shards`]). Byte-for-byte the same
-/// fold the in-process engine applies.
+/// fold the in-process engine applies. The scalar-baseline signature is
+/// the pre-vector entry point: the baseline's energy/size components
+/// are unmeasured (infinite), which every fold and front tolerates.
 pub fn summarize_stream(
     bench: &str,
     baseline_time_us: f64,
     stream: &[Vec<&'static str>],
     evals_raw: Vec<Evaluation>,
 ) -> ExplorationSummary {
+    summarize_stream_obj(
+        bench,
+        ObjVec::time_only(baseline_time_us),
+        stream,
+        evals_raw,
+        Objective::Time,
+    )
+}
+
+/// The one summary fold. The winner minimizes `objective`'s scalar
+/// component (`pareto` scalarizes to time — the front carries the rest)
+/// with a strict `<` against the baseline's component, which keeps
+/// `--objective time` bit-identical to the historical scalar fold. The
+/// Pareto front of the whole canonical stream is computed for every
+/// objective, so single-objective runs render their trade-offs too.
+pub fn summarize_stream_obj(
+    bench: &str,
+    baseline: ObjVec,
+    stream: &[Vec<&'static str>],
+    evals_raw: Vec<Evaluation>,
+    objective: Objective,
+) -> ExplorationSummary {
     assert_eq!(stream.len(), evals_raw.len());
     let mut replay = ReplayState::new();
     let mut evals = Vec::with_capacity(evals_raw.len());
     let (mut n_ok, mut n_crash, mut n_invalid, mut n_timeout, mut hits) = (0, 0, 0, 0, 0);
-    let mut best_time = baseline_time_us;
+    let mut best_score = baseline.scalar(objective);
+    let mut best_obj = baseline;
     let mut winner = Winner::Baseline;
     for (seq, raw) in stream.iter().zip(evals_raw) {
         let e = replay.canon(seq, raw);
@@ -956,8 +1047,10 @@ pub fn summarize_stream(
         match &e.status {
             EvalStatus::Ok => {
                 n_ok += 1;
-                if e.time_us < best_time {
-                    best_time = e.time_us;
+                let score = e.obj().scalar(objective);
+                if score < best_score {
+                    best_score = score;
+                    best_obj = e.obj();
                     winner = Winner::Sequence(seq.clone());
                 }
             }
@@ -967,11 +1060,18 @@ pub fn summarize_stream(
         }
         evals.push(e);
     }
+    let pareto = pareto_front(baseline, stream, &evals);
     ExplorationSummary {
         bench: bench.to_string(),
-        baseline_time_us,
+        baseline_time_us: baseline.time_us,
+        baseline_energy_uj: baseline.energy_uj,
+        baseline_code_size: baseline.code_size,
+        objective,
         winner,
-        best_time_us: best_time,
+        best_time_us: best_obj.time_us,
+        best_energy_uj: best_obj.energy_uj,
+        best_code_size: best_obj.code_size,
+        pareto,
         evaluations: evals,
         n_ok,
         n_crash,
@@ -990,7 +1090,7 @@ pub fn summarize_stream(
 /// evaluations reproduces them bit for bit.
 struct ReplayState {
     first_by_seq: HashMap<u64, Evaluation>,
-    first_by_ptx: HashMap<u64, (EvalStatus, f64)>,
+    first_by_ptx: HashMap<u64, (EvalStatus, ObjVec)>,
 }
 
 impl ReplayState {
@@ -1013,16 +1113,16 @@ impl ReplayState {
             e.cached = true;
         } else {
             match self.first_by_ptx.get(&e.ptx_hash) {
-                Some((status, t)) if !no_code => {
+                Some((status, obj)) if !no_code => {
                     e.status = status.clone();
-                    e.time_us = *t;
+                    e.set_obj(*obj);
                     e.cached = true;
                 }
                 _ => {
                     e.cached = false;
                     if !no_code {
                         self.first_by_ptx
-                            .insert(e.ptx_hash, (e.status.clone(), e.time_us));
+                            .insert(e.ptx_hash, (e.status.clone(), e.obj()));
                     }
                 }
             }
@@ -1062,6 +1162,21 @@ pub fn run(
     budget: usize,
     jobs: usize,
 ) -> Vec<ExplorationSummary> {
+    run_obj(strategy, parts, budget, jobs, Objective::Time)
+}
+
+/// [`run`] minimizing an explicit [`Objective`]. The strategy's own
+/// search bias comes from its `observe` hook — adaptive strategies
+/// (hill-climb, knn) must be pointed at the same objective separately
+/// (see `SearchStrategy` implementations); this function only controls
+/// the summary fold.
+pub fn run_obj(
+    strategy: &mut dyn SearchStrategy,
+    parts: &[(&EvalContext, &CacheShards)],
+    budget: usize,
+    jobs: usize,
+    objective: Objective,
+) -> Vec<ExplorationSummary> {
     let nb = parts.len();
     let mut streams: Vec<Vec<Vec<&'static str>>> = vec![Vec::new(); nb];
     let mut evals: Vec<Vec<Evaluation>> = vec![Vec::new(); nb];
@@ -1095,7 +1210,7 @@ pub fn run(
     for (bi, &(cx, _cache)) in parts.iter().enumerate() {
         // no cache re-seeding: the memo/verdict split stores only pure
         // functions of its keys (see the comment in `explore_pairs_sched`)
-        out.push(summarize(cx, &streams[bi], std::mem::take(&mut evals[bi])));
+        out.push(summarize_obj(cx, &streams[bi], std::mem::take(&mut evals[bi]), objective));
     }
     out
 }
@@ -1141,27 +1256,43 @@ mod tests {
     }
 
     #[test]
+    fn baseline_vector_time_component_matches_the_scalar_baseline() {
+        let b = benchmark_by_name("ATAX").unwrap();
+        let cx = EvalContext::new(&b, Target::gp104(), golden_from_interpreter(&b));
+        let o = cx.baseline_obj();
+        assert_eq!(o.time_us.to_bits(), cx.baseline_time_us.to_bits());
+        assert!(o.energy_uj.is_finite() && o.energy_uj > 0.0);
+        assert!(o.code_size.is_finite() && o.code_size > 0.0);
+    }
+
+    #[test]
     fn cache_shards_roundtrip() {
+        let vec_of = |k: u64| ObjVec {
+            time_us: k as f64,
+            energy_uj: 2.0 * k as f64,
+            code_size: 10.0 + k as f64,
+        };
         let c = CacheShards::new();
         assert!(c.is_empty());
         for k in 0..64u64 {
-            c.put_verdict(k, "nvidia-gp104", EvalStatus::Ok, k as f64);
+            c.put_verdict(k, "nvidia-gp104", EvalStatus::Ok, vec_of(k));
         }
         for k in 0..64u64 {
-            assert_eq!(c.get_verdict(k, "nvidia-gp104"), Some((EvalStatus::Ok, k as f64)));
+            // the whole objective vector rides the verdict column
+            assert_eq!(c.get_verdict(k, "nvidia-gp104"), Some((EvalStatus::Ok, vec_of(k))));
             // verdicts are per device: another target's column is empty
             assert_eq!(c.get_verdict(k, "amd-fiji"), None);
         }
         assert_eq!(c.get_verdict(999, "nvidia-gp104"), None);
         assert_eq!(c.len(), (0, 64));
         // first-write-wins: re-writing the same verdict is a no-op …
-        c.put_verdict(1, "nvidia-gp104", EvalStatus::Ok, 1.0);
+        c.put_verdict(1, "nvidia-gp104", EvalStatus::Ok, vec_of(1));
         assert_eq!(c.len(), (0, 64));
         // … and another device's verdict for the same artifact is a new
         // column, not an overwrite
-        c.put_verdict(1, "amd-fiji", EvalStatus::Ok, 3.0);
-        assert_eq!(c.get_verdict(1, "nvidia-gp104"), Some((EvalStatus::Ok, 1.0)));
-        assert_eq!(c.get_verdict(1, "amd-fiji"), Some((EvalStatus::Ok, 3.0)));
+        c.put_verdict(1, "amd-fiji", EvalStatus::Ok, vec_of(3));
+        assert_eq!(c.get_verdict(1, "nvidia-gp104"), Some((EvalStatus::Ok, vec_of(1))));
+        assert_eq!(c.get_verdict(1, "amd-fiji"), Some((EvalStatus::Ok, vec_of(3))));
         assert_eq!(c.len(), (0, 65));
     }
 
@@ -1171,6 +1302,8 @@ mod tests {
         let e = Evaluation {
             status: EvalStatus::Ok,
             time_us: 5.0,
+            energy_uj: 50.0,
+            code_size: 7.0,
             ptx_hash: 0xAB,
             cached: false,
         };
@@ -1178,6 +1311,8 @@ mod tests {
         let hit = c.lookup_seq(7, "nvidia-gp104").unwrap();
         assert!(hit.cached);
         assert_eq!(hit.time_us, 5.0);
+        assert_eq!(hit.energy_uj, 50.0);
+        assert_eq!(hit.code_size, 7.0);
         assert_eq!(hit.ptx_hash, 0xAB);
         assert_eq!(hit.status, EvalStatus::Ok);
         // same sequence, other device: the artifact hash is known but
@@ -1188,6 +1323,8 @@ mod tests {
         let crash = Evaluation {
             status: EvalStatus::Crash("boom".into()),
             time_us: f64::INFINITY,
+            energy_uj: f64::INFINITY,
+            code_size: f64::INFINITY,
             ptx_hash: 0,
             cached: false,
         };

@@ -51,7 +51,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::bench_suite::{
-    execute, init_buffers, model_time_us_lowered, outputs_match, BuiltBench,
+    execute, init_buffers, model_objectives_lowered, outputs_match, BuiltBench,
 };
 use crate::passes::{run_sequence_with, AnalysisManager, AnalysisStats, PassOutcome};
 use crate::sim::cost::LoweredKernel;
@@ -265,11 +265,29 @@ impl CompiledKernel {
 
 // ------------------------------------------------------------------ backend
 
-/// What a backend reports for one artifact on its device.
+/// What a backend reports for one artifact on its device: the full
+/// objective vector — time, energy, code size — measured in one pass
+/// over the artifact's priced cost breakdowns.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Measurement {
     /// modelled wall time (µs) at the full dataset shape
     pub time_us: f64,
+    /// modelled energy (µJ) over the same launches
+    pub energy_uj: f64,
+    /// static instruction count of the device's allocated rendering
+    pub code_size: f64,
+}
+
+impl Measurement {
+    /// The vector this measurement contributes to an
+    /// [`Evaluation`](crate::dse::Evaluation).
+    pub fn obj(&self) -> crate::dse::ObjVec {
+        crate::dse::ObjVec {
+            time_us: self.time_us,
+            energy_uj: self.energy_uj,
+            code_size: self.code_size,
+        }
+    }
 }
 
 /// The per-device half of the staged evaluator. A backend owns
@@ -336,15 +354,14 @@ impl EvalBackend for SimBackend {
     }
 
     fn measure(&self, artifact: &CompiledKernel) -> Measurement {
-        Measurement {
-            time_us: model_time_us_lowered(
-                &artifact.lowered,
-                &artifact.full.kernels,
-                artifact.full.seq_repeat,
-                &self.target,
-                Some(&self.baseline_trips),
-            ),
-        }
+        let (time_us, energy_uj, code_size) = model_objectives_lowered(
+            &artifact.lowered,
+            &artifact.full.kernels,
+            artifact.full.seq_repeat,
+            &self.target,
+            Some(&self.baseline_trips),
+        );
+        Measurement { time_us, energy_uj, code_size }
     }
 
     fn validate(&self, artifact: &CompiledKernel, golden: &Buffers) -> EvalStatus {
@@ -426,14 +443,19 @@ mod tests {
                 SimBackend::new(t, trips, 1_000_000)
             })
             .collect();
-        let times: Vec<f64> = backends.iter().map(|be| be.measure(&ck).time_us).collect();
+        let ms: Vec<Measurement> = backends.iter().map(|be| be.measure(&ck)).collect();
         assert_eq!(c.compile_count(), 1, "one compile, every backend");
-        assert!(times.iter().all(|t| t.is_finite() && *t > 0.0));
+        assert!(ms.iter().all(|m| m.time_us.is_finite() && m.time_us > 0.0));
         assert_ne!(
-            times[0].to_bits(),
-            times[1].to_bits(),
+            ms[0].time_us.to_bits(),
+            ms[1].time_us.to_bits(),
             "the two cost tables must price the same code differently"
         );
+        // the rest of the vector is measured in the same pass and is
+        // just as device-specific
+        assert!(ms.iter().all(|m| m.energy_uj.is_finite() && m.energy_uj > 0.0));
+        assert!(ms.iter().all(|m| m.code_size.is_finite() && m.code_size > 0.0));
+        assert_ne!(ms[0].energy_uj.to_bits(), ms[1].energy_uj.to_bits());
         assert_eq!(backends[0].device(), "nvidia-gp104");
         assert_eq!(backends[1].device(), "amd-fiji");
     }

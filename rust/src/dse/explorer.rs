@@ -60,9 +60,9 @@ pub(crate) fn hash_from_json(j: &Json) -> Result<u64, String> {
     u64::from_str_radix(hex, 16).map_err(|e| format!("hash {s:?}: {e}"))
 }
 
-/// `f64` → JSON, mapping non-finite times (failed evaluations carry
+/// `f64` → JSON, mapping non-finite values (failed evaluations carry
 /// `f64::INFINITY`) to `null`.
-fn time_to_json(t: f64) -> Json {
+pub(crate) fn time_to_json(t: f64) -> Json {
     if t.is_finite() {
         Json::n(t)
     } else {
@@ -70,7 +70,7 @@ fn time_to_json(t: f64) -> Json {
     }
 }
 
-fn time_from_json(j: &Json) -> Result<f64, String> {
+pub(crate) fn time_from_json(j: &Json) -> Result<f64, String> {
     if j.is_null() {
         Ok(f64::INFINITY)
     } else {
@@ -80,6 +80,191 @@ fn time_from_json(j: &Json) -> Result<f64, String> {
 
 fn field<'a>(j: &'a Json, key: &str, what: &str) -> Result<&'a Json, String> {
     j.get(key).ok_or_else(|| format!("{what}: missing field {key:?}"))
+}
+
+/// Optional objective component: absent (pre-vector schema) or `null`
+/// both mean "unmeasured", which travels as `f64::INFINITY` — the
+/// scalar-`time_us` upgrade path for v2 shard/store/summary files.
+pub(crate) fn opt_obj_from_json(j: &Json, key: &str) -> Result<f64, String> {
+    match j.get(key) {
+        None => Ok(f64::INFINITY),
+        Some(v) => time_from_json(v),
+    }
+}
+
+/// What the search minimizes. `Time` is the paper's scalar pipeline
+/// (and the default everywhere); `Energy`/`Size` re-point the winner
+/// fold at another component of the measured vector; `Pareto` keeps the
+/// time winner as the headline scalar but reports the full
+/// non-dominated front ([`pareto_front`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    Time,
+    Energy,
+    Size,
+    Pareto,
+}
+
+impl Default for Objective {
+    fn default() -> Objective {
+        Objective::Time
+    }
+}
+
+impl Objective {
+    pub fn parse(s: &str) -> Result<Objective, String> {
+        match s {
+            "time" => Ok(Objective::Time),
+            "energy" => Ok(Objective::Energy),
+            "size" => Ok(Objective::Size),
+            "pareto" => Ok(Objective::Pareto),
+            other => Err(format!("unknown objective {other:?} (want time|energy|size|pareto)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::Time => "time",
+            Objective::Energy => "energy",
+            Objective::Size => "size",
+            Objective::Pareto => "pareto",
+        }
+    }
+
+    /// Every objective, in `--objective` listing order.
+    pub fn all() -> [Objective; 4] {
+        [Objective::Time, Objective::Energy, Objective::Size, Objective::Pareto]
+    }
+}
+
+/// One measured objective vector: modelled wall time, modelled energy,
+/// static code size. Failed evaluations carry `f64::INFINITY` in every
+/// component, so the minimizing folds need no special cases.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ObjVec {
+    pub time_us: f64,
+    pub energy_uj: f64,
+    pub code_size: f64,
+}
+
+impl ObjVec {
+    /// The all-infinite vector of a failed evaluation.
+    pub fn infinite() -> ObjVec {
+        ObjVec {
+            time_us: f64::INFINITY,
+            energy_uj: f64::INFINITY,
+            code_size: f64::INFINITY,
+        }
+    }
+
+    /// A legacy scalar measurement upgraded to a 1-vector: time is
+    /// known, the other components are unmeasured (infinite).
+    pub fn time_only(time_us: f64) -> ObjVec {
+        ObjVec { time_us, energy_uj: f64::INFINITY, code_size: f64::INFINITY }
+    }
+
+    /// The component a scalar-minimizing search folds over. `Pareto`
+    /// scalarizes to time: the front is computed from the whole stream
+    /// afterwards, so the headline winner stays the time winner.
+    pub fn scalar(&self, objective: Objective) -> f64 {
+        match objective {
+            Objective::Time | Objective::Pareto => self.time_us,
+            Objective::Energy => self.energy_uj,
+            Objective::Size => self.code_size,
+        }
+    }
+
+    /// Strict Pareto dominance: no worse on every component, strictly
+    /// better on at least one.
+    pub fn dominates(&self, o: &ObjVec) -> bool {
+        self.time_us <= o.time_us
+            && self.energy_uj <= o.energy_uj
+            && self.code_size <= o.code_size
+            && (self.time_us < o.time_us
+                || self.energy_uj < o.energy_uj
+                || self.code_size < o.code_size)
+    }
+
+    /// The exact bit patterns — the determinism contract compares these,
+    /// never rounded values.
+    pub fn bits(&self) -> (u64, u64, u64) {
+        (self.time_us.to_bits(), self.energy_uj.to_bits(), self.code_size.to_bits())
+    }
+}
+
+/// One point on a rendered Pareto front: the phase order (or baseline)
+/// and its measured vector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParetoPoint {
+    pub winner: Winner,
+    pub obj: ObjVec,
+}
+
+impl ParetoPoint {
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("winner".into(), self.winner.to_json()),
+            ("time_us".into(), time_to_json(self.obj.time_us)),
+            ("energy_uj".into(), time_to_json(self.obj.energy_uj)),
+            ("code_size".into(), time_to_json(self.obj.code_size)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ParetoPoint, String> {
+        Ok(ParetoPoint {
+            winner: Winner::from_json(field(j, "winner", "pareto point")?)?,
+            obj: ObjVec {
+                time_us: time_from_json(field(j, "time_us", "pareto point")?)?,
+                energy_uj: time_from_json(field(j, "energy_uj", "pareto point")?)?,
+                code_size: time_from_json(field(j, "code_size", "pareto point")?)?,
+            },
+        })
+    }
+}
+
+/// The non-dominated front of an evaluation stream, baseline included.
+///
+/// Deterministic by construction — candidates are taken in canonical
+/// stream order (baseline first), exact-duplicate vectors keep their
+/// first carrier, and the result is sorted by `total_cmp` on
+/// `(time, energy, size)` — so any two runs that agree on the canonical
+/// stream (the existing `--jobs`/shard/warm-store bit-identity
+/// contract) render bit-identical fronts. Only `Ok` evaluations are
+/// candidates; failed ones are all-infinite and would be dominated
+/// anyway. The front always contains a point attaining the minimum of
+/// each single objective (a lexicographic argmin is non-dominated), so
+/// it is closed under the time/energy/size winners value-wise.
+pub fn pareto_front(
+    baseline: ObjVec,
+    stream: &[Vec<&'static str>],
+    evals: &[Evaluation],
+) -> Vec<ParetoPoint> {
+    let mut cands: Vec<(Winner, ObjVec)> = Vec::with_capacity(evals.len() + 1);
+    cands.push((Winner::Baseline, baseline));
+    for (seq, e) in stream.iter().zip(evals) {
+        if e.status.is_ok() {
+            cands.push((Winner::Sequence(seq.clone()), e.obj()));
+        }
+    }
+    // first carrier of each exact vector wins (stream order = canonical)
+    let mut seen = std::collections::HashSet::new();
+    cands.retain(|(_, o)| seen.insert(o.bits()));
+    // lexicographic sort: any dominator of a point sorts before it, so
+    // one forward pass against the running front suffices — and front
+    // members can never be dominated by later points
+    cands.sort_by(|a, b| {
+        a.1.time_us
+            .total_cmp(&b.1.time_us)
+            .then(a.1.energy_uj.total_cmp(&b.1.energy_uj))
+            .then(a.1.code_size.total_cmp(&b.1.code_size))
+    });
+    let mut front: Vec<ParetoPoint> = Vec::new();
+    for (w, o) in cands {
+        if !front.iter().any(|p| p.obj.dominates(&o)) {
+            front.push(ParetoPoint { winner: w, obj: o });
+        }
+    }
+    front
 }
 
 /// §3.2 outcome buckets.
@@ -140,6 +325,12 @@ pub struct Evaluation {
     pub status: EvalStatus,
     /// modelled time (µs) at full size; f64::INFINITY when not OK
     pub time_us: f64,
+    /// modelled energy (µJ); f64::INFINITY when not OK (or when the
+    /// evaluation predates the vector schema — see `from_json`)
+    pub energy_uj: f64,
+    /// static instruction count of the allocated vPTX; f64::INFINITY
+    /// when not OK / pre-vector
+    pub code_size: f64,
     /// content hash of the generated vPTX across the full *and*
     /// validation builds (the generated-code cache key; the verdict
     /// covers validation, so the key must too). 0 = no code produced.
@@ -149,19 +340,37 @@ pub struct Evaluation {
 }
 
 impl Evaluation {
+    /// The measured objective vector.
+    pub fn obj(&self) -> ObjVec {
+        ObjVec { time_us: self.time_us, energy_uj: self.energy_uj, code_size: self.code_size }
+    }
+
+    pub fn set_obj(&mut self, o: ObjVec) {
+        self.time_us = o.time_us;
+        self.energy_uj = o.energy_uj;
+        self.code_size = o.code_size;
+    }
+
     pub fn to_json(&self) -> Json {
         Json::Obj(vec![
             ("status".into(), self.status.to_json()),
             ("time_us".into(), time_to_json(self.time_us)),
+            ("energy_uj".into(), time_to_json(self.energy_uj)),
+            ("code_size".into(), time_to_json(self.code_size)),
             ("ptx_hash".into(), hash_to_json(self.ptx_hash)),
             ("cached".into(), Json::Bool(self.cached)),
         ])
     }
 
+    /// `energy_uj`/`code_size` are optional: a v2 file's scalar
+    /// `time_us` evaluation parses as a 1-vector with the other
+    /// components unmeasured (infinite).
     pub fn from_json(j: &Json) -> Result<Evaluation, String> {
         Ok(Evaluation {
             status: EvalStatus::from_json(field(j, "status", "evaluation")?)?,
             time_us: time_from_json(field(j, "time_us", "evaluation")?)?,
+            energy_uj: opt_obj_from_json(j, "energy_uj")?,
+            code_size: opt_obj_from_json(j, "code_size")?,
             ptx_hash: hash_from_json(field(j, "ptx_hash", "evaluation")?)?,
             cached: field(j, "cached", "evaluation")?
                 .as_bool()
@@ -217,8 +426,21 @@ impl Winner {
 pub struct ExplorationSummary {
     pub bench: String,
     pub baseline_time_us: f64,
+    /// baseline energy/size (f64::INFINITY when folded from a pre-vector
+    /// stream — legacy shard files)
+    pub baseline_energy_uj: f64,
+    pub baseline_code_size: f64,
+    /// what the winner fold minimized
+    pub objective: Objective,
     pub winner: Winner,
     pub best_time_us: f64,
+    /// the winner's full vector (components can be infinite on legacy
+    /// streams)
+    pub best_energy_uj: f64,
+    pub best_code_size: f64,
+    /// the non-dominated front of the whole stream, baseline included
+    /// ([`pareto_front`]); empty when parsed from a pre-vector summary
+    pub pareto: Vec<ParetoPoint>,
     pub evaluations: Vec<Evaluation>,
     pub n_ok: usize,
     pub n_crash: usize,
@@ -228,8 +450,36 @@ pub struct ExplorationSummary {
 }
 
 impl ExplorationSummary {
+    /// Baseline ÷ best modelled time. Degenerate explorations — every
+    /// candidate timed out/crashed so `best_time_us` stayed infinite, or
+    /// a baseline that itself failed to price — report a neutral 1.0
+    /// instead of dividing into 0, `inf` or NaN.
     pub fn best_speedup(&self) -> f64 {
+        if !self.baseline_time_us.is_finite()
+            || !self.best_time_us.is_finite()
+            || self.best_time_us <= 0.0
+        {
+            return 1.0;
+        }
         self.baseline_time_us / self.best_time_us
+    }
+
+    /// The baseline's objective vector.
+    pub fn baseline_obj(&self) -> ObjVec {
+        ObjVec {
+            time_us: self.baseline_time_us,
+            energy_uj: self.baseline_energy_uj,
+            code_size: self.baseline_code_size,
+        }
+    }
+
+    /// The winner's objective vector.
+    pub fn best_obj(&self) -> ObjVec {
+        ObjVec {
+            time_us: self.best_time_us,
+            energy_uj: self.best_energy_uj,
+            code_size: self.best_code_size,
+        }
     }
 
     /// The winning sequence, if one beat the baseline.
@@ -254,6 +504,14 @@ impl ExplorationSummary {
             ("n_invalid".into(), Json::n(self.n_invalid as f64)),
             ("n_timeout".into(), Json::n(self.n_timeout as f64)),
             ("cache_hits".into(), Json::n(self.cache_hits as f64)),
+            // vector-objective keys, appended after the v2 schema so
+            // pre-vector readers that index by key keep working
+            ("objective".into(), Json::s(self.objective.name())),
+            ("baseline_energy_uj".into(), time_to_json(self.baseline_energy_uj)),
+            ("baseline_code_size".into(), time_to_json(self.baseline_code_size)),
+            ("best_energy_uj".into(), time_to_json(self.best_energy_uj)),
+            ("best_code_size".into(), time_to_json(self.best_code_size)),
+            ("pareto".into(), Json::Arr(self.pareto.iter().map(|p| p.to_json()).collect())),
         ])
     }
 
@@ -284,6 +542,28 @@ impl ExplorationSummary {
             n_invalid: count("n_invalid")?,
             n_timeout: count("n_timeout")?,
             cache_hits: count("cache_hits")?,
+            // v2 summaries predate the vector schema: default to the
+            // time objective with unmeasured (infinite) components and
+            // no recorded front
+            objective: match j.get("objective") {
+                None => Objective::Time,
+                Some(v) => Objective::parse(
+                    v.as_str().ok_or("summary: objective must be a string")?,
+                )?,
+            },
+            baseline_energy_uj: opt_obj_from_json(j, "baseline_energy_uj")?,
+            baseline_code_size: opt_obj_from_json(j, "baseline_code_size")?,
+            best_energy_uj: opt_obj_from_json(j, "best_energy_uj")?,
+            best_code_size: opt_obj_from_json(j, "best_code_size")?,
+            pareto: match j.get("pareto") {
+                None => Vec::new(),
+                Some(v) => v
+                    .as_arr()
+                    .ok_or("summary: pareto must be an array")?
+                    .iter()
+                    .map(ParetoPoint::from_json)
+                    .collect::<Result<Vec<_>, _>>()?,
+            },
         })
     }
 }
@@ -458,24 +738,32 @@ mod tests {
             Evaluation {
                 status: EvalStatus::Ok,
                 time_us: 1234.567_890_123,
+                energy_uj: 98_765.432_1,
+                code_size: 321.0,
                 ptx_hash: 0xDEAD_BEEF_CAFE_F00D,
                 cached: true,
             },
             Evaluation {
                 status: EvalStatus::Crash("pass \"gvn\" exploded:\n\tbudget".into()),
                 time_us: f64::INFINITY,
+                energy_uj: f64::INFINITY,
+                code_size: f64::INFINITY,
                 ptx_hash: 0,
                 cached: false,
             },
             Evaluation {
                 status: EvalStatus::ExecFailure("OOB at k=3".into()),
                 time_us: f64::INFINITY,
+                energy_uj: f64::INFINITY,
+                code_size: f64::INFINITY,
                 ptx_hash: u64::MAX,
                 cached: false,
             },
             Evaluation {
                 status: EvalStatus::Timeout,
                 time_us: f64::INFINITY,
+                energy_uj: f64::INFINITY,
+                code_size: f64::INFINITY,
                 ptx_hash: 0x1,
                 cached: true,
             },
@@ -485,9 +773,97 @@ mod tests {
             let back = Evaluation::from_json(&crate::util::Json::parse(&text).unwrap()).unwrap();
             assert_eq!(back.status, e.status, "{text}");
             assert_eq!(back.time_us.to_bits(), e.time_us.to_bits(), "{text}");
+            assert_eq!(back.energy_uj.to_bits(), e.energy_uj.to_bits(), "{text}");
+            assert_eq!(back.code_size.to_bits(), e.code_size.to_bits(), "{text}");
             assert_eq!(back.ptx_hash, e.ptx_hash, "{text}");
             assert_eq!(back.cached, e.cached, "{text}");
         }
+    }
+
+    #[test]
+    fn scalar_v2_evaluation_upgrades_to_a_one_vector() {
+        // a pre-vector (v2) evaluation has no energy_uj/code_size keys
+        let text = r#"{"status":"ok","time_us":42.5,"ptx_hash":"0x0000000000000001","cached":false}"#;
+        let e = Evaluation::from_json(&crate::util::Json::parse(text).unwrap()).unwrap();
+        assert_eq!(e.time_us, 42.5);
+        assert!(e.energy_uj.is_infinite() && e.code_size.is_infinite());
+        // and re-serializing keeps the vector round-trippable
+        let back = Evaluation::from_json(
+            &crate::util::Json::parse(&e.to_json().to_string()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.time_us.to_bits(), e.time_us.to_bits());
+        assert!(back.energy_uj.is_infinite() && back.code_size.is_infinite());
+    }
+
+    #[test]
+    fn objective_parse_and_names_roundtrip() {
+        for o in Objective::all() {
+            assert_eq!(Objective::parse(o.name()).unwrap(), o);
+        }
+        assert_eq!(Objective::default(), Objective::Time);
+        let err = Objective::parse("joules").unwrap_err();
+        assert!(err.contains("time|energy|size|pareto"), "{err}");
+    }
+
+    #[test]
+    fn dominance_is_strict_and_partial() {
+        let a = ObjVec { time_us: 1.0, energy_uj: 1.0, code_size: 1.0 };
+        let b = ObjVec { time_us: 2.0, energy_uj: 0.5, code_size: 1.0 };
+        let c = ObjVec { time_us: 2.0, energy_uj: 2.0, code_size: 2.0 };
+        assert!(a.dominates(&c) && !c.dominates(&a));
+        // a and b trade off: neither dominates
+        assert!(!a.dominates(&b) && !b.dominates(&a));
+        // equal vectors never dominate each other
+        assert!(!a.dominates(&a));
+        // the all-infinite failure vector is dominated, never dominates
+        assert!(a.dominates(&ObjVec::infinite()));
+        assert!(!ObjVec::infinite().dominates(&a));
+    }
+
+    #[test]
+    fn pareto_front_is_non_dominated_and_keeps_extremes() {
+        let licm = crate::passes::pass_by_name("licm").unwrap().name();
+        let gvn = crate::passes::pass_by_name("gvn").unwrap().name();
+        let mk = |t: f64, e: f64, s: f64| Evaluation {
+            status: EvalStatus::Ok,
+            time_us: t,
+            energy_uj: e,
+            code_size: s,
+            ptx_hash: 1,
+            cached: false,
+        };
+        let stream = vec![vec![licm], vec![gvn], vec![licm, gvn], vec![gvn, licm]];
+        let evals = vec![
+            mk(1.0, 9.0, 5.0),  // time winner
+            mk(5.0, 2.0, 5.0),  // energy winner
+            mk(4.0, 8.0, 1.0),  // size winner
+            mk(6.0, 9.0, 9.0),  // dominated by everything above
+        ];
+        let baseline = ObjVec { time_us: 3.0, energy_uj: 3.0, code_size: 3.0 };
+        let front = pareto_front(baseline, &stream, &evals);
+        // mutual non-domination
+        for p in &front {
+            for q in &front {
+                assert!(!p.obj.dominates(&q.obj), "{p:?} dominates {q:?}");
+            }
+        }
+        // value-wise closure under the single-objective winners
+        for o in [Objective::Time, Objective::Energy, Objective::Size] {
+            let best = evals
+                .iter()
+                .map(|e| e.obj().scalar(o))
+                .chain([baseline.scalar(o)])
+                .fold(f64::INFINITY, f64::min);
+            assert!(
+                front.iter().any(|p| p.obj.scalar(o) == best),
+                "front lost the {} winner",
+                o.name()
+            );
+        }
+        // the dominated point fell off; the trade-off points all stayed
+        assert_eq!(front.len(), 4, "{front:?}");
+        assert!(front.iter().any(|p| p.winner.is_baseline()));
     }
 
     #[test]

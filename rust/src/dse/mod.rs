@@ -37,6 +37,13 @@
 //! single-process run (`repro merge`). Both cache levels persist
 //! between processes through the epoch-guarded on-disk [`store`]
 //! (`--store DIR` on `repro explore|transfer|merge|serve`).
+//!
+//! Measurements are vector-valued — time × energy × code size, carried
+//! as an [`explorer::ObjVec`]: the winner fold scalarizes through a
+//! configurable [`explorer::Objective`] (`repro explore --objective
+//! time|energy|size|pareto`), and every summary additionally records
+//! the benchmark's Pareto front ([`explorer::pareto_front`]), so the
+//! bit-identity guarantees above hold per objective.
 
 pub mod engine;
 pub mod evaluator;
@@ -48,9 +55,12 @@ pub mod strategy;
 
 pub use engine::{explore_all, CacheShards, EvalContext, Scheduler, SeqMemo};
 pub use evaluator::{CompiledKernel, Compiler, EvalBackend, Measurement, SimBackend};
-pub use explorer::{EvalStatus, Evaluation, Explorer, ExplorationSummary, Winner};
+pub use explorer::{
+    pareto_front, EvalStatus, Evaluation, Explorer, ExplorationSummary, ObjVec, Objective,
+    ParetoPoint, Winner,
+};
 pub use seqgen::SeqGen;
-pub use shard::{merge_shards, ShardRun, ShardSpec, StreamSpec};
+pub use shard::{merge_shards, merge_shards_obj, ShardRun, ShardSpec, StreamSpec};
 pub use store::{Store, WarmStats};
 pub use strategy::{
     minimize_sequence, permutation_study, FixedStream, HillClimb, KnnSeeded, Permute, Proposal,

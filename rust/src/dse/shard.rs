@@ -56,7 +56,8 @@ use crate::util::Json;
 
 use super::engine::{self, CacheShards, EvalContext};
 use super::explorer::{
-    hash_from_json, hash_to_json, seq_from_json, seq_to_json, Evaluation, ExplorationSummary,
+    hash_from_json, hash_to_json, opt_obj_from_json, seq_from_json, seq_to_json, time_to_json,
+    Evaluation, ExplorationSummary, ObjVec, Objective,
 };
 use super::seqgen::{stream_fingerprint, SeqGen};
 
@@ -206,8 +207,27 @@ pub struct ShardBench {
     /// come from the cost model, not the goldens).
     pub golden: String,
     pub baseline_time_us: f64,
+    /// Energy component of the baseline objective vector. `INFINITY`
+    /// when the file predates the vector objective (a scalar-era shard
+    /// upgrades to a 1-vector on load) — merge still works, but only
+    /// `--objective time` fronts/winners are meaningful then.
+    pub baseline_energy_uj: f64,
+    /// Code-size component of the baseline objective vector (same
+    /// upgrade story as `baseline_energy_uj`).
+    pub baseline_code_size: f64,
     /// `(sequence_index, evaluation)`, ascending by index.
     pub items: Vec<(usize, Evaluation)>,
+}
+
+impl ShardBench {
+    /// The baseline objective vector this benchmark's fold starts from.
+    pub fn baseline_obj(&self) -> ObjVec {
+        ObjVec {
+            time_us: self.baseline_time_us,
+            energy_uj: self.baseline_energy_uj,
+            code_size: self.baseline_code_size,
+        }
+    }
 }
 
 /// A complete shard summary file: everything `repro merge` needs to
@@ -259,11 +279,16 @@ impl ShardRun {
                 .iter()
                 .zip(goldens)
                 .zip(rows)
-                .map(|((&(cx, _), golden), items)| ShardBench {
-                    bench: cx.name.clone(),
-                    golden: golden.to_string(),
-                    baseline_time_us: cx.baseline_time_us,
-                    items,
+                .map(|((&(cx, _), golden), items)| {
+                    let b = cx.baseline_obj();
+                    ShardBench {
+                        bench: cx.name.clone(),
+                        golden: golden.to_string(),
+                        baseline_time_us: b.time_us,
+                        baseline_energy_uj: b.energy_uj,
+                        baseline_code_size: b.code_size,
+                        items,
+                    }
                 })
                 .collect(),
         }
@@ -299,6 +324,8 @@ impl ShardRun {
                         bench: s.bench.clone(),
                         golden: golden.to_string(),
                         baseline_time_us: s.baseline_time_us,
+                        baseline_energy_uj: s.baseline_energy_uj,
+                        baseline_code_size: s.baseline_code_size,
                         items: s.evaluations.iter().cloned().enumerate().collect(),
                     }
                 })
@@ -373,6 +400,14 @@ impl ShardRun {
                                 ("bench".into(), Json::s(b.bench.as_str())),
                                 ("golden".into(), Json::s(b.golden.as_str())),
                                 ("baseline_time_us".into(), Json::n(b.baseline_time_us)),
+                                (
+                                    "baseline_energy_uj".into(),
+                                    time_to_json(b.baseline_energy_uj),
+                                ),
+                                (
+                                    "baseline_code_size".into(),
+                                    time_to_json(b.baseline_code_size),
+                                ),
                                 (
                                     "items".into(),
                                     Json::Arr(
@@ -478,6 +513,12 @@ impl ShardRun {
                 .get("baseline_time_us")
                 .and_then(|v| v.as_f64())
                 .ok_or_else(|| format!("shard file: {bench}: missing baseline_time_us"))?;
+            // absent in scalar-era (pre-vector) shard files: upgrade to
+            // a 1-vector with infinite energy/size components
+            let baseline_energy_uj = opt_obj_from_json(bj, "baseline_energy_uj")
+                .map_err(|e| format!("shard file: {bench}: baseline_energy_uj: {e}"))?;
+            let baseline_code_size = opt_obj_from_json(bj, "baseline_code_size")
+                .map_err(|e| format!("shard file: {bench}: baseline_code_size: {e}"))?;
             let mut items = Vec::new();
             for ij in bj
                 .get("items")
@@ -498,6 +539,8 @@ impl ShardRun {
                 bench,
                 golden,
                 baseline_time_us,
+                baseline_energy_uj,
+                baseline_code_size,
                 items,
             });
         }
@@ -525,6 +568,19 @@ impl ShardRun {
 /// recomputes `cached` attribution over the combined stream, exactly as
 /// the in-process engine does.
 pub fn merge_shards(shards: &[ShardRun]) -> Result<Vec<ExplorationSummary>, String> {
+    merge_shards_obj(shards, Objective::Time)
+}
+
+/// [`merge_shards`] with an explicit objective: the reassembled streams
+/// are folded with [`engine::summarize_stream_obj`], so the merged
+/// winner/front are bit-identical to an unsharded
+/// `explore --objective …` run. The shards themselves are
+/// objective-agnostic (they carry raw evaluations), so one set of shard
+/// files can be merged under every objective.
+pub fn merge_shards_obj(
+    shards: &[ShardRun],
+    objective: Objective,
+) -> Result<Vec<ExplorationSummary>, String> {
     let first = shards.first().ok_or("merge: no shard files given")?;
     let first_stream = first
         .stream
@@ -604,11 +660,18 @@ pub fn merge_shards(shards: &[ShardRun]) -> Result<Vec<ExplorationSummary>, Stri
                     a.bench, b.golden, a.golden
                 ));
             }
-            if a.baseline_time_us.to_bits() != b.baseline_time_us.to_bits() {
+            if a.baseline_obj().bits() != b.baseline_obj().bits() {
                 return Err(format!(
-                    "merge: {}: baselines differ across shards ({} vs {}) — different \
+                    "merge: {}: baselines differ across shards \
+                     ({}us/{}uJ/{}insts vs {}us/{}uJ/{}insts) — different \
                      golden artifacts or cost tables?",
-                    a.bench, a.baseline_time_us, b.baseline_time_us
+                    a.bench,
+                    a.baseline_time_us,
+                    a.baseline_energy_uj,
+                    a.baseline_code_size,
+                    b.baseline_time_us,
+                    b.baseline_energy_uj,
+                    b.baseline_code_size
                 ));
             }
         }
@@ -653,11 +716,12 @@ pub fn merge_shards(shards: &[ShardRun]) -> Result<Vec<ExplorationSummary>, Stri
                 })
             })
             .collect::<Result<Vec<_>, _>>()?;
-        out.push(engine::summarize_stream(
+        out.push(engine::summarize_stream_obj(
             &proto.bench,
-            proto.baseline_time_us,
+            proto.baseline_obj(),
             &first_stream,
             evals,
+            objective,
         ));
     }
     Ok(out)
@@ -714,6 +778,8 @@ mod tests {
                 bench: "GEMM".to_string(),
                 golden: "interpreter".to_string(),
                 baseline_time_us: 100.0,
+                baseline_energy_uj: 5000.0,
+                baseline_code_size: 40.0,
                 items: Vec::new(),
             }],
         };
@@ -754,6 +820,12 @@ mod tests {
             merge_shards(&[run(1, 2, 7), other_verify]).is_err(),
             "verify-each mismatch"
         );
+        // the baseline comparison is over the full objective vector:
+        // a retuned energy table is as fatal as a retuned time table
+        let mut other_energy = run(2, 2, 7);
+        other_energy.benches[0].baseline_energy_uj = 6000.0;
+        let err = merge_shards(&[run(1, 2, 7), other_energy]).unwrap_err();
+        assert!(err.contains("baselines differ"), "{err}");
         // a complete pair without the evaluations is caught as missing
         let err = merge_shards(&[run(1, 2, 7), run(2, 2, 7)]).unwrap_err();
         assert!(err.contains("missing"), "{err}");
@@ -829,6 +901,8 @@ mod tests {
                 bench: "GEMM".to_string(),
                 golden: "interpreter".to_string(),
                 baseline_time_us: 100.0,
+                baseline_energy_uj: 5000.0,
+                baseline_code_size: 40.0,
                 items: Vec::new(),
             }],
         };
@@ -863,5 +937,31 @@ mod tests {
             ShardRun::from_json(&Json::parse(&tampered).unwrap()).is_err(),
             "mismatched descriptor seed must not parse"
         );
+    }
+
+    #[test]
+    fn scalar_era_shard_file_upgrades_baseline_to_a_one_vector() {
+        // a pre-vector file has only baseline_time_us; the missing
+        // components come back as INFINITY and survive a round-trip
+        let j = Json::parse(
+            r#"{"schema": "phaseord-shard-v1",
+                "shard": {"index": 1, "count": 1},
+                "target": "nvidia-gp104",
+                "seed": "0x0000000000000007",
+                "verify_each": false,
+                "stream": [["licm"]],
+                "benches": [{"bench": "GEMM", "golden": "interpreter",
+                             "baseline_time_us": 100.0, "items": []}]}"#,
+        )
+        .unwrap();
+        let run = ShardRun::from_json(&j).unwrap();
+        let b = run.benches[0].baseline_obj();
+        assert_eq!(b.time_us, 100.0);
+        assert!(b.energy_uj.is_infinite() && b.code_size.is_infinite());
+        // the re-emitted file carries the vector explicitly (as nulls)
+        let text = run.to_json().to_string();
+        assert!(text.contains("baseline_energy_uj"), "{text}");
+        let back = ShardRun::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.benches[0].baseline_obj().bits(), b.bits());
     }
 }

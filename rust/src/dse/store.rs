@@ -10,7 +10,7 @@
 //!   DIR/meta.json            monotonic store generation (for `cache gc`)
 //!   DIR/bench-<NAME>.json    one document per benchmark:
 //!       seq      { epoch, [ key → artifact | no-code verdict ] }
-//!       verdicts [ per device: { epoch, [ artifact → status, time ] } ]
+//!       verdicts [ per device: { epoch, [ artifact → status, time/energy/size ] } ]
 //!   DIR/last-run.json        warm/compile stats of the latest batch run
 //! ```
 //!
@@ -52,7 +52,9 @@ use std::path::{Path, PathBuf};
 
 use crate::bench_suite::Benchmark;
 use crate::dse::engine::{CacheShards, SeqMemo};
-use crate::dse::explorer::{hash_from_json, hash_to_json, EvalStatus, Evaluation};
+use crate::dse::explorer::{
+    hash_from_json, hash_to_json, opt_obj_from_json, time_to_json, EvalStatus, Evaluation, ObjVec,
+};
 use crate::passes::registry_ref;
 use crate::sim::target::Target;
 use crate::util::{emit_json, fnv1a, load_json, Json};
@@ -351,8 +353,8 @@ impl Store {
             match target {
                 Some(t) if epoch == self.device_epoch(bench, t) => {
                     for e in entries {
-                        let (hash, status, time_us) = verdict_entry_from_json(e)?;
-                        cache.put_verdict(hash, t.name, status, time_us);
+                        let (hash, status, obj) = verdict_entry_from_json(e)?;
+                        cache.put_verdict(hash, t.name, status, obj);
                         stats.verdict_loaded += 1;
                     }
                 }
@@ -410,7 +412,7 @@ impl Store {
         let mut tables = Vec::new();
         for t in &self.targets {
             let epoch = self.device_epoch(bench, t);
-            let mut column: Vec<(u64, EvalStatus, f64)> = Vec::new();
+            let mut column: Vec<(u64, EvalStatus, ObjVec)> = Vec::new();
             if let Some(doc) = &disk {
                 for table in doc.get("verdicts").and_then(|v| v.as_arr()).unwrap_or(&[]) {
                     let same_device = table.get("device").and_then(|d| d.as_str()) == Some(t.name);
@@ -427,9 +429,9 @@ impl Store {
                     }
                 }
             }
-            for (h, d, s, time) in &snapshot {
+            for (h, d, s, obj) in &snapshot {
                 if *d == t.name && !column.iter().any(|(h0, _, _)| h0 == h) {
-                    column.push((*h, s.clone(), *time));
+                    column.push((*h, s.clone(), *obj));
                 }
             }
             if column.is_empty() {
@@ -618,21 +620,18 @@ fn seq_entry_from_json(j: &Json) -> Result<(u64, SeqMemo), String> {
     Ok((key, SeqMemo::NoCode(e)))
 }
 
-fn verdict_entry_to_json(entry: &(u64, EvalStatus, f64)) -> Json {
-    let (hash, status, time_us) = entry;
-    let time = if time_us.is_finite() {
-        Json::Num(*time_us)
-    } else {
-        Json::Null
-    };
+fn verdict_entry_to_json(entry: &(u64, EvalStatus, ObjVec)) -> Json {
+    let (hash, status, obj) = entry;
     Json::Obj(vec![
         ("artifact".into(), hash_to_json(*hash)),
         ("status".into(), status.to_json()),
-        ("time_us".into(), time),
+        ("time_us".into(), time_to_json(obj.time_us)),
+        ("energy_uj".into(), time_to_json(obj.energy_uj)),
+        ("code_size".into(), time_to_json(obj.code_size)),
     ])
 }
 
-fn verdict_entry_from_json(j: &Json) -> Result<(u64, EvalStatus, f64), String> {
+fn verdict_entry_from_json(j: &Json) -> Result<(u64, EvalStatus, ObjVec), String> {
     let hash = hash_from_json(j.get("artifact").ok_or("verdict without artifact")?)?;
     if hash == 0 {
         return Err("verdict keyed on the no-code sentinel hash".into());
@@ -644,7 +643,19 @@ fn verdict_entry_from_json(j: &Json) -> Result<(u64, EvalStatus, f64), String> {
     } else {
         time.as_f64().ok_or("non-numeric time_us")?
     };
-    Ok((hash, status, time_us))
+    // energy/size are absent in scalar-era (v1) store files: upgrade
+    // the column entry to a 1-vector with infinite components
+    let energy_uj = opt_obj_from_json(j, "energy_uj").map_err(|e| format!("verdict: {e}"))?;
+    let code_size = opt_obj_from_json(j, "code_size").map_err(|e| format!("verdict: {e}"))?;
+    Ok((
+        hash,
+        status,
+        ObjVec {
+            time_us,
+            energy_uj,
+            code_size,
+        },
+    ))
 }
 
 #[cfg(test)]
@@ -662,6 +673,8 @@ mod tests {
         Evaluation {
             status: EvalStatus::Ok,
             time_us,
+            energy_uj: time_us * 10.0,
+            code_size: 30.0,
             ptx_hash: hash,
             cached: false,
         }
@@ -710,6 +723,8 @@ mod tests {
             &Evaluation {
                 status: EvalStatus::Crash("verifier".into()),
                 time_us: f64::INFINITY,
+                energy_uj: f64::INFINITY,
+                code_size: f64::INFINITY,
                 ptx_hash: 0,
                 cached: false,
             },
@@ -727,6 +742,9 @@ mod tests {
         let hit = warmed.lookup_seq(11, device).unwrap();
         assert_eq!(hit.ptx_hash, 0xAB);
         assert_eq!(hit.time_us.to_bits(), 120.5f64.to_bits());
+        // the whole objective vector survives the disk round-trip
+        assert_eq!(hit.energy_uj.to_bits(), 1205.0f64.to_bits());
+        assert_eq!(hit.code_size.to_bits(), 30.0f64.to_bits());
         let nocode = warmed.lookup_seq(13, device).unwrap();
         assert_eq!(nocode.status, EvalStatus::Crash("verifier".into()));
         // persisting the warmed cache again is byte-stable
@@ -767,6 +785,49 @@ mod tests {
         let stats = refat.warm(&bench, &cold);
         assert_eq!(stats.seq_loaded, 0);
         assert_eq!(stats.seq_stale, 2);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn scalar_era_verdict_entry_upgrades_to_a_one_vector() {
+        // a v1 store column carries only (status, time_us); the missing
+        // components come back infinite, and the rewritten entry makes
+        // them explicit without changing the parsed vector
+        let j = Json::parse(r#"{"artifact": "0x00000000000000ab", "status": "ok", "time_us": 12.5}"#)
+            .unwrap();
+        let (h, s, obj) = verdict_entry_from_json(&j).unwrap();
+        assert_eq!((h, s), (0xAB, EvalStatus::Ok));
+        assert_eq!(obj.time_us.to_bits(), 12.5f64.to_bits());
+        assert!(obj.energy_uj.is_infinite() && obj.code_size.is_infinite());
+        let text = verdict_entry_to_json(&(h, EvalStatus::Ok, obj)).to_string();
+        assert!(text.contains("energy_uj"), "{text}");
+        let (h2, _, obj2) = verdict_entry_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!((h2, obj2.bits()), (h, obj.bits()));
+    }
+
+    #[test]
+    fn energy_retune_stales_only_that_device_column() {
+        let bench = benchmark_by_name("GEMM").unwrap();
+        let dir = tmp_store("energy-stale");
+        let store = Store::open(&dir);
+        let cache = CacheShards::new();
+        cache.memo_seq(41, &eval(0xA1, 9.0), Target::gp104().name);
+        cache.memo_seq(42, &eval(0xA2, 7.0), Target::fiji().name);
+        store.persist(&bench, &cache, 1).unwrap();
+
+        // retune one device's energy table: the cost fingerprint covers
+        // it, so only that device's verdicts go stale — memos and the
+        // sibling column stay warm
+        let mut hot = Target::gp104();
+        hot.e_alu_pj *= 4.0;
+        let retuned = Store::with_targets(&dir, vec![hot, Target::fiji()]);
+        let warmed = CacheShards::new();
+        let stats = retuned.warm(&bench, &warmed);
+        assert_eq!(stats.seq_loaded, 2);
+        assert_eq!(stats.verdict_loaded, 1);
+        assert_eq!(stats.verdict_stale, 1);
+        assert!(warmed.lookup_seq(42, Target::fiji().name).is_some());
+        assert!(warmed.lookup_seq(41, Target::gp104().name).is_none());
         let _ = fs::remove_dir_all(&dir);
     }
 

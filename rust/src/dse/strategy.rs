@@ -47,7 +47,7 @@ use crate::features::{rank_neighbors, FeatureVector};
 use crate::passes::registry_names;
 use crate::util::Rng;
 
-use super::explorer::{Evaluation, Explorer};
+use super::explorer::{Evaluation, Explorer, Objective};
 use super::seqgen::{SeqGen, MAX_SEQ_LEN};
 
 /// Mutations proposed per benchmark per adaptive round (the batch the
@@ -226,19 +226,22 @@ fn mutate(
 /// Per-benchmark local-search state: a seeded RNG plus the best
 /// validated candidate seen so far (seeded with the empty sequence —
 /// the `-O0` baseline — so "best" is always at least as good as not
-/// optimizing).
+/// optimizing). "Best" minimizes the configured [`Objective`]'s scalar
+/// component (time by default; `pareto` scalarizes to time).
 struct Climber {
     rng: Rng,
+    objective: Objective,
     best_seq: Vec<&'static str>,
-    best_time: f64,
+    best_score: f64,
 }
 
 impl Climber {
     fn new(seed: u64) -> Climber {
         Climber {
             rng: Rng::new(seed),
+            objective: Objective::Time,
             best_seq: Vec::new(),
-            best_time: f64::INFINITY,
+            best_score: f64::INFINITY,
         }
     }
 
@@ -247,8 +250,9 @@ impl Climber {
     }
 
     fn observe(&mut self, seq: &[&'static str], e: &Evaluation) {
-        if e.status.is_ok() && e.time_us < self.best_time {
-            self.best_time = e.time_us;
+        let score = e.obj().scalar(self.objective);
+        if e.status.is_ok() && score < self.best_score {
+            self.best_score = score;
             self.best_seq = seq.to_vec();
         }
     }
@@ -281,12 +285,23 @@ impl HillClimb {
         }
     }
 
-    /// The best validated `(sequence, time)` for a benchmark so far
-    /// (time is `INFINITY` until something — at least the bootstrap
-    /// empty sequence — has been observed).
+    /// Point the climb at an [`Objective`]: later observations minimize
+    /// its scalar component. Set before the search starts — retargeting
+    /// mid-climb keeps the previous best's score on the books, so the
+    /// comparison would mix units.
+    pub fn set_objective(&mut self, objective: Objective) {
+        for c in &mut self.climbers {
+            c.objective = objective;
+        }
+    }
+
+    /// The best validated `(sequence, score)` for a benchmark so far —
+    /// the score is the configured objective's scalar (time by
+    /// default), `INFINITY` until something — at least the bootstrap
+    /// empty sequence — has been observed.
     pub fn best(&self, bench: usize) -> (&[&'static str], f64) {
         let c = &self.climbers[bench];
-        (&c.best_seq, c.best_time)
+        (&c.best_seq, c.best_score)
     }
 }
 
@@ -393,6 +408,12 @@ impl KnnSeeded {
     /// The neighbor sequences queued for a benchmark (test hook).
     pub fn seeds_for(&self, bench: usize) -> &[Vec<&'static str>] {
         &self.seeds[bench]
+    }
+
+    /// Point the refinement climb at an [`Objective`] (see
+    /// [`HillClimb::set_objective`]).
+    pub fn set_objective(&mut self, objective: Objective) {
+        self.climb.set_objective(objective);
     }
 }
 
@@ -688,6 +709,8 @@ mod tests {
         let fast = Evaluation {
             status: crate::dse::EvalStatus::Ok,
             time_us: 10.0,
+            energy_uj: 100.0,
+            code_size: 50.0,
             ptx_hash: 1,
             cached: false,
         };
@@ -711,6 +734,8 @@ mod tests {
         let bad = Evaluation {
             status: crate::dse::EvalStatus::InvalidOutput,
             time_us: 1.0,
+            energy_uj: 1.0,
+            code_size: 1.0,
             ptx_hash: 2,
             cached: false,
         };
@@ -720,6 +745,33 @@ mod tests {
         let round = s.propose(usize::MAX);
         assert_eq!(round.len(), 6);
         assert_eq!(round.iter().filter(|p| p.bench == 0).count(), 3);
+    }
+
+    #[test]
+    fn hillclimb_with_an_objective_minimizes_that_component() {
+        let mut s = HillClimb::new(1, 7, 3);
+        s.set_objective(Objective::Energy);
+        let _ = s.propose(usize::MAX);
+        // slower but far cheaper in energy: the energy climb adopts it
+        let cheap = Evaluation {
+            status: crate::dse::EvalStatus::Ok,
+            time_us: 30.0,
+            energy_uj: 10.0,
+            code_size: 50.0,
+            ptx_hash: 1,
+            cached: false,
+        };
+        let fast_but_hungry = Evaluation {
+            time_us: 5.0,
+            energy_uj: 90.0,
+            ..cheap.clone()
+        };
+        let p = Proposal { bench: 0, seq: vec!["licm"] };
+        let q = Proposal { bench: 0, seq: vec!["gvn"] };
+        s.observe(&p, &cheap);
+        assert_eq!(s.best(0), (&["licm"][..], 10.0));
+        s.observe(&q, &fast_but_hungry);
+        assert_eq!(s.best(0).0, &["licm"][..], "energy climb ignores the time win");
     }
 
     #[test]

@@ -83,6 +83,21 @@ pub fn occupancy(regs_per_thread: u32, target: &Target) -> f64 {
     (target.regs.gpr as f64 / regs_per_thread as f64).clamp(floor, 1.0)
 }
 
+/// Modelled energy (µJ) for one kernel launch, from a priced
+/// [`CostBreakdown`]: dynamic energy charges every thread's ALU and
+/// memory cycles through the target's per-cycle tables
+/// ([`Target::e_alu_pj`]/[`Target::e_mem_pj`], pJ → µJ is the `1e-6`),
+/// and static energy charges board power for the modelled wall time
+/// (`W × µs = µJ`). Phase orders trade the two: unrolling trims cycles
+/// per thread (dynamic) while anything that merely runs longer pays
+/// leakage (static) — the time/energy tension the Pareto front exposes.
+pub fn estimate_energy_uj(cb: &CostBreakdown, grid: (usize, usize), target: &Target) -> f64 {
+    let threads = (grid.0 * grid.1) as f64;
+    let dynamic_uj =
+        (cb.alu_cycles * target.e_alu_pj + cb.mem_cycles * target.e_mem_pj) * threads * 1e-6;
+    dynamic_uj + target.e_static_w * cb.time_us
+}
+
 /// [`estimate_time_unknown`] with caller-provided CFG analyses — the
 /// compile-once artifact path (see [`LoweredKernel`]): a
 /// [`DomTree`]/[`LoopForest`] computed once at compile time is reused by
@@ -336,6 +351,19 @@ impl LoweredKernel {
             )
         } else {
             estimate_time_analyzed(&self.func, &self.prog, grid, target, unknown_trips, 0, dt, lf)
+        }
+    }
+
+    /// Code-size objective: static instruction count of the program the
+    /// pricing actually uses — the per-target *allocated* rendering
+    /// (spill/reload code included) with feedback on, the vreg program
+    /// otherwise. An `f64` because it travels the same objective-vector
+    /// JSON lanes as time and energy.
+    pub fn code_size(&self, target: &Target) -> f64 {
+        if self.feedback {
+            self.allocated(target).prog.insts.len() as f64
+        } else {
+            self.prog.insts.len() as f64
         }
     }
 }
@@ -852,5 +880,40 @@ mod tests {
             assert_eq!(cb.occupancy, 1.0, "{}", t.name);
             assert!(cb.time_us.is_finite() && cb.time_us > 0.0);
         }
+    }
+
+    #[test]
+    fn energy_estimate_is_positive_deterministic_and_target_specific() {
+        let m = gemm_like();
+        let lk = LoweredKernel::lower(&m.kernels[0], &m);
+        let mut per_target = Vec::new();
+        for t in Target::all() {
+            let cb = lk.estimate((512, 1), &t, UNKNOWN_TRIPS_DEFAULT);
+            let e = estimate_energy_uj(&cb, (512, 1), &t);
+            assert!(e.is_finite() && e > 0.0, "{}", t.name);
+            // same breakdown, same tables → bit-identical energy
+            assert_eq!(e.to_bits(), estimate_energy_uj(&cb, (512, 1), &t).to_bits());
+            // static power alone puts a floor under it
+            assert!(e > t.e_static_w * cb.time_us * 0.999, "{}", t.name);
+            per_target.push(e);
+        }
+        assert_ne!(per_target[0].to_bits(), per_target[1].to_bits());
+    }
+
+    #[test]
+    fn code_size_counts_the_priced_program() {
+        let m = gemm_like();
+        let mut lk = LoweredKernel::lower(&m.kernels[0], &m);
+        for t in Target::all() {
+            let sz = lk.code_size(&t);
+            assert!(sz > 0.0, "{}", t.name);
+            // feedback on counts the allocated rendering (spills included)
+            assert_eq!(sz, lk.allocated(&t).prog.insts.len() as f64);
+        }
+        // feedback off falls back to the vreg program, target-independent
+        lk.set_alloc_feedback(false);
+        let nv = lk.code_size(&Target::gp104());
+        assert_eq!(nv, lk.prog.insts.len() as f64);
+        assert_eq!(nv, lk.code_size(&Target::fiji()));
     }
 }

@@ -85,6 +85,15 @@ pub struct Target {
     pub st_generic: f64,
     /// one-off overhead for an outlined loop (`loop-extract-single`)
     pub call_overhead: f64,
+    // ---- per-cycle energy (the multi-objective tables) ----
+    /// dynamic energy per ALU cycle per thread, picojoules
+    pub e_alu_pj: f64,
+    /// dynamic energy per memory cycle per thread, picojoules — DRAM/HBM
+    /// traffic dominates GPU energy, so this is the big knob
+    pub e_mem_pj: f64,
+    /// static (leakage + board) power in watts, paid per modelled
+    /// microsecond: slow code costs energy even when the datapath idles
+    pub e_static_w: f64,
 }
 
 impl Target {
@@ -127,6 +136,11 @@ impl Target {
             ld_generic: 12.0,
             st_generic: 12.0,
             call_overhead: 20.0,
+            // GDDR5X: cheap compute, expensive off-chip traffic; 16 nm
+            // FinFET keeps leakage modest
+            e_alu_pj: 1.1,
+            e_mem_pj: 6.5,
+            e_static_w: 18.0,
         }
     }
 
@@ -169,6 +183,11 @@ impl Target {
             ld_generic: 14.0,
             st_generic: 14.0,
             call_overhead: 24.0,
+            // HBM halves per-bit transfer energy but 28 nm planar leaks
+            // far more, and GCN3's datapath is hungrier per ALU cycle
+            e_alu_pj: 1.6,
+            e_mem_pj: 3.8,
+            e_static_w: 34.0,
         }
     }
 
@@ -247,6 +266,9 @@ impl Target {
             self.ld_generic,
             self.st_generic,
             self.call_overhead,
+            self.e_alu_pj,
+            self.e_mem_pj,
+            self.e_static_w,
         ] {
             fold(v.to_bits());
         }
@@ -319,6 +341,23 @@ mod tests {
         let mut t = Target::gp104();
         t.regs.gpr -= 8;
         assert_ne!(t.cost_fingerprint(), base.cost_fingerprint());
+        // ... and so does retuning the energy table (the multi-objective
+        // epoch contract: an energy recalibration strands the verdicts)
+        let mut t = Target::gp104();
+        t.e_mem_pj *= 2.0;
+        assert_ne!(t.cost_fingerprint(), base.cost_fingerprint());
+    }
+
+    #[test]
+    fn energy_tables_are_positive_and_device_specific() {
+        for t in Target::all() {
+            assert!(t.e_alu_pj > 0.0 && t.e_mem_pj > 0.0 && t.e_static_w > 0.0, "{}", t.name);
+        }
+        let nv = Target::gp104();
+        let amd = Target::fiji();
+        // HBM vs GDDR5X: Fiji moves bits cheaper but leaks more
+        assert!(amd.e_mem_pj < nv.e_mem_pj);
+        assert!(amd.e_static_w > nv.e_static_w);
     }
 
     #[test]

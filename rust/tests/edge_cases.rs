@@ -133,6 +133,48 @@ fn missing_artifact_is_an_error_not_a_panic() {
     }
 }
 
+/// Degenerate explorations report a neutral 1.0 speedup: an infinite
+/// best (every candidate failed), an infinite or NaN baseline (the
+/// baseline itself failed to price — legacy summaries), and a zero best
+/// must never divide into 0, `inf`, or NaN — a single such row would
+/// poison the report's geomean.
+#[test]
+fn best_speedup_is_neutral_on_degenerate_summaries() {
+    use phaseord::dse::{ExplorationSummary, Objective, Winner};
+    let summary = |baseline: f64, best: f64| ExplorationSummary {
+        bench: "degenerate".into(),
+        baseline_time_us: baseline,
+        baseline_energy_uj: f64::INFINITY,
+        baseline_code_size: f64::INFINITY,
+        objective: Objective::Time,
+        winner: Winner::Baseline,
+        best_time_us: best,
+        best_energy_uj: f64::INFINITY,
+        best_code_size: f64::INFINITY,
+        pareto: Vec::new(),
+        evaluations: Vec::new(),
+        n_ok: 0,
+        n_crash: 1,
+        n_invalid: 0,
+        n_timeout: 0,
+        cache_hits: 0,
+    };
+    for (baseline, best) in [
+        (100.0, f64::INFINITY),          // every candidate failed
+        (f64::INFINITY, 50.0),           // the baseline failed to price
+        (f64::INFINITY, f64::INFINITY),  // both
+        (f64::NAN, 50.0),                // unpriceable baseline
+        (100.0, 0.0),                    // a zero-cost artifact must not blow up
+        (100.0, -1.0),                   // defensive: negative never divides
+    ] {
+        let s = summary(baseline, best).best_speedup();
+        assert_eq!(s.to_bits(), 1.0f64.to_bits(), "({baseline}, {best}) → {s}");
+    }
+    // and the healthy path still divides
+    let s = summary(100.0, 50.0).best_speedup();
+    assert_eq!(s.to_bits(), 2.0f64.to_bits());
+}
+
 /// Empty sequence through the full CLI plumbing equals baseline.
 #[test]
 fn cli_parse_roundtrip() {

@@ -8,8 +8,8 @@
 
 use phaseord::bench_suite::benchmark_by_name;
 use phaseord::dse::engine::{self, CacheShards, EvalContext, Scheduler};
-use phaseord::dse::shard::{merge_shards, ShardRun, ShardSpec, StreamSpec};
-use phaseord::dse::{ExplorationSummary, Explorer, SeqGen};
+use phaseord::dse::shard::{merge_shards, merge_shards_obj, ShardRun, ShardSpec, StreamSpec};
+use phaseord::dse::{ExplorationSummary, Explorer, Objective, SeqGen};
 use phaseord::proptest_lite::check;
 use phaseord::sim::Target;
 use phaseord::util::{Json, Rng};
@@ -17,16 +17,17 @@ use phaseord::util::{Json, Rng};
 fn assert_bit_identical(a: &ExplorationSummary, b: &ExplorationSummary) {
     assert_eq!(a.bench, b.bench);
     assert_eq!(a.winner, b.winner, "{}: winners differ", a.bench);
+    assert_eq!(a.objective, b.objective, "{}: objectives differ", a.bench);
     assert_eq!(
-        a.baseline_time_us.to_bits(),
-        b.baseline_time_us.to_bits(),
-        "{}: baseline time differs",
+        a.baseline_obj().bits(),
+        b.baseline_obj().bits(),
+        "{}: baseline vector differs",
         a.bench
     );
     assert_eq!(
-        a.best_time_us.to_bits(),
-        b.best_time_us.to_bits(),
-        "{}: best time differs",
+        a.best_obj().bits(),
+        b.best_obj().bits(),
+        "{}: best vector differs",
         a.bench
     );
     assert_eq!(
@@ -35,13 +36,18 @@ fn assert_bit_identical(a: &ExplorationSummary, b: &ExplorationSummary) {
         "{}: outcome buckets differ",
         a.bench
     );
+    assert_eq!(a.pareto.len(), b.pareto.len(), "{}: front sizes differ", a.bench);
+    for (i, (p, q)) in a.pareto.iter().zip(&b.pareto).enumerate() {
+        assert_eq!(p.winner, q.winner, "{} front point {i}: carrier", a.bench);
+        assert_eq!(p.obj.bits(), q.obj.bits(), "{} front point {i}: vector", a.bench);
+    }
     assert_eq!(a.evaluations.len(), b.evaluations.len());
     for (i, (x, y)) in a.evaluations.iter().zip(&b.evaluations).enumerate() {
         assert_eq!(x.status, y.status, "{} eval {i}", a.bench);
         assert_eq!(
-            x.time_us.to_bits(),
-            y.time_us.to_bits(),
-            "{} eval {i}: time",
+            x.obj().bits(),
+            y.obj().bits(),
+            "{} eval {i}: measured vector",
             a.bench
         );
         assert_eq!(x.ptx_hash, y.ptx_hash, "{} eval {i}: ptx hash", a.bench);
@@ -332,6 +338,122 @@ fn descriptor_form_merge_is_bit_identical_to_full_stream_merge() {
     let got_mixed = merge_shards(&mixed).unwrap();
     for (a, b) in want.iter().zip(&got_mixed) {
         assert_bit_identical(a, b);
+    }
+}
+
+/// The `--objective time` golden: the objective-parameterized fold is
+/// bit-identical to the legacy scalar entry points — same winners, same
+/// vectors, same attribution — so growing the measurement from a scalar
+/// to a (time, energy, size) vector changed no time-objective output.
+#[test]
+fn time_objective_is_bit_identical_to_the_legacy_scalar_fold() {
+    let benches: Vec<_> = ["GEMM", "ATAX"]
+        .iter()
+        .map(|n| benchmark_by_name(n).unwrap())
+        .collect();
+    let stream = SeqGen::stream(0x0B1, 24);
+    let t = Target::gp104();
+    let legacy = engine::explore_all(&benches, &stream, &t, 2);
+
+    let ctxs = engine::build_contexts(&benches, &t, 2);
+    let caches: Vec<CacheShards> = ctxs.iter().map(|_| CacheShards::new()).collect();
+    let parts: Vec<(&EvalContext, &CacheShards)> = ctxs.iter().zip(caches.iter()).collect();
+    let timed = engine::explore_pairs_obj(&parts, &stream, 2, Objective::Time);
+    assert_eq!(legacy.len(), timed.len());
+    for (a, b) in legacy.iter().zip(&timed) {
+        assert_eq!(b.objective, Objective::Time);
+        assert_bit_identical(a, b);
+    }
+    // whatever the objective, the headline time column is the winner's
+    // time component — the paper's tables never change meaning
+    for objective in Objective::all() {
+        let caches: Vec<CacheShards> = ctxs.iter().map(|_| CacheShards::new()).collect();
+        let parts: Vec<(&EvalContext, &CacheShards)> = ctxs.iter().zip(caches.iter()).collect();
+        for s in engine::explore_pairs_obj(&parts, &stream, 2, objective) {
+            assert_eq!(s.best_time_us.to_bits(), s.best_obj().time_us.to_bits());
+        }
+    }
+}
+
+/// Recursively drop `keys` from every JSON object — used to fabricate a
+/// faithful pre-vector (scalar `time_us`-only) shard file from a current
+/// one.
+fn strip_keys(j: &Json, keys: &[&str]) -> Json {
+    match j {
+        Json::Obj(fields) => Json::Obj(
+            fields
+                .iter()
+                .filter(|(k, _)| !keys.contains(&k.as_str()))
+                .map(|(k, v)| (k.clone(), strip_keys(v, keys)))
+                .collect(),
+        ),
+        Json::Arr(items) => Json::Arr(items.iter().map(|v| strip_keys(v, keys)).collect()),
+        other => other.clone(),
+    }
+}
+
+/// Scalar-era shard files — no `energy_uj`/`code_size` on evaluations,
+/// no baseline energy/size — still parse: the missing components upgrade
+/// to `INFINITY` 1-vectors, a time-objective merge reproduces the legacy
+/// summaries exactly, and re-emitting writes the vector schema.
+#[test]
+fn scalar_era_shard_json_upgrades_and_merges_bit_identically_on_time() {
+    let benches = vec![benchmark_by_name("GEMM").unwrap()];
+    let stream = SeqGen::stream(0x01D, 16);
+    let t = Target::gp104();
+
+    let ctxs = engine::build_contexts(&benches, &t, 2);
+    let caches: Vec<CacheShards> = ctxs.iter().map(|_| CacheShards::new()).collect();
+    let parts: Vec<(&EvalContext, &CacheShards)> = ctxs.iter().zip(caches.iter()).collect();
+    let run = ShardRun::execute(
+        &parts,
+        &stream,
+        ShardSpec::new(1, 1).unwrap(),
+        2,
+        "nvidia-gp104",
+        0x01D,
+        false,
+        &["interpreter"],
+    );
+    let modern = run.to_json();
+    let legacy_text =
+        strip_keys(&modern, &["energy_uj", "code_size", "baseline_energy_uj", "baseline_code_size"])
+            .to_string();
+    assert!(!legacy_text.contains("energy_uj"), "the fabricated v2 file is scalar-only");
+
+    let reread = ShardRun::from_json(&Json::parse(&legacy_text).unwrap()).unwrap();
+    assert!(
+        reread.benches[0].baseline_energy_uj.is_infinite()
+            && reread.benches[0].baseline_code_size.is_infinite(),
+        "missing baseline components upgrade to the unmeasured 1-vector"
+    );
+    assert!(reread
+        .benches[0]
+        .items
+        .iter()
+        .all(|(_, e)| e.energy_uj.is_infinite() && e.code_size.is_infinite()));
+    // re-emitting a parsed legacy file writes the vector schema
+    assert!(reread.to_json().to_string().contains("\"energy_uj\""));
+
+    // the time fold over the upgraded file matches the modern one on
+    // everything the scalar era defined (winner, times, buckets, evals)
+    let want = merge_shards(&[ShardRun::from_json(&modern).unwrap()]).unwrap();
+    let got = merge_shards_obj(&[reread], Objective::Time).unwrap();
+    assert_eq!(want.len(), got.len());
+    for (a, b) in want.iter().zip(&got) {
+        assert_eq!(a.winner, b.winner);
+        assert_eq!(a.baseline_time_us.to_bits(), b.baseline_time_us.to_bits());
+        assert_eq!(a.best_time_us.to_bits(), b.best_time_us.to_bits());
+        assert_eq!(
+            (a.n_ok, a.n_crash, a.n_invalid, a.n_timeout, a.cache_hits),
+            (b.n_ok, b.n_crash, b.n_invalid, b.n_timeout, b.cache_hits)
+        );
+        for (x, y) in a.evaluations.iter().zip(&b.evaluations) {
+            assert_eq!(x.status, y.status);
+            assert_eq!(x.time_us.to_bits(), y.time_us.to_bits());
+            assert_eq!(x.ptx_hash, y.ptx_hash);
+            assert_eq!(x.cached, y.cached);
+        }
     }
 }
 

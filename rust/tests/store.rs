@@ -42,9 +42,9 @@ fn assert_bit_identical(a: &ExplorationSummary, b: &ExplorationSummary) {
     for (i, (x, y)) in a.evaluations.iter().zip(&b.evaluations).enumerate() {
         assert_eq!(x.status, y.status, "{} eval {i}", a.bench);
         assert_eq!(
-            x.time_us.to_bits(),
-            y.time_us.to_bits(),
-            "{} eval {i}: time",
+            x.obj().bits(),
+            y.obj().bits(),
+            "{} eval {i}: measured vector",
             a.bench
         );
         assert_eq!(x.ptx_hash, y.ptx_hash, "{} eval {i}: ptx hash", a.bench);
@@ -209,6 +209,93 @@ fn cost_table_epoch_invalidates_only_verdict_cells() {
     let reference = explore(&ref_ctxs, &ref_caches, &stream, 1);
     for (a, b2) in reference.iter().zip(&got) {
         assert_bit_identical(a, b2);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Energy-table epoch granularity across devices: the per-target energy
+/// coefficients are folded into `Target::cost_fingerprint`, so retuning
+/// ONE device's table strands exactly that device's verdict column — the
+/// sibling device's column and the (energy-independent) sequence memos
+/// stay warm — and the stranded column re-measures with exactly one
+/// representative compile per distinct artifact.
+#[test]
+fn energy_retune_strands_only_that_devices_verdict_column() {
+    use std::collections::HashSet;
+
+    let dir = tmp_dir("energy-epoch");
+    let b = benchmark_by_name("GEMM").unwrap();
+    let gp = Target::gp104();
+    let fj = Target::fiji();
+    let stream: Vec<Vec<&'static str>> =
+        vec![vec![], vec!["cfl-anders-aa"], vec!["licm"], vec!["cfl-anders-aa", "licm"]];
+
+    // cold: both devices price the stream into ONE shared cache, so the
+    // persisted table carries a verdict column per device
+    let cx_gp = EvalContext::new(&b, gp.clone(), engine::golden_from_interpreter(&b));
+    let cx_fj = EvalContext::new(&b, fj.clone(), engine::golden_from_interpreter(&b));
+    let cache = CacheShards::new();
+    let evals_gp: Vec<_> = stream.iter().map(|s| cx_gp.evaluate(s, &cache)).collect();
+    let evals_fj: Vec<_> = stream.iter().map(|s| cx_fj.evaluate(s, &cache)).collect();
+    assert!(evals_gp.iter().all(|e| e.status.is_ok()), "the stream must price cleanly");
+    let distinct_gp: HashSet<u64> = evals_gp.iter().map(|e| e.ptx_hash).collect();
+    let distinct_fj: HashSet<u64> = evals_fj.iter().map(|e| e.ptx_hash).collect();
+    let store = Store::with_targets(&dir, vec![gp.clone(), fj.clone()]);
+    let generation = store.bump_generation().unwrap();
+    store.persist(&b, &cache, generation).unwrap();
+
+    // retune one energy coefficient on gp104 only
+    let mut hot = Target::gp104();
+    hot.e_alu_pj *= 4.0;
+    let hot_store = Store::with_targets(&dir, vec![hot.clone(), fj.clone()]);
+    let cache2 = CacheShards::new();
+    let stats = hot_store.warm(&b, &cache2);
+    assert!(stats.seq_loaded > 0, "sequence memos are energy-independent");
+    assert_eq!(stats.seq_stale, 0);
+    assert_eq!(
+        stats.verdict_stale,
+        distinct_gp.len(),
+        "exactly the retuned device's column is stranded"
+    );
+    assert_eq!(
+        stats.verdict_loaded,
+        distinct_fj.len(),
+        "the sibling device's column survives in full"
+    );
+
+    // the sibling replays its whole stream without a single compile
+    let cx_fj2 = EvalContext::new(&b, fj.clone(), engine::golden_from_interpreter(&b));
+    let before = cx_fj2.compiler().compile_count();
+    for seq in &stream {
+        cx_fj2.evaluate(seq, &cache2);
+    }
+    assert_eq!(
+        cx_fj2.compiler().compile_count() - before,
+        0,
+        "fiji's verdicts were untouched by gp104's retune"
+    );
+
+    // the retuned device re-measures: one representative compile per
+    // distinct artifact (the sequence memos still map order -> artifact)
+    let cx_hot = EvalContext::new(&b, hot.clone(), engine::golden_from_interpreter(&b));
+    let before = cx_hot.compiler().compile_count();
+    let hot_evals: Vec<_> = stream.iter().map(|s| cx_hot.evaluate(s, &cache2)).collect();
+    assert_eq!(
+        cx_hot.compiler().compile_count() - before,
+        distinct_gp.len() as u64,
+        "one representative compile per stranded artifact"
+    );
+    // the retune is observable (4x ALU energy must raise modelled energy)
+    // and the partially-warm verdicts are bit-identical to a cold run on
+    // the retuned device
+    assert!(hot_evals[0].energy_uj > evals_gp[0].energy_uj);
+    let cx_ref = EvalContext::new(&b, hot, engine::golden_from_interpreter(&b));
+    let ref_cache = CacheShards::new();
+    for (seq, got) in stream.iter().zip(&hot_evals) {
+        let want = cx_ref.evaluate(seq, &ref_cache);
+        assert_eq!(want.status, got.status);
+        assert_eq!(want.obj().bits(), got.obj().bits());
+        assert_eq!(want.ptx_hash, got.ptx_hash);
     }
     let _ = std::fs::remove_dir_all(&dir);
 }
