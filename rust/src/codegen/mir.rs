@@ -496,6 +496,36 @@ pub fn lower_mir(f: &Function, m: &Module) -> MirFunction {
                         );
                     }
                 }
+                Op::AtomAdd | Op::AtomMax => {
+                    let class = classify(f, m, inst.args()[0]);
+                    let space = space_str(class);
+                    let mn = if inst.op == Op::AtomAdd { "add" } else { "max" };
+                    if let Some((base, off)) = fold_ptr(inst.args()[0]) {
+                        push(
+                            PtxKind::Atom(class),
+                            vec![
+                                MirTok::Lit(format!("atom.{space}.{mn}.f32 ")),
+                                MirTok::Def(i.0),
+                                lit(", ["),
+                                operand(Some(base)),
+                                MirTok::Lit(format!("+{off}], ")),
+                                arg(1),
+                            ],
+                        );
+                    } else {
+                        push(
+                            PtxKind::Atom(class),
+                            vec![
+                                MirTok::Lit(format!("atom.{space}.{mn}.f32 ")),
+                                MirTok::Def(i.0),
+                                lit(", ["),
+                                arg(0),
+                                lit("], "),
+                                arg(1),
+                            ],
+                        );
+                    }
+                }
                 Op::Alloca => {
                     // materializes as depot pointer arithmetic
                     push(

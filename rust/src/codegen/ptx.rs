@@ -43,6 +43,11 @@ pub enum PtxKind {
     /// paired `ld.v2` (counts one transaction for two values)
     LdV2(MemClass),
     St(MemClass),
+    /// atomic read-modify-write (`atom.add`/`atom.max`): the class
+    /// carries the contention shape — `Broadcast` means every lane hits
+    /// the same address (full serialization), `Coalesced` distinct
+    /// adjacent addresses, `Strided` distinct scattered ones.
+    Atom(MemClass),
     Ret,
 }
 
@@ -291,7 +296,7 @@ pub(crate) fn find_pairs(f: &Function, bb: BlockId) -> Vec<InstId> {
     for &i in ids {
         let inst = f.inst(i);
         match inst.op {
-            Op::Store => prev_loads.clear(),
+            Op::Store | Op::AtomAdd | Op::AtomMax => prev_loads.clear(),
             Op::Load => {
                 let mut cx = AffineCtx::new(f);
                 let loc = MemLoc::resolve(&mut cx, inst.args()[0]);

@@ -6,10 +6,11 @@
 //!                 [--verify-each] [--shard I/N] [--emit-summary PATH]
 //!                 [--strategy fixed|permute|hillclimb|knn] [--budget N]
 //!                 [--k K] [--seq p1,p2,...] [--store DIR] [--max-mb N]
-//!                 [--objective time|energy|size|pareto]
+//!                 [--objective time|energy|size|pareto] [--per-kernel]
+//!                 [--family F]
 //!
-//! commands: explore merge transfer serve cache lower fig2 table1 fig3
-//!           fig4 fig5 fig6 fig7 problems amd all passes targets
+//! commands: explore merge transfer serve cache bench lower fig2 table1
+//!           fig3 fig4 fig5 fig6 fig7 problems amd all passes targets
 //! ```
 //!
 //! `explore` runs the DSE under the selected search strategy
@@ -54,6 +55,10 @@ pub struct CliArgs {
     pub cache_action: String,
     /// `--max-mb N`: the `cache gc` size budget (default 256)
     pub max_mb: Option<u64>,
+    /// `bench`'s positional action (only `list` for now)
+    pub bench_action: String,
+    /// `--family F`: restrict `bench list` to one benchmark family
+    pub family: Option<String>,
 }
 
 pub fn parse_args(argv: &[String]) -> Result<CliArgs, String> {
@@ -66,6 +71,8 @@ pub fn parse_args(argv: &[String]) -> Result<CliArgs, String> {
     let mut lower_seq: Option<Vec<&'static str>> = None;
     let mut cache_action = String::new();
     let mut max_mb = None;
+    let mut bench_action = String::new();
+    let mut family = None;
     let (mut strategy_set, mut budget_set, mut k_set, mut seqs_set) = (false, false, false, false);
     let mut target_set = false;
     let mut objective_set = false;
@@ -188,6 +195,13 @@ pub fn parse_args(argv: &[String]) -> Result<CliArgs, String> {
                         .map_err(|e| format!("--max-mb: {e}"))?,
                 )
             }
+            "--per-kernel" => cfg.per_kernel = true,
+            "--bench" => {
+                cfg.only = Some(it.next().ok_or("--bench needs a benchmark name")?.to_string())
+            }
+            "--family" => {
+                family = Some(it.next().ok_or("--family needs a value")?.to_string())
+            }
             "--help" | "-h" => return Err(usage()),
             flag if flag.starts_with("--") => return Err(format!("unknown flag {flag}\n{}", usage())),
             cmd if command.is_empty() => command = cmd.to_string(),
@@ -195,6 +209,9 @@ pub fn parse_args(argv: &[String]) -> Result<CliArgs, String> {
             extra if command == "lower" && bench.is_empty() => bench = extra.to_string(),
             extra if command == "cache" && cache_action.is_empty() => {
                 cache_action = extra.to_string()
+            }
+            extra if command == "bench" && bench_action.is_empty() => {
+                bench_action = extra.to_string()
             }
             extra => return Err(format!("unexpected argument {extra}\n{}", usage())),
         }
@@ -297,6 +314,43 @@ pub fn parse_args(argv: &[String]) -> Result<CliArgs, String> {
     if max_mb.is_some() && !(command == "cache" && cache_action == "gc") {
         return Err(format!("--max-mb only applies to cache gc\n{}", usage()));
     }
+    if cfg.per_kernel {
+        if command != "explore" {
+            return Err(format!("--per-kernel only applies to explore\n{}", usage()));
+        }
+        if cfg.strategy != StrategyKind::Fixed {
+            return Err(
+                "--per-kernel requires --strategy fixed: the per-kernel search prices \
+                 the shared stream's validated sequences, which adaptive strategies do \
+                 not have"
+                    .to_string(),
+            );
+        }
+        if cfg.shard.is_some() {
+            return Err(
+                "--per-kernel needs the whole grid's verdicts in one process; \
+                 drop --shard (run it on the unsharded explore)"
+                    .to_string(),
+            );
+        }
+    }
+    if let Some(name) = &cfg.only {
+        if command != "explore" {
+            return Err(format!("--bench only applies to explore\n{}", usage()));
+        }
+        if crate::bench_suite::benchmark_by_name(name).is_none() {
+            return Err(crate::bench_suite::unknown_benchmark_error(name));
+        }
+    }
+    if command == "bench" && bench_action != "list" {
+        return Err(format!(
+            "bench needs an action: `repro bench list [--family F]`\n{}",
+            usage()
+        ));
+    }
+    if family.is_some() && command != "bench" {
+        return Err(format!("--family only applies to bench list\n{}", usage()));
+    }
     Ok(CliArgs {
         command,
         cfg,
@@ -307,17 +361,19 @@ pub fn parse_args(argv: &[String]) -> Result<CliArgs, String> {
         lower_seq,
         cache_action,
         max_mb,
+        bench_action,
+        family,
     })
 }
 
 pub fn usage() -> String {
-    "usage: repro <explore|merge|transfer|serve|cache|lower|fig2|table1|fig3|fig4|fig5|fig6|fig7|\
-     problems|amd|all|passes|targets> \
-     [--seqs N] [--seed S] [--target gp104|amd-fiji] [--perms N] [--draws N] \
+    "usage: repro <explore|merge|transfer|serve|cache|bench|lower|fig2|table1|fig3|fig4|fig5|fig6|\
+     fig7|problems|amd|all|passes|targets> \
+     [--seqs N] [--seed S] [--target gp104|amd-fiji|host] [--perms N] [--draws N] \
      [--jobs N] [--out DIR] [--full] [--verify-each] [--shard I/N] \
      [--emit-summary PATH] [--strategy fixed|permute|hillclimb|knn] \
      [--budget N] [--k K] [--seq p1,p2,...] [--store DIR] [--max-mb N] \
-     [--objective time|energy|size|pareto]\n\
+     [--objective time|energy|size|pareto] [--per-kernel] [--bench NAME] [--family F]\n\
      --jobs = evaluation worker threads (0 = all cores, the default); \
      results are bit-identical for every value\n\
      --full = the paper's protocol (10000 sequences, 1000 permutations/draws)\n\
@@ -357,6 +413,14 @@ pub fn usage() -> String {
      cache stats|gc = print the store's per-table entry counts, bytes \
      and epochs, or evict oldest-generation tables past --max-mb N \
      (default 256; requires --store DIR)\n\
+     bench list [--family F] = list the benchmark registry (name, family, \
+     dataset dims, kernel count), optionally one family only\n\
+     --per-kernel = after a fixed-stream explore, additionally search a \
+     winning order PER KERNEL of every multi-kernel benchmark and report \
+     the stitched program against the one-shared-order winner (writes \
+     per_kernel.json under --out)\n\
+     --bench NAME = restrict explore to one benchmark (case-insensitive; \
+     see `repro bench list` for the registry)\n\
      lower <bench> [--seq p1,p2,...] [--target T] = print the allocated \
      vPTX of one benchmark (optionally after a phase order) plus \
      per-kernel regs/spills/occupancy — the register-allocation debug \
@@ -440,6 +504,10 @@ pub fn run(args: CliArgs) -> Result<(), String> {
         }
         "targets" => {
             print!("{}", render_targets());
+        }
+        // `repro bench list` — the benchmark registry listing
+        "bench" => {
+            print!("{}", report::render_benches(args.family.as_deref()));
         }
         // `repro lower` — the backend debug view: allocated vPTX plus
         // the per-kernel allocation stats the cost model prices
@@ -644,6 +712,13 @@ pub fn run(args: CliArgs) -> Result<(), String> {
             } else {
                 let summaries = ctx.explore_all();
                 println!("{}", report::render_explore(&summaries, &ctx.cfg.target));
+                if ctx.cfg.per_kernel {
+                    let reports = super::experiments::per_kernel_reports(&ctx, &summaries);
+                    println!("{}", report::render_per_kernel(&reports));
+                    report::write_json(&out, "per_kernel.json", &report::per_kernel_json(&reports))
+                        .map_err(io)?;
+                    eprintln!("wrote {}", out.join("per_kernel.json").display());
+                }
                 let (seq_memos, ptx_verdicts) = ctx.cache_totals();
                 eprintln!(
                     "cache occupancy: {seq_memos} sequence memos, {ptx_verdicts} vPTX verdicts"
@@ -1020,5 +1095,55 @@ mod tests {
         // --max-mb belongs to `cache gc` alone
         assert!(parse_args(&sv(&["cache", "stats", "--store", "st", "--max-mb", "9"])).is_err());
         assert!(parse_args(&sv(&["explore", "--store", "st", "--max-mb", "9"])).is_err());
+    }
+
+    #[test]
+    fn per_kernel_flag_parses_and_is_validated() {
+        let a = parse_args(&sv(&["explore", "--per-kernel"])).unwrap();
+        assert!(a.cfg.per_kernel);
+        let a = parse_args(&sv(&["explore"])).unwrap();
+        assert!(!a.cfg.per_kernel);
+        // explore-only, fixed-stream only, unsharded only
+        assert!(parse_args(&sv(&["fig2", "--per-kernel"])).is_err());
+        assert!(parse_args(&sv(&["transfer", "--per-kernel"])).is_err());
+        assert!(
+            parse_args(&sv(&["explore", "--strategy", "hillclimb", "--per-kernel"])).is_err()
+        );
+        assert!(parse_args(&sv(&[
+            "explore", "--per-kernel", "--shard", "1/2", "--emit-summary", "x.json",
+        ]))
+        .is_err());
+    }
+
+    #[test]
+    fn bench_list_parses_and_is_validated() {
+        let a = parse_args(&sv(&["bench", "list"])).unwrap();
+        assert_eq!(a.command, "bench");
+        assert_eq!(a.bench_action, "list");
+        assert!(a.family.is_none());
+        let a = parse_args(&sv(&["bench", "list", "--family", "irregular"])).unwrap();
+        assert_eq!(a.family.as_deref(), Some("irregular"));
+        // the action is mandatory and `list` is the only one
+        assert!(parse_args(&sv(&["bench"])).is_err());
+        assert!(parse_args(&sv(&["bench", "delete"])).is_err());
+        // --family belongs to bench list alone
+        assert!(parse_args(&sv(&["explore", "--family", "irregular"])).is_err());
+        assert!(parse_args(&sv(&["bench", "list", "--family"])).is_err());
+    }
+
+    #[test]
+    fn bench_filter_parses_and_is_validated() {
+        let a = parse_args(&sv(&["explore", "--bench", "spmv"])).unwrap();
+        assert_eq!(a.cfg.only.as_deref(), Some("spmv"));
+        let a = parse_args(&sv(&["explore"])).unwrap();
+        assert!(a.cfg.only.is_none());
+        // unknown names are rejected with the grouped registry listing
+        let e = parse_args(&sv(&["explore", "--bench", "NOPE"])).unwrap_err();
+        assert!(e.contains("unknown benchmark 'NOPE'"), "{e}");
+        assert!(e.contains("irregular"), "{e}");
+        // explore-only
+        assert!(parse_args(&sv(&["transfer", "--bench", "SPMV"])).is_err());
+        assert!(parse_args(&sv(&["fig2", "--bench", "SPMV"])).is_err());
+        assert!(parse_args(&sv(&["explore", "--bench"])).is_err());
     }
 }

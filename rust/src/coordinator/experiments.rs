@@ -61,6 +61,15 @@ pub struct ExpConfig {
     /// are objective-independent, so switching it re-folds the same
     /// measurements
     pub objective: Objective,
+    /// after a fixed-stream exploration, additionally search a winning
+    /// order *per kernel* of every multi-kernel benchmark and report the
+    /// stitched program against the one-shared-order winner
+    /// (`repro explore --per-kernel`)
+    pub per_kernel: bool,
+    /// restrict the run to one benchmark (`repro explore --bench NAME`,
+    /// case-insensitive); `None` = the whole registry. Validated by the
+    /// CLI against [`crate::bench_suite::benchmark_by_name`]
+    pub only: Option<String>,
 }
 
 impl Default for ExpConfig {
@@ -79,6 +88,8 @@ impl Default for ExpConfig {
             knn_k: 3,
             store: None,
             objective: Objective::Time,
+            per_kernel: false,
+            only: None,
         }
     }
 }
@@ -111,7 +122,13 @@ pub struct ExpCtx {
 
 impl ExpCtx {
     pub fn new(cfg: ExpConfig) -> ExpCtx {
-        let benchmarks = all_benchmarks();
+        let benchmarks = match &cfg.only {
+            Some(name) => match crate::bench_suite::benchmark_by_name(name) {
+                Some(b) => vec![b],
+                None => panic!("{}", crate::bench_suite::unknown_benchmark_error(name)),
+            },
+            None => all_benchmarks(),
+        };
         let stream = SeqGen::stream(cfg.seed, cfg.n_seqs);
         let runner = GoldenRunner::from_env().ok();
         let used_pjrt = AtomicBool::new(false);
@@ -422,6 +439,213 @@ pub fn winning_sequences(summaries: &[ExplorationSummary]) -> Vec<Option<Vec<&'s
         .iter()
         .map(|s| s.winner.sequence().map(|q| q.to_vec()))
         .collect()
+}
+
+// ------------------------------------------------------------ per-kernel
+
+/// One kernel's row in a [`PerKernelReport`]: the order that minimizes
+/// *this kernel's* modelled time across the validated stream.
+#[derive(Debug, Clone)]
+pub struct PerKernelKernel {
+    /// kernel name (from the full build's module)
+    pub kernel: String,
+    /// winning order for this kernel alone (`None` = baseline)
+    pub winner: Option<Vec<&'static str>>,
+    /// this kernel's modelled time under its own winner, µs
+    pub time_us: f64,
+    /// this kernel's modelled time under the baseline (empty order), µs
+    pub baseline_time_us: f64,
+}
+
+/// `repro explore --per-kernel` outcome for one multi-kernel benchmark:
+/// per-kernel winners, the one-shared-order winner they are reported
+/// against, and the stitched program's validity.
+#[derive(Debug, Clone)]
+pub struct PerKernelReport {
+    pub bench: String,
+    /// one row per kernel, in module order
+    pub kernels: Vec<PerKernelKernel>,
+    /// the single order minimizing the *total* modelled time over the
+    /// same candidate set (`None` = baseline)
+    pub shared_winner: Option<Vec<&'static str>>,
+    /// total modelled time under the shared winner, µs
+    pub shared_time_us: f64,
+    /// total modelled time of the stitched program (Σ of per-kernel
+    /// minima) — ≤ `shared_time_us` by construction, µs
+    pub stitched_time_us: f64,
+    /// whether the stitched validation build still matches the golden
+    /// reference (kernels optimized under different orders can interact
+    /// through shared buffers; stitching must re-validate)
+    pub stitched_valid: bool,
+    /// `shared_time_us / stitched_time_us`
+    pub speedup_vs_shared: f64,
+}
+
+/// Search a winning order **per kernel** of every multi-kernel
+/// benchmark (MM2/MM3's chained matmuls, HISTO's histogram→scan, BFS's
+/// frontier ping-pong) and report it against the one-shared-order
+/// winner.
+///
+/// Candidates are the baseline (empty order) plus every stream sequence
+/// whose whole-program evaluation validated on this context's backend,
+/// deduplicated by sequence key — so the per-kernel search never crowns
+/// an order the normal pipeline rejected. Per-kernel times come from
+/// the cost-model pricing path ([`crate::sim::cost::LoweredKernel`]
+/// estimates with the baseline trip-count fallback) on **every**
+/// backend, including the host: the shared winner is re-derived from
+/// the same per-kernel sums, so the comparison is apples-to-apples and
+/// `stitched_time_us ≤ shared_time_us` holds by construction.
+///
+/// The stitched program splices each kernel's winning validation-size
+/// kernel into one module and re-validates it against the golden
+/// reference through the interpreter under the context's step budget.
+/// Requires the summaries of a fixed-stream, unsharded run (evaluation
+/// `i` must correspond to `ctx.stream[i]`) — the CLI enforces this.
+pub fn per_kernel_reports(
+    ctx: &ExpCtx,
+    summaries: &[ExplorationSummary],
+) -> Vec<PerKernelReport> {
+    use crate::bench_suite::{execute, init_buffers, outputs_match};
+    use crate::dse::evaluator::VALIDATION_TOLERANCE;
+
+    let mut reports = Vec::new();
+    for b in &ctx.benchmarks {
+        let Some(summary) = summaries.iter().find(|s| s.bench == b.name) else {
+            continue;
+        };
+        let cx = ctx.eval_context(b.name);
+        let full = cx.compiler().full_build();
+        let nk = full.module.kernels.len();
+        if nk < 2 {
+            continue;
+        }
+        let target = cx.target();
+        let trips = crate::bench_suite::baseline_max_trips(full, target);
+
+        // candidate orders: baseline first (index 0 wins ties), then the
+        // validated stream sequences, deduplicated by sequence key
+        let empty: Vec<&'static str> = Vec::new();
+        let mut seen = std::collections::HashSet::new();
+        seen.insert(EvalContext::seq_key(&empty));
+        let mut cands: Vec<&[&'static str]> = vec![&empty];
+        for (si, seq) in ctx.stream.iter().enumerate() {
+            let validated = summary
+                .evaluations
+                .get(si)
+                .map_or(false, |e| e.status.is_ok());
+            if validated && seen.insert(EvalContext::seq_key(seq)) {
+                cands.push(seq);
+            }
+        }
+
+        // phase 1: price every candidate per kernel (compile-only; the
+        // artifact is dropped so N candidates never coexist in memory)
+        let priced: Vec<Option<Vec<f64>>> = cands
+            .iter()
+            .map(|seq| {
+                let ck = cx.compile(seq).ok()?;
+                Some(
+                    ck.lowered
+                        .iter()
+                        .zip(&ck.full.kernels)
+                        .enumerate()
+                        .map(|(ki, (lk, info))| {
+                            let unknown = trips
+                                .get(ki)
+                                .copied()
+                                .unwrap_or(crate::sim::cost::UNKNOWN_TRIPS_DEFAULT);
+                            lk.estimate(info.grid, target, unknown).time_us
+                                * info.repeat as f64
+                                * ck.full.seq_repeat as f64
+                        })
+                        .collect(),
+                )
+            })
+            .collect();
+        let Some(base_times) = priced[0].clone() else {
+            continue; // baseline must compile; defensive
+        };
+
+        // phase 2: fold winners — shared = argmin of the total, kernel k
+        // = argmin of component k (strict <, so earlier candidates win
+        // ties and the baseline wins an all-tie)
+        let mut shared_i = 0usize;
+        let mut shared_total = f64::INFINITY;
+        let mut kernel_i = vec![0usize; nk];
+        let mut kernel_t = vec![f64::INFINITY; nk];
+        for (ci, times) in priced.iter().enumerate() {
+            let Some(times) = times else { continue };
+            let total: f64 = times.iter().sum();
+            if total < shared_total {
+                shared_total = total;
+                shared_i = ci;
+            }
+            for k in 0..nk {
+                if times[k] < kernel_t[k] {
+                    kernel_t[k] = times[k];
+                    kernel_i[k] = ci;
+                }
+            }
+        }
+
+        // phase 3: stitch — recompile only the distinct winners and
+        // splice each kernel's winning validation-size kernel into one
+        // module, then re-validate against the golden reference
+        let mut stitched = cx.compiler().small_build().clone();
+        let mut by_cand: HashMap<usize, Vec<usize>> = HashMap::new();
+        for (k, &ci) in kernel_i.iter().enumerate() {
+            by_cand.entry(ci).or_default().push(k);
+        }
+        let mut stitch_ok = true;
+        for (&ci, ks) in &by_cand {
+            match cx.compile(cands[ci]) {
+                Ok(ck) => {
+                    for &k in ks {
+                        stitched.module.kernels[k] = ck.small.module.kernels[k].clone();
+                    }
+                }
+                Err(_) => stitch_ok = false,
+            }
+        }
+        let stitched_valid = stitch_ok && {
+            let mut bufs = init_buffers(&stitched);
+            match execute(&stitched, &mut bufs, cx.step_limit()) {
+                Ok(_) => outputs_match(&stitched, &bufs, cx.golden(), VALIDATION_TOLERANCE),
+                Err(_) => false,
+            }
+        };
+
+        let winner_of = |ci: usize| -> Option<Vec<&'static str>> {
+            if ci == 0 {
+                None
+            } else {
+                Some(cands[ci].to_vec())
+            }
+        };
+        let stitched_time_us: f64 = kernel_t.iter().sum();
+        let kernels = (0..nk)
+            .map(|k| PerKernelKernel {
+                kernel: full.module.kernels[k].name.clone(),
+                winner: winner_of(kernel_i[k]),
+                time_us: kernel_t[k],
+                baseline_time_us: base_times[k],
+            })
+            .collect();
+        reports.push(PerKernelReport {
+            bench: b.name.to_string(),
+            kernels,
+            shared_winner: winner_of(shared_i),
+            shared_time_us: shared_total,
+            stitched_time_us,
+            stitched_valid,
+            speedup_vs_shared: if stitched_time_us > 0.0 {
+                shared_total / stitched_time_us
+            } else {
+                1.0
+            },
+        });
+    }
+    reports
 }
 
 // ------------------------------------------------------------ §3.1 transfer
@@ -951,7 +1175,7 @@ mod tests {
         // run the full pipeline on a tiny stream; verify invariants
         let mut ctx = tiny_ctx();
         let rows = fig2_table1(&mut ctx);
-        assert_eq!(rows.len(), 15);
+        assert_eq!(rows.len(), 19);
         for r in &rows {
             assert!(r.t_phase_us <= r.t_llvm_us * 1.0001, "{}", r.bench);
             assert!(r.speedup_over_opencl() >= 0.99, "{}", r.bench);

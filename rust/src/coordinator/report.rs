@@ -5,9 +5,10 @@ use std::fs;
 use std::path::Path;
 
 use super::experiments::{
-    fig2_geomeans, winner_alloc_info, Fig2Row, Fig3Matrix, Fig4Scatter, Fig7Result, ProblemStats,
-    TransferMatrix,
+    fig2_geomeans, winner_alloc_info, Fig2Row, Fig3Matrix, Fig4Scatter, Fig7Result,
+    PerKernelReport, ProblemStats, TransferMatrix,
 };
+use crate::bench_suite::{all_benchmarks, Benchmark, Dims, Variant};
 use crate::dse::store::{GcReport, StoreStats, WarmStats, RUN_SCHEMA};
 use crate::dse::strategy::{histogram, PermutationStudy};
 use crate::dse::{ExplorationSummary, Objective};
@@ -150,6 +151,152 @@ pub fn render_pareto(summaries: &[ExplorationSummary]) -> String {
 /// output; each element round-trips via [`ExplorationSummary::from_json`]).
 pub fn summaries_json(summaries: &[ExplorationSummary]) -> Json {
     Json::Arr(summaries.iter().map(|s| s.to_json()).collect())
+}
+
+// ----------------------------------------------------- per-kernel
+
+fn seq_label(seq: Option<&[&'static str]>) -> String {
+    match seq {
+        None => "(baseline)".to_string(),
+        Some(seq) => seq.iter().map(|p| format!("-{p}")).collect::<Vec<_>>().join(" "),
+    }
+}
+
+/// The `repro explore --per-kernel` appendix: each multi-kernel
+/// benchmark's per-kernel winners, reported against the one-shared-order
+/// winner over the same candidate set.
+pub fn render_per_kernel(reports: &[PerKernelReport]) -> String {
+    if reports.is_empty() {
+        return "per-kernel: no multi-kernel benchmark in this run\n".to_string();
+    }
+    let mut s = String::from(
+        "per-kernel winners — one order per kernel vs one shared order \
+         (modelled time, µs):\n",
+    );
+    for r in reports {
+        s.push_str(&format!(
+            "{}: shared {:.1} -> stitched {:.1} ({:.2}x, {})\n",
+            r.bench,
+            r.shared_time_us,
+            r.stitched_time_us,
+            r.speedup_vs_shared,
+            if r.stitched_valid { "validates" } else { "INVALID" }
+        ));
+        s.push_str(&format!(
+            "  shared winner: {}\n",
+            seq_label(r.shared_winner.as_deref())
+        ));
+        for k in &r.kernels {
+            s.push_str(&format!(
+                "  {:16} {:>10.1} -> {:>10.1}  {}\n",
+                k.kernel,
+                k.baseline_time_us,
+                k.time_us,
+                seq_label(k.winner.as_deref())
+            ));
+        }
+    }
+    s
+}
+
+/// The `repro explore --per-kernel` JSON dump
+/// (`results/per_kernel.json`): one entry per multi-kernel benchmark;
+/// `null` winners mean the baseline won (same convention as
+/// `best_seq` in the fig2 dump).
+pub fn per_kernel_json(reports: &[PerKernelReport]) -> Json {
+    fn seq_json(w: Option<&[&'static str]>) -> Json {
+        match w {
+            None => Json::Null,
+            Some(seq) => Json::Arr(seq.iter().map(|p| Json::s(*p)).collect()),
+        }
+    }
+    Json::Obj(vec![(
+        "per_kernel".into(),
+        Json::Arr(
+            reports
+                .iter()
+                .map(|r| {
+                    Json::Obj(vec![
+                        ("bench".into(), Json::s(&r.bench)),
+                        (
+                            "kernels".into(),
+                            Json::Arr(
+                                r.kernels
+                                    .iter()
+                                    .map(|k| {
+                                        Json::Obj(vec![
+                                            ("kernel".into(), Json::s(&k.kernel)),
+                                            ("winner".into(), seq_json(k.winner.as_deref())),
+                                            ("time_us".into(), Json::n(k.time_us)),
+                                            (
+                                                "baseline_time_us".into(),
+                                                Json::n(k.baseline_time_us),
+                                            ),
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                        ("shared_winner".into(), seq_json(r.shared_winner.as_deref())),
+                        ("shared_time_us".into(), Json::n(r.shared_time_us)),
+                        ("stitched_time_us".into(), Json::n(r.stitched_time_us)),
+                        ("stitched_valid".into(), Json::Bool(r.stitched_valid)),
+                        ("speedup_vs_shared".into(), Json::n(r.speedup_vs_shared)),
+                    ])
+                })
+                .collect(),
+        ),
+    )])
+}
+
+// ----------------------------------------------------- bench list
+
+fn fmt_dims(d: &Dims) -> String {
+    if d.tmax > 1 {
+        format!("{}x{}x{}t", d.n, d.m, d.tmax)
+    } else {
+        format!("{}x{}", d.n, d.m)
+    }
+}
+
+/// The `repro bench list [--family F]` table: every registered
+/// benchmark's name, family, dataset dims and kernel count (from the
+/// validation-size build — kernel structure is dims-independent).
+pub fn render_benches(family: Option<&str>) -> String {
+    let benches: Vec<Benchmark> = all_benchmarks()
+        .into_iter()
+        .filter(|b| family.map_or(true, |f| b.family.eq_ignore_ascii_case(f)))
+        .collect();
+    if benches.is_empty() {
+        let mut fams: Vec<&str> = Vec::new();
+        for b in all_benchmarks() {
+            if !fams.contains(&b.family) {
+                fams.push(b.family);
+            }
+        }
+        return format!(
+            "no benchmarks in family '{}'; valid families: {}\n",
+            family.unwrap_or(""),
+            fams.join(", ")
+        );
+    }
+    let mut s = format!(
+        "{:10} {:>16} {:>14} {:>12} {:>7}\n",
+        "bench", "family", "full dims", "small dims", "kernels"
+    );
+    for b in &benches {
+        let built = b.build_small(Variant::OpenCl);
+        s.push_str(&format!(
+            "{:10} {:>16} {:>14} {:>12} {:>7}\n",
+            b.name,
+            b.family,
+            fmt_dims(&b.dims_full),
+            fmt_dims(&b.dims_small),
+            built.module.kernels.len()
+        ));
+    }
+    s.push_str(&format!("{} benchmark(s)\n", benches.len()));
+    s
 }
 
 // ----------------------------------------------------- artifact store
@@ -623,6 +770,7 @@ pub fn fig7_json(f: &Fig7Result) -> Json {
 
 #[cfg(test)]
 mod tests {
+    use super::super::experiments::PerKernelKernel;
     use super::*;
 
     fn row(bench: &str, best_seq: Option<Vec<&'static str>>, t_phase_us: f64) -> Fig2Row {
@@ -786,6 +934,59 @@ mod tests {
         assert!(s.contains("(baseline)"), "{s}");
         assert!(s.contains("-licm"), "{s}");
         assert!(s.contains("50.0us") && s.contains("400.0uJ"), "{s}");
+    }
+
+    #[test]
+    fn per_kernel_report_renders_and_dumps() {
+        let r = PerKernelReport {
+            bench: "HISTO".into(),
+            kernels: vec![
+                PerKernelKernel {
+                    kernel: "histo_count".into(),
+                    winner: Some(vec!["licm"]),
+                    time_us: 8.0,
+                    baseline_time_us: 12.0,
+                },
+                PerKernelKernel {
+                    kernel: "histo_scan".into(),
+                    winner: None,
+                    time_us: 5.0,
+                    baseline_time_us: 5.0,
+                },
+            ],
+            shared_winner: Some(vec!["licm"]),
+            shared_time_us: 14.0,
+            stitched_time_us: 13.0,
+            stitched_valid: true,
+            speedup_vs_shared: 14.0 / 13.0,
+        };
+        let s = render_per_kernel(&[r.clone()]);
+        assert!(s.contains("HISTO"), "{s}");
+        assert!(s.contains("-licm"), "{s}");
+        assert!(s.contains("(baseline)"), "{s}");
+        assert!(s.contains("validates"), "{s}");
+        let j = per_kernel_json(&[r]).to_string();
+        assert!(j.contains("\"winner\":null"), "{j}");
+        let back = Json::parse(&j).unwrap();
+        let arr = back.get("per_kernel").and_then(|a| a.as_arr()).unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(
+            arr[0].get("stitched_valid").and_then(|v| v.as_bool()),
+            Some(true)
+        );
+        assert!(render_per_kernel(&[]).contains("no multi-kernel"));
+    }
+
+    #[test]
+    fn bench_list_renders_and_filters_by_family() {
+        let all = render_benches(None);
+        assert!(all.contains("GEMM") && all.contains("SPMV"), "{all}");
+        assert!(all.contains("19 benchmark(s)"), "{all}");
+        let irr = render_benches(Some("irregular"));
+        assert!(irr.contains("SPMV") && !irr.contains("GEMM"), "{irr}");
+        assert!(irr.contains("4 benchmark(s)"), "{irr}");
+        let none = render_benches(Some("nope"));
+        assert!(none.contains("valid families"), "{none}");
     }
 
     #[test]

@@ -14,18 +14,23 @@
 //!
 //! ```text
 //! {"op":"ping"}
-//! {"op":"explore","seqs":N,"seed":S,"target":"gp104","jobs":J,"objective":"time"}
+//! {"op":"explore","seqs":N,"seed":S,"target":"gp104","bench":"GEMM","jobs":J,"objective":"time"}
 //! {"op":"transfer","seqs":N,"seed":S}
 //! {"op":"stats"}
 //! {"op":"shutdown"}
 //! ```
 //!
-//! `seed` is accepted as a JSON number or a `"0x…"` hex string. Every
+//! `seed` is accepted as a JSON number or a `"0x…"` hex string; an
+//! explore query's optional `"bench"` restricts the run to one
+//! benchmark (case-insensitive). Every
 //! response carries `"ok"`; explore responses add the summaries (bit-
 //! identical to a cold batch run of the same stream) and per-query
 //! `stats` — evaluations, warm-served count, and the compile count
-//! (zero once the store covers the stream). A malformed request gets
-//! `{"ok":false,"error":…}` and the loop continues; EOF or `shutdown`
+//! (zero once the store covers the stream). A malformed request, an
+//! unknown device, or an unknown benchmark gets
+//! `{"ok":false,"error":…}` and the loop continues with every warm
+//! context intact — bad input is judged before any context is built or
+//! touched; EOF or `shutdown`
 //! ends it. Misses are distributed the usual way: shard descriptor
 //! files (`StreamSpec::Seeded`) stay the wire format, and `repro merge
 //! --store` folds shard results back into the same store this daemon
@@ -172,6 +177,15 @@ fn handle(
                 .unwrap_or(cfg.target.name);
             let target =
                 Target::by_name(tname).ok_or_else(|| format!("unknown target {tname:?}"))?;
+            // validate the optional benchmark restriction before any
+            // context is built or touched, so a bad query cannot
+            // disturb the warm state
+            let bench_filter = q.get("bench").and_then(|v| v.as_str());
+            if let Some(name) = bench_filter {
+                if crate::bench_suite::benchmark_by_name(name).is_none() {
+                    return Err(crate::bench_suite::unknown_benchmark_error(name));
+                }
+            }
             // per-query objective, falling back to the daemon's
             // `--objective` (caches are objective-independent, so one
             // warm context answers every objective)
@@ -189,7 +203,17 @@ fn handle(
             });
             let stream = SeqGen::stream(seed, n);
             let before = ctx.compile_totals();
-            let summaries = engine::explore_pairs_obj(&ctx.parts(), &stream, jobs, objective);
+            let parts: Vec<_> = match bench_filter {
+                Some(name) => ctx
+                    .parts()
+                    .into_iter()
+                    .zip(&ctx.benchmarks)
+                    .filter(|(_, b)| b.name.eq_ignore_ascii_case(name))
+                    .map(|(p, _)| p)
+                    .collect(),
+                None => ctx.parts(),
+            };
+            let summaries = engine::explore_pairs_obj(&parts, &stream, jobs, objective);
             let compiles = ctx.compile_totals() - before;
             let evaluations: usize = summaries.iter().map(|s| s.evaluations.len()).sum();
             let stream_hits: usize = summaries.iter().map(|s| s.cache_hits).sum();
@@ -262,6 +286,8 @@ mod tests {
             {\"op\":\"explore\",\"seqs\":3,\"seed\":9,\"jobs\":1}\n\
             {\"op\":\"explore\",\"seqs\":3,\"seed\":\"0x9\",\"jobs\":2}\n\
             {\"op\":\"explore\",\"seqs\":3,\"seed\":9,\"jobs\":1,\"objective\":\"pareto\"}\n\
+            {\"op\":\"explore\",\"seqs\":3,\"seed\":9,\"jobs\":1,\"bench\":\"NOPE\"}\n\
+            {\"op\":\"explore\",\"seqs\":3,\"seed\":9,\"jobs\":1,\"bench\":\"histo\"}\n\
             {\"op\":\"stats\"}\n\
             {\"op\":\"shutdown\"}\n\
             {\"op\":\"ping\"}\n";
@@ -270,7 +296,7 @@ mod tests {
         let text = String::from_utf8(out).unwrap();
         let lines: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
         // shutdown stops the loop: the trailing ping is never served
-        assert_eq!(lines.len(), 7, "{text}");
+        assert_eq!(lines.len(), 9, "{text}");
         assert_eq!(lines[0].get("ok").and_then(|o| o.as_bool()), Some(true));
         assert_eq!(lines[1].get("ok").and_then(|o| o.as_bool()), Some(false));
         assert!(lines[1].get("error").is_some());
@@ -295,16 +321,32 @@ mod tests {
         );
         assert!(summaries(&lines[4]).contains("pareto"), "{text}");
 
+        // an unknown benchmark is a structured error listing the valid
+        // names by family — and the loop (and warm context) carries on
+        assert_eq!(lines[5].get("ok").and_then(|o| o.as_bool()), Some(false));
+        let err = lines[5].get("error").and_then(|e| e.as_str()).unwrap();
+        assert!(err.contains("unknown benchmark 'NOPE'"), "{err}");
+        assert!(err.contains("valid names by family"), "{err}");
+        assert!(err.contains("irregular") && err.contains("HISTO"), "{err}");
+
+        // a single-benchmark query (case-insensitive) answers from the
+        // same warm context: one summary, zero compiles
+        assert_eq!(lines[6].get("ok").and_then(|o| o.as_bool()), Some(true));
+        assert_eq!(stats(&lines[6], "compiles"), Some(0), "{text}");
+        let only = lines[6].get("summaries").and_then(|s| s.as_arr()).unwrap();
+        assert_eq!(only.len(), 1, "{text}");
+        assert_eq!(only[0].get("bench").and_then(|b| b.as_str()), Some("HISTO"));
+
         // the persisted store is visible to the stats op
-        assert_eq!(lines[5].get("op").and_then(|o| o.as_str()), Some("stats"));
+        assert_eq!(lines[7].get("op").and_then(|o| o.as_str()), Some("stats"));
         assert!(
-            lines[5]
+            lines[7]
                 .get("benches")
                 .and_then(|b| b.as_arr())
                 .is_some_and(|b| !b.is_empty()),
             "{text}"
         );
-        assert_eq!(lines[6].get("op").and_then(|o| o.as_str()), Some("shutdown"));
+        assert_eq!(lines[8].get("op").and_then(|o| o.as_str()), Some("shutdown"));
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

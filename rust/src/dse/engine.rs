@@ -6,8 +6,9 @@
 //!
 //! * [`EvalContext`] — the *immutable* per-benchmark evaluation state:
 //!   a target-independent [`Compiler`] (small/full builds) paired with
-//!   one per-target [`SimBackend`] (cost tables, baseline trips, step
-//!   budget) plus the golden buffers. Shared by reference across
+//!   one per-target [`Backend`] — the modelled [`SimBackend`] (cost
+//!   tables, baseline trips, step budget) or the interpreting
+//!   [`HostBackend`] — plus the golden buffers. Shared by reference across
 //!   workers; every evaluation clones the module it mutates. The
 //!   evaluation itself is the staged **compile → validate → measure**
 //!   pipeline of [`crate::dse::evaluator`].
@@ -60,10 +61,11 @@ use std::sync::Mutex;
 use crate::bench_suite::{execute, init_buffers, model_objectives, Benchmark, BuiltBench, Variant};
 use crate::passes::PassOutcome;
 use crate::sim::exec::Buffers;
-use crate::sim::target::Target;
+use crate::sim::target::{Target, TargetKind};
 use crate::util::fnv1a;
 
 use super::evaluator::{Compiler, CompiledKernel, EvalBackend, SimBackend};
+use super::hostexec::{self, HostBackend};
 use super::explorer::{
     pareto_front, EvalStatus, Evaluation, ExplorationSummary, ObjVec, Objective, Winner,
 };
@@ -110,8 +112,66 @@ pub fn golden_from_interpreter(bench: &Benchmark) -> Buffers {
 
 // ------------------------------------------------------------------ context
 
+/// The per-device stage an [`EvalContext`] dispatches to: the modelled
+/// [`SimBackend`] for the GPU-like registry rows, the interpreting
+/// [`HostBackend`] for the `host-cpu` row. The choice is made once, in
+/// [`EvalContext::new`], on the target's [`TargetKind`]; everything
+/// downstream goes through the [`EvalBackend`] delegation below, so
+/// the evaluation pipeline, the caches, `repro transfer` and the store
+/// never branch on which backend is running.
+pub enum Backend {
+    Sim(SimBackend),
+    Host(HostBackend),
+}
+
+impl Backend {
+    pub fn target(&self) -> &Target {
+        match self {
+            Backend::Sim(b) => b.target(),
+            Backend::Host(b) => b.target(),
+        }
+    }
+
+    pub fn step_limit(&self) -> u64 {
+        match self {
+            Backend::Sim(b) => b.step_limit(),
+            Backend::Host(b) => b.step_limit(),
+        }
+    }
+
+    pub fn set_step_limit(&mut self, limit: u64) {
+        match self {
+            Backend::Sim(b) => b.set_step_limit(limit),
+            Backend::Host(b) => b.set_step_limit(limit),
+        }
+    }
+}
+
+impl EvalBackend for Backend {
+    fn device(&self) -> &'static str {
+        match self {
+            Backend::Sim(b) => b.device(),
+            Backend::Host(b) => b.device(),
+        }
+    }
+
+    fn measure(&self, artifact: &CompiledKernel) -> super::evaluator::Measurement {
+        match self {
+            Backend::Sim(b) => b.measure(artifact),
+            Backend::Host(b) => b.measure(artifact),
+        }
+    }
+
+    fn validate(&self, artifact: &CompiledKernel, golden: &Buffers) -> EvalStatus {
+        match self {
+            Backend::Sim(b) => b.validate(artifact, golden),
+            Backend::Host(b) => b.validate(artifact, golden),
+        }
+    }
+}
+
 /// Immutable per-benchmark evaluation state: the target-independent
-/// [`Compiler`] paired with one per-target [`SimBackend`] plus the
+/// [`Compiler`] paired with one per-target [`Backend`] plus the
 /// golden buffers and baseline numbers the DSE policy needs.
 /// Construction does all the expensive one-off work (builds, golden
 /// execution, baseline trips); after that, any number of workers can
@@ -125,7 +185,7 @@ pub fn golden_from_interpreter(bench: &Benchmark) -> Buffers {
 pub struct EvalContext {
     pub name: String,
     compiler: Compiler,
-    backend: SimBackend,
+    backend: Backend,
     golden: Buffers,
     pub baseline_time_us: f64,
     /// the baseline's full objective vector; `baseline_obj.time_us ==
@@ -141,26 +201,54 @@ impl EvalContext {
     pub fn new(bench: &Benchmark, target: Target, golden: Buffers) -> EvalContext {
         let small = bench.build_small(Variant::OpenCl);
         let full = bench.build_full(Variant::OpenCl);
-        let (baseline_time_us, baseline_energy_uj, baseline_code_size) =
+        let (model_time_us, model_energy_uj, model_code_size) =
             model_objectives(&full, &target);
-        let baseline_obj = ObjVec {
-            time_us: baseline_time_us,
-            energy_uj: baseline_energy_uj,
-            code_size: baseline_code_size,
-        };
         let baseline_trips = crate::bench_suite::baseline_max_trips(&full, &target);
-        let baseline_steps = {
+        // the raw step count feeds the host baseline below; the floored
+        // variant keeps the historical step-budget derivation
+        let raw_baseline_steps = {
             let mut bufs = init_buffers(&small);
-            execute(&small, &mut bufs, u64::MAX)
-                .map(|s| s.max(10_000))
-                .unwrap_or(10_000_000)
+            execute(&small, &mut bufs, u64::MAX).ok()
         };
+        let baseline_steps = raw_baseline_steps
+            .map(|s| s.max(10_000))
+            .unwrap_or(10_000_000);
         let timeout_factor = DEFAULT_TIMEOUT_FACTOR;
         let step_limit = step_limit_for(baseline_steps, timeout_factor);
+        // Dispatch the per-device stage on the target kind. The host
+        // backend *measures* by interpretation, so its baseline must be
+        // priced the same way — the raw (unfloored) baseline steps under
+        // the identical virtual-wall-clock + quantization policy —
+        // or the 20× timeout would compare a modelled baseline against
+        // an interpreted candidate. Code size stays the modelled static
+        // count on every backend.
+        let (backend, baseline_time_us, baseline_obj) =
+            if target.kind == TargetKind::HostCpu {
+                let steps = raw_baseline_steps.unwrap_or(baseline_steps);
+                let t = hostexec::quantize(steps as f64 * hostexec::step_us(&target));
+                let e = hostexec::quantize(t * target.e_static_w);
+                let obj = ObjVec { time_us: t, energy_uj: e, code_size: model_code_size };
+                (
+                    Backend::Host(HostBackend::new(target, baseline_trips, step_limit)),
+                    t,
+                    obj,
+                )
+            } else {
+                let obj = ObjVec {
+                    time_us: model_time_us,
+                    energy_uj: model_energy_uj,
+                    code_size: model_code_size,
+                };
+                (
+                    Backend::Sim(SimBackend::new(target, baseline_trips, step_limit)),
+                    model_time_us,
+                    obj,
+                )
+            };
         EvalContext {
             name: bench.name.to_string(),
             compiler: Compiler::from_builds(small, full),
-            backend: SimBackend::new(target, baseline_trips, step_limit),
+            backend,
             golden,
             baseline_time_us,
             baseline_obj,
@@ -195,8 +283,17 @@ impl EvalContext {
             None,
             on,
         );
-        self.baseline_time_us = t;
-        self.baseline_obj = ObjVec { time_us: t, energy_uj: e, code_size: s };
+        match self.backend {
+            Backend::Sim(_) => {
+                self.baseline_time_us = t;
+                self.baseline_obj = ObjVec { time_us: t, energy_uj: e, code_size: s };
+            }
+            // the host baseline is interpreted, not modelled: allocation
+            // feedback only moves the modelled static-size component
+            Backend::Host(_) => {
+                self.baseline_obj.code_size = s;
+            }
+        }
     }
 
     /// Override the validation step budget (see
@@ -212,7 +309,7 @@ impl EvalContext {
     }
 
     /// The per-device measure/validate stage.
-    pub fn backend(&self) -> &SimBackend {
+    pub fn backend(&self) -> &Backend {
         &self.backend
     }
 
@@ -1234,6 +1331,8 @@ mod tests {
         ok::<Buffers>();
         ok::<Compiler>();
         ok::<SimBackend>();
+        ok::<HostBackend>();
+        ok::<Backend>();
         ok::<EvalContext>();
         ok::<CacheShards>();
         ok::<Evaluation>();

@@ -1,0 +1,219 @@
+//! The third [`EvalBackend`]: host-CPU execution by interpretation.
+//!
+//! The paper evaluates phase orders on real devices; the repo's first
+//! two backends replace the device with a static cost model
+//! ([`super::evaluator::SimBackend`] over the GP104/Fiji tables). This
+//! module adds the opposite trade: a backend that *runs* the artifact
+//! on the host and reports a wall-clock-shaped measurement, registered
+//! under the `host-cpu` row of the target registry
+//! ([`Target::host`]) so `repro transfer`, the store's
+//! `(artifact_hash, device)` verdict columns and `repro serve` pick it
+//! up like any other device.
+//!
+//! ## Measurement policy: virtual wall-clock
+//!
+//! A real `clock_gettime` around the run would poison every
+//! determinism invariant this repo holds (bit-identical summaries
+//! across `--jobs`, schedulers, shards and cold/warm stores). The
+//! backend therefore measures **virtual wall-clock**: it executes the
+//! artifact's validation-size build in the deterministic interpreter
+//! `MEASURE_RUNS` times — every run re-seeded from the same
+//! deterministic [`init_buffers`] fill — takes the **median** of the
+//! per-run step counts, and prices each interpreter step at one host
+//! cycle ([`step_us`], derived from the registry's `clock_ghz`). The
+//! shape is exactly "repeated timed runs + median-of-k"; the runs are
+//! identical by construction, which is the point: the median is a real
+//! robustness guard on a real machine and a no-op here.
+//!
+//! Every reported number is then **quantized** to a fixed 1e-3 grid
+//! ([`quantize`]: nanoseconds for time, 1e-3 µJ for energy) — the
+//! documented policy that keeps host measurements free of last-bit
+//! float noise, so the `(artifact_hash, device)` verdict columns, the
+//! shard merge and the warm store replay stay bit-identical no matter
+//! which worker measured first.
+//!
+//! Code size is not a runtime property: it is priced through the same
+//! lowered-kernel path as the sim backends, against the host target's
+//! cost table.
+
+use crate::bench_suite::{
+    execute, init_buffers, model_objectives_lowered, outputs_match,
+};
+use crate::passes::PassOutcome;
+use crate::sim::exec::{Buffers, ExecError};
+use crate::sim::target::Target;
+
+use super::evaluator::{CompiledKernel, EvalBackend, Measurement, VALIDATION_TOLERANCE};
+use super::explorer::EvalStatus;
+
+/// How many interpreter runs a measurement aggregates (median-of-k).
+pub const MEASURE_RUNS: usize = 5;
+
+/// Virtual wall-clock price of one interpreter step, in µs: one host
+/// cycle at the registry's clock (`cycles/µs = clock_ghz × 1000`).
+pub fn step_us(t: &Target) -> f64 {
+    1.0 / (t.clock_ghz * 1000.0)
+}
+
+/// The backend's deterministic quantization grid: snap to multiples of
+/// 1e-3 (nanoseconds for a µs time, 1e-3 µJ for an energy). Applied to
+/// every measured component *and* to the host baseline the engine
+/// derives, so ratios like the 20× timeout compare like with like.
+pub fn quantize(x: f64) -> f64 {
+    (x * 1000.0).round() / 1000.0
+}
+
+/// Host-CPU [`EvalBackend`]: interprets the artifact's validation
+/// build for `measure` (virtual wall-clock, see the module docs) and
+/// for `validate` (same §3.2 outcome buckets as the sim backends).
+pub struct HostBackend {
+    target: Target,
+    /// per-kernel baseline trip counts — only the code-size pricing
+    /// path consumes these (same signature as the sim backend, so the
+    /// engine can construct either from the same baseline probe)
+    baseline_trips: Vec<f64>,
+    /// validation/measurement step budget (20× the baseline's steps)
+    step_limit: u64,
+}
+
+impl HostBackend {
+    /// Same construction contract as
+    /// [`super::evaluator::SimBackend::new`]; `target` must be the
+    /// registry's [`Target::host`] row.
+    pub fn new(target: Target, baseline_trips: Vec<f64>, step_limit: u64) -> HostBackend {
+        HostBackend {
+            target,
+            baseline_trips,
+            step_limit,
+        }
+    }
+
+    pub fn target(&self) -> &Target {
+        &self.target
+    }
+
+    pub fn step_limit(&self) -> u64 {
+        self.step_limit
+    }
+
+    /// Override the step budget (see
+    /// [`super::evaluator::SimBackend::set_step_limit`]).
+    pub fn set_step_limit(&mut self, limit: u64) {
+        self.step_limit = limit;
+    }
+}
+
+impl EvalBackend for HostBackend {
+    fn device(&self) -> &'static str {
+        self.target.name
+    }
+
+    fn measure(&self, artifact: &CompiledKernel) -> Measurement {
+        // code size is a static artifact property — priced through the
+        // same path as the sim backends, against the host cost table
+        let (_, _, code_size) = model_objectives_lowered(
+            &artifact.lowered,
+            &artifact.full.kernels,
+            artifact.full.seq_repeat,
+            &self.target,
+            Some(&self.baseline_trips),
+        );
+        let mut runs = [0u64; MEASURE_RUNS];
+        for slot in &mut runs {
+            // re-seed every run from the same deterministic fill
+            let mut bufs = init_buffers(&artifact.small);
+            match execute(&artifact.small, &mut bufs, self.step_limit) {
+                Ok(steps) => *slot = steps,
+                // the engine validates before it measures, so a failing
+                // run here is defensive: report an unusable measurement
+                // rather than a bogus one
+                Err(_) => {
+                    return Measurement {
+                        time_us: f64::INFINITY,
+                        energy_uj: f64::INFINITY,
+                        code_size: f64::INFINITY,
+                    }
+                }
+            }
+        }
+        runs.sort_unstable();
+        let median = runs[MEASURE_RUNS / 2];
+        let time_us = quantize(median as f64 * step_us(&self.target));
+        let energy_uj = quantize(time_us * self.target.e_static_w);
+        Measurement { time_us, energy_uj, code_size }
+    }
+
+    fn validate(&self, artifact: &CompiledKernel, golden: &Buffers) -> EvalStatus {
+        match &artifact.small_outcome {
+            PassOutcome::Ok => {
+                let mut bufs = init_buffers(&artifact.small);
+                match execute(&artifact.small, &mut bufs, self.step_limit) {
+                    Ok(_) => {
+                        if outputs_match(&artifact.small, &bufs, golden, VALIDATION_TOLERANCE) {
+                            EvalStatus::Ok
+                        } else {
+                            EvalStatus::InvalidOutput
+                        }
+                    }
+                    Err(ExecError::StepLimit) => EvalStatus::Timeout,
+                    Err(e) => EvalStatus::ExecFailure(e.to_string()),
+                }
+            }
+            other => EvalStatus::Crash(format!("{other:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite::{baseline_max_trips, benchmark_by_name, Variant};
+    use crate::dse::evaluator::Compiler;
+
+    fn artifact_and_backend(name: &str) -> (CompiledKernel, HostBackend, crate::sim::exec::Buffers) {
+        let b = benchmark_by_name(name).unwrap();
+        let small = b.build_small(Variant::OpenCl);
+        let full = b.build_full(Variant::OpenCl);
+        let target = Target::host();
+        let trips = baseline_max_trips(&full, &target);
+        let c = Compiler::from_builds(small, full);
+        let ck = c.compile(&[]).unwrap();
+        let golden = crate::dse::engine::golden_from_interpreter(&b);
+        (ck, HostBackend::new(target, trips, u64::MAX), golden)
+    }
+
+    #[test]
+    fn quantization_snaps_to_the_millipoint_grid() {
+        assert_eq!(quantize(1.23456), 1.235);
+        assert_eq!(quantize(0.0004), 0.0);
+        assert_eq!(quantize(7.0), 7.0);
+        // the step price itself: 3.2 GHz → 3200 cycles per µs
+        let t = Target::host();
+        assert!((step_us(&t) - 1.0 / 3200.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn host_measurement_is_deterministic_and_quantized() {
+        let (ck, be, golden) = artifact_and_backend("GEMM");
+        assert_eq!(be.device(), "host-cpu");
+        assert_eq!(be.validate(&ck, &golden), EvalStatus::Ok);
+        let a = be.measure(&ck);
+        let b = be.measure(&ck);
+        assert_eq!(a.time_us.to_bits(), b.time_us.to_bits());
+        assert_eq!(a.energy_uj.to_bits(), b.energy_uj.to_bits());
+        assert_eq!(a.code_size.to_bits(), b.code_size.to_bits());
+        assert!(a.time_us.is_finite() && a.time_us > 0.0);
+        // every component sits on the documented 1e-3 grid
+        assert_eq!(quantize(a.time_us).to_bits(), a.time_us.to_bits());
+        assert_eq!(quantize(a.energy_uj).to_bits(), a.energy_uj.to_bits());
+    }
+
+    #[test]
+    fn step_budget_bounds_both_stages() {
+        let (ck, mut be, golden) = artifact_and_backend("ATAX");
+        be.set_step_limit(3);
+        assert_eq!(be.validate(&ck, &golden), EvalStatus::Timeout);
+        let m = be.measure(&ck);
+        assert!(m.time_us.is_infinite(), "a budget-cut run is unusable");
+    }
+}

@@ -48,13 +48,15 @@
 pub mod engine;
 pub mod evaluator;
 pub mod explorer;
+pub mod hostexec;
 pub mod seqgen;
 pub mod shard;
 pub mod store;
 pub mod strategy;
 
-pub use engine::{explore_all, CacheShards, EvalContext, Scheduler, SeqMemo};
+pub use engine::{explore_all, Backend, CacheShards, EvalContext, Scheduler, SeqMemo};
 pub use evaluator::{CompiledKernel, Compiler, EvalBackend, Measurement, SimBackend};
+pub use hostexec::HostBackend;
 pub use explorer::{
     pareto_front, EvalStatus, Evaluation, Explorer, ExplorationSummary, ObjVec, Objective,
     ParetoPoint, Winner,

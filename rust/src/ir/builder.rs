@@ -136,6 +136,18 @@ impl KernelBuilder {
         self.emit(Inst::new(Op::Store, Ty::Void, &[p, val]));
     }
 
+    /// `atomic_add(&base[idx], val)`, returning the old value.
+    pub fn atom_add(&mut self, base: Value, idx: Value, val: Value) -> Value {
+        let p = self.addr(base, idx);
+        self.emit(Inst::new(Op::AtomAdd, Ty::F32, &[p, val]))
+    }
+
+    /// `atomic_max(&base[idx], val)`, returning the old value.
+    pub fn atom_max(&mut self, base: Value, idx: Value, val: Value) -> Value {
+        let p = self.addr(base, idx);
+        self.emit(Inst::new(Op::AtomMax, Ty::F32, &[p, val]))
+    }
+
     // ---- structured control flow ----
 
     fn seal_with_br(&mut self, to: BlockId) {

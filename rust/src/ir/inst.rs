@@ -99,6 +99,14 @@ pub enum Op {
     Load,
     /// args [ptr, value]; no result.
     Store,
+    /// args [ptr, value] -> f32: atomically `*ptr += value`, returning
+    /// the old value. The SIMT interpreter runs lanes sequentially so
+    /// atomics are trivially sequentially consistent; the cost model
+    /// prices the contention they imply on real hardware.
+    AtomAdd,
+    /// args [ptr, value] -> f32: atomically `*ptr = max(*ptr, value)`,
+    /// returning the old value.
+    AtomMax,
     /// args [size_bytes:imm] -> Ptr(Local). Created by `reg2mem`, lowered
     /// by `nvptx-lower-alloca` into the `__local_depot`.
     Alloca,
@@ -119,16 +127,34 @@ impl Op {
     /// Instruction has a side effect on memory or control flow (cannot be
     /// removed just because its value is unused).
     pub fn has_side_effect(self) -> bool {
-        matches!(self, Op::Store | Op::Br | Op::CondBr | Op::Ret)
+        matches!(
+            self,
+            Op::Store | Op::AtomAdd | Op::AtomMax | Op::Br | Op::CondBr | Op::Ret
+        )
     }
     pub fn is_memory(self) -> bool {
-        matches!(self, Op::Load | Op::Store)
+        matches!(self, Op::Load | Op::Store | Op::AtomAdd | Op::AtomMax)
+    }
+    /// Instruction may mutate memory: the barrier every forwarding /
+    /// motion / dead-store screen must respect (atomics both read and
+    /// write their location).
+    pub fn may_write_memory(self) -> bool {
+        matches!(self, Op::Store | Op::AtomAdd | Op::AtomMax)
     }
     /// Pure value computation: safe to hoist/sink/CSE if operands allow.
     pub fn is_pure(self) -> bool {
         !matches!(
             self,
-            Op::Nop | Op::Load | Op::Store | Op::Alloca | Op::Phi | Op::Br | Op::CondBr | Op::Ret
+            Op::Nop
+                | Op::Load
+                | Op::Store
+                | Op::AtomAdd
+                | Op::AtomMax
+                | Op::Alloca
+                | Op::Phi
+                | Op::Br
+                | Op::CondBr
+                | Op::Ret
         )
     }
     /// Commutative binary ops (used by instcombine/reassociate/gvn
@@ -189,6 +215,8 @@ impl Op {
             Op::PtrAdd => "ptradd",
             Op::Load => "load",
             Op::Store => "store",
+            Op::AtomAdd => "atom.add",
+            Op::AtomMax => "atom.max",
             Op::Alloca => "alloca",
             Op::Phi => "phi",
             Op::Br => "br",

@@ -283,6 +283,8 @@ fn parse_inst(
         "ptradd" => simple(Op::PtrAdd, Ty::Ptr(AddrSpace::Global)),
         "load" => simple(Op::Load, Ty::F32),
         "store" => simple(Op::Store, Ty::Void),
+        "atom.add" => simple(Op::AtomAdd, Ty::F32),
+        "atom.max" => simple(Op::AtomMax, Ty::F32),
         "alloca" => simple(Op::Alloca, Ty::Ptr(AddrSpace::Local)),
         "phi" => simple(Op::Phi, Ty::I32),
         "ret" => Ok((Op::Ret, Ty::Void, Vec::new(), Vec::new())),

@@ -88,7 +88,7 @@ fn delete_one_empty_loop(f: &mut Function, lf: &LoopForest) -> bool {
                 if inst.is_nop() {
                     continue;
                 }
-                if inst.op == Op::Store {
+                if inst.op.may_write_memory() {
                     continue 'outer;
                 }
             }

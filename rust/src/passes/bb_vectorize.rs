@@ -62,7 +62,7 @@ pub fn has_adjacent_pair(f: &Function, bb: crate::ir::BlockId) -> bool {
     for &i in ids {
         let inst = f.inst(i);
         match inst.op {
-            Op::Store => window.clear(),
+            Op::Store | Op::AtomAdd | Op::AtomMax => window.clear(),
             Op::Load => {
                 let loc = {
                     let mut cx = AffineCtx::new(f);

@@ -91,6 +91,10 @@ fn dse_function(f: &mut Function, precise: bool) -> bool {
                             AliasResult::No => {}
                         }
                     }
+                    // atomics read AND write their location: they can
+                    // both observe the store and fail to fully overwrite
+                    // it — stop scanning either way
+                    Op::AtomAdd | Op::AtomMax => break,
                     op if op.is_terminator() => break,
                     _ => {}
                 }

@@ -83,6 +83,16 @@ fn cse_function(f: &mut Function, precise: bool) -> bool {
                     avail.retain(|(l, _)| alias(f, precise, l, &loc) == AliasResult::No);
                     avail.push((loc, inst.args()[1]));
                 }
+                Op::AtomAdd | Op::AtomMax => {
+                    // atomic RMW: clobber may-aliasing loads and forward
+                    // nothing (memory holds the combined value, not the
+                    // operand and not the old value the atomic returned)
+                    let loc = {
+                        let mut cx = AffineCtx::new(f);
+                        MemLoc::resolve(&mut cx, inst.args()[0])
+                    };
+                    avail.retain(|(l, _)| alias(f, precise, l, &loc) == AliasResult::No);
+                }
                 _ => {}
             }
         }

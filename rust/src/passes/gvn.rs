@@ -77,7 +77,7 @@ fn block_has_store(f: &Function, bb: BlockId) -> bool {
     f.block(bb)
         .insts
         .iter()
-        .any(|&i| f.inst(i).op == Op::Store)
+        .any(|&i| f.inst(i).op.may_write_memory())
 }
 
 fn walk(
@@ -130,6 +130,16 @@ fn walk(
                 };
                 loads.retain(|(l, _)| alias(f, cx.precise, l, &loc) == AliasResult::No);
                 loads.push((loc, inst.args()[1]));
+            }
+            Op::AtomAdd | Op::AtomMax => {
+                // an atomic RMW clobbers its location; unlike a store it
+                // leaves no forwardable value (the memory now holds the
+                // combined result, not the operand)
+                let loc = {
+                    let mut acx = AffineCtx::new(f);
+                    MemLoc::resolve(&mut acx, inst.args()[0])
+                };
+                loads.retain(|(l, _)| alias(f, cx.precise, l, &loc) == AliasResult::No);
             }
             _ => {}
         }

@@ -117,7 +117,7 @@ fn hoist_loop_inner(
         let mut v = Vec::new();
         for &bb in &l.blocks {
             for &i in &f.block(bb).insts {
-                if f.inst(i).op == Op::Store {
+                if f.inst(i).op.may_write_memory() {
                     let ptr = f.inst(i).args()[0];
                     let mut cx = AffineCtx::new(f);
                     v.push(MemLoc::resolve(&mut cx, ptr));
@@ -223,7 +223,10 @@ fn promote_loop(f: &mut Function, dt: &DomTree, lf: &LoopForest, li: usize, prec
             };
             match alias(f, precise, &loc, &mloc) {
                 AliasResult::Must => {
-                    if mb != sb {
+                    // atomics are in memops too (is_memory): they can
+                    // neither join the promotion set (the RMW must hit
+                    // real memory) nor be ignored — bail out
+                    if mb != sb || !matches!(f.inst(mi).op, Op::Load | Op::Store) {
                         continue 'cands;
                     }
                     set.push(mi);

@@ -133,7 +133,7 @@ fn sink_function(
                     continue;
                 }
                 for &si in &f.block(other).insts {
-                    if f.inst(si).op != Op::Store {
+                    if !f.inst(si).op.may_write_memory() {
                         continue;
                     }
                     if other == bb {

@@ -409,6 +409,18 @@ fn inst_cost(kind: PtxKind, t: &Target) -> (f64, bool) {
             },
             true,
         ),
+        PtxKind::Atom(c) => (
+            match c {
+                MemClass::Coalesced => t.atom_coal,
+                // all lanes on one address = full warp serialization,
+                // the EXPENSIVE shape for atomics (inverse of ld_bcast)
+                MemClass::Broadcast => t.atom_bcast,
+                MemClass::Strided => t.atom_strided,
+                // depot-local RMW never contends across lanes
+                MemClass::Local | MemClass::GenericLocal => t.atom_coal,
+            },
+            true,
+        ),
         PtxKind::Ret => (1.0, false),
     }
 }

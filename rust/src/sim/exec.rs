@@ -247,6 +247,44 @@ fn run_thread(
                     }
                     Slot::Undef
                 }
+                Op::AtomAdd | Op::AtomMax => {
+                    // lanes run sequentially here, so read-modify-write
+                    // is exact; the returned value is the old one
+                    let v = as_f(a(1))?;
+                    match a(0) {
+                        Slot::P(b, off) => {
+                            let idx = off / 4;
+                            let buf = bufs
+                                .bufs
+                                .get_mut(b as usize)
+                                .ok_or(ExecError::Malformed("bad buffer".into()))?;
+                            if off % 4 != 0 || idx < 0 || idx as usize >= buf.len() {
+                                return Err(ExecError::OutOfBounds {
+                                    buf: b as usize,
+                                    index: idx,
+                                });
+                            }
+                            let old = buf[idx as usize];
+                            buf[idx as usize] = if inst.op == Op::AtomAdd {
+                                old + v
+                            } else {
+                                old.max(v)
+                            };
+                            Slot::F(old)
+                        }
+                        Slot::L(slot, _) => {
+                            let old = as_f(*local.get(&slot).unwrap_or(&Slot::F(0.0)))?;
+                            let new = if inst.op == Op::AtomAdd {
+                                old + v
+                            } else {
+                                old.max(v)
+                            };
+                            local.insert(slot, Slot::F(new));
+                            Slot::F(old)
+                        }
+                        _ => return Err(ExecError::Malformed("atomic on non-pointer".into())),
+                    }
+                }
                 Op::Br => {
                     next = Some(f.block(cur).succs[0]);
                     Slot::Undef

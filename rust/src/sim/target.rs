@@ -12,6 +12,12 @@
 pub enum TargetKind {
     NvidiaGp104,
     AmdFiji,
+    /// The host CPU running the interpreter: measurements come from the
+    /// `HostBackend` wall-clock policy (`dse::hostexec`), not from this
+    /// cost table — but the table still exists so static pricing
+    /// (code size, transfer estimates, per-kernel model selection) works
+    /// uniformly across the registry.
+    HostCpu,
 }
 
 /// Physical register classes available to one thread, per target.
@@ -38,6 +44,7 @@ impl TargetKind {
         match self {
             TargetKind::NvidiaGp104 => "NVIDIA GP104 (GTX 1070)",
             TargetKind::AmdFiji => "AMD Fiji (R9 Fury X)",
+            TargetKind::HostCpu => "Host CPU (interpreter wall-clock)",
         }
     }
 }
@@ -83,6 +90,18 @@ pub struct Target {
     pub st_local: f64,
     pub ld_generic: f64,
     pub st_generic: f64,
+    /// atomic RMW to an address every lane in the warp resolves
+    /// distinctly and contiguously — one transaction, serialized
+    /// read-modify-write per lane at the L2
+    pub atom_coal: f64,
+    /// atomic RMW where all lanes hit the SAME address: full warp-width
+    /// serialization on one location, the worst contention shape (the
+    /// histogram hot-bin case) — priced the opposite way round from
+    /// `ld_bcast`, where same-address is the CHEAP case
+    pub atom_bcast: f64,
+    /// atomic RMW scattered across unrelated lines (data-dependent
+    /// addresses the classifier cannot resolve land here)
+    pub atom_strided: f64,
     /// one-off overhead for an outlined loop (`loop-extract-single`)
     pub call_overhead: f64,
     // ---- per-cycle energy (the multi-objective tables) ----
@@ -135,6 +154,11 @@ impl Target {
             st_local: 2.0,
             ld_generic: 12.0,
             st_generic: 12.0,
+            // Pascal has fast global f32 atomics at the L2; same-address
+            // contention still serializes the whole warp
+            atom_coal: 24.0,
+            atom_bcast: 96.0,
+            atom_strided: 48.0,
             call_overhead: 20.0,
             // GDDR5X: cheap compute, expensive off-chip traffic; 16 nm
             // FinFET keeps leakage modest
@@ -182,6 +206,11 @@ impl Target {
             st_local: 1.5,
             ld_generic: 14.0,
             st_generic: 14.0,
+            // GCN3 atomics round-trip to the L2 with no Pascal-style
+            // fast path; contention hurts proportionally more
+            atom_coal: 30.0,
+            atom_bcast: 120.0,
+            atom_strided: 64.0,
             call_overhead: 24.0,
             // HBM halves per-bit transfer energy but 28 nm planar leaks
             // far more, and GCN3's datapath is hungrier per ALU cycle
@@ -191,12 +220,71 @@ impl Target {
         }
     }
 
+    /// The host CPU as a registry citizen. Measurements on this device
+    /// come from [`crate::dse::hostexec::HostBackend`] (interpreter
+    /// wall-clock, quantized and seeded deterministically); the cost
+    /// table below only backs static pricing — code size for the
+    /// multi-objective size axis, transfer-matrix estimates, and
+    /// per-kernel model selection — so its numbers are a deliberately
+    /// coarse "scalar out-of-order core" sketch: flat 1-cycle ALU,
+    /// cache-served loads with no coalescing distinction, and atomics
+    /// that are plain locked RMWs with no warp to serialize.
+    pub fn host() -> Target {
+        Target {
+            kind: TargetKind::HostCpu,
+            name: "host-cpu",
+            sms: 8.0, // cores
+            clock_ghz: 3.2,
+            regs: RegFile {
+                gpr: 64,
+                pred: 16,
+                max_per_thread: 256,
+            },
+            max_warps_per_sm: 2.0, // SMT threads per core
+            min_resident_warps: 1.0,
+            int_alu: 1.0,
+            int_mul: 1.0,
+            cvt: 1.0,
+            setp: 1.0,
+            bra: 1.0,
+            fadd: 1.0,
+            fmul: 1.0,
+            fma: 1.0,
+            fdiv: 6.0,
+            sqrt: 6.0,
+            exp: 14.0,
+            sel: 1.0,
+            ld_coal: 4.0,
+            ld_bcast: 4.0, // caches make the classes converge
+            ld_strided: 6.0,
+            ld_v2: 4.5,
+            st_coal: 4.0,
+            st_bcast: 4.0,
+            st_strided: 6.0,
+            ld_local: 1.0,
+            st_local: 1.0,
+            ld_generic: 5.0,
+            st_generic: 5.0,
+            atom_coal: 8.0, // lock-prefixed RMW, no warp serialization
+            atom_bcast: 12.0,
+            atom_strided: 10.0,
+            call_overhead: 10.0,
+            // desktop-class core: compute and cache traffic cost about
+            // the same, package leakage is small
+            e_alu_pj: 2.0,
+            e_mem_pj: 2.5,
+            e_static_w: 10.0,
+        }
+    }
+
     /// Every registered device model, in registry order. `repro targets`
     /// lists this set and `repro transfer` evaluates winning phase
     /// orders across all of it, so adding a target here is enough to
-    /// make it discoverable and transfer-evaluated.
+    /// make it discoverable and transfer-evaluated. The two GPU models
+    /// stay at indices [0] and [1] (tests and default pickers pin them);
+    /// new devices append.
     pub fn all() -> Vec<Target> {
-        vec![Target::gp104(), Target::fiji()]
+        vec![Target::gp104(), Target::fiji(), Target::host()]
     }
 
     /// The short `--target` spellings accepted for this device besides
@@ -205,6 +293,7 @@ impl Target {
         match self.kind {
             TargetKind::NvidiaGp104 => &["gp104", "nvidia"],
             TargetKind::AmdFiji => &["fiji", "amd"],
+            TargetKind::HostCpu => &["host", "cpu"],
         }
     }
 
@@ -212,6 +301,7 @@ impl Target {
         match name {
             "nvidia-gp104" | "gp104" | "nvidia" => Some(Target::gp104()),
             "amd-fiji" | "fiji" | "amd" => Some(Target::fiji()),
+            "host-cpu" | "host" | "cpu" => Some(Target::host()),
             _ => None,
         }
     }
@@ -265,6 +355,9 @@ impl Target {
             self.st_local,
             self.ld_generic,
             self.st_generic,
+            self.atom_coal,
+            self.atom_bcast,
+            self.atom_strided,
             self.call_overhead,
             self.e_alu_pj,
             self.e_mem_pj,
@@ -294,13 +387,18 @@ mod tests {
     fn lookup_by_name() {
         assert_eq!(Target::by_name("gp104").unwrap().kind, TargetKind::NvidiaGp104);
         assert_eq!(Target::by_name("amd-fiji").unwrap().kind, TargetKind::AmdFiji);
+        assert_eq!(Target::by_name("host").unwrap().kind, TargetKind::HostCpu);
         assert!(Target::by_name("tpu").is_none());
     }
 
     #[test]
     fn registry_names_and_aliases_all_resolve() {
         let all = Target::all();
-        assert_eq!(all.len(), 2);
+        assert_eq!(all.len(), 3);
+        // the GPU models stay index-pinned; host appends
+        assert_eq!(all[0].kind, TargetKind::NvidiaGp104);
+        assert_eq!(all[1].kind, TargetKind::AmdFiji);
+        assert_eq!(all[2].kind, TargetKind::HostCpu);
         for t in &all {
             assert_eq!(Target::by_name(t.name).unwrap().kind, t.kind);
             for a in t.aliases() {
@@ -309,7 +407,11 @@ mod tests {
             assert!(!t.kind.describe().is_empty());
         }
         // registry names are unique (the verdict cache keys on them)
-        assert_ne!(all[0].name, all[1].name);
+        for i in 0..all.len() {
+            for j in i + 1..all.len() {
+                assert_ne!(all[i].name, all[j].name);
+            }
+        }
     }
 
     #[test]
@@ -345,6 +447,11 @@ mod tests {
         // epoch contract: an energy recalibration strands the verdicts)
         let mut t = Target::gp104();
         t.e_mem_pj *= 2.0;
+        assert_ne!(t.cost_fingerprint(), base.cost_fingerprint());
+        // ... and so does retuning atomic contention (the irregular-suite
+        // cost terms are part of the model epoch too)
+        let mut t = Target::gp104();
+        t.atom_bcast *= 2.0;
         assert_ne!(t.cost_fingerprint(), base.cost_fingerprint());
     }
 

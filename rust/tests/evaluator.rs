@@ -209,10 +209,17 @@ fn transfer_compiles_once_per_artifact_and_matches_the_diagonal() {
         ..ExpConfig::default()
     };
     let m = transfer_matrix(&cfg);
-    assert_eq!(m.targets, vec!["nvidia-gp104".to_string(), "amd-fiji".to_string()]);
-    assert_eq!(m.benches.len(), 15);
-    assert_eq!(m.winners.len(), 2);
-    assert_eq!(m.ratio.len(), 2);
+    assert_eq!(
+        m.targets,
+        vec![
+            "nvidia-gp104".to_string(),
+            "amd-fiji".to_string(),
+            "host-cpu".to_string()
+        ]
+    );
+    assert_eq!(m.benches.len(), 19);
+    assert_eq!(m.winners.len(), 3);
+    assert_eq!(m.ratio.len(), 3);
     // compile-once: one compile per distinct (benchmark, order) pair,
     // not per (benchmark, order, target)
     let mut expected = 0u64;

@@ -1,0 +1,221 @@
+//! Irregular-workload suite acceptance tests: executor atomics and
+//! gather addressing against scalar references, data-dependent-loop
+//! timeouts through the full evaluation pipeline, per-kernel vs shared
+//! winning orders, and the host-CPU backend's determinism invariants
+//! (bit-identical summaries across `--jobs` and cold/warm stores, host
+//! rows in the transfer matrix).
+
+use phaseord::bench_suite::{
+    benchmark_by_name, execute, fill_value, init_buffers, outputs_match, Variant,
+};
+use phaseord::coordinator::experiments::{per_kernel_reports, transfer_matrix, ExpConfig, ExpCtx};
+use phaseord::dse::engine::{self, CacheShards, EvalContext};
+use phaseord::dse::{EvalStatus, ExplorationSummary};
+use phaseord::sim::Target;
+
+fn assert_bit_identical(a: &ExplorationSummary, b: &ExplorationSummary) {
+    assert_eq!(a.bench, b.bench);
+    assert_eq!(a.winner, b.winner, "{}: winners differ", a.bench);
+    assert_eq!(
+        a.baseline_time_us.to_bits(),
+        b.baseline_time_us.to_bits(),
+        "{}: baseline time differs",
+        a.bench
+    );
+    assert_eq!(
+        a.best_time_us.to_bits(),
+        b.best_time_us.to_bits(),
+        "{}: best time differs",
+        a.bench
+    );
+    assert_eq!(
+        (a.n_ok, a.n_crash, a.n_invalid, a.n_timeout, a.cache_hits),
+        (b.n_ok, b.n_crash, b.n_invalid, b.n_timeout, b.cache_hits),
+        "{}: outcome buckets differ",
+        a.bench
+    );
+    assert_eq!(a.evaluations.len(), b.evaluations.len(), "{}", a.bench);
+    for (i, (x, y)) in a.evaluations.iter().zip(&b.evaluations).enumerate() {
+        assert_eq!(x.status, y.status, "{} eval {i}", a.bench);
+        assert_eq!(
+            x.time_us.to_bits(),
+            y.time_us.to_bits(),
+            "{} eval {i}: time",
+            a.bench
+        );
+        assert_eq!(x.ptx_hash, y.ptx_hash, "{} eval {i}: ptx hash", a.bench);
+    }
+}
+
+/// The SIMT executor's atomics (HISTO's `atom.add` bins) and indirect
+/// gather addressing (SPMV's CSR walk) against sequential scalar
+/// references computed on the same deterministic structures.
+#[test]
+fn executor_atomics_and_gather_match_scalar_references() {
+    // HISTO: bin counts must equal a sequential histogram of the fill
+    let b = benchmark_by_name("HISTO").unwrap();
+    let built = b.build_small(Variant::OpenCl);
+    let mut bufs = init_buffers(&built);
+    execute(&built, &mut bufs, u64::MAX).unwrap();
+    let bins = built.buf_sizes[1];
+    let mut want = vec![0.0f32; bins];
+    for i in 0..built.buf_sizes[0] {
+        let v = fill_value(0, i);
+        want[((v - 0.5) * bins as f32) as usize] += 1.0;
+    }
+    assert_eq!(bufs.bufs[1], want, "atom.add disagrees with the scalar histogram");
+
+    // SPMV: the gathered y = A·x must match a scalar CSR walk over the
+    // identical host-synthesized structure
+    let b = benchmark_by_name("SPMV").unwrap();
+    let built = b.build_small(Variant::OpenCl);
+    let mut got = init_buffers(&built);
+    execute(&built, &mut got, u64::MAX).unwrap();
+    let mut want = init_buffers(&built);
+    (built.host_step.expect("SPMV synthesizes CSR on the host"))(&mut want, 0);
+    let n = built.buf_sizes[4];
+    for i in 0..n {
+        let (start, end) = (want.bufs[0][i] as usize, want.bufs[0][i + 1] as usize);
+        let mut acc = 0.0f32;
+        for j in start..end {
+            acc += want.bufs[2][j] * want.bufs[3][want.bufs[1][j] as usize];
+        }
+        want.bufs[4][i] = acc;
+    }
+    assert!(
+        outputs_match(&built, &got, &want, 0.01),
+        "gathered SpMV diverges from the scalar reference"
+    );
+}
+
+/// Data-dependent trip counts are bounded by the step-limit machinery:
+/// cutting the budget turns a fine benchmark into the Timeout bucket
+/// through the full `evaluate` pipeline (not just the raw executor).
+#[test]
+fn data_dependent_loops_time_out_through_the_full_pipeline() {
+    let b = benchmark_by_name("SPMV").unwrap();
+    let golden = engine::golden_from_interpreter(&b);
+    let mut cx = EvalContext::new(&b, Target::gp104(), golden);
+    let cache = CacheShards::new();
+    // sanity: under the derived budget the baseline evaluates Ok
+    assert_eq!(cx.evaluate(&[], &cache).status, EvalStatus::Ok);
+    cx.set_step_limit(3);
+    let e = cx.evaluate(&[], &CacheShards::new());
+    assert_eq!(e.status, EvalStatus::Timeout, "3 steps cannot cover a CSR row walk");
+}
+
+/// `--per-kernel`: every multi-kernel benchmark gets per-kernel winners
+/// whose stitched total is never worse than the one-shared-order winner
+/// over the same candidate set, and on at least one program the
+/// per-kernel split is non-degenerate (the kernels disagree about the
+/// best order).
+#[test]
+fn per_kernel_winners_are_never_worse_than_the_shared_order() {
+    let ctx = ExpCtx::new(ExpConfig {
+        n_seqs: 40,
+        seed: 0xBEEF,
+        jobs: 2,
+        ..ExpConfig::default()
+    });
+    let summaries = ctx.explore_all();
+    let reports = per_kernel_reports(&ctx, &summaries);
+    let names: Vec<&str> = reports.iter().map(|r| r.bench.as_str()).collect();
+    // MM2, MM3, HISTO and BFS are the registry's multi-kernel programs
+    assert!(reports.len() >= 4, "multi-kernel registry: {names:?}");
+    assert!(names.contains(&"HISTO") && names.contains(&"BFS"), "{names:?}");
+    for r in &reports {
+        assert!(r.kernels.len() >= 2, "{}", r.bench);
+        assert!(
+            r.stitched_time_us <= r.shared_time_us * (1.0 + 1e-12),
+            "{}: stitched {} must not exceed shared {}",
+            r.bench,
+            r.stitched_time_us,
+            r.shared_time_us
+        );
+        assert!(r.speedup_vs_shared >= 1.0 - 1e-12, "{}", r.bench);
+        assert!(r.stitched_valid, "{}: the stitched program must validate", r.bench);
+        for k in &r.kernels {
+            assert!(k.time_us.is_finite() && k.time_us > 0.0, "{}/{}", r.bench, k.kernel);
+            assert!(k.time_us <= k.baseline_time_us * (1.0 + 1e-12), "{}/{}", r.bench, k.kernel);
+        }
+    }
+    // non-degeneracy: somewhere the kernels disagree about the best
+    // order (otherwise per-kernel search would be the shared search)
+    assert!(
+        reports.iter().any(|r| {
+            r.stitched_time_us < r.shared_time_us
+                || r.kernels.iter().any(|k| k.winner != r.shared_winner)
+        }),
+        "per-kernel winners collapsed to the shared order on every benchmark"
+    );
+}
+
+/// The host backend end to end: baselines validate, summaries are
+/// bit-identical across `--jobs 1` vs `--jobs 4`, and a warm store
+/// replays the same summaries with zero compiles.
+#[test]
+fn host_backend_is_deterministic_across_jobs_and_store_warmth() {
+    let dir = std::env::temp_dir().join(format!("phaseord-irreg-host-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg_for = |jobs: usize, store: Option<std::path::PathBuf>| ExpConfig {
+        n_seqs: 6,
+        seed: 0xFACE,
+        target: Target::host(),
+        jobs,
+        store,
+        ..ExpConfig::default()
+    };
+    let a = ExpCtx::new(cfg_for(1, None)).explore_all();
+    let b = ExpCtx::new(cfg_for(4, None)).explore_all();
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_bit_identical(x, y);
+    }
+    for s in &a {
+        assert!(
+            s.baseline_time_us.is_finite() && s.baseline_time_us > 0.0,
+            "{}: host baseline must be a finite virtual wall-clock",
+            s.bench
+        );
+        assert!(
+            s.evaluations.iter().any(|e| e.status.is_ok()),
+            "{}: at least the baseline-equivalent candidates validate on host",
+            s.bench
+        );
+    }
+
+    // cold run persists; the warm rerun replays bit-identically and
+    // compiles nothing — the acceptance invariant for the host device's
+    // (artifact_hash, device) verdict columns
+    let cold_ctx = ExpCtx::new(cfg_for(2, Some(dir.clone())));
+    let cold = cold_ctx.explore_all();
+    cold_ctx.persist_store().unwrap();
+    let warm_ctx = ExpCtx::new(cfg_for(2, Some(dir.clone())));
+    let warm = warm_ctx.explore_all();
+    assert_eq!(warm_ctx.run_compiles(), 0, "a fully warm store must compile nothing");
+    for (x, y) in cold.iter().zip(&warm) {
+        assert_bit_identical(x, y);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `repro transfer` picks the host device up from the registry like any
+/// other target, and the host diagonal validates.
+#[test]
+fn transfer_matrix_includes_the_host_device() {
+    let cfg = ExpConfig {
+        n_seqs: 2,
+        seed: 0x5EED,
+        jobs: 2,
+        ..ExpConfig::default()
+    };
+    let m = transfer_matrix(&cfg);
+    let hi = m.targets.iter().position(|t| t == "host-cpu").expect("host row in the matrix");
+    assert_eq!(m.ratio.len(), m.targets.len());
+    for (bi, bench) in m.benches.iter().enumerate() {
+        assert!(
+            m.ratio[hi][hi][bi] >= 0.0,
+            "{bench}: the host's own winner must validate on the host"
+        );
+    }
+}

@@ -313,7 +313,7 @@ fn knn_cli_protocol_is_deterministic_across_jobs_for_k1_and_k3() {
         let a = ExpCtx::new(cfg_for(1)).explore_strategy();
         let b = ExpCtx::new(cfg_for(2)).explore_strategy();
         assert_eq!(a.len(), b.len());
-        assert_eq!(a.len(), 15, "all benchmarks explored");
+        assert_eq!(a.len(), 19, "all benchmarks explored");
         for (x, y) in a.iter().zip(&b) {
             assert_bit_identical(x, y);
         }
