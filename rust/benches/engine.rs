@@ -1,8 +1,12 @@
 //! The parallel-engine acceptance benchmark: a 200-sequence ×
 //! 4-benchmark stream explored at `jobs=1` vs `jobs=N`, reporting the
 //! wall-clock speedup and verifying the summaries are bit-identical —
-//! plus two ablations on the same stream:
+//! plus ablations on the same stream:
 //!
+//! * **strategy arena**: all five shipped strategies (fixed, hillclimb,
+//!   knn, bandit, genetic) ranked at an equal per-benchmark budget over
+//!   a pool that includes 2DCONV, asserting hillclimb and at least one
+//!   learned strategy match or beat the fixed stream somewhere;
 //! * **scheduler**: the legacy global atomic cursor vs the production
 //!   work-stealing scheduler with per-benchmark worker affinity, timed
 //!   head to head and asserted bit-identical (the determinism contract
@@ -29,10 +33,11 @@
 #[path = "harness.rs"]
 mod harness;
 
-use phaseord::bench_suite::benchmark_by_name;
+use phaseord::bench_suite::{benchmark_by_name, Variant};
 use phaseord::dse::engine::{self, CacheShards, EvalContext, Scheduler};
-use phaseord::dse::strategy::{FixedStream, HillClimb, SearchStrategy, DEFAULT_ROUND};
-use phaseord::dse::{ExplorationSummary, SeqGen, Store};
+use phaseord::dse::learn::rank_strategies;
+use phaseord::dse::{ExplorationSummary, Objective, SeqGen, Store};
+use phaseord::features::{extract_features, FeatureVector};
 use phaseord::sim::Target;
 
 fn explore_sched(
@@ -124,43 +129,61 @@ fn main() {
     println!("summaries bit-identical across schedulers: {sched_same}");
     assert!(sched_same, "work-stealing scheduler diverged from the cursor");
 
-    // ---- strategy ablation: fixed stream vs hill-climbing, same budget ----
+    // ---- strategy arena: every shipped strategy at the same budget ----
     // 2DCONV joins the pool: the paper's no-improving-order benchmark is
     // where an iterative strategy provably cannot lose to a random
-    // stream (both floor at the baseline).
+    // stream (both floor at the baseline). The arena runs fixed,
+    // hillclimb, knn, bandit, and genetic over the same contexts with
+    // fresh caches each and equal evaluation budgets (`repro rank`).
+    let arena_names = ["GEMM", "ATAX", "SYRK", "BICG", "2DCONV"];
     let conv = engine::build_contexts(&[benchmark_by_name("2DCONV").unwrap()], &target, 0);
     let abl_ctxs: Vec<&EvalContext> = ctxs.iter().chain(conv.iter()).collect();
     let nb = abl_ctxs.len();
     let per_bench = 40usize;
-    let run_strategy = |mk: &dyn Fn() -> Box<dyn SearchStrategy>, budget: usize| {
-        // fresh caches per run for honest numbers
-        let caches: Vec<CacheShards> = abl_ctxs.iter().map(|_| CacheShards::new()).collect();
-        let parts: Vec<(&EvalContext, &CacheShards)> =
-            abl_ctxs.iter().copied().zip(caches.iter()).collect();
-        let mut s = mk();
-        engine::run(s.as_mut(), &parts, budget, jobs)
-    };
-    let fx_stream = SeqGen::stream(0xAB1A, per_bench);
-    let mk_fixed = || -> Box<dyn SearchStrategy> {
-        Box::new(FixedStream::new(fx_stream.clone(), nb))
-    };
-    let mk_hc = || -> Box<dyn SearchStrategy> {
-        Box::new(HillClimb::new(nb, 0xAB1A, DEFAULT_ROUND))
-    };
-    let r_fx = harness::bench(&format!("strategy=fixed {nb}x{per_bench}"), 1, || {
-        run_strategy(&mk_fixed, usize::MAX).iter().map(|s| s.n_ok).sum::<usize>()
-    });
-    let r_hc = harness::bench(&format!("strategy=hillclimb {nb}x{per_bench}"), 1, || {
-        run_strategy(&mk_hc, per_bench * nb).iter().map(|s| s.n_ok).sum::<usize>()
+    let abl_feats: Vec<(String, FeatureVector)> = arena_names
+        .iter()
+        .map(|name| {
+            let b = benchmark_by_name(name).unwrap();
+            (
+                name.to_string(),
+                extract_features(&b.build_small(Variant::OpenCl).module),
+            )
+        })
+        .collect();
+    let mut entries = Vec::new();
+    let r_arena = harness::bench(&format!("strategy arena {nb}x{per_bench}"), 1, || {
+        entries = rank_strategies(
+            &abl_ctxs,
+            &abl_feats,
+            per_bench,
+            3,
+            0xAB1A,
+            jobs,
+            Objective::Time,
+        );
+        entries.iter().map(|e| e.evaluations).sum::<usize>()
     });
     println!(
-        "strategy wall-clock fixed vs hillclimb: {:.2}x (min-over-min)",
-        r_fx.min_ms / r_hc.min_ms
+        "arena wall-clock for {} strategies at {nb}x{per_bench}: {:.0} ms (min)",
+        entries.len(),
+        r_arena.min_ms
     );
-    let fx = run_strategy(&mk_fixed, usize::MAX);
-    let hc = run_strategy(&mk_hc, per_bench * nb);
+    for e in &entries {
+        println!(
+            "  strategy {:10} geomean {:>5.2}x over {} evaluations",
+            e.strategy, e.geomean, e.evaluations
+        );
+        assert_eq!(
+            e.evaluations,
+            nb * per_bench,
+            "{}: the arena must charge every strategy the same budget",
+            e.strategy
+        );
+    }
+    let by_name = |n: &str| entries.iter().find(|e| e.strategy == n).unwrap();
+    let fixed = by_name("fixed");
     let mut wins = 0;
-    for (f, h) in fx.iter().zip(&hc) {
+    for (f, h) in fixed.summaries.iter().zip(&by_name("hillclimb").summaries) {
         let ge = h.best_time_us <= f.best_time_us;
         wins += ge as usize;
         println!(
@@ -173,6 +196,22 @@ fn main() {
         wins >= 1,
         "hillclimb must match or beat the fixed stream on at least one benchmark \
          within the same {per_bench}-evaluation budget"
+    );
+    let mut learned_wins = 0;
+    for name in ["bandit", "genetic"] {
+        for (f, l) in fixed.summaries.iter().zip(&by_name(name).summaries) {
+            learned_wins += (l.best_time_us <= f.best_time_us) as usize;
+        }
+    }
+    println!(
+        "learned strategies matched or beat fixed on {learned_wins}/{} \
+         (strategy, benchmark) pairs",
+        2 * nb
+    );
+    assert!(
+        learned_wins >= 1,
+        "a learned strategy must match or beat the fixed stream on at least one \
+         benchmark within the same {per_bench}-evaluation budget"
     );
 
     // ---- analysis-cache ablation: same stream, cache disabled ----

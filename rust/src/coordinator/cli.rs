@@ -4,17 +4,19 @@
 //! repro <command> [--seqs N] [--seed S] [--target gp104|amd-fiji]
 //!                 [--perms N] [--draws N] [--jobs N] [--out DIR] [--full]
 //!                 [--verify-each] [--shard I/N] [--emit-summary PATH]
-//!                 [--strategy fixed|permute|hillclimb|knn] [--budget N]
-//!                 [--k K] [--seq p1,p2,...] [--store DIR] [--max-mb N]
-//!                 [--objective time|energy|size|pareto] [--per-kernel]
-//!                 [--family F]
+//!                 [--strategy fixed|permute|hillclimb|knn|bandit|genetic]
+//!                 [--budget N] [--k K] [--seq p1,p2,...] [--store DIR]
+//!                 [--max-mb N] [--objective time|energy|size|pareto]
+//!                 [--per-kernel] [--family F]
 //!
-//! commands: explore merge transfer serve cache bench lower fig2 table1
-//!           fig3 fig4 fig5 fig6 fig7 problems amd all passes targets
+//! commands: explore rank merge transfer serve cache bench lower fig2
+//!           table1 fig3 fig4 fig5 fig6 fig7 problems amd all passes
+//!           targets
 //! ```
 //!
 //! `explore` runs the DSE under the selected search strategy
-//! (optionally one shard of the fixed-stream grid), `merge` folds
+//! (optionally one shard of the fixed-stream grid), `rank` runs the
+//! equal-budget strategy arena ([`crate::dse::learn`]), `merge` folds
 //! shard files back together, and `transfer` cross-evaluates every
 //! target's winning orders on every other target (the §3.1 experiment).
 //! `--store DIR` makes all three read-through and persist the on-disk
@@ -219,10 +221,23 @@ pub fn parse_args(argv: &[String]) -> Result<CliArgs, String> {
     if command.is_empty() {
         return Err(usage());
     }
-    if (strategy_set || budget_set || k_set) && command != "explore" {
+    if strategy_set && command != "explore" {
         return Err(format!(
-            "--strategy/--budget/--k only apply to explore\n{}",
+            "--strategy only applies to explore (rank always runs every strategy)\n{}",
             usage()
+        ));
+    }
+    if (budget_set || k_set) && !matches!(command.as_str(), "explore" | "rank") {
+        return Err(format!(
+            "--budget/--k only apply to explore and rank\n{}",
+            usage()
+        ));
+    }
+    if command == "explore" && k_set && cfg.strategy != StrategyKind::Knn {
+        return Err(format!(
+            "--k is the knn neighbor count; it does nothing under --strategy {} — \
+             drop it or switch to --strategy knn",
+            cfg.strategy.name()
         ));
     }
     if target_set && command == "transfer" {
@@ -242,10 +257,11 @@ pub fn parse_args(argv: &[String]) -> Result<CliArgs, String> {
             usage()
         ));
     }
-    if cfg.strategy == StrategyKind::Fixed && budget_set {
+    if command == "explore" && cfg.strategy == StrategyKind::Fixed && budget_set {
         // for the fixed strategy the budget *is* the stream length;
         // refuse the ambiguous spelling rather than silently preferring
-        // one flag over the other
+        // one flag over the other. (rank keeps the knobs separate: --seqs
+        // is unused there and --budget is the per-benchmark allowance)
         if seqs_set && cfg.n_seqs != cfg.budget {
             return Err(
                 "--seqs and --budget are the same knob for --strategy fixed (the stream \
@@ -275,9 +291,9 @@ pub fn parse_args(argv: &[String]) -> Result<CliArgs, String> {
                 .to_string(),
         );
     }
-    if objective_set && !matches!(command.as_str(), "explore" | "merge" | "serve") {
+    if objective_set && !matches!(command.as_str(), "explore" | "rank" | "merge" | "serve") {
         return Err(format!(
-            "--objective only applies to explore, merge, and serve (the figure \
+            "--objective only applies to explore, rank, merge, and serve (the figure \
              drivers reproduce the paper's time-only protocol)\n{}",
             usage()
         ));
@@ -335,8 +351,8 @@ pub fn parse_args(argv: &[String]) -> Result<CliArgs, String> {
         }
     }
     if let Some(name) = &cfg.only {
-        if command != "explore" {
-            return Err(format!("--bench only applies to explore\n{}", usage()));
+        if !matches!(command.as_str(), "explore" | "rank") {
+            return Err(format!("--bench only applies to explore and rank\n{}", usage()));
         }
         if crate::bench_suite::benchmark_by_name(name).is_none() {
             return Err(crate::bench_suite::unknown_benchmark_error(name));
@@ -367,24 +383,29 @@ pub fn parse_args(argv: &[String]) -> Result<CliArgs, String> {
 }
 
 pub fn usage() -> String {
-    "usage: repro <explore|merge|transfer|serve|cache|bench|lower|fig2|table1|fig3|fig4|fig5|fig6|\
-     fig7|problems|amd|all|passes|targets> \
+    "usage: repro <explore|rank|merge|transfer|serve|cache|bench|lower|fig2|table1|fig3|fig4|fig5|\
+     fig6|fig7|problems|amd|all|passes|targets> \
      [--seqs N] [--seed S] [--target gp104|amd-fiji|host] [--perms N] [--draws N] \
      [--jobs N] [--out DIR] [--full] [--verify-each] [--shard I/N] \
-     [--emit-summary PATH] [--strategy fixed|permute|hillclimb|knn] \
+     [--emit-summary PATH] [--strategy fixed|permute|hillclimb|knn|bandit|genetic] \
      [--budget N] [--k K] [--seq p1,p2,...] [--store DIR] [--max-mb N] \
      [--objective time|energy|size|pareto] [--per-kernel] [--bench NAME] [--family F]\n\
      --jobs = evaluation worker threads (0 = all cores, the default); \
      results are bit-identical for every value\n\
+     --seed S = the exploration seed (default 0xC0FFEE); drives the shared \
+     stream and every adaptive/learned strategy's PRNGs — same seed and \
+     budget reproduce identical summaries\n\
      --full = the paper's protocol (10000 sequences, 1000 permutations/draws)\n\
      --verify-each = verify the IR after every changing pass of every \
      evaluated sequence (slow; pinpoints the offending pass)\n\
      --strategy = the search strategy explore drives (default fixed = the \
-     shared random stream); permute/hillclimb/knn are adaptive\n\
-     --budget N = evaluations per benchmark for adaptive strategies \
-     (default: --seqs); for --strategy fixed it is the stream length\n\
-     --k K = neighbor count for --strategy knn (default 3; the paper \
-     reports K=1 and K=3)\n\
+     shared random stream); permute/hillclimb/knn are adaptive, \
+     bandit/genetic are the learned strategies (see docs/CLI.md)\n\
+     --budget N = evaluations per benchmark for adaptive strategies and \
+     rank (default: --seqs); for --strategy fixed it is the stream length\n\
+     --k K = neighbor count for --strategy knn and rank's knn entry \
+     (default 3; the paper reports K=1 and K=3); rejected under other \
+     strategies\n\
      --shard I/N = evaluate the I-th of N slices of the (benchmark x sequence) \
      grid (explore with --strategy fixed only; requires --emit-summary)\n\
      --objective time|energy|size|pareto = what the winner fold minimizes \
@@ -397,6 +418,10 @@ pub fn usage() -> String {
      JSON\n\
      explore = run the DSE under the selected strategy and print \
      per-benchmark summaries (the raw engine, no figure post-processing)\n\
+     rank = the equal-budget strategy arena: run fixed, hillclimb, knn, \
+     bandit, and genetic over the same benchmarks at --budget (default \
+     --seqs) evaluations per benchmark each, print the per-strategy \
+     geomean ranking, and write rank.json under --out\n\
      merge <shard.json>... = fold shard files from sharded explore runs \
      (descriptor or legacy full-stream form, or a mix); bit-identical to \
      the equivalent single-process explore\n\
@@ -640,6 +665,38 @@ pub fn run(args: CliArgs) -> Result<(), String> {
                     dir.display()
                 );
             }
+        }
+        // the equal-budget strategy arena (docs/ARCHITECTURE.md §learned
+        // search): every shipped strategy, same benchmarks, same budget
+        "rank" => {
+            let ctx = ExpCtx::new(args.cfg.clone());
+            eprintln!(
+                "ranking {} strategies at {} evaluations per benchmark × {} benchmarks on {} \
+                 with {} worker(s) (golden: {}) …",
+                StrategyKind::NAMES.len() - 1, // permute sits the arena out
+                ctx.budget_per_bench(),
+                ctx.benchmarks.len(),
+                ctx.cfg.target.name,
+                crate::dse::engine::resolve_jobs(ctx.cfg.jobs),
+                if ctx.used_pjrt_golden { "AOT artifacts" } else { "interpreter" }
+            );
+            let entries = ctx.rank_strategies();
+            println!(
+                "{}",
+                report::render_rank(&entries, &ctx.cfg.target, ctx.budget_per_bench())
+            );
+            report::write_json(
+                &out,
+                "rank.json",
+                &report::rank_json(
+                    &entries,
+                    ctx.cfg.target.name,
+                    ctx.cfg.seed,
+                    ctx.budget_per_bench(),
+                ),
+            )
+            .map_err(io)?;
+            eprintln!("wrote {}", out.join("rank.json").display());
         }
         "explore" => {
             let cfg = args.cfg.clone();
@@ -909,6 +966,18 @@ mod tests {
         assert_eq!(a.cfg.knn_k, 1);
         let a = parse_args(&sv(&["explore", "--strategy", "permute", "--budget", "20"])).unwrap();
         assert_eq!(a.cfg.strategy, StrategyKind::Permute);
+        // the learned strategies ride the same flags
+        let a = parse_args(&sv(&["explore", "--strategy", "bandit", "--budget", "32"])).unwrap();
+        assert_eq!(a.cfg.strategy, StrategyKind::Bandit);
+        assert_eq!(a.cfg.budget, 32);
+        let a = parse_args(&sv(&["explore", "--strategy", "genetic", "--seed", "7"])).unwrap();
+        assert_eq!(a.cfg.strategy, StrategyKind::Genetic);
+        assert_eq!(a.cfg.seed, 7);
+        // --k is the knn neighbor count: pointed rejection elsewhere
+        let e = parse_args(&sv(&["explore", "--strategy", "bandit", "--k", "3"])).unwrap_err();
+        assert!(e.contains("--strategy bandit"), "{e}");
+        assert!(parse_args(&sv(&["explore", "--strategy", "hillclimb", "--k", "2"])).is_err());
+        assert!(parse_args(&sv(&["explore", "--k", "2"])).is_err(), "fixed");
         // for the fixed strategy --budget is the stream length
         let a = parse_args(&sv(&["explore", "--strategy", "fixed", "--budget", "77"])).unwrap();
         assert_eq!(a.cfg.n_seqs, 77);
@@ -926,14 +995,18 @@ mod tests {
             "explore", "--strategy", "knn", "--seqs", "100", "--budget", "50",
         ]))
         .is_ok());
-        // bad values
-        assert!(parse_args(&sv(&["explore", "--strategy", "genetic"])).is_err());
+        // bad values; the unknown-strategy error lists the full menu
+        let e = parse_args(&sv(&["explore", "--strategy", "anneal"])).unwrap_err();
+        for name in StrategyKind::NAMES {
+            assert!(e.contains(name), "{e} should list {name}");
+        }
         assert!(parse_args(&sv(&["explore", "--budget", "0"])).is_err());
         assert!(parse_args(&sv(&["explore", "--k", "0"])).is_err());
-        // strategy flags are explore-only
+        // --strategy is explore-only; --budget/--k also ride on rank
         assert!(parse_args(&sv(&["fig2", "--strategy", "hillclimb"])).is_err());
         assert!(parse_args(&sv(&["fig2", "--budget", "5"])).is_err());
         assert!(parse_args(&sv(&["merge", "a.json", "--k", "3"])).is_err());
+        assert!(parse_args(&sv(&["rank", "--strategy", "bandit"])).is_err());
         // sharding partitions the fixed grid only
         assert!(parse_args(&sv(&[
             "explore", "--strategy", "hillclimb", "--shard", "1/2", "--emit-summary", "x.json",
@@ -945,6 +1018,34 @@ mod tests {
             "explore", "--strategy", "knn", "--emit-summary", "x.json",
         ]))
         .is_err());
+    }
+
+    #[test]
+    fn rank_flags_parse_and_are_validated() {
+        // the arena takes the exploration knobs that size its budget …
+        let a = parse_args(&sv(&[
+            "rank", "--seqs", "16", "--seed", "29", "--k", "1", "--jobs", "2",
+        ]))
+        .unwrap();
+        assert_eq!(a.command, "rank");
+        assert_eq!(a.cfg.n_seqs, 16);
+        assert_eq!(a.cfg.seed, 29);
+        assert_eq!(a.cfg.knn_k, 1);
+        // … and --budget names the per-benchmark allowance directly
+        let a = parse_args(&sv(&["rank", "--budget", "24"])).unwrap();
+        assert_eq!(a.cfg.budget, 24);
+        // --seqs and --budget stay independent knobs here (no fixed-
+        // stream ambiguity: rank has no shard grid)
+        assert!(parse_args(&sv(&["rank", "--seqs", "100", "--budget", "50"])).is_ok());
+        // one benchmark only is a legitimate arena
+        assert!(parse_args(&sv(&["rank", "--bench", "GEMM"])).is_ok());
+        // strategy selection, sharding, and shard emission stay out
+        assert!(parse_args(&sv(&["rank", "--strategy", "genetic"])).is_err());
+        assert!(
+            parse_args(&sv(&["rank", "--shard", "1/2", "--emit-summary", "x.json"])).is_err()
+        );
+        assert!(parse_args(&sv(&["rank", "--emit-summary", "x.json"])).is_err());
+        assert!(parse_args(&sv(&["rank", "--per-kernel"])).is_err());
     }
 
     #[test]

@@ -8,6 +8,9 @@ use std::sync::Mutex;
 
 use crate::bench_suite::{all_benchmarks, benchmark_by_name, model_time_us, Benchmark, Variant};
 use crate::dse::engine::{self, CacheShards, EvalContext};
+use crate::dse::learn::{
+    self, ArenaEntry, Bandit, Genetic, DEFAULT_POP, SEED_TAG_BANDIT, SEED_TAG_GENETIC,
+};
 use crate::dse::shard::{ShardRun, ShardSpec};
 use crate::dse::store::{Store, WarmStats};
 use crate::dse::strategy::{
@@ -284,7 +287,38 @@ impl ExpCtx {
                 s.set_objective(self.cfg.objective);
                 self.run_strategy(&mut s, per_bench * nb)
             }
+            StrategyKind::Bandit => {
+                let feats = self.feature_vectors();
+                let mut s = Bandit::new(&feats, self.cfg.seed ^ SEED_TAG_BANDIT, DEFAULT_ROUND);
+                s.set_objective(self.cfg.objective);
+                self.run_strategy(&mut s, per_bench * nb)
+            }
+            StrategyKind::Genetic => {
+                let mut s = Genetic::new(nb, self.cfg.seed ^ SEED_TAG_GENETIC, DEFAULT_POP);
+                s.set_objective(self.cfg.objective);
+                self.run_strategy(&mut s, per_bench * nb)
+            }
         }
+    }
+
+    /// `repro rank` end to end: the equal-budget strategy arena
+    /// ([`crate::dse::learn::rank_strategies`]) over this context's
+    /// benchmarks — every shipped strategy at `budget_per_bench()`
+    /// evaluations per benchmark, fresh caches per strategy, reported
+    /// in canonical order.
+    pub fn rank_strategies(&self) -> Vec<ArenaEntry> {
+        let parts = self.parts();
+        let ctxs: Vec<&EvalContext> = parts.iter().map(|&(c, _)| c).collect();
+        let feats = self.feature_vectors();
+        learn::rank_strategies(
+            &ctxs,
+            &feats,
+            self.budget_per_bench(),
+            self.cfg.knn_k,
+            self.cfg.seed,
+            self.cfg.jobs,
+            self.cfg.objective,
+        )
     }
 
     /// MILEPOST-style feature vectors of every benchmark's unoptimized

@@ -11,7 +11,7 @@ use super::experiments::{
 use crate::bench_suite::{all_benchmarks, Benchmark, Dims, Variant};
 use crate::dse::store::{GcReport, StoreStats, WarmStats, RUN_SCHEMA};
 use crate::dse::strategy::{histogram, PermutationStudy};
-use crate::dse::{ExplorationSummary, Objective};
+use crate::dse::{ArenaEntry, ExplorationSummary, Objective};
 use crate::sim::target::Target;
 use crate::util::{geomean, Json};
 
@@ -151,6 +151,133 @@ pub fn render_pareto(summaries: &[ExplorationSummary]) -> String {
 /// output; each element round-trips via [`ExplorationSummary::from_json`]).
 pub fn summaries_json(summaries: &[ExplorationSummary]) -> Json {
     Json::Arr(summaries.iter().map(|s| s.to_json()).collect())
+}
+
+// ----------------------------------------------------- rank (the arena)
+
+/// The `repro rank` console report: every arena entry ranked by geomean
+/// best-speedup (ties keep the canonical strategy order), the
+/// equal-budget invariant spelled out in the evaluations column, plus a
+/// per-benchmark breakdown naming the strategy that led each benchmark.
+pub fn render_rank(entries: &[ArenaEntry], target: &Target, budget_per_bench: usize) -> String {
+    let nb = entries.first().map(|e| e.summaries.len()).unwrap_or(0);
+    let mut s = format!(
+        "strategy arena — {} strategies × {nb} benchmark(s), {budget_per_bench} \
+         evaluation(s) per benchmark each, on {}:\n",
+        entries.len(),
+        target.name
+    );
+    let mut order: Vec<usize> = (0..entries.len()).collect();
+    order.sort_by(|&a, &b| {
+        entries[b]
+            .geomean
+            .partial_cmp(&entries[a].geomean)
+            .expect("geomeans are finite")
+    });
+    s.push_str(&format!(
+        "{:>4} {:<10} {:>8} {:>12}  note\n",
+        "rank", "strategy", "geomean", "evaluations"
+    ));
+    for (i, &ei) in order.iter().enumerate() {
+        let e = &entries[ei];
+        let note = match e.strategy {
+            "fixed" => "the floor: the paper's blind shared stream",
+            "knn" => "the baseline to beat (§4.2 suggestion mechanism)",
+            "bandit" => "learned: contextual Thompson sampling",
+            "genetic" => "learned: generational GA",
+            _ => "",
+        };
+        s.push_str(&format!(
+            "{:>4} {:<10} {:>7.2}x {:>12}  {note}\n",
+            i + 1,
+            e.strategy,
+            e.geomean,
+            e.evaluations
+        ));
+    }
+    if nb > 0 {
+        s.push_str("per-benchmark best speedups (<- names the leader):\n");
+        for bi in 0..nb {
+            let mut best = 0usize;
+            for (si, e) in entries.iter().enumerate() {
+                if e.summaries[bi].best_speedup() > entries[best].summaries[bi].best_speedup() {
+                    best = si;
+                }
+            }
+            let row: Vec<String> = entries
+                .iter()
+                .map(|e| format!("{} {:.2}x", e.strategy, e.summaries[bi].best_speedup()))
+                .collect();
+            s.push_str(&format!(
+                "  {:10} {}  <- {}\n",
+                entries[0].summaries[bi].bench,
+                row.join(" | "),
+                entries[best].strategy
+            ));
+        }
+    }
+    s
+}
+
+/// The `repro rank` JSON dump (`results/rank.json`), schema
+/// `phaseord-rank-v1`: the arena entries in canonical strategy order
+/// (`fixed`, `hillclimb`, `knn`, `bandit`, `genetic`), each with its
+/// geomean, its (shared) evaluation count, and per-benchmark
+/// speedup/winner rows. `null` winners mean the baseline won, matching
+/// the fig2 dump's convention.
+pub fn rank_json(
+    entries: &[ArenaEntry],
+    target: &str,
+    seed: u64,
+    budget_per_bench: usize,
+) -> Json {
+    Json::Obj(vec![
+        ("schema".into(), Json::s("phaseord-rank-v1")),
+        ("target".into(), Json::s(target)),
+        ("seed".into(), Json::n(seed as f64)),
+        ("budget_per_bench".into(), Json::n(budget_per_bench as f64)),
+        (
+            "strategies".into(),
+            Json::Arr(
+                entries
+                    .iter()
+                    .map(|e| {
+                        Json::Obj(vec![
+                            ("name".into(), Json::s(e.strategy)),
+                            ("geomean".into(), Json::n(e.geomean)),
+                            ("evaluations".into(), Json::n(e.evaluations as f64)),
+                            (
+                                "benches".into(),
+                                Json::Arr(
+                                    e.summaries
+                                        .iter()
+                                        .map(|s| {
+                                            Json::Obj(vec![
+                                                ("bench".into(), Json::s(&s.bench)),
+                                                ("speedup".into(), Json::n(s.best_speedup())),
+                                                ("best_time_us".into(), Json::n(s.best_time_us)),
+                                                (
+                                                    "winner".into(),
+                                                    match s.best_seq() {
+                                                        None => Json::Null,
+                                                        Some(seq) => Json::Arr(
+                                                            seq.iter()
+                                                                .map(|p| Json::s(*p))
+                                                                .collect(),
+                                                        ),
+                                                    },
+                                                ),
+                                            ])
+                                        })
+                                        .collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
 }
 
 // ----------------------------------------------------- per-kernel
@@ -975,6 +1102,69 @@ mod tests {
             Some(true)
         );
         assert!(render_per_kernel(&[]).contains("no multi-kernel"));
+    }
+
+    #[test]
+    fn rank_report_renders_and_dumps() {
+        use crate::dse::Winner;
+        let mut won = summary(Objective::Time); // 100us -> 50us = 2.00x
+        won.bench = "GEMM".into();
+        let mut flat = summary(Objective::Time);
+        flat.bench = "GEMM".into();
+        flat.winner = Winner::Baseline;
+        flat.best_time_us = 100.0;
+        let entries = vec![
+            ArenaEntry {
+                strategy: "fixed",
+                geomean: 1.0,
+                evaluations: 8,
+                summaries: vec![flat],
+            },
+            ArenaEntry {
+                strategy: "bandit",
+                geomean: 2.0,
+                evaluations: 8,
+                summaries: vec![won],
+            },
+        ];
+        let s = render_rank(&entries, &Target::gp104(), 8);
+        // bandit outranks fixed despite the canonical entry order
+        assert!(s.contains("   1 bandit"), "{s}");
+        assert!(s.contains("   2 fixed"), "{s}");
+        assert!(s.contains("<- bandit"), "{s}");
+        assert!(s.contains("8 evaluation(s) per benchmark"), "{s}");
+
+        let j = rank_json(&entries, "nvidia-gp104", 29, 8).to_string();
+        assert!(j.contains("\"winner\":null"), "{j}");
+        let back = Json::parse(&j).unwrap();
+        assert_eq!(
+            back.get("schema").and_then(|v| v.as_str()),
+            Some("phaseord-rank-v1")
+        );
+        assert_eq!(
+            back.get("budget_per_bench").and_then(|v| v.as_usize()),
+            Some(8)
+        );
+        let strategies = back.get("strategies").and_then(|a| a.as_arr()).unwrap();
+        assert_eq!(strategies.len(), 2);
+        // the JSON keeps canonical order — ranking is a render concern
+        assert_eq!(
+            strategies[0].get("name").and_then(|v| v.as_str()),
+            Some("fixed")
+        );
+        assert_eq!(
+            strategies[0].get("evaluations").and_then(|v| v.as_usize()),
+            Some(8)
+        );
+        let benches = strategies[1].get("benches").and_then(|a| a.as_arr()).unwrap();
+        assert_eq!(
+            benches[0].get("bench").and_then(|v| v.as_str()),
+            Some("GEMM")
+        );
+        assert_eq!(
+            benches[0].get("speedup").and_then(|v| v.as_f64()),
+            Some(2.0)
+        );
     }
 
     #[test]

@@ -1,0 +1,117 @@
+//! The strategy arena: every shipped search strategy, same benchmarks,
+//! same evaluation budget, ranked (`repro rank`).
+//!
+//! Equal-budget comparison is the only fair frame for adaptive search:
+//! an adaptive strategy that needs 10× the evaluations to match a
+//! random stream has not learned anything useful. The arena runs
+//! `fixed` / `hillclimb` / `knn` / `bandit` / `genetic` over the *same*
+//! [`EvalContext`]s with `budget_per_bench × n_benches` evaluations
+//! each, fresh caches per run (no strategy inherits another's warm
+//! artifacts — though evaluations being pure, caching could only change
+//! wall-clock, never results), and reports per-strategy geomean
+//! best-speedups. The kNN leave-one-out ranking (§4.2, the paper's own
+//! suggestion mechanism) is the baseline the learned strategies are
+//! measured against; `fixed` is the floor any adaptive strategy must
+//! not lose to.
+//!
+//! The kNN reference pool — each benchmark's winner from somewhere —
+//! comes from the arena's own `fixed` run, mirroring the CLI's
+//! pre-exploration for `--strategy knn`: the comparison stays
+//! self-contained and budget-accounted.
+
+use crate::dse::engine::{self, CacheShards, EvalContext};
+use crate::dse::explorer::{ExplorationSummary, Objective};
+use crate::dse::seqgen::SeqGen;
+use crate::dse::strategy::{FixedStream, HillClimb, KnnSeeded, SearchStrategy, DEFAULT_ROUND};
+use crate::features::FeatureVector;
+use crate::util::geomean;
+
+use super::{Bandit, Genetic, DEFAULT_POP};
+
+/// Seed tag for the bandit's PRNGs (XORed with the exploration seed,
+/// following the per-strategy tag convention of
+/// `coordinator::experiments`).
+pub const SEED_TAG_BANDIT: u64 = 0xB4D17;
+
+/// Seed tag for the genetic strategy's PRNGs.
+pub const SEED_TAG_GENETIC: u64 = 0x6E7E71C;
+
+/// One strategy's arena outcome: its summaries at the shared budget,
+/// plus the scores the ranking is printed from.
+pub struct ArenaEntry {
+    pub strategy: &'static str,
+    /// geomean of per-benchmark best-speedups over the `-O0` baseline
+    pub geomean: f64,
+    /// total evaluations actually charged (the equal-budget invariant:
+    /// identical across entries)
+    pub evaluations: usize,
+    pub summaries: Vec<ExplorationSummary>,
+}
+
+/// Run every shipped strategy at the same `budget_per_bench ×
+/// ctxs.len()` evaluation budget and report them in canonical order
+/// (`fixed`, `hillclimb`, `knn`, `bandit`, `genetic`). `feats[i]`
+/// must describe `ctxs[i]` (the kNN ranking and the bandit's contexts
+/// are keyed by position).
+pub fn rank_strategies(
+    ctxs: &[&EvalContext],
+    feats: &[(String, FeatureVector)],
+    budget_per_bench: usize,
+    k: usize,
+    seed: u64,
+    jobs: usize,
+    objective: Objective,
+) -> Vec<ArenaEntry> {
+    assert_eq!(
+        ctxs.len(),
+        feats.len(),
+        "one feature vector per evaluation context"
+    );
+    let nb = ctxs.len();
+    let budget = budget_per_bench * nb;
+    let run = |s: &mut dyn SearchStrategy| -> ArenaEntry {
+        let name = s.name();
+        // fresh caches per strategy: every entry pays for its own
+        // evaluations, nothing leaks between runs
+        let caches: Vec<CacheShards> = ctxs.iter().map(|_| CacheShards::new()).collect();
+        let parts: Vec<(&EvalContext, &CacheShards)> =
+            ctxs.iter().copied().zip(caches.iter()).collect();
+        let summaries = engine::run_obj(s, &parts, budget, jobs, objective);
+        let speedups: Vec<f64> = summaries.iter().map(|s| s.best_speedup()).collect();
+        ArenaEntry {
+            strategy: name,
+            geomean: geomean(&speedups),
+            evaluations: summaries.iter().map(|s| s.evaluations.len()).sum(),
+            summaries,
+        }
+    };
+
+    let mut entries = Vec::with_capacity(5);
+    let stream = SeqGen::stream(seed, budget_per_bench);
+    entries.push(run(&mut FixedStream::new(stream, nb)));
+
+    let mut hc = HillClimb::new(nb, seed ^ 0xC11B, DEFAULT_ROUND);
+    hc.set_objective(objective);
+    entries.push(run(&mut hc));
+
+    // the fixed run's winners are the kNN reference pool (None =
+    // baseline won, contributing the -O0 fallback seed)
+    let winners: Vec<Option<Vec<&'static str>>> = entries[0]
+        .summaries
+        .iter()
+        .map(|s| s.best_seq().map(|q| q.to_vec()))
+        .collect();
+    let mut knn = KnnSeeded::new(feats, &winners, k, seed ^ 0x4A2, DEFAULT_ROUND);
+    knn.set_objective(objective);
+    entries.push(run(&mut knn));
+
+    let mut bandit = Bandit::new(feats, seed ^ SEED_TAG_BANDIT, DEFAULT_ROUND);
+    bandit.set_objective(objective);
+    entries.push(run(&mut bandit));
+
+    let mut genetic = Genetic::new(nb, seed ^ SEED_TAG_GENETIC, DEFAULT_POP);
+    genetic.set_objective(objective);
+    entries.push(run(&mut genetic));
+
+    entries
+}

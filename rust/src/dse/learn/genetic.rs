@@ -1,0 +1,364 @@
+//! Population-based phase-order search: a generational genetic
+//! algorithm over pass sequences.
+//!
+//! Each benchmark evolves its own population of phase orders
+//! (`repro explore --strategy genetic`):
+//!
+//! * **Initialization** — member 0 is the empty sequence (the `-O0`
+//!   anchor, so "best" is never worse than not optimizing); the rest
+//!   are short random mutation walks away from it.
+//! * **Selection** — size-[`TOURNAMENT`] tournaments over the previous
+//!   generation's observed fitness (the configured [`Objective`]'s
+//!   scalar; failed evaluations carry infinite fitness, so they lose
+//!   every tournament they are drawn into).
+//! * **Crossover** — order-preserving one-point tail crossover
+//!   ([`order_crossover`]): a prefix of one parent spliced onto a
+//!   suffix of the other, so every pass keeps the relative order it
+//!   had in its parent (order is the paper's variable under study —
+//!   a crossover that scrambled it would erase exactly the signal
+//!   being selected for).
+//! * **Mutation** — the same insert / delete / swap / replace edits
+//!   the hill-climber uses ([`crate::dse::strategy`]'s `mutate`),
+//!   applied to half the offspring.
+//! * **Elitism** — the best-so-far sequence is copied verbatim into
+//!   every new generation (and re-proposed, so the invariant is
+//!   visible in the evaluation stream).
+//!
+//! A generation is proposed as one batch (benchmark-interleaved, so a
+//! budget cut spreads evenly) and evolves only once fully observed —
+//! the engine's proposal-order observation replay makes that
+//! deterministic at every `--jobs` level.
+
+use crate::dse::explorer::{Evaluation, Objective};
+use crate::dse::seqgen::MAX_SEQ_LEN;
+use crate::dse::strategy::{mutate, Proposal, SearchStrategy};
+use crate::passes::registry_names;
+use crate::util::Rng;
+
+/// Default population size per benchmark: small enough that a
+/// paper-scale per-benchmark budget spans several generations.
+pub const DEFAULT_POP: usize = 8;
+
+/// Tournament size for parent selection.
+pub const TOURNAMENT: usize = 3;
+
+/// Order-preserving one-point tail crossover: child = a random prefix
+/// of `a` followed by a random suffix of `b`, truncated to the
+/// sequence cap. Both halves keep their parent's internal pass order.
+pub fn order_crossover(
+    rng: &mut Rng,
+    a: &[&'static str],
+    b: &[&'static str],
+) -> Vec<&'static str> {
+    let cut_a = rng.below(a.len() + 1);
+    let cut_b = rng.below(b.len() + 1);
+    let mut child = Vec::with_capacity(cut_a + (b.len() - cut_b));
+    child.extend_from_slice(&a[..cut_a]);
+    child.extend_from_slice(&b[cut_b..]);
+    child.truncate(MAX_SEQ_LEN);
+    child
+}
+
+fn tournament(rng: &mut Rng, fitness: &[f64]) -> usize {
+    let mut best = rng.below(fitness.len());
+    for _ in 1..TOURNAMENT {
+        let c = rng.below(fitness.len());
+        if fitness[c] < fitness[best] {
+            best = c;
+        }
+    }
+    best
+}
+
+/// Per-benchmark population state.
+struct Pop {
+    rng: Rng,
+    members: Vec<Vec<&'static str>>,
+    fitness: Vec<f64>,
+    /// members proposed so far this generation
+    proposed: usize,
+    /// members observed so far this generation
+    observed: usize,
+    generation: usize,
+    best_seq: Vec<&'static str>,
+    best_score: f64,
+}
+
+/// The genetic strategy (`repro explore --strategy genetic`).
+pub struct Genetic {
+    names: &'static [&'static str],
+    pops: Vec<Pop>,
+    pop_size: usize,
+    objective: Objective,
+}
+
+impl Genetic {
+    pub fn new(n_benches: usize, seed: u64, pop_size: usize) -> Genetic {
+        let names = registry_names();
+        let pop_size = pop_size.max(2);
+        let pops = (0..n_benches)
+            .map(|bi| {
+                let mut rng = Rng::new(seed ^ (bi as u64).wrapping_mul(0x9E3779B97F4A7C15));
+                let mut members = vec![Vec::new()]; // the -O0 anchor
+                for j in 1..pop_size {
+                    let mut m: Vec<&'static str> = Vec::new();
+                    for _ in 0..1 + (j % 3) {
+                        m = mutate(&mut rng, names, &m);
+                    }
+                    members.push(m);
+                }
+                Pop {
+                    rng,
+                    members,
+                    fitness: vec![f64::INFINITY; pop_size],
+                    proposed: 0,
+                    observed: 0,
+                    generation: 0,
+                    best_seq: Vec::new(),
+                    best_score: f64::INFINITY,
+                }
+            })
+            .collect();
+        Genetic {
+            names,
+            pops,
+            pop_size,
+            objective: Objective::Time,
+        }
+    }
+
+    /// Point the fitness at an [`Objective`]'s scalar component. Set
+    /// before the search starts — fitness already on the books is not
+    /// re-folded.
+    pub fn set_objective(&mut self, objective: Objective) {
+        self.objective = objective;
+    }
+
+    /// The best validated `(sequence, score)` for a benchmark so far.
+    pub fn best(&self, bench: usize) -> (&[&'static str], f64) {
+        let p = &self.pops[bench];
+        (&p.best_seq, p.best_score)
+    }
+
+    /// The current generation's genomes for a benchmark (test hook).
+    pub fn population(&self, bench: usize) -> &[Vec<&'static str>] {
+        &self.pops[bench].members
+    }
+
+    /// How many generations a benchmark's population has evolved
+    /// through (test hook; the initial population is generation 0).
+    pub fn generation(&self, bench: usize) -> usize {
+        self.pops[bench].generation
+    }
+
+    fn evolve(pop: &mut Pop, names: &'static [&'static str], pop_size: usize) {
+        let parents = std::mem::take(&mut pop.members);
+        let fitness = std::mem::take(&mut pop.fitness);
+        // elitism: the best-so-far survives verbatim (and is
+        // re-proposed, keeping the invariant observable)
+        let mut next = vec![pop.best_seq.clone()];
+        while next.len() < pop_size {
+            let a = tournament(&mut pop.rng, &fitness);
+            let b = tournament(&mut pop.rng, &fitness);
+            let mut child = order_crossover(&mut pop.rng, &parents[a], &parents[b]);
+            if pop.rng.below(2) == 0 {
+                child = mutate(&mut pop.rng, names, &child);
+            }
+            next.push(child);
+        }
+        pop.members = next;
+        pop.fitness = vec![f64::INFINITY; pop_size];
+        pop.proposed = 0;
+        pop.observed = 0;
+        pop.generation += 1;
+    }
+}
+
+impl SearchStrategy for Genetic {
+    fn name(&self) -> &'static str {
+        "genetic"
+    }
+
+    fn propose(&mut self, budget: usize) -> Vec<Proposal> {
+        // a fully-observed generation breeds the next one
+        for pop in &mut self.pops {
+            if pop.observed == pop.members.len() {
+                Genetic::evolve(pop, self.names, self.pop_size);
+            }
+        }
+        // interleave benchmarks so a budget cut spreads evenly
+        let mut out = Vec::new();
+        loop {
+            let mut progressed = false;
+            for (bi, pop) in self.pops.iter_mut().enumerate() {
+                if pop.proposed < pop.members.len() {
+                    if out.len() >= budget {
+                        return out;
+                    }
+                    out.push(Proposal {
+                        bench: bi,
+                        seq: pop.members[pop.proposed].clone(),
+                    });
+                    pop.proposed += 1;
+                    progressed = true;
+                }
+            }
+            if !progressed {
+                return out;
+            }
+        }
+    }
+
+    fn observe(&mut self, proposal: &Proposal, eval: &Evaluation) {
+        let pop = &mut self.pops[proposal.bench];
+        debug_assert!(
+            pop.observed < pop.proposed,
+            "observation without a pending proposal"
+        );
+        let score = eval.obj().scalar(self.objective);
+        pop.fitness[pop.observed] = if eval.status.is_ok() {
+            score
+        } else {
+            f64::INFINITY
+        };
+        pop.observed += 1;
+        if eval.status.is_ok() && score < pop.best_score {
+            pop.best_score = score;
+            pop.best_seq = proposal.seq.clone();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::EvalStatus;
+
+    fn ok_eval(time_us: f64) -> Evaluation {
+        Evaluation {
+            status: EvalStatus::Ok,
+            time_us,
+            energy_uj: 10.0 * time_us,
+            code_size: 50.0,
+            ptx_hash: 1,
+            cached: false,
+        }
+    }
+
+    #[test]
+    fn initial_population_has_the_anchor_and_registry_only_passes() {
+        let g = Genetic::new(2, 0x6E, DEFAULT_POP);
+        for bi in 0..2 {
+            let pop = g.population(bi);
+            assert_eq!(pop.len(), DEFAULT_POP);
+            assert!(pop[0].is_empty(), "member 0 is the -O0 anchor");
+            for m in pop {
+                assert!(m.len() <= MAX_SEQ_LEN);
+                for p in m {
+                    assert!(registry_names().contains(p));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn a_full_generation_is_proposed_interleaved_and_budget_capped() {
+        let mut g = Genetic::new(2, 1, 4);
+        let batch = g.propose(usize::MAX);
+        assert_eq!(batch.len(), 8, "one full generation across benchmarks");
+        for (k, p) in batch.iter().enumerate() {
+            assert_eq!(p.bench, k % 2, "benchmark-interleaved");
+        }
+        let mut g2 = Genetic::new(2, 1, 4);
+        assert_eq!(g2.propose(5).len(), 5, "the budget is a hard cap");
+        // the remainder of the generation comes out on the next call
+        assert_eq!(g2.propose(usize::MAX).len(), 3);
+    }
+
+    #[test]
+    fn elitism_reproposes_the_best_of_the_previous_generation() {
+        let mut g = Genetic::new(1, 0xE1, 4);
+        let gen0 = g.propose(usize::MAX);
+        assert_eq!(gen0.len(), 4);
+        // member 2 wins this generation
+        for (i, p) in gen0.iter().enumerate() {
+            let t = if i == 2 { 10.0 } else { 100.0 + i as f64 };
+            g.observe(p, &ok_eval(t));
+        }
+        assert_eq!(g.best(0).0, &gen0[2].seq[..]);
+        let gen1 = g.propose(usize::MAX);
+        assert_eq!(g.generation(0), 1);
+        assert_eq!(
+            gen1[0].seq, gen0[2].seq,
+            "the elite is the first member of the new generation"
+        );
+        // a later, better observation replaces the elite next time
+        for (i, p) in gen1.iter().enumerate() {
+            let t = if i == 1 { 5.0 } else { 50.0 };
+            g.observe(p, &ok_eval(t));
+        }
+        let gen2 = g.propose(usize::MAX);
+        assert_eq!(gen2[0].seq, gen1[1].seq);
+    }
+
+    #[test]
+    fn failed_members_lose_tournaments_and_never_become_elite() {
+        let mut g = Genetic::new(1, 0xBAD, 4);
+        let gen0 = g.propose(usize::MAX);
+        let bad = Evaluation {
+            status: EvalStatus::Crash("boom".to_string()),
+            ..ok_eval(0.5)
+        };
+        for (i, p) in gen0.iter().enumerate() {
+            if i == 3 {
+                g.observe(p, &ok_eval(42.0));
+            } else {
+                g.observe(p, &bad);
+            }
+        }
+        assert_eq!(g.best(0), (&gen0[3].seq[..], 42.0));
+        let gen1 = g.propose(usize::MAX);
+        assert_eq!(gen1[0].seq, gen0[3].seq);
+    }
+
+    #[test]
+    fn crossover_preserves_parent_order_and_the_length_cap() {
+        let names = registry_names();
+        let mut rng = Rng::new(0xC0);
+        let a: Vec<&'static str> = (0..6).map(|i| names[i]).collect();
+        let b: Vec<&'static str> = (0..6).map(|i| names[i + 6]).collect();
+        for _ in 0..200 {
+            let child = order_crossover(&mut rng, &a, &b);
+            assert!(child.len() <= a.len() + b.len());
+            // the child is a prefix of a followed by a suffix of b:
+            // find the split and check both halves verbatim
+            let cut = child
+                .iter()
+                .position(|p| b.contains(p))
+                .unwrap_or(child.len());
+            assert_eq!(&child[..cut], &a[..cut]);
+            assert_eq!(&child[cut..], &b[b.len() - (child.len() - cut)..]);
+        }
+        // capped parents cannot produce an over-long child
+        let long: Vec<&'static str> = (0..MAX_SEQ_LEN).map(|i| names[i % names.len()]).collect();
+        let child = order_crossover(&mut rng, &long, &long);
+        assert!(child.len() <= MAX_SEQ_LEN);
+    }
+
+    #[test]
+    fn same_seed_replays_and_seed_changes_diverge() {
+        let drive = |seed: u64| {
+            let mut g = Genetic::new(2, seed, 6);
+            let gen0 = g.propose(usize::MAX);
+            for (i, p) in gen0.iter().enumerate() {
+                g.observe(p, &ok_eval(100.0 - i as f64));
+            }
+            g.propose(usize::MAX)
+                .iter()
+                .map(|p| (p.bench, p.seq.clone()))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(drive(0x1), drive(0x1));
+        assert_ne!(drive(0x1), drive(0x2), "the seed drives the population");
+    }
+}

@@ -1,0 +1,34 @@
+//! Learned search strategies over the DSE engine, plus the arena that
+//! ranks them.
+//!
+//! The paper's exploration samples phase orders blindly; the learned-
+//! phase-ordering literature (AutoPhase, the Ashouri et al. survey —
+//! see PAPERS.md) frames the problem as sequential decision making
+//! over static code features instead. This module closes that gap on
+//! top of the existing [`SearchStrategy`](crate::dse::SearchStrategy)
+//! interface — `propose`/`observe` *is* an online-learning loop, and
+//! [`crate::features::milepost`] already supplies the state vector:
+//!
+//! * [`policy::Bandit`] — contextual Thompson sampling: per-pass
+//!   linear reward models over milepost features plus a pass-prefix
+//!   summary, trained online from observed evaluations.
+//! * [`genetic::Genetic`] — a generational GA: tournament selection,
+//!   order-preserving crossover, the hill-climber's mutation kit, and
+//!   elitism keeping the best-so-far.
+//! * [`arena::rank_strategies`] — the equal-budget strategy arena
+//!   behind `repro rank`: every shipped strategy, same benchmarks,
+//!   same budget, ranked by geomean best-speedup.
+//!
+//! Both strategies honor the engine's determinism contract (seeded
+//! PRNGs drawn only during `propose`, reactions only to the
+//! canonicalized observation replay), so `--strategy bandit|genetic`
+//! summaries are bit-identical at every `--jobs` level — locked down
+//! in `rust/tests/learn.rs`.
+
+pub mod arena;
+pub mod genetic;
+pub mod policy;
+
+pub use arena::{rank_strategies, ArenaEntry, SEED_TAG_BANDIT, SEED_TAG_GENETIC};
+pub use genetic::{order_crossover, Genetic, DEFAULT_POP};
+pub use policy::{Bandit, EPISODE_LEN};

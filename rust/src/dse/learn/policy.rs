@@ -1,0 +1,486 @@
+//! Contextual-bandit phase selection: Thompson sampling over a linear
+//! reward model per pass.
+//!
+//! The AutoPhase framing (PAPERS.md, arXiv 1901.04615): phase ordering
+//! is sequential decision making — given the *state* of a compilation
+//! (static code features plus the passes already applied), pick the
+//! next pass. [`Bandit`] implements the simplest learned instance of
+//! that loop that fits the engine's [`SearchStrategy`] contract:
+//!
+//! * **Arms** are the registry passes. Each arm owns a linear reward
+//!   model over a context vector built from the benchmark's
+//!   MILEPOST-style feature vector ([`crate::features::milepost`])
+//!   plus a running pass-prefix summary (per-pass counts and prefix
+//!   length), so the same arm can score differently on different
+//!   benchmarks *and* at different depths of the same episode.
+//! * **Selection** is Thompson sampling: score every arm with its
+//!   posterior-mean prediction plus Gaussian noise scaled by the
+//!   model's per-coordinate uncertainty (observation mass accumulates
+//!   in a diagonal precision vector, so the noise shrinks exactly
+//!   where the model has seen data). Draws come only from the
+//!   per-benchmark [`Rng`]s seeded from the exploration seed —
+//!   the determinism contract of [`crate::dse::strategy`].
+//! * **Training** happens online in `observe`: the reward of appending
+//!   pass `a` to the episode prefix is the relative improvement over
+//!   the prefix's own score (clipped to `[-1, 1]`; failed evaluations
+//!   earn `-1`), fed to the chosen arm's model with a normalized
+//!   half-step update (the prediction error halves per repeat of the
+//!   same observation — monotone convergence, tested in
+//!   `rust/tests/learn.rs`).
+//!
+//! Episodes grow one pass per adoption: an improving candidate becomes
+//! the new prefix; at [`EPISODE_LEN`] the episode restarts from the
+//! best-so-far sequence (or the `-O0` anchor when the best is the
+//! baseline), so the search interleaves exploitation of known-good
+//! prefixes with fresh roll-outs.
+
+use std::collections::VecDeque;
+
+use crate::dse::explorer::{Evaluation, Objective};
+use crate::dse::seqgen::MAX_SEQ_LEN;
+use crate::dse::strategy::{Proposal, SearchStrategy};
+use crate::features::{FeatureVector, NUM_FEATURES};
+use crate::passes::registry_names;
+use crate::util::Rng;
+
+/// Episode cap: a prefix restarts (from the best-so-far sequence) once
+/// it would grow past this many passes. Winning orders in the paper's
+/// tables are short; capping keeps roll-outs from drifting into long
+/// low-signal tails.
+pub const EPISODE_LEN: usize = 8;
+
+/// One standard-normal draw (Box–Muller over the strategy's own RNG —
+/// no global randomness, per the determinism contract).
+fn gauss(rng: &mut Rng) -> f64 {
+    let u1 = 1.0 - rng.f64(); // (0, 1]: ln stays finite
+    let u2 = rng.f64();
+    (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+}
+
+/// Per-pass linear reward model: weights plus a diagonal observation
+/// mass (`precision[i]` grows by `x[i]^2` per update, so the Thompson
+/// noise contracts exactly along observed directions).
+struct Arm {
+    weights: Vec<f64>,
+    precision: Vec<f64>,
+}
+
+impl Arm {
+    fn new(dim: usize) -> Arm {
+        Arm {
+            weights: vec![0.0; dim],
+            precision: vec![1.0; dim],
+        }
+    }
+
+    fn mean(&self, x: &[f64]) -> f64 {
+        self.weights.iter().zip(x).map(|(w, &xi)| w * xi).sum()
+    }
+
+    fn sigma(&self, x: &[f64]) -> f64 {
+        self.precision
+            .iter()
+            .zip(x)
+            .map(|(p, &xi)| xi * xi / p)
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+/// A proposal in flight: which arm produced it, the context it was
+/// scored in, and the prefix score it must improve on. Queued at
+/// `propose`, consumed at `observe` — the engine feeds observations
+/// back in proposal order, so a per-benchmark FIFO realigns them.
+struct Pending {
+    /// `None` for the bootstrap `-O0` anchor (no arm was chosen).
+    arm: Option<usize>,
+    ctx: Vec<f64>,
+    base_score: f64,
+}
+
+/// Per-benchmark episode state.
+struct BenchState {
+    rng: Rng,
+    feats: FeatureVector,
+    prefix: Vec<&'static str>,
+    prefix_score: f64,
+    baseline_score: f64,
+    best_seq: Vec<&'static str>,
+    best_score: f64,
+    pending: VecDeque<Pending>,
+}
+
+/// The contextual-bandit strategy (`repro explore --strategy bandit`).
+/// Construct with one `(name, feature-vector)` pair per benchmark, in
+/// the same order as the `parts` slice handed to
+/// [`engine::run`](crate::dse::engine::run).
+pub struct Bandit {
+    names: &'static [&'static str],
+    arms: Vec<Arm>,
+    states: Vec<BenchState>,
+    objective: Objective,
+    round_size: usize,
+    bootstrapped: bool,
+}
+
+impl Bandit {
+    pub fn new(feats: &[(String, FeatureVector)], seed: u64, round_size: usize) -> Bandit {
+        let names = registry_names();
+        let dim = 2 + NUM_FEATURES + names.len();
+        Bandit {
+            names,
+            arms: (0..names.len()).map(|_| Arm::new(dim)).collect(),
+            states: feats
+                .iter()
+                .enumerate()
+                .map(|(bi, (_, f))| BenchState {
+                    rng: Rng::new(seed ^ (bi as u64).wrapping_mul(0x9E3779B97F4A7C15)),
+                    feats: *f,
+                    prefix: Vec::new(),
+                    prefix_score: f64::INFINITY,
+                    baseline_score: 1.0,
+                    best_seq: Vec::new(),
+                    best_score: f64::INFINITY,
+                    pending: VecDeque::new(),
+                })
+                .collect(),
+            objective: Objective::Time,
+            round_size: round_size.max(1),
+            bootstrapped: false,
+        }
+    }
+
+    /// Point the reward at an [`Objective`]'s scalar component. Set
+    /// before the search starts (scores already on the books are not
+    /// re-folded).
+    pub fn set_objective(&mut self, objective: Objective) {
+        self.objective = objective;
+    }
+
+    /// The best validated `(sequence, score)` for a benchmark so far.
+    pub fn best(&self, bench: usize) -> (&[&'static str], f64) {
+        let st = &self.states[bench];
+        (&st.best_seq, st.best_score)
+    }
+
+    /// The context vector the models see for a benchmark's *current*
+    /// prefix: `[bias, squashed milepost features, per-pass prefix
+    /// counts, prefix length]`, every component in `[-1, 1]`.
+    pub fn context(&self, bench: usize) -> Vec<f64> {
+        let st = &self.states[bench];
+        context_of(&st.feats, &st.prefix, self.names)
+    }
+
+    /// Posterior-mean reward prediction of one arm in context `x`
+    /// (test hook: `train` with a constant reward must drive this
+    /// monotonically toward that reward).
+    pub fn predict(&self, arm: usize, x: &[f64]) -> f64 {
+        self.arms[arm].mean(x)
+    }
+
+    /// Accumulated observation mass of one arm (test hook: every
+    /// update adds `|x|^2`, so this never decreases).
+    pub fn precision_sum(&self, arm: usize) -> f64 {
+        self.arms[arm].precision.iter().sum()
+    }
+
+    /// One online update of an arm's linear model: a normalized
+    /// half-step toward `reward` along `x`, then the observation mass
+    /// grows by `x[i]^2` per coordinate. Repeating the same `(x,
+    /// reward)` pair halves the prediction error each time.
+    pub fn train(&mut self, arm: usize, x: &[f64], reward: f64) {
+        let a = &mut self.arms[arm];
+        let mut dot = 0.0;
+        let mut xx = 0.0;
+        for (w, &xi) in a.weights.iter().zip(x) {
+            dot += w * xi;
+            xx += xi * xi;
+        }
+        let step = 0.5 * (reward - dot) / xx.max(1e-12);
+        for (w, &xi) in a.weights.iter_mut().zip(x) {
+            *w += step * xi;
+        }
+        for (p, &xi) in a.precision.iter_mut().zip(x) {
+            *p += xi * xi;
+        }
+    }
+
+    /// Thompson-sample the next pass for one benchmark: every arm is
+    /// scored `mean + z·sigma` in the bench's current context; the
+    /// argmax wins. Returns the arm index and the context it was
+    /// scored in.
+    fn sample_arm(&mut self, bench: usize) -> (usize, Vec<f64>) {
+        let x = self.context(bench);
+        let st = &mut self.states[bench];
+        let mut best_arm = 0;
+        let mut best_score = f64::NEG_INFINITY;
+        for (ai, arm) in self.arms.iter().enumerate() {
+            let score = arm.mean(&x) + gauss(&mut st.rng) * arm.sigma(&x);
+            if score > best_score {
+                best_score = score;
+                best_arm = ai;
+            }
+        }
+        (best_arm, x)
+    }
+}
+
+fn context_of(
+    feats: &FeatureVector,
+    prefix: &[&'static str],
+    names: &'static [&'static str],
+) -> Vec<f64> {
+    let mut x = Vec::with_capacity(2 + NUM_FEATURES + names.len());
+    x.push(1.0);
+    for &f in feats.iter() {
+        // squash unbounded counts into [-1, 1] so no single feature
+        // dominates the dot product
+        x.push(f / (1.0 + f.abs()));
+    }
+    let mut counts = vec![0.0f64; names.len()];
+    for p in prefix {
+        if let Some(i) = names.iter().position(|n| n == p) {
+            counts[i] += 1.0;
+        }
+    }
+    for c in counts {
+        x.push((c / 4.0).min(1.0));
+    }
+    x.push((prefix.len() as f64 / EPISODE_LEN as f64).min(1.0));
+    x
+}
+
+impl SearchStrategy for Bandit {
+    fn name(&self) -> &'static str {
+        "bandit"
+    }
+
+    fn propose(&mut self, budget: usize) -> Vec<Proposal> {
+        let mut out = Vec::new();
+        if !self.bootstrapped {
+            // round 0: the -O0 anchor per benchmark, establishing the
+            // baseline score every reward is normalized by
+            self.bootstrapped = true;
+            for (bi, st) in self.states.iter_mut().enumerate() {
+                if out.len() >= budget {
+                    return out;
+                }
+                st.pending.push_back(Pending {
+                    arm: None,
+                    ctx: Vec::new(),
+                    base_score: f64::INFINITY,
+                });
+                out.push(Proposal {
+                    bench: bi,
+                    seq: Vec::new(),
+                });
+            }
+            return out;
+        }
+        // interleave benchmarks so a budget cut mid-round spreads evenly
+        for _ in 0..self.round_size {
+            for bi in 0..self.states.len() {
+                if out.len() >= budget {
+                    return out;
+                }
+                {
+                    // episode cap: restart from the best-so-far anchor
+                    let st = &mut self.states[bi];
+                    if st.prefix.len() + 1 > EPISODE_LEN.min(MAX_SEQ_LEN) {
+                        if st.best_seq.len() + 1 <= EPISODE_LEN {
+                            st.prefix = st.best_seq.clone();
+                            st.prefix_score = st.best_score;
+                        } else {
+                            st.prefix = Vec::new();
+                            st.prefix_score = st.baseline_score;
+                        }
+                    }
+                }
+                let (arm, ctx) = self.sample_arm(bi);
+                let st = &mut self.states[bi];
+                let mut seq = st.prefix.clone();
+                seq.push(self.names[arm]);
+                st.pending.push_back(Pending {
+                    arm: Some(arm),
+                    ctx,
+                    base_score: st.prefix_score,
+                });
+                out.push(Proposal { bench: bi, seq });
+            }
+        }
+        out
+    }
+
+    fn observe(&mut self, proposal: &Proposal, eval: &Evaluation) {
+        let Some(entry) = self.states[proposal.bench].pending.pop_front() else {
+            debug_assert!(false, "observation without a pending proposal");
+            return;
+        };
+        let score = eval.obj().scalar(self.objective);
+        let ok = eval.status.is_ok();
+        let st = &mut self.states[proposal.bench];
+        match entry.arm {
+            None => {
+                // bootstrap: the -O0 anchor defines the reward scale
+                st.baseline_score = if ok && score.is_finite() && score > 0.0 {
+                    score
+                } else {
+                    1.0
+                };
+                st.prefix_score = if ok { score } else { f64::INFINITY };
+            }
+            Some(arm) => {
+                let reward = if !ok {
+                    -1.0
+                } else if !entry.base_score.is_finite() {
+                    1.0
+                } else {
+                    ((entry.base_score - score) / st.baseline_score).clamp(-1.0, 1.0)
+                };
+                if ok && score < st.prefix_score {
+                    st.prefix = proposal.seq.clone();
+                    st.prefix_score = score;
+                }
+                self.train(arm, &entry.ctx, reward);
+            }
+        }
+        let st = &mut self.states[proposal.bench];
+        if ok && score < st.best_score {
+            st.best_score = score;
+            st.best_seq = proposal.seq.clone();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::EvalStatus;
+
+    fn feats(n: usize) -> Vec<(String, FeatureVector)> {
+        (0..n)
+            .map(|bi| {
+                let mut f = [0.0; NUM_FEATURES];
+                for (i, slot) in f.iter_mut().enumerate() {
+                    *slot = ((i * 7 + bi * 13) % 5) as f64;
+                }
+                (format!("b{bi}"), f)
+            })
+            .collect()
+    }
+
+    fn ok_eval(time_us: f64) -> Evaluation {
+        Evaluation {
+            status: EvalStatus::Ok,
+            time_us,
+            energy_uj: 10.0 * time_us,
+            code_size: 50.0,
+            ptx_hash: 1,
+            cached: false,
+        }
+    }
+
+    #[test]
+    fn bandit_bootstraps_with_the_empty_sequence_then_extends_prefixes() {
+        let f = feats(2);
+        let mut s = Bandit::new(&f, 0xB0057, 3);
+        let boot = s.propose(usize::MAX);
+        assert_eq!(boot.len(), 2);
+        assert!(boot.iter().all(|p| p.seq.is_empty()));
+        for p in &boot {
+            s.observe(p, &ok_eval(100.0));
+        }
+        let round = s.propose(usize::MAX);
+        assert_eq!(round.len(), 6, "round_size proposals per benchmark");
+        assert_eq!(round.iter().filter(|p| p.bench == 0).count(), 3);
+        // every proposal extends the (empty) prefix by exactly one
+        // registry pass
+        for p in &round {
+            assert_eq!(p.seq.len(), 1);
+            assert!(registry_names().contains(&p.seq[0]));
+        }
+        // an improving observation is adopted as the new prefix
+        let fast = round[0].clone();
+        s.observe(&fast, &ok_eval(50.0));
+        for p in &round[1..] {
+            s.observe(p, &ok_eval(120.0));
+        }
+        let next = s.propose(usize::MAX);
+        let b0: Vec<_> = next.iter().filter(|p| p.bench == fast.bench).collect();
+        assert!(b0.iter().all(|p| p.seq.len() == 2 && p.seq[0] == fast.seq[0]));
+        assert_eq!(s.best(fast.bench).0, &fast.seq[..]);
+        assert_eq!(s.best(fast.bench).1, 50.0);
+    }
+
+    #[test]
+    fn bandit_respects_the_budget_cap() {
+        let f = feats(3);
+        let mut s = Bandit::new(&f, 1, 4);
+        assert_eq!(s.propose(2).len(), 2, "bootstrap capped");
+        let mut t = Bandit::new(&f, 1, 4);
+        let boot = t.propose(usize::MAX);
+        for p in &boot {
+            t.observe(p, &ok_eval(100.0));
+        }
+        assert_eq!(t.propose(5).len(), 5, "round capped mid-interleave");
+    }
+
+    #[test]
+    fn training_converges_monotonically_and_precision_never_decreases() {
+        let f = feats(1);
+        let mut s = Bandit::new(&f, 7, 1);
+        let x = s.context(0);
+        let mut last_err = f64::INFINITY;
+        let mut last_mass = 0.0;
+        for _ in 0..12 {
+            s.train(3, &x, 0.8);
+            let err = (s.predict(3, &x) - 0.8).abs();
+            assert!(err < last_err, "prediction error must shrink: {err}");
+            let mass = s.precision_sum(3);
+            assert!(mass > last_mass, "observation mass must grow");
+            last_err = err;
+            last_mass = mass;
+        }
+        assert!(last_err < 1e-3, "12 half-steps close the gap: {last_err}");
+    }
+
+    #[test]
+    fn failed_candidates_are_never_adopted() {
+        let f = feats(1);
+        let mut s = Bandit::new(&f, 9, 2);
+        let boot = s.propose(usize::MAX);
+        s.observe(&boot[0], &ok_eval(100.0));
+        let round = s.propose(usize::MAX);
+        let bad = Evaluation {
+            status: EvalStatus::InvalidOutput,
+            ..ok_eval(1.0)
+        };
+        for p in &round {
+            s.observe(p, &bad);
+        }
+        assert!(s.best(0).0.is_empty(), "best stays at the -O0 anchor");
+        let next = s.propose(usize::MAX);
+        assert!(
+            next.iter().all(|p| p.seq.len() == 1),
+            "the prefix must not adopt failing candidates"
+        );
+    }
+
+    #[test]
+    fn same_seed_same_proposals_different_seed_diverges() {
+        let f = feats(2);
+        let drive = |seed: u64| {
+            let mut s = Bandit::new(&f, seed, 4);
+            let boot = s.propose(usize::MAX);
+            for p in &boot {
+                s.observe(p, &ok_eval(100.0));
+            }
+            s.propose(usize::MAX)
+                .iter()
+                .map(|p| (p.bench, p.seq.clone()))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(drive(0xA), drive(0xA), "same seed replays identically");
+        assert_ne!(drive(0xA), drive(0xB), "the seed drives arm selection");
+    }
+}

@@ -22,7 +22,10 @@
 //! compile is priced on any number of targets (`repro transfer`, the
 //! §3.1 cross-device experiment). What to
 //! evaluate is decided by a pluggable [`strategy::SearchStrategy`]
-//! (`repro explore --strategy fixed|permute|hillclimb|knn`): the engine
+//! (`repro explore --strategy
+//! fixed|permute|hillclimb|knn|bandit|genetic` — the last two are the
+//! [`learn`] subsystem's learned strategies, ranked against the rest at
+//! an equal budget by `repro rank`): the engine
 //! loop ([`engine::run`]) asks the strategy for batches of proposals,
 //! spreads each batch across a `std::thread::scope` pool — a
 //! work-stealing scheduler with per-benchmark worker affinity — and
@@ -49,6 +52,7 @@ pub mod engine;
 pub mod evaluator;
 pub mod explorer;
 pub mod hostexec;
+pub mod learn;
 pub mod seqgen;
 pub mod shard;
 pub mod store;
@@ -61,6 +65,7 @@ pub use explorer::{
     pareto_front, EvalStatus, Evaluation, Explorer, ExplorationSummary, ObjVec, Objective,
     ParetoPoint, Winner,
 };
+pub use learn::{rank_strategies, ArenaEntry, Bandit, Genetic};
 pub use seqgen::SeqGen;
 pub use shard::{merge_shards, merge_shards_obj, ShardRun, ShardSpec, StreamSpec};
 pub use store::{Store, WarmStats};

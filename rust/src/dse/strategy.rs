@@ -38,6 +38,13 @@
 //!   sequences of its k most-similar reference benchmarks (cosine
 //!   similarity over MILEPOST-style features), then refine locally.
 //!
+//! Two *learned* strategies live in [`crate::dse::learn`] and plug into
+//! the same contract: [`Bandit`](crate::dse::learn::Bandit) (contextual
+//! Thompson sampling over milepost features) and
+//! [`Genetic`](crate::dse::learn::Genetic) (a generational GA reusing
+//! this module's mutation kit); `repro rank` runs all five at an equal
+//! budget ([`crate::dse::learn::rank_strategies`]).
+//!
 //! The strategy layer also owns the two post-passes over a finished
 //! search: [`minimize_sequence`] (Table 1's "passes that resulted in no
 //! performance improvement were eliminated") and the Fig. 5 reporting
@@ -91,17 +98,26 @@ pub enum StrategyKind {
     Permute,
     HillClimb,
     Knn,
+    Bandit,
+    Genetic,
 }
 
 impl StrategyKind {
+    /// Every parseable strategy name, in the canonical (arena) order.
+    pub const NAMES: [&'static str; 6] =
+        ["fixed", "permute", "hillclimb", "knn", "bandit", "genetic"];
+
     pub fn parse(s: &str) -> Result<StrategyKind, String> {
         match s {
             "fixed" => Ok(StrategyKind::Fixed),
             "permute" => Ok(StrategyKind::Permute),
             "hillclimb" => Ok(StrategyKind::HillClimb),
             "knn" => Ok(StrategyKind::Knn),
+            "bandit" => Ok(StrategyKind::Bandit),
+            "genetic" => Ok(StrategyKind::Genetic),
             other => Err(format!(
-                "unknown strategy {other:?} (want fixed|permute|hillclimb|knn)"
+                "unknown strategy {other:?} (available strategies: {})",
+                StrategyKind::NAMES.join("|")
             )),
         }
     }
@@ -112,6 +128,8 @@ impl StrategyKind {
             StrategyKind::Permute => "permute",
             StrategyKind::HillClimb => "hillclimb",
             StrategyKind::Knn => "knn",
+            StrategyKind::Bandit => "bandit",
+            StrategyKind::Genetic => "genetic",
         }
     }
 }
@@ -183,9 +201,10 @@ impl SearchStrategy for FixedStream {
 /// One local edit of a phase order: insert / delete / swap / replace of
 /// a pass instance, uniformly chosen (ops that need a non-empty or
 /// longer sequence fall back to insert; insert at the 256-instance cap
-/// falls back to replace). The building block of [`HillClimb`] and the
-/// [`KnnSeeded`] refinement phase.
-fn mutate(
+/// falls back to replace). The building block of [`HillClimb`], the
+/// [`KnnSeeded`] refinement phase, and the mutation operator of
+/// [`Genetic`](crate::dse::learn::Genetic).
+pub(crate) fn mutate(
     rng: &mut Rng,
     names: &'static [&'static str],
     seq: &[&'static str],
@@ -641,15 +660,26 @@ mod tests {
             StrategyKind::HillClimb
         );
         assert_eq!(StrategyKind::parse("knn").unwrap(), StrategyKind::Knn);
+        assert_eq!(StrategyKind::parse("bandit").unwrap(), StrategyKind::Bandit);
+        assert_eq!(
+            StrategyKind::parse("genetic").unwrap(),
+            StrategyKind::Genetic
+        );
         for k in [
             StrategyKind::Fixed,
             StrategyKind::Permute,
             StrategyKind::HillClimb,
             StrategyKind::Knn,
+            StrategyKind::Bandit,
+            StrategyKind::Genetic,
         ] {
             assert_eq!(StrategyKind::parse(k.name()).unwrap(), k);
         }
-        assert!(StrategyKind::parse("genetic").is_err());
+        // an unknown name lists every available strategy
+        let err = StrategyKind::parse("anneal").unwrap_err();
+        for name in StrategyKind::NAMES {
+            assert!(err.contains(name), "{err}");
+        }
         assert!(StrategyKind::parse("").is_err());
     }
 

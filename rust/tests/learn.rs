@@ -1,0 +1,323 @@
+//! Learned-search contract tests: the acceptance gate for the
+//! `dse::learn` subsystem. The bandit and genetic strategies must be
+//! bit-identical at `--jobs 1` vs `--jobs N` and across cold/warm
+//! artifact stores, their proposal streams must react to `--seed`, the
+//! genetic strategy must honour its anchor/budget invariants, the
+//! bandit's posterior must be monotone under repeated synthetic
+//! rewards, and the equal-budget arena behind `repro rank` must report
+//! every shipped strategy at the same charge.
+
+use phaseord::bench_suite::{benchmark_by_name, Variant};
+use phaseord::coordinator::experiments::{ExpConfig, ExpCtx};
+use phaseord::dse::engine::{self, CacheShards, EvalContext};
+use phaseord::dse::learn::{
+    rank_strategies, Bandit, Genetic, DEFAULT_POP, SEED_TAG_BANDIT, SEED_TAG_GENETIC,
+};
+use phaseord::dse::strategy::{SearchStrategy, StrategyKind, DEFAULT_ROUND};
+use phaseord::dse::{EvalStatus, Evaluation, ExplorationSummary, Objective};
+use phaseord::features::{extract_features, FeatureVector};
+use phaseord::sim::Target;
+
+fn assert_bit_identical(a: &ExplorationSummary, b: &ExplorationSummary) {
+    assert_eq!(a.bench, b.bench);
+    assert_eq!(a.winner, b.winner, "{}: winners differ", a.bench);
+    assert_eq!(
+        a.best_time_us.to_bits(),
+        b.best_time_us.to_bits(),
+        "{}: best time differs",
+        a.bench
+    );
+    assert_eq!(
+        (a.n_ok, a.n_crash, a.n_invalid, a.n_timeout, a.cache_hits),
+        (b.n_ok, b.n_crash, b.n_invalid, b.n_timeout, b.cache_hits),
+        "{}: outcome buckets differ",
+        a.bench
+    );
+    assert_eq!(a.evaluations.len(), b.evaluations.len(), "{}", a.bench);
+    for (i, (x, y)) in a.evaluations.iter().zip(&b.evaluations).enumerate() {
+        assert_eq!(x.status, y.status, "{} eval {i}", a.bench);
+        assert_eq!(
+            x.time_us.to_bits(),
+            y.time_us.to_bits(),
+            "{} eval {i}: time",
+            a.bench
+        );
+        assert_eq!(x.ptx_hash, y.ptx_hash, "{} eval {i}: ptx hash", a.bench);
+        assert_eq!(x.cached, y.cached, "{} eval {i}: cache attribution", a.bench);
+    }
+}
+
+/// Run a freshly-constructed strategy over fresh caches (each run is
+/// its own "process": nothing leaks between the runs being compared).
+fn run_fresh(
+    ctxs: &[EvalContext],
+    mk: &dyn Fn() -> Box<dyn SearchStrategy>,
+    budget: usize,
+    jobs: usize,
+) -> Vec<ExplorationSummary> {
+    let caches: Vec<CacheShards> = ctxs.iter().map(|_| CacheShards::new()).collect();
+    let parts: Vec<(&EvalContext, &CacheShards)> = ctxs.iter().zip(caches.iter()).collect();
+    let mut s = mk();
+    engine::run(s.as_mut(), &parts, budget, jobs)
+}
+
+fn feature_vectors(names: &[&str]) -> Vec<(String, FeatureVector)> {
+    names
+        .iter()
+        .map(|n| {
+            let b = benchmark_by_name(n).unwrap();
+            (
+                n.to_string(),
+                extract_features(&b.build_small(Variant::OpenCl).module),
+            )
+        })
+        .collect()
+}
+
+fn ok_eval(time_us: f64) -> Evaluation {
+    Evaluation {
+        status: EvalStatus::Ok,
+        time_us,
+        energy_uj: 10.0 * time_us,
+        code_size: 50.0,
+        ptx_hash: 1,
+        cached: false,
+    }
+}
+
+/// The strategy-contract property, extended to the learned strategies:
+/// bit-identical summaries at `--jobs 1` and `--jobs 4` with fresh
+/// caches and fresh strategy instances per run.
+#[test]
+fn learned_strategies_are_deterministic_across_jobs() {
+    let names = ["GEMM", "ATAX"];
+    let benches: Vec<_> = names.iter().map(|n| benchmark_by_name(n).unwrap()).collect();
+    let t = Target::gp104();
+    let ctxs = engine::build_contexts(&benches, &t, 0);
+    let feats = feature_vectors(&names);
+
+    let cases: Vec<(&str, usize, Box<dyn Fn() -> Box<dyn SearchStrategy>>)> = vec![
+        (
+            "bandit",
+            2 * 12,
+            Box::new({
+                let feats = feats.clone();
+                move || -> Box<dyn SearchStrategy> {
+                    Box::new(Bandit::new(&feats, 0xC0FFEE ^ SEED_TAG_BANDIT, DEFAULT_ROUND))
+                }
+            }),
+        ),
+        (
+            "genetic",
+            2 * 12,
+            Box::new(|| -> Box<dyn SearchStrategy> {
+                Box::new(Genetic::new(2, 0xC0FFEE ^ SEED_TAG_GENETIC, DEFAULT_POP))
+            }),
+        ),
+    ];
+    for (name, budget, mk) in &cases {
+        let serial = run_fresh(&ctxs, mk.as_ref(), *budget, 1);
+        let parallel = run_fresh(&ctxs, mk.as_ref(), *budget, 4);
+        assert_eq!(serial.len(), parallel.len(), "{name}");
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_bit_identical(a, b);
+        }
+        let total: usize = serial.iter().map(|s| s.evaluations.len()).sum();
+        assert_eq!(total, *budget, "{name}: the budget is a hard cap");
+    }
+}
+
+/// `repro explore --strategy bandit|genetic` end to end through the
+/// CLI configuration: deterministic across `--jobs`, and a warm
+/// `--store` replays the same summaries with zero compiles.
+#[test]
+fn learned_cli_runs_are_deterministic_and_replay_from_a_warm_store() {
+    for (tag, strategy) in [
+        ("bandit", StrategyKind::Bandit),
+        ("genetic", StrategyKind::Genetic),
+    ] {
+        let dir = std::env::temp_dir()
+            .join(format!("phaseord-learn-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg_for = |jobs: usize, store: Option<std::path::PathBuf>| ExpConfig {
+            n_seqs: 4,
+            seed: 0xFACE,
+            budget: 6,
+            strategy,
+            only: Some("GEMM".into()),
+            jobs,
+            store,
+            ..ExpConfig::default()
+        };
+        let a = ExpCtx::new(cfg_for(1, None)).explore_strategy();
+        let b = ExpCtx::new(cfg_for(4, None)).explore_strategy();
+        assert_eq!(a.len(), 1, "{tag}: --bench GEMM restricts the run");
+        for (x, y) in a.iter().zip(&b) {
+            assert_bit_identical(x, y);
+        }
+        assert_eq!(a[0].evaluations.len(), 6, "{tag}: --budget is exact");
+
+        let cold_ctx = ExpCtx::new(cfg_for(2, Some(dir.clone())));
+        let cold = cold_ctx.explore_strategy();
+        cold_ctx.persist_store().unwrap();
+        let warm_ctx = ExpCtx::new(cfg_for(2, Some(dir.clone())));
+        let warm = warm_ctx.explore_strategy();
+        assert_eq!(
+            warm_ctx.run_compiles(),
+            0,
+            "{tag}: a fully warm store must compile nothing"
+        );
+        for (x, y) in cold.iter().zip(&warm) {
+            assert_bit_identical(x, y);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// `--seed` reaches the learned strategies' PRNGs: the same seed
+/// replays the same proposal stream, a different seed diverges. Driven
+/// directly with synthetic observations so the comparison is over the
+/// proposals themselves, not downstream evaluation artifacts.
+#[test]
+fn seed_changes_change_the_learned_proposals() {
+    let feats = feature_vectors(&["GEMM", "ATAX"]);
+    let drive = |mut s: Box<dyn SearchStrategy>| -> Vec<Vec<&'static str>> {
+        let mut seqs = Vec::new();
+        for _ in 0..3 {
+            let props = s.propose(64);
+            for p in &props {
+                // reward shorter sequences so the learners get a
+                // consistent (if synthetic) signal to react to
+                s.observe(p, &ok_eval(50.0 + p.seq.len() as f64));
+            }
+            seqs.extend(props.into_iter().map(|p| p.seq));
+        }
+        seqs
+    };
+    let bandit = |seed: u64| -> Box<dyn SearchStrategy> {
+        Box::new(Bandit::new(&feats, seed, DEFAULT_ROUND))
+    };
+    let genetic = |seed: u64| -> Box<dyn SearchStrategy> {
+        Box::new(Genetic::new(2, seed, DEFAULT_POP))
+    };
+    for mk in [&bandit as &dyn Fn(u64) -> Box<dyn SearchStrategy>, &genetic] {
+        let one = drive(mk(1));
+        assert_eq!(one, drive(mk(1)), "same seed must replay identically");
+        assert_ne!(one, drive(mk(2)), "a different seed must diverge");
+    }
+}
+
+/// The genetic strategy anchors generation 0 at the `-O0` baseline
+/// (its first proposal per benchmark is the empty sequence), honours
+/// the evaluation budget exactly, and never reports a best above the
+/// baseline.
+#[test]
+fn genetic_anchors_at_baseline_and_respects_the_budget() {
+    let benches: Vec<_> = ["GEMM", "ATAX"]
+        .iter()
+        .map(|n| benchmark_by_name(n).unwrap())
+        .collect();
+    let t = Target::gp104();
+    let ctxs = engine::build_contexts(&benches, &t, 0);
+    let budget_per_bench = 10;
+    let got = run_fresh(
+        &ctxs,
+        &|| -> Box<dyn SearchStrategy> { Box::new(Genetic::new(2, 7, DEFAULT_POP)) },
+        2 * budget_per_bench,
+        2,
+    );
+    let total: usize = got.iter().map(|s| s.evaluations.len()).sum();
+    assert_eq!(total, 2 * budget_per_bench, "the budget is a hard cap");
+    for s in &got {
+        // evaluation 0 is the population's empty-sequence anchor:
+        // valid, ~baseline
+        assert!(s.evaluations[0].status.is_ok(), "{}", s.bench);
+        assert!(
+            (s.evaluations[0].time_us - s.baseline_time_us).abs()
+                <= 1e-9 * s.baseline_time_us,
+            "{}",
+            s.bench
+        );
+        assert!(s.best_time_us <= s.baseline_time_us, "{}", s.bench);
+    }
+}
+
+/// The bandit's linear posterior is monotone under repeated identical
+/// rewards: the prediction error shrinks on every update and the
+/// per-arm observation mass (precision) never decreases.
+#[test]
+fn bandit_posterior_is_monotone_on_synthetic_rewards() {
+    let feats = feature_vectors(&["GEMM"]);
+    let mut b = Bandit::new(&feats, 9, DEFAULT_ROUND);
+    let x = b.context(0);
+    let mut prev_err = f64::INFINITY;
+    let mut prev_prec = b.precision_sum(0);
+    for step in 0..12 {
+        b.train(0, &x, 1.0);
+        let err = (1.0 - b.predict(0, &x)).abs();
+        assert!(
+            err <= prev_err + 1e-12,
+            "step {step}: error rose from {prev_err} to {err}"
+        );
+        let prec = b.precision_sum(0);
+        assert!(prec >= prev_prec, "step {step}: precision decreased");
+        prev_err = err;
+        prev_prec = prec;
+    }
+    assert!(prev_err < 1e-3, "12 updates must converge: {prev_err}");
+}
+
+/// The equal-budget arena behind `repro rank`: all five shipped
+/// strategies in canonical order, every entry charged the same
+/// evaluation count, and at least one learned strategy matching or
+/// beating the blind fixed stream on at least one benchmark.
+#[test]
+fn the_arena_ranks_all_five_strategies_at_equal_budget() {
+    let names = ["GEMM", "ATAX"];
+    let benches: Vec<_> = names.iter().map(|n| benchmark_by_name(n).unwrap()).collect();
+    let t = Target::gp104();
+    let ctxs = engine::build_contexts(&benches, &t, 0);
+    let ctx_refs: Vec<&EvalContext> = ctxs.iter().collect();
+    let feats = feature_vectors(&names);
+    let budget_per_bench = 10;
+    let entries = rank_strategies(
+        &ctx_refs,
+        &feats,
+        budget_per_bench,
+        1,
+        0xC0FFEE,
+        2,
+        Objective::Time,
+    );
+    let order: Vec<&str> = entries.iter().map(|e| e.strategy).collect();
+    assert_eq!(order, ["fixed", "hillclimb", "knn", "bandit", "genetic"]);
+    for e in &entries {
+        assert_eq!(
+            e.evaluations,
+            2 * budget_per_bench,
+            "{}: the arena charges every strategy the same budget",
+            e.strategy
+        );
+        assert_eq!(e.summaries.len(), 2, "{}", e.strategy);
+        assert!(
+            e.geomean.is_finite() && e.geomean > 0.0,
+            "{}: geomean {}",
+            e.strategy,
+            e.geomean
+        );
+    }
+    let fixed = &entries[0];
+    let learned_holds_ground = entries
+        .iter()
+        .filter(|e| matches!(e.strategy, "bandit" | "genetic"))
+        .any(|e| {
+            e.summaries
+                .iter()
+                .zip(&fixed.summaries)
+                .any(|(l, f)| l.best_speedup() >= f.best_speedup() - 1e-12)
+        });
+    assert!(
+        learned_holds_ground,
+        "at least one learned strategy must match or beat fixed on some benchmark"
+    );
+}
